@@ -1,0 +1,13 @@
+//! Fig. 1 companion: covariance-memory accounting across adaptive
+//! methods, from asymptotic formulas and live optimizer instances.
+//!
+//! Run: cargo run --release --example memory_budget -- [--m 4096 --n 1024]
+
+use sketchy::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let report = sketchy::experiments::fig1::run(&args)?;
+    println!("{report}");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Online convex optimization demo (the Appendix A setting): S-AdaGrad
+//! vs the FD baselines on a synthetic logistic stream, with regret
+//! against the offline comparator.
+//!
+//! Run: cargo run --release --example oco_convex -- [--n 3000 --d 100]
+
+use sketchy::data::synthetic::{DatasetKind, SyntheticLogistic};
+use sketchy::oco::losses::LogisticLoss;
+use sketchy::oco::runner::{best_fixed_logistic, run_online};
+use sketchy::oco::OnlineLoss;
+use sketchy::optim::{AdaFd, AdaGradDiag, FdSon, Ogd, RfdSon, SAdaGrad, VectorOptimizer};
+use sketchy::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 3000);
+    let d = args.get_usize("d", 100);
+    let seed = args.get_u64("seed", 1);
+    let ds = SyntheticLogistic::with_size(DatasetKind::Gisette, n, d, seed);
+    println!("synthetic gisette-like stream: {n} examples x {d} features, sketch size 10\n");
+
+    let mut opts: Vec<Box<dyn VectorOptimizer>> = vec![
+        Box::new(SAdaGrad::new(d, 10, 0.3)),
+        Box::new(AdaGradDiag::new(d, 0.3)),
+        Box::new(Ogd::new(0.3, true)),
+        Box::new(AdaFd::new(d, 10, 0.3, 1e-3)),
+        Box::new(FdSon::new(d, 10, 1.0, 1.0)),
+        Box::new(RfdSon::new(d, 10, 1.0, 0.0)),
+    ];
+    let mut results = vec![];
+    for opt in &mut opts {
+        let mem = opt.mem_bytes();
+        let mut stream = ds.iter().map(|(f, y)| {
+            Box::new(LogisticLoss { features: f, label: y }) as Box<dyn OnlineLoss>
+        });
+        let res = run_online(opt.as_mut(), &mut stream, d, None, 10);
+        results.push((res, mem));
+    }
+    // Regret against the offline comparator.
+    let feats: Vec<Vec<f64>> = ds.iter().map(|(f, _)| f).collect();
+    let labels: Vec<f64> = ds.iter().map(|(_, y)| y).collect();
+    let (_, best) = best_fixed_logistic(&feats, &labels, 150);
+    println!("offline comparator total loss: {best:.1}\n");
+    println!("{:<12} {:>12} {:>12} {:>10}", "algorithm", "avg loss", "regret", "mem (B)");
+    results.sort_by(|a, b| a.0.total_loss.partial_cmp(&b.0.total_loss).unwrap());
+    for (res, mem) in &results {
+        println!(
+            "{:<12} {:>12.4} {:>12.1} {:>10}",
+            res.name,
+            res.total_loss / n as f64,
+            res.total_loss - best,
+            mem
+        );
+    }
+    println!("\navg-cumulative-loss curve for the winner ({}):", results[0].0.name);
+    for &(t, v) in &results[0].0.curve {
+        println!("  t={t:>6}  {v:.4}");
+    }
+}

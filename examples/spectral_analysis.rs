@@ -1,0 +1,15 @@
+//! Fig. 3 companion: spectral analysis of EMA Kronecker covariance
+//! factors collected during live proxy training, plus the §5.2 random-
+//! Wishart control. Thin wrapper over `sketchy repro fig3`.
+//!
+//! Run (after `make artifacts`):
+//!   cargo run --release --example spectral_analysis -- [--task image]
+
+use sketchy::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let report = sketchy::experiments::fig3::run(&args)?;
+    println!("{report}");
+    Ok(())
+}

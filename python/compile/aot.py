@@ -1,0 +1,250 @@
+"""AOT pipeline: lower every L2 compute graph to HLO **text** artifacts
+plus a manifest and cross-language numeric fixtures.
+
+Interchange format is HLO text, NOT serialized protos: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (the
+runtime behind the Rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example and DESIGN.md §1).
+
+Outputs under --out (default ../artifacts):
+  <name>.hlo.txt   one per artifact
+  manifest.json    input/output specs per artifact (consumed by
+                   rust/src/runtime/artifact.rs)
+  fixtures.json    seeded input/output pairs for Rust integration tests
+
+Usage: python -m compile.aot --out ../artifacts [--preset small] [--skip-fixtures]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model, models_proxy as proxy
+from compile.kernels.cov_update import cov_update
+from compile.kernels.precond_apply import precond_apply
+from compile.kernels.sketch_gram import sketch_gram
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text()
+    _check_no_ffi_custom_calls(text)
+    return text
+
+
+def _check_no_ffi_custom_calls(text):
+    """Guard: typed-FFI custom calls cannot run on xla_extension 0.5.1."""
+    if "custom-call" in text and "api_version=API_VERSION_TYPED_FFI" in text:
+        raise RuntimeError(
+            "artifact contains a typed-FFI custom call (eigh/svd/qr?) — "
+            "these must run on the Rust side instead"
+        )
+
+
+def _spec(arr_or_shape, dtype=jnp.float32):
+    if hasattr(arr_or_shape, "shape"):
+        return jax.ShapeDtypeStruct(arr_or_shape.shape, arr_or_shape.dtype)
+    return jax.ShapeDtypeStruct(arr_or_shape, dtype)
+
+
+def _dtype_name(dt):
+    return {"float32": "f32", "int32": "i32", "float64": "f64"}[np.dtype(dt).name]
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": []}
+        self.fixtures = {}
+
+    def add(self, name, fn, input_specs, input_names, n_params,
+            fixture_inputs=None):
+        """Lower `fn` at `input_specs`, write HLO text, record manifest.
+
+        If `fixture_inputs` (concrete arrays) is given, also run the jitted
+        fn and record the input/output pair in fixtures.json.
+        """
+        lowered = jax.jit(fn).lower(*input_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *input_specs)
+        self.manifest["artifacts"].append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"name": n, "shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                for n, s in zip(input_names, input_specs)
+            ],
+            "n_params": n_params,
+            "n_outputs": len(outs),
+            "output_shapes": [list(o.shape) for o in outs],
+        })
+        if fixture_inputs is not None:
+            outputs = jax.jit(fn)(*fixture_inputs)
+            self.fixtures[name] = {
+                "inputs": [
+                    {"name": n, "shape": list(np.asarray(a).shape),
+                     "data": np.asarray(a, dtype=np.float64).ravel().tolist()
+                     if np.asarray(a).dtype != np.int32
+                     else np.asarray(a).ravel().tolist()}
+                    for n, a in zip(input_names, fixture_inputs)
+                ],
+                "outputs": [
+                    np.asarray(o, dtype=np.float64).ravel().tolist()
+                    for o in outputs
+                ],
+                "output_shapes": [list(np.asarray(o).shape) for o in outputs],
+            }
+        print(f"  wrote {name}: {len(text)} chars, "
+              f"{len(input_specs)} inputs, {len(outs)} outputs")
+
+    def finish(self, preset):
+        self.manifest["preset"] = preset
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        with open(os.path.join(self.out_dir, "fixtures.json"), "w") as f:
+            json.dump(self.fixtures, f)
+        print(f"manifest: {len(self.manifest['artifacts'])} artifacts")
+
+
+def build_lm(b, preset, with_fixture):
+    cfg = model.config(preset)
+    shapes = model.param_shapes(cfg)
+    names = [n for n, _ in shapes] + ["tokens"]
+    tok_spec = _spec((cfg["batch"], cfg["seq"] + 1), jnp.int32)
+    specs = [_spec(s) for _, s in shapes] + [tok_spec]
+    fixture = None
+    if with_fixture:
+        params = model.init_params(cfg, seed=0)
+        rng = np.random.default_rng(1)
+        tokens = rng.integers(
+            0, cfg["vocab"], size=(cfg["batch"], cfg["seq"] + 1), dtype=np.int32
+        )
+        fixture = [jnp.asarray(p) for p in params] + [jnp.asarray(tokens)]
+    b.add(f"lm_{preset}_grad", model.grad_fn(cfg), specs, names,
+          n_params=len(shapes))
+    b.add(f"lm_{preset}_eval", model.eval_fn(cfg), specs, names,
+          n_params=len(shapes), fixture_inputs=fixture)
+
+
+def build_proxies(b, with_fixtures):
+    # --- CNN (image) ---
+    cfg = proxy.CNN_CFG
+    shapes = proxy.cnn_param_shapes(cfg)
+    np_ = len(shapes)
+    names = [n for n, _ in shapes] + ["images", "labels"]
+    specs = [_spec(s) for _, s in shapes] + [
+        _spec((cfg["batch"], cfg["h"] * cfg["w"])),
+        _spec((cfg["batch"],), jnp.int32),
+    ]
+    b.add("cnn_grad", proxy.make_grad_fn(proxy.cnn_loss, np_), specs, names, np_)
+    b.add("cnn_eval", proxy.make_eval_fn(proxy.cnn_loss, proxy.cnn_logits, np_),
+          specs, names, np_)
+
+    # --- Conformer (audio) ---
+    cfg = proxy.CONF_CFG
+    shapes = proxy.conformer_param_shapes(cfg)
+    np_ = len(shapes)
+    names = [n for n, _ in shapes] + ["spect", "labels"]
+    specs = [_spec(s) for _, s in shapes] + [
+        _spec((cfg["batch"], cfg["frames"] * cfg["bins"])),
+        _spec((cfg["batch"],), jnp.int32),
+    ]
+    b.add("conformer_grad", proxy.make_grad_fn(proxy.conformer_loss, np_),
+          specs, names, np_)
+    b.add("conformer_eval",
+          proxy.make_eval_fn(proxy.conformer_loss, proxy.conformer_logits, np_),
+          specs, names, np_)
+
+    # --- GNN (graph) ---
+    cfg = proxy.GNN_CFG
+    shapes = proxy.gnn_param_shapes(cfg)
+    np_ = len(shapes)
+    names = [n for n, _ in shapes] + ["adjacency", "feats", "labels"]
+    specs = [_spec(s) for _, s in shapes] + [
+        _spec((cfg["batch"], cfg["nodes"] * cfg["nodes"])),
+        _spec((cfg["batch"], cfg["nodes"] * cfg["feat"])),
+        _spec((cfg["batch"], cfg["tasks"])),
+    ]
+    b.add("gnn_grad", proxy.make_grad_fn(proxy.gnn_loss, np_), specs, names, np_)
+
+    def gnn_eval(*args):
+        params = list(args[:np_])
+        adjacency, feats, labels = args[np_:]
+        return (proxy.gnn_loss(params, adjacency, feats, labels),
+                proxy.gnn_logits(params, adjacency, feats))
+
+    b.add("gnn_eval", gnn_eval, specs, names, np_)
+    _ = with_fixtures
+
+
+def build_kernels(b, with_fixtures):
+    """Optimizer hot-spot kernels as standalone artifacts (L1 -> runtime).
+
+    These are the Pallas kernels lowered inside jitted wrappers; the Rust
+    runtime can offload covariance updates / preconditioner applications
+    to XLA through them (used by the perf benches to compare the native
+    Rust path against the XLA path).
+    """
+    for n in (64, 256):
+        name = f"cov_update_{n}"
+        fn = lambda c, g: (cov_update(c, g, 0.999),)
+        specs = [_spec((n, n)), _spec((n, n))]
+        fixture = None
+        if with_fixtures and n == 64:
+            rng = np.random.default_rng(2)
+            c0 = rng.standard_normal((n, n)).astype(np.float32)
+            c0 = c0 @ c0.T
+            g0 = rng.standard_normal((n, n)).astype(np.float32)
+            fixture = [jnp.asarray(c0), jnp.asarray(g0)]
+        b.add(name, fn, specs, ["c", "g"], 0, fixture_inputs=fixture)
+
+    fn = lambda pl_r, g, pr_r: (precond_apply(pl_r, g, pr_r),)
+    specs = [_spec((128, 128)), _spec((128, 64)), _spec((64, 64))]
+    rng = np.random.default_rng(3)
+    fixture = None
+    if with_fixtures:
+        fixture = [
+            jnp.asarray(rng.standard_normal((128, 128)).astype(np.float32)),
+            jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32)),
+            jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32)),
+        ]
+    b.add("precond_apply_128x64", fn, specs, ["pl", "g", "pr"], 0,
+          fixture_inputs=fixture)
+
+    fn = lambda bmat, y: (sketch_gram(bmat, y, 0.999),)
+    specs = [_spec((512, 32)), _spec((512, 8))]
+    b.add("sketch_gram_512", fn, specs, ["b", "y"], 0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=list(model.PRESETS))
+    ap.add_argument("--skip-fixtures", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    b = Builder(args.out)
+    with_fixtures = not args.skip_fixtures
+    # Tiny LM always built: integration tests + fixtures.
+    build_lm(b, "tiny", with_fixture=with_fixtures)
+    if args.preset != "tiny":
+        build_lm(b, args.preset, with_fixture=False)
+    build_proxies(b, with_fixtures)
+    build_kernels(b, with_fixtures)
+    b.finish(args.preset)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Pallas kernel: Kronecker-factor covariance update C' = beta2*C + G^T G.
+
+TPU-shaped tiling (DESIGN.md section 5, Hardware Adaptation):
+
+- Output C' is tiled into (bn, bn) VMEM blocks; the contraction over the
+  m rows of G streams (bk, bn) slabs of G from HBM.
+- Grid = (n/bn, n/bn, m/bk) with the reduction as the innermost grid axis,
+  so each output tile stays resident in VMEM across the K loop
+  (accumulation in f32 — the MXU-native pattern).
+- VMEM footprint per program instance: two G slabs (bk x bn each) plus the
+  C tile (bn x bn) = (2*bk*bn + bn*bn) * 4 bytes; with the default
+  bn = bk = 128 that is 192 KiB, far under the ~16 MiB TPU VMEM budget,
+  and the inner contraction is an MXU-systolic (128, 128, 128) matmul.
+
+Runs under interpret=True here (CPU PJRT cannot execute Mosaic
+custom-calls); on real TPU the same BlockSpecs compile natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = 128
+
+
+def _pick_block(dim, preferred):
+    """Largest divisor of dim that is <= preferred (keeps tiling exact)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _cov_update_kernel(c_ref, gi_ref, gj_ref, beta2_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] accumulates gi_k^T gj_k.
+
+    k is the innermost grid axis; on k == 0 the output tile is seeded with
+    beta2 * C tile, afterwards it accumulates in place (VMEM-resident).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _seed():
+        o_ref[...] = beta2_ref[0] * c_ref[...]
+
+    # (bk, bn_i)^T @ (bk, bn_j) -> (bn_i, bn_j) partial product.
+    o_ref[...] += jnp.dot(
+        gi_ref[...].T, gj_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k"))
+def cov_update(c, g, beta2, block_n=DEFAULT_BLOCK, block_k=DEFAULT_BLOCK):
+    """C' = beta2 * C + G^T G via the tiled Pallas kernel.
+
+    Args:
+      c: (n, n) current factor.
+      g: (m, n) gradient (pass g.T to update the left factor).
+      beta2: scalar decay (traced; packed into a (1,) operand).
+      block_n / block_k: preferred tile sizes (clipped to divisors).
+    """
+    n = c.shape[1]
+    m = g.shape[0]
+    assert c.shape == (n, n) and g.shape[1] == n, (c.shape, g.shape)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(m, block_k)
+    grid = (n // bn, n // bn, m // bk)
+    beta2_arr = jnp.asarray([beta2], dtype=c.dtype)
+    return pl.pallas_call(
+        _cov_update_kernel,
+        grid=grid,
+        in_specs=[
+            # C tile for seeding: block (i, j), constant in k.
+            pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+            # G slab feeding the row index of the output tile.
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, i)),
+            # G slab feeding the column index.
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            # beta2 broadcast to every program instance.
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), c.dtype),
+        interpret=True,
+    )(c, g, g, beta2_arr)
+
+
+def vmem_bytes(block_n=DEFAULT_BLOCK, block_k=DEFAULT_BLOCK, dtype_bytes=4):
+    """Estimated VMEM footprint per program instance (DESIGN.md section 5)."""
+    return (2 * block_k * block_n + 2 * block_n * block_n + 1) * dtype_bytes

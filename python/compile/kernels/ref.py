@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness signal for L1: pytest checks every Pallas kernel
+against these references with assert_allclose across a randomized grid of
+shapes and dtypes (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def cov_update_ref(c, g, beta2):
+    """Right Kronecker-factor statistics update: C' = beta2*C + G^T G.
+
+    The compute hot-spot of Shampoo-family optimizers (Alg. 3 line 5 news
+    term): for a layer gradient G of shape (m, n), the right factor R
+    accumulates G^T G (n x n). The left factor L accumulates G G^T, which
+    callers obtain by passing G^T.
+    """
+    return beta2 * c + g.T @ g
+
+
+def precond_apply_ref(pl_root, g, pr_root):
+    """Preconditioned direction: P = L^{-1/4} G R^{-1/4} (Alg. 3 line 6).
+
+    The roots are computed host-side (Rust eigh — see DESIGN.md); this
+    kernel applies them.
+    """
+    return pl_root @ g @ pr_root
+
+
+def sketch_gram_ref(b, y, beta2):
+    """Augmented FD Gram matrix (factored Alg. 1 / Obs. 6 update).
+
+    A = [sqrt(beta2)*B | Y] with B the d x ell sketch factor and Y the
+    d x r news factor; returns A^T A of shape (ell+r, ell+r). The (small)
+    eigendecomposition of this Gram matrix is what the FD update
+    diagonalizes instead of anything d x d.
+    """
+    a = jnp.concatenate([jnp.sqrt(beta2) * b, y], axis=1)
+    return a.T @ a
+
+
+def matmul_ref(a, b):
+    """Plain matmul (building block used by the fused kernels' tests)."""
+    return a @ b

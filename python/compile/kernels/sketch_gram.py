@@ -1,0 +1,75 @@
+"""Pallas kernel: augmented FD Gram matrix A^T A with A = [sqrt(b2)B | Y].
+
+The factored FD update (Alg. 1 / Obs. 6, and rust/src/sketch/fd.rs)
+eigendecomposes the small (ell+r)^2 Gram matrix of the augmented factor
+instead of anything d x d. Building that Gram matrix is the only O(d)
+work in the update, so it is the kernel worth pushing to the accelerator:
+
+- The augmented A is never materialized: the kernel reads B and Y tiles
+  and applies the sqrt(beta2) scaling to B columns on the fly.
+- Grid = (s/bs, s/bs, d/bk) over the (s, s) output (s = ell + r), with the
+  long d axis streamed innermost (the HBM->VMEM covariance-streaming
+  schedule; output tiles stay VMEM-resident across the reduction).
+- VMEM per instance: 2 slabs (bk x bs) + out tile (bs x bs); with
+  bk = 512, bs = 64 that's ~280 KiB.
+
+interpret=True for CPU-PJRT execution; see cov_update.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim, preferred):
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _gram_kernel(ai_ref, aj_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        ai_ref[...].T, aj_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_k"))
+def sketch_gram(b, y, beta2, block_s=64, block_k=512):
+    """Gram matrix of [sqrt(beta2)*B | Y] of shape (ell+r, ell+r).
+
+    Args:
+      b: (d, ell) sketch factor.
+      y: (d, r) news factor.
+      beta2: scalar decay.
+    """
+    d, ell = b.shape
+    r = y.shape[1]
+    assert y.shape[0] == d
+    # Scale + concatenate outside the kernel tile loop (one fused pass,
+    # still O(d(ell+r)) and XLA fuses it with the pallas prologue); the
+    # heavy O(d*(ell+r)^2) contraction happens inside the kernel.
+    a = jnp.concatenate([jnp.sqrt(beta2).astype(b.dtype) * b, y], axis=1)
+    s = ell + r
+    bs = _pick_block(s, block_s)
+    bk = _pick_block(d, block_k)
+    grid = (s // bs, s // bs, d // bk)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bs), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bs, bs), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, s), b.dtype),
+        interpret=True,
+    )(a, a)

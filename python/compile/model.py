@@ -1,0 +1,149 @@
+"""L2: decoder-only transformer LM in pure jnp (fwd + bwd), AOT-lowered
+for the Rust training loop (E10, the end-to-end driver).
+
+Conventions imposed by the three-layer architecture:
+
+- **Every parameter is a 2-D matrix** (vectors are (d, 1)): the Rust
+  optimizer family (Shampoo/S-Shampoo) operates on matrix-shaped tensors,
+  exactly as the paper treats layers. Anything naturally higher-rank is
+  stored 2-D and reshaped inside the forward pass.
+- The exported gradient artifact has signature
+  `(param_0, ..., param_{P-1}, tokens) -> (loss, grad_0, ..., grad_{P-1})`
+  with `tokens` int32 of shape (batch, seq+1); inputs are the first seq
+  positions, targets the last. No optimizer state crosses the boundary —
+  the optimizer is Rust's job.
+- No custom-call-lowering ops (eigh/svd/qr/sort-based topk): the PJRT
+  runtime in this image rejects typed-FFI custom calls (DESIGN.md §1).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+PRESETS = {
+    # vocab, dim, layers, heads, ff, seq, batch
+    "tiny": dict(vocab=32, dim=32, layers=1, heads=2, ff=64, seq=16, batch=4),
+    "small": dict(vocab=64, dim=128, layers=2, heads=4, ff=256, seq=64, batch=8),
+    "base": dict(vocab=256, dim=512, layers=4, heads=8, ff=2048, seq=128, batch=8),
+    # ~97M parameters — the paper-scale config (compile-only on CPU).
+    "large": dict(vocab=8192, dim=768, layers=12, heads=12, ff=3072, seq=256, batch=8),
+}
+
+
+def config(preset):
+    return dict(PRESETS[preset])
+
+
+def param_shapes(cfg):
+    """Ordered (name, (rows, cols)) list — the artifact input order."""
+    v, d, f, s = cfg["vocab"], cfg["dim"], cfg["ff"], cfg["seq"]
+    shapes = [("embed", (v, d)), ("pos", (s, d))]
+    for i in range(cfg["layers"]):
+        shapes += [
+            (f"l{i}.ln1_scale", (d, 1)),
+            (f"l{i}.wq", (d, d)),
+            (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2_scale", (d, 1)),
+            (f"l{i}.w1", (d, f)),
+            (f"l{i}.w2", (f, d)),
+        ]
+    shapes += [("lnf_scale", (d, 1)), ("out", (d, v))]
+    return shapes
+
+
+def param_count(cfg):
+    return sum(r * c for _, (r, c) in param_shapes(cfg))
+
+
+def init_params(cfg, seed=0):
+    """Scaled-gaussian init, returned in param_shapes order (numpy f32)."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, (r, c) in param_shapes(cfg):
+        if name.endswith("_scale"):
+            w = np.ones((r, c), np.float32)
+        elif name == "pos":
+            w = (0.01 * rng.standard_normal((r, c))).astype(np.float32)
+        else:
+            w = (rng.standard_normal((r, c)) / math.sqrt(r)).astype(np.float32)
+        params.append(w)
+    return params
+
+
+def _rmsnorm(x, scale):
+    # RMSNorm (scale only): no mean subtraction keeps the op count low and
+    # avoids degenerate LN gradients at tiny dims.
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(var + 1e-6) * scale.reshape(-1)
+
+
+def _attention(x, wq, wk, wv, wo, heads):
+    b, s, d = x.shape
+    hd = d // heads
+    q = (x @ wq).reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), logits.dtype))
+    logits = jnp.where(mask == 0, jnp.asarray(-1e9, logits.dtype), logits)
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def forward(cfg, params, tokens_in):
+    """Logits for input tokens (batch, seq) -> (batch, seq, vocab)."""
+    names = [n for n, _ in param_shapes(cfg)]
+    p = dict(zip(names, params))
+    s = tokens_in.shape[1]
+    x = p["embed"][tokens_in] + p["pos"][:s][None, :, :]
+    for i in range(cfg["layers"]):
+        h = _rmsnorm(x, p[f"l{i}.ln1_scale"])
+        x = x + _attention(
+            h, p[f"l{i}.wq"], p[f"l{i}.wk"], p[f"l{i}.wv"], p[f"l{i}.wo"], cfg["heads"]
+        )
+        h = _rmsnorm(x, p[f"l{i}.ln2_scale"])
+        x = x + jnp.maximum(h @ p[f"l{i}.w1"], 0.0) @ p[f"l{i}.w2"]
+    x = _rmsnorm(x, p["lnf_scale"])
+    return x @ p["out"]
+
+
+def loss_fn(cfg, params, tokens):
+    """Mean next-token cross-entropy. tokens: (batch, seq+1) int32."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def grad_fn(cfg):
+    """Callable (*params, tokens) -> (loss, *grads) for AOT lowering."""
+
+    def f(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(cfg, ps, tokens)
+        )(params)
+        return (loss, *grads)
+
+    return f
+
+
+def eval_fn(cfg):
+    """Callable (*params, tokens) -> (loss,) — held-out evaluation."""
+
+    def f(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        return (loss_fn(cfg, params, tokens),)
+
+    return f

@@ -1,0 +1,227 @@
+"""L2: the three Fig. 2 proxy models (DESIGN.md §6 substitutions).
+
+- `cnn`     — residual CNN on synthetic images     (ResNet-50/ImageNet →)
+- `conformer` — attention + depthwise-conv block   (Conformer/Librispeech →)
+- `gnn`     — dense message-passing, multi-task    (GNN/ogbg-molpcba →)
+
+Same conventions as model.py: all parameters 2-D, gradient artifacts
+`(params..., batch_inputs...) -> (loss, grads...)`, eval artifacts return
+`(loss, logits)` so the Rust side computes the test metric (error rate /
+1−AP analogue).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+def _init(rng, shapes):
+    params = []
+    for name, (r, c) in shapes:
+        if name.endswith("_scale"):
+            w = np.ones((r, c), np.float32)
+        else:
+            w = (rng.standard_normal((r, c)) / math.sqrt(r)).astype(np.float32)
+        params.append(w)
+    return params
+
+
+def _softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+def _conv2d(x, w2d, kh, kw, cin, cout, stride):
+    """NHWC conv; the kernel is stored 2-D as (kh*kw*cin, cout)."""
+    w = w2d.reshape(kh, kw, cin, cout)
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# CNN image proxy
+# ---------------------------------------------------------------------------
+
+CNN_CFG = dict(h=16, w=16, classes=8, c1=16, c2=32, batch=16)
+
+
+def cnn_param_shapes(cfg=CNN_CFG):
+    c1, c2, classes = cfg["c1"], cfg["c2"], cfg["classes"]
+    return [
+        ("conv1", (9 * 1, c1)),        # 3x3x1 -> c1
+        ("conv2", (9 * c1, c2)),       # 3x3xc1 -> c2, stride 2
+        ("conv3", (9 * c2, c2)),       # 3x3xc2 -> c2, stride 2 (residual)
+        ("conv4", (9 * c2, c2)),       # residual block second conv
+        ("head", (c2, classes)),
+    ]
+
+
+def cnn_init(seed=0, cfg=CNN_CFG):
+    return _init(np.random.default_rng(seed), cnn_param_shapes(cfg))
+
+
+def cnn_logits(params, images, cfg=CNN_CFG):
+    """images: (B, h*w) flat f32 -> (B, classes)."""
+    c1, c2 = cfg["c1"], cfg["c2"]
+    conv1, conv2, conv3, conv4, head = params
+    x = images.reshape(-1, cfg["h"], cfg["w"], 1)
+    x = jnp.maximum(_conv2d(x, conv1, 3, 3, 1, c1, 1), 0.0)
+    x = jnp.maximum(_conv2d(x, conv2, 3, 3, c1, c2, 2), 0.0)
+    # Residual block (the ResNet-shaped covariance structure).
+    h = jnp.maximum(_conv2d(x, conv3, 3, 3, c2, c2, 1), 0.0)
+    h = _conv2d(h, conv4, 3, 3, c2, c2, 1)
+    x = jnp.maximum(x + h, 0.0)
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    return x @ head
+
+
+def cnn_loss(params, images, labels, cfg=CNN_CFG):
+    return _softmax_xent(cnn_logits(params, images, cfg), labels)
+
+
+# ---------------------------------------------------------------------------
+# Conformer-block audio proxy
+# ---------------------------------------------------------------------------
+
+CONF_CFG = dict(frames=16, bins=32, dim=64, heads=4, ff=128, classes=8,
+                dw_kernel=7, batch=16)
+
+
+def conformer_param_shapes(cfg=CONF_CFG):
+    d, f = cfg["dim"], cfg["ff"]
+    return [
+        ("proj", (cfg["bins"], d)),
+        ("ln1_scale", (d, 1)),
+        ("wq", (d, d)), ("wk", (d, d)), ("wv", (d, d)), ("wo", (d, d)),
+        ("dw", (cfg["dw_kernel"], d)),     # depthwise conv over time
+        ("ln2_scale", (d, 1)),
+        ("ff1", (d, f)), ("ff2", (f, d)),
+        ("head", (d, cfg["classes"])),
+    ]
+
+
+def conformer_init(seed=0, cfg=CONF_CFG):
+    return _init(np.random.default_rng(seed), conformer_param_shapes(cfg))
+
+
+def _rmsnorm(x, scale):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(var + 1e-6) * scale.reshape(-1)
+
+
+def conformer_logits(params, spect, cfg=CONF_CFG):
+    """spect: (B, frames*bins) flat f32 -> (B, classes)."""
+    (proj, ln1, wq, wk, wv, wo, dw, ln2, ff1, ff2, head) = params
+    b = spect.shape[0]
+    t, nb, d, heads = cfg["frames"], cfg["bins"], cfg["dim"], cfg["heads"]
+    x = spect.reshape(b, t, nb) @ proj  # (B, T, D)
+    # Self-attention sub-block.
+    h = _rmsnorm(x, ln1)
+    hd = d // heads
+    q = (h @ wq).reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+    k = (h @ wk).reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+    v = (h @ wv).reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+    att = jax.nn.softmax(jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd), -1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + o @ wo
+    # Depthwise temporal convolution sub-block (the conformer signature).
+    kernel = dw.reshape(cfg["dw_kernel"], 1, d)  # (W, I/groups=1, O=D)
+    conv = jax.lax.conv_general_dilated(
+        x, kernel, window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=d,
+    )
+    x = x + jnp.maximum(conv, 0.0)
+    # Feed-forward sub-block (the rectangular narrow-to-wide kernels that
+    # motivate sketching, §3.4).
+    h = _rmsnorm(x, ln2)
+    x = x + jnp.maximum(h @ ff1, 0.0) @ ff2
+    return jnp.mean(x, axis=1) @ head
+
+
+def conformer_loss(params, spect, labels, cfg=CONF_CFG):
+    return _softmax_xent(conformer_logits(params, spect, cfg), labels)
+
+
+# ---------------------------------------------------------------------------
+# GNN molecular proxy
+# ---------------------------------------------------------------------------
+
+GNN_CFG = dict(nodes=16, feat=8, dim=64, steps=3, tasks=8, batch=16)
+
+
+def gnn_param_shapes(cfg=GNN_CFG):
+    d = cfg["dim"]
+    shapes = [("embed", (cfg["feat"], d))]
+    for i in range(cfg["steps"]):
+        shapes.append((f"msg{i}", (d, d)))
+    shapes.append(("head", (d, cfg["tasks"])))
+    return shapes
+
+
+def gnn_init(seed=0, cfg=GNN_CFG):
+    return _init(np.random.default_rng(seed), gnn_param_shapes(cfg))
+
+
+def gnn_logits(params, adjacency, feats, cfg=GNN_CFG):
+    """adjacency: (B, N*N) flat; feats: (B, N*feat) flat -> (B, tasks)."""
+    n, fdim = cfg["nodes"], cfg["feat"]
+    b = adjacency.shape[0]
+    a = adjacency.reshape(b, n, n)
+    # Symmetric degree normalization A_hat = D^{-1/2} A D^{-1/2}.
+    deg = jnp.sum(a, axis=-1, keepdims=True)
+    dinv = 1.0 / jnp.sqrt(jnp.maximum(deg, 1.0))
+    a_hat = a * dinv * dinv.transpose(0, 2, 1)
+    h = feats.reshape(b, n, fdim) @ params[0]
+    for i in range(cfg["steps"]):
+        msg = a_hat @ h @ params[1 + i]
+        h = jnp.maximum(h + msg, 0.0)  # residual message passing
+    pooled = jnp.mean(h, axis=1)
+    return pooled @ params[-1]
+
+
+def gnn_loss(params, adjacency, feats, labels, cfg=GNN_CFG):
+    """Multi-task binary cross-entropy; labels (B, tasks) in {0,1}."""
+    logits = gnn_logits(params, adjacency, feats, cfg)
+    # Stable BCE-with-logits.
+    losses = jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(
+        jnp.exp(-jnp.abs(logits))
+    )
+    return jnp.mean(losses)
+
+
+# ---------------------------------------------------------------------------
+# AOT wrappers
+# ---------------------------------------------------------------------------
+
+def make_grad_fn(loss, n_params):
+    """(*params, *batch) -> (loss, *grads)."""
+
+    def f(*args):
+        params = list(args[:n_params])
+        batch = args[n_params:]
+        val, grads = jax.value_and_grad(
+            lambda ps: loss(ps, *batch)
+        )(params)
+        return (val, *grads)
+
+    return f
+
+
+def make_eval_fn(loss, logits_fn, n_params):
+    """(*params, *batch) -> (loss, logits). The last batch arg is labels."""
+
+    def f(*args):
+        params = list(args[:n_params])
+        batch = args[n_params:]
+        return (loss(params, *batch), logits_fn(params, *batch[:-1]))
+
+    return f

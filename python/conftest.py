@@ -1,0 +1,6 @@
+"""Pytest root config: enable 64-bit types (kernel tests exercise the f64
+path; artifacts themselves remain f32 for the Rust runtime)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

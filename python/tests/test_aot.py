@@ -1,0 +1,93 @@
+"""AOT pipeline tests: lowering produces loadable HLO text, the manifest
+is consistent, and no typed-FFI custom calls leak into artifacts."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile import models_proxy as proxy
+
+
+def test_to_hlo_text_roundtrips_simple_fn():
+    def fn(x, y):
+        return (x @ y + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+def test_ffi_guard_rejects_eigh():
+    def fn(x):
+        w, v = jnp.linalg.eigh(x @ x.T)
+        return (w, v)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    with pytest.raises(RuntimeError, match="typed-FFI"):
+        aot.to_hlo_text(lowered)
+
+
+def test_lm_tiny_artifact_has_no_custom_calls():
+    cfg = model.config("tiny")
+    shapes = model.param_shapes(cfg)
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes] + [
+        jax.ShapeDtypeStruct((cfg["batch"], cfg["seq"] + 1), jnp.int32)
+    ]
+    lowered = jax.jit(model.grad_fn(cfg)).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "custom-call" not in text, "LM artifact must be pure HLO"
+
+
+def test_proxy_artifacts_have_no_custom_calls():
+    # Conv models are the risky ones (cuDNN-style lowering on GPU); on CPU
+    # they must stay as plain HLO convolution ops.
+    cfg = proxy.CNN_CFG
+    shapes = proxy.cnn_param_shapes(cfg)
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes] + [
+        jax.ShapeDtypeStruct((cfg["batch"], cfg["h"] * cfg["w"]), jnp.float32),
+        jax.ShapeDtypeStruct((cfg["batch"],), jnp.int32),
+    ]
+    lowered = jax.jit(proxy.make_grad_fn(proxy.cnn_loss, len(shapes))).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "custom-call" not in text
+    assert "convolution" in text
+
+
+def test_builder_writes_manifest_and_fixture(tmp_path=None):
+    out = tempfile.mkdtemp()
+    b = aot.Builder(out)
+
+    def fn(x):
+        return (2.0 * x,)
+
+    spec = jax.ShapeDtypeStruct((2, 3), jnp.float32)
+    x0 = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+    b.add("double", fn, [spec], ["x"], 0, fixture_inputs=[x0])
+    b.finish("test")
+    manifest = json.load(open(os.path.join(out, "manifest.json")))
+    assert manifest["artifacts"][0]["name"] == "double"
+    assert manifest["artifacts"][0]["inputs"][0]["shape"] == [2, 3]
+    assert manifest["artifacts"][0]["n_outputs"] == 1
+    fixtures = json.load(open(os.path.join(out, "fixtures.json")))
+    np.testing.assert_allclose(
+        fixtures["double"]["outputs"][0], (2 * x0).ravel()
+    )
+    assert os.path.exists(os.path.join(out, "double.hlo.txt"))
+
+
+def test_manifest_input_order_matches_param_shapes():
+    # The Rust runtime feeds parameters positionally; the manifest order
+    # must equal model.param_shapes order.
+    cfg = model.config("tiny")
+    names = [n for n, _ in model.param_shapes(cfg)]
+    assert names[0] == "embed" and names[-1] == "out"
+    assert len(names) == len(set(names)), "duplicate param names"

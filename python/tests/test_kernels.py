@@ -1,0 +1,119 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Randomized shape/dtype sweeps (seeded — hypothesis is not installed in
+this environment, so the sweep is an explicit randomized grid).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.cov_update import cov_update, vmem_bytes
+from compile.kernels.precond_apply import precond_apply
+from compile.kernels.sketch_gram import sketch_gram
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+COV_SHAPES = [
+    (4, 4), (8, 16), (16, 8), (32, 32), (128, 64), (64, 128),
+    (256, 128), (1, 8), (128, 1),
+]
+
+
+@pytest.mark.parametrize("m,n", COV_SHAPES)
+def test_cov_update_matches_ref(m, n):
+    rng = np.random.default_rng(m * 1000 + n)
+    c = _rand(rng, n, n)
+    c = c @ c.T  # PSD like a real accumulator
+    g = _rand(rng, m, n)
+    for beta2 in (1.0, 0.999, 0.5, 0.0):
+        got = cov_update(c, g, beta2)
+        want = ref.cov_update_ref(c, g, beta2)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block", [8, 16, 128])
+def test_cov_update_block_size_invariance(block):
+    rng = np.random.default_rng(7)
+    c = _rand(rng, 32, 32)
+    g = _rand(rng, 48, 32)
+    got = cov_update(c, g, 0.9, block_n=block, block_k=block)
+    want = ref.cov_update_ref(c, g, 0.9)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_cov_update_float64():
+    rng = np.random.default_rng(8)
+    c = _rand(rng, 16, 16, dtype=np.float64)
+    g = _rand(rng, 24, 16, dtype=np.float64)
+    got = cov_update(c, g, 0.99)
+    want = ref.cov_update_ref(c, g, 0.99)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_cov_update_left_factor_via_transpose():
+    # L update: pass G^T so news = (G^T)^T (G^T) = G G^T.
+    rng = np.random.default_rng(9)
+    c = _rand(rng, 12, 12)
+    g = _rand(rng, 12, 20)
+    got = cov_update(c, g.T, 1.0)
+    want = c + g @ g.T
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+PRECOND_SHAPES = [(8, 8), (16, 4), (4, 16), (64, 32), (128, 128), (96, 80)]
+
+
+@pytest.mark.parametrize("m,n", PRECOND_SHAPES)
+def test_precond_apply_matches_ref(m, n):
+    rng = np.random.default_rng(m * 97 + n)
+    pl_root = _rand(rng, m, m)
+    g = _rand(rng, m, n)
+    pr_root = _rand(rng, n, n)
+    got = precond_apply(pl_root, g, pr_root)
+    want = ref.precond_apply_ref(pl_root, g, pr_root)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_precond_apply_identity_roots_is_noop():
+    rng = np.random.default_rng(11)
+    g = _rand(rng, 32, 16)
+    got = precond_apply(jnp.eye(32), g, jnp.eye(16))
+    np.testing.assert_allclose(got, g, rtol=1e-6, atol=1e-6)
+
+
+SKETCH_SHAPES = [
+    # (d, ell, r)
+    (64, 8, 1), (128, 16, 4), (256, 4, 4), (512, 32, 8), (100, 10, 2),
+]
+
+
+@pytest.mark.parametrize("d,ell,r", SKETCH_SHAPES)
+def test_sketch_gram_matches_ref(d, ell, r):
+    rng = np.random.default_rng(d + ell + r)
+    b = _rand(rng, d, ell)
+    y = _rand(rng, d, r)
+    for beta2 in (1.0, 0.99):
+        got = sketch_gram(b, y, beta2)
+        want = ref.sketch_gram_ref(b, y, beta2)
+        assert got.shape == (ell + r, ell + r)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_sketch_gram_is_symmetric_psd():
+    rng = np.random.default_rng(13)
+    b = _rand(rng, 96, 12)
+    y = _rand(rng, 96, 4)
+    gram = np.asarray(sketch_gram(b, y, 0.9))
+    np.testing.assert_allclose(gram, gram.T, atol=1e-5)
+    w = np.linalg.eigvalsh(gram)
+    assert w.min() > -1e-4
+
+
+def test_vmem_budget_documented():
+    # The DESIGN.md section 5 claim: default tiling stays far under 16 MiB.
+    assert vmem_bytes() < 16 * 2**20 / 8

@@ -1,0 +1,206 @@
+"""L2 model tests: shapes, init-loss sanity, and finite-difference
+gradient checks on tiny configurations."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile import models_proxy as proxy
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM
+# ---------------------------------------------------------------------------
+
+def _tiny():
+    cfg = model.config("tiny")
+    params = [jnp.asarray(p) for p in model.init_params(cfg, seed=0)]
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(
+        rng.integers(0, cfg["vocab"], size=(cfg["batch"], cfg["seq"] + 1)),
+        dtype=jnp.int32,
+    )
+    return cfg, params, tokens
+
+
+def test_lm_param_shapes_all_2d():
+    for preset in ("tiny", "small", "base"):
+        cfg = model.config(preset)
+        for name, shape in model.param_shapes(cfg):
+            assert len(shape) == 2, f"{name} is not 2-D: {shape}"
+
+
+def test_lm_large_preset_is_paper_scale():
+    cfg = model.config("large")
+    n = model.param_count(cfg)
+    assert 80e6 < n < 120e6, f"large preset should be ~100M params, got {n}"
+
+
+def test_lm_init_loss_near_uniform():
+    cfg, params, tokens = _tiny()
+    loss = model.loss_fn(cfg, params, tokens)
+    uniform = np.log(cfg["vocab"])
+    assert abs(float(loss) - uniform) < 0.35 * uniform
+
+
+def test_lm_grads_match_param_shapes():
+    cfg, params, tokens = _tiny()
+    out = model.grad_fn(cfg)(*params, tokens)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    assert len(grads) == len(params)
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_lm_finite_difference_gradient():
+    cfg, params, tokens = _tiny()
+    out = model.grad_fn(cfg)(*params, tokens)
+    grads = out[1:]
+    # Check a few entries of the output projection gradient.
+    pidx = len(params) - 1  # "out"
+    f64_params = [p.astype(jnp.float64) for p in params]
+    for (i, j) in [(0, 0), (3, 7), (10, 20)]:
+        eps = 1e-5
+        pp = [p.copy() for p in f64_params]
+        pp[pidx] = pp[pidx].at[i, j].add(eps)
+        pm = [p.copy() for p in f64_params]
+        pm[pidx] = pm[pidx].at[i, j].add(-eps)
+        fd = (model.loss_fn(cfg, pp, tokens) - model.loss_fn(cfg, pm, tokens)) / (
+            2 * eps
+        )
+        assert abs(float(fd) - float(grads[pidx][i, j])) < 1e-3, (
+            f"({i},{j}): fd={float(fd)} ad={float(grads[pidx][i, j])}"
+        )
+
+
+def test_lm_causality():
+    # Changing a future token must not change earlier logits.
+    cfg, params, tokens = _tiny()
+    inputs = tokens[:, :-1]
+    logits1 = model.forward(cfg, params, inputs)
+    perturbed = inputs.at[:, -1].set((inputs[:, -1] + 1) % cfg["vocab"])
+    logits2 = model.forward(cfg, params, perturbed)
+    np.testing.assert_allclose(
+        logits1[:, : cfg["seq"] - 2], logits2[:, : cfg["seq"] - 2],
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_lm_learns_constant_sequence():
+    # Ten SGD steps on a constant-token batch should cut the loss.
+    cfg, params, _ = _tiny()
+    tokens = jnp.full((cfg["batch"], cfg["seq"] + 1), 5, dtype=jnp.int32)
+    f = model.grad_fn(cfg)
+    loss0 = None
+    for _ in range(10):
+        out = f(*params, tokens)
+        loss, grads = out[0], out[1:]
+        if loss0 is None:
+            loss0 = float(loss)
+        params = [p - 0.5 * g for p, g in zip(params, grads)]
+    assert float(loss) < 0.5 * loss0, f"{loss0} -> {float(loss)}"
+
+
+# ---------------------------------------------------------------------------
+# Proxy models
+# ---------------------------------------------------------------------------
+
+def test_cnn_shapes_and_loss():
+    cfg = proxy.CNN_CFG
+    params = [jnp.asarray(p) for p in proxy.cnn_init(0)]
+    rng = np.random.default_rng(1)
+    images = jnp.asarray(
+        rng.standard_normal((cfg["batch"], cfg["h"] * cfg["w"])), jnp.float32
+    )
+    labels = jnp.asarray(rng.integers(0, cfg["classes"], cfg["batch"]), jnp.int32)
+    logits = proxy.cnn_logits(params, images)
+    assert logits.shape == (cfg["batch"], cfg["classes"])
+    loss = proxy.cnn_loss(params, images, labels)
+    assert abs(float(loss) - np.log(cfg["classes"])) < 1.0
+
+
+def test_cnn_grads_finite_and_shaped():
+    cfg = proxy.CNN_CFG
+    params = [jnp.asarray(p) for p in proxy.cnn_init(0)]
+    rng = np.random.default_rng(2)
+    images = jnp.asarray(
+        rng.standard_normal((cfg["batch"], cfg["h"] * cfg["w"])), jnp.float32
+    )
+    labels = jnp.asarray(rng.integers(0, cfg["classes"], cfg["batch"]), jnp.int32)
+    out = proxy.make_grad_fn(proxy.cnn_loss, len(params))(*params, images, labels)
+    assert len(out) == len(params) + 1
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_conformer_shapes_and_grads():
+    cfg = proxy.CONF_CFG
+    params = [jnp.asarray(p) for p in proxy.conformer_init(0)]
+    rng = np.random.default_rng(3)
+    spect = jnp.asarray(
+        rng.standard_normal((cfg["batch"], cfg["frames"] * cfg["bins"])),
+        jnp.float32,
+    )
+    labels = jnp.asarray(rng.integers(0, cfg["classes"], cfg["batch"]), jnp.int32)
+    logits = proxy.conformer_logits(params, spect)
+    assert logits.shape == (cfg["batch"], cfg["classes"])
+    out = proxy.make_grad_fn(proxy.conformer_loss, len(params))(
+        *params, spect, labels
+    )
+    for g in out[1:]:
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_gnn_shapes_and_grads():
+    cfg = proxy.GNN_CFG
+    params = [jnp.asarray(p) for p in proxy.gnn_init(0)]
+    rng = np.random.default_rng(4)
+    n = cfg["nodes"]
+    adj = np.zeros((cfg["batch"], n, n), np.float32)
+    for b in range(cfg["batch"]):
+        for v in range(1, n):
+            u = rng.integers(0, v)
+            adj[b, v, u] = adj[b, u, v] = 1.0
+        np.fill_diagonal(adj[b], 1.0)
+    adjacency = jnp.asarray(adj.reshape(cfg["batch"], n * n))
+    feats = jnp.asarray(
+        rng.standard_normal((cfg["batch"], n * cfg["feat"])), jnp.float32
+    )
+    labels = jnp.asarray(
+        rng.integers(0, 2, (cfg["batch"], cfg["tasks"])), jnp.float32
+    )
+    logits = proxy.gnn_logits(params, adjacency, feats)
+    assert logits.shape == (cfg["batch"], cfg["tasks"])
+    out = proxy.make_grad_fn(proxy.gnn_loss, len(params))(
+        *params, adjacency, feats, labels
+    )
+    assert len(out) == len(params) + 1
+    for g in out[1:]:
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+@pytest.mark.parametrize("loss_is_permutation_invariant", [True])
+def test_gnn_node_permutation_invariance(loss_is_permutation_invariant):
+    # Mean-pooled GNN readout must be invariant to node relabeling.
+    cfg = proxy.GNN_CFG
+    params = [jnp.asarray(p) for p in proxy.gnn_init(0)]
+    rng = np.random.default_rng(5)
+    n = cfg["nodes"]
+    adj = np.eye(n, dtype=np.float32)
+    adj[0, 1] = adj[1, 0] = 1.0
+    adj[2, 3] = adj[3, 2] = 1.0
+    feats = rng.standard_normal((1, n, cfg["feat"])).astype(np.float32)
+    perm = rng.permutation(n)
+    adj_p = adj[np.ix_(perm, perm)]
+    feats_p = feats[:, perm, :]
+    l1 = proxy.gnn_logits(params, jnp.asarray(adj.reshape(1, -1)),
+                          jnp.asarray(feats.reshape(1, -1)))
+    l2 = proxy.gnn_logits(params, jnp.asarray(adj_p.reshape(1, -1)),
+                          jnp.asarray(feats_p.reshape(1, -1)))
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-4)
+    assert loss_is_permutation_invariant

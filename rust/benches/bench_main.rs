@@ -1,0 +1,231 @@
+//! Benchmark harness (criterion is not vendored — custom harness in
+//! `sketchy::util::bench`). Covers the hot paths behind every experiment:
+//!
+//!   tensor      matmul / Gram / eigh throughput (L3 substrate roofline)
+//!   sketch      FD update at paper scale (d=1024, ℓ=256)
+//!   optim       per-step latency: Adam vs Shampoo vs S-Shampoo
+//!   roots       spectral vs coupled-Newton inverse roots (ablation)
+//!   allreduce   coordinator reduction
+//!   artifact    XLA cov_update vs native Rust (needs `make artifacts`)
+//!   e2e         full LM training step (needs `make artifacts`)
+//!
+//! Run: cargo bench [-- --fast] [-- --filter NAME]
+
+use sketchy::optim::{
+    Adam, GraftType, Optimizer, SShampoo, SShampooConfig, Shampoo, ShampooConfig,
+};
+use sketchy::sketch::FdSketch;
+use sketchy::tensor::{a_at, at_a, eigh, matmul, Matrix};
+use sketchy::util::bench::{gflops, Bench};
+use sketchy::util::cli::Args;
+use sketchy::util::rng::Pcg64;
+
+fn bench(name: &str, fast: bool) -> Bench {
+    if fast {
+        Bench::fast(name)
+    } else {
+        Bench::new(name)
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let fast = args.has("fast");
+    let filter = args.get("filter").map(|s| s.to_string());
+    let run = |name: &str| filter.as_deref().map(|f| name.contains(f)).unwrap_or(true);
+    let mut rows: Vec<String> = vec![];
+    let mut record = |b: &Bench, extra: String| {
+        println!("{} {extra}", b.report());
+        rows.push(format!("{},{extra}", b.csv_row()));
+    };
+    let mut rng = Pcg64::new(0xbe);
+
+    // ---------------- tensor substrate ----------------
+    for &n in &[128usize, 256, 512] {
+        let name = format!("tensor/matmul_{n}");
+        if run(&name) {
+            let a = Matrix::randn(n, n, &mut rng);
+            let b2 = Matrix::randn(n, n, &mut rng);
+            let mut bh = bench(&name, fast);
+            let st = bh.run(|| {
+                std::hint::black_box(matmul(&a, &b2));
+            });
+            record(&bh, format!("{:.2} GFLOP/s", gflops((2 * n * n * n) as f64, st.median)));
+        }
+    }
+    for &(k, n) in &[(256usize, 128usize), (1024, 256)] {
+        let name = format!("tensor/gram_at_a_{k}x{n}");
+        if run(&name) {
+            let a = Matrix::randn(k, n, &mut rng);
+            let mut bh = bench(&name, fast);
+            let st = bh.run(|| {
+                std::hint::black_box(at_a(&a));
+            });
+            record(&bh, format!("{:.2} GFLOP/s", gflops((k * n * n) as f64, st.median)));
+        }
+    }
+    for &n in &[64usize, 128, 256, 512] {
+        let name = format!("tensor/eigh_{n}");
+        if run(&name) {
+            let g = Matrix::randn(2 * n, n, &mut rng);
+            let a = at_a(&g);
+            let mut bh = bench(&name, fast);
+            let st = bh.run(|| {
+                std::hint::black_box(eigh(&a));
+            });
+            record(&bh, format!("{:.1} n³flop/s-scale {:.2}", 0.0, (n * n * n) as f64 / st.median.as_secs_f64() / 1e9));
+        }
+    }
+
+    // ---------------- FD sketch (paper scale) ----------------
+    // Fig. 3 block size is 1024 with ℓ=256; news rank r = batch of
+    // gradient columns folded per stat step.
+    for &(d, ell, r) in &[(1024usize, 256usize, 1usize), (1024, 256, 32), (256, 16, 256)] {
+        let name = format!("sketch/fd_update_d{d}_l{ell}_r{r}");
+        if run(&name) {
+            let mut fd = FdSketch::new(d, ell, 0.999);
+            // Warm the sketch to steady state.
+            for _ in 0..3 {
+                let y = Matrix::randn(d, r.max(ell / 4), &mut rng);
+                fd.update(&y);
+            }
+            let y = Matrix::randn(d, r, &mut rng);
+            let mut bh = bench(&name, fast);
+            let st = bh.run(|| {
+                let mut f2 = fd.clone();
+                std::hint::black_box(f2.update(&y));
+            });
+            // Dominant cost: Gram build d(ℓ+r)² + eigh (ℓ+r)³ + basis d(ℓ+r)ℓ.
+            let m = ell + r;
+            let fl = (d * m * m + m * m * m + d * m * ell) as f64;
+            record(&bh, format!("{:.2} GFLOP/s (nominal)", gflops(fl, st.median)));
+        }
+    }
+
+    // ---------------- optimizer step latency ----------------
+    let shapes = [(256usize, 128usize), (128, 256), (256, 1)];
+    let grads: Vec<Matrix> = shapes
+        .iter()
+        .map(|&(r, c)| Matrix::randn(r, c, &mut rng))
+        .collect();
+    let cfg = ShampooConfig {
+        lr: 1e-3,
+        start_preconditioning_step: 1,
+        stat_interval: 1,
+        precond_interval: 1,
+        graft: GraftType::RmspropNormalized,
+        ..Default::default()
+    };
+    if run("optim/adam_step") {
+        let mut params: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+        let mut opt = Adam::new(&shapes, 1e-3);
+        let mut bh = bench("optim/adam_step", fast);
+        bh.run(|| opt.step(&mut params, &grads));
+        record(&bh, String::new());
+    }
+    if run("optim/shampoo_step") {
+        let mut params: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+        let mut opt = Shampoo::new(&shapes, cfg.clone());
+        let mut bh = bench("optim/shampoo_step", fast);
+        bh.run(|| opt.step(&mut params, &grads));
+        record(&bh, String::new());
+    }
+    for &rank in &[16usize, 64] {
+        let name = format!("optim/s_shampoo_step_l{rank}");
+        if run(&name) {
+            let mut params: Vec<Matrix> =
+                shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+            let mut opt = SShampoo::new(&shapes, SShampooConfig { base: cfg.clone(), rank });
+            let mut bh = bench(&name, fast);
+            bh.run(|| opt.step(&mut params, &grads));
+            record(&bh, String::new());
+        }
+    }
+
+    // ---------------- inverse-root ablation (DESIGN.md §9) ----------------
+    if run("roots/eigh_vs_newton_128") {
+        let g = Matrix::randn(256, 128, &mut rng);
+        let a = at_a(&g);
+        let mut bh = bench("roots/eigh_inv4root_128", fast);
+        bh.run(|| {
+            std::hint::black_box(sketchy::tensor::inv_pth_root(&a, 4.0, 1e-6));
+        });
+        record(&bh, String::new());
+        let mut bh = bench("roots/newton_inv4root_128", fast);
+        bh.run(|| {
+            std::hint::black_box(sketchy::tensor::roots::inv_pth_root_newton(&a, 4, 1e-6, 40));
+        });
+        record(&bh, String::new());
+    }
+
+    // ---------------- coordinator allreduce ----------------
+    if run("coordinator/allreduce_8x") {
+        let shards: Vec<Vec<Matrix>> = (0..8)
+            .map(|_| vec![Matrix::randn(256, 256, &mut rng)])
+            .collect();
+        let mut bh = bench("coordinator/allreduce_8x256x256", fast);
+        bh.run(|| {
+            std::hint::black_box(sketchy::coordinator::tree_allreduce(shards.clone()));
+        });
+        record(&bh, String::new());
+    }
+
+    // ---------------- artifact + e2e (need artifacts) ----------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = std::sync::Arc::new(sketchy::runtime::Runtime::load("artifacts").unwrap());
+        if run("artifact/cov_update_256_xla") {
+            let c: Vec<f32> = (0..256 * 256).map(|_| rng.gaussian() as f32).collect();
+            let g: Vec<f32> = (0..256 * 256).map(|_| rng.gaussian() as f32).collect();
+            rt.executable("cov_update_256").unwrap();
+            let mut bh = bench("artifact/cov_update_256_xla", fast);
+            let st = bh.run(|| {
+                let inputs = [
+                    sketchy::runtime::literal::lit_f32(&c, &[256, 256]).unwrap(),
+                    sketchy::runtime::literal::lit_f32(&g, &[256, 256]).unwrap(),
+                ];
+                std::hint::black_box(rt.execute("cov_update_256", &inputs).unwrap());
+            });
+            record(&bh, format!("{:.2} GFLOP/s", gflops((2 * 256 * 256 * 256) as f64, st.median)));
+            // Native Rust equivalent for the same work.
+            let cm = Matrix::randn(256, 256, &mut rng);
+            let gm = Matrix::randn(256, 256, &mut rng);
+            let mut bh = bench("artifact/cov_update_256_native", fast);
+            let st = bh.run(|| {
+                let mut c2 = cm.scale(0.999);
+                c2.axpy(1.0, &at_a(&gm));
+                std::hint::black_box(c2);
+            });
+            record(&bh, format!("{:.2} GFLOP/s", gflops((2 * 256 * 256 * 256) as f64, st.median)));
+            let _ = a_at(&gm);
+        }
+        if run("e2e/lm_tiny_step") {
+            use sketchy::data::MarkovCorpus;
+            use sketchy::train::LmTrainer;
+            let mut trainer = LmTrainer::new(rt.clone(), "tiny", 1).unwrap();
+            let shapes = trainer.shapes.clone();
+            let mut corpus = MarkovCorpus::new(trainer.vocab, 1);
+            let mut opt = SShampoo::new(
+                &shapes,
+                SShampooConfig { base: cfg.clone(), rank: 8 },
+            );
+            // Warm up compile.
+            trainer.step(&mut opt, &mut corpus, 2).unwrap();
+            let mut bh = bench("e2e/lm_tiny_step_s_shampoo_2workers", fast);
+            bh.run(|| {
+                trainer.step(&mut opt, &mut corpus, 2).unwrap();
+            });
+            record(&bh, String::new());
+        }
+    } else {
+        eprintln!("NOTE: artifact/e2e benches skipped (run `make artifacts`)");
+    }
+
+    // CSV dump.
+    std::fs::create_dir_all("bench_out").ok();
+    let csv = format!(
+        "name,iters,median_ns,p10_ns,p90_ns,mean_ns,extra\n{}\n",
+        rows.join("\n")
+    );
+    std::fs::write("bench_out/bench_main.csv", csv).unwrap();
+    println!("\n[csv written to bench_out/bench_main.csv]");
+}

@@ -1,0 +1,161 @@
+//! Tree allreduce over in-process gradient shards.
+//!
+//! Simulates the reduction structure of a data-parallel pod: ⌈log₂ W⌉
+//! pairwise-combine rounds, each merging partner shards in parallel.
+//! The result on "rank 0" is the element-wise mean across workers.
+
+use crate::tensor::Matrix;
+
+/// Statistics from one allreduce (observability for the E10 driver).
+#[derive(Clone, Debug, Default)]
+pub struct AllreduceStats {
+    /// Number of pairwise-combine rounds (= ⌈log₂ workers⌉).
+    pub rounds: usize,
+    /// Total elements moved between shards.
+    pub elements_moved: usize,
+}
+
+/// Reduce worker gradient shards to their mean with a binary tree.
+/// Consumes the shards (rank 0's buffer becomes the output).
+pub fn tree_allreduce(mut shards: Vec<Vec<Matrix>>) -> (Vec<Matrix>, AllreduceStats) {
+    let w = shards.len();
+    assert!(w > 0, "no shards");
+    let mut stats = AllreduceStats::default();
+    let mut stride = 1;
+    while stride < w {
+        stats.rounds += 1;
+        // Pair (i, i+stride) for i ≡ 0 (mod 2·stride). Combines within a
+        // round are independent — run them on scoped threads like a real
+        // reduction tree's parallel links.
+        let mut round_moved = 0usize;
+        {
+            // Split the shard vec into disjoint (dst, src) pairs.
+            let mut pairs: Vec<(usize, usize)> = vec![];
+            let mut i = 0;
+            while i + stride < w {
+                pairs.push((i, i + stride));
+                i += 2 * stride;
+            }
+            for &(_dst, src) in &pairs {
+                round_moved += shards[src].iter().map(|m| m.as_slice().len()).sum::<usize>();
+            }
+            // Take the source shards out, then add into destinations in
+            // parallel.
+            let mut taken: Vec<(usize, Vec<Matrix>)> = vec![];
+            for &(_, src) in pairs.iter().rev() {
+                taken.push((src, std::mem::take(&mut shards[src])));
+            }
+            taken.reverse();
+            std::thread::scope(|scope| {
+                let mut rest: &mut [Vec<Matrix>] = &mut shards;
+                let mut base = 0usize;
+                let mut handles = vec![];
+                for (&(dst, _), (_, src_shard)) in pairs.iter().zip(taken) {
+                    // Split off the destination shard mutably.
+                    let offset = dst - base;
+                    let (_, tail) = rest.split_at_mut(offset);
+                    let (dst_slot, tail2) = tail.split_at_mut(1);
+                    rest = tail2;
+                    base = dst + 1;
+                    let dst_ref = &mut dst_slot[0];
+                    handles.push(scope.spawn(move || {
+                        for (d, s) in dst_ref.iter_mut().zip(&src_shard) {
+                            d.axpy(1.0, s);
+                        }
+                    }));
+                }
+                for h in handles {
+                    h.join().unwrap();
+                }
+            });
+        }
+        stats.elements_moved += round_moved;
+        stride *= 2;
+    }
+    let mut out = std::mem::take(&mut shards[0]);
+    let scale = 1.0 / w as f64;
+    for m in &mut out {
+        m.scale_inplace(scale);
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::for_all_msg;
+    use crate::util::rng::Pcg64;
+
+    fn serial_mean(shards: &[Vec<Matrix>]) -> Vec<Matrix> {
+        let w = shards.len();
+        let mut out = shards[0].clone();
+        for s in &shards[1..] {
+            for (o, m) in out.iter_mut().zip(s) {
+                o.axpy(1.0, m);
+            }
+        }
+        for m in &mut out {
+            m.scale_inplace(1.0 / w as f64);
+        }
+        out
+    }
+
+    #[test]
+    fn prop_allreduce_equals_serial_mean() {
+        for_all_msg(
+            400,
+            15,
+            |rng| {
+                let workers = 1 + rng.below(9);
+                let tensors = 1 + rng.below(4);
+                let seed = rng.next_u64();
+                (workers, tensors, seed)
+            },
+            |&(workers, tensors, seed)| {
+                let mut rng = Pcg64::new(seed);
+                let shapes: Vec<(usize, usize)> =
+                    (0..tensors).map(|_| (1 + rng.below(6), 1 + rng.below(6))).collect();
+                let shards: Vec<Vec<Matrix>> = (0..workers)
+                    .map(|_| {
+                        shapes
+                            .iter()
+                            .map(|&(r, c)| Matrix::randn(r, c, &mut rng))
+                            .collect()
+                    })
+                    .collect();
+                let want = serial_mean(&shards);
+                let (got, stats) = tree_allreduce(shards);
+                let expected_rounds = (workers as f64).log2().ceil() as usize;
+                if stats.rounds != expected_rounds {
+                    return Err(format!(
+                        "rounds {} != ceil(log2({workers})) = {expected_rounds}",
+                        stats.rounds
+                    ));
+                }
+                for (g, w) in got.iter().zip(&want) {
+                    if g.max_diff(w) > 1e-12 {
+                        return Err(format!("mean mismatch: {}", g.max_diff(w)));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn single_worker_is_identity() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0]]);
+        let (out, stats) = tree_allreduce(vec![vec![m.clone()]]);
+        assert_eq!(out[0], m);
+        assert_eq!(stats.rounds, 0);
+        assert_eq!(stats.elements_moved, 0);
+    }
+
+    #[test]
+    fn elements_moved_counts_comm_volume() {
+        let shards: Vec<Vec<Matrix>> = (0..4).map(|_| vec![Matrix::zeros(2, 3)]).collect();
+        let (_, stats) = tree_allreduce(shards);
+        // Round 1: 2 pairs × 6 elements; round 2: 1 pair × 6.
+        assert_eq!(stats.elements_moved, 18);
+    }
+}

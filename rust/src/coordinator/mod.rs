@@ -1,0 +1,19 @@
+//! Data-parallel training coordinator (system S8).
+//!
+//! The paper's headline setting is large-batch data-parallel training
+//! (§1, §7: "we would frequently find that faster accelerators were
+//! unavailable ... encouraging us to leverage data-parallel training").
+//! This module reproduces that coordination structure at laptop scale:
+//! a leader drives N worker threads, each computing gradients for its
+//! microbatch through the PJRT artifact; gradients meet in a tree
+//! allreduce; the leader applies the (Sketchy) optimizer once per step —
+//! amortizing the batch-size-independent optimizer cost exactly as §7
+//! argues.
+
+pub mod allreduce;
+pub mod pipeline;
+pub mod worker;
+
+pub use allreduce::{tree_allreduce, AllreduceStats};
+pub use pipeline::BoundedQueue;
+pub use worker::{data_parallel_step, GradientWorker, StepResult};

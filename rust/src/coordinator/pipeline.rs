@@ -1,0 +1,177 @@
+//! Bounded producer/consumer queue with backpressure accounting — the
+//! data-pipeline leg of the coordinator (batches are produced by the
+//! generator thread and consumed by gradient workers; the bound keeps
+//! the producer from racing ahead of training).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Bounded MPMC queue (condvar-based; std::sync::mpsc has no bounded
+/// multi-consumer flavor). Tracks high-water mark and block counts.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+    high_water: usize,
+    producer_blocks: usize,
+    consumer_blocks: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1);
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                q: VecDeque::new(),
+                closed: false,
+                high_water: 0,
+                producer_blocks: 0,
+                consumer_blocks: 0,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Blocking push; returns false if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.q.len() >= self.cap {
+            g.producer_blocks += 1;
+        }
+        while g.q.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.q.push_back(item);
+        let depth = g.q.len();
+        if depth > g.high_water {
+            g.high_water = depth;
+        }
+        drop(g);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; None when closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.q.is_empty() {
+            g.consumer_blocks += 1;
+        }
+        while g.q.is_empty() && !g.closed {
+            g = self.not_empty.wait(g).unwrap();
+        }
+        let item = g.q.pop_front();
+        drop(g);
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close the queue: producers fail, consumers drain.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// (high-water mark, producer blocks, consumer blocks).
+    pub fn stats(&self) -> (usize, usize, usize) {
+        let g = self.inner.lock().unwrap();
+        (g.high_water, g.producer_blocks, g.consumer_blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = BoundedQueue::new(4);
+        for i in 0..3 {
+            assert!(q.push(i));
+        }
+        q.close();
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_bounds_depth() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let qp = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                qp.push(i);
+            }
+            qp.close();
+        });
+        // Slow consumer.
+        let mut got = vec![];
+        while let Some(v) = q.pop() {
+            got.push(v);
+            std::thread::yield_now();
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+        let (hw, pblocks, _) = q.stats();
+        assert!(hw <= 2, "queue exceeded bound: {hw}");
+        assert!(pblocks > 0, "producer never hit backpressure");
+    }
+
+    #[test]
+    fn multi_consumer_drains_everything() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let qp = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..200 {
+                qp.push(i);
+            }
+            qp.close();
+        });
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let qc = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut local = vec![];
+                while let Some(v) = qc.pop() {
+                    local.push(v);
+                }
+                local
+            }));
+        }
+        producer.join().unwrap();
+        let mut all: Vec<i32> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn close_unblocks_producer() {
+        let q = Arc::new(BoundedQueue::new(1));
+        assert!(q.push(1));
+        let qp = q.clone();
+        let t = std::thread::spawn(move || qp.push(2)); // blocks: full
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(!t.join().unwrap(), "push into closed queue must fail");
+    }
+}

@@ -1,0 +1,138 @@
+//! Synthetic language-modeling corpus for the end-to-end driver (E10).
+//!
+//! Tokens are drawn from a seeded order-2 Markov chain whose transition
+//! table has low entropy (≈2.5 bits vs log₂|V| for uniform), so a
+//! transformer LM has real structure to learn and the loss curve
+//! separates optimizers. Batches are emitted as (inputs, targets) token
+//! id arrays shaped [batch, seq_len].
+
+use crate::util::rng::Pcg64;
+
+/// Order-2 Markov token source.
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    /// For each (prev2, prev1) context, a small set of likely next tokens
+    /// with geometric-ish weights.
+    table: Vec<[u32; 4]>,
+    rng: Pcg64,
+    state: (u32, u32),
+}
+
+impl MarkovCorpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        assert!(vocab >= 8);
+        let mut rng = Pcg64::new(seed);
+        // Each context maps to 4 candidate successors.
+        let table = (0..vocab * vocab)
+            .map(|_| {
+                [
+                    rng.below(vocab) as u32,
+                    rng.below(vocab) as u32,
+                    rng.below(vocab) as u32,
+                    rng.below(vocab) as u32,
+                ]
+            })
+            .collect();
+        MarkovCorpus { vocab, table, rng: rng.split(), state: (0, 1) }
+    }
+
+    /// Next token id.
+    pub fn next_token(&mut self) -> u32 {
+        let ctx = (self.state.0 as usize) * self.vocab + self.state.1 as usize;
+        let cands = &self.table[ctx];
+        // Geometric-ish selection: P(cand_0) = 0.55, 0.25, 0.12, 0.05,
+        // plus 3% uniform smoothing over the vocab.
+        let u = self.rng.uniform();
+        let tok = if u < 0.03 {
+            self.rng.below(self.vocab) as u32
+        } else if u < 0.58 {
+            cands[0]
+        } else if u < 0.83 {
+            cands[1]
+        } else if u < 0.95 {
+            cands[2]
+        } else {
+            cands[3]
+        };
+        self.state = (self.state.1, tok);
+        tok
+    }
+
+    /// Emit a [batch, seq+1] token block; callers split into input/target.
+    pub fn batch(&mut self, batch: usize, seq: usize) -> Vec<Vec<u32>> {
+        (0..batch)
+            .map(|_| (0..=seq).map(|_| self.next_token()).collect())
+            .collect()
+    }
+
+    /// Empirical unigram entropy in nats over `n` samples (diagnostics:
+    /// the LM loss should drop below this).
+    pub fn unigram_entropy(&mut self, n: usize) -> f64 {
+        let mut counts = vec![0usize; self.vocab];
+        for _ in 0..n {
+            counts[self.next_token() as usize] += 1;
+        }
+        let mut h = 0.0;
+        for c in counts {
+            if c > 0 {
+                let p = c as f64 / n as f64;
+                h -= p * p.ln();
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_range_and_deterministic() {
+        let mut c1 = MarkovCorpus::new(32, 5);
+        let mut c2 = MarkovCorpus::new(32, 5);
+        for _ in 0..200 {
+            let t1 = c1.next_token();
+            assert_eq!(t1, c2.next_token());
+            assert!((t1 as usize) < 32);
+        }
+    }
+
+    #[test]
+    fn batch_shape() {
+        let mut c = MarkovCorpus::new(16, 6);
+        let b = c.batch(4, 8);
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|row| row.len() == 9));
+    }
+
+    #[test]
+    fn structure_is_learnable() {
+        // Bigram predictability: the most likely successor of each
+        // context should fire clearly above chance.
+        let mut c = MarkovCorpus::new(16, 7);
+        let mut hits = 0;
+        let mut total = 0;
+        // Estimate: after observing a context, next token equals the
+        // table's top candidate with probability ≈ 0.55 + smoothing.
+        for _ in 0..5000 {
+            let ctx = (c.state.0 as usize) * c.vocab + c.state.1 as usize;
+            let top = c.table[ctx][0];
+            let tok = c.next_token();
+            if tok == top {
+                hits += 1;
+            }
+            total += 1;
+        }
+        let rate = hits as f64 / total as f64;
+        assert!(rate > 0.4, "top-candidate rate {rate} ≈ chance");
+    }
+
+    #[test]
+    fn entropy_below_uniform() {
+        let mut c = MarkovCorpus::new(64, 8);
+        let h = c.unigram_entropy(20_000);
+        assert!(h < (64f64).ln() + 1e-9);
+        assert!(h > 1.0);
+    }
+}

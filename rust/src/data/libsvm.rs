@@ -1,0 +1,107 @@
+//! LIBSVM text format parser (Chang & Lin [44]).
+//!
+//! The App. A experiments run on synthetic stand-ins by default (no
+//! network in this environment), but `sketchy repro tbl3 --libsvm DIR`
+//! will read the real `gisette_scale` / `a9a` / `cifar10` files if the
+//! user supplies them. Format: `label idx:val idx:val ...` with 1-based
+//! indices.
+
+/// Parsed dataset: dense feature rows (with an appended intercept column)
+/// and ±1 labels.
+pub struct LibsvmData {
+    pub features: Vec<Vec<f64>>,
+    pub labels: Vec<f64>,
+    pub dim: usize,
+}
+
+/// Parse LIBSVM text. `dim_hint` fixes the feature count (0 = infer from
+/// max index). An all-ones intercept column is appended, matching the
+/// paper's preprocessing.
+pub fn parse_libsvm(text: &str, dim_hint: usize) -> Result<LibsvmData, String> {
+    let mut rows: Vec<Vec<(usize, f64)>> = vec![];
+    let mut labels = vec![];
+    let mut max_idx = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().ok_or(format!("line {}: empty", ln + 1))?;
+        let label: f64 = label_tok
+            .parse()
+            .map_err(|_| format!("line {}: bad label {label_tok}", ln + 1))?;
+        // Normalize to ±1 (cifar10 multiclass is binarized: class 0 vs rest,
+        // the standard binary reduction for logistic experiments).
+        let y = if label > 0.0 { 1.0 } else { -1.0 };
+        let mut row = vec![];
+        for p in parts {
+            let (i_s, v_s) = p
+                .split_once(':')
+                .ok_or(format!("line {}: bad pair {p}", ln + 1))?;
+            let idx: usize = i_s
+                .parse()
+                .map_err(|_| format!("line {}: bad index {i_s}", ln + 1))?;
+            let val: f64 = v_s
+                .parse()
+                .map_err(|_| format!("line {}: bad value {v_s}", ln + 1))?;
+            if idx == 0 {
+                return Err(format!("line {}: LIBSVM indices are 1-based", ln + 1));
+            }
+            max_idx = max_idx.max(idx);
+            row.push((idx - 1, val));
+        }
+        rows.push(row);
+        labels.push(y);
+    }
+    let d = if dim_hint > 0 { dim_hint.max(max_idx) } else { max_idx };
+    let features = rows
+        .into_iter()
+        .map(|sparse| {
+            let mut dense = vec![0.0; d + 1];
+            for (i, v) in sparse {
+                dense[i] = v;
+            }
+            dense[d] = 1.0; // intercept
+            dense
+        })
+        .collect();
+    Ok(LibsvmData { features, labels, dim: d + 1 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = "+1 1:0.5 3:1.0\n-1 2:2.0\n";
+        let data = parse_libsvm(text, 0).unwrap();
+        assert_eq!(data.dim, 4); // 3 features + intercept
+        assert_eq!(data.features[0], vec![0.5, 0.0, 1.0, 1.0]);
+        assert_eq!(data.features[1], vec![0.0, 2.0, 0.0, 1.0]);
+        assert_eq!(data.labels, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn multiclass_binarized() {
+        let text = "3 1:1\n0 1:1\n";
+        let data = parse_libsvm(text, 0).unwrap();
+        assert_eq!(data.labels, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn dim_hint_and_blank_lines() {
+        let text = "\n+1 2:1\n\n# comment\n";
+        let data = parse_libsvm(text, 10).unwrap();
+        assert_eq!(data.dim, 11);
+        assert_eq!(data.features.len(), 1);
+    }
+
+    #[test]
+    fn errors_on_malformed() {
+        assert!(parse_libsvm("+1 0:1\n", 0).is_err()); // 0-based index
+        assert!(parse_libsvm("+1 a:b\n", 0).is_err());
+        assert!(parse_libsvm("xx 1:1\n", 0).is_err());
+    }
+}

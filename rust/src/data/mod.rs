@@ -1,0 +1,13 @@
+//! Data substrate (system S6): synthetic replacements for the paper's
+//! datasets (see DESIGN.md §6 for the substitution rationale), a LIBSVM
+//! parser for dropping in the real convex datasets, and workload
+//! generators for the LM / image / audio / graph proxy tasks.
+
+pub mod corpus;
+pub mod libsvm;
+pub mod proxy;
+pub mod synthetic;
+
+pub use corpus::MarkovCorpus;
+pub use libsvm::parse_libsvm;
+pub use synthetic::{DatasetKind, SyntheticLogistic};

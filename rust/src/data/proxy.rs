@@ -1,0 +1,305 @@
+//! Synthetic proxy workloads for the three Fig. 2 tasks (DESIGN.md §6):
+//!
+//! - **image** (ResNet-50 / ImageNet →) anisotropic class-mean Gaussians
+//!   rendered as H×W×1 images with augmentation noise;
+//! - **audio** (Conformer / Librispeech →) spectrogram-like sequences
+//!   from a latent-state chain, sequence classification;
+//! - **graph** (GNN / ogbg-molpcba →) random molecular-ish graphs with
+//!   dense adjacency, node features and multi-task binary labels.
+//!
+//! All generators emit flat `f32` buffers matching the AOT artifact input
+//! layouts, plus integer labels. Everything is seeded.
+
+use crate::util::rng::Pcg64;
+
+/// A generated classification batch: flat row-major features + labels.
+pub struct Batch {
+    pub features: Vec<f32>,
+    pub labels: Vec<i32>,
+    /// Per-example feature element count.
+    pub feature_len: usize,
+}
+
+/// Image proxy: `classes` Gaussian class templates over an h×w grid with
+/// structured (low-frequency) patterns and additive noise.
+pub struct ImageProxy {
+    pub h: usize,
+    pub w: usize,
+    pub classes: usize,
+    templates: Vec<Vec<f32>>,
+    rng: Pcg64,
+}
+
+impl ImageProxy {
+    pub fn new(h: usize, w: usize, classes: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let templates = (0..classes)
+            .map(|_| {
+                // Low-frequency template: sum of a few random 2-D cosines.
+                let fx1 = rng.uniform_in(0.5, 3.0);
+                let fy1 = rng.uniform_in(0.5, 3.0);
+                let fx2 = rng.uniform_in(0.5, 3.0);
+                let fy2 = rng.uniform_in(0.5, 3.0);
+                let p1 = rng.uniform_in(0.0, 6.28);
+                let p2 = rng.uniform_in(0.0, 6.28);
+                (0..h * w)
+                    .map(|i| {
+                        let y = (i / w) as f64 / h as f64;
+                        let x = (i % w) as f64 / w as f64;
+                        ((fx1 * x * 6.28 + fy1 * y * 6.28 + p1).cos()
+                            + 0.5 * (fx2 * x * 6.28 - fy2 * y * 6.28 + p2).cos())
+                            as f32
+                    })
+                    .collect()
+            })
+            .collect();
+        ImageProxy { h, w, classes, templates, rng: rng.split() }
+    }
+
+    /// Same task (identical class templates), independent sample stream —
+    /// for held-out evaluation.
+    pub fn fork_stream(&self, stream_seed: u64) -> Self {
+        ImageProxy {
+            h: self.h,
+            w: self.w,
+            classes: self.classes,
+            templates: self.templates.clone(),
+            rng: Pcg64::new(stream_seed),
+        }
+    }
+
+    pub fn batch(&mut self, n: usize) -> Batch {
+        let fl = self.h * self.w;
+        let mut features = Vec::with_capacity(n * fl);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = self.rng.below(self.classes);
+            labels.push(c as i32);
+            // Augmentation: random gain/shift plus pixel noise (stands in
+            // for the crop/flip augmentations of the real pipeline).
+            let gain = 0.6 + 0.8 * self.rng.uniform();
+            let shift = 0.3 * self.rng.gaussian();
+            for &t in &self.templates[c] {
+                let v = gain as f32 * t + shift as f32 + 1.3 * self.rng.gaussian() as f32;
+                features.push(v);
+            }
+        }
+        Batch { features, labels, feature_len: fl }
+    }
+}
+
+/// Audio proxy: sequences of `frames`×`bins` spectrogram frames emitted by
+/// a class-dependent latent-state chain (phoneme-like).
+pub struct AudioProxy {
+    pub frames: usize,
+    pub bins: usize,
+    pub classes: usize,
+    /// Per class: sequence of band centers over a few latent states.
+    state_bands: Vec<Vec<f64>>,
+    rng: Pcg64,
+}
+
+impl AudioProxy {
+    pub fn new(frames: usize, bins: usize, classes: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let state_bands = (0..classes)
+            .map(|_| (0..4).map(|_| rng.uniform_in(0.1, 0.9)).collect())
+            .collect();
+        AudioProxy { frames, bins, classes, state_bands, rng: rng.split() }
+    }
+
+    /// Same task (identical state bands), independent sample stream.
+    pub fn fork_stream(&self, stream_seed: u64) -> Self {
+        AudioProxy {
+            frames: self.frames,
+            bins: self.bins,
+            classes: self.classes,
+            state_bands: self.state_bands.clone(),
+            rng: Pcg64::new(stream_seed),
+        }
+    }
+
+    pub fn batch(&mut self, n: usize) -> Batch {
+        let fl = self.frames * self.bins;
+        let mut features = Vec::with_capacity(n * fl);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = self.rng.below(self.classes);
+            labels.push(c as i32);
+            let bands = &self.state_bands[c];
+            for f in 0..self.frames {
+                // Latent state advances every few frames.
+                let st = (f / (self.frames / 4).max(1)).min(3);
+                let center = bands[st] * self.bins as f64 + 1.5 * self.rng.gaussian();
+                let width = 2.0 + 2.0 * self.rng.uniform();
+                for b in 0..self.bins {
+                    let z = (b as f64 - center) / width;
+                    let energy = (-0.5 * z * z).exp();
+                    features.push((energy + 0.8 * self.rng.gaussian().abs()) as f32);
+                }
+            }
+        }
+        Batch { features, labels, feature_len: fl }
+    }
+}
+
+/// Graph proxy: `nodes`-node molecular-ish graphs (random tree plus ring
+/// closures), node features, dense adjacency, `tasks` binary labels
+/// derived from structural motifs (ring count, feature sums) + noise.
+pub struct GraphProxy {
+    pub nodes: usize,
+    pub feat: usize,
+    pub tasks: usize,
+    rng: Pcg64,
+}
+
+/// One generated graph batch: adjacency [n, nodes, nodes], features
+/// [n, nodes, feat], labels [n, tasks] in {0,1}.
+pub struct GraphBatch {
+    pub adjacency: Vec<f32>,
+    pub features: Vec<f32>,
+    pub labels: Vec<f32>,
+}
+
+impl GraphProxy {
+    pub fn new(nodes: usize, feat: usize, tasks: usize, seed: u64) -> Self {
+        GraphProxy { nodes, feat, tasks, rng: Pcg64::new(seed) }
+    }
+
+    pub fn batch(&mut self, n: usize) -> GraphBatch {
+        let nn = self.nodes;
+        let mut adjacency = vec![0.0f32; n * nn * nn];
+        let mut features = vec![0.0f32; n * nn * self.feat];
+        let mut labels = vec![0.0f32; n * self.tasks];
+        for g in 0..n {
+            let a = &mut adjacency[g * nn * nn..(g + 1) * nn * nn];
+            // Random tree.
+            for v in 1..nn {
+                let u = self.rng.below(v);
+                a[v * nn + u] = 1.0;
+                a[u * nn + v] = 1.0;
+            }
+            // Ring closures (cycles — the motif the labels detect).
+            let rings = self.rng.below(4);
+            for _ in 0..rings {
+                let u = self.rng.below(nn);
+                let v = self.rng.below(nn);
+                if u != v {
+                    a[v * nn + u] = 1.0;
+                    a[u * nn + v] = 1.0;
+                }
+            }
+            // Self-loops for message passing stability.
+            for v in 0..nn {
+                a[v * nn + v] = 1.0;
+            }
+            // Node features: "atom type" one-hot-ish + degree signal.
+            let f = &mut features[g * nn * self.feat..(g + 1) * nn * self.feat];
+            let mut heavy_atoms = 0usize;
+            for v in 0..nn {
+                let atom = self.rng.below(self.feat.min(6));
+                f[v * self.feat + atom] = 1.0;
+                if atom >= 3 {
+                    heavy_atoms += 1;
+                }
+                let degree: f32 = (0..nn).map(|u| a[v * nn + u]).sum();
+                if self.feat > 6 {
+                    f[v * self.feat + 6] = degree / 4.0;
+                }
+            }
+            // Multi-task labels: motif-derived with 10% flips.
+            let l = &mut labels[g * self.tasks..(g + 1) * self.tasks];
+            for t in 0..self.tasks {
+                let raw = match t % 3 {
+                    0 => rings >= 1,
+                    1 => heavy_atoms * 2 >= nn,
+                    _ => (rings + heavy_atoms + t) % 2 == 0,
+                };
+                let y = if self.rng.bernoulli(0.1) { !raw } else { raw };
+                l[t] = if y { 1.0 } else { 0.0 };
+            }
+        }
+        GraphBatch { adjacency, features, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_batch_shapes_and_determinism() {
+        let mut p1 = ImageProxy::new(8, 8, 4, 30);
+        let mut p2 = ImageProxy::new(8, 8, 4, 30);
+        let b1 = p1.batch(5);
+        let b2 = p2.batch(5);
+        assert_eq!(b1.features.len(), 5 * 64);
+        assert_eq!(b1.labels.len(), 5);
+        assert_eq!(b1.features, b2.features);
+        assert!(b1.labels.iter().all(|&l| (0..4).contains(&l)));
+    }
+
+    #[test]
+    fn image_classes_are_separable() {
+        // Template correlation within class ≫ across class.
+        let p = ImageProxy::new(16, 16, 3, 31);
+        let t0 = p.templates[0].clone();
+        let t1 = p.templates[1].clone();
+        let dot = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(&x, &y)| (x * y) as f64).sum()
+        };
+        let n0 = dot(&t0, &t0).sqrt();
+        let n1 = dot(&t1, &t1).sqrt();
+        let cross = dot(&t0, &t1) / (n0 * n1);
+        assert!(cross.abs() < 0.9, "templates nearly identical: {cross}");
+    }
+
+    #[test]
+    fn audio_batch_energy_concentrates_in_band() {
+        let mut p = AudioProxy::new(8, 16, 2, 32);
+        let b = p.batch(3);
+        assert_eq!(b.features.len(), 3 * 8 * 16);
+        // Each frame's max bin should be well above its median bin.
+        let frame = &b.features[0..16];
+        let mut sorted: Vec<f32> = frame.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(sorted[15] > 2.0 * sorted[8].max(0.05));
+    }
+
+    #[test]
+    fn graph_batch_is_symmetric_with_self_loops() {
+        let mut p = GraphProxy::new(10, 8, 4, 33);
+        let b = p.batch(2);
+        for g in 0..2 {
+            let a = &b.adjacency[g * 100..(g + 1) * 100];
+            for i in 0..10 {
+                assert_eq!(a[i * 10 + i], 1.0);
+                for j in 0..10 {
+                    assert_eq!(a[i * 10 + j], a[j * 10 + i]);
+                }
+            }
+        }
+        assert_eq!(b.labels.len(), 2 * 4);
+        assert!(b.labels.iter().all(|&l| l == 0.0 || l == 1.0));
+    }
+
+    #[test]
+    fn graph_is_connected_tree_plus_rings() {
+        let mut p = GraphProxy::new(12, 8, 2, 34);
+        let b = p.batch(1);
+        // BFS from node 0 must reach everything (tree backbone).
+        let a = &b.adjacency[0..144];
+        let mut seen = vec![false; 12];
+        let mut queue = vec![0usize];
+        seen[0] = true;
+        while let Some(v) = queue.pop() {
+            for u in 0..12 {
+                if a[v * 12 + u] > 0.0 && !seen[u] {
+                    seen[u] = true;
+                    queue.push(u);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

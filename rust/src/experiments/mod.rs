@@ -1,0 +1,51 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §4).
+//!
+//! Every experiment is runnable through the CLI (`sketchy repro <id>`)
+//! and returns a markdown report which the CLI prints and writes under
+//! `reports/`. Scaled-down defaults keep each run in seconds-to-minutes
+//! on CPU; `--full` switches to paper-scale parameters where feasible.
+
+pub mod appg;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod obs2;
+pub mod rank_sweep;
+pub mod tbl1;
+pub mod tbl3;
+
+use crate::util::cli::Args;
+use anyhow::Result;
+
+/// All experiment ids with one-line descriptions.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("tbl1", "Tbl.1: empirical regret vs theory bounds across methods and ranks"),
+    ("fig1", "Fig.1: optimizer covariance-memory accounting"),
+    ("fig2", "Fig.2: Adam vs Shampoo vs S-Shampoo on the three proxy DL tasks"),
+    ("fig3", "Fig.3: spectral decay of EMA Kronecker factors + Wishart control"),
+    ("tbl3", "Tbl.2/3 + Fig.4: online convex experiments, 6 algorithms x 3 datasets"),
+    ("obs2", "Obs.2: Ada-FD Omega(T^{3/4}) bound growth vs S-AdaGrad"),
+    ("appg", "App.G: Epoch AdaGrad step-skipping regret vs update interval"),
+    ("rank_sweep", "§5.1: S-Shampoo quality/memory Pareto across sketch ranks"),
+];
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, args: &Args) -> Result<String> {
+    let report = match id {
+        "tbl1" => tbl1::run(args)?,
+        "fig1" => fig1::run(args)?,
+        "fig2" => fig2::run(args)?,
+        "fig3" => fig3::run(args)?,
+        "tbl3" => tbl3::run(args)?,
+        "obs2" => obs2::run(args)?,
+        "appg" => appg::run(args)?,
+        "rank_sweep" => rank_sweep::run(args)?,
+        other => anyhow::bail!(
+            "unknown experiment {other}; known: {:?}",
+            EXPERIMENTS.iter().map(|(n, _)| *n).collect::<Vec<_>>()
+        ),
+    };
+    let path = format!("reports/{id}.md");
+    crate::train::metrics::write_report(&path, &report)?;
+    Ok(report)
+}

@@ -1,0 +1,223 @@
+//! E5+E6 / Tbl. 2, Tbl. 3, Fig. 4: the online convex experiments.
+//!
+//! Six algorithms (S-AdaGrad, AdaGrad, OGD, Ada-FD, FD-SON, RFD-SON) on
+//! three logistic streams shaped like the paper's LIBSVM datasets
+//! (synthetic stand-ins by default — DESIGN.md §6; `--libsvm DIR` loads
+//! the real files). η (and δ for the δ>0 methods) tuned on a log grid as
+//! in App. A; sketch size fixed to 10; single online pass; metric =
+//! average cumulative loss. Fig. 4 curves land in reports/tbl3_curves/.
+
+use crate::data::synthetic::{DatasetKind, SyntheticLogistic};
+use crate::oco::losses::LogisticLoss;
+use crate::oco::runner::{run_online, OnlineResult};
+use crate::oco::OnlineLoss;
+use crate::optim::{AdaFd, AdaGradDiag, FdSon, Ogd, RfdSon, SAdaGrad, VectorOptimizer};
+use crate::util::cli::Args;
+use anyhow::Result;
+use std::fmt::Write;
+
+const SKETCH: usize = 10;
+
+/// Data source: synthetic stream or materialized LIBSVM rows.
+enum Source {
+    Synth(SyntheticLogistic),
+    Real(Vec<Vec<f64>>, Vec<f64>),
+}
+
+impl Source {
+    fn n(&self) -> usize {
+        match self {
+            Source::Synth(s) => s.n,
+            Source::Real(f, _) => f.len(),
+        }
+    }
+
+    fn d(&self) -> usize {
+        match self {
+            Source::Synth(s) => s.d,
+            Source::Real(f, _) => f[0].len(),
+        }
+    }
+
+    fn run(&self, opt: &mut dyn VectorOptimizer, samples: usize) -> OnlineResult {
+        match self {
+            Source::Synth(s) => {
+                let mut stream = s.iter().map(|(f, y)| {
+                    Box::new(LogisticLoss { features: f, label: y }) as Box<dyn OnlineLoss>
+                });
+                run_online(opt, &mut stream, s.d, None, samples)
+            }
+            Source::Real(feats, labels) => {
+                let d = feats[0].len();
+                let mut stream = feats.iter().zip(labels).map(|(f, &y)| {
+                    Box::new(LogisticLoss { features: f.clone(), label: y })
+                        as Box<dyn OnlineLoss>
+                });
+                run_online(opt, &mut stream, d, None, samples)
+            }
+        }
+    }
+}
+
+/// Build an optimizer by name with the given η, δ.
+fn make_opt(name: &str, d: usize, lr: f64, delta: f64) -> Box<dyn VectorOptimizer> {
+    match name {
+        "S-AdaGrad" => Box::new(SAdaGrad::new(d, SKETCH, lr)),
+        "AdaGrad" => Box::new(AdaGradDiag::new(d, lr)),
+        "OGD" => Box::new(Ogd::new(lr, true)),
+        "Ada-FD" => Box::new(AdaFd::new(d, SKETCH, lr, delta)),
+        "FD-SON" => Box::new(FdSon::new(d, SKETCH, lr, delta)),
+        "RFD-SON" => Box::new(RfdSon::new(d, SKETCH, lr, 0.0)),
+        _ => unreachable!(),
+    }
+}
+
+/// Needs a δ grid? (App. A: only the fixed-δ methods.)
+fn has_delta(name: &str) -> bool {
+    matches!(name, "Ada-FD" | "FD-SON")
+}
+
+const ALGOS: [&str; 6] = ["S-AdaGrad", "AdaGrad", "OGD", "Ada-FD", "FD-SON", "RFD-SON"];
+
+/// Log-spaced grid over [lo, hi].
+fn log_grid(lo: f64, hi: f64, points: usize) -> Vec<f64> {
+    (0..points)
+        .map(|i| {
+            let f = i as f64 / (points - 1).max(1) as f64;
+            (lo.ln() + f * (hi.ln() - lo.ln())).exp()
+        })
+        .collect()
+}
+
+pub fn run(args: &Args) -> Result<String> {
+    let full = args.has("full");
+    let trials = args.get_usize("trials", if full { 49 } else { 7 });
+    let seed = args.get_u64("seed", 17);
+    let mut out = String::new();
+    writeln!(out, "# Tbl. 2/3 + Fig. 4 — online convex experiments\n")?;
+    writeln!(out, "sketch size = {SKETCH}, η grid points = {trials}\n")?;
+    writeln!(out, "## Tbl. 2 — dataset shapes\n")?;
+    writeln!(out, "| dataset | examples | features | source |")?;
+    writeln!(out, "|---|---|---|---|")?;
+    let mut sources: Vec<(String, Source)> = vec![];
+    for kind in [DatasetKind::Gisette, DatasetKind::A9a, DatasetKind::Cifar10] {
+        let source = if let Some(dir) = args.get("libsvm") {
+            let fname = match kind {
+                DatasetKind::Gisette => "gisette_scale",
+                DatasetKind::A9a => "a9a",
+                DatasetKind::Cifar10 => "cifar10",
+            };
+            let path = std::path::Path::new(dir).join(fname);
+            let text = std::fs::read_to_string(&path)?;
+            let data = crate::data::libsvm::parse_libsvm(&text, 0)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            Source::Real(data.features, data.labels)
+        } else if full {
+            Source::Synth(SyntheticLogistic::new(kind, seed))
+        } else {
+            // Scaled-down stand-ins with the same aspect (DESIGN.md §6).
+            let (n, d) = kind.shape();
+            Source::Synth(SyntheticLogistic::with_size(kind, n / 10, (d / 5).max(40), seed))
+        };
+        writeln!(
+            out,
+            "| {} | {} | {} | {} |",
+            kind.name(),
+            source.n(),
+            source.d(),
+            if args.get("libsvm").is_some() { "LIBSVM" } else { "synthetic" }
+        )?;
+        sources.push((kind.name().to_string(), source));
+    }
+
+    writeln!(out, "\n## Tbl. 3 — average cumulative online loss (ranked)\n")?;
+    let eta_grid = log_grid(1e-4, 1.0, trials);
+    let delta_grid = log_grid(1e-6, 1.0, 7);
+    for (ds_name, source) in &sources {
+        let d = source.d();
+        let mut results: Vec<(String, f64, OnlineResult)> = vec![];
+        for algo in ALGOS {
+            let mut best: Option<(f64, OnlineResult)> = None;
+            let deltas: Vec<f64> = if has_delta(algo) {
+                delta_grid.clone()
+            } else {
+                vec![0.0]
+            };
+            for &delta in &deltas {
+                for &eta in &eta_grid {
+                    let mut opt = make_opt(algo, d, eta, delta);
+                    let res = source.run(opt.as_mut(), 50);
+                    let avg = res.total_loss / source.n() as f64;
+                    if avg.is_finite()
+                        && best.as_ref().map(|(b, _)| avg < *b).unwrap_or(true)
+                    {
+                        best = Some((avg, res));
+                    }
+                }
+            }
+            let (avg, res) = best.unwrap();
+            results.push((algo.to_string(), avg, res));
+        }
+        results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        writeln!(out, "### {ds_name}\n")?;
+        writeln!(out, "| place | algorithm | avg loss |")?;
+        writeln!(out, "|---|---|---|")?;
+        for (place, (name, avg, res)) in results.iter().enumerate() {
+            writeln!(out, "| {} | {}{} | {:.4} |",
+                place + 1,
+                name,
+                if name == "S-AdaGrad" { " **(ours)**" } else { "" },
+                avg
+            )?;
+            // Fig. 4 curve CSVs.
+            let mut csv = String::from("t,avg_cum_loss\n");
+            for &(t, v) in &res.curve {
+                let _ = writeln!(csv, "{t},{v}");
+            }
+            let path = format!("reports/tbl3_curves/{ds_name}_{name}.csv");
+            crate::train::metrics::write_report(&path, &csv)?;
+        }
+        // Paper-shape check: S-AdaGrad should place in the top 3.
+        let s_place = results
+            .iter()
+            .position(|(n, _, _)| n == "S-AdaGrad")
+            .unwrap()
+            + 1;
+        writeln!(
+            out,
+            "\nS-AdaGrad placed **{s_place}** (paper: top-3 on all datasets).\n"
+        )?;
+    }
+    writeln!(out, "Fig. 4 curves written to reports/tbl3_curves/*.csv")?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_tbl3_runs_and_ranks() {
+        // Minimal shapes to keep the unit test fast; the real experiment
+        // runs through the CLI / integration test.
+        let source = Source::Synth(SyntheticLogistic::with_size(
+            DatasetKind::A9a,
+            300,
+            30,
+            3,
+        ));
+        let mut opt = SAdaGrad::new(30, SKETCH, 0.3);
+        let res = source.run(&mut opt, 10);
+        assert!(res.total_loss.is_finite());
+        assert!(res.total_loss / 300.0 < (2f64).ln());
+    }
+
+    #[test]
+    fn log_grid_spans_range() {
+        let g = log_grid(1e-4, 1.0, 5);
+        assert_eq!(g.len(), 5);
+        assert!((g[0] - 1e-4).abs() < 1e-12);
+        assert!((g[4] - 1.0).abs() < 1e-12);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+}

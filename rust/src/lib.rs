@@ -1,0 +1,34 @@
+//! # Sketchy
+//!
+//! A production-shaped reproduction of *Sketchy: Memory-efficient Adaptive
+//! Regularization with Frequent Directions* (Feinberg, Chen, Sun, Anil,
+//! Hazan — NeurIPS 2023), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the runtime coordinator: the Sketchy optimizer
+//!   family (S-AdaGrad, S-Shampoo and all paper baselines), the Frequent
+//!   Directions sketch substrate, a dense linear-algebra substrate, an
+//!   online-convex-optimization harness, a data-parallel training
+//!   coordinator, and the experiment harness reproducing every table and
+//!   figure in the paper.
+//! - **L2 (python/compile)** — JAX compute graphs (transformer LM and the
+//!   three Fig. 2 proxy models) AOT-lowered to HLO text artifacts.
+//! - **L1 (python/compile/kernels)** — Pallas kernels for the optimizer's
+//!   compute hot-spots, validated against pure-jnp oracles.
+//!
+//! Python never runs on the training path: artifacts are compiled once by
+//! `make artifacts` and executed from Rust through PJRT (`runtime`).
+
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod oco;
+pub mod optim;
+pub mod runtime;
+pub mod sketch;
+pub mod spectral;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,213 @@
+//! `sketchy` — launcher CLI for the Sketchy reproduction.
+//!
+//! Subcommands:
+//!   repro <experiment> [--flags]   reproduce a paper table/figure
+//!   train [--preset small ...]     end-to-end LM training (E10)
+//!   list                           list experiments and artifacts
+//!   info                           environment / artifact summary
+//!
+//! Examples:
+//!   sketchy list
+//!   sketchy repro tbl3 --trials 7
+//!   sketchy repro fig2 --task image --steps 200
+//!   sketchy train --preset small --steps 300 --optimizer s-shampoo
+
+use sketchy::experiments;
+use sketchy::util::cli::Args;
+
+const USAGE: &str = "\
+sketchy — Sketchy: Memory-efficient Adaptive Regularization with Frequent
+Directions (NeurIPS 2023) — Rust + JAX + Pallas reproduction.
+
+USAGE:
+  sketchy list
+  sketchy info [--artifacts DIR]
+  sketchy repro <experiment> [--seed N] [--full] [experiment flags]
+  sketchy train [--preset tiny|small|base] [--steps N] [--workers N]
+                [--optimizer adam|shampoo|s-shampoo] [--rank L]
+                [--lr F] [--checkpoint PATH]
+
+Run `sketchy list` for the experiment catalogue.";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("list") => cmd_list(),
+        Some("info") => cmd_info(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("train") => cmd_train(&args),
+        _ => {
+            println!("{USAGE}");
+            if args.subcommand.is_some() {
+                eprintln!("\nunknown subcommand: {:?}", args.subcommand);
+                1
+            } else {
+                0
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_list() -> i32 {
+    println!("experiments (sketchy repro <id>):");
+    for (id, desc) in experiments::EXPERIMENTS {
+        println!("  {id:<12} {desc}");
+    }
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    println!("sketchy v{}", sketchy::VERSION);
+    println!("threads: {}", sketchy::tensor::ops::num_threads());
+    let dir = args.get_or("artifacts", "artifacts");
+    match sketchy::runtime::Runtime::load(&dir) {
+        Ok(rt) => {
+            println!("artifacts ({dir}):");
+            for name in rt.names() {
+                let spec = rt.spec(&name).unwrap();
+                println!(
+                    "  {name:<24} {} inputs ({} params), {} outputs",
+                    spec.inputs.len(),
+                    spec.n_params,
+                    spec.n_outputs
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("no artifacts: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_repro(args: &Args) -> i32 {
+    let Some(id) = args.positional.first() else {
+        eprintln!("usage: sketchy repro <experiment>; see `sketchy list`");
+        return 1;
+    };
+    let t0 = std::time::Instant::now();
+    match experiments::run(id, args) {
+        Ok(report) => {
+            println!("{report}");
+            println!("\n[report written to reports/{id}.md in {:?}]", t0.elapsed());
+            0
+        }
+        Err(e) => {
+            eprintln!("experiment {id} failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    match run_train(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("train failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn run_train(args: &Args) -> anyhow::Result<()> {
+    use sketchy::data::MarkovCorpus;
+    use sketchy::optim::{
+        Adam, GraftType, Optimizer, SShampoo, SShampooConfig, Shampoo, ShampooConfig,
+        WarmupCosine,
+    };
+    use sketchy::train::LmTrainer;
+    use std::sync::Arc;
+
+    // Config file first (configs/*.toml), CLI flags override.
+    let cfg_file = match args.get("config") {
+        Some(path) => sketchy::util::config::Config::load(path)?,
+        None => sketchy::util::config::Config::default(),
+    };
+    let preset = args
+        .get("preset")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| cfg_file.str_or("train.preset", "small"));
+    let steps = args.get_usize("steps", cfg_file.usize_or("train.steps", 200));
+    let workers = args.get_usize("workers", cfg_file.usize_or("train.workers", 2));
+    let lr = args.get_f64("lr", cfg_file.f64_or("train.lr", 1e-3));
+    let rank = args.get_usize("rank", cfg_file.usize_or("s_shampoo.rank", 16));
+    let seed = args.get_u64("seed", 0);
+    let opt_name = args
+        .get("optimizer")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| cfg_file.str_or("train.optimizer", "s-shampoo"));
+    let runtime = Arc::new(sketchy::runtime::Runtime::load(
+        &args.get_or("artifacts", "artifacts"),
+    )?);
+    let mut trainer = LmTrainer::new(runtime, &preset, seed)?;
+    println!(
+        "LM preset={preset}: {} params in {} tensors; vocab={} seq={} batch={} workers={workers}",
+        trainer.param_count(),
+        trainer.shapes.len(),
+        trainer.vocab,
+        trainer.seq,
+        trainer.batch
+    );
+    let shapes = trainer.shapes.clone();
+    let base = ShampooConfig {
+        lr,
+        beta2: cfg_file.f64_or("s_shampoo.beta2", 0.999),
+        weight_decay: cfg_file.f64_or("s_shampoo.weight_decay", 1e-4),
+        clip: cfg_file.f64_or("s_shampoo.clip", 10.0),
+        start_preconditioning_step: steps / 20 + 2,
+        stat_interval: cfg_file.usize_or("s_shampoo.stat_interval", 2),
+        precond_interval: cfg_file.usize_or("s_shampoo.precond_interval", 2),
+        graft: GraftType::parse(&cfg_file.str_or("s_shampoo.graft", "rmsprop_normalized"))
+            .unwrap_or(GraftType::RmspropNormalized),
+        one_sided: cfg_file.bool_or("s_shampoo.one_sided", false),
+        ..Default::default()
+    };
+    let mut opt: Box<dyn Optimizer> = match opt_name.as_str() {
+        "adam" => {
+            let mut a = Adam::new(&shapes, lr);
+            a.weight_decay = 1e-4;
+            a.clip = 10.0;
+            Box::new(a)
+        }
+        "shampoo" => Box::new(Shampoo::new(&shapes, base)),
+        "s-shampoo" => Box::new(SShampoo::new(&shapes, SShampooConfig { base, rank })),
+        other => anyhow::bail!("unknown optimizer {other}"),
+    };
+    println!(
+        "optimizer {} — covariance bytes {}",
+        opt.name(),
+        opt.second_moment_bytes()
+    );
+    let mut corpus = MarkovCorpus::new(trainer.vocab, seed ^ 0xc0).into();
+    let schedule = WarmupCosine { peak: lr, warmup: steps / 20 + 1, total: steps };
+    let t0 = std::time::Instant::now();
+    let mut last_log = std::time::Instant::now();
+    let mut curve = sketchy::train::CurveLog::new(&opt.name());
+    for s in 0..steps {
+        opt.set_lr(schedule.at(s));
+        let (loss, _) = trainer.step(opt.as_mut(), &mut corpus, workers)?;
+        curve.push(s, loss);
+        if last_log.elapsed().as_secs() >= 2 || s == 0 || s + 1 == steps {
+            let sps = (s + 1) as f64 / t0.elapsed().as_secs_f64();
+            println!("step {s:>5}  loss {loss:.4}  lr {:.2e}  {sps:.2} steps/s", schedule.at(s));
+            last_log = std::time::Instant::now();
+        }
+    }
+    let eval = trainer.eval(&mut corpus, 4)?;
+    println!(
+        "done in {:?}: final train loss {:.4}, eval loss {eval:.4}",
+        t0.elapsed(),
+        curve.tail_mean(5)
+    );
+    sketchy::train::metrics::write_report(
+        &format!("reports/train_{preset}_{}.csv", opt.name()),
+        &curve.to_csv(),
+    )?;
+    if let Some(path) = args.get("checkpoint") {
+        sketchy::train::save_checkpoint(path, steps, &trainer.params)?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}

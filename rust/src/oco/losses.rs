@@ -1,0 +1,111 @@
+//! Online loss functions: logistic (App. A) and linear (Obs. 2).
+
+/// One round's convex cost f_t.
+pub trait OnlineLoss {
+    fn loss(&self, x: &[f64]) -> f64;
+    fn grad(&self, x: &[f64]) -> Vec<f64>;
+}
+
+/// Binary logistic loss over a linear predictor:
+/// f(x) = log(1 + exp(−y ⟨x, φ⟩)), y ∈ {−1, +1}.
+#[derive(Clone, Debug)]
+pub struct LogisticLoss {
+    pub features: Vec<f64>,
+    pub label: f64,
+}
+
+/// Numerically-stable log(1 + e^z).
+#[inline]
+pub fn log1p_exp(z: f64) -> f64 {
+    if z > 30.0 {
+        z
+    } else if z < -30.0 {
+        0.0
+    } else {
+        (1.0 + z.exp()).ln()
+    }
+}
+
+/// Stable logistic sigmoid.
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl OnlineLoss for LogisticLoss {
+    fn loss(&self, x: &[f64]) -> f64 {
+        let margin = self.label * crate::tensor::dot(x, &self.features);
+        log1p_exp(-margin)
+    }
+
+    fn grad(&self, x: &[f64]) -> Vec<f64> {
+        let margin = self.label * crate::tensor::dot(x, &self.features);
+        let coef = -self.label * sigmoid(-margin);
+        self.features.iter().map(|&f| coef * f).collect()
+    }
+}
+
+/// Linear loss f(x) = ⟨g, x⟩ (the Observation 2 adversary).
+#[derive(Clone, Debug)]
+pub struct LinearLoss {
+    pub g: Vec<f64>,
+}
+
+impl OnlineLoss for LinearLoss {
+    fn loss(&self, x: &[f64]) -> f64 {
+        crate::tensor::dot(&self.g, x)
+    }
+
+    fn grad(&self, _x: &[f64]) -> Vec<f64> {
+        self.g.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logistic_loss_and_grad_consistent() {
+        let l = LogisticLoss { features: vec![1.0, -2.0], label: 1.0 };
+        let x = vec![0.3, 0.1];
+        // Finite differences.
+        let g = l.grad(&x);
+        for i in 0..2 {
+            let mut xp = x.clone();
+            xp[i] += 1e-6;
+            let mut xm = x.clone();
+            xm[i] -= 1e-6;
+            let fd = (l.loss(&xp) - l.loss(&xm)) / 2e-6;
+            assert!((fd - g[i]).abs() < 1e-5, "coord {i}: fd={fd} g={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn logistic_extremes_are_stable() {
+        let l = LogisticLoss { features: vec![1000.0], label: -1.0 };
+        let loss = l.loss(&[1.0]);
+        assert!(loss.is_finite() && loss > 900.0);
+        let l2 = LogisticLoss { features: vec![1000.0], label: 1.0 };
+        assert!(l2.loss(&[1.0]) >= 0.0 && l2.loss(&[1.0]) < 1e-10);
+        assert!(l2.grad(&[1.0]).iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn linear_loss_grad_constant() {
+        let l = LinearLoss { g: vec![1.0, 2.0] };
+        assert_eq!(l.grad(&[5.0, 5.0]), vec![1.0, 2.0]);
+        assert_eq!(l.loss(&[1.0, 1.0]), 3.0);
+    }
+
+    #[test]
+    fn sigmoid_symmetry() {
+        assert!((sigmoid(3.0) + sigmoid(-3.0) - 1.0).abs() < 1e-12);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! Online convex optimization harness (system S5) — the setting of
+//! Sec. 2 and the convex experiments of Appendix A / Observation 2.
+
+pub mod losses;
+pub mod regret;
+pub mod runner;
+
+pub use losses::{LinearLoss, LogisticLoss, OnlineLoss};
+pub use regret::{fit_power_law, RegretCurve};
+pub use runner::{run_online, OnlineResult};

@@ -1,0 +1,85 @@
+//! Regret bookkeeping and scaling-exponent fits.
+//!
+//! Observation 2 distinguishes algorithms by the *exponent* of their
+//! regret growth (Ada-FD: Ω(T^{3/4}), S-AdaGrad: O(T^{1/2})); E7 estimates
+//! these exponents by least-squares on log T vs log Regret_T.
+
+/// Regret curve: Regret_t = Σ_{s≤t} f_s(x_s) − min_x Σ_{s≤t} f_s(x),
+/// evaluated at checkpoints.
+#[derive(Clone, Debug)]
+pub struct RegretCurve {
+    pub name: String,
+    /// (t, regret at t) pairs.
+    pub points: Vec<(usize, f64)>,
+}
+
+impl RegretCurve {
+    /// Fitted growth exponent α where Regret_T ≈ c·T^α (log-log least
+    /// squares over points with positive regret).
+    pub fn exponent(&self) -> f64 {
+        let pts: Vec<(f64, f64)> = self
+            .points
+            .iter()
+            .filter(|&&(_, r)| r > 0.0)
+            .map(|&(t, r)| ((t as f64).ln(), r.ln()))
+            .collect();
+        fit_slope(&pts)
+    }
+}
+
+/// Least-squares slope of y against x.
+pub fn fit_slope(pts: &[(f64, f64)]) -> f64 {
+    let n = pts.len() as f64;
+    if pts.len() < 2 {
+        return f64::NAN;
+    }
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+/// Fit `y ≈ c·xᵃ`, returning (a, c).
+pub fn fit_power_law(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    let pts: Vec<(f64, f64)> = xs
+        .iter()
+        .zip(ys)
+        .filter(|(&x, &y)| x > 0.0 && y > 0.0)
+        .map(|(&x, &y)| (x.ln(), y.ln()))
+        .collect();
+    let a = fit_slope(&pts);
+    let n = pts.len() as f64;
+    let mean_x: f64 = pts.iter().map(|p| p.0).sum::<f64>() / n;
+    let mean_y: f64 = pts.iter().map(|p| p.1).sum::<f64>() / n;
+    let c = (mean_y - a * mean_x).exp();
+    (a, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_known_exponent() {
+        let xs: Vec<f64> = (1..100).map(|t| t as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&t| 3.0 * t.powf(0.75)).collect();
+        let (a, c) = fit_power_law(&xs, &ys);
+        assert!((a - 0.75).abs() < 1e-9);
+        assert!((c - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn curve_exponent() {
+        let curve = RegretCurve {
+            name: "x".into(),
+            points: (1..50).map(|t| (t * 10, 2.0 * ((t * 10) as f64).sqrt())).collect(),
+        };
+        assert!((curve.exponent() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_fit_is_nan() {
+        assert!(fit_slope(&[(1.0, 1.0)]).is_nan());
+    }
+}

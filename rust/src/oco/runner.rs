@@ -1,0 +1,190 @@
+//! Streaming online-optimization runner: plays an optimizer against a
+//! loss sequence, recording the cumulative loss curve (the App. A metric)
+//! and supporting bounded domains (the Obs. 2 setting).
+
+use super::losses::OnlineLoss;
+use crate::optim::VectorOptimizer;
+
+/// Result of one online pass.
+#[derive(Clone, Debug)]
+pub struct OnlineResult {
+    /// Algorithm display name.
+    pub name: String,
+    /// Total Σ f_t(x_t).
+    pub total_loss: f64,
+    /// Average cumulative loss at sampled points: (t, Σ_{s≤t} f_s(x_s)/t).
+    pub curve: Vec<(usize, f64)>,
+    /// Cumulative loss at every step (for regret computation).
+    pub cum_loss: Vec<f64>,
+    /// Final iterate.
+    pub x: Vec<f64>,
+}
+
+/// Run one online pass of `opt` over `losses` starting at x = 0,
+/// projecting onto the radius-`radius` ball if given. `samples` is the
+/// number of curve points to keep (log-spaced would hide the early curve;
+/// App. A's Fig. 4 uses linear percent-of-dataset, so we sample evenly).
+pub fn run_online(
+    opt: &mut dyn VectorOptimizer,
+    losses: &mut dyn Iterator<Item = Box<dyn OnlineLoss>>,
+    d: usize,
+    radius: Option<f64>,
+    samples: usize,
+) -> OnlineResult {
+    let mut x = vec![0.0; d];
+    let mut total = 0.0;
+    let mut cum_loss = vec![];
+    for loss in losses {
+        let f = loss.loss(&x);
+        let g = loss.grad(&x);
+        total += f;
+        cum_loss.push(total);
+        opt.step(&mut x, &g, radius);
+    }
+    let t_max = cum_loss.len();
+    let stride = (t_max / samples.max(1)).max(1);
+    let curve = (0..t_max)
+        .filter(|t| (t + 1) % stride == 0 || *t + 1 == t_max)
+        .map(|t| (t + 1, cum_loss[t] / (t + 1) as f64))
+        .collect();
+    OnlineResult { name: opt.name(), total_loss: total, curve, cum_loss, x }
+}
+
+/// Offline comparator for logistic streams: minimize the *total* loss
+/// Σ_t f_t(x) by gradient descent with backtracking — gives the
+/// `min_x Σ f_t(x)` term of the regret.
+pub fn best_fixed_logistic(
+    features: &[Vec<f64>],
+    labels: &[f64],
+    iters: usize,
+) -> (Vec<f64>, f64) {
+    use super::losses::{log1p_exp, sigmoid};
+    let d = features[0].len();
+    let n = features.len();
+    let total = |x: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            let m = labels[i] * crate::tensor::dot(x, &features[i]);
+            s += log1p_exp(-m);
+        }
+        s
+    };
+    let grad = |x: &[f64]| -> Vec<f64> {
+        let mut g = vec![0.0; d];
+        for i in 0..n {
+            let m = labels[i] * crate::tensor::dot(x, &features[i]);
+            let c = -labels[i] * sigmoid(-m);
+            for j in 0..d {
+                g[j] += c * features[i][j];
+            }
+        }
+        g
+    };
+    let mut x = vec![0.0; d];
+    let mut fx = total(&x);
+    let mut step = 1.0 / n as f64;
+    for _ in 0..iters {
+        let g = grad(&x);
+        let gn2 = crate::tensor::dot(&g, &g);
+        if gn2 < 1e-18 {
+            break;
+        }
+        // Backtracking line search on the Armijo condition.
+        let mut accepted = false;
+        for _bt in 0..40 {
+            let cand: Vec<f64> = x.iter().zip(&g).map(|(xi, gi)| xi - step * gi).collect();
+            let fc = total(&cand);
+            if fc <= fx - 0.25 * step * gn2 {
+                x = cand;
+                fx = fc;
+                step *= 1.5;
+                accepted = true;
+                break;
+            }
+            step *= 0.5;
+        }
+        if !accepted {
+            break;
+        }
+    }
+    (x, fx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oco::losses::{LinearLoss, LogisticLoss};
+    use crate::optim::{AdaGradDiag, Ogd};
+    use crate::util::rng::Pcg64;
+
+    fn toy_logistic_stream(
+        n: usize,
+        d: usize,
+        seed: u64,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let w_true: Vec<f64> = (0..d).map(|_| rng.gaussian()).collect();
+        let mut feats = vec![];
+        let mut labels = vec![];
+        for _ in 0..n {
+            let f: Vec<f64> = (0..d).map(|_| rng.gaussian()).collect();
+            let y = if crate::tensor::dot(&w_true, &f) > 0.0 { 1.0 } else { -1.0 };
+            feats.push(f);
+            labels.push(y);
+        }
+        (feats, labels)
+    }
+
+    #[test]
+    fn online_logistic_beats_zero_predictor() {
+        let (feats, labels) = toy_logistic_stream(400, 5, 200);
+        let mut opt = AdaGradDiag::new(5, 0.5);
+        let mut stream = feats.iter().zip(&labels).map(|(f, &y)| {
+            Box::new(LogisticLoss { features: f.clone(), label: y }) as Box<dyn OnlineLoss>
+        });
+        let res = run_online(&mut opt, &mut stream, 5, None, 10);
+        // Zero predictor suffers ln 2 per round.
+        assert!(res.total_loss < 400.0 * (2f64).ln() * 0.8, "loss={}", res.total_loss);
+        assert_eq!(res.cum_loss.len(), 400);
+        assert!(res.curve.len() >= 10);
+        // Curve is the running average of cum_loss.
+        let (t, v) = res.curve[res.curve.len() - 1];
+        assert_eq!(t, 400);
+        assert!((v - res.total_loss / 400.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regret_vs_offline_comparator_is_sublinear() {
+        let (feats, labels) = toy_logistic_stream(600, 4, 201);
+        let (_, best) = best_fixed_logistic(&feats, &labels, 200);
+        let mut opt = AdaGradDiag::new(4, 1.0);
+        let mut stream = feats.iter().zip(&labels).map(|(f, &y)| {
+            Box::new(LogisticLoss { features: f.clone(), label: y }) as Box<dyn OnlineLoss>
+        });
+        let res = run_online(&mut opt, &mut stream, 4, None, 5);
+        let regret = res.total_loss - best;
+        assert!(regret >= -1e-6, "regret must be ≥ 0: {regret}");
+        // Sub-linear: far below T.
+        assert!(regret < 100.0, "regret={regret}");
+    }
+
+    #[test]
+    fn best_fixed_improves_over_zero() {
+        let (feats, labels) = toy_logistic_stream(200, 3, 202);
+        let (x, fx) = best_fixed_logistic(&feats, &labels, 100);
+        assert!(fx < 200.0 * (2f64).ln());
+        assert!(crate::tensor::norm2(&x) > 0.1);
+    }
+
+    #[test]
+    fn bounded_domain_respected_with_linear_losses() {
+        let mut rng = Pcg64::new(203);
+        let mut opt = Ogd::new(1.0, true);
+        let gs: Vec<Vec<f64>> = (0..50).map(|_| rng.gaussian_vec(3)).collect();
+        let mut stream = gs
+            .iter()
+            .map(|g| Box::new(LinearLoss { g: g.clone() }) as Box<dyn OnlineLoss>);
+        let res = run_online(&mut opt, &mut stream, 3, Some(1.0), 5);
+        assert!(crate::tensor::norm2(&res.x) <= 1.0 + 1e-9);
+    }
+}

@@ -1,0 +1,254 @@
+//! Adam (Kingma & Ba [1]) and SGD-with-momentum — the first-order
+//! baselines of Fig. 2, with decoupled weight decay (AdamW-style, [58])
+//! as used throughout the paper's experiments.
+
+use super::matrix_opt::Optimizer;
+use crate::tensor::Matrix;
+
+/// Adam with decoupled weight decay and optional gradient clipping.
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    /// Global-norm gradient clip (0 disables) — App. D/E tune this.
+    pub clip: f64,
+    m: Vec<Matrix>,
+    v: Vec<Matrix>,
+    t: usize,
+}
+
+impl Adam {
+    pub fn new(shapes: &[(usize, usize)], lr: f64) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            clip: 0.0,
+            m: shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect(),
+            v: shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect(),
+            t: 0,
+        }
+    }
+}
+
+/// Global L2 norm across a gradient list.
+pub fn global_norm(grads: &[Matrix]) -> f64 {
+    grads
+        .iter()
+        .map(|g| {
+            let n = g.fro_norm();
+            n * n
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Clip scale factor for a global-norm clip threshold (1.0 = no clip).
+pub fn clip_scale(grads: &[Matrix], clip: f64) -> f64 {
+    if clip <= 0.0 {
+        return 1.0;
+    }
+    let n = global_norm(grads);
+    if n > clip {
+        clip / n
+    } else {
+        1.0
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> String {
+        "Adam".into()
+    }
+
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
+        assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let scale = clip_scale(grads, self.clip);
+        for (i, (p, g)) in params.iter_mut().zip(grads.iter()).enumerate() {
+            let m = &mut self.m[i];
+            let v = &mut self.v[i];
+            let ms = m.as_mut_slice();
+            let vs = v.as_mut_slice();
+            let gs = g.as_slice();
+            let ps = p.as_mut_slice();
+            for j in 0..gs.len() {
+                let gj = gs[j] * scale;
+                ms[j] = self.beta1 * ms[j] + (1.0 - self.beta1) * gj;
+                vs[j] = self.beta2 * vs[j] + (1.0 - self.beta2) * gj * gj;
+                let mhat = ms[j] / bc1;
+                let vhat = vs[j] / bc2;
+                ps[j] -= self.lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * ps[j]);
+            }
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.m.iter().map(|m| m.mem_bytes()).sum::<usize>()
+            + self.v.iter().map(|m| m.mem_bytes()).sum::<usize>()
+    }
+
+    fn second_moment_bytes(&self) -> usize {
+        self.v.iter().map(|m| m.mem_bytes()).sum()
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn steps(&self) -> usize {
+        self.t
+    }
+}
+
+/// SGD with (heavy-ball) momentum and decoupled weight decay.
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    mu: Vec<Matrix>,
+    t: usize,
+}
+
+impl Sgd {
+    pub fn new(shapes: &[(usize, usize)], lr: f64, momentum: f64) -> Self {
+        Sgd {
+            lr,
+            momentum,
+            weight_decay: 0.0,
+            mu: shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect(),
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> String {
+        "SGD".into()
+    }
+
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
+        self.t += 1;
+        for (i, (p, g)) in params.iter_mut().zip(grads.iter()).enumerate() {
+            let mu = &mut self.mu[i];
+            let ms = mu.as_mut_slice();
+            let gs = g.as_slice();
+            let ps = p.as_mut_slice();
+            for j in 0..gs.len() {
+                ms[j] = self.momentum * ms[j] + gs[j];
+                ps[j] -= self.lr * (ms[j] + self.weight_decay * ps[j]);
+            }
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.mu.iter().map(|m| m.mem_bytes()).sum()
+    }
+
+    fn second_moment_bytes(&self) -> usize {
+        0
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn steps(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn quad_loss_grads(params: &[Matrix], targets: &[Matrix]) -> Vec<Matrix> {
+        params
+            .iter()
+            .zip(targets)
+            .map(|(p, a)| p.sub(a))
+            .collect()
+    }
+
+    #[test]
+    fn adam_converges_multi_tensor() {
+        let shapes = [(3, 2), (4, 1)];
+        let mut rng = Pcg64::new(140);
+        let targets: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut rng)).collect();
+        let mut params: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+        let mut opt = Adam::new(&shapes, 0.05);
+        for _ in 0..2000 {
+            let grads = quad_loss_grads(&params, &targets);
+            opt.step(&mut params, &grads);
+        }
+        for (p, a) in params.iter().zip(&targets) {
+            assert!(p.max_diff(a) < 0.05);
+        }
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // Bias correction ⇒ first step magnitude ≈ lr regardless of g scale.
+        let shapes = [(1, 1)];
+        let mut opt = Adam::new(&shapes, 0.1);
+        let mut params = vec![Matrix::zeros(1, 1)];
+        let grads = vec![Matrix::from_rows(&[vec![1234.5]])];
+        opt.step(&mut params, &grads);
+        assert!((params[0][(0, 0)].abs() - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sgd_with_momentum_converges() {
+        let shapes = [(2, 2)];
+        let target = vec![Matrix::from_rows(&[vec![1.0, -1.0], vec![0.5, 2.0]])];
+        let mut params = vec![Matrix::zeros(2, 2)];
+        let mut opt = Sgd::new(&shapes, 0.05, 0.9);
+        for _ in 0..1000 {
+            let grads = quad_loss_grads(&params, &target);
+            opt.step(&mut params, &grads);
+        }
+        assert!(params[0].max_diff(&target[0]) < 1e-3);
+    }
+
+    #[test]
+    fn clip_bounds_update() {
+        let shapes = [(1, 2)];
+        let mut opt = Adam::new(&shapes, 0.1);
+        opt.clip = 1.0;
+        let g = vec![Matrix::from_rows(&[vec![300.0, 400.0]])]; // norm 500
+        let s = clip_scale(&g, 1.0);
+        assert!((s - 1.0 / 500.0).abs() < 1e-12);
+        let mut params = vec![Matrix::zeros(1, 2)];
+        opt.step(&mut params, &g);
+        assert!(params[0].max_abs() <= 0.1 + 1e-9);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let shapes = [(1, 1)];
+        let mut opt = Adam::new(&shapes, 0.1);
+        opt.weight_decay = 0.5;
+        let mut params = vec![Matrix::from_rows(&[vec![1.0]])];
+        let zero_g = vec![Matrix::zeros(1, 1)];
+        let before = params[0][(0, 0)];
+        opt.step(&mut params, &zero_g);
+        assert!(params[0][(0, 0)] < before);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let shapes = [(10, 10), (5, 1)];
+        let opt = Adam::new(&shapes, 0.1);
+        assert_eq!(opt.second_moment_bytes(), (100 + 5) * 8);
+        assert_eq!(opt.mem_bytes(), 2 * (100 + 5) * 8);
+        let sgd = Sgd::new(&shapes, 0.1, 0.9);
+        assert_eq!(sgd.second_moment_bytes(), 0);
+    }
+}

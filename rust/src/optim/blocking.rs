@@ -1,0 +1,204 @@
+//! Blocked Shampoo (§3.4 / Anil et al. [9]): view each m×n tensor as a
+//! grid of b×b blocks and precondition each block independently.
+//!
+//! The paper uses block size 1024 so every covariance factor is at most
+//! 1024×1024 (Fig. 3's setup); we implement blocking as a generic wrapper
+//! over any [`Optimizer`], so it composes with Shampoo, S-Shampoo, and
+//! Adam alike (the composability §3.2 calls out).
+
+use super::matrix_opt::Optimizer;
+use crate::tensor::Matrix;
+
+/// One block of a parameter tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Block {
+    /// Index of the source tensor.
+    pub tensor: usize,
+    pub r0: usize,
+    pub r1: usize,
+    pub c0: usize,
+    pub c1: usize,
+}
+
+impl Block {
+    pub fn shape(&self) -> (usize, usize) {
+        (self.r1 - self.r0, self.c1 - self.c0)
+    }
+}
+
+/// Partition tensor shapes into blocks of at most `b` per dimension.
+pub fn partition(shapes: &[(usize, usize)], b: usize) -> Vec<Block> {
+    assert!(b >= 1);
+    let mut blocks = vec![];
+    for (tensor, &(m, n)) in shapes.iter().enumerate() {
+        let mut r0 = 0;
+        while r0 < m {
+            let r1 = (r0 + b).min(m);
+            let mut c0 = 0;
+            while c0 < n {
+                let c1 = (c0 + b).min(n);
+                blocks.push(Block { tensor, r0, r1, c0, c1 });
+                c0 = c1;
+            }
+            r0 = r1;
+        }
+    }
+    blocks
+}
+
+/// Wrapper running an inner optimizer over the blocked view of the
+/// parameter list.
+pub struct Blocked<O: Optimizer> {
+    pub inner: O,
+    blocks: Vec<Block>,
+    /// Scratch block-parameter buffers, kept in sync with the real params.
+    scratch: Vec<Matrix>,
+}
+
+impl<O: Optimizer> Blocked<O> {
+    /// `make_inner` receives the block shapes and constructs the inner
+    /// optimizer (which sees one "tensor" per block).
+    pub fn new(
+        shapes: &[(usize, usize)],
+        block_size: usize,
+        make_inner: impl FnOnce(&[(usize, usize)]) -> O,
+    ) -> Self {
+        let blocks = partition(shapes, block_size);
+        let block_shapes: Vec<(usize, usize)> = blocks.iter().map(|b| b.shape()).collect();
+        let scratch = block_shapes
+            .iter()
+            .map(|&(r, c)| Matrix::zeros(r, c))
+            .collect();
+        Blocked { inner: make_inner(&block_shapes), blocks, scratch }
+    }
+
+    pub fn blocks(&self) -> &[Block] {
+        &self.blocks
+    }
+}
+
+impl<O: Optimizer> Optimizer for Blocked<O> {
+    fn name(&self) -> String {
+        format!("Blocked<{}>", self.inner.name())
+    }
+
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
+        // Gather blocks.
+        let block_grads: Vec<Matrix> = self
+            .blocks
+            .iter()
+            .map(|b| grads[b.tensor].slice(b.r0, b.r1, b.c0, b.c1))
+            .collect();
+        for (i, b) in self.blocks.iter().enumerate() {
+            self.scratch[i] = params[b.tensor].slice(b.r0, b.r1, b.c0, b.c1);
+        }
+        self.inner.step(&mut self.scratch, &block_grads);
+        // Scatter back.
+        for (i, b) in self.blocks.iter().enumerate() {
+            params[b.tensor].set_slice(b.r0, b.c0, &self.scratch[i]);
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.inner.mem_bytes() + self.scratch.iter().map(|m| m.mem_bytes()).sum::<usize>()
+    }
+
+    fn second_moment_bytes(&self) -> usize {
+        self.inner.second_moment_bytes()
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.inner.set_lr(lr);
+    }
+
+    fn steps(&self) -> usize {
+        self.inner.steps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::adam::Adam;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn partition_covers_exactly() {
+        let shapes = [(5, 3), (4, 4)];
+        let blocks = partition(&shapes, 2);
+        // Tensor 0: rows {0-2,2-4,4-5} × cols {0-2,2-3} = 6 blocks;
+        // tensor 1: 2×2 = 4 blocks.
+        assert_eq!(blocks.len(), 10);
+        // Every cell covered exactly once.
+        for (t, &(m, n)) in shapes.iter().enumerate() {
+            let mut cover = vec![vec![0; n]; m];
+            for b in blocks.iter().filter(|b| b.tensor == t) {
+                for r in b.r0..b.r1 {
+                    for c in b.c0..b.c1 {
+                        cover[r][c] += 1;
+                    }
+                }
+            }
+            assert!(cover.iter().flatten().all(|&x| x == 1));
+        }
+    }
+
+    #[test]
+    fn blocked_adam_equals_plain_adam() {
+        // Adam is elementwise, so blocking must not change anything.
+        let shapes = [(5, 4)];
+        let mut rng = Pcg64::new(170);
+        let mut plain = Adam::new(&shapes, 0.05);
+        let mut blocked = Blocked::new(&shapes, 2, |bs| Adam::new(bs, 0.05));
+        let mut p1 = vec![Matrix::zeros(5, 4)];
+        let mut p2 = p1.clone();
+        for _ in 0..20 {
+            let g = vec![Matrix::randn(5, 4, &mut rng)];
+            plain.step(&mut p1, &g);
+            blocked.step(&mut p2, &g);
+            assert!(p1[0].max_diff(&p2[0]) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn blocked_shampoo_bounds_factor_size() {
+        use crate::optim::shampoo::{Shampoo, ShampooConfig};
+        let shapes = [(10, 6)];
+        let blocked = Blocked::new(&shapes, 4, |bs| {
+            Shampoo::new(bs, ShampooConfig::default())
+        });
+        // Largest block is 4×4 ⇒ second-moment ≤ Σ (16+16)·8 per block.
+        for b in blocked.blocks() {
+            let (r, c) = b.shape();
+            assert!(r <= 4 && c <= 4);
+        }
+        // 10×6 with b=4 → rows {4,4,2} cols {4,2} → 6 blocks.
+        assert_eq!(blocked.blocks().len(), 6);
+    }
+
+    #[test]
+    fn blocked_shampoo_converges() {
+        use crate::optim::grafting::GraftType;
+        use crate::optim::shampoo::{Shampoo, ShampooConfig};
+        let shapes = [(6, 6)];
+        let mut rng = Pcg64::new(171);
+        let target = Matrix::randn(6, 6, &mut rng);
+        let mut params = vec![Matrix::zeros(6, 6)];
+        let mut opt = Blocked::new(&shapes, 3, |bs| {
+            Shampoo::new(
+                bs,
+                ShampooConfig {
+                    lr: 0.05,
+                    start_preconditioning_step: 2,
+                    graft: GraftType::Rmsprop,
+                    ..Default::default()
+                },
+            )
+        });
+        for _ in 0..3000 {
+            let grads = vec![params[0].sub(&target)];
+            opt.step(&mut params, &grads);
+        }
+        assert!(params[0].max_diff(&target) < 0.05);
+    }
+}

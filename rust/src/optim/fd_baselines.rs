@@ -1,0 +1,222 @@
+//! FD-sketched baselines from the related work (Tbl. 1, Appendix A):
+//! Ada-FD [26], FD-SON [27], RFD-SON [43].
+//!
+//! These differ from S-AdaGrad (Alg. 2) in exactly the dimension the
+//! paper's analysis isolates: how the sketch's missing mass is put back.
+//! Ada-FD adds a *fixed* δI (Observation 2 shows this costs Ω(T^{3/4}));
+//! FD-SON is a sketched Online Newton Step with fixed δI and an H⁻¹
+//! (not H^{-1/2}) update; RFD-SON robustly adds *half* the escaped mass.
+
+use super::vector::VectorOptimizer;
+use crate::sketch::FdSketch;
+
+/// Ada-FD (Wan & Zhang [26]): preconditioner H_t = Ḡ_t + δI with a fixed
+/// δ > 0; update x ← x − η H_t^{-1/2} g.
+pub struct AdaFd {
+    pub lr: f64,
+    pub delta: f64,
+    sketch: FdSketch,
+    t: usize,
+}
+
+impl AdaFd {
+    pub fn new(d: usize, ell: usize, lr: f64, delta: f64) -> Self {
+        AdaFd { lr, delta, sketch: FdSketch::new(d, ell, 1.0), t: 0 }
+    }
+
+    pub fn sketch(&self) -> &FdSketch {
+        &self.sketch
+    }
+}
+
+impl VectorOptimizer for AdaFd {
+    fn name(&self) -> String {
+        "Ada-FD".into()
+    }
+
+    fn step(&mut self, x: &mut [f64], g: &[f64], radius: Option<f64>) {
+        self.t += 1;
+        self.sketch.update_vec(g);
+        // Fixed diagonal regularization — no escaped-mass compensation.
+        let pre = self.sketch.shifted(self.delta);
+        let dir = pre.apply_inv_root_vec(2.0, g);
+        for i in 0..x.len() {
+            x[i] -= self.lr * dir[i];
+        }
+        if let Some(r) = radius {
+            let projected = pre.project_ball(x, r);
+            x.copy_from_slice(&projected);
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.sketch.mem_bytes()
+    }
+
+    fn steps(&self) -> usize {
+        self.t
+    }
+}
+
+/// FD-SON (Luo et al. [27]): sketched Online Newton Step,
+/// H_t = Ḡ_t + δI, x ← x − η H_t^{-1} g.
+pub struct FdSon {
+    pub lr: f64,
+    pub delta: f64,
+    sketch: FdSketch,
+    t: usize,
+}
+
+impl FdSon {
+    pub fn new(d: usize, ell: usize, lr: f64, delta: f64) -> Self {
+        FdSon { lr, delta, sketch: FdSketch::new(d, ell, 1.0), t: 0 }
+    }
+}
+
+impl VectorOptimizer for FdSon {
+    fn name(&self) -> String {
+        "FD-SON".into()
+    }
+
+    fn step(&mut self, x: &mut [f64], g: &[f64], radius: Option<f64>) {
+        self.t += 1;
+        self.sketch.update_vec(g);
+        let pre = self.sketch.shifted(self.delta);
+        // Newton-style inverse (p = 1).
+        let dir = pre.apply_inv_root_vec(1.0, g);
+        for i in 0..x.len() {
+            x[i] -= self.lr * dir[i];
+        }
+        if let Some(r) = radius {
+            let projected = pre.project_ball(x, r);
+            x.copy_from_slice(&projected);
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.sketch.mem_bytes()
+    }
+
+    fn steps(&self) -> usize {
+        self.t
+    }
+}
+
+/// RFD-SON (Luo et al. [43]): robust FD — the preconditioner adds *half*
+/// the cumulative escaped mass, H_t = Ḡ_t + (ρ_{1:t}/2 + δ)I, with δ = 0
+/// allowed (the paper's main RFD₀ variant); x ← x − η H_t^{-1} g.
+pub struct RfdSon {
+    pub lr: f64,
+    pub delta: f64,
+    sketch: FdSketch,
+    t: usize,
+}
+
+impl RfdSon {
+    pub fn new(d: usize, ell: usize, lr: f64, delta: f64) -> Self {
+        RfdSon { lr, delta, sketch: FdSketch::new(d, ell, 1.0), t: 0 }
+    }
+}
+
+impl VectorOptimizer for RfdSon {
+    fn name(&self) -> String {
+        "RFD-SON".into()
+    }
+
+    fn step(&mut self, x: &mut [f64], g: &[f64], radius: Option<f64>) {
+        self.t += 1;
+        self.sketch.update_vec(g);
+        let shift = 0.5 * self.sketch.escaped_mass() + self.delta;
+        let pre = self.sketch.shifted(shift);
+        let dir = pre.apply_inv_root_vec(1.0, g);
+        for i in 0..x.len() {
+            x[i] -= self.lr * dir[i];
+        }
+        if let Some(r) = radius {
+            let projected = pre.project_ball(x, r);
+            x.copy_from_slice(&projected);
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.sketch.mem_bytes()
+    }
+
+    fn steps(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn converges(opt: &mut dyn VectorOptimizer, tol: f64) {
+        let a = [0.5, -1.0, 0.25];
+        let mut x = [0.0; 3];
+        for _ in 0..4000 {
+            let g: Vec<f64> = (0..3).map(|i| x[i] - a[i]).collect();
+            opt.step(&mut x, &g, None);
+        }
+        for i in 0..3 {
+            assert!((x[i] - a[i]).abs() < tol, "{}: x={x:?}", opt.name());
+        }
+    }
+
+    #[test]
+    fn all_baselines_converge() {
+        // Newton-style (H⁻¹) methods contract like t^{-η}, so they need
+        // η > 1 on quadratics; the sqrt methods use standard rates.
+        converges(&mut AdaFd::new(3, 2, 0.5, 1e-3), 0.05);
+        converges(&mut FdSon::new(3, 2, 2.0, 0.5), 0.05);
+        converges(&mut RfdSon::new(3, 2, 2.0, 0.5), 0.05);
+    }
+
+    #[test]
+    fn ada_fd_ignores_escaped_mass() {
+        // Feed a full-rank stream: Ada-FD's shift stays δ while
+        // S-AdaGrad's grows with ρ — the Observation 2 mechanism.
+        let mut rng = Pcg64::new(120);
+        let d = 6;
+        let mut ada = AdaFd::new(d, 2, 0.1, 1e-6);
+        let mut x = vec![0.0; d];
+        for _ in 0..50 {
+            let g = rng.gaussian_vec(d);
+            ada.step(&mut x, &g, None);
+        }
+        // Escaped mass accumulated in the sketch but NOT in the shift.
+        assert!(ada.sketch().escaped_mass() > 1.0);
+        assert_eq!(ada.delta, 1e-6);
+    }
+
+    #[test]
+    fn rfd_shift_tracks_escaped_mass() {
+        let mut rng = Pcg64::new(121);
+        let d = 6;
+        let mut rfd = RfdSon::new(d, 2, 0.1, 0.0);
+        let mut x = vec![0.0; d];
+        for _ in 0..50 {
+            let g = rng.gaussian_vec(d);
+            rfd.step(&mut x, &g, None);
+        }
+        assert!(rfd.sketch.escaped_mass() > 0.0);
+    }
+
+    #[test]
+    fn projections_feasible() {
+        let mut rng = Pcg64::new(122);
+        for opt in [
+            &mut AdaFd::new(4, 2, 2.0, 1e-3) as &mut dyn VectorOptimizer,
+            &mut FdSon::new(4, 2, 2.0, 1e-3),
+            &mut RfdSon::new(4, 2, 2.0, 0.0),
+        ] {
+            let mut x = vec![0.0; 4];
+            for _ in 0..10 {
+                let g = rng.gaussian_vec(4);
+                opt.step(&mut x, &g, Some(1.0));
+                assert!(crate::tensor::norm2(&x) <= 1.0 + 1e-9, "{}", opt.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! First-order vector baselines: OGD and diagonal AdaGrad.
+//!
+//! These are the `OGD` and `Adagrad` rows of Tbl. 3 / Fig. 4. Diagonal
+//! AdaGrad is also the quality reference the paper's sublinear-memory
+//! discussion (§3.2) compares against.
+
+use super::vector::{project_l2, VectorOptimizer};
+
+/// Online gradient descent, x ← x − η_t g with η_t = η/√t by default
+/// (the standard OCO schedule) or constant η.
+pub struct Ogd {
+    pub lr: f64,
+    /// If true use η/√t, else constant η.
+    pub sqrt_decay: bool,
+    t: usize,
+}
+
+impl Ogd {
+    pub fn new(lr: f64, sqrt_decay: bool) -> Self {
+        Ogd { lr, sqrt_decay, t: 0 }
+    }
+}
+
+impl VectorOptimizer for Ogd {
+    fn name(&self) -> String {
+        "OGD".into()
+    }
+
+    fn step(&mut self, x: &mut [f64], g: &[f64], radius: Option<f64>) {
+        self.t += 1;
+        let eta = if self.sqrt_decay {
+            self.lr / (self.t as f64).sqrt()
+        } else {
+            self.lr
+        };
+        for i in 0..x.len() {
+            x[i] -= eta * g[i];
+        }
+        if let Some(r) = radius {
+            project_l2(x, r);
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+    }
+
+    fn steps(&self) -> usize {
+        self.t
+    }
+}
+
+/// Diagonal AdaGrad (Duchi et al. [2]): h += g², x ← x − η g / (√h + ε).
+pub struct AdaGradDiag {
+    pub lr: f64,
+    pub eps: f64,
+    h: Vec<f64>,
+    t: usize,
+}
+
+impl AdaGradDiag {
+    pub fn new(d: usize, lr: f64) -> Self {
+        AdaGradDiag { lr, eps: 1e-12, h: vec![0.0; d], t: 0 }
+    }
+}
+
+impl VectorOptimizer for AdaGradDiag {
+    fn name(&self) -> String {
+        "AdaGrad".into()
+    }
+
+    fn step(&mut self, x: &mut [f64], g: &[f64], radius: Option<f64>) {
+        self.t += 1;
+        for i in 0..x.len() {
+            self.h[i] += g[i] * g[i];
+            x[i] -= self.lr * g[i] / (self.h[i].sqrt() + self.eps);
+        }
+        if let Some(r) = radius {
+            // Projection in the ‖·‖_{H^{1/2}} norm, solved by bisection on
+            // the KKT multiplier (diagonal case closed form per ν).
+            project_diag_norm(x, &self.h, r);
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.h.capacity() * 8
+    }
+
+    fn steps(&self) -> usize {
+        self.t
+    }
+}
+
+/// Projection of y onto {‖x‖₂ ≤ r} in the norm diag(h)^{1/4}... precisely:
+/// minimize (x−y)ᵀ diag(√h) (x−y) s.t. ‖x‖₂ ≤ r.
+/// KKT: x_i = √h_i y_i / (√h_i + ν); ‖x(ν)‖ monotone ↓ in ν → bisection.
+pub fn project_diag_norm(x: &mut [f64], h: &[f64], radius: f64) {
+    let n2: f64 = x.iter().map(|v| v * v).sum();
+    if n2 <= radius * radius {
+        return;
+    }
+    let m: Vec<f64> = h.iter().map(|&v| v.max(0.0).sqrt()).collect();
+    let y = x.to_vec();
+    let norm_at = |nu: f64| -> f64 {
+        let mut s = 0.0;
+        for i in 0..y.len() {
+            let c = if m[i] + nu > 0.0 { m[i] / (m[i] + nu) * y[i] } else { 0.0 };
+            s += c * c;
+        }
+        s
+    };
+    let mut lo = 0.0;
+    let mut hi = 1.0;
+    while norm_at(hi) > radius * radius && hi < 1e18 {
+        hi *= 2.0;
+    }
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if norm_at(mid) > radius * radius {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let nu = 0.5 * (lo + hi);
+    for i in 0..x.len() {
+        x[i] = if m[i] + nu > 0.0 { m[i] / (m[i] + nu) * y[i] } else { 0.0 };
+    }
+    project_l2(x, radius); // numerical guard
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(x) = ½‖x − a‖² with each optimizer; both must converge.
+    fn quad_converges(opt: &mut dyn VectorOptimizer) {
+        let a = [1.0, -2.0, 3.0];
+        let mut x = [0.0; 3];
+        for _ in 0..4000 {
+            let g: Vec<f64> = (0..3).map(|i| x[i] - a[i]).collect();
+            opt.step(&mut x, &g, None);
+        }
+        for i in 0..3 {
+            assert!((x[i] - a[i]).abs() < 0.05, "x={x:?}");
+        }
+    }
+
+    #[test]
+    fn ogd_converges() {
+        quad_converges(&mut Ogd::new(0.5, true));
+    }
+
+    #[test]
+    fn adagrad_converges() {
+        quad_converges(&mut AdaGradDiag::new(3, 0.5));
+    }
+
+    #[test]
+    fn projection_respected() {
+        let mut opt = Ogd::new(10.0, false);
+        let mut x = [0.0; 2];
+        opt.step(&mut x, &[-1.0, -1.0], Some(1.0));
+        assert!(crate::tensor::norm2(&x) <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn diag_projection_optimality() {
+        // Compare against brute-force search on a 2-d problem.
+        let h = [4.0, 1.0];
+        let y = [2.0, 2.0];
+        let mut x = y;
+        project_diag_norm(&mut x, &h, 1.0);
+        assert!((x[0] * x[0] + x[1] * x[1]).sqrt() <= 1.0 + 1e-9);
+        let obj = |p: &[f64]| {
+            h.iter()
+                .zip(p.iter().zip(y.iter()))
+                .map(|(&hi, (&pi, &yi))| hi.sqrt() * (pi - yi) * (pi - yi))
+                .sum::<f64>()
+        };
+        let xobj = obj(&x);
+        // Grid over the boundary.
+        for k in 0..200 {
+            let th = 2.0 * std::f64::consts::PI * k as f64 / 200.0;
+            let p = [th.cos(), th.sin()];
+            assert!(xobj <= obj(&p) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn adagrad_adapts_per_coordinate() {
+        // Coordinate with larger gradients should get a smaller step.
+        let mut opt = AdaGradDiag::new(2, 1.0);
+        let mut x = [0.0, 0.0];
+        opt.step(&mut x, &[10.0, 0.1], None);
+        // First step: x_i = -lr * g/√(g²) = -lr * sign(g): equal.
+        assert!((x[0] + 1.0).abs() < 1e-9 && (x[1] + 1.0).abs() < 1e-6);
+        let before = x;
+        opt.step(&mut x, &[10.0, 0.1], None);
+        let d0 = (x[0] - before[0]).abs();
+        let d1 = (x[1] - before[1]).abs();
+        assert!((d0 - d1).abs() < 1e-9, "equal per-coordinate normalized steps");
+    }
+}

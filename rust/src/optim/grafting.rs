@@ -1,0 +1,187 @@
+//! Layer-wise grafting (Agarwal et al. [61], used by Shampoo per App. C).
+//!
+//! Grafting runs a cheap diagonal method alongside the preconditioned one
+//! and *transplants its per-tensor step magnitude* onto the Shampoo
+//! direction: `update = ‖graft_step‖_F · shampoo_dir / ‖shampoo_dir‖_F`.
+//! This disentangles the learning-rate schedule (carried by the diagonal
+//! method) from the update geometry (carried by Shampoo). The paper's
+//! tuning script fixes RMSPROP_NORMALIZED for the DL experiments.
+
+use crate::tensor::Matrix;
+
+/// Which diagonal method supplies the step magnitude.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraftType {
+    /// No grafting: use the raw preconditioned direction.
+    None,
+    /// SGD magnitude: ‖g‖_F.
+    Sgd,
+    /// RMSProp: v ← β₂v + (1−β₂)g², step g/√(v+ε).
+    Rmsprop,
+    /// RMSProp over unit-normalized gradients (RMSPROP_NORMALIZED).
+    RmspropNormalized,
+    /// AdaGrad: v ← v + g², step g/(√v+ε).
+    Adagrad,
+    /// AdaGrad over unit-normalized gradients.
+    AdagradNormalized,
+}
+
+impl GraftType {
+    pub fn parse(s: &str) -> Option<GraftType> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "none" => GraftType::None,
+            "sgd" => GraftType::Sgd,
+            "rmsprop" => GraftType::Rmsprop,
+            "rmsprop_normalized" => GraftType::RmspropNormalized,
+            "adagrad" => GraftType::Adagrad,
+            "adagrad_normalized" => GraftType::AdagradNormalized,
+            _ => return None,
+        })
+    }
+}
+
+/// Per-tensor grafting state.
+pub struct Graft {
+    pub kind: GraftType,
+    pub beta2: f64,
+    pub eps: f64,
+    /// Diagonal accumulator (same shape as the tensor), when needed.
+    v: Option<Matrix>,
+    t: usize,
+}
+
+impl Graft {
+    pub fn new(kind: GraftType, shape: (usize, usize), beta2: f64) -> Self {
+        let v = match kind {
+            GraftType::None | GraftType::Sgd => None,
+            _ => Some(Matrix::zeros(shape.0, shape.1)),
+        };
+        Graft { kind, beta2, eps: 1e-8, v, t: 0 }
+    }
+
+    /// Advance the diagonal state with gradient `g` and return the
+    /// grafting step (the diagonal method's update direction, pre-lr).
+    pub fn step(&mut self, g: &Matrix) -> Matrix {
+        self.t += 1;
+        let normalized;
+        let g_eff: &Matrix = match self.kind {
+            GraftType::RmspropNormalized | GraftType::AdagradNormalized => {
+                let n = g.fro_norm().max(1e-30);
+                normalized = g.scale(1.0 / n);
+                &normalized
+            }
+            _ => g,
+        };
+        match self.kind {
+            GraftType::None | GraftType::Sgd => g.clone(),
+            GraftType::Rmsprop | GraftType::RmspropNormalized => {
+                let v = self.v.as_mut().unwrap();
+                for (vi, gi) in v.as_mut_slice().iter_mut().zip(g_eff.as_slice()) {
+                    *vi = self.beta2 * *vi + (1.0 - self.beta2) * gi * gi;
+                }
+                // Bias-correct the EMA so early steps aren't inflated by
+                // the zero initialization (Adam-style 1/(1−β₂ᵗ)).
+                let bc = 1.0 - self.beta2.powi(self.t as i32);
+                let mut out = g_eff.clone();
+                for (oi, vi) in out.as_mut_slice().iter_mut().zip(v.as_slice()) {
+                    *oi /= (vi / bc).sqrt() + self.eps;
+                }
+                out
+            }
+            GraftType::Adagrad | GraftType::AdagradNormalized => {
+                let v = self.v.as_mut().unwrap();
+                for (vi, gi) in v.as_mut_slice().iter_mut().zip(g_eff.as_slice()) {
+                    *vi += gi * gi;
+                }
+                let mut out = g_eff.clone();
+                for (oi, vi) in out.as_mut_slice().iter_mut().zip(v.as_slice()) {
+                    *oi /= vi.sqrt() + self.eps;
+                }
+                out
+            }
+        }
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        self.v.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
+    }
+}
+
+/// Transplant the grafting magnitude onto a preconditioned direction:
+/// `‖graft‖_F · dir / ‖dir‖_F` (zero-safe).
+pub fn transplant(graft_step: &Matrix, dir: &Matrix) -> Matrix {
+    let gn = graft_step.fro_norm();
+    let dn = dir.fro_norm();
+    if dn < 1e-30 {
+        return graft_step.clone();
+    }
+    dir.scale(gn / dn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn transplant_preserves_magnitude_and_direction() {
+        let mut rng = Pcg64::new(130);
+        let g = Matrix::randn(4, 3, &mut rng);
+        let dir = Matrix::randn(4, 3, &mut rng);
+        let out = transplant(&g, &dir);
+        assert!((out.fro_norm() - g.fro_norm()).abs() < 1e-10);
+        // Same direction as dir: cosine similarity 1.
+        let dot: f64 = out
+            .as_slice()
+            .iter()
+            .zip(dir.as_slice())
+            .map(|(a, b)| a * b)
+            .sum();
+        let cos = dot / (out.fro_norm() * dir.fro_norm());
+        assert!((cos - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn rmsprop_normalizes_scale() {
+        // After many identical gradients, the RMSProp step approaches
+        // g/|g| elementwise (scale-free).
+        let g = Matrix::from_rows(&[vec![10.0, -0.1]]);
+        let mut graft = Graft::new(GraftType::Rmsprop, (1, 2), 0.9);
+        let mut last = Matrix::zeros(1, 2);
+        for _ in 0..500 {
+            last = graft.step(&g);
+        }
+        assert!((last[(0, 0)] - 1.0).abs() < 1e-3);
+        assert!((last[(0, 1)] + 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn normalized_variant_is_gradient_scale_invariant() {
+        let mut a = Graft::new(GraftType::RmspropNormalized, (1, 2), 0.9);
+        let mut b = Graft::new(GraftType::RmspropNormalized, (1, 2), 0.9);
+        let g = Matrix::from_rows(&[vec![1.0, 2.0]]);
+        let g_scaled = g.scale(100.0);
+        let mut out_a = Matrix::zeros(1, 2);
+        let mut out_b = Matrix::zeros(1, 2);
+        for _ in 0..10 {
+            out_a = a.step(&g);
+            out_b = b.step(&g_scaled);
+        }
+        assert!(out_a.max_diff(&out_b) < 1e-10);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(GraftType::parse("rmsprop_normalized"), Some(GraftType::RmspropNormalized));
+        assert_eq!(GraftType::parse("none"), Some(GraftType::None));
+        assert_eq!(GraftType::parse("bogus"), None);
+    }
+
+    #[test]
+    fn sgd_graft_passes_gradient_through() {
+        let g = Matrix::from_rows(&[vec![3.0, 4.0]]);
+        let mut graft = Graft::new(GraftType::Sgd, (1, 2), 0.9);
+        assert_eq!(graft.step(&g), g);
+        assert_eq!(graft.mem_bytes(), 0);
+    }
+}

@@ -1,0 +1,73 @@
+//! Tensor-list optimizer interface for deep-learning training.
+//!
+//! A model is a list of matrix-shaped parameters (vectors are n×1). The
+//! coordinator's training loop drives these optimizers with gradients
+//! produced by the AOT-compiled L2 artifacts; the optimizers themselves —
+//! the paper's contribution — run entirely in Rust.
+
+use crate::tensor::Matrix;
+
+/// Optimizer over a list of matrix parameters.
+pub trait Optimizer {
+    /// Display name used in experiment tables.
+    fn name(&self) -> String;
+
+    /// One training step: update `params[i]` using `grads[i]`.
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]);
+
+    /// Total heap bytes of optimizer state.
+    fn mem_bytes(&self) -> usize;
+
+    /// Bytes used for *second-moment* (covariance) state only — the
+    /// quantity Fig. 1 compares across methods.
+    fn second_moment_bytes(&self) -> usize {
+        self.mem_bytes()
+    }
+
+    /// Update the learning rate (for schedules driven by the trainer).
+    fn set_lr(&mut self, lr: f64);
+
+    /// Steps taken so far.
+    fn steps(&self) -> usize;
+}
+
+/// Learning-rate schedule used across the paper's experiments (App. C):
+/// linear warmup to `peak` over `warmup` steps, then cosine decay to 0 at
+/// `total` steps.
+#[derive(Clone, Copy, Debug)]
+pub struct WarmupCosine {
+    pub peak: f64,
+    pub warmup: usize,
+    pub total: usize,
+}
+
+impl WarmupCosine {
+    pub fn at(&self, step: usize) -> f64 {
+        if self.total == 0 {
+            return self.peak;
+        }
+        if step < self.warmup {
+            return self.peak * (step as f64 + 1.0) / self.warmup.max(1) as f64;
+        }
+        let frac = (step - self.warmup) as f64 / (self.total - self.warmup).max(1) as f64;
+        let frac = frac.min(1.0);
+        0.5 * self.peak * (1.0 + (std::f64::consts::PI * frac).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = WarmupCosine { peak: 1.0, warmup: 10, total: 110 };
+        assert!(s.at(0) > 0.0 && s.at(0) <= 0.2);
+        assert!((s.at(9) - 1.0).abs() < 1e-9);
+        assert!(s.at(60) < 1.0 && s.at(60) > 0.0);
+        assert!(s.at(109) < 0.01);
+        // Monotone up then down.
+        assert!(s.at(5) > s.at(2));
+        assert!(s.at(100) < s.at(50));
+    }
+}

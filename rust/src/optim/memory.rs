@@ -1,0 +1,162 @@
+//! Asymptotic memory accounting for Fig. 1.
+//!
+//! Bytes used to represent the *gradient covariance* (second moments) of
+//! a single m×n matrix parameter under each adaptive method, with `r` the
+//! GGT history length and `k` the FD/sketch rank. Figures/tables from E2
+//! are generated from these formulas plus live measurements of the actual
+//! optimizer structs (see `examples/memory_budget.rs`), which must agree.
+
+/// Adaptive-regularization methods compared in Fig. 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Full-matrix AdaGrad: (mn)² covariance.
+    AdaGradFull,
+    /// GGT (Agarwal et al. [6]): mn × r gradient history.
+    Ggt,
+    /// Ada-FD / RadaGrad: rank-r sketch of the full covariance, mn × r.
+    AdaFdFull,
+    /// Shampoo: m² + n² Kronecker factors.
+    Shampoo,
+    /// Sketchy (this paper): (m+n) × k factored sketches.
+    Sketchy,
+    /// Adam / diagonal AdaGrad: mn diagonal.
+    Adam,
+    /// AdaFactor: m + n factored diagonal.
+    AdaFactor,
+    /// SM3: m + n cover-set accumulators.
+    Sm3,
+    /// Online gradient descent: no second moments.
+    Ogd,
+}
+
+impl Method {
+    pub const ALL: [Method; 9] = [
+        Method::AdaGradFull,
+        Method::Ggt,
+        Method::AdaFdFull,
+        Method::Shampoo,
+        Method::Sketchy,
+        Method::Adam,
+        Method::AdaFactor,
+        Method::Sm3,
+        Method::Ogd,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::AdaGradFull => "AdaGrad (full)",
+            Method::Ggt => "GGT",
+            Method::AdaFdFull => "Ada-FD/RadaGrad",
+            Method::Shampoo => "Shampoo",
+            Method::Sketchy => "Sketchy",
+            Method::Adam => "Adam/diag-AdaGrad",
+            Method::AdaFactor => "AdaFactor",
+            Method::Sm3 => "SM3",
+            Method::Ogd => "OGD",
+        }
+    }
+
+    /// Asymptotic formula as a string (the Fig. 1 annotations).
+    pub fn formula(&self) -> &'static str {
+        match self {
+            Method::AdaGradFull => "(mn)^2",
+            Method::Ggt => "mnr",
+            Method::AdaFdFull => "mnr",
+            Method::Shampoo => "m^2 + n^2",
+            Method::Sketchy => "(m+n)k",
+            Method::Adam => "mn",
+            Method::AdaFactor => "m + n",
+            Method::Sm3 => "m + n",
+            Method::Ogd => "0",
+        }
+    }
+
+    /// Number of f64 entries used for second moments of one m×n tensor.
+    pub fn second_moment_floats(&self, m: usize, n: usize, r: usize, k: usize) -> usize {
+        let d = m * n;
+        match self {
+            Method::AdaGradFull => d * d,
+            Method::Ggt => d * r,
+            Method::AdaFdFull => d * r,
+            Method::Shampoo => m * m + n * n,
+            Method::Sketchy => (m + n) * k,
+            Method::Adam => d,
+            Method::AdaFactor => m + n,
+            Method::Sm3 => m + n,
+            Method::Ogd => 0,
+        }
+    }
+
+    pub fn second_moment_bytes(&self, m: usize, n: usize, r: usize, k: usize) -> usize {
+        8 * self.second_moment_floats(m, n, r, k)
+    }
+
+    /// Is the representation sub-linear in the parameter count mn?
+    pub fn sublinear(&self, m: usize, n: usize, r: usize, k: usize) -> bool {
+        self.second_moment_floats(m, n, r, k) < m * n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_ordering_at_paper_scale() {
+        // BERT-Large FFN kernel: 4096×1024, r = k = 256 (paper's values).
+        let (m, n, r, k) = (4096usize, 1024, 256, 256);
+        let bytes: Vec<usize> = Method::ALL
+            .iter()
+            .map(|meth| meth.second_moment_bytes(m, n, r, k))
+            .collect();
+        let by = |meth: Method| meth.second_moment_bytes(m, n, r, k);
+        // The Fig. 1 ordering: AdaFactor/SM3 < Sketchy < Adam < Shampoo < GGT < AdaGrad.
+        assert!(by(Method::AdaFactor) < by(Method::Sketchy));
+        assert!(by(Method::Sketchy) < by(Method::Adam));
+        assert!(by(Method::Adam) < by(Method::Shampoo));
+        assert!(by(Method::Shampoo) < by(Method::Ggt));
+        assert!(by(Method::Ggt) < by(Method::AdaGradFull));
+        assert!(bytes.iter().all(|&b| b < usize::MAX));
+    }
+
+    #[test]
+    fn sketchy_is_sublinear_adam_is_not() {
+        let (m, n, r, k) = (4096usize, 1024, 256, 256);
+        assert!(Method::Sketchy.sublinear(m, n, r, k));
+        assert!(Method::AdaFactor.sublinear(m, n, r, k));
+        assert!(!Method::Adam.sublinear(m, n, r, k));
+        assert!(!Method::Shampoo.sublinear(m, n, r, k));
+    }
+
+    #[test]
+    fn resnet50_scale_sanity() {
+        // Paper intro: 23M params ⇒ full covariance > 2 petabytes.
+        // Treat the model as a single vector (m = 23e6, n = 1).
+        let bytes = Method::AdaGradFull.second_moment_bytes(23_000_000, 1, 0, 0);
+        // Using f64 (the paper says >2PB with f32; f64 doubles it).
+        assert!(bytes as f64 > 2e15);
+    }
+
+    #[test]
+    fn matches_live_optimizers() {
+        use crate::optim::shampoo::{Shampoo, ShampooConfig};
+        use crate::optim::s_shampoo::{SShampoo, SShampooConfig};
+        use crate::optim::matrix_opt::Optimizer;
+        let shapes = [(64, 32)];
+        let sh = Shampoo::new(&shapes, ShampooConfig::default());
+        assert_eq!(
+            sh.second_moment_bytes(),
+            Method::Shampoo.second_moment_bytes(64, 32, 0, 0)
+        );
+        let rank = 8;
+        let ssh = SShampoo::new(&shapes, SShampooConfig {
+            rank,
+            ..Default::default()
+        });
+        // Live sketches also hold their ℓ eigenvalues: (m+n)·k + 2k floats.
+        assert_eq!(
+            ssh.second_moment_bytes(),
+            Method::Sketchy.second_moment_bytes(64, 32, 0, rank) + 2 * rank * 8
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! The optimizer family (system S4) — the paper's algorithmic content.
+//!
+//! **Vector world** (OCO experiments, Sec. 4 / App. A):
+//! - [`SAdaGrad`] — Sketchy AdaGrad, Alg. 2 (ours)
+//! - [`Ogd`], [`AdaGradDiag`] — first-order baselines
+//! - [`AdaGradFull`], [`EpochAdaGrad`] — d² baselines (Tbl. 1, App. G)
+//! - [`AdaFd`], [`FdSon`], [`RfdSon`] — FD-sketched related work
+//!
+//! **Tensor world** (DL experiments, Sec. 5):
+//! - [`SShampoo`] — Sketchy Shampoo, Alg. 3 + §4.3 (ours)
+//! - [`Shampoo`] — exact Kronecker preconditioner
+//! - [`Adam`], [`Sgd`] — first-order baselines
+//! - [`Blocked`] — Blocked-Shampoo wrapper (§3.4)
+//! - [`grafting`] — layer-wise grafting (App. C)
+//! - [`memory`] — Fig. 1 memory accounting
+
+pub mod adam;
+pub mod blocking;
+pub mod fd_baselines;
+pub mod first_order;
+pub mod ggt;
+pub mod full_matrix;
+pub mod grafting;
+pub mod matrix_opt;
+pub mod memory;
+pub mod s_adagrad;
+pub mod s_shampoo;
+pub mod shampoo;
+pub mod vector;
+
+pub use adam::{Adam, Sgd};
+pub use blocking::{partition, Block, Blocked};
+pub use fd_baselines::{AdaFd, FdSon, RfdSon};
+pub use first_order::{AdaGradDiag, Ogd};
+pub use ggt::Ggt;
+pub use full_matrix::{AdaGradFull, EpochAdaGrad};
+pub use grafting::{Graft, GraftType};
+pub use matrix_opt::{Optimizer, WarmupCosine};
+pub use memory::Method as MemoryMethod;
+pub use s_adagrad::SAdaGrad;
+pub use s_shampoo::{SShampoo, SShampooConfig};
+pub use shampoo::{Shampoo, ShampooConfig};
+pub use vector::VectorOptimizer;

@@ -1,0 +1,160 @@
+//! Sketchy AdaGrad — Algorithm 2 of the paper.
+//!
+//! Per round: (1) FD-update the sketch with `g gᵀ`; (2) form the
+//! compensated preconditioner `G̃_t = Ḡ_t + ρ_{1:t} I` (never materialized
+//! — applied through the factored identity in `sketch::factored`);
+//! (3) descend `x ← x − η G̃_t^{-1/2} g`; (4) project in ‖·‖_{G̃^{1/2}} when
+//! the domain is bounded. Memory: O(dℓ); per-round time O(dℓ² + ℓ³).
+//!
+//! Theorem 3 / Corollary 4 give the regret bound
+//! `D(√2 tr G_T^{1/2} + √(d(d−ℓ)Ω_ℓ/2))` — full-matrix AdaGrad regret up
+//! to additive error in the bottom eigenvalues. E1 exercises this bound.
+
+use super::vector::VectorOptimizer;
+use crate::sketch::FdSketch;
+
+/// Sketchy AdaGrad (Alg. 2).
+pub struct SAdaGrad {
+    pub lr: f64,
+    sketch: FdSketch,
+    t: usize,
+}
+
+impl SAdaGrad {
+    /// `ell` is the sketch size ℓ (the paper's single new hyperparameter).
+    pub fn new(d: usize, ell: usize, lr: f64) -> Self {
+        SAdaGrad { lr, sketch: FdSketch::new(d, ell, 1.0), t: 0 }
+    }
+
+    /// Access the sketch (spectral diagnostics in E1/E7).
+    pub fn sketch(&self) -> &FdSketch {
+        &self.sketch
+    }
+}
+
+impl VectorOptimizer for SAdaGrad {
+    fn name(&self) -> String {
+        "S-AdaGrad".into()
+    }
+
+    fn step(&mut self, x: &mut [f64], g: &[f64], radius: Option<f64>) {
+        self.t += 1;
+        // (1) Sketch (ρ_t, Ḡ_t) = FD-update(Ḡ_{t-1}, g gᵀ).
+        self.sketch.update_vec(g);
+        // (2)+(3) y = x − η G̃^{-1/2} g with G̃ = Ḡ + ρ_{1:t} I.
+        let pre = self.sketch.compensated();
+        let dir = pre.apply_inv_root_vec(2.0, g);
+        for i in 0..x.len() {
+            x[i] -= self.lr * dir[i];
+        }
+        // (4) Projection in the ‖·‖_{G̃^{1/2}} norm.
+        if let Some(r) = radius {
+            let projected = pre.project_ball(x, r);
+            x.copy_from_slice(&projected);
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.sketch.mem_bytes()
+    }
+
+    fn steps(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::full_matrix::AdaGradFull;
+    use crate::tensor::random_orthonormal;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut opt = SAdaGrad::new(4, 3, 0.5);
+        let a = [1.0, -2.0, 0.5, 0.0];
+        let mut x = [0.0; 4];
+        for _ in 0..3000 {
+            let g: Vec<f64> = (0..4).map(|i| x[i] - a[i]).collect();
+            opt.step(&mut x, &g, None);
+        }
+        for i in 0..4 {
+            assert!((x[i] - a[i]).abs() < 0.05, "x={x:?}");
+        }
+    }
+
+    #[test]
+    fn matches_full_adagrad_when_stream_is_low_rank() {
+        // Gradients confined to a rank-(ℓ−1) subspace: the sketch is exact
+        // (ρ = 0), so S-AdaGrad must track full-matrix AdaGrad (with
+        // pseudo-inverse) exactly — the §3.3 observation.
+        let mut rng = Pcg64::new(110);
+        let d = 10;
+        let ell = 4;
+        let dirs = random_orthonormal(d, ell - 1, &mut rng);
+        let mut skc = SAdaGrad::new(d, ell, 0.3);
+        let mut full = AdaGradFull::new(d, 0.3);
+        let mut xs = vec![0.0; d];
+        let mut xf = vec![0.0; d];
+        for _ in 0..40 {
+            let c: Vec<f64> = (0..ell - 1).map(|_| rng.gaussian()).collect();
+            let g: Vec<f64> = (0..d)
+                .map(|i| (0..ell - 1).map(|j| dirs[(i, j)] * c[j]).sum())
+                .collect();
+            skc.step(&mut xs, &g, None);
+            full.step(&mut xf, &g, None);
+        }
+        assert!(skc.sketch().escaped_mass() < 1e-9);
+        for i in 0..d {
+            assert!(
+                (xs[i] - xf[i]).abs() < 1e-6,
+                "low-rank equivalence broken: {xs:?} vs {xf:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn preconditioner_upper_bounds_covariance() {
+        // Lemma 10 / Remark 11 on the live optimizer: G ⪯ G̃ at every step.
+        let mut rng = Pcg64::new(111);
+        let d = 6;
+        let mut opt = SAdaGrad::new(d, 3, 0.1);
+        let mut x = vec![0.0; d];
+        let mut cov = crate::tensor::Matrix::zeros(d, d);
+        for _ in 0..30 {
+            let g = rng.gaussian_vec(d);
+            cov = cov.add(&crate::tensor::outer(&g, &g));
+            opt.step(&mut x, &g, None);
+            let mut tilde = opt.sketch().materialize();
+            tilde.add_diag(opt.sketch().escaped_mass());
+            let gap = crate::tensor::eigh(&tilde.sub(&cov));
+            assert!(
+                gap.w.iter().all(|&v| v > -1e-7),
+                "G ⋠ G̃, min gap eig {:?}",
+                gap.w.last()
+            );
+        }
+    }
+
+    #[test]
+    fn projection_keeps_feasible() {
+        let mut rng = Pcg64::new(112);
+        let mut opt = SAdaGrad::new(5, 3, 5.0);
+        let mut x = vec![0.0; 5];
+        for _ in 0..20 {
+            let g = rng.gaussian_vec(5);
+            opt.step(&mut x, &g, Some(1.0));
+            assert!(crate::tensor::norm2(&x) <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn memory_is_d_ell_not_d_squared() {
+        let d = 512;
+        let opt = SAdaGrad::new(d, 8, 0.1);
+        // d·(ℓ)·8 bytes plus change; far below d²·8.
+        assert!(opt.mem_bytes() < d * 16 * 8);
+        assert!(opt.mem_bytes() >= d * 8 * 8);
+    }
+}

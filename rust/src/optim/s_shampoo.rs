@@ -1,0 +1,412 @@
+//! Sketchy Shampoo — Algorithm 3 of the paper, with the practical §4.3/§6
+//! modifications: exponentially-weighted FD sketches for both Kronecker
+//! factors, escaped-mass compensation, grafting, momentum, and the
+//! "harder setting" cadence where statistics and preconditioner updates
+//! share the same interval.
+//!
+//! Memory per m×n tensor: O((m+n)·ℓ) for second moments versus Shampoo's
+//! O(m²+n²) — sub-linear in the parameter count mn once ℓ ≪ min(m, n)
+//! (the Fig. 1 story). Sides whose dimension is ≤ ℓ use exact EMA factors
+//! (sketching cannot help there and the paper's ℓ=256 implies the same).
+
+use super::adam::clip_scale;
+use super::grafting::{transplant, Graft, GraftType};
+use super::matrix_opt::Optimizer;
+use super::shampoo::ShampooConfig;
+use crate::sketch::FdSketch;
+use crate::tensor::{a_at, inv_pth_root, matmul, Matrix};
+
+/// Configuration: shared Shampoo hyperparameters plus the sketch rank ℓ
+/// (the paper's single new hyperparameter, set to 256 in §5.1).
+#[derive(Clone, Debug)]
+pub struct SShampooConfig {
+    pub base: ShampooConfig,
+    /// FD sketch size ℓ.
+    pub rank: usize,
+}
+
+impl Default for SShampooConfig {
+    fn default() -> Self {
+        SShampooConfig { base: ShampooConfig::default(), rank: 256 }
+    }
+}
+
+/// One side (L or R) of the factored preconditioner.
+enum Side {
+    /// dim ≤ ℓ: exact EMA factor, spectral root cached.
+    Exact { c: Matrix, root: Option<Matrix> },
+    /// dim > ℓ: EW-FD sketch (Obs. 6), applied in factored form.
+    Sketched { fd: FdSketch },
+}
+
+impl Side {
+    fn new(dim: usize, rank: usize, beta2: f64) -> Side {
+        if dim <= rank {
+            Side::Exact { c: Matrix::zeros(dim, dim), root: None }
+        } else {
+            Side::Sketched { fd: FdSketch::new(dim, rank, beta2) }
+        }
+    }
+
+    /// Update statistics with news factor Y (news = Y Yᵀ).
+    fn update(&mut self, y: &Matrix, beta2: f64) {
+        match self {
+            Side::Exact { c, .. } => {
+                c.scale_inplace(beta2);
+                c.axpy(1.0, &a_at(y));
+            }
+            Side::Sketched { fd } => {
+                fd.update(y);
+            }
+        }
+    }
+
+    /// Refresh any cached spectral roots (exact mode only).
+    fn refresh_root(&mut self, eps: f64, p: f64) {
+        if let Side::Exact { c, root } = self {
+            *root = Some(inv_pth_root(c, p, eps));
+        }
+    }
+
+    fn has_root(&self) -> bool {
+        match self {
+            Side::Exact { root, .. } => root.is_some(),
+            Side::Sketched { .. } => true,
+        }
+    }
+
+    /// Apply this side's `(·)^{-1/p}` from the left: `C^{-1/p} X`
+    /// (p = 4 two-sided Shampoo, p = 2 one-sided §3.4).
+    fn apply_left(&self, x: &Matrix, eps: f64, p: f64) -> Matrix {
+        match self {
+            Side::Exact { root, .. } => matmul(root.as_ref().expect("root not ready"), x),
+            Side::Sketched { fd } => {
+                // L̃ = Ḡ + (ρ_{1:t} + ε) I, per Alg. 3 line 6 plus the ε
+                // ridge of the initialization L̃₀ = εI.
+                let pre = fd.shifted(fd.escaped_mass() + eps);
+                pre.apply_inv_root_left(p, x)
+            }
+        }
+    }
+
+    /// Apply this side's `(·)^{-1/4}` from the right: `X C^{-1/4}`.
+    fn apply_right(&self, x: &Matrix, eps: f64) -> Matrix {
+        match self {
+            Side::Exact { root, .. } => matmul(x, root.as_ref().expect("root not ready")),
+            Side::Sketched { fd } => {
+                let pre = fd.shifted(fd.escaped_mass() + eps);
+                pre.apply_inv_root_right(4.0, x)
+            }
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        match self {
+            Side::Exact { c, root } => {
+                c.mem_bytes() + root.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
+            }
+            Side::Sketched { fd } => fd.mem_bytes(),
+        }
+    }
+
+    fn second_moment_bytes(&self) -> usize {
+        match self {
+            Side::Exact { c, .. } => c.mem_bytes(),
+            Side::Sketched { fd } => fd.mem_bytes(),
+        }
+    }
+
+    /// Escaped mass (0 in exact mode) — diagnostics.
+    fn escaped(&self) -> f64 {
+        match self {
+            Side::Exact { .. } => 0.0,
+            Side::Sketched { fd } => fd.escaped_mass(),
+        }
+    }
+}
+
+struct SShampooTensorState {
+    left: Side,
+    right: Side,
+    graft: Graft,
+    mu: Matrix,
+}
+
+/// Sketchy Shampoo (Alg. 3 + §4.3).
+pub struct SShampoo {
+    pub cfg: SShampooConfig,
+    states: Vec<SShampooTensorState>,
+    t: usize,
+}
+
+impl SShampoo {
+    pub fn new(shapes: &[(usize, usize)], cfg: SShampooConfig) -> Self {
+        let states = shapes
+            .iter()
+            .map(|&(m, n)| SShampooTensorState {
+                left: Side::new(m, cfg.rank, cfg.base.beta2),
+                right: Side::new(n, cfg.rank, cfg.base.beta2),
+                graft: Graft::new(cfg.base.graft, (m, n), cfg.base.beta2),
+                mu: Matrix::zeros(m, n),
+            })
+            .collect();
+        SShampoo { cfg, states, t: 0 }
+    }
+
+    /// Cumulative escaped mass per tensor (left, right) — E3/E9 diagnostics.
+    pub fn escaped_mass(&self) -> Vec<(f64, f64)> {
+        self.states
+            .iter()
+            .map(|s| (s.left.escaped(), s.right.escaped()))
+            .collect()
+    }
+}
+
+impl Optimizer for SShampoo {
+    fn name(&self) -> String {
+        format!("S-Shampoo(l={})", self.cfg.rank)
+    }
+
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
+        self.t += 1;
+        let t = self.t;
+        let cfg = self.cfg.base.clone();
+        let scale = clip_scale(grads, cfg.clip);
+        let preconditioning = t >= cfg.start_preconditioning_step;
+        for (i, (p, g_raw)) in params.iter_mut().zip(grads.iter()).enumerate() {
+            let st = &mut self.states[i];
+            let g = if scale != 1.0 { g_raw.scale(scale) } else { g_raw.clone() };
+            // §6: S-Shampoo observes every stat_interval-th gradient and
+            // updates its covariance (and thereby its inverse roots, which
+            // are implicit in the factored form) at the same cadence.
+            let left_p = if cfg.one_sided { 2.0 } else { 4.0 };
+            if t % cfg.stat_interval == 0 {
+                st.left.update(&g, cfg.beta2);
+                if !cfg.one_sided {
+                    st.right.update(&g.t(), cfg.beta2);
+                }
+                if preconditioning && t % cfg.precond_interval == 0 {
+                    st.left.refresh_root(cfg.eps, left_p);
+                    if !cfg.one_sided {
+                        st.right.refresh_root(cfg.eps, 4.0);
+                    }
+                }
+            }
+            // Ensure exact-mode roots exist before first preconditioned use.
+            if preconditioning && !st.left.has_root() {
+                st.left.refresh_root(cfg.eps, left_p);
+            }
+            if preconditioning && !cfg.one_sided && !st.right.has_root() {
+                st.right.refresh_root(cfg.eps, 4.0);
+            }
+            let graft_step = st.graft.step(&g);
+            let update = if preconditioning {
+                // L̃^{-1/4} G R̃^{-1/4} in factored form, O(mnℓ)
+                // (one-sided: L̃^{-1/2} G).
+                let half = st.left.apply_left(&g, cfg.eps, left_p);
+                let dir = if cfg.one_sided {
+                    half
+                } else {
+                    st.right.apply_right(&half, cfg.eps)
+                };
+                if cfg.graft == GraftType::None {
+                    dir
+                } else {
+                    transplant(&graft_step, &dir)
+                }
+            } else {
+                graft_step
+            };
+            st.mu.scale_inplace(cfg.beta1);
+            st.mu.axpy(1.0 - cfg.beta1, &update);
+            let ps = p.as_mut_slice();
+            let ms = st.mu.as_slice();
+            for j in 0..ps.len() {
+                ps[j] -= cfg.lr * (ms[j] + cfg.weight_decay * ps[j]);
+            }
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.states
+            .iter()
+            .map(|s| {
+                s.left.mem_bytes() + s.right.mem_bytes() + s.graft.mem_bytes() + s.mu.mem_bytes()
+            })
+            .sum()
+    }
+
+    fn second_moment_bytes(&self) -> usize {
+        self.states
+            .iter()
+            .map(|s| s.left.second_moment_bytes() + s.right.second_moment_bytes())
+            .sum()
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.cfg.base.lr = lr;
+    }
+
+    fn steps(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::shampoo::Shampoo;
+    use crate::util::rng::Pcg64;
+
+    fn cfg(rank: usize) -> SShampooConfig {
+        SShampooConfig {
+            base: ShampooConfig {
+                lr: 0.05,
+                start_preconditioning_step: 2,
+                graft: GraftType::Rmsprop,
+                ..Default::default()
+            },
+            rank,
+        }
+    }
+
+    #[test]
+    fn converges_on_matrix_quadratic() {
+        let mut rng = Pcg64::new(160);
+        let target = Matrix::randn(6, 4, &mut rng);
+        let mut params = vec![Matrix::zeros(6, 4)];
+        let mut opt = SShampoo::new(&[(6, 4)], cfg(3));
+        for _ in 0..3000 {
+            let grads = vec![params[0].sub(&target)];
+            opt.step(&mut params, &grads);
+        }
+        assert!(params[0].max_diff(&target) < 0.05);
+    }
+
+    #[test]
+    fn exact_mode_matches_shampoo_exactly() {
+        // rank ≥ both dims ⇒ S-Shampoo's sides are exact EMA factors and
+        // every step must equal Shampoo's bit for bit.
+        let shapes = [(5, 3), (4, 1)];
+        let base = ShampooConfig {
+            lr: 0.02,
+            start_preconditioning_step: 3,
+            stat_interval: 2,
+            precond_interval: 2,
+            graft: GraftType::Rmsprop,
+            ..Default::default()
+        };
+        let mut sh = Shampoo::new(&shapes, base.clone());
+        let mut ssh = SShampoo::new(&shapes, SShampooConfig { base, rank: 16 });
+        let mut rng = Pcg64::new(161);
+        let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+        let mut p2 = p1.clone();
+        for _ in 0..25 {
+            let grads: Vec<Matrix> = shapes
+                .iter()
+                .map(|&(m, n)| Matrix::randn(m, n, &mut rng))
+                .collect();
+            sh.step(&mut p1, &grads);
+            ssh.step(&mut p2, &grads);
+            for (a, b) in p1.iter().zip(&p2) {
+                assert!(
+                    a.max_diff(b) < 1e-9,
+                    "exact-mode S-Shampoo deviated from Shampoo by {}",
+                    a.max_diff(b)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sketched_mode_tracks_shampoo_on_low_rank_stream() {
+        // Gradients with a fixed rank-2 structure: a rank-4 sketch loses
+        // (almost) nothing, so S-Shampoo stays close to exact Shampoo.
+        let m = 12;
+        let n = 10;
+        let mut rng = Pcg64::new(162);
+        let u = Matrix::randn(m, 2, &mut rng);
+        let v = Matrix::randn(n, 2, &mut rng);
+        let base = ShampooConfig {
+            lr: 0.05,
+            start_preconditioning_step: 2,
+            graft: GraftType::Rmsprop,
+            ..Default::default()
+        };
+        let mut sh = Shampoo::new(&[(m, n)], base.clone());
+        let mut ssh = SShampoo::new(&[(m, n)], SShampooConfig { base, rank: 6 });
+        let mut p1 = vec![Matrix::zeros(m, n)];
+        let mut p2 = vec![Matrix::zeros(m, n)];
+        for _ in 0..40 {
+            let c = Matrix::randn(2, 2, &mut rng);
+            let g = matmul(&matmul(&u, &c), &v.t());
+            sh.step(&mut p1, &[g.clone()]);
+            ssh.step(&mut p2, &[g]);
+        }
+        let diff = p1[0].max_diff(&p2[0]);
+        let scale = p1[0].max_abs().max(1e-9);
+        assert!(
+            diff / scale < 0.15,
+            "sketched S-Shampoo diverged from Shampoo: rel diff {}",
+            diff / scale
+        );
+    }
+
+    #[test]
+    fn sublinear_memory_vs_shampoo() {
+        // 512×256 tensor, rank 16: S-Shampoo second moments ≈ (512+256)·16
+        // floats vs Shampoo's 512² + 256².
+        let shapes = [(512, 256)];
+        let ssh = SShampoo::new(&shapes, cfg(16));
+        let sh = Shampoo::new(&shapes, ShampooConfig::default());
+        assert!(ssh.second_moment_bytes() < sh.second_moment_bytes() / 20);
+        // And the asymptotic form matches (m+n)·ℓ doubles:
+        assert!(ssh.second_moment_bytes() <= (512 + 256) * 17 * 8);
+    }
+
+    #[test]
+    fn escaped_mass_grows_on_full_rank_stream() {
+        let mut opt = SShampoo::new(&[(10, 8)], cfg(3));
+        let mut rng = Pcg64::new(163);
+        let mut params = vec![Matrix::zeros(10, 8)];
+        for _ in 0..30 {
+            let g = Matrix::randn(10, 8, &mut rng);
+            opt.step(&mut params, &[g]);
+        }
+        let (l, r) = opt.escaped_mass()[0];
+        assert!(l > 0.0 && r > 0.0, "escaped mass should be positive: {l}, {r}");
+    }
+
+    #[test]
+    fn one_sided_converges_with_half_memory() {
+        let mut c = cfg(4);
+        c.base.one_sided = true;
+        let mut rng = Pcg64::new(165);
+        let target = Matrix::randn(12, 12, &mut rng);
+        let mut params = vec![Matrix::zeros(12, 12)];
+        let mut opt = SShampoo::new(&[(12, 12)], c.clone());
+        for _ in 0..3000 {
+            let grads = vec![params[0].sub(&target)];
+            opt.step(&mut params, &grads);
+        }
+        assert!(params[0].max_diff(&target) < 0.05);
+        // The right sketch exists but is never fed: escaped mass stays 0.
+        let (_, r) = opt.escaped_mass()[0];
+        assert_eq!(r, 0.0);
+    }
+
+    #[test]
+    fn vector_parameters_supported() {
+        // n×1 tensors (biases): right side is 1×1 exact; must not panic
+        // and must converge.
+        let mut rng = Pcg64::new(164);
+        let target = Matrix::randn(7, 1, &mut rng);
+        let mut params = vec![Matrix::zeros(7, 1)];
+        let mut opt = SShampoo::new(&[(7, 1)], cfg(4));
+        for _ in 0..2000 {
+            let grads = vec![params[0].sub(&target)];
+            opt.step(&mut params, &grads);
+        }
+        assert!(params[0].max_diff(&target) < 0.05);
+    }
+}

@@ -1,0 +1,35 @@
+//! Vector-world optimizer interface for the OCO experiments.
+//!
+//! These optimizers act on a single decision vector `x ∈ R^d` with one
+//! (sub)gradient per round — the setting of Sec. 2/4 of the paper and of
+//! the convex experiments (Appendix A, Observation 2). Deep-learning
+//! optimizers over tensor lists live in [`super::matrix_opt`].
+
+/// An online/stochastic optimizer over a flat parameter vector.
+pub trait VectorOptimizer {
+    /// Display name used in experiment tables.
+    fn name(&self) -> String;
+
+    /// One online round: update `x` given subgradient `g`. When `radius`
+    /// is set, the iterate is projected back onto the L2 ball of that
+    /// radius using the optimizer's own norm (Alg. 2 line 6 for Sketchy;
+    /// analogous norms for the baselines).
+    fn step(&mut self, x: &mut [f64], g: &[f64], radius: Option<f64>);
+
+    /// Heap memory for optimizer state, in bytes (Fig. 1 accounting).
+    fn mem_bytes(&self) -> usize;
+
+    /// Round counter (diagnostics).
+    fn steps(&self) -> usize;
+}
+
+/// Plain L2 projection onto the ball of radius r.
+pub fn project_l2(x: &mut [f64], radius: f64) {
+    let n = crate::tensor::norm2(x);
+    if n > radius {
+        let s = radius / n;
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Artifact registry: manifest parsing, lazy compilation, execution.
+//!
+//! `Runtime::load(dir)` reads `manifest.json` (written by aot.py), then
+//! compiles each HLO-text artifact on first use and caches the
+//! executable. Executions go through [`Runtime::execute`], which
+//! decomposes the output tuple into literals.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// One input or output tensor description.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    /// Number of leading inputs that are model parameters.
+    pub n_params: usize,
+    pub n_outputs: usize,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Compiled-executable handle shared across worker threads.
+///
+/// SAFETY: the `xla` crate wraps raw PJRT pointers (hence `!Send`), but
+/// the PJRT C API contract requires clients and loaded executables to be
+/// thread-safe, and the TFRT CPU client behind `xla_extension` supports
+/// concurrent `Execute` calls. We only ever share immutable references
+/// for execution; compilation happens under the registry mutex.
+pub struct Exe(pub xla::PjRtLoadedExecutable);
+unsafe impl Send for Exe {}
+unsafe impl Sync for Exe {}
+
+/// PJRT runtime: client + compiled-executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    dir: std::path::PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    // Compiled executables, lazily populated. Mutex (not RwLock): PJRT
+    // compilation is the slow path; execution clones the Arc'd exe out.
+    compiled: Mutex<HashMap<String, std::sync::Arc<Exe>>>,
+}
+
+// SAFETY: see [`Exe`]; the client pointer is thread-safe per the PJRT
+// contract and `specs`/`dir` are plain data behind the mutex.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Load a manifest directory (`artifacts/` by default).
+    pub fn load(dir: &str) -> Result<Runtime> {
+        let manifest_path = std::path::Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut specs = HashMap::new();
+        for art in json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let spec = parse_spec(art)?;
+            specs.insert(spec.name.clone(), spec);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: dir.into(),
+            specs,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// All artifact names in the manifest.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Exe>> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(Exe(self.client.compile(&comp)?));
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; returns the decomposed
+    /// output tuple (aot.py lowers with return_tuple=True).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+        let exe = self.executable(name)?;
+        let result = exe.0.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == spec.n_outputs,
+            "{name}: expected {} outputs, got {}",
+            spec.n_outputs,
+            outs.len()
+        );
+        Ok(outs)
+    }
+}
+
+fn parse_spec(art: &Json) -> Result<ArtifactSpec> {
+    let get_str = |k: &str| -> Result<String> {
+        art.get(k)
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow!("manifest entry missing {k}"))
+    };
+    let inputs = art
+        .get("inputs")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("missing inputs"))?
+        .iter()
+        .map(|inp| -> Result<IoSpec> {
+            Ok(IoSpec {
+                name: inp
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                shape: inp
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("missing shape"))?
+                    .iter()
+                    .filter_map(|x| x.as_usize())
+                    .collect(),
+                dtype: inp
+                    .get("dtype")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("f32")
+                    .to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let output_shapes = art
+        .get("output_shapes")
+        .and_then(|v| v.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default()
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok(ArtifactSpec {
+        name: get_str("name")?,
+        file: get_str("file")?,
+        inputs,
+        n_params: art.get("n_params").and_then(|v| v.as_usize()).unwrap_or(0),
+        n_outputs: art.get("n_outputs").and_then(|v| v.as_usize()).unwrap_or(1),
+        output_shapes,
+    })
+}
+
+/// Parsed numeric fixture (from fixtures.json) for integration tests.
+pub struct Fixture {
+    pub inputs: Vec<(String, Vec<usize>, Vec<f64>)>,
+    pub outputs: Vec<Vec<f64>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Load one artifact's fixture from `<dir>/fixtures.json`.
+pub fn load_fixture(dir: &str, name: &str) -> Result<Fixture> {
+    let text = std::fs::read_to_string(std::path::Path::new(dir).join("fixtures.json"))?;
+    let json = Json::parse(&text).map_err(|e| anyhow!("fixtures parse: {e}"))?;
+    let fx = json
+        .get(name)
+        .ok_or_else(|| anyhow!("no fixture for {name}"))?;
+    let inputs = fx
+        .get("inputs")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("fixture missing inputs"))?
+        .iter()
+        .map(|inp| {
+            let name = inp
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string();
+            let shape = inp
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default();
+            let data = inp
+                .get("data")
+                .and_then(|v| v.to_f64_vec())
+                .unwrap_or_default();
+            (name, shape, data)
+        })
+        .collect();
+    let outputs = fx
+        .get("outputs")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("fixture missing outputs"))?
+        .iter()
+        .map(|o| o.to_f64_vec().unwrap_or_default())
+        .collect();
+    let output_shapes = fx
+        .get("output_shapes")
+        .and_then(|v| v.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default()
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok(Fixture { inputs, outputs, output_shapes })
+}

@@ -1,0 +1,88 @@
+//! Conversions between the Rust tensor types and `xla::Literal`.
+//!
+//! The Rust optimizer math runs in f64 (numerical headroom for the
+//! eigensolvers); artifacts run in f32 (the DL-standard dtype). These
+//! helpers are the only place the narrowing happens.
+
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// f32 literal from a flat buffer + shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/product mismatch: {shape:?} vs {}", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 literal from a flat buffer + shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/product mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// f32 literal from an f64 [`Matrix`] (row-major, matching jnp layout).
+pub fn matrix_to_lit(m: &Matrix) -> Result<xla::Literal> {
+    let data: Vec<f32> = m.as_slice().iter().map(|&x| x as f32).collect();
+    lit_f32(&data, &[m.rows(), m.cols()])
+}
+
+/// Read a literal back as f64 values (accepts f32 or f64 payloads).
+pub fn lit_to_f64(l: &xla::Literal) -> Result<Vec<f64>> {
+    match l.ty()? {
+        xla::ElementType::F32 => Ok(l.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect()),
+        xla::ElementType::F64 => Ok(l.to_vec::<f64>()?),
+        other => anyhow::bail!("unsupported element type {other:?}"),
+    }
+}
+
+/// Scalar f64 from a literal.
+pub fn lit_scalar(l: &xla::Literal) -> Result<f64> {
+    let v = lit_to_f64(l)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}
+
+/// Literal → Matrix with the given shape (flattens >2-D shapes into
+/// (rows, prod(rest)) since all our parameters are 2-D by construction).
+pub fn lit_to_matrix(l: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v = lit_to_f64(l)?;
+    anyhow::ensure!(v.len() == rows * cols, "size mismatch {} vs {rows}x{cols}", v.len());
+    Ok(Matrix::from_vec(rows, cols, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        let m = lit_to_matrix(&lit, 2, 3).unwrap();
+        assert_eq!(m[(1, 2)], 6.0);
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = Matrix::from_rows(&[vec![1.5, -2.5], vec![0.25, 4.0]]);
+        let lit = matrix_to_lit(&m).unwrap();
+        let back = lit_to_matrix(&lit, 2, 2).unwrap();
+        assert!(back.max_diff(&m) < 1e-6);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[2]).is_err());
+    }
+
+    #[test]
+    fn i32_literal() {
+        let lit = lit_i32(&[7, 8, 9], &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime (system S7): loads the AOT-compiled HLO-text artifacts
+//! produced by `python/compile/aot.py` and executes them from the Rust
+//! training path. Python never runs at training time.
+
+pub mod artifact;
+pub mod literal;
+
+pub use artifact::{ArtifactSpec, IoSpec, Runtime};

@@ -1,0 +1,163 @@
+//! Dense reference implementation of Algorithm 1 (FD-update).
+//!
+//! Materializes the d×d covariance and follows the paper's pseudocode
+//! line by line. It exists purely as a test oracle: property tests check
+//! that the factored [`super::fd::FdSketch`] matches this reference on
+//! random streams, including under exponential weighting.
+
+use crate::tensor::{eigh, Matrix};
+
+/// Dense FD state: Ḡ plus escaped-mass accounting.
+#[derive(Clone)]
+pub struct DenseFd {
+    pub gbar: Matrix,
+    pub ell: usize,
+    pub rho_sum: f64,
+    pub decay: f64,
+}
+
+impl DenseFd {
+    pub fn new(d: usize, ell: usize, decay: f64) -> Self {
+        DenseFd { gbar: Matrix::zeros(d, d), ell, rho_sum: 0.0, decay }
+    }
+
+    /// Alg. 1: eigendecompose Ḡ_{t-1}·β₂ + M_t, keep top ℓ directions,
+    /// deflate uniformly by λ_ℓ. Returns ρ_t = λ_ℓ.
+    pub fn update(&mut self, news: &Matrix) -> f64 {
+        let d = self.gbar.rows();
+        let mut m = self.gbar.scale(self.decay);
+        m.axpy(1.0, news);
+        let e = eigh(&m);
+        let rho = if d >= self.ell { e.w[self.ell - 1].max(0.0) } else { 0.0 };
+        // Ḡ_t = Σ_{i<ℓ} (λ_i − λ_ℓ)₊ u_i u_iᵀ.
+        let mut g = Matrix::zeros(d, d);
+        for j in 0..self.ell.min(d) {
+            let w = (e.w[j] - rho).max(0.0);
+            if w == 0.0 {
+                continue;
+            }
+            for i in 0..d {
+                let uij = e.q[(i, j)] * w;
+                for i2 in 0..d {
+                    g[(i, i2)] += uij * e.q[(i2, j)];
+                }
+            }
+        }
+        self.gbar = g;
+        self.rho_sum = self.decay * self.rho_sum + rho;
+        rho
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::fd::FdSketch;
+    use crate::tensor::outer;
+    use crate::util::proptest::for_all_msg;
+    use crate::util::rng::Pcg64;
+
+    /// Factored FdSketch must match the dense Alg. 1 reference on random
+    /// rank-1 streams (the Alg. 2 setting).
+    #[test]
+    fn prop_factored_matches_dense_rank1() {
+        for_all_msg(
+            90,
+            12,
+            |rng| {
+                let d = 4 + rng.below(8);
+                let ell = 2 + rng.below(d - 2);
+                let t = 5 + rng.below(25);
+                let seed = rng.next_u64();
+                (d, ell, t, seed)
+            },
+            |&(d, ell, t, seed)| {
+                let mut rng = Pcg64::new(seed);
+                let mut fac = FdSketch::new(d, ell, 1.0);
+                let mut dense = DenseFd::new(d, ell, 1.0);
+                for step in 0..t {
+                    let g: Vec<f64> = (0..d)
+                        .map(|i| rng.gaussian() / (1.0 + i as f64).sqrt())
+                        .collect();
+                    let r1 = fac.update_vec(&g);
+                    let r2 = dense.update(&outer(&g, &g));
+                    if (r1 - r2).abs() > 1e-7 * (1.0 + r2.abs()) {
+                        return Err(format!("step {step}: rho {r1} vs {r2}"));
+                    }
+                    let diff = fac.materialize().max_diff(&dense.gbar);
+                    if diff > 1e-6 * (1.0 + dense.gbar.max_abs()) {
+                        return Err(format!("step {step}: sketch diff {diff}"));
+                    }
+                }
+                if (fac.escaped_mass() - dense.rho_sum).abs() > 1e-6 {
+                    return Err(format!(
+                        "rho_sum {} vs {}",
+                        fac.escaped_mass(),
+                        dense.rho_sum
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Same equivalence under exponential weighting (Obs. 6) and
+    /// matrix-valued news (the Shampoo setting).
+    #[test]
+    fn prop_factored_matches_dense_ema_matrix_news() {
+        for_all_msg(
+            91,
+            8,
+            |rng| {
+                let d = 4 + rng.below(6);
+                let ell = 2 + rng.below(d - 2);
+                let r = 1 + rng.below(3);
+                let t = 4 + rng.below(12);
+                let seed = rng.next_u64();
+                (d, ell, r, t, seed)
+            },
+            |&(d, ell, r, t, seed)| {
+                let mut rng = Pcg64::new(seed);
+                let beta2 = 0.9;
+                let mut fac = FdSketch::new(d, ell, beta2);
+                let mut dense = DenseFd::new(d, ell, beta2);
+                for step in 0..t {
+                    let y = Matrix::randn(d, r, &mut rng);
+                    let news = crate::tensor::a_bt(&y, &y);
+                    fac.update(&y);
+                    dense.update(&news);
+                    let diff = fac.materialize().max_diff(&dense.gbar);
+                    if diff > 1e-6 * (1.0 + dense.gbar.max_abs()) {
+                        return Err(format!("step {step}: diff {diff}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Obs. 6 bound: ‖Ḡ_T − G_T‖ ≤ ρ_{1:T} ≤ tail/(ℓ−k) for the EMA
+    /// covariance.
+    #[test]
+    fn ema_error_bound_observation6() {
+        let mut rng = Pcg64::new(92);
+        let d = 8;
+        let ell = 4;
+        let beta2 = 0.95;
+        let mut fd = FdSketch::new(d, ell, beta2);
+        let mut exact = Matrix::zeros(d, d);
+        for _ in 0..60 {
+            let g: Vec<f64> = (0..d).map(|i| rng.gaussian() / (1 << i.min(6)) as f64).collect();
+            fd.update_vec(&g);
+            exact.scale_inplace(beta2);
+            exact.axpy(1.0, &outer(&g, &g));
+        }
+        let err = crate::tensor::eigh(&fd.materialize().sub(&exact));
+        let op_norm = err.w.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+        assert!(
+            op_norm <= fd.escaped_mass() + 1e-8,
+            "‖Ḡ−G‖={op_norm} > ρ={}",
+            fd.escaped_mass()
+        );
+    }
+}

@@ -1,0 +1,382 @@
+//! Factored PSD operators: apply spectral functions of `U diag(w) Uᵀ + ρI`
+//! in O(d·ℓ) without materializing anything d×d.
+//!
+//! This is where Sketchy's memory story cashes out: Alg. 2's descent
+//! direction `G̃⁻¹ᐟ² g` and Alg. 3's `L̃⁻¹ᐟ⁴ G R̃⁻¹ᐟ⁴` are computed from the
+//! sketch factors directly. For `f` applied to `G̃ = U diag(w) Uᵀ + ρ P_U +
+//! ρ P_⊥` (P_⊥ the complement projector):
+//!
+//! `f(G̃) x = U (f(w+ρ) − f(ρ)) ⊙ (Uᵀx) + f(ρ)·x`
+//!
+//! With ρ = 0 the pseudo-inverse convention of Alg. 2 applies: the
+//! complement coefficient f(0) is taken as 0 for negative powers.
+
+use crate::tensor::{Matrix, at_b, matmul};
+
+/// Borrowed view of a factored PSD operator `U diag(w) Uᵀ + shift·I`.
+pub struct FactoredPsd<'a> {
+    /// Orthonormal basis, d×ℓ (zero columns beyond `active`).
+    pub u: &'a Matrix,
+    /// Eigenvalues of the low-rank part (descending, len ℓ).
+    pub w: &'a [f64],
+    /// Diagonal shift ρ ≥ 0.
+    pub shift: f64,
+    /// Number of active (positive) eigenvalues.
+    pub active: usize,
+}
+
+impl<'a> FactoredPsd<'a> {
+    /// Spectral coefficients for `f(λ) = (λ)^{-1/p}` with pseudo-inverse
+    /// handling at 0: returns (per-eigendirection coefficient minus the
+    /// complement coefficient, complement coefficient).
+    fn inv_root_coeffs(&self, p: f64) -> (Vec<f64>, f64) {
+        let f = |lam: f64| -> f64 {
+            if lam > 0.0 {
+                lam.powf(-1.0 / p)
+            } else {
+                0.0 // Moore–Penrose: null directions get 0.
+            }
+        };
+        let comp = f(self.shift);
+        let coeffs = (0..self.active)
+            .map(|i| f(self.w[i] + self.shift) - comp)
+            .collect();
+        (coeffs, comp)
+    }
+
+    /// `y = G̃^{-1/p} x` for a vector x, in O(dℓ).
+    pub fn apply_inv_root_vec(&self, p: f64, x: &[f64]) -> Vec<f64> {
+        let d = self.u.rows();
+        assert_eq!(x.len(), d);
+        let (coeffs, comp) = self.inv_root_coeffs(p);
+        // c = Uᵀ x (active columns only).
+        let mut y: Vec<f64> = x.iter().map(|&v| comp * v).collect();
+        for (j, &cj) in coeffs.iter().enumerate() {
+            let mut proj = 0.0;
+            for i in 0..d {
+                proj += self.u[(i, j)] * x[i];
+            }
+            let scale = cj * proj;
+            for (i, yi) in y.iter_mut().enumerate() {
+                *yi += scale * self.u[(i, j)];
+            }
+        }
+        y
+    }
+
+    /// `Y = G̃^{-1/p} X` applied from the left to a d×n matrix, O(dℓn).
+    pub fn apply_inv_root_left(&self, p: f64, x: &Matrix) -> Matrix {
+        let d = self.u.rows();
+        assert_eq!(x.rows(), d);
+        let (coeffs, comp) = self.inv_root_coeffs(p);
+        let k = coeffs.len();
+        let mut y = x.scale(comp);
+        if k == 0 {
+            return y;
+        }
+        let ua = self.u.slice(0, d, 0, k);
+        // P = Uᵀ X (k×n), then Y += U diag(coeffs) P.
+        let mut proj = at_b(&ua, x);
+        for (j, &cj) in coeffs.iter().enumerate() {
+            for v in proj.row_mut(j) {
+                *v *= cj;
+            }
+        }
+        let corr = matmul(&ua, &proj);
+        y.axpy(1.0, &corr);
+        y
+    }
+
+    /// `Y = X G̃^{-1/p}` applied from the right to an n×d matrix, O(dℓn).
+    pub fn apply_inv_root_right(&self, p: f64, x: &Matrix) -> Matrix {
+        let d = self.u.rows();
+        assert_eq!(x.cols(), d);
+        let (coeffs, comp) = self.inv_root_coeffs(p);
+        let k = coeffs.len();
+        let mut y = x.scale(comp);
+        if k == 0 {
+            return y;
+        }
+        let ua = self.u.slice(0, d, 0, k);
+        // P = X U (n×k), then Y += P diag(coeffs) Uᵀ.
+        let mut proj = matmul(x, &ua);
+        for j in 0..k {
+            let cj = coeffs[j];
+            for i in 0..proj.rows() {
+                proj[(i, j)] *= cj;
+            }
+        }
+        let corr = crate::tensor::a_bt(&proj, &ua);
+        y.axpy(1.0, &corr);
+        y
+    }
+
+    /// The matrix norm ‖x‖²_{G̃^{1/2}} = xᵀ G̃^{1/2} x (used by Alg. 2's
+    /// projection step).
+    pub fn quad_form_sqrt(&self, x: &[f64]) -> f64 {
+        let d = self.u.rows();
+        let f = |lam: f64| lam.max(0.0).sqrt();
+        let comp = f(self.shift);
+        let mut total = comp * crate::tensor::dot(x, x);
+        for j in 0..self.active {
+            let mut proj = 0.0;
+            for i in 0..d {
+                proj += self.u[(i, j)] * x[i];
+            }
+            total += (f(self.w[j] + self.shift) - comp) * proj * proj;
+        }
+        total
+    }
+
+    /// Materialize G̃ (tests only).
+    pub fn materialize(&self) -> Matrix {
+        let d = self.u.rows();
+        let mut m = Matrix::zeros(d, d);
+        for j in 0..self.active {
+            for i in 0..d {
+                let uij = self.u[(i, j)] * self.w[j];
+                for i2 in 0..d {
+                    m[(i, i2)] += uij * self.u[(i2, j)];
+                }
+            }
+        }
+        m.add_diag(self.shift);
+        m
+    }
+
+    /// Projection onto the Euclidean ball of radius `radius` in the norm
+    /// ‖·‖_{G̃^{1/2}} (Alg. 2 line 6): solves
+    /// `argmin_{‖x‖₂ ≤ radius} ‖x − y‖²_{G̃^{1/2}}` by bisection on the KKT
+    /// multiplier in the sketch eigenbasis — O(dℓ + ℓ·iters).
+    pub fn project_ball(&self, y: &[f64], radius: f64) -> Vec<f64> {
+        let d = self.u.rows();
+        let nrm = crate::tensor::norm2(y);
+        if nrm <= radius {
+            return y.to_vec();
+        }
+        // M = G̃^{1/2}: eigenvalues m_j = sqrt(w_j + shift) on basis
+        // directions, m_perp = sqrt(shift) on the complement. A zero
+        // m_perp (unshifted, rank-deficient) makes the complement
+        // component free; we then simply rescale it to feasibility.
+        let f = |lam: f64| (lam.max(0.0)).sqrt();
+        let m_perp = f(self.shift);
+        let m_dir: Vec<f64> = (0..self.active).map(|j| f(self.w[j] + self.shift)).collect();
+        // Coefficients of y in the basis and the complement residual.
+        let mut coeff = vec![0.0; self.active];
+        let mut resid = y.to_vec();
+        for j in 0..self.active {
+            let mut proj = 0.0;
+            for i in 0..d {
+                proj += self.u[(i, j)] * y[i];
+            }
+            coeff[j] = proj;
+            for i in 0..d {
+                resid[i] -= proj * self.u[(i, j)];
+            }
+        }
+        let resid_norm2 = crate::tensor::dot(&resid, &resid);
+        // x(ν) = (M + νI)^{-1} M y componentwise; ‖x(ν)‖₂ decreasing in ν.
+        let xnorm2 = |nu: f64| -> f64 {
+            let mut s = 0.0;
+            for j in 0..self.active {
+                let c = m_dir[j] / (m_dir[j] + nu) * coeff[j];
+                s += c * c;
+            }
+            let cperp = if m_perp + nu > 0.0 { m_perp / (m_perp + nu) } else { 0.0 };
+            s + cperp * cperp * resid_norm2
+        };
+        // Bisection for ‖x(ν)‖ = radius.
+        let mut lo = 0.0;
+        let mut hi = 1.0;
+        while xnorm2(hi) > radius * radius && hi < 1e18 {
+            hi *= 2.0;
+        }
+        for _ in 0..100 {
+            let mid = 0.5 * (lo + hi);
+            if xnorm2(mid) > radius * radius {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let nu = 0.5 * (lo + hi);
+        // Assemble x(ν).
+        let cperp = if m_perp + nu > 0.0 { m_perp / (m_perp + nu) } else { 0.0 };
+        let mut x: Vec<f64> = resid.iter().map(|&r| cperp * r).collect();
+        for j in 0..self.active {
+            let c = m_dir[j] / (m_dir[j] + nu) * coeff[j];
+            for i in 0..d {
+                x[i] += c * self.u[(i, j)];
+            }
+        }
+        // Guard: numerical safety rescale.
+        let n = crate::tensor::norm2(&x);
+        if n > radius {
+            for v in &mut x {
+                *v *= radius / n;
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{eigh, matvec, random_orthonormal};
+    use crate::util::rng::Pcg64;
+
+    /// Build a random factored operator and its dense materialization.
+    fn random_factored(
+        d: usize,
+        k: usize,
+        shift: f64,
+        seed: u64,
+    ) -> (Matrix, Vec<f64>, Matrix) {
+        let mut rng = Pcg64::new(seed);
+        let u = random_orthonormal(d, k, &mut rng);
+        let mut w: Vec<f64> = (0..k).map(|i| 4.0 / (1.0 + i as f64)).collect();
+        w.push(0.0); // emulate the zero ℓ-th eigenvalue
+        let mut u_pad = Matrix::zeros(d, k + 1);
+        u_pad.set_slice(0, 0, &u);
+        let fac = FactoredPsd { u: &u_pad, w: &w, shift, active: k };
+        let dense = fac.materialize();
+        (u_pad, w, dense)
+    }
+
+    #[test]
+    fn inv_root_vec_matches_dense() {
+        let d = 10;
+        let k = 3;
+        for &shift in &[0.5, 2.0] {
+            let (u, w, dense) = random_factored(d, k, shift, 70);
+            let fac = FactoredPsd { u: &u, w: &w, shift, active: k };
+            let e = eigh(&dense);
+            let mut rng = Pcg64::new(71);
+            let x = rng.gaussian_vec(d);
+            for &p in &[2.0, 4.0] {
+                let dense_root = e.apply_spectral(|lam| lam.max(1e-300).powf(-1.0 / p));
+                let want = matvec(&dense_root, &x);
+                let got = fac.apply_inv_root_vec(p, &x);
+                for i in 0..d {
+                    assert!(
+                        (want[i] - got[i]).abs() < 1e-8,
+                        "p={p} shift={shift} i={i}: {} vs {}",
+                        want[i],
+                        got[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inv_root_zero_shift_is_pseudoinverse() {
+        // With shift=0 the complement must map to 0 (Moore–Penrose).
+        let d = 8;
+        let k = 2;
+        let (u, w, dense) = random_factored(d, k, 0.0, 72);
+        let fac = FactoredPsd { u: &u, w: &w, shift: 0.0, active: k };
+        let mut rng = Pcg64::new(73);
+        let x = rng.gaussian_vec(d);
+        let got = fac.apply_inv_root_vec(2.0, &x);
+        // Dense pinv sqrt.
+        let pinv = crate::tensor::pinv_sqrt(&dense, 1e-12);
+        let want = matvec(&pinv, &x);
+        for i in 0..d {
+            assert!((want[i] - got[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn left_right_matrix_applies_match_dense() {
+        let d = 9;
+        let k = 4;
+        let shift = 1.3;
+        let (u, w, dense) = random_factored(d, k, shift, 74);
+        let fac = FactoredPsd { u: &u, w: &w, shift, active: k };
+        let e = eigh(&dense);
+        let droot = e.apply_spectral(|lam| lam.max(1e-300).powf(-0.25));
+        let mut rng = Pcg64::new(75);
+        let x = Matrix::randn(d, 5, &mut rng);
+        let got = fac.apply_inv_root_left(4.0, &x);
+        let want = matmul(&droot, &x);
+        assert!(got.max_diff(&want) < 1e-8);
+        let xr = Matrix::randn(5, d, &mut rng);
+        let got_r = fac.apply_inv_root_right(4.0, &xr);
+        let want_r = matmul(&xr, &droot);
+        assert!(got_r.max_diff(&want_r) < 1e-8);
+    }
+
+    #[test]
+    fn quad_form_matches_dense() {
+        let d = 7;
+        let k = 3;
+        let shift = 0.8;
+        let (u, w, dense) = random_factored(d, k, shift, 76);
+        let fac = FactoredPsd { u: &u, w: &w, shift, active: k };
+        let e = eigh(&dense);
+        let sqrt_m = e.apply_spectral(|lam| lam.max(0.0).sqrt());
+        let mut rng = Pcg64::new(77);
+        let x = rng.gaussian_vec(d);
+        let mx = matvec(&sqrt_m, &x);
+        let want = crate::tensor::dot(&x, &mx);
+        let got = fac.quad_form_sqrt(&x);
+        assert!((want - got).abs() < 1e-8 * (1.0 + want.abs()));
+    }
+
+    #[test]
+    fn projection_stays_inside_and_is_identity_inside() {
+        let d = 6;
+        let k = 2;
+        let (u, w, _) = random_factored(d, k, 0.7, 78);
+        let fac = FactoredPsd { u: &u, w: &w, shift: 0.7, active: k };
+        let mut rng = Pcg64::new(79);
+        // Inside: unchanged.
+        let small: Vec<f64> = rng.gaussian_vec(d).iter().map(|x| 0.01 * x).collect();
+        let p = fac.project_ball(&small, 1.0);
+        for i in 0..d {
+            assert_eq!(p[i], small[i]);
+        }
+        // Outside: lands on the boundary.
+        let big: Vec<f64> = rng.gaussian_vec(d).iter().map(|x| 10.0 * x).collect();
+        let p = fac.project_ball(&big, 1.0);
+        let n = crate::tensor::norm2(&p);
+        assert!(n <= 1.0 + 1e-9 && n > 0.99, "‖p‖ = {n}");
+    }
+
+    #[test]
+    fn projection_optimality_kkt() {
+        // Check the projection beats random feasible points in M-norm.
+        let d = 5;
+        let k = 2;
+        let shift = 0.4;
+        let (u, w, dense) = random_factored(d, k, shift, 80);
+        let fac = FactoredPsd { u: &u, w: &w, shift, active: k };
+        let e = eigh(&dense);
+        let m_half = e.apply_spectral(|lam| lam.max(0.0).sqrt());
+        let mnorm2 = |v: &[f64]| {
+            let mv = matvec(&m_half, v);
+            crate::tensor::dot(v, &mv)
+        };
+        let mut rng = Pcg64::new(81);
+        let y: Vec<f64> = rng.gaussian_vec(d).iter().map(|x| 3.0 * x).collect();
+        let p = fac.project_ball(&y, 1.0);
+        let diff_p: Vec<f64> = (0..d).map(|i| p[i] - y[i]).collect();
+        let obj_p = mnorm2(&diff_p);
+        for _ in 0..50 {
+            let mut z = rng.gaussian_vec(d);
+            let zn = crate::tensor::norm2(&z);
+            let r = rng.uniform();
+            for v in &mut z {
+                *v *= r / zn;
+            }
+            let diff_z: Vec<f64> = (0..d).map(|i| z[i] - y[i]).collect();
+            assert!(
+                obj_p <= mnorm2(&diff_z) + 1e-9,
+                "projection not optimal: {obj_p} vs {}",
+                mnorm2(&diff_z)
+            );
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Frequent Directions sketch substrate (system S3 in DESIGN.md).
+//!
+//! - [`fd::FdSketch`] — factored Alg. 1 / Obs. 6 sketch (the paper's core
+//!   data structure), O(dℓ) memory, small-Gram updates.
+//! - [`factored::FactoredPsd`] — O(dℓ) spectral-function applies and the
+//!   ‖·‖_{G̃^{1/2}} ball projection used by Alg. 2.
+//! - [`dense_ref::DenseFd`] — the d×d pseudocode-faithful oracle used by
+//!   property tests.
+
+pub mod dense_ref;
+pub mod factored;
+pub mod fd;
+
+pub use factored::FactoredPsd;
+pub use fd::FdSketch;

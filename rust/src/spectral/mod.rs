@@ -1,0 +1,170 @@
+//! Spectral analysis tooling (system S10) — reproduces §5.2 / Fig. 3.
+//!
+//! Tracks the exponential moving average of Kronecker-factored gradient
+//! covariance `L_t = Σ β₂^{t-i} G_i G_iᵀ` (and R_t) during training and
+//! computes the paper's two concentration measures: the top-k spectral
+//! mass fraction and the intrinsic dimension `tr C / λ_max(C)`.
+
+use crate::tensor::{a_at, at_a, eigh, Matrix};
+use crate::util::rng::Pcg64;
+
+/// EMA tracker for one tensor's Kronecker covariance factors.
+pub struct KronTracker {
+    pub beta2: f64,
+    pub l: Matrix,
+    pub r: Matrix,
+    steps: usize,
+}
+
+impl KronTracker {
+    pub fn new(m: usize, n: usize, beta2: f64) -> Self {
+        KronTracker { beta2, l: Matrix::zeros(m, m), r: Matrix::zeros(n, n), steps: 0 }
+    }
+
+    /// Fold in one gradient: L ← β₂L + GGᵀ, R ← β₂R + GᵀG.
+    pub fn update(&mut self, g: &Matrix) {
+        self.l.scale_inplace(self.beta2);
+        self.l.axpy(1.0, &a_at(g));
+        self.r.scale_inplace(self.beta2);
+        self.r.axpy(1.0, &at_a(g));
+        self.steps += 1;
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+}
+
+/// Intrinsic dimension tr C / λ_max(C) (Vershynin [39] Rem. 5.6.3); the
+/// right-hand Fig. 3 measure. λ_max via power iteration (cheap; no full
+/// eigh needed).
+pub fn intrinsic_dim(c: &Matrix) -> f64 {
+    let tr = c.trace();
+    let lmax = lambda_max(c, 200, 1e-10);
+    if lmax <= 0.0 {
+        return 0.0;
+    }
+    tr / lmax
+}
+
+/// Largest eigenvalue of a symmetric PSD matrix by power iteration.
+pub fn lambda_max(c: &Matrix, iters: usize, tol: f64) -> f64 {
+    let n = c.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut rng = Pcg64::new(0x11ec + n as u64);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        let w = crate::tensor::matvec(c, &v);
+        let nw = crate::tensor::norm2(&w);
+        if nw < 1e-300 {
+            return 0.0;
+        }
+        let new_lam = crate::tensor::dot(&v, &w);
+        v = w.iter().map(|x| x / nw).collect();
+        if (new_lam - lam).abs() <= tol * (1.0 + new_lam.abs()) {
+            return new_lam;
+        }
+        lam = new_lam;
+    }
+    lam
+}
+
+/// Fraction of spectral mass in the top k eigenvalues:
+/// Σ_{i≤k} λ_i / Σ_i λ_i (the left-hand Fig. 3 measure).
+pub fn spectral_mass_topk(c: &Matrix, k: usize) -> f64 {
+    let e = eigh(c);
+    let total: f64 = e.w.iter().map(|&w| w.max(0.0)).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let top: f64 = e.w.iter().take(k).map(|&w| w.max(0.0)).sum();
+    top / total
+}
+
+/// §5.2's random-matrix control: intrinsic dimension of
+/// `Σ_{i<n} β₂ⁱ xᵢxᵢᵀ` with xᵢ iid N(0,1) of shape dim×d. The paper
+/// reports 324.63 (d=1) and 862.13 (d=64) at dim=1024, n=10000 — far
+/// above the ≈10–105 observed in real training, proving the observed
+/// decay is an emergent property of DL training and not an EMA artifact.
+pub fn wishart_ema_intrinsic_dim(
+    dim: usize,
+    d: usize,
+    n: usize,
+    beta2: f64,
+    seed: u64,
+) -> f64 {
+    let mut rng = Pcg64::new(seed);
+    let mut c = Matrix::zeros(dim, dim);
+    for _ in 0..n {
+        let x = Matrix::randn(dim, d, &mut rng);
+        c.scale_inplace(beta2);
+        c.axpy(1.0, &a_at(&x));
+    }
+    intrinsic_dim(&c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_max_matches_eigh() {
+        let mut rng = Pcg64::new(300);
+        let g = Matrix::randn(20, 9, &mut rng);
+        let c = at_a(&g);
+        let pm = lambda_max(&c, 500, 1e-12);
+        let ev = eigh(&c).w[0];
+        assert!((pm - ev).abs() < 1e-6 * (1.0 + ev));
+    }
+
+    #[test]
+    fn intrinsic_dim_extremes() {
+        // Identity: intrinsic dim = n. Rank-1: intrinsic dim = 1.
+        let i = Matrix::eye(12);
+        assert!((intrinsic_dim(&i) - 12.0).abs() < 1e-6);
+        let u: Vec<f64> = (0..12).map(|i| (i as f64 + 1.0).sin()).collect();
+        let r1 = crate::tensor::outer(&u, &u);
+        assert!((intrinsic_dim(&r1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topk_mass_monotone_and_bounded() {
+        let mut rng = Pcg64::new(301);
+        let g = Matrix::randn(30, 10, &mut rng);
+        let c = at_a(&g);
+        let mut prev = 0.0;
+        for k in 1..=10 {
+            let m = spectral_mass_topk(&c, k);
+            assert!(m >= prev - 1e-12 && m <= 1.0 + 1e-12);
+            prev = m;
+        }
+        assert!((prev - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracker_accumulates_ema() {
+        let mut t = KronTracker::new(3, 2, 0.5);
+        let g1 = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 0.0], vec![0.0, 0.0]]);
+        t.update(&g1);
+        t.update(&g1);
+        // L = 0.5·g1g1ᵀ + g1g1ᵀ = 1.5 at (0,0).
+        assert!((t.l[(0, 0)] - 1.5).abs() < 1e-12);
+        assert!((t.r[(0, 0)] - 1.5).abs() < 1e-12);
+        assert_eq!(t.steps(), 2);
+    }
+
+    #[test]
+    fn wishart_control_small_scale() {
+        // Scaled-down version of the §5.2 experiment: EMA of Wisharts at
+        // dim=64. With β₂=0.9 the effective sample count ≈ 10, so d=1
+        // gives intrinsic dim ≈ 10 ≪ 64, d=64 pushes toward ~45-64.
+        let id1 = wishart_ema_intrinsic_dim(64, 1, 200, 0.9, 40);
+        let id64 = wishart_ema_intrinsic_dim(64, 64, 200, 0.9, 41);
+        assert!(id1 < id64, "intrinsic dim should grow with d: {id1} vs {id64}");
+        assert!(id1 > 2.0 && id1 < 40.0, "id1={id1}");
+        assert!(id64 > 30.0, "id64={id64}");
+    }
+}

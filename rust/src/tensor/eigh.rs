@@ -1,0 +1,518 @@
+//! Symmetric eigendecomposition.
+//!
+//! Every eigendecomposition in this system runs here: the PJRT boundary
+//! cannot carry LAPACK custom calls (xla_extension 0.5.1 predates jax's
+//! typed-FFI lowering — see DESIGN.md §1), so the FD sketch updates and
+//! Shampoo inverse roots decompose on the Rust side.
+//!
+//! Two algorithms:
+//! - [`eigh`] — Householder tridiagonalization (tred2) + implicit-shift QL
+//!   with eigenvector accumulation (tql2). O(n³) with a small constant;
+//!   handles the ≤ a-few-thousand dimensional blocks this system uses.
+//! - [`eigh_jacobi`] — cyclic Jacobi. Slower but independently derived;
+//!   used as a cross-check oracle in tests and for tiny matrices.
+//!
+//! Both return eigenvalues in **descending** order (the FD convention of
+//! Alg. 1 in the paper: λ₁ ≥ λ₂ ≥ …) with eigenvectors as columns of `q`
+//! such that `a = q · diag(w) · qᵀ`.
+
+use super::matrix::Matrix;
+
+/// Result of a symmetric eigendecomposition: `a = q·diag(w)·qᵀ`,
+/// eigenvalues descending.
+#[derive(Clone, Debug)]
+pub struct Eigh {
+    /// Eigenvalues, descending.
+    pub w: Vec<f64>,
+    /// Orthonormal eigenvectors, column i pairs with w[i].
+    pub q: Matrix,
+}
+
+/// Symmetric eigendecomposition via tridiagonalization + implicit QL.
+///
+/// Panics if `a` is not square; asymmetry is tolerated (only the lower
+/// triangle is read after the initial symmetrization copy).
+pub fn eigh(a: &Matrix) -> Eigh {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigh requires a square matrix");
+    if n == 0 {
+        return Eigh { w: vec![], q: Matrix::zeros(0, 0) };
+    }
+    if n == 1 {
+        return Eigh { w: vec![a[(0, 0)]], q: Matrix::eye(1) };
+    }
+    // Work on a symmetrized copy.
+    let mut z = a.clone();
+    z.symmetrize();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut z, &mut d, &mut e);
+    // QL rotations update eigenvector *columns*; in row-major storage
+    // that is a strided walk. Accumulate in the transpose so each Givens
+    // rotation is two contiguous-row AXPYs (measured ~4x on n=512 —
+    // EXPERIMENTS.md §Perf), then transpose back.
+    let mut zt = z.t();
+    tql2(&mut zt, &mut d, &mut e);
+    let mut z = zt.t();
+    sort_descending(&mut d, &mut z);
+    Eigh { w: d, q: z }
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form
+/// (EISPACK tred2). On exit `z` holds the orthogonal transformation, `d`
+/// the diagonal, `e` the subdiagonal (e[0] unused).
+fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                let mut f_acc = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f_acc += e[j] * z[(i, j)];
+                }
+                let hh = f_acc / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let gj = e[j] - hh * f;
+                    e[j] = gj;
+                    for k in 0..=j {
+                        let delta = f * e[k] + gj * z[(i, k)];
+                        z[(j, k)] -= delta;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    // Accumulate transformation. The textbook loop walks columns of z
+    // (strided in row-major); we block it as G = Z[0..i]ᵀ u then a rank-1
+    // row-major update Z[0..i] -= v Gᵀ, keeping every inner loop
+    // contiguous (~35% on n=512, EXPERIMENTS.md §Perf).
+    let mut gbuf = vec![0.0; n];
+    for i in 0..n {
+        if d[i] != 0.0 {
+            // g[j] = Σ_k z[i][k] · z[k][j] for j < i (gᵀ = uᵀ Z[0..i]).
+            gbuf[..i].fill(0.0);
+            for k in 0..i {
+                let uik = z[(i, k)];
+                if uik == 0.0 {
+                    continue;
+                }
+                let row_k = &z.row(k)[..i];
+                // Contiguous fused-multiply-add over row k.
+                for (gj, &zkj) in gbuf[..i].iter_mut().zip(row_k) {
+                    *gj += uik * zkj;
+                }
+            }
+            // z[k][j] -= g[j] · z[k][i] — row-major rank-1 update.
+            for k in 0..i {
+                let vki = z[(k, i)];
+                if vki == 0.0 {
+                    continue;
+                }
+                let row_k = z.row_mut(k);
+                for (zkj, &gj) in row_k[..i].iter_mut().zip(&gbuf[..i]) {
+                    *zkj -= gj * vki;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+}
+
+#[inline]
+fn hypot(a: f64, b: f64) -> f64 {
+    a.hypot(b)
+}
+
+/// Implicit-shift QL on a tridiagonal matrix with eigenvector
+/// accumulation (EISPACK tql2). `d` = diagonal in, eigenvalues out;
+/// `e` = subdiagonal (e[0] unused); `zt` = accumulated transform in,
+/// eigenvectors out — **stored transposed** (row i of `zt` is
+/// eigenvector i) so the inner rotation loop is contiguous.
+fn tql2(zt: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    // Absolute deflation floor: matrices fed by optimizer statistics can
+    // span ~16 orders of magnitude; a subdiagonal entry this far below
+    // the matrix norm is numerically zero even when its neighbors are.
+    let anorm = d
+        .iter()
+        .chain(e.iter())
+        .fold(0.0f64, |a, &x| a.max(x.abs()));
+    let floor = f64::EPSILON * anorm.max(f64::MIN_POSITIVE);
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small subdiagonal element.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd || e[m].abs() <= floor {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 128 {
+                // Force deflation rather than panicking: the residual
+                // subdiagonal is O(eps·‖A‖) noise at this point and the
+                // FD/Shampoo consumers are robust to it.
+                e[m.min(n - 1)] = 0.0;
+                e[l] = 0.0;
+                break;
+            }
+            // Form shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = hypot(g, 1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let mut s = 1.0;
+            let mut c = 1.0;
+            let mut p = 0.0;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let f = s * e[i];
+                let b = c * e[i];
+                r = hypot(f, g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // Recover from underflow.
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate eigenvectors: rotate transposed rows i, i+1
+                // (contiguous; auto-vectorizes).
+                {
+                    let (lo, hi) = zt.as_mut_slice().split_at_mut((i + 1) * n);
+                    let row_i = &mut lo[i * n..(i + 1) * n];
+                    let row_i1 = &mut hi[..n];
+                    for k in 0..n {
+                        let f = row_i1[k];
+                        row_i1[k] = s * row_i[k] + c * f;
+                        row_i[k] = c * row_i[k] - s * f;
+                    }
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+/// Sort eigenvalues descending, permuting eigenvector columns to match.
+fn sort_descending(d: &mut [f64], z: &mut Matrix) {
+    let n = d.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    let d_old = d.to_vec();
+    let z_old = z.clone();
+    for (new_col, &old_col) in idx.iter().enumerate() {
+        d[new_col] = d_old[old_col];
+        for r in 0..n {
+            z[(r, new_col)] = z_old[(r, old_col)];
+        }
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition — independent implementation used as a
+/// test oracle and for very small matrices where its simplicity wins.
+pub fn eigh_jacobi(a: &Matrix) -> Eigh {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut q = Matrix::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + m.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for r in (p + 1)..n {
+                let apq = m[(p, r)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(r, r)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation to rows/cols p and r.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, r)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, r)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(r, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(r, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let qkp = q[(k, p)];
+                    let qkq = q[(k, r)];
+                    q[(k, p)] = c * qkp - s * qkq;
+                    q[(k, r)] = s * qkp + c * qkq;
+                }
+            }
+        }
+    }
+    let mut d: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    sort_descending(&mut d, &mut q);
+    Eigh { w: d, q }
+}
+
+impl Eigh {
+    /// Reconstruct q · diag(w) · qᵀ (test helper; O(n³)).
+    pub fn reconstruct(&self) -> Matrix {
+        let n = self.w.len();
+        let mut scaled = self.q.clone();
+        for j in 0..n {
+            for i in 0..n {
+                scaled[(i, j)] *= self.w[j];
+            }
+        }
+        super::ops::a_bt(&scaled, &self.q)
+    }
+
+    /// Apply f to the spectrum: q · diag(f(w)) · qᵀ.
+    pub fn apply_spectral(&self, f: impl Fn(f64) -> f64) -> Matrix {
+        let n = self.w.len();
+        let mut scaled = self.q.clone();
+        for j in 0..n {
+            let fv = f(self.w[j]);
+            for i in 0..n {
+                scaled[(i, j)] *= fv;
+            }
+        }
+        super::ops::a_bt(&scaled, &self.q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{at_a, matmul};
+    use crate::util::rng::Pcg64;
+
+    fn check_decomposition(a: &Matrix, eig: &Eigh, tol: f64) {
+        let n = a.rows();
+        // Descending order.
+        for i in 1..n {
+            assert!(
+                eig.w[i - 1] >= eig.w[i] - 1e-12,
+                "not descending: {:?}",
+                eig.w
+            );
+        }
+        // Orthonormal columns.
+        let qtq = at_a(&eig.q);
+        assert!(
+            qtq.max_diff(&Matrix::eye(n)) < tol,
+            "q not orthonormal: {}",
+            qtq.max_diff(&Matrix::eye(n))
+        );
+        // Reconstruction.
+        let recon = eig.reconstruct();
+        let mut sym = a.clone();
+        sym.symmetrize();
+        assert!(
+            recon.max_diff(&sym) < tol * (1.0 + sym.max_abs()),
+            "reconstruction error {}",
+            recon.max_diff(&sym)
+        );
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::diag(&[3.0, -1.0, 2.0]);
+        let e = eigh(&a);
+        assert!((e.w[0] - 3.0).abs() < 1e-12);
+        assert!((e.w[1] - 2.0).abs() < 1e-12);
+        assert!((e.w[2] + 1.0).abs() < 1e-12);
+        check_decomposition(&a, &e, 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Matrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = eigh(&a);
+        assert!((e.w[0] - 3.0).abs() < 1e-12);
+        assert!((e.w[1] - 1.0).abs() < 1e-12);
+        check_decomposition(&a, &e, 1e-12);
+    }
+
+    #[test]
+    fn random_symmetric_various_sizes() {
+        let mut rng = Pcg64::new(10);
+        for &n in &[2usize, 3, 5, 8, 16, 33, 64, 100] {
+            let b = Matrix::randn(n, n, &mut rng);
+            let mut a = b.add(&b.t());
+            a.scale_inplace(0.5);
+            let e = eigh(&a);
+            check_decomposition(&a, &e, 1e-8);
+            // Trace and Frobenius preserved by spectrum.
+            let tr: f64 = e.w.iter().sum();
+            assert!((tr - a.trace()).abs() < 1e-8 * (1.0 + a.trace().abs()));
+            let fro2: f64 = e.w.iter().map(|x| x * x).sum();
+            let afro2 = a.fro_norm().powi(2);
+            assert!((fro2 - afro2).abs() < 1e-6 * (1.0 + afro2));
+        }
+    }
+
+    #[test]
+    fn psd_gram_has_nonnegative_spectrum() {
+        let mut rng = Pcg64::new(11);
+        let g = Matrix::randn(40, 12, &mut rng);
+        let a = at_a(&g);
+        let e = eigh(&a);
+        for &w in &e.w {
+            assert!(w > -1e-9, "negative eigenvalue {w} for PSD input");
+        }
+        check_decomposition(&a, &e, 1e-8);
+    }
+
+    #[test]
+    fn rank_deficient_spectrum() {
+        let mut rng = Pcg64::new(12);
+        // Rank-3 PSD matrix in dimension 10.
+        let g = Matrix::randn(3, 10, &mut rng);
+        let a = at_a(&g);
+        let e = eigh(&a);
+        for &w in &e.w[3..] {
+            assert!(w.abs() < 1e-8, "rank-deficient tail not ~0: {:?}", e.w);
+        }
+        check_decomposition(&a, &e, 1e-8);
+    }
+
+    #[test]
+    fn degenerate_eigenvalues() {
+        // 2*I plus a rank-1 bump: eigenvalues {3, 2, 2, 2}.
+        let n = 4;
+        let mut a = Matrix::eye(n);
+        a.scale_inplace(2.0);
+        let u = [0.5, 0.5, 0.5, 0.5];
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] += u[i] * u[j];
+            }
+        }
+        let e = eigh(&a);
+        assert!((e.w[0] - 3.0).abs() < 1e-10);
+        for &w in &e.w[1..] {
+            assert!((w - 2.0).abs() < 1e-10);
+        }
+        check_decomposition(&a, &e, 1e-10);
+    }
+
+    #[test]
+    fn matches_jacobi_oracle() {
+        let mut rng = Pcg64::new(13);
+        for &n in &[4usize, 9, 21] {
+            let b = Matrix::randn(n, n, &mut rng);
+            let a = b.add(&b.t()).scale(0.5);
+            let e1 = eigh(&a);
+            let e2 = eigh_jacobi(&a);
+            for i in 0..n {
+                assert!(
+                    (e1.w[i] - e2.w[i]).abs() < 1e-8 * (1.0 + e1.w[i].abs()),
+                    "eigenvalue mismatch at {i}: {} vs {}",
+                    e1.w[i],
+                    e2.w[i]
+                );
+            }
+            check_decomposition(&a, &e2, 1e-8);
+        }
+    }
+
+    #[test]
+    fn apply_spectral_inverse_sqrt() {
+        let mut rng = Pcg64::new(14);
+        let g = Matrix::randn(30, 6, &mut rng);
+        let mut a = at_a(&g);
+        a.add_diag(0.5); // strictly PD
+        let e = eigh(&a);
+        let inv_sqrt = e.apply_spectral(|w| 1.0 / w.sqrt());
+        // inv_sqrt * a * inv_sqrt == I
+        let prod = matmul(&matmul(&inv_sqrt, &a), &inv_sqrt);
+        assert!(prod.max_diff(&Matrix::eye(6)) < 1e-8);
+    }
+
+    #[test]
+    fn size_one_and_empty() {
+        let e = eigh(&Matrix::from_rows(&[vec![7.0]]));
+        assert_eq!(e.w, vec![7.0]);
+        let e0 = eigh(&Matrix::zeros(0, 0));
+        assert!(e0.w.is_empty());
+    }
+}

@@ -1,0 +1,113 @@
+//! Kronecker-product utilities (Lemma 15 of the paper / Gupta et al.).
+//!
+//! Shampoo's preconditioner is `L ⊗ R` applied implicitly through
+//! `(L ⊗ Rᵀ) vec(G) = vec(L G R)`; these helpers exist mostly for tests
+//! and the full-matrix baselines, which are the only places a Kronecker
+//! product is ever materialized.
+
+use super::matrix::Matrix;
+use super::ops::matmul;
+
+/// Materialized Kronecker product `a ⊗ b` (test/baseline use only —
+/// O(m²n²) memory, exactly the blow-up the paper's factorization avoids).
+pub fn kron(a: &Matrix, b: &Matrix) -> Matrix {
+    let (am, an) = a.shape();
+    let (bm, bn) = b.shape();
+    let mut out = Matrix::zeros(am * bm, an * bn);
+    for i in 0..am {
+        for j in 0..an {
+            let aij = a[(i, j)];
+            if aij == 0.0 {
+                continue;
+            }
+            for p in 0..bm {
+                let orow = out.row_mut(i * bm + p);
+                let brow = b.row(p);
+                for q in 0..bn {
+                    orow[j * bn + q] = aij * brow[q];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Row-major vectorization `vec(G)` (the paper's overline-vec).
+pub fn vec_rm(g: &Matrix) -> Vec<f64> {
+    g.as_slice().to_vec()
+}
+
+/// Inverse of [`vec_rm`].
+pub fn unvec_rm(v: &[f64], rows: usize, cols: usize) -> Matrix {
+    Matrix::from_vec(rows, cols, v.to_vec())
+}
+
+/// Implicit Kronecker apply: computes `vec(L · G · R)`, which equals
+/// `(L ⊗ Rᵀ) vec(G)` (Lemma 15.7). O(m²n + mn²) instead of O(m²n²).
+pub fn kron_apply(l: &Matrix, g: &Matrix, r: &Matrix) -> Matrix {
+    matmul(&matmul(l, g), r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matvec;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn kron_shape_and_values() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0]]);
+        let b = Matrix::from_rows(&[vec![0.0, 3.0], vec![4.0, 0.0]]);
+        let k = kron(&a, &b);
+        assert_eq!(k.shape(), (2, 4));
+        assert_eq!(k[(0, 1)], 3.0);
+        assert_eq!(k[(1, 0)], 4.0);
+        assert_eq!(k[(0, 3)], 6.0);
+        assert_eq!(k[(1, 2)], 8.0);
+    }
+
+    #[test]
+    fn kron_mixed_product_property() {
+        // (A⊗B)(A'⊗B') = (AA')⊗(BB')  — Lemma 15.1.
+        let mut rng = Pcg64::new(50);
+        let a = Matrix::randn(2, 3, &mut rng);
+        let a2 = Matrix::randn(3, 2, &mut rng);
+        let b = Matrix::randn(2, 2, &mut rng);
+        let b2 = Matrix::randn(2, 2, &mut rng);
+        let lhs = matmul(&kron(&a, &b), &kron(&a2, &b2));
+        let rhs = kron(&matmul(&a, &a2), &matmul(&b, &b2));
+        assert!(lhs.max_diff(&rhs) < 1e-10);
+    }
+
+    #[test]
+    fn vec_identity_lemma15_7() {
+        // (L ⊗ Rᵀ) vec(G) == vec(L G R) for row-major vec.
+        let mut rng = Pcg64::new(51);
+        let l = Matrix::randn(3, 3, &mut rng);
+        let r = Matrix::randn(4, 4, &mut rng);
+        let g = Matrix::randn(3, 4, &mut rng);
+        let big = kron(&l, &r.t());
+        let lhs = matvec(&big, &vec_rm(&g));
+        let rhs = vec_rm(&kron_apply(&l, &g, &r));
+        for (x, y) in lhs.iter().zip(&rhs) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn kron_trace_multiplicative() {
+        // tr(A⊗B) = tr(A)·tr(B).
+        let mut rng = Pcg64::new(52);
+        let a = Matrix::randn(3, 3, &mut rng);
+        let b = Matrix::randn(2, 2, &mut rng);
+        let k = kron(&a, &b);
+        assert!((k.trace() - a.trace() * b.trace()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn unvec_roundtrip() {
+        let mut rng = Pcg64::new(53);
+        let g = Matrix::randn(5, 7, &mut rng);
+        assert_eq!(unvec_rm(&vec_rm(&g), 5, 7), g);
+    }
+}

@@ -1,0 +1,23 @@
+//! Dense linear-algebra substrate (system S1 in DESIGN.md).
+//!
+//! Everything the optimizer family needs, built from scratch: a row-major
+//! [`Matrix`], blocked/threaded matmul kernels ([`ops`]), a symmetric
+//! eigensolver ([`eigh`] — tridiagonalization + implicit QL, with a Jacobi
+//! cross-check), reduced QR, thin SVD, matrix roots, and Kronecker
+//! utilities. The PJRT boundary cannot carry LAPACK custom calls, so this
+//! module is the numerical backbone of the whole L3 layer.
+
+pub mod eigh;
+pub mod kron;
+pub mod matrix;
+pub mod ops;
+pub mod qr;
+pub mod roots;
+pub mod svd;
+
+pub use eigh::{eigh, eigh_jacobi, Eigh};
+pub use matrix::Matrix;
+pub use ops::{a_at, a_bt, at_a, at_b, dot, matmul, matvec, matvec_t, norm2, outer};
+pub use qr::{qr, random_orthonormal};
+pub use roots::{inv_pth_root, pinv_sqrt, pth_root};
+pub use svd::{low_rank_approx, svd, Svd};

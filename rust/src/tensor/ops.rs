@@ -1,0 +1,319 @@
+//! Dense kernels: matmul (blocked, multithreaded), Gram products, matvec.
+//!
+//! These are the L3 hot paths of the optimizer family — an S-Shampoo step
+//! is dominated by `at_a` / `a_at` (covariance statistics) and three-way
+//! products (preconditioner application). The kernels use i-k-j loop order
+//! over row-major storage (unit-stride inner loops the compiler can
+//! auto-vectorize) and split work across threads by output row blocks.
+
+use super::matrix::Matrix;
+
+/// Number of worker threads for the dense kernels. Resolution order:
+/// `SKETCHY_THREADS` env var, then available parallelism, capped at 16.
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("SKETCHY_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+/// Threshold (in multiply-adds) below which matmul stays single-threaded.
+const PAR_FLOP_THRESHOLD: usize = 1 << 20;
+
+/// C = A · B.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch {:?} x {:?}", a.shape(), b.shape());
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A · B written into an existing buffer (C is overwritten).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    assert_eq!(b.rows(), k);
+    assert_eq!(c.shape(), (m, n));
+    c.as_mut_slice().fill(0.0);
+    let flops = m * n * k;
+    let threads = num_threads();
+    if flops < PAR_FLOP_THRESHOLD || threads == 1 || m < 2 {
+        matmul_rows(a, b, c.as_mut_slice(), 0, m);
+        return;
+    }
+    // Partition output rows across threads.
+    let chunk = m.div_ceil(threads);
+    let n_cols = n;
+    let c_data = c.as_mut_slice();
+    std::thread::scope(|scope| {
+        let mut rest = c_data;
+        let mut row0 = 0;
+        while row0 < m {
+            let rows_here = chunk.min(m - row0);
+            let (head, tail) = rest.split_at_mut(rows_here * n_cols);
+            rest = tail;
+            let r0 = row0;
+            scope.spawn(move || {
+                matmul_rows_offset(a, b, head, r0, r0 + rows_here);
+            });
+            row0 += rows_here;
+        }
+    });
+}
+
+/// Compute rows [r0, r1) of A·B into `out` (out is the full C buffer).
+fn matmul_rows(a: &Matrix, b: &Matrix, out: &mut [f64], r0: usize, r1: usize) {
+    let n = b.cols();
+    let sub = &mut out[r0 * n..r1 * n];
+    matmul_rows_offset(a, b, sub, r0, r1);
+}
+
+/// Compute rows [r0, r1) of A·B into `out`, where out[0..] corresponds to
+/// row r0 of C. i-k-j order: for each output row, accumulate scaled rows
+/// of B — unit stride everywhere.
+fn matmul_rows_offset(a: &Matrix, b: &Matrix, out: &mut [f64], r0: usize, r1: usize) {
+    let k = a.cols();
+    let n = b.cols();
+    for i in r0..r1 {
+        let arow = a.row(i);
+        let crow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+        for p in 0..k {
+            let aip = arow[p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = b.row(p);
+            // Unit-stride AXPY the compiler vectorizes.
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+}
+
+/// C = Aᵀ · B without materializing Aᵀ.
+pub fn at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "at_b shape mismatch");
+    let (k, m) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    // (AᵀB)[i][j] = Σ_p A[p][i] B[p][j]; loop p outermost, rows of A and B
+    // both unit stride.
+    let c_data = c.as_mut_slice();
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..m {
+            let api = arow[i];
+            if api == 0.0 {
+                continue;
+            }
+            let crow = &mut c_data[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += api * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A · Bᵀ without materializing Bᵀ.
+pub fn a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "a_bt shape mismatch");
+    let (m, k) = a.shape();
+    let n = b.rows();
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        #[allow(clippy::needless_range_loop)]
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut s = 0.0;
+            for p in 0..k {
+                s += arow[p] * brow[p];
+            }
+            crow[j] = s;
+        }
+    }
+    c
+}
+
+/// Gram matrix AᵀA (symmetric; only upper triangle computed, mirrored).
+pub fn at_a(a: &Matrix) -> Matrix {
+    let (k, m) = a.shape();
+    let mut c = Matrix::zeros(m, m);
+    let c_data = c.as_mut_slice();
+    for p in 0..k {
+        let row = a.row(p);
+        for i in 0..m {
+            let v = row[i];
+            if v == 0.0 {
+                continue;
+            }
+            let crow = &mut c_data[i * m..(i + 1) * m];
+            for j in i..m {
+                crow[j] += v * row[j];
+            }
+        }
+    }
+    // Mirror upper to lower.
+    for i in 0..m {
+        for j in (i + 1)..m {
+            c_data[j * m + i] = c_data[i * m + j];
+        }
+    }
+    c
+}
+
+/// Outer Gram matrix AAᵀ.
+pub fn a_at(a: &Matrix) -> Matrix {
+    let (m, _) = a.shape();
+    let mut c = Matrix::zeros(m, m);
+    for i in 0..m {
+        let ri = a.row(i);
+        for j in i..m {
+            let rj = a.row(j);
+            let mut s = 0.0;
+            for p in 0..ri.len() {
+                s += ri[p] * rj[p];
+            }
+            c[(i, j)] = s;
+            c[(j, i)] = s;
+        }
+    }
+    c
+}
+
+/// y = A · x.
+pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// y = Aᵀ · x.
+pub fn matvec_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0; a.cols()];
+    for (p, &xp) in x.iter().enumerate() {
+        if xp == 0.0 {
+            continue;
+        }
+        let row = a.row(p);
+        for j in 0..y.len() {
+            y[j] += xp * row[j];
+        }
+    }
+    y
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Outer product u vᵀ.
+pub fn outer(u: &[f64], v: &[f64]) -> Matrix {
+    let mut m = Matrix::zeros(u.len(), v.len());
+    for (i, &ui) in u.iter().enumerate() {
+        let row = m.row_mut(i);
+        for (j, &vj) in v.iter().enumerate() {
+            row[j] = ui * vj;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for p in 0..a.cols() {
+                    s += a[(i, p)] * b[(p, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::new(2);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 9, 23), (64, 64, 64)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.max_diff(&naive_matmul(&a, &b)) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matmul_parallel_path_matches() {
+        let mut rng = Pcg64::new(3);
+        // Big enough to cross PAR_FLOP_THRESHOLD.
+        let a = Matrix::randn(160, 160, &mut rng);
+        let b = Matrix::randn(160, 160, &mut rng);
+        assert!(matmul(&a, &b).max_diff(&naive_matmul(&a, &b)) < 1e-9);
+    }
+
+    #[test]
+    fn transposed_variants() {
+        let mut rng = Pcg64::new(4);
+        let a = Matrix::randn(13, 7, &mut rng);
+        let b = Matrix::randn(13, 5, &mut rng);
+        assert!(at_b(&a, &b).max_diff(&matmul(&a.t(), &b)) < 1e-12);
+        let b2 = Matrix::randn(9, 7, &mut rng);
+        assert!(a_bt(&a, &b2).max_diff(&matmul(&a, &b2.t())) < 1e-12);
+        assert!(at_a(&a).max_diff(&matmul(&a.t(), &a)) < 1e-12);
+        assert!(a_at(&a).max_diff(&matmul(&a, &a.t())) < 1e-12);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Pcg64::new(5);
+        let a = Matrix::randn(20, 8, &mut rng);
+        let g = at_a(&a);
+        assert!(g.is_symmetric(1e-12));
+        for i in 0..8 {
+            assert!(g[(i, i)] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn matvec_variants() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(matvec(&a, &[1.0, 1.0]), vec![3.0, 7.0, 11.0]);
+        assert_eq!(matvec_t(&a, &[1.0, 1.0, 1.0]), vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn outer_product() {
+        let m = outer(&[1.0, 2.0], &[3.0, 4.0, 5.0]);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m[(1, 2)], 10.0);
+    }
+}

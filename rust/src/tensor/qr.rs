@@ -1,0 +1,150 @@
+//! Reduced QR factorization (modified Gram–Schmidt with reorthogonalization).
+//!
+//! Used by the exact low-rank AdaGrad recovery discussed in §3.3 of the
+//! paper ("tracking the column space of observed gradients ... with a
+//! reduced QR decomposition, rank-1-updated every step") and by tests
+//! needing random orthonormal frames.
+
+use super::matrix::Matrix;
+use super::ops::{dot, norm2};
+
+/// Reduced QR: `a (m×n, m ≥ n)` = `q (m×n, orthonormal cols)` · `r (n×n,
+/// upper triangular)`. Columns of `a` that are (numerically) dependent
+/// yield zero columns in `q` and zero rows in `r`.
+pub struct Qr {
+    pub q: Matrix,
+    pub r: Matrix,
+}
+
+/// Modified Gram–Schmidt with one reorthogonalization pass.
+pub fn qr(a: &Matrix) -> Qr {
+    let (m, n) = a.shape();
+    let mut q = a.clone();
+    let mut r = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut v = q.col(j);
+        // Two MGS passes for numerical orthogonality.
+        for _pass in 0..2 {
+            for i in 0..j {
+                let qi = q.col(i);
+                let proj = dot(&qi, &v);
+                r[(i, j)] += proj;
+                for k in 0..m {
+                    v[k] -= proj * qi[k];
+                }
+            }
+        }
+        let nv = norm2(&v);
+        r[(j, j)] = nv;
+        if nv > 1e-12 {
+            for x in &mut v {
+                *x /= nv;
+            }
+        } else {
+            // Dependent column: zero it out.
+            r[(j, j)] = 0.0;
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        q.set_col(j, &v);
+    }
+    Qr { q, r }
+}
+
+/// Random m×n matrix with orthonormal columns (QR of a Gaussian).
+pub fn random_orthonormal(m: usize, n: usize, rng: &mut crate::util::rng::Pcg64) -> Matrix {
+    assert!(m >= n);
+    let g = Matrix::randn(m, n, rng);
+    qr(&g).q
+}
+
+/// Rank-1 update of an orthonormal basis: extend `q` (m×k) with the
+/// component of `v` orthogonal to span(q), if significant. Returns true if
+/// a column was appended. This is the O(dk) column-space tracker from
+/// §3.3 of the paper.
+pub fn extend_basis(q: &mut Vec<Vec<f64>>, v: &[f64], tol: f64) -> bool {
+    let mut w = v.to_vec();
+    for _pass in 0..2 {
+        for qi in q.iter() {
+            let proj = dot(qi, &w);
+            for k in 0..w.len() {
+                w[k] -= proj * qi[k];
+            }
+        }
+    }
+    let nv = norm2(&w);
+    if nv > tol * (1.0 + norm2(v)) {
+        for x in &mut w {
+            *x /= nv;
+        }
+        q.push(w);
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{at_a, matmul};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::new(20);
+        for &(m, n) in &[(5, 3), (10, 10), (40, 7)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            let f = qr(&a);
+            assert!(matmul(&f.q, &f.r).max_diff(&a) < 1e-10);
+            assert!(at_a(&f.q).max_diff(&Matrix::eye(n)) < 1e-10);
+            // Upper-triangular r.
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(f.r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qr_rank_deficient() {
+        let mut rng = Pcg64::new(21);
+        let b = Matrix::randn(8, 2, &mut rng);
+        let c = Matrix::randn(2, 4, &mut rng);
+        let a = matmul(&b, &c); // rank 2, 4 columns
+        let f = qr(&a);
+        assert!(matmul(&f.q, &f.r).max_diff(&a) < 1e-9);
+        let nonzero_cols = (0..4).filter(|&j| f.r[(j, j)].abs() > 1e-9).count();
+        assert_eq!(nonzero_cols, 2);
+    }
+
+    #[test]
+    fn random_orthonormal_is_orthonormal() {
+        let mut rng = Pcg64::new(22);
+        let q = random_orthonormal(16, 5, &mut rng);
+        assert!(at_a(&q).max_diff(&Matrix::eye(5)) < 1e-10);
+    }
+
+    #[test]
+    fn extend_basis_tracks_column_space() {
+        let mut rng = Pcg64::new(23);
+        let mut basis: Vec<Vec<f64>> = vec![];
+        let d = 12;
+        let dirs = random_orthonormal(d, 3, &mut rng);
+        // Stream vectors from a 3-dim subspace; basis must stop at 3.
+        for t in 0..50 {
+            let mut v = vec![0.0; d];
+            for j in 0..3 {
+                let c = rng.gaussian();
+                for i in 0..d {
+                    v[i] += c * dirs[(i, j)];
+                }
+            }
+            extend_basis(&mut basis, &v, 1e-8);
+            if t >= 3 {
+                assert!(basis.len() <= 3);
+            }
+        }
+        assert_eq!(basis.len(), 3);
+    }
+}

@@ -1,0 +1,151 @@
+//! Matrix root computations for preconditioners.
+//!
+//! Shampoo needs `L^{-1/4}` and `R^{-1/4}`; AdaGrad variants need
+//! `G^{-1/2}`. We compute roots spectrally through [`eigh`] (the paper's
+//! `eigh=true` configuration, App. E: "we believe it has better numerical
+//! stability" than coupled Newton iterations) with an ε-style ridge on the
+//! spectrum, plus a coupled-Newton implementation kept for an ablation
+//! bench of that very design choice.
+
+use super::eigh::eigh;
+use super::matrix::Matrix;
+use super::ops::matmul;
+
+/// `a^{-1/p}` for symmetric PSD `a` via eigendecomposition. Eigenvalues
+/// are floored at `ridge` before the root (the Shampoo epsilon).
+pub fn inv_pth_root(a: &Matrix, p: f64, ridge: f64) -> Matrix {
+    let e = eigh(a);
+    e.apply_spectral(|w| (w.max(0.0) + ridge).powf(-1.0 / p))
+}
+
+/// `a^{1/p}` for symmetric PSD `a`.
+pub fn pth_root(a: &Matrix, p: f64) -> Matrix {
+    let e = eigh(a);
+    e.apply_spectral(|w| w.max(0.0).powf(1.0 / p))
+}
+
+/// Moore–Penrose pseudo-inverse square root `(a^{1/2})^+` with tolerance-
+/// based null-space handling (Alg. 2 uses the pseudoinverse when the
+/// preconditioner is singular).
+pub fn pinv_sqrt(a: &Matrix, tol: f64) -> Matrix {
+    let e = eigh(a);
+    let wmax = e.w.first().copied().unwrap_or(0.0).max(0.0);
+    let cut = tol * (1.0 + wmax);
+    e.apply_spectral(|w| if w > cut { 1.0 / w.sqrt() } else { 0.0 })
+}
+
+/// Coupled-Newton iteration for `a^{-1/p}` (integer p ≥ 1), the
+/// alternative Shampoo uses when eigh is disabled. Kept for the ablation
+/// bench comparing root computation strategies (DESIGN.md §8).
+///
+/// Iterates `M_{k+1} = ((1+1/p) I - X_k/p) M_k`, `X_{k+1} = ...` in the
+/// standard coupled form with a spectral-norm prescaling.
+pub fn inv_pth_root_newton(a: &Matrix, p: u32, ridge: f64, iters: usize) -> Matrix {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut a_r = a.clone();
+    a_r.add_diag(ridge);
+    // Prescale so the spectrum is within (0, 1]: z = 1/||A||_F is a safe
+    // (if loose) bound on 1/λmax.
+    let z = 1.0 / a_r.fro_norm().max(1e-30);
+    let mut x = a_r.scale(z); // X_0 = z·A, spectrum in (0,1]
+    let mut m = Matrix::eye(n); // M_0 = I
+    let pf = p as f64;
+    for _ in 0..iters {
+        // T = ((p+1) I - X) / p
+        let mut t = x.scale(-1.0 / pf);
+        t.add_diag((pf + 1.0) / pf);
+        m = matmul(&m, &t);
+        // X = T^p · X
+        let mut tp = t.clone();
+        for _ in 1..p {
+            tp = matmul(&tp, &t);
+        }
+        x = matmul(&tp, &x);
+        // Converged when X ≈ I.
+        let mut dev: f64 = 0.0;
+        for i in 0..n {
+            dev = dev.max((x[(i, i)] - 1.0).abs());
+        }
+        if dev < 1e-12 {
+            break;
+        }
+    }
+    // A^{-1/p} = z^{1/p} · M.
+    m.scale(z.powf(1.0 / pf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::at_a;
+    use crate::util::rng::Pcg64;
+
+    fn random_pd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let g = Matrix::randn(2 * n, n, &mut rng);
+        let mut a = at_a(&g);
+        a.add_diag(0.1);
+        a
+    }
+
+    #[test]
+    fn inv_sqrt_inverts() {
+        let a = random_pd(8, 40);
+        let r = inv_pth_root(&a, 2.0, 0.0);
+        // r·a·r == I
+        let prod = matmul(&matmul(&r, &a), &r);
+        assert!(prod.max_diff(&Matrix::eye(8)) < 1e-8);
+    }
+
+    #[test]
+    fn inv_fourth_root_squares_to_inv_sqrt() {
+        let a = random_pd(6, 41);
+        let r4 = inv_pth_root(&a, 4.0, 0.0);
+        let r2 = inv_pth_root(&a, 2.0, 0.0);
+        assert!(matmul(&r4, &r4).max_diff(&r2) < 1e-8);
+    }
+
+    #[test]
+    fn pth_root_composes() {
+        let a = random_pd(5, 42);
+        let s = pth_root(&a, 2.0);
+        assert!(matmul(&s, &s).max_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn pinv_sqrt_handles_singular() {
+        let mut rng = Pcg64::new(43);
+        let g = Matrix::randn(3, 7, &mut rng);
+        let a = at_a(&g); // rank 3 in dim 7
+        let r = pinv_sqrt(&a, 1e-10);
+        // r² should be a^+ : a · r² · a == a.
+        let r2 = matmul(&r, &r);
+        let back = matmul(&matmul(&a, &r2), &a);
+        assert!(back.max_diff(&a) < 1e-6 * (1.0 + a.max_abs()));
+    }
+
+    #[test]
+    fn newton_matches_eigh_root() {
+        for p in [1u32, 2, 4] {
+            let a = random_pd(6, 44 + p as u64);
+            let newton = inv_pth_root_newton(&a, p, 1e-6, 200);
+            let spectral = inv_pth_root(&a, p as f64, 1e-6);
+            assert!(
+                newton.max_diff(&spectral) < 1e-5 * (1.0 + spectral.max_abs()),
+                "p={p}: diff {}",
+                newton.max_diff(&spectral)
+            );
+        }
+    }
+
+    #[test]
+    fn ridge_bounds_condition() {
+        // Singular matrix + ridge should still give finite root.
+        let a = Matrix::zeros(4, 4);
+        let r = inv_pth_root(&a, 2.0, 1e-4);
+        for i in 0..4 {
+            assert!((r[(i, i)] - 1e2).abs() < 1e-6); // (1e-4)^{-1/2}
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Thin SVD via the Gram-matrix eigendecomposition.
+//!
+//! The FD update (paper §6) works on tall-thin factors `A ∈ R^{d×ℓ}` with
+//! ℓ ≪ d, where the right singular structure is all we need: eigh(AᵀA)
+//! gives V and Σ², and U = A V Σ⁻¹ for the non-null part. This squares the
+//! condition number, which is acceptable here because FD consumes only the
+//! *leading* singular values (and deflates by σ_ℓ²) — the tail inaccuracy
+//! FD is already robust to. Tests pin accuracy against reconstruction.
+
+use super::eigh::eigh;
+use super::matrix::Matrix;
+use super::ops::{at_a, matmul};
+
+/// Thin SVD result: `a = u · diag(s) · vᵀ` with s descending,
+/// `u: m×k`, `v: n×k`, `k = min(m, n)` (columns beyond the numerical rank
+/// are zero in `u`).
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f64>,
+    pub v: Matrix,
+}
+
+/// Thin SVD of `a` (any shape) via eigh of the smaller Gram matrix.
+pub fn svd(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m >= n {
+        // AᵀA = V Σ² Vᵀ.
+        let g = at_a(a);
+        let e = eigh(&g);
+        let k = n;
+        let mut s = Vec::with_capacity(k);
+        for &w in &e.w {
+            s.push(w.max(0.0).sqrt());
+        }
+        // U = A V Σ⁻¹ (zero column where σ ~ 0).
+        let av = matmul(a, &e.q);
+        let mut u = Matrix::zeros(m, k);
+        for j in 0..k {
+            if s[j] > 1e-12 {
+                for i in 0..m {
+                    u[(i, j)] = av[(i, j)] / s[j];
+                }
+            }
+        }
+        Svd { u, s, v: e.q }
+    } else {
+        // Factor the transpose and swap.
+        let f = svd(&a.t());
+        Svd { u: f.v, s: f.s, v: f.u }
+    }
+}
+
+/// Best rank-k approximation of `a` in Frobenius norm (Eckart–Young).
+pub fn low_rank_approx(a: &Matrix, k: usize) -> Matrix {
+    let f = svd(a);
+    let k = k.min(f.s.len());
+    let (m, n) = a.shape();
+    let mut out = Matrix::zeros(m, n);
+    for r in 0..k {
+        let sr = f.s[r];
+        if sr <= 0.0 {
+            break;
+        }
+        for i in 0..m {
+            let uis = f.u[(i, r)] * sr;
+            let row = out.row_mut(i);
+            for j in 0..n {
+                row[j] += uis * f.v[(j, r)];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn check_svd(a: &Matrix, tol: f64) {
+        let f = svd(a);
+        let k = f.s.len();
+        assert_eq!(k, a.rows().min(a.cols()));
+        // Descending, nonnegative.
+        for i in 0..k {
+            assert!(f.s[i] >= -1e-12);
+            if i > 0 {
+                assert!(f.s[i - 1] >= f.s[i] - 1e-10);
+            }
+        }
+        // Reconstruction.
+        let mut us = f.u.clone();
+        for j in 0..k {
+            for i in 0..a.rows() {
+                us[(i, j)] *= f.s[j];
+            }
+        }
+        let recon = super::super::ops::a_bt(&us, &f.v);
+        assert!(
+            recon.max_diff(a) < tol * (1.0 + a.max_abs()),
+            "svd recon err {}",
+            recon.max_diff(a)
+        );
+    }
+
+    #[test]
+    fn svd_tall_square_wide() {
+        let mut rng = Pcg64::new(30);
+        for &(m, n) in &[(12, 4), (6, 6), (4, 12)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            check_svd(&a, 1e-7);
+        }
+    }
+
+    #[test]
+    fn svd_rank_deficient() {
+        let mut rng = Pcg64::new(31);
+        let b = Matrix::randn(10, 2, &mut rng);
+        let c = Matrix::randn(2, 7, &mut rng);
+        let a = matmul(&b, &c);
+        let f = svd(&a);
+        for &s in &f.s[2..] {
+            assert!(s < 1e-6, "rank-2 matrix had σ tail {:?}", f.s);
+        }
+        check_svd(&a, 1e-6);
+    }
+
+    #[test]
+    fn eckart_young() {
+        let mut rng = Pcg64::new(32);
+        let a = Matrix::randn(9, 9, &mut rng);
+        let f = svd(&a);
+        for k in [1usize, 3, 6] {
+            let ak = low_rank_approx(&a, k);
+            let err = a.sub(&ak).fro_norm();
+            let expected: f64 = f.s[k..].iter().map(|s| s * s).sum::<f64>().sqrt();
+            assert!(
+                (err - expected).abs() < 1e-6 * (1.0 + expected),
+                "k={k}: err={err} expected={expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn singular_values_match_known() {
+        // diag(3, 2) embedded in 3x2.
+        let a = Matrix::from_rows(&[vec![3.0, 0.0], vec![0.0, 2.0], vec![0.0, 0.0]]);
+        let f = svd(&a);
+        assert!((f.s[0] - 3.0).abs() < 1e-10);
+        assert!((f.s[1] - 2.0).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,125 @@
+//! Generic [`GradientWorker`] over a PJRT gradient artifact.
+//!
+//! The leader converts the (f64) parameters to f32 buffers once per step;
+//! each worker thread builds its own literals (xla literals are not Send)
+//! from the shared buffers plus its own microbatch inputs, executes the
+//! artifact, and parses (loss, grads).
+
+use crate::coordinator::GradientWorker;
+use crate::runtime::literal::{lit_f32, lit_i32, lit_scalar, lit_to_matrix};
+use crate::runtime::Runtime;
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// A microbatch input buffer (matches the artifact's non-parameter
+/// inputs, in manifest order).
+#[derive(Clone, Debug)]
+pub enum InputBuf {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl InputBuf {
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            InputBuf::F32(data, shape) => lit_f32(data, shape),
+            InputBuf::I32(data, shape) => lit_i32(data, shape),
+        }
+    }
+}
+
+/// One-step gradient worker: shared parameter buffers + per-worker
+/// microbatch inputs.
+pub struct ArtifactGradWorker<'a> {
+    pub runtime: &'a Runtime,
+    pub artifact: &'a str,
+    /// Parameter buffers (f32) + shapes, shared by all workers.
+    pub param_bufs: &'a [Vec<f32>],
+    pub shapes: &'a [(usize, usize)],
+    /// Per-worker microbatch inputs: `batches[worker]` lists the
+    /// non-parameter inputs in manifest order.
+    pub batches: &'a [Vec<InputBuf>],
+}
+
+impl GradientWorker for ArtifactGradWorker<'_> {
+    fn compute(&self, _step: usize, worker: usize) -> Result<(f64, Vec<Matrix>)> {
+        let mut inputs = Vec::with_capacity(self.param_bufs.len() + 2);
+        for (buf, &(r, c)) in self.param_bufs.iter().zip(self.shapes) {
+            inputs.push(lit_f32(buf, &[r, c])?);
+        }
+        for b in &self.batches[worker] {
+            inputs.push(b.to_literal()?);
+        }
+        let outs = self.runtime.execute(self.artifact, &inputs)?;
+        let loss = lit_scalar(&outs[0])?;
+        let mut grads = Vec::with_capacity(self.shapes.len());
+        for (i, &(r, c)) in self.shapes.iter().enumerate() {
+            grads.push(lit_to_matrix(&outs[1 + i], r, c)?);
+        }
+        Ok((loss, grads))
+    }
+}
+
+/// Convert f64 parameter matrices to flat f32 buffers (leader-side, once
+/// per step).
+pub fn params_to_f32(params: &[Matrix]) -> Vec<Vec<f32>> {
+    params
+        .iter()
+        .map(|p| p.as_slice().iter().map(|&x| x as f32).collect())
+        .collect()
+}
+
+/// Initialize parameters from manifest input specs: `*_scale` vectors to
+/// ones, everything else scaled Gaussian (matches the python init scheme
+/// in spirit; exact values differ, which is fine — Rust owns training).
+pub fn init_params_from_specs(
+    specs: &[crate::runtime::IoSpec],
+    n_params: usize,
+    seed: u64,
+) -> (Vec<String>, Vec<(usize, usize)>, Vec<Matrix>) {
+    let mut rng = crate::util::rng::Pcg64::new(seed);
+    let mut names = vec![];
+    let mut shapes = vec![];
+    let mut params = vec![];
+    for spec in specs.iter().take(n_params) {
+        assert_eq!(spec.shape.len(), 2, "parameter {} is not 2-D", spec.name);
+        let (r, c) = (spec.shape[0], spec.shape[1]);
+        let m = if spec.name.ends_with("_scale") {
+            Matrix::from_fn(r, c, |_, _| 1.0)
+        } else {
+            let scale = 1.0 / (r as f64).sqrt();
+            Matrix::from_fn(r, c, |_, _| scale * rng.gaussian())
+        };
+        names.push(spec.name.clone());
+        shapes.push((r, c));
+        params.push(m);
+    }
+    (names, shapes, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::IoSpec;
+
+    #[test]
+    fn init_respects_scale_convention() {
+        let specs = vec![
+            IoSpec { name: "w".into(), shape: vec![4, 4], dtype: "f32".into() },
+            IoSpec { name: "ln_scale".into(), shape: vec![4, 1], dtype: "f32".into() },
+            IoSpec { name: "tokens".into(), shape: vec![2, 3], dtype: "i32".into() },
+        ];
+        let (names, shapes, params) = init_params_from_specs(&specs, 2, 1);
+        assert_eq!(names, vec!["w", "ln_scale"]);
+        assert_eq!(shapes, vec![(4, 4), (4, 1)]);
+        assert!(params[1].as_slice().iter().all(|&v| v == 1.0));
+        assert!(params[0].fro_norm() > 0.0);
+    }
+
+    #[test]
+    fn params_to_f32_narrows() {
+        let p = vec![Matrix::from_rows(&[vec![1.5, -2.5]])];
+        let bufs = params_to_f32(&p);
+        assert_eq!(bufs[0], vec![1.5f32, -2.5]);
+    }
+}

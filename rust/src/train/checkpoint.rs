@@ -1,0 +1,102 @@
+//! Checkpointing: a simple self-describing binary format for parameter
+//! lists plus the step counter (serde is not vendored).
+//!
+//! Layout: magic "SKCH" | u32 version | u64 step | u32 tensor count |
+//! per tensor: u32 rows | u32 cols | rows*cols f64 little-endian.
+
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"SKCH";
+const VERSION: u32 = 1;
+
+/// Save parameters + step to `path`.
+pub fn save_checkpoint(path: &str, step: usize, params: &[Matrix]) -> Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(step as u64).to_le_bytes())?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for p in params {
+        f.write_all(&(p.rows() as u32).to_le_bytes())?;
+        f.write_all(&(p.cols() as u32).to_le_bytes())?;
+        for &v in p.as_slice() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a checkpoint; returns (step, params).
+pub fn load_checkpoint(path: &str) -> Result<(usize, Vec<Matrix>)> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a sketchy checkpoint: bad magic");
+    }
+    let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
+    f.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    f.read_exact(&mut u64buf)?;
+    let step = u64::from_le_bytes(u64buf) as usize;
+    f.read_exact(&mut u32buf)?;
+    let count = u32::from_le_bytes(u32buf) as usize;
+    let mut params = Vec::with_capacity(count);
+    for _ in 0..count {
+        f.read_exact(&mut u32buf)?;
+        let rows = u32::from_le_bytes(u32buf) as usize;
+        f.read_exact(&mut u32buf)?;
+        let cols = u32::from_le_bytes(u32buf) as usize;
+        let mut data = vec![0.0f64; rows * cols];
+        let mut vbuf = [0u8; 8];
+        for v in &mut data {
+            f.read_exact(&mut vbuf)?;
+            *v = f64::from_le_bytes(vbuf);
+        }
+        params.push(Matrix::from_vec(rows, cols, data));
+    }
+    Ok((step, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg64::new(500);
+        let params = vec![
+            Matrix::randn(3, 4, &mut rng),
+            Matrix::randn(1, 1, &mut rng),
+            Matrix::zeros(2, 5),
+        ];
+        let path = std::env::temp_dir().join("sketchy_ckpt_test.bin");
+        let path = path.to_str().unwrap();
+        save_checkpoint(path, 42, &params).unwrap();
+        let (step, loaded) = load_checkpoint(path).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(loaded.len(), 3);
+        for (a, b) in params.iter().zip(&loaded) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("sketchy_ckpt_garbage.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load_checkpoint(path.to_str().unwrap()).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

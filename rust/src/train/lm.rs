@@ -1,0 +1,141 @@
+//! Transformer-LM trainer (E10, the end-to-end driver): PJRT gradient
+//! artifact + Markov corpus + Rust optimizer + data-parallel coordinator.
+
+use super::artifact_worker::{params_to_f32, init_params_from_specs, ArtifactGradWorker, InputBuf};
+use super::metrics::CurveLog;
+use crate::coordinator::data_parallel_step;
+use crate::data::MarkovCorpus;
+use crate::optim::Optimizer;
+use crate::runtime::literal::{lit_f32, lit_i32, lit_scalar};
+use crate::runtime::Runtime;
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Trainer state for one LM preset.
+pub struct LmTrainer {
+    pub runtime: Arc<Runtime>,
+    pub grad_artifact: String,
+    pub eval_artifact: String,
+    pub names: Vec<String>,
+    pub shapes: Vec<(usize, usize)>,
+    pub params: Vec<Matrix>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    step: usize,
+}
+
+impl LmTrainer {
+    /// Build from the manifest; `preset` must match an exported artifact
+    /// pair (`lm_<preset>_grad` / `lm_<preset>_eval`).
+    pub fn new(runtime: Arc<Runtime>, preset: &str, seed: u64) -> Result<Self> {
+        let grad_artifact = format!("lm_{preset}_grad");
+        let eval_artifact = format!("lm_{preset}_eval");
+        let spec = runtime
+            .spec(&grad_artifact)
+            .ok_or_else(|| anyhow!("artifact {grad_artifact} not in manifest"))?
+            .clone();
+        let (names, shapes, params) =
+            init_params_from_specs(&spec.inputs, spec.n_params, seed);
+        let tok = &spec.inputs[spec.n_params];
+        anyhow::ensure!(tok.name == "tokens" && tok.shape.len() == 2);
+        let batch = tok.shape[0];
+        let seq = tok.shape[1] - 1;
+        let vocab = shapes[0].0; // embed rows
+        Ok(LmTrainer {
+            runtime,
+            grad_artifact,
+            eval_artifact,
+            names,
+            shapes,
+            params,
+            batch,
+            seq,
+            vocab,
+            step: 0,
+        })
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.shapes.iter().map(|&(r, c)| r * c).sum()
+    }
+
+    fn sample_tokens(&self, corpus: &mut MarkovCorpus) -> InputBuf {
+        let rows = corpus.batch(self.batch, self.seq);
+        let flat: Vec<i32> = rows
+            .into_iter()
+            .flatten()
+            .map(|t| (t as usize % self.vocab) as i32)
+            .collect();
+        InputBuf::I32(flat, vec![self.batch, self.seq + 1])
+    }
+
+    /// One data-parallel training step; returns (mean loss, mean grads —
+    /// post-allreduce, pre-optimizer — for spectral hooks).
+    pub fn step(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        corpus: &mut MarkovCorpus,
+        workers: usize,
+    ) -> Result<(f64, Vec<Matrix>)> {
+        let param_bufs = params_to_f32(&self.params);
+        let batches: Vec<Vec<InputBuf>> = (0..workers)
+            .map(|_| vec![self.sample_tokens(corpus)])
+            .collect();
+        let gw = ArtifactGradWorker {
+            runtime: &self.runtime,
+            artifact: &self.grad_artifact,
+            param_bufs: &param_bufs,
+            shapes: &self.shapes,
+            batches: &batches,
+        };
+        let res = data_parallel_step(&gw, self.step, workers)?;
+        opt.step(&mut self.params, &res.grads);
+        self.step += 1;
+        Ok((res.loss, res.grads))
+    }
+
+    /// Held-out evaluation loss on `n_batches` fresh batches.
+    pub fn eval(&self, corpus: &mut MarkovCorpus, n_batches: usize) -> Result<f64> {
+        let param_bufs = params_to_f32(&self.params);
+        let mut total = 0.0;
+        for _ in 0..n_batches {
+            let mut inputs = Vec::with_capacity(self.params.len() + 1);
+            for (buf, &(r, c)) in param_bufs.iter().zip(&self.shapes) {
+                inputs.push(lit_f32(buf, &[r, c])?);
+            }
+            match self.sample_tokens(corpus) {
+                InputBuf::I32(data, shape) => inputs.push(lit_i32(&data, &shape)?),
+                _ => unreachable!(),
+            }
+            let outs = self.runtime.execute(&self.eval_artifact, &inputs)?;
+            total += lit_scalar(&outs[0])?;
+        }
+        Ok(total / n_batches as f64)
+    }
+
+    /// Full training run: returns the loss curve.
+    pub fn train(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        corpus: &mut MarkovCorpus,
+        steps: usize,
+        workers: usize,
+        schedule: Option<crate::optim::WarmupCosine>,
+        log_every: usize,
+    ) -> Result<CurveLog> {
+        let mut curve = CurveLog::new(&opt.name());
+        for s in 0..steps {
+            if let Some(sch) = schedule {
+                opt.set_lr(sch.at(s));
+            }
+            let (loss, _) = self.step(opt, corpus, workers)?;
+            if s % log_every.max(1) == 0 || s + 1 == steps {
+                curve.push(s, loss);
+            }
+        }
+        Ok(curve)
+    }
+}

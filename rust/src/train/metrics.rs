@@ -1,0 +1,118 @@
+//! Metric curve recording and report generation (EXPERIMENTS.md tables
+//! are produced from these).
+
+use std::fmt::Write as _;
+
+/// A named (step, value) curve.
+#[derive(Clone, Debug, Default)]
+pub struct CurveLog {
+    pub name: String,
+    pub points: Vec<(usize, f64)>,
+}
+
+impl CurveLog {
+    pub fn new(name: &str) -> Self {
+        CurveLog { name: name.to_string(), points: vec![] }
+    }
+
+    pub fn push(&mut self, step: usize, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    /// Mean of the final `k` recorded values (smoothed terminal metric).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        let n = self.points.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let k = k.min(n);
+        self.points[n - k..].iter().map(|&(_, v)| v).sum::<f64>() / k as f64
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,value\n");
+        for &(t, v) in &self.points {
+            let _ = writeln!(s, "{t},{v}");
+        }
+        s
+    }
+}
+
+/// Render several curves as a markdown table sampled at shared steps.
+pub fn curves_to_markdown(curves: &[&CurveLog], sample_every: usize) -> String {
+    let mut s = String::from("| step |");
+    for c in curves {
+        let _ = write!(s, " {} |", c.name);
+    }
+    s.push('\n');
+    s.push_str("|---|");
+    for _ in curves {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    let max_len = curves.iter().map(|c| c.points.len()).max().unwrap_or(0);
+    for i in (0..max_len).step_by(sample_every.max(1)) {
+        if let Some(&(step, _)) = curves[0].points.get(i) {
+            let _ = write!(s, "| {step} |");
+            for c in curves {
+                match c.points.get(i) {
+                    Some(&(_, v)) => {
+                        let _ = write!(s, " {v:.4} |");
+                    }
+                    None => {
+                        let _ = write!(s, " — |");
+                    }
+                }
+            }
+            s.push('\n');
+        }
+    }
+    s
+}
+
+/// Write a string to a file, creating parent directories.
+pub fn write_report(path: &str, content: &str) -> anyhow::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_basics() {
+        let mut c = CurveLog::new("loss");
+        c.push(0, 4.0);
+        c.push(10, 2.0);
+        c.push(20, 1.0);
+        assert_eq!(c.last(), Some(1.0));
+        assert_eq!(c.tail_mean(2), 1.5);
+        assert!(c.to_csv().contains("10,2"));
+    }
+
+    #[test]
+    fn markdown_table() {
+        let mut a = CurveLog::new("adam");
+        let mut b = CurveLog::new("s-shampoo");
+        for i in 0..5 {
+            a.push(i, i as f64);
+            b.push(i, 2.0 * i as f64);
+        }
+        let md = curves_to_markdown(&[&a, &b], 2);
+        assert!(md.contains("| step | adam | s-shampoo |"));
+        assert!(md.contains("| 2 | 2.0000 | 4.0000 |"));
+    }
+
+    #[test]
+    fn empty_tail_mean_is_nan() {
+        assert!(CurveLog::new("x").tail_mean(3).is_nan());
+    }
+}

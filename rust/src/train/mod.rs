@@ -1,0 +1,13 @@
+//! Training loop (system S9): drives the PJRT gradient artifacts with the
+//! Rust optimizer family through the data-parallel coordinator.
+
+pub mod artifact_worker;
+pub mod checkpoint;
+pub mod lm;
+pub mod metrics;
+pub mod proxy_train;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use lm::LmTrainer;
+pub use metrics::CurveLog;
+pub use proxy_train::{ProxyTask, ProxyTrainer};

@@ -1,0 +1,261 @@
+//! Trainers for the three Fig. 2 proxy tasks (E3/E9): image CNN, audio
+//! conformer block, molecular GNN — each driven through its PJRT
+//! artifact with any Rust optimizer.
+
+use super::artifact_worker::{params_to_f32, init_params_from_specs, ArtifactGradWorker, InputBuf};
+use super::metrics::CurveLog;
+use crate::coordinator::data_parallel_step;
+use crate::data::proxy::{AudioProxy, GraphProxy, ImageProxy};
+use crate::optim::Optimizer;
+use crate::runtime::Runtime;
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Which Fig. 2 task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProxyTask {
+    Image,
+    Audio,
+    Graph,
+}
+
+impl ProxyTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProxyTask::Image => "image",
+            ProxyTask::Audio => "audio",
+            ProxyTask::Graph => "graph",
+        }
+    }
+
+    pub fn grad_artifact(&self) -> &'static str {
+        match self {
+            ProxyTask::Image => "cnn_grad",
+            ProxyTask::Audio => "conformer_grad",
+            ProxyTask::Graph => "gnn_grad",
+        }
+    }
+
+    pub fn eval_artifact(&self) -> &'static str {
+        match self {
+            ProxyTask::Image => "cnn_eval",
+            ProxyTask::Audio => "conformer_eval",
+            ProxyTask::Graph => "gnn_eval",
+        }
+    }
+
+    /// The paper's test metric analogue: classification error for
+    /// image/audio (ImageNet error rate / WER stand-ins), mean per-task
+    /// binary error for graph (1 − AP stand-in).
+    pub fn metric_name(&self) -> &'static str {
+        match self {
+            ProxyTask::Image => "error rate",
+            ProxyTask::Audio => "error rate",
+            ProxyTask::Graph => "multi-task error",
+        }
+    }
+}
+
+/// Stateful per-task batch generator (seeded).
+enum Gen {
+    Image(ImageProxy),
+    Audio(AudioProxy),
+    Graph(GraphProxy),
+}
+
+/// Proxy-task trainer.
+pub struct ProxyTrainer {
+    pub runtime: Arc<Runtime>,
+    pub task: ProxyTask,
+    pub names: Vec<String>,
+    pub shapes: Vec<(usize, usize)>,
+    pub params: Vec<Matrix>,
+    batch: usize,
+    gen: Gen,
+    /// Held-out generator for eval (different seed stream).
+    eval_gen: Gen,
+    step: usize,
+}
+
+// Python-side configs mirrored (python/compile/models_proxy.py).
+const IMG: (usize, usize, usize) = (16, 16, 8); // h, w, classes
+const AUD: (usize, usize, usize) = (16, 32, 8); // frames, bins, classes
+const GNN: (usize, usize, usize) = (16, 8, 8); // nodes, feat, tasks
+
+impl ProxyTrainer {
+    pub fn new(runtime: Arc<Runtime>, task: ProxyTask, seed: u64) -> Result<Self> {
+        let spec = runtime
+            .spec(task.grad_artifact())
+            .ok_or_else(|| anyhow!("artifact {} not in manifest", task.grad_artifact()))?
+            .clone();
+        let (names, shapes, params) =
+            init_params_from_specs(&spec.inputs, spec.n_params, seed);
+        let batch = spec.inputs[spec.n_params].shape[0];
+        // Held-out eval shares the *task definition* (class templates /
+        // state bands) but draws an independent sample stream; graph
+        // labels derive from each sampled graph, so a fresh seed suffices.
+        let (gen, eval_gen) = match task {
+            ProxyTask::Image => {
+                let g = ImageProxy::new(IMG.0, IMG.1, IMG.2, seed);
+                let e = g.fork_stream(seed ^ 0xeeee);
+                (Gen::Image(g), Gen::Image(e))
+            }
+            ProxyTask::Audio => {
+                let g = AudioProxy::new(AUD.0, AUD.1, AUD.2, seed);
+                let e = g.fork_stream(seed ^ 0xeeee);
+                (Gen::Audio(g), Gen::Audio(e))
+            }
+            ProxyTask::Graph => (
+                Gen::Graph(GraphProxy::new(GNN.0, GNN.1, GNN.2, seed)),
+                Gen::Graph(GraphProxy::new(GNN.0, GNN.1, GNN.2, seed ^ 0xeeee)),
+            ),
+        };
+        Ok(ProxyTrainer {
+            runtime,
+            task,
+            names,
+            shapes,
+            params,
+            batch,
+            gen,
+            eval_gen,
+            step: 0,
+        })
+    }
+
+    fn sample(gen: &mut Gen, batch: usize) -> (Vec<InputBuf>, Vec<i32>, Vec<f32>) {
+        match gen {
+            Gen::Image(p) => {
+                let b = p.batch(batch);
+                let bufs = vec![
+                    InputBuf::F32(b.features.clone(), vec![batch, b.feature_len]),
+                    InputBuf::I32(b.labels.clone(), vec![batch]),
+                ];
+                (bufs, b.labels, vec![])
+            }
+            Gen::Audio(p) => {
+                let b = p.batch(batch);
+                let bufs = vec![
+                    InputBuf::F32(b.features.clone(), vec![batch, b.feature_len]),
+                    InputBuf::I32(b.labels.clone(), vec![batch]),
+                ];
+                (bufs, b.labels, vec![])
+            }
+            Gen::Graph(p) => {
+                let b = p.batch(batch);
+                let nn = GNN.0;
+                let bufs = vec![
+                    InputBuf::F32(b.adjacency.clone(), vec![batch, nn * nn]),
+                    InputBuf::F32(b.features.clone(), vec![batch, nn * GNN.1]),
+                    InputBuf::F32(b.labels.clone(), vec![batch, GNN.2]),
+                ];
+                (bufs, vec![], b.labels)
+            }
+        }
+    }
+
+    /// One data-parallel step; returns (loss, allreduced grads).
+    pub fn step(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        workers: usize,
+    ) -> Result<(f64, Vec<Matrix>)> {
+        let param_bufs = params_to_f32(&self.params);
+        let batches: Vec<Vec<InputBuf>> = (0..workers)
+            .map(|_| Self::sample(&mut self.gen, self.batch).0)
+            .collect();
+        let gw = ArtifactGradWorker {
+            runtime: &self.runtime,
+            artifact: self.task.grad_artifact(),
+            param_bufs: &param_bufs,
+            shapes: &self.shapes,
+            batches: &batches,
+        };
+        let res = data_parallel_step(&gw, self.step, workers)?;
+        opt.step(&mut self.params, &res.grads);
+        self.step += 1;
+        Ok((res.loss, res.grads))
+    }
+
+    /// Held-out (loss, metric) over `n_batches` eval batches.
+    pub fn eval(&mut self, n_batches: usize) -> Result<(f64, f64)> {
+        let param_bufs = params_to_f32(&self.params);
+        let mut loss_total = 0.0;
+        let mut err_total = 0.0;
+        for _ in 0..n_batches {
+            let (bufs, int_labels, f32_labels) = Self::sample(&mut self.eval_gen, self.batch);
+            let mut inputs = Vec::with_capacity(self.params.len() + bufs.len());
+            for (buf, &(r, c)) in param_bufs.iter().zip(&self.shapes) {
+                inputs.push(crate::runtime::literal::lit_f32(buf, &[r, c])?);
+            }
+            for b in &bufs {
+                inputs.push(b.to_literal()?);
+            }
+            let outs = self.runtime.execute(self.task.eval_artifact(), &inputs)?;
+            loss_total += crate::runtime::literal::lit_scalar(&outs[0])?;
+            let logits = crate::runtime::literal::lit_to_f64(&outs[1])?;
+            err_total += match self.task {
+                ProxyTask::Image | ProxyTask::Audio => {
+                    let classes = logits.len() / self.batch;
+                    let mut errs = 0usize;
+                    for (i, &lab) in int_labels.iter().enumerate() {
+                        let row = &logits[i * classes..(i + 1) * classes];
+                        let argmax = row
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .unwrap()
+                            .0;
+                        if argmax as i32 != lab {
+                            errs += 1;
+                        }
+                    }
+                    errs as f64 / self.batch as f64
+                }
+                ProxyTask::Graph => {
+                    let mut errs = 0usize;
+                    for (i, &lab) in f32_labels.iter().enumerate() {
+                        let pred = if logits[i] > 0.0 { 1.0 } else { 0.0 };
+                        if (pred - lab as f64).abs() > 0.5 {
+                            errs += 1;
+                        }
+                    }
+                    errs as f64 / f32_labels.len() as f64
+                }
+            };
+        }
+        Ok((loss_total / n_batches as f64, err_total / n_batches as f64))
+    }
+
+    /// Train with periodic eval; returns (train-loss curve, metric curve).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        steps: usize,
+        workers: usize,
+        schedule: Option<crate::optim::WarmupCosine>,
+        eval_every: usize,
+        eval_batches: usize,
+        mut grad_hook: Option<&mut dyn FnMut(usize, &[Matrix])>,
+    ) -> Result<(CurveLog, CurveLog)> {
+        let mut train_curve = CurveLog::new(&format!("{}/train", opt.name()));
+        let mut metric_curve = CurveLog::new(&format!("{}/metric", opt.name()));
+        for s in 0..steps {
+            if let Some(sch) = schedule {
+                opt.set_lr(sch.at(s));
+            }
+            let (loss, grads) = self.step(opt, workers)?;
+            if let Some(hook) = grad_hook.as_deref_mut() {
+                hook(s, &grads);
+            }
+            train_curve.push(s, loss);
+            if s % eval_every.max(1) == 0 || s + 1 == steps {
+                let (_eval_loss, metric) = self.eval(eval_batches)?;
+                metric_curve.push(s, metric);
+            }
+        }
+        Ok((train_curve, metric_curve))
+    }
+}

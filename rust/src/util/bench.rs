@@ -1,0 +1,145 @@
+//! Wall-clock micro-benchmark harness (criterion is not vendored).
+//!
+//! Usage pattern (see `rust/benches/bench_main.rs`):
+//! ```no_run
+//! use sketchy::util::bench::Bench;
+//! let mut b = Bench::new("matmul_256");
+//! b.run(|| { /* workload */ });
+//! println!("{}", b.report());
+//! ```
+//! Runs a warmup phase, then timed repetitions until a time or count
+//! budget is hit, and reports median / p10 / p90 / mean.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark: name + collected per-iteration timings.
+pub struct Bench {
+    pub name: String,
+    samples: Vec<Duration>,
+    /// Minimum measured iterations.
+    pub min_iters: usize,
+    /// Maximum measured iterations.
+    pub max_iters: usize,
+    /// Wall-clock budget for the measurement phase.
+    pub budget: Duration,
+    /// Warmup iterations.
+    pub warmup: usize,
+}
+
+/// Summary statistics for a finished benchmark.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub min: Duration,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            samples: vec![],
+            min_iters: 5,
+            max_iters: 200,
+            budget: Duration::from_secs(2),
+            warmup: 2,
+        }
+    }
+
+    /// Quick-profile configuration (used under `--fast`).
+    pub fn fast(name: &str) -> Self {
+        let mut b = Bench::new(name);
+        b.min_iters = 3;
+        b.max_iters = 20;
+        b.budget = Duration::from_millis(300);
+        b.warmup = 1;
+        b
+    }
+
+    /// Run the workload under the harness.
+    pub fn run<F: FnMut()>(&mut self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let start = Instant::now();
+        while self.samples.len() < self.min_iters
+            || (start.elapsed() < self.budget && self.samples.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            self.samples.push(t0.elapsed());
+        }
+        self.stats()
+    }
+
+    /// Statistics over collected samples.
+    pub fn stats(&self) -> Stats {
+        let mut s = self.samples.clone();
+        s.sort();
+        let n = s.len();
+        assert!(n > 0, "no samples");
+        let total: Duration = s.iter().sum();
+        Stats {
+            iters: n,
+            mean: total / n as u32,
+            median: s[n / 2],
+            p10: s[n / 10],
+            p90: s[(n * 9) / 10],
+            min: s[0],
+        }
+    }
+
+    /// Human-readable one-line report.
+    pub fn report(&self) -> String {
+        let st = self.stats();
+        format!(
+            "{:<40} iters={:<4} median={:>12?} p10={:>12?} p90={:>12?} mean={:>12?}",
+            self.name, st.iters, st.median, st.p10, st.p90, st.mean
+        )
+    }
+
+    /// CSV row: name,iters,median_ns,p10_ns,p90_ns,mean_ns.
+    pub fn csv_row(&self) -> String {
+        let st = self.stats();
+        format!(
+            "{},{},{},{},{},{}",
+            self.name,
+            st.iters,
+            st.median.as_nanos(),
+            st.p10.as_nanos(),
+            st.p90.as_nanos(),
+            st.mean.as_nanos()
+        )
+    }
+}
+
+/// Format a throughput given work per iteration and a duration.
+pub fn gflops(flops_per_iter: f64, time: Duration) -> f64 {
+    flops_per_iter / time.as_secs_f64() / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_and_reports() {
+        let mut b = Bench::fast("noop");
+        let st = b.run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(st.iters >= 3);
+        assert!(st.p10 <= st.median && st.median <= st.p90);
+        assert!(b.report().contains("noop"));
+        assert_eq!(b.csv_row().split(',').count(), 6);
+    }
+
+    #[test]
+    fn gflops_math() {
+        let g = gflops(2e9, Duration::from_secs(1));
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+}

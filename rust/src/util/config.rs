@@ -1,0 +1,246 @@
+//! TOML-subset configuration parser (system S11).
+//!
+//! The launcher reads experiment/training configs from simple TOML files:
+//! `[section]` headers, `key = value` pairs with string / number / bool /
+//! flat-array values, `#` comments. That subset covers every config this
+//! repository ships; nested tables and multi-line values are rejected
+//! loudly rather than mis-parsed.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key -> value`; keys before any `[section]`
+/// live in the "" section.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+/// Config parse error with line number.
+#[derive(Debug)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error on line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for ConfigError {}
+
+impl Config {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(ConfigError {
+                    line: ln + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                if name.contains('[') || name.contains(']') {
+                    return Err(ConfigError {
+                        line: ln + 1,
+                        msg: "nested tables are not supported".into(),
+                    });
+                }
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(ConfigError {
+                line: ln + 1,
+                msg: format!("expected key = value, got: {line}"),
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim()).map_err(|msg| ConfigError { line: ln + 1, msg })?;
+            cfg.map.insert(key, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Config::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Override a value (CLI flags beat config files).
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.map.insert(key.to_string(), value);
+    }
+
+    /// All keys under a section prefix.
+    pub fn section_keys(&self, section: &str) -> Vec<String> {
+        let prefix = format!("{section}.");
+        self.map
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .cloned()
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut vals = vec![];
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                vals.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(vals));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let cfg = Config::parse(
+            r#"
+            # top comment
+            name = "run1"
+            [train]
+            steps = 100     # trailing comment
+            lr = 1e-3
+            use_fd = true
+            ranks = [4, 16, 64]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.str_or("name", ""), "run1");
+        assert_eq!(cfg.usize_or("train.steps", 0), 100);
+        assert_eq!(cfg.f64_or("train.lr", 0.0), 1e-3);
+        assert!(cfg.bool_or("train.use_fd", false));
+        match cfg.get("train.ranks").unwrap() {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let cfg = Config::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(cfg.str_or("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_lines() {
+        let err = Config::parse("x = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(Config::parse("[a.b\n").is_err());
+    }
+
+    #[test]
+    fn overrides() {
+        let mut cfg = Config::parse("a = 1").unwrap();
+        cfg.set("a", Value::Num(2.0));
+        assert_eq!(cfg.f64_or("a", 0.0), 2.0);
+    }
+
+    #[test]
+    fn section_key_listing() {
+        let cfg = Config::parse("[s]\na = 1\nb = 2\n[t]\nc = 3").unwrap();
+        assert_eq!(cfg.section_keys("s"), vec!["s.a", "s.b"]);
+    }
+}

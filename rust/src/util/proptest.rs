@@ -1,0 +1,78 @@
+//! Lightweight property-testing helper (proptest is not vendored).
+//!
+//! `for_all(seed, cases, gen, prop)` draws `cases` inputs from `gen` and
+//! asserts `prop` on each; on failure it reruns the generator to find the
+//! smallest failing case index and reports the seed so the case is
+//! reproducible. Generators are plain closures over [`Pcg64`].
+
+use crate::util::rng::Pcg64;
+
+/// Run `prop` on `cases` values drawn by `gen`; panics with a reproducible
+/// seed + case index on the first failure.
+pub fn for_all<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed: seed={seed} case={case}\ninput={input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`for_all`] but the property returns `Result<(), String>` so
+/// failures carry a message.
+pub fn for_all_msg<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed: seed={seed} case={case}: {msg}\ninput={input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_on_true_property() {
+        for_all(1, 50, |rng| rng.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_loudly() {
+        for_all(2, 50, |rng| rng.below(100), |&x| x < 50);
+    }
+
+    #[test]
+    fn msg_variant() {
+        for_all_msg(
+            3,
+            20,
+            |rng| rng.uniform(),
+            |&x| {
+                if (0.0..1.0).contains(&x) {
+                    Ok(())
+                } else {
+                    Err(format!("out of range: {x}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration tests over the experiment harness: every experiment runs
+//! end-to-end at reduced scale and its paper-shape claims hold.
+//! Artifact-dependent tests skip gracefully when `make artifacts` hasn't
+//! run.
+
+use sketchy::util::cli::Args;
+
+fn args(pairs: &[(&str, &str)]) -> Args {
+    let mut a = Args::default();
+    for (k, v) in pairs {
+        a.options.insert(k.to_string(), v.to_string());
+    }
+    a
+}
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn fig1_memory_table() {
+    let report = sketchy::experiments::fig1::run(&Args::default()).unwrap();
+    assert!(report.contains("Sketchy"));
+    assert!(report.contains("140.74 TB")); // (mn)² at 4096x1024, f64
+}
+
+#[test]
+fn tbl1_bounds_hold_at_reduced_scale() {
+    let report =
+        sketchy::experiments::tbl1::run(&args(&[("d", "24"), ("t", "400")])).unwrap();
+    assert!(!report.contains("| NO |"), "bound violated:\n{report}");
+}
+
+#[test]
+fn appg_step_skipping_cheap() {
+    let report = sketchy::experiments::appg::run(&args(&[
+        ("d", "8"),
+        ("t", "800"),
+        ("seeds", "2"),
+    ]))
+    .unwrap();
+    assert!(report.contains("far below"));
+}
+
+#[test]
+fn fig2_single_task_ordering() {
+    if !have_artifacts() {
+        return;
+    }
+    let report = sketchy::experiments::fig2::run(&args(&[
+        ("task", "graph"),
+        ("steps", "40"),
+        ("workers", "1"),
+    ]))
+    .unwrap();
+    assert!(report.contains("S-Shampoo"));
+    assert!(report.contains("covariance bytes"));
+}
+
+#[test]
+fn fig3_spectra_collected() {
+    if !have_artifacts() {
+        return;
+    }
+    let report = sketchy::experiments::fig3::run(&args(&[
+        ("task", "graph"),
+        ("steps", "30"),
+        ("workers", "1"),
+    ]))
+    .unwrap();
+    assert!(report.contains("intrinsic dim"));
+    assert!(report.contains("Wishart"));
+}
+
+#[test]
+fn e2e_lm_s_shampoo_loss_decreases() {
+    if !have_artifacts() {
+        return;
+    }
+    use sketchy::data::MarkovCorpus;
+    use sketchy::optim::{GraftType, SShampoo, SShampooConfig, ShampooConfig};
+    use sketchy::train::LmTrainer;
+    use std::sync::Arc;
+    let rt = Arc::new(sketchy::runtime::Runtime::load("artifacts").unwrap());
+    let mut trainer = LmTrainer::new(rt, "tiny", 5).unwrap();
+    let shapes = trainer.shapes.clone();
+    let mut opt = SShampoo::new(
+        &shapes,
+        SShampooConfig {
+            base: ShampooConfig {
+                lr: 5e-3,
+                start_preconditioning_step: 5,
+                graft: GraftType::RmspropNormalized,
+                clip: 10.0,
+                ..Default::default()
+            },
+            rank: 8,
+        },
+    );
+    let mut corpus = MarkovCorpus::new(trainer.vocab, 2);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..30 {
+        let (loss, _) = trainer.step(&mut opt, &mut corpus, 2).unwrap();
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    assert!(
+        last < first.unwrap() - 0.1,
+        "S-Shampoo LM loss did not decrease: {first:?} -> {last}"
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    if !have_artifacts() {
+        return;
+    }
+    use sketchy::train::{load_checkpoint, save_checkpoint, LmTrainer};
+    use std::sync::Arc;
+    let rt = Arc::new(sketchy::runtime::Runtime::load("artifacts").unwrap());
+    let trainer = LmTrainer::new(rt, "tiny", 5).unwrap();
+    let path = std::env::temp_dir().join("sketchy_e2e_ckpt.bin");
+    save_checkpoint(path.to_str().unwrap(), 7, &trainer.params).unwrap();
+    let (step, params) = load_checkpoint(path.to_str().unwrap()).unwrap();
+    assert_eq!(step, 7);
+    assert_eq!(params.len(), trainer.params.len());
+    for (a, b) in params.iter().zip(&trainer.params) {
+        assert_eq!(a, b);
+    }
+    std::fs::remove_file(path).ok();
+}

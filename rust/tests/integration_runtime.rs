@@ -1,0 +1,263 @@
+//! Integration tests over the PJRT runtime and the AOT artifacts.
+//!
+//! These require `make artifacts` to have been run (the Makefile `test`
+//! target guarantees it). If the manifest is absent the tests skip with a
+//! notice rather than failing, so plain `cargo test` works on a fresh
+//! checkout.
+
+use sketchy::runtime::artifact::load_fixture;
+use sketchy::runtime::literal::{lit_f32, lit_scalar, lit_to_f64};
+use sketchy::runtime::Runtime;
+use std::sync::Arc;
+
+const DIR: &str = "artifacts";
+
+fn runtime_or_skip() -> Option<Arc<Runtime>> {
+    if !std::path::Path::new(DIR).join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(Runtime::load(DIR).expect("runtime load")))
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let names = rt.names();
+    for required in [
+        "lm_tiny_grad",
+        "lm_tiny_eval",
+        "cnn_grad",
+        "cnn_eval",
+        "conformer_grad",
+        "conformer_eval",
+        "gnn_grad",
+        "gnn_eval",
+        "cov_update_64",
+        "cov_update_256",
+        "precond_apply_128x64",
+        "sketch_gram_512",
+    ] {
+        assert!(names.iter().any(|n| n == required), "missing {required}");
+    }
+}
+
+#[test]
+fn every_artifact_compiles() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in rt.names() {
+        rt.executable(&name)
+            .unwrap_or_else(|e| panic!("compile {name}: {e}"));
+    }
+}
+
+#[test]
+fn cov_update_fixture_matches_jax() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let fx = load_fixture(DIR, "cov_update_64").expect("fixture");
+    let inputs: Vec<xla::Literal> = fx
+        .inputs
+        .iter()
+        .map(|(_, shape, data)| {
+            let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+            lit_f32(&f32s, shape).unwrap()
+        })
+        .collect();
+    let outs = rt.execute("cov_update_64", &inputs).unwrap();
+    let got = lit_to_f64(&outs[0]).unwrap();
+    let want = &fx.outputs[0];
+    assert_eq!(got.len(), want.len());
+    let mut max_err = 0.0f64;
+    for (g, w) in got.iter().zip(want) {
+        max_err = max_err.max((g - w).abs() / (1.0 + w.abs()));
+    }
+    assert!(max_err < 1e-4, "cov_update mismatch: rel err {max_err}");
+}
+
+#[test]
+fn cov_update_artifact_matches_rust_reference() {
+    // Cross-language: the XLA/Pallas kernel and the Rust tensor substrate
+    // must agree on beta2*C + G^T G.
+    let Some(rt) = runtime_or_skip() else { return };
+    use sketchy::tensor::{at_a, Matrix};
+    use sketchy::util::rng::Pcg64;
+    let mut rng = Pcg64::new(42);
+    let c = Matrix::randn(64, 64, &mut rng);
+    let g = Matrix::randn(64, 64, &mut rng);
+    let c32: Vec<f32> = c.as_slice().iter().map(|&x| x as f32).collect();
+    let g32: Vec<f32> = g.as_slice().iter().map(|&x| x as f32).collect();
+    let outs = rt
+        .execute(
+            "cov_update_64",
+            &[lit_f32(&c32, &[64, 64]).unwrap(), lit_f32(&g32, &[64, 64]).unwrap()],
+        )
+        .unwrap();
+    let got = lit_to_f64(&outs[0]).unwrap();
+    let mut want = at_a(&g);
+    want.axpy(0.0, &c); // shape check only
+    let want = c.scale(0.999).add(&at_a(&g));
+    let mut max_err = 0.0f64;
+    for (i, (g_, w)) in got.iter().zip(want.as_slice()).enumerate() {
+        let e = (g_ - w).abs() / (1.0 + w.abs());
+        if e > max_err {
+            max_err = e;
+            let _ = i;
+        }
+    }
+    assert!(max_err < 1e-4, "xla vs rust mismatch: {max_err}");
+}
+
+#[test]
+fn precond_apply_fixture_matches_jax() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let fx = load_fixture(DIR, "precond_apply_128x64").expect("fixture");
+    let inputs: Vec<xla::Literal> = fx
+        .inputs
+        .iter()
+        .map(|(_, shape, data)| {
+            let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+            lit_f32(&f32s, shape).unwrap()
+        })
+        .collect();
+    let outs = rt.execute("precond_apply_128x64", &inputs).unwrap();
+    let got = lit_to_f64(&outs[0]).unwrap();
+    let want = &fx.outputs[0];
+    let mut max_err = 0.0f64;
+    for (g, w) in got.iter().zip(want) {
+        max_err = max_err.max((g - w).abs() / (1.0 + w.abs()));
+    }
+    assert!(max_err < 1e-3, "precond_apply mismatch: rel err {max_err}");
+}
+
+#[test]
+fn lm_tiny_eval_fixture_matches_jax() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let fx = load_fixture(DIR, "lm_tiny_eval").expect("fixture");
+    let spec = rt.spec("lm_tiny_eval").unwrap().clone();
+    let inputs: Vec<xla::Literal> = fx
+        .inputs
+        .iter()
+        .zip(&spec.inputs)
+        .map(|((_, shape, data), io)| {
+            if io.dtype == "i32" {
+                let i32s: Vec<i32> = data.iter().map(|&x| x as i32).collect();
+                sketchy::runtime::literal::lit_i32(&i32s, shape).unwrap()
+            } else {
+                let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+                lit_f32(&f32s, shape).unwrap()
+            }
+        })
+        .collect();
+    let outs = rt.execute("lm_tiny_eval", &inputs).unwrap();
+    let loss = lit_scalar(&outs[0]).unwrap();
+    let want = fx.outputs[0][0];
+    assert!(
+        (loss - want).abs() < 1e-4 * (1.0 + want.abs()),
+        "loss {loss} vs jax {want}"
+    );
+}
+
+#[test]
+fn lm_tiny_grad_executes_with_sane_outputs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    use sketchy::train::artifact_worker::init_params_from_specs;
+    let spec = rt.spec("lm_tiny_grad").unwrap().clone();
+    let (_, shapes, params) = init_params_from_specs(&spec.inputs, spec.n_params, 7);
+    let mut inputs: Vec<xla::Literal> = params
+        .iter()
+        .map(|p| sketchy::runtime::literal::matrix_to_lit(p).unwrap())
+        .collect();
+    let tok_shape = &spec.inputs[spec.n_params].shape;
+    let tokens: Vec<i32> = (0..tok_shape.iter().product::<usize>())
+        .map(|i| (i % 31) as i32)
+        .collect();
+    inputs.push(sketchy::runtime::literal::lit_i32(&tokens, tok_shape).unwrap());
+    let outs = rt.execute("lm_tiny_grad", &inputs).unwrap();
+    assert_eq!(outs.len(), shapes.len() + 1);
+    let loss = lit_scalar(&outs[0]).unwrap();
+    // Vocab 32 ⇒ loss near ln 32 ≈ 3.47 at random init.
+    assert!(loss > 1.0 && loss < 6.0, "init loss {loss}");
+    for (i, &(r, c)) in shapes.iter().enumerate() {
+        let g = lit_to_f64(&outs[1 + i]).unwrap();
+        assert_eq!(g.len(), r * c);
+        assert!(g.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn concurrent_execution_is_safe() {
+    // The coordinator executes artifacts from multiple worker threads;
+    // verify results stay deterministic under concurrency.
+    let Some(rt) = runtime_or_skip() else { return };
+    use sketchy::tensor::Matrix;
+    use sketchy::util::rng::Pcg64;
+    let mut rng = Pcg64::new(9);
+    let c = Matrix::randn(64, 64, &mut rng);
+    let g = Matrix::randn(64, 64, &mut rng);
+    let c32: Vec<f32> = c.as_slice().iter().map(|&x| x as f32).collect();
+    let g32: Vec<f32> = g.as_slice().iter().map(|&x| x as f32).collect();
+    // Warm the executable cache first.
+    rt.executable("cov_update_64").unwrap();
+    let reference: Vec<f64> = {
+        let outs = rt
+            .execute(
+                "cov_update_64",
+                &[lit_f32(&c32, &[64, 64]).unwrap(), lit_f32(&g32, &[64, 64]).unwrap()],
+            )
+            .unwrap();
+        lit_to_f64(&outs[0]).unwrap()
+    };
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let rt = rt.clone();
+                let c32 = c32.clone();
+                let g32 = g32.clone();
+                scope.spawn(move || {
+                    let outs = rt
+                        .execute(
+                            "cov_update_64",
+                            &[
+                                lit_f32(&c32, &[64, 64]).unwrap(),
+                                lit_f32(&g32, &[64, 64]).unwrap(),
+                            ],
+                        )
+                        .unwrap();
+                    lit_to_f64(&outs[0]).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            assert_eq!(got, reference, "concurrent result diverged");
+        }
+    });
+}
+
+#[test]
+fn lm_training_smoke_loss_decreases() {
+    // E2E smoke: 25 steps of Adam on the tiny LM must cut the loss.
+    let Some(rt) = runtime_or_skip() else { return };
+    use sketchy::data::MarkovCorpus;
+    use sketchy::optim::{Adam, Optimizer};
+    use sketchy::train::LmTrainer;
+    let mut trainer = LmTrainer::new(rt, "tiny", 3).unwrap();
+    let mut corpus = MarkovCorpus::new(trainer.vocab, 11);
+    let shapes = trainer.shapes.clone();
+    let mut opt = Adam::new(&shapes, 5e-3);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..25 {
+        let (loss, _) = trainer.step(&mut opt, &mut corpus, 2).unwrap();
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first - 0.1,
+        "loss did not decrease: {first} -> {last}"
+    );
+    assert_eq!(opt.steps(), 25);
+}

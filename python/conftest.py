@@ -1,6 +1,23 @@
-"""Pytest root config: enable 64-bit types (kernel tests exercise the f64
-path; artifacts themselves remain f32 for the Rust runtime)."""
+"""Pytest root config.
 
-import jax
+When JAX is importable: enable 64-bit types (kernel tests exercise the
+f64 path; artifacts themselves remain f32 for the Rust runtime).
 
-jax.config.update("jax_enable_x64", True)
+When JAX is missing (hermetic/offline runners), skip collection of the
+test tree with an explicit reason instead of erroring at import time —
+every test module imports jax at module scope.
+"""
+
+try:
+    import jax
+except ImportError:  # pragma: no cover - exercised only on jax-less runners
+    import sys
+
+    print(
+        "SKIP: jax is unavailable — skipping python/tests "
+        "(install jax[cpu]; Pallas kernels run with interpret=True, no TPU needed)",
+        file=sys.stderr,
+    )
+    collect_ignore_glob = ["tests/*"]
+else:
+    jax.config.update("jax_enable_x64", True)

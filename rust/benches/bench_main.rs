@@ -12,7 +12,8 @@
 //! Run: cargo bench [-- --fast] [-- --filter NAME]
 
 use sketchy::optim::{
-    Adam, GraftType, Optimizer, SShampoo, SShampooConfig, Shampoo, ShampooConfig,
+    Adam, EngineConfig, GraftType, Optimizer, PrecondEngine, SShampoo, SShampooConfig, Shampoo,
+    ShampooConfig,
 };
 use sketchy::sketch::FdSketch;
 use sketchy::tensor::{a_at, at_a, eigh, matmul, Matrix};
@@ -168,6 +169,76 @@ fn main() {
             std::hint::black_box(sketchy::coordinator::tree_allreduce(shards.clone()));
         });
         record(&bh, String::new());
+    }
+
+    // ---------------- preconditioner engine (multi-block) ----------------
+    // Serial-vs-parallel step latency over the §3.4 block partition with
+    // the staggered stale-refresh schedule, plus a bitwise identity check.
+    // Emits bench_out/BENCH_precond_engine.json — the CI perf record.
+    if run("engine/multiblock_step") {
+        let eng_shapes = [(256usize, 256usize), (256, 128)];
+        let block = 64;
+        let refresh_interval = 4;
+        let base = cfg.clone();
+        let mk = |threads: usize| {
+            PrecondEngine::shampoo(
+                &eng_shapes,
+                base.clone(),
+                EngineConfig { threads, block_size: block, refresh_interval, stagger: true },
+            )
+        };
+        let eng_grads: Vec<Matrix> = eng_shapes
+            .iter()
+            .map(|&(r, c)| Matrix::randn(r, c, &mut rng))
+            .collect();
+        let par_threads = sketchy::tensor::ops::num_threads().clamp(2, 8);
+        let n_blocks = mk(1).blocks().len();
+        // Bitwise identity: the parallel path must equal the serial path.
+        let mut identical = true;
+        {
+            let mut serial = mk(1);
+            let mut parallel = mk(par_threads);
+            let mut p1: Vec<Matrix> =
+                eng_shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+            let mut p2 = p1.clone();
+            for _ in 0..6 {
+                serial.step(&mut p1, &eng_grads);
+                parallel.step(&mut p2, &eng_grads);
+            }
+            for (a, b) in p1.iter().zip(&p2) {
+                if a.max_diff(b) != 0.0 {
+                    identical = false;
+                }
+            }
+        }
+        let mut eng = mk(1);
+        let mut eng_params: Vec<Matrix> =
+            eng_shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+        let mut bh = bench("engine/multiblock_step_t1", fast);
+        let st_serial = bh.run(|| eng.step(&mut eng_params, &eng_grads));
+        record(&bh, format!("{n_blocks} blocks"));
+        let mut eng = mk(par_threads);
+        let mut eng_params: Vec<Matrix> =
+            eng_shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+        let name = format!("engine/multiblock_step_t{par_threads}");
+        let mut bh = bench(&name, fast);
+        let st_par = bh.run(|| eng.step(&mut eng_params, &eng_grads));
+        let speedup = st_serial.median.as_secs_f64() / st_par.median.as_secs_f64();
+        record(&bh, format!("{n_blocks} blocks speedup x{speedup:.2} identical={identical}"));
+        std::fs::create_dir_all("bench_out").ok();
+        let json = format!(
+            "{{\n  \"bench\": \"precond_engine\",\n  \"shapes\": \"256x256+256x128\",\n  \
+             \"block_size\": {block},\n  \"blocks\": {n_blocks},\n  \
+             \"refresh_interval\": {refresh_interval},\n  \"serial_threads\": 1,\n  \
+             \"parallel_threads\": {par_threads},\n  \"serial_median_ns\": {},\n  \
+             \"parallel_median_ns\": {},\n  \"speedup\": {speedup:.4},\n  \
+             \"identical\": {identical}\n}}\n",
+            st_serial.median.as_nanos(),
+            st_par.median.as_nanos(),
+        );
+        std::fs::write("bench_out/BENCH_precond_engine.json", &json).unwrap();
+        println!("[engine perf record written to bench_out/BENCH_precond_engine.json]");
+        assert!(identical, "parallel engine diverged from serial — perf record invalid");
     }
 
     // ---------------- artifact + e2e (need artifacts) ----------------

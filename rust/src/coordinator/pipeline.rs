@@ -79,6 +79,20 @@ impl<T> BoundedQueue<T> {
         item
     }
 
+    /// A closed, pre-filled queue — the self-scheduling work-list idiom
+    /// used by the block engine (`optim::engine`): the leader enqueues
+    /// every task up front, worker threads drain until `None`, so task
+    /// assignment follows worker availability (cheap work stealing).
+    pub fn work_list(items: impl IntoIterator<Item = T>) -> Self {
+        let items: Vec<T> = items.into_iter().collect();
+        let q = BoundedQueue::new(items.len().max(1));
+        for item in items {
+            q.push(item);
+        }
+        q.close();
+        q
+    }
+
     /// Close the queue: producers fail, consumers drain.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
@@ -162,6 +176,20 @@ mod tests {
             .collect();
         all.sort_unstable();
         assert_eq!(all, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn work_list_drains_in_order_then_none() {
+        let q = BoundedQueue::work_list(0..5);
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+        // Pushing into a finished work list fails (it is closed).
+        assert!(!q.push(99));
+        // Empty work lists are legal and immediately drained.
+        let empty: BoundedQueue<usize> = BoundedQueue::work_list(std::iter::empty());
+        assert_eq!(empty.pop(), None);
     }
 
     #[test]

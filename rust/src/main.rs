@@ -24,8 +24,16 @@ USAGE:
   sketchy info [--artifacts DIR]
   sketchy repro <experiment> [--seed N] [--full] [experiment flags]
   sketchy train [--preset tiny|small|base] [--steps N] [--workers N]
-                [--optimizer adam|shampoo|s-shampoo] [--rank L]
-                [--lr F] [--checkpoint PATH]
+                [--optimizer adam|shampoo|s-shampoo
+                             |engine-adam|engine-shampoo|engine-s-shampoo]
+                [--rank L] [--lr F] [--checkpoint PATH]
+                [--engine-threads N] [--block-size B]
+                [--refresh-interval K] [--stagger-refresh BOOL]
+
+The engine-* optimizers run the parallel blocked preconditioner engine:
+per-block statistics/root updates execute concurrently on a work queue,
+with inverse-root (eigendecomposition) refreshes amortized every
+--refresh-interval steps and staggered across blocks.
 
 Run `sketchy list` for the experiment catalogue.";
 
@@ -114,8 +122,8 @@ fn cmd_train(args: &Args) -> i32 {
 fn run_train(args: &Args) -> anyhow::Result<()> {
     use sketchy::data::MarkovCorpus;
     use sketchy::optim::{
-        Adam, GraftType, Optimizer, SShampoo, SShampooConfig, Shampoo, ShampooConfig,
-        WarmupCosine,
+        engine_optimizer, Adam, EngineConfig, GraftType, Optimizer, SShampoo, SShampooConfig,
+        Shampoo, ShampooConfig, WarmupCosine,
     };
     use sketchy::train::LmTrainer;
     use std::sync::Arc;
@@ -164,6 +172,13 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         one_sided: cfg_file.bool_or("s_shampoo.one_sided", false),
         ..Default::default()
     };
+    let mut ecfg = EngineConfig::resolve(args, &cfg_file);
+    // Unless the engine knob is set explicitly, inherit the Shampoo
+    // `precond_interval` cadence so `shampoo` → `engine-shampoo` does not
+    // silently change refresh frequency.
+    if args.get("refresh-interval").is_none() && cfg_file.get("engine.refresh_interval").is_none() {
+        ecfg.refresh_interval = base.precond_interval.max(1);
+    }
     let mut opt: Box<dyn Optimizer> = match opt_name.as_str() {
         "adam" => {
             let mut a = Adam::new(&shapes, lr);
@@ -173,7 +188,19 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         }
         "shampoo" => Box::new(Shampoo::new(&shapes, base)),
         "s-shampoo" => Box::new(SShampoo::new(&shapes, SShampooConfig { base, rank })),
-        other => anyhow::bail!("unknown optimizer {other}"),
+        name => match engine_optimizer(name, &shapes, base, rank, ecfg) {
+            Some(engine) => {
+                println!(
+                    "engine: {} blocks, {} threads, refresh every {} steps (stagger={})",
+                    engine.blocks().len(),
+                    ecfg.effective_threads(engine.blocks().len()),
+                    ecfg.refresh_interval,
+                    ecfg.stagger
+                );
+                Box::new(engine)
+            }
+            None => anyhow::bail!("unknown optimizer {name}"),
+        },
     };
     println!(
         "optimizer {} — covariance bytes {}",

@@ -13,16 +13,24 @@
 //! - [`Blocked`] — Blocked-Shampoo wrapper (§3.4)
 //! - [`grafting`] — layer-wise grafting (App. C)
 //! - [`memory`] — Fig. 1 memory accounting
+//!
+//! **Engine layer** (production path):
+//! - [`Preconditioner`] — the unified ingest/refresh/apply interface
+//!   behind Shampoo, S-Shampoo and Adam ([`precond`])
+//! - [`PrecondEngine`] — parallel blocked engine driving any unit kind
+//!   with a staggered stale-refresh schedule ([`engine`])
 
 pub mod adam;
 pub mod blocking;
+pub mod engine;
 pub mod fd_baselines;
 pub mod first_order;
-pub mod ggt;
 pub mod full_matrix;
+pub mod ggt;
 pub mod grafting;
 pub mod matrix_opt;
 pub mod memory;
+pub mod precond;
 pub mod s_adagrad;
 pub mod s_shampoo;
 pub mod shampoo;
@@ -30,13 +38,15 @@ pub mod vector;
 
 pub use adam::{Adam, Sgd};
 pub use blocking::{partition, Block, Blocked};
+pub use engine::{engine_optimizer, EngineConfig, PrecondEngine, UnitKind};
 pub use fd_baselines::{AdaFd, FdSon, RfdSon};
 pub use first_order::{AdaGradDiag, Ogd};
-pub use ggt::Ggt;
 pub use full_matrix::{AdaGradFull, EpochAdaGrad};
+pub use ggt::Ggt;
 pub use grafting::{Graft, GraftType};
 pub use matrix_opt::{Optimizer, WarmupCosine};
 pub use memory::Method as MemoryMethod;
+pub use precond::{AdamUnit, BlockState, KroneckerUnit, Preconditioner, SketchUnit};
 pub use s_adagrad::SAdaGrad;
 pub use s_shampoo::{SShampoo, SShampooConfig};
 pub use shampoo::{Shampoo, ShampooConfig};

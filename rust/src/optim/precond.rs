@@ -1,0 +1,542 @@
+//! The unified preconditioner interface behind the tensor-world optimizer
+//! family.
+//!
+//! Every second-order method in this repository decomposes into the same
+//! three per-tensor (or per-block) operations:
+//!
+//! 1. **ingest** — fold a gradient into the second-moment statistics
+//!    (exact Kronecker factors, FD sketches, or a diagonal accumulator);
+//! 2. **refresh** — recompute the expensive derived state (inverse-root
+//!    eigendecompositions) from the current statistics;
+//! 3. **apply** — precondition a gradient with the derived state.
+//!
+//! [`Preconditioner`] captures that contract. [`Shampoo`](super::Shampoo)
+//! and [`SShampoo`](super::SShampoo) drive the units serially with their
+//! paper-faithful cadences; the parallel block engine
+//! ([`super::engine::PrecondEngine`]) drives the very same units across a
+//! thread pool with a staggered stale-refresh schedule, so the eigh calls
+//! of different blocks overlap instead of serializing the step (§3.4 /
+//! §7 amortization).
+//!
+//! Splitting ingest/refresh/apply is what makes staleness a *schedule*
+//! decision rather than an algorithm change: a unit is always safe to
+//! apply with roots computed from older statistics, which is exactly the
+//! production Shampoo trick (`precond_interval` in App. C).
+
+use super::grafting::{transplant, Graft, GraftType};
+use crate::sketch::FdSketch;
+use crate::tensor::{a_at, at_a, inv_pth_root, matmul, Matrix};
+
+/// Per-tensor/per-block preconditioner unit: statistics + derived state.
+///
+/// `Send` so the block engine can move units across worker threads.
+pub trait Preconditioner: Send {
+    /// Fold gradient `g` into the second-moment statistics.
+    fn ingest(&mut self, g: &Matrix);
+
+    /// Recompute derived state (inverse roots) from current statistics.
+    /// Returns `true` only when real work ran (an eigendecomposition) —
+    /// no-op refreshes (diagonal units, fully-sketched sides) return
+    /// `false` so the engine's amortization accounting stays honest.
+    fn refresh(&mut self) -> bool;
+
+    /// Whether derived state exists (first apply must be preceded by a
+    /// refresh for units with cached roots).
+    fn ready(&self) -> bool;
+
+    /// Preconditioned direction for gradient `g`.
+    fn apply(&self, g: &Matrix) -> Matrix;
+
+    /// Total heap bytes of unit state.
+    fn mem_bytes(&self) -> usize;
+
+    /// Bytes of second-moment (covariance) state only.
+    fn second_moment_bytes(&self) -> usize;
+
+    /// Live FD sketches backing this unit (sketched families only) —
+    /// exposed for invariant checks and diagnostics.
+    fn sketches(&self) -> Vec<&FdSketch> {
+        vec![]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exact Kronecker factors (Shampoo).
+// ---------------------------------------------------------------------------
+
+/// Exact Shampoo unit: EMA factors `L ← β₂L + G Gᵀ`, `R ← β₂R + GᵀG` with
+/// cached inverse roots `L^{-1/4}` / `R^{-1/4}` (one-sided: `L^{-1/2}`).
+pub struct KroneckerUnit {
+    pub(crate) beta2: f64,
+    pub(crate) eps: f64,
+    pub(crate) one_sided: bool,
+    pub(crate) l: Matrix,
+    pub(crate) r: Matrix,
+    pub(crate) l_root: Option<Matrix>,
+    pub(crate) r_root: Option<Matrix>,
+}
+
+impl KroneckerUnit {
+    pub fn new(shape: (usize, usize), beta2: f64, eps: f64, one_sided: bool) -> Self {
+        let (m, n) = shape;
+        KroneckerUnit {
+            beta2,
+            eps,
+            one_sided,
+            l: Matrix::zeros(m, m),
+            r: Matrix::zeros(n, n),
+            l_root: None,
+            r_root: None,
+        }
+    }
+}
+
+impl Preconditioner for KroneckerUnit {
+    fn ingest(&mut self, g: &Matrix) {
+        self.l.scale_inplace(self.beta2);
+        self.l.axpy(1.0, &a_at(g));
+        if !self.one_sided {
+            self.r.scale_inplace(self.beta2);
+            self.r.axpy(1.0, &at_a(g));
+        }
+    }
+
+    fn refresh(&mut self) -> bool {
+        let p = if self.one_sided { 2.0 } else { 4.0 };
+        self.l_root = Some(inv_pth_root(&self.l, p, self.eps));
+        if !self.one_sided {
+            self.r_root = Some(inv_pth_root(&self.r, 4.0, self.eps));
+        }
+        true
+    }
+
+    fn ready(&self) -> bool {
+        self.l_root.is_some() && (self.one_sided || self.r_root.is_some())
+    }
+
+    fn apply(&self, g: &Matrix) -> Matrix {
+        let l_root = self.l_root.as_ref().expect("refresh before apply");
+        if self.one_sided {
+            matmul(l_root, g)
+        } else {
+            matmul(&matmul(l_root, g), self.r_root.as_ref().expect("refresh before apply"))
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.l.mem_bytes()
+            + self.r.mem_bytes()
+            + self.l_root.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
+            + self.r_root.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
+    }
+
+    fn second_moment_bytes(&self) -> usize {
+        self.l.mem_bytes() + self.r.mem_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FD-sketched factors (S-Shampoo).
+// ---------------------------------------------------------------------------
+
+/// One side (L or R) of the factored S-Shampoo preconditioner.
+pub(crate) enum Side {
+    /// dim ≤ ℓ: exact EMA factor, spectral root cached.
+    Exact { c: Matrix, root: Option<Matrix> },
+    /// dim > ℓ: EW-FD sketch (Obs. 6), applied in factored form.
+    Sketched { fd: FdSketch },
+}
+
+impl Side {
+    pub(crate) fn new(dim: usize, rank: usize, beta2: f64) -> Side {
+        if dim <= rank {
+            Side::Exact { c: Matrix::zeros(dim, dim), root: None }
+        } else {
+            Side::Sketched { fd: FdSketch::new(dim, rank, beta2) }
+        }
+    }
+
+    /// Update statistics with news factor Y (news = Y Yᵀ).
+    pub(crate) fn update(&mut self, y: &Matrix, beta2: f64) {
+        match self {
+            Side::Exact { c, .. } => {
+                c.scale_inplace(beta2);
+                c.axpy(1.0, &a_at(y));
+            }
+            Side::Sketched { fd } => {
+                fd.update(y);
+            }
+        }
+    }
+
+    /// Refresh any cached spectral roots (exact mode only; sketched sides
+    /// apply their inverse roots directly from the factored form, so they
+    /// are never stale). Returns whether an eigendecomposition ran.
+    pub(crate) fn refresh_root(&mut self, eps: f64, p: f64) -> bool {
+        if let Side::Exact { c, root } = self {
+            *root = Some(inv_pth_root(c, p, eps));
+            true
+        } else {
+            false
+        }
+    }
+
+    pub(crate) fn has_root(&self) -> bool {
+        match self {
+            Side::Exact { root, .. } => root.is_some(),
+            Side::Sketched { .. } => true,
+        }
+    }
+
+    /// Apply this side's `(·)^{-1/p}` from the left: `C^{-1/p} X`
+    /// (p = 4 two-sided Shampoo, p = 2 one-sided §3.4).
+    pub(crate) fn apply_left(&self, x: &Matrix, eps: f64, p: f64) -> Matrix {
+        match self {
+            Side::Exact { root, .. } => matmul(root.as_ref().expect("root not ready"), x),
+            Side::Sketched { fd } => {
+                // L̃ = Ḡ + (ρ_{1:t} + ε) I, per Alg. 3 line 6 plus the ε
+                // ridge of the initialization L̃₀ = εI.
+                let pre = fd.shifted(fd.escaped_mass() + eps);
+                pre.apply_inv_root_left(p, x)
+            }
+        }
+    }
+
+    /// Apply this side's `(·)^{-1/4}` from the right: `X C^{-1/4}`.
+    pub(crate) fn apply_right(&self, x: &Matrix, eps: f64) -> Matrix {
+        match self {
+            Side::Exact { root, .. } => matmul(x, root.as_ref().expect("root not ready")),
+            Side::Sketched { fd } => {
+                let pre = fd.shifted(fd.escaped_mass() + eps);
+                pre.apply_inv_root_right(4.0, x)
+            }
+        }
+    }
+
+    pub(crate) fn mem_bytes(&self) -> usize {
+        match self {
+            Side::Exact { c, root } => {
+                c.mem_bytes() + root.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
+            }
+            Side::Sketched { fd } => fd.mem_bytes(),
+        }
+    }
+
+    pub(crate) fn second_moment_bytes(&self) -> usize {
+        match self {
+            Side::Exact { c, .. } => c.mem_bytes(),
+            Side::Sketched { fd } => fd.mem_bytes(),
+        }
+    }
+
+    /// Escaped mass (0 in exact mode) — diagnostics.
+    pub(crate) fn escaped(&self) -> f64 {
+        match self {
+            Side::Exact { .. } => 0.0,
+            Side::Sketched { fd } => fd.escaped_mass(),
+        }
+    }
+}
+
+/// Sketched S-Shampoo unit: an FD sketch (or exact small factor) per side.
+pub struct SketchUnit {
+    pub(crate) left: Side,
+    pub(crate) right: Side,
+    beta2: f64,
+    eps: f64,
+    one_sided: bool,
+}
+
+impl SketchUnit {
+    pub fn new(shape: (usize, usize), rank: usize, beta2: f64, eps: f64, one_sided: bool) -> Self {
+        let (m, n) = shape;
+        SketchUnit {
+            left: Side::new(m, rank, beta2),
+            right: Side::new(n, rank, beta2),
+            beta2,
+            eps,
+            one_sided,
+        }
+    }
+
+    fn left_p(&self) -> f64 {
+        if self.one_sided {
+            2.0
+        } else {
+            4.0
+        }
+    }
+
+    /// Cumulative escaped mass (left, right) — E3/E9 diagnostics.
+    pub fn escaped(&self) -> (f64, f64) {
+        (self.left.escaped(), self.right.escaped())
+    }
+}
+
+impl Preconditioner for SketchUnit {
+    fn ingest(&mut self, g: &Matrix) {
+        self.left.update(g, self.beta2);
+        if !self.one_sided {
+            self.right.update(&g.t(), self.beta2);
+        }
+    }
+
+    fn refresh(&mut self) -> bool {
+        let mut did = self.left.refresh_root(self.eps, self.left_p());
+        if !self.one_sided {
+            did |= self.right.refresh_root(self.eps, 4.0);
+        }
+        did
+    }
+
+    fn ready(&self) -> bool {
+        self.left.has_root() && (self.one_sided || self.right.has_root())
+    }
+
+    fn apply(&self, g: &Matrix) -> Matrix {
+        // L̃^{-1/4} G R̃^{-1/4} in factored form, O(mnℓ)
+        // (one-sided: L̃^{-1/2} G).
+        let half = self.left.apply_left(g, self.eps, self.left_p());
+        if self.one_sided {
+            half
+        } else {
+            self.right.apply_right(&half, self.eps)
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.left.mem_bytes() + self.right.mem_bytes()
+    }
+
+    fn second_moment_bytes(&self) -> usize {
+        self.left.second_moment_bytes() + self.right.second_moment_bytes()
+    }
+
+    fn sketches(&self) -> Vec<&FdSketch> {
+        let mut out = vec![];
+        if let Side::Sketched { fd } = &self.left {
+            out.push(fd);
+        }
+        if let Side::Sketched { fd } = &self.right {
+            out.push(fd);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Diagonal (Adam) unit.
+// ---------------------------------------------------------------------------
+
+/// Diagonal Adam unit: first/second-moment EMAs with bias correction.
+///
+/// `apply` returns the full Adam direction `m̂/(√v̂ + ε)`; driven with
+/// grafting off and driver momentum β₁ = 0, the engine step reproduces
+/// the fused [`Adam`](super::Adam) bitwise (blocking included — the
+/// update is elementwise).
+pub struct AdamUnit {
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    m: Matrix,
+    v: Matrix,
+    t: usize,
+}
+
+impl AdamUnit {
+    pub fn new(shape: (usize, usize), beta1: f64, beta2: f64, eps: f64) -> Self {
+        let (r, c) = shape;
+        AdamUnit { beta1, beta2, eps, m: Matrix::zeros(r, c), v: Matrix::zeros(r, c), t: 0 }
+    }
+}
+
+impl Preconditioner for AdamUnit {
+    fn ingest(&mut self, g: &Matrix) {
+        self.t += 1;
+        let ms = self.m.as_mut_slice();
+        let vs = self.v.as_mut_slice();
+        let gs = g.as_slice();
+        for j in 0..gs.len() {
+            ms[j] = self.beta1 * ms[j] + (1.0 - self.beta1) * gs[j];
+            vs[j] = self.beta2 * vs[j] + (1.0 - self.beta2) * gs[j] * gs[j];
+        }
+    }
+
+    fn refresh(&mut self) -> bool {
+        false
+    }
+
+    fn ready(&self) -> bool {
+        true
+    }
+
+    fn apply(&self, g: &Matrix) -> Matrix {
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let mut out = Matrix::zeros(g.rows(), g.cols());
+        let os = out.as_mut_slice();
+        let ms = self.m.as_slice();
+        let vs = self.v.as_slice();
+        for j in 0..os.len() {
+            let mhat = ms[j] / bc1;
+            let vhat = vs[j] / bc2;
+            os[j] = mhat / (vhat.sqrt() + self.eps);
+        }
+        out
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.m.mem_bytes() + self.v.mem_bytes()
+    }
+
+    fn second_moment_bytes(&self) -> usize {
+        self.v.mem_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared per-block step driver.
+// ---------------------------------------------------------------------------
+
+/// Per-block optimizer state driven by the engine: a preconditioner unit
+/// plus the first-order companions (grafting, momentum).
+pub struct BlockState {
+    pub unit: Box<dyn Preconditioner>,
+    pub graft: Graft,
+    pub mu: Matrix,
+    /// Scratch gathered parameter block (engine-owned copy).
+    pub(crate) param: Matrix,
+    /// Scratch gathered gradient block.
+    pub(crate) grad: Matrix,
+}
+
+impl BlockState {
+    pub fn new(
+        unit: Box<dyn Preconditioner>,
+        graft: GraftType,
+        shape: (usize, usize),
+        beta2: f64,
+    ) -> Self {
+        let (r, c) = shape;
+        BlockState {
+            unit,
+            graft: Graft::new(graft, (r, c), beta2),
+            mu: Matrix::zeros(r, c),
+            param: Matrix::zeros(r, c),
+            grad: Matrix::zeros(r, c),
+        }
+    }
+}
+
+/// Parameters controlling one driven step (shared by all blocks).
+#[derive(Clone, Copy)]
+pub(crate) struct StepCtx {
+    pub t: usize,
+    pub scale: f64,
+    pub preconditioning: bool,
+    pub refresh_due: bool,
+    pub lr: f64,
+    pub beta1: f64,
+    pub weight_decay: f64,
+    pub stat_due: bool,
+    pub graft: GraftType,
+}
+
+/// One block step: the exact Shampoo/App. C flow — statistics, (possibly
+/// stale) root refresh, graft, precondition, transplant, momentum,
+/// decoupled weight decay. Returns `true` when an eigendecomposition ran
+/// (the engine counts refreshes for its amortization accounting).
+///
+/// Allocation-discipline: the unclipped path borrows the gathered
+/// gradient in place, and `GraftType::None` (whose graft "step" is a
+/// full clone of the gradient) skips the graft companion entirely.
+pub(crate) fn drive_block(st: &mut BlockState, ctx: &StepCtx) -> bool {
+    let BlockState { unit, graft, mu, param, grad } = st;
+    let scaled;
+    let g: &Matrix = if ctx.scale != 1.0 {
+        scaled = grad.scale(ctx.scale);
+        &scaled
+    } else {
+        grad
+    };
+    if ctx.stat_due {
+        unit.ingest(g);
+    }
+    let mut refreshed = false;
+    if ctx.preconditioning && (!unit.ready() || ctx.refresh_due) {
+        refreshed = unit.refresh();
+    }
+    let update = if ctx.preconditioning {
+        let dir = unit.apply(g);
+        if ctx.graft == GraftType::None {
+            dir
+        } else {
+            transplant(&graft.step(g), &dir)
+        }
+    } else {
+        graft.step(g)
+    };
+    mu.scale_inplace(ctx.beta1);
+    mu.axpy(1.0 - ctx.beta1, &update);
+    let ps = param.as_mut_slice();
+    let ms = mu.as_slice();
+    for j in 0..ps.len() {
+        ps[j] -= ctx.lr * (ms[j] + ctx.weight_decay * ps[j]);
+    }
+    refreshed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn kronecker_unit_whitens_after_refresh() {
+        let mut rng = Pcg64::new(200);
+        let mut unit = KroneckerUnit::new((6, 4), 1.0, 1e-9, false);
+        let g = Matrix::randn(6, 4, &mut rng);
+        assert!(!unit.ready());
+        unit.ingest(&g);
+        unit.refresh();
+        assert!(unit.ready());
+        // L^{-1/4} G R^{-1/4} with L = GGᵀ, R = GᵀG has unit-scale spectrum:
+        // for G = UΣVᵀ the preconditioned direction is UVᵀ (+ eps ridge).
+        let dir = unit.apply(&g);
+        let gram = crate::tensor::at_a(&dir);
+        for i in 0..4 {
+            assert!((gram[(i, i)] - 1.0).abs() < 1e-3, "diag {}", gram[(i, i)]);
+        }
+    }
+
+    #[test]
+    fn kronecker_one_sided_skips_right() {
+        let mut rng = Pcg64::new(201);
+        let mut unit = KroneckerUnit::new((5, 3), 0.999, 1e-6, true);
+        unit.ingest(&Matrix::randn(5, 3, &mut rng));
+        unit.refresh();
+        assert!(unit.ready());
+        assert_eq!(unit.r.fro_norm(), 0.0);
+        assert!(unit.r_root.is_none());
+    }
+
+    #[test]
+    fn sketch_unit_exposes_fd_sketches() {
+        // 10×2 with rank 4: left side is sketched (10 > 4), right exact.
+        let mut unit = SketchUnit::new((10, 2), 4, 0.999, 1e-6, false);
+        assert_eq!(unit.sketches().len(), 1);
+        let mut rng = Pcg64::new(202);
+        unit.ingest(&Matrix::randn(10, 2, &mut rng));
+        assert!(unit.sketches()[0].steps() > 0);
+    }
+
+    #[test]
+    fn adam_unit_matches_closed_form_first_step() {
+        let mut unit = AdamUnit::new((1, 1), 0.9, 0.999, 1e-8);
+        let g = Matrix::from_rows(&[vec![1234.5]]);
+        unit.ingest(&g);
+        let dir = unit.apply(&g);
+        // Bias correction ⇒ first direction magnitude ≈ 1 for any g scale.
+        assert!((dir[(0, 0)].abs() - 1.0).abs() < 1e-6);
+    }
+}

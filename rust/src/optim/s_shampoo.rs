@@ -12,9 +12,9 @@
 use super::adam::clip_scale;
 use super::grafting::{transplant, Graft, GraftType};
 use super::matrix_opt::Optimizer;
+use super::precond::{Preconditioner, SketchUnit};
 use super::shampoo::ShampooConfig;
-use crate::sketch::FdSketch;
-use crate::tensor::{a_at, inv_pth_root, matmul, Matrix};
+use crate::tensor::Matrix;
 
 /// Configuration: shared Shampoo hyperparameters plus the sketch rank ℓ
 /// (the paper's single new hyperparameter, set to 256 in §5.1).
@@ -31,103 +31,10 @@ impl Default for SShampooConfig {
     }
 }
 
-/// One side (L or R) of the factored preconditioner.
-enum Side {
-    /// dim ≤ ℓ: exact EMA factor, spectral root cached.
-    Exact { c: Matrix, root: Option<Matrix> },
-    /// dim > ℓ: EW-FD sketch (Obs. 6), applied in factored form.
-    Sketched { fd: FdSketch },
-}
-
-impl Side {
-    fn new(dim: usize, rank: usize, beta2: f64) -> Side {
-        if dim <= rank {
-            Side::Exact { c: Matrix::zeros(dim, dim), root: None }
-        } else {
-            Side::Sketched { fd: FdSketch::new(dim, rank, beta2) }
-        }
-    }
-
-    /// Update statistics with news factor Y (news = Y Yᵀ).
-    fn update(&mut self, y: &Matrix, beta2: f64) {
-        match self {
-            Side::Exact { c, .. } => {
-                c.scale_inplace(beta2);
-                c.axpy(1.0, &a_at(y));
-            }
-            Side::Sketched { fd } => {
-                fd.update(y);
-            }
-        }
-    }
-
-    /// Refresh any cached spectral roots (exact mode only).
-    fn refresh_root(&mut self, eps: f64, p: f64) {
-        if let Side::Exact { c, root } = self {
-            *root = Some(inv_pth_root(c, p, eps));
-        }
-    }
-
-    fn has_root(&self) -> bool {
-        match self {
-            Side::Exact { root, .. } => root.is_some(),
-            Side::Sketched { .. } => true,
-        }
-    }
-
-    /// Apply this side's `(·)^{-1/p}` from the left: `C^{-1/p} X`
-    /// (p = 4 two-sided Shampoo, p = 2 one-sided §3.4).
-    fn apply_left(&self, x: &Matrix, eps: f64, p: f64) -> Matrix {
-        match self {
-            Side::Exact { root, .. } => matmul(root.as_ref().expect("root not ready"), x),
-            Side::Sketched { fd } => {
-                // L̃ = Ḡ + (ρ_{1:t} + ε) I, per Alg. 3 line 6 plus the ε
-                // ridge of the initialization L̃₀ = εI.
-                let pre = fd.shifted(fd.escaped_mass() + eps);
-                pre.apply_inv_root_left(p, x)
-            }
-        }
-    }
-
-    /// Apply this side's `(·)^{-1/4}` from the right: `X C^{-1/4}`.
-    fn apply_right(&self, x: &Matrix, eps: f64) -> Matrix {
-        match self {
-            Side::Exact { root, .. } => matmul(x, root.as_ref().expect("root not ready")),
-            Side::Sketched { fd } => {
-                let pre = fd.shifted(fd.escaped_mass() + eps);
-                pre.apply_inv_root_right(4.0, x)
-            }
-        }
-    }
-
-    fn mem_bytes(&self) -> usize {
-        match self {
-            Side::Exact { c, root } => {
-                c.mem_bytes() + root.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
-            }
-            Side::Sketched { fd } => fd.mem_bytes(),
-        }
-    }
-
-    fn second_moment_bytes(&self) -> usize {
-        match self {
-            Side::Exact { c, .. } => c.mem_bytes(),
-            Side::Sketched { fd } => fd.mem_bytes(),
-        }
-    }
-
-    /// Escaped mass (0 in exact mode) — diagnostics.
-    fn escaped(&self) -> f64 {
-        match self {
-            Side::Exact { .. } => 0.0,
-            Side::Sketched { fd } => fd.escaped_mass(),
-        }
-    }
-}
-
 struct SShampooTensorState {
-    left: Side,
-    right: Side,
+    /// FD-sketched preconditioner unit (`Side` internals live in
+    /// [`super::precond`], shared with the parallel block engine).
+    unit: SketchUnit,
     graft: Graft,
     mu: Matrix,
 }
@@ -144,8 +51,13 @@ impl SShampoo {
         let states = shapes
             .iter()
             .map(|&(m, n)| SShampooTensorState {
-                left: Side::new(m, cfg.rank, cfg.base.beta2),
-                right: Side::new(n, cfg.rank, cfg.base.beta2),
+                unit: SketchUnit::new(
+                    (m, n),
+                    cfg.rank,
+                    cfg.base.beta2,
+                    cfg.base.eps,
+                    cfg.base.one_sided,
+                ),
                 graft: Graft::new(cfg.base.graft, (m, n), cfg.base.beta2),
                 mu: Matrix::zeros(m, n),
             })
@@ -155,10 +67,7 @@ impl SShampoo {
 
     /// Cumulative escaped mass per tensor (left, right) — E3/E9 diagnostics.
     pub fn escaped_mass(&self) -> Vec<(f64, f64)> {
-        self.states
-            .iter()
-            .map(|s| (s.left.escaped(), s.right.escaped()))
-            .collect()
+        self.states.iter().map(|s| s.unit.escaped()).collect()
     }
 }
 
@@ -179,36 +88,23 @@ impl Optimizer for SShampoo {
             // §6: S-Shampoo observes every stat_interval-th gradient and
             // updates its covariance (and thereby its inverse roots, which
             // are implicit in the factored form) at the same cadence.
-            let left_p = if cfg.one_sided { 2.0 } else { 4.0 };
             if t % cfg.stat_interval == 0 {
-                st.left.update(&g, cfg.beta2);
-                if !cfg.one_sided {
-                    st.right.update(&g.t(), cfg.beta2);
-                }
+                st.unit.ingest(&g);
                 if preconditioning && t % cfg.precond_interval == 0 {
-                    st.left.refresh_root(cfg.eps, left_p);
-                    if !cfg.one_sided {
-                        st.right.refresh_root(cfg.eps, 4.0);
-                    }
+                    st.unit.refresh();
                 }
             }
-            // Ensure exact-mode roots exist before first preconditioned use.
-            if preconditioning && !st.left.has_root() {
-                st.left.refresh_root(cfg.eps, left_p);
-            }
-            if preconditioning && !cfg.one_sided && !st.right.has_root() {
-                st.right.refresh_root(cfg.eps, 4.0);
+            // Ensure exact-mode roots exist before first preconditioned use
+            // (sketched sides are always "ready": their inverse roots come
+            // straight from the factored form).
+            if preconditioning && !st.unit.ready() {
+                st.unit.refresh();
             }
             let graft_step = st.graft.step(&g);
             let update = if preconditioning {
                 // L̃^{-1/4} G R̃^{-1/4} in factored form, O(mnℓ)
                 // (one-sided: L̃^{-1/2} G).
-                let half = st.left.apply_left(&g, cfg.eps, left_p);
-                let dir = if cfg.one_sided {
-                    half
-                } else {
-                    st.right.apply_right(&half, cfg.eps)
-                };
+                let dir = st.unit.apply(&g);
                 if cfg.graft == GraftType::None {
                     dir
                 } else {
@@ -230,17 +126,12 @@ impl Optimizer for SShampoo {
     fn mem_bytes(&self) -> usize {
         self.states
             .iter()
-            .map(|s| {
-                s.left.mem_bytes() + s.right.mem_bytes() + s.graft.mem_bytes() + s.mu.mem_bytes()
-            })
+            .map(|s| s.unit.mem_bytes() + s.graft.mem_bytes() + s.mu.mem_bytes())
             .sum()
     }
 
     fn second_moment_bytes(&self) -> usize {
-        self.states
-            .iter()
-            .map(|s| s.left.second_moment_bytes() + s.right.second_moment_bytes())
-            .sum()
+        self.states.iter().map(|s| s.unit.second_moment_bytes()).sum()
     }
 
     fn set_lr(&mut self, lr: f64) {
@@ -256,6 +147,7 @@ impl Optimizer for SShampoo {
 mod tests {
     use super::*;
     use crate::optim::shampoo::Shampoo;
+    use crate::tensor::matmul;
     use crate::util::rng::Pcg64;
 
     fn cfg(rank: usize) -> SShampooConfig {

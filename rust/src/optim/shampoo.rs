@@ -12,7 +12,8 @@
 use super::adam::clip_scale;
 use super::grafting::{transplant, Graft, GraftType};
 use super::matrix_opt::Optimizer;
-use crate::tensor::{a_at, at_a, inv_pth_root, matmul, Matrix};
+use super::precond::{KroneckerUnit, Preconditioner};
+use crate::tensor::Matrix;
 
 /// Hyperparameters shared by Shampoo and S-Shampoo.
 #[derive(Clone, Debug)]
@@ -63,10 +64,9 @@ impl Default for ShampooConfig {
 }
 
 struct ShampooTensorState {
-    l: Matrix,
-    r: Matrix,
-    l_root: Option<Matrix>,
-    r_root: Option<Matrix>,
+    /// Exact-Kronecker preconditioner unit (the shared
+    /// [`Preconditioner`] interface the parallel engine also drives).
+    unit: KroneckerUnit,
     graft: Graft,
     mu: Matrix,
 }
@@ -83,10 +83,7 @@ impl Shampoo {
         let states = shapes
             .iter()
             .map(|&(m, n)| ShampooTensorState {
-                l: Matrix::zeros(m, m),
-                r: Matrix::zeros(n, n),
-                l_root: None,
-                r_root: None,
+                unit: KroneckerUnit::new((m, n), cfg.beta2, cfg.eps, cfg.one_sided),
                 graft: Graft::new(cfg.graft, (m, n), cfg.beta2),
                 mu: Matrix::zeros(m, n),
             })
@@ -111,35 +108,17 @@ impl Optimizer for Shampoo {
             let g = if scale != 1.0 { g_raw.scale(scale) } else { g_raw.clone() };
             // Statistics every stat_interval steps.
             if t % cfg.stat_interval == 0 {
-                st.l.scale_inplace(cfg.beta2);
-                st.l.axpy(1.0, &a_at(&g));
-                if !cfg.one_sided {
-                    st.r.scale_inplace(cfg.beta2);
-                    st.r.axpy(1.0, &at_a(&g));
-                }
+                st.unit.ingest(&g);
             }
             // Inverse roots every precond_interval steps (and on the first
             // preconditioned step). One-sided uses L^{-1/2} (the full
             // AdaGrad exponent on the single factor).
-            if preconditioning
-                && (st.l_root.is_none() || t % cfg.precond_interval == 0)
-            {
-                let p = if cfg.one_sided { 2.0 } else { 4.0 };
-                st.l_root = Some(inv_pth_root(&st.l, p, cfg.eps));
-                if !cfg.one_sided {
-                    st.r_root = Some(inv_pth_root(&st.r, 4.0, cfg.eps));
-                }
+            if preconditioning && (!st.unit.ready() || t % cfg.precond_interval == 0) {
+                st.unit.refresh();
             }
             let graft_step = st.graft.step(&g);
             let update = if preconditioning {
-                let dir = if cfg.one_sided {
-                    matmul(st.l_root.as_ref().unwrap(), &g)
-                } else {
-                    matmul(
-                        &matmul(st.l_root.as_ref().unwrap(), &g),
-                        st.r_root.as_ref().unwrap(),
-                    )
-                };
+                let dir = st.unit.apply(&g);
                 if cfg.graft == GraftType::None {
                     dir
                 } else {
@@ -163,22 +142,12 @@ impl Optimizer for Shampoo {
     fn mem_bytes(&self) -> usize {
         self.states
             .iter()
-            .map(|s| {
-                s.l.mem_bytes()
-                    + s.r.mem_bytes()
-                    + s.l_root.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
-                    + s.r_root.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
-                    + s.graft.mem_bytes()
-                    + s.mu.mem_bytes()
-            })
+            .map(|s| s.unit.mem_bytes() + s.graft.mem_bytes() + s.mu.mem_bytes())
             .sum()
     }
 
     fn second_moment_bytes(&self) -> usize {
-        self.states
-            .iter()
-            .map(|s| s.l.mem_bytes() + s.r.mem_bytes())
-            .sum()
+        self.states.iter().map(|s| s.unit.second_moment_bytes()).sum()
     }
 
     fn set_lr(&mut self, lr: f64) {
@@ -282,12 +251,12 @@ mod tests {
         let g = Matrix::eye(2);
         opt.step(&mut params, &[g.clone()]);
         // t=1: 1 % 5 != 0 → no stats yet.
-        assert_eq!(opt.states[0].l.fro_norm(), 0.0);
+        assert_eq!(opt.states[0].unit.l.fro_norm(), 0.0);
         for _ in 0..4 {
             opt.step(&mut params, &[g.clone()]);
         }
         // t=5: stats captured.
-        assert!(opt.states[0].l.fro_norm() > 0.0);
+        assert!(opt.states[0].unit.l.fro_norm() > 0.0);
     }
 
     #[test]
@@ -310,7 +279,7 @@ mod tests {
         }
         assert!(params[0].max_diff(&target) < 0.05);
         // Right factor never accumulated.
-        assert_eq!(opt.states[0].r.fro_norm(), 0.0);
-        assert!(opt.states[0].r_root.is_none());
+        assert_eq!(opt.states[0].unit.r.fro_norm(), 0.0);
+        assert!(opt.states[0].unit.r_root.is_none());
     }
 }

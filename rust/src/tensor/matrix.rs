@@ -233,13 +233,21 @@ impl Matrix {
 
     /// Sub-matrix copy: rows [r0,r1), cols [c0,c1).
     pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
-        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
         let mut out = Matrix::zeros(r1 - r0, c1 - c0);
+        self.slice_into(r0, r1, c0, c1, &mut out);
+        out
+    }
+
+    /// Allocation-free [`Self::slice`]: copy rows [r0,r1) × cols [c0,c1)
+    /// into `out`, whose shape must match (the block engine's per-step
+    /// gather path).
+    pub fn slice_into(&self, r0: usize, r1: usize, c0: usize, c1: usize, out: &mut Matrix) {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        assert_eq!(out.shape(), (r1 - r0, c1 - c0), "slice_into shape mismatch");
         for i in r0..r1 {
             out.row_mut(i - r0)
                 .copy_from_slice(&self.row(i)[c0..c1]);
         }
-        out
     }
 
     /// Paste `block` with top-left corner at (r0, c0).
@@ -383,6 +391,10 @@ mod tests {
         let s = m.slice(1, 3, 2, 4);
         assert_eq!(s.shape(), (2, 2));
         assert_eq!(s[(0, 0)], 6.0);
+        // slice_into reuses an existing buffer and matches slice exactly.
+        let mut buf = Matrix::zeros(2, 2);
+        m.slice_into(1, 3, 2, 4, &mut buf);
+        assert_eq!(buf, s);
         let h = s.hcat(&s);
         assert_eq!(h.shape(), (2, 4));
         let v = s.vcat(&s);

@@ -7,10 +7,34 @@
 //! auto-vectorize) and split work across threads by output row blocks.
 
 use super::matrix::Matrix;
+use std::cell::Cell;
+
+thread_local! {
+    /// When set, dense kernels on this thread stay single-threaded. The
+    /// block engine's workers pin this so per-block math never nests a
+    /// second level of threading (oversubscription).
+    static SINGLE_THREAD: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run `f` with this thread's dense kernels pinned to one thread
+/// (restores the previous setting on exit; results are identical — the
+/// kernels' row partition does not change the arithmetic).
+pub fn with_single_thread<R>(f: impl FnOnce() -> R) -> R {
+    SINGLE_THREAD.with(|s| {
+        let prev = s.replace(true);
+        let out = f();
+        s.set(prev);
+        out
+    })
+}
 
 /// Number of worker threads for the dense kernels. Resolution order:
-/// `SKETCHY_THREADS` env var, then available parallelism, capped at 16.
+/// [`with_single_thread`] pin, `SKETCHY_THREADS` env var, then available
+/// parallelism, capped at 16.
 pub fn num_threads() -> usize {
+    if SINGLE_THREAD.with(|s| s.get()) {
+        return 1;
+    }
     if let Ok(s) = std::env::var("SKETCHY_THREADS") {
         if let Ok(n) = s.parse::<usize>() {
             return n.max(1);
@@ -269,6 +293,20 @@ mod tests {
             let c = matmul(&a, &b);
             assert!(c.max_diff(&naive_matmul(&a, &b)) < 1e-10);
         }
+    }
+
+    #[test]
+    fn single_thread_pin_scopes_and_restores() {
+        let outer = num_threads();
+        let (inner, nested) = with_single_thread(|| {
+            let inner = num_threads();
+            // Nested pins stay pinned and restore to pinned.
+            let nested = with_single_thread(num_threads);
+            (inner, nested)
+        });
+        assert_eq!(inner, 1);
+        assert_eq!(nested, 1);
+        assert_eq!(num_threads(), outer, "pin leaked past its scope");
     }
 
     #[test]

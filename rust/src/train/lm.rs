@@ -1,7 +1,7 @@
 //! Transformer-LM trainer (E10, the end-to-end driver): PJRT gradient
 //! artifact + Markov corpus + Rust optimizer + data-parallel coordinator.
 
-use super::artifact_worker::{params_to_f32, init_params_from_specs, ArtifactGradWorker, InputBuf};
+use super::artifact_worker::{init_params_from_specs, params_to_f32, ArtifactGradWorker, InputBuf};
 use super::metrics::CurveLog;
 use crate::coordinator::data_parallel_step;
 use crate::data::MarkovCorpus;

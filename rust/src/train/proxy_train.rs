@@ -2,7 +2,7 @@
 //! conformer block, molecular GNN — each driven through its PJRT
 //! artifact with any Rust optimizer.
 
-use super::artifact_worker::{params_to_f32, init_params_from_specs, ArtifactGradWorker, InputBuf};
+use super::artifact_worker::{init_params_from_specs, params_to_f32, ArtifactGradWorker, InputBuf};
 use super::metrics::CurveLog;
 use crate::coordinator::data_parallel_step;
 use crate::data::proxy::{AudioProxy, GraphProxy, ImageProxy};
@@ -153,6 +153,22 @@ impl ProxyTrainer {
                 (bufs, vec![], b.labels)
             }
         }
+    }
+
+    /// Build a parallel block-engine optimizer over this trainer's
+    /// parameter shapes (`engine-adam` | `engine-shampoo` |
+    /// `engine-s-shampoo`): data-parallel gradient workers upstream,
+    /// block-parallel preconditioning downstream — the §7 amortization
+    /// stacked end to end.
+    pub fn engine_optimizer(
+        &self,
+        name: &str,
+        base: crate::optim::ShampooConfig,
+        rank: usize,
+        ecfg: crate::optim::EngineConfig,
+    ) -> Result<crate::optim::PrecondEngine> {
+        crate::optim::engine_optimizer(name, &self.shapes, base, rank, ecfg)
+            .ok_or_else(|| anyhow!("unknown engine optimizer {name}"))
     }
 
     /// One data-parallel step; returns (loss, allreduced grads).

@@ -79,6 +79,27 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+
+    /// Boolean flag: a bare `--flag` switch means true; `--flag true|1|
+    /// yes|on` / `--flag false|0|no|off` (or `--flag=...`) parse
+    /// explicitly; absent means `default`. Unrecognized values warn
+    /// loudly instead of being silently ignored.
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        if self.has(key) {
+            return true;
+        }
+        match self.get(key) {
+            Some(v) => match v.to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" | "on" => true,
+                "0" | "false" | "no" | "off" => false,
+                other => {
+                    eprintln!("warning: --{key} expects a boolean, got {other:?}; using {default}");
+                    default
+                }
+            },
+            None => default,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -117,5 +138,21 @@ mod tests {
         let a = parse(&["x"]);
         assert_eq!(a.get_or("name", "d"), "d");
         assert_eq!(a.get_usize("n", 7), 7);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse(&["x", "--stagger-refresh", "--fresh", "false", "--stale=true"]);
+        assert!(a.get_bool("stagger-refresh", false));
+        assert!(!a.get_bool("fresh", true));
+        assert!(a.get_bool("stale", false));
+        assert!(a.get_bool("absent", true));
+        assert!(!a.get_bool("absent", false));
+        // Common non-Rust spellings parse too; garbage falls to default.
+        let b = parse(&["x", "--off-flag", "0", "--on-flag", "yes", "--bad", "maybe"]);
+        assert!(!b.get_bool("off-flag", true));
+        assert!(b.get_bool("on-flag", false));
+        assert!(b.get_bool("bad", true));
+        assert!(!b.get_bool("bad", false));
     }
 }

@@ -5,6 +5,16 @@
 //! flat-array values, `#` comments. That subset covers every config this
 //! repository ships; nested tables and multi-line values are rejected
 //! loudly rather than mis-parsed.
+//!
+//! Canonical sections consumed by the launcher:
+//! - `[train]` — `preset`, `steps`, `workers`, `lr`, `optimizer`
+//! - `[s_shampoo]` — `rank`, `beta2`, `weight_decay`, `clip`,
+//!   `stat_interval`, `precond_interval`, `graft`, `one_sided`
+//! - `[engine]` — parallel block-engine knobs: `threads` (0 = auto),
+//!   `block_size` (0 = one block per tensor), `refresh_interval`
+//!   (stale-preconditioner eigendecomposition cadence),
+//!   `stagger_refresh` (spread refreshes across blocks); see
+//!   [`crate::optim::EngineConfig::resolve`]
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -242,5 +252,17 @@ mod tests {
     fn section_key_listing() {
         let cfg = Config::parse("[s]\na = 1\nb = 2\n[t]\nc = 3").unwrap();
         assert_eq!(cfg.section_keys("s"), vec!["s.a", "s.b"]);
+    }
+
+    #[test]
+    fn engine_section_round_trips() {
+        let cfg = Config::parse(
+            "[engine]\nthreads = 4\nblock_size = 1024\nrefresh_interval = 10\nstagger_refresh = true",
+        )
+        .unwrap();
+        assert_eq!(cfg.usize_or("engine.threads", 0), 4);
+        assert_eq!(cfg.usize_or("engine.block_size", 0), 1024);
+        assert_eq!(cfg.usize_or("engine.refresh_interval", 1), 10);
+        assert!(cfg.bool_or("engine.stagger_refresh", false));
     }
 }

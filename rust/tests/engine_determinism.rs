@@ -1,0 +1,283 @@
+//! Integration tests for the parallel blocked preconditioner engine.
+//!
+//! The engine's contract: per-block work is self-contained, so thread
+//! count is *never* allowed to change the numbers — the parallel path
+//! must produce bitwise-identical parameters to the serial path — and
+//! driving the shared `Preconditioner` units through the engine must
+//! reproduce the reference optimizers they were extracted from.
+
+use sketchy::optim::{
+    Adam, EngineConfig, GraftType, Optimizer, PrecondEngine, Shampoo, ShampooConfig,
+};
+use sketchy::tensor::{at_a, Matrix};
+use sketchy::util::proptest::for_all_msg;
+use sketchy::util::rng::Pcg64;
+
+fn base_cfg() -> ShampooConfig {
+    ShampooConfig {
+        lr: 0.05,
+        start_preconditioning_step: 2,
+        graft: GraftType::Rmsprop,
+        clip: 5.0,
+        weight_decay: 1e-3,
+        ..Default::default()
+    }
+}
+
+fn random_grads(shapes: &[(usize, usize)], rng: &mut Pcg64) -> Vec<Matrix> {
+    shapes.iter().map(|&(m, n)| Matrix::randn(m, n, rng)).collect()
+}
+
+/// Step two engines (serial vs parallel) on an identical gradient stream
+/// and assert bitwise-equal parameters after every step.
+fn assert_parallel_matches_serial(
+    shapes: &[(usize, usize)],
+    make: impl Fn(EngineConfig) -> PrecondEngine,
+    block_size: usize,
+    steps: usize,
+    seed: u64,
+) {
+    let serial_cfg = EngineConfig {
+        threads: 1,
+        block_size,
+        refresh_interval: 3,
+        stagger: true,
+    };
+    let parallel_cfg = EngineConfig { threads: 4, ..serial_cfg };
+    let mut serial = make(serial_cfg);
+    let mut parallel = make(parallel_cfg);
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(seed);
+    for step in 0..steps {
+        let grads = random_grads(shapes, &mut rng);
+        serial.step(&mut p1, &grads);
+        parallel.step(&mut p2, &grads);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(
+                a.max_diff(b),
+                0.0,
+                "parallel diverged from serial at step {step}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_shampoo_engine_bitwise_matches_serial() {
+    let shapes = [(10, 7), (6, 6), (9, 1)];
+    assert_parallel_matches_serial(
+        &shapes,
+        |ecfg| PrecondEngine::shampoo(&shapes, base_cfg(), ecfg),
+        4,
+        15,
+        310,
+    );
+}
+
+#[test]
+fn parallel_sketched_engine_bitwise_matches_serial() {
+    let shapes = [(12, 10), (8, 3)];
+    assert_parallel_matches_serial(
+        &shapes,
+        |ecfg| PrecondEngine::sketched(&shapes, 3, base_cfg(), ecfg),
+        5,
+        15,
+        311,
+    );
+}
+
+#[test]
+fn engine_reproduces_plain_shampoo_bitwise() {
+    // Unblocked engine with the Shampoo cadence (stagger off,
+    // refresh_interval = precond_interval) must equal the reference
+    // Shampoo step for step: the refactor onto Preconditioner units and
+    // the engine driver changed no math.
+    let shapes = [(7, 5), (4, 4), (6, 1)];
+    let base = ShampooConfig {
+        stat_interval: 2,
+        precond_interval: 3,
+        start_preconditioning_step: 3,
+        graft: GraftType::RmspropNormalized,
+        ..base_cfg()
+    };
+    let ecfg = EngineConfig {
+        threads: 3,
+        block_size: 0,
+        refresh_interval: base.precond_interval,
+        stagger: false,
+    };
+    let mut reference = Shampoo::new(&shapes, base.clone());
+    let mut engine = PrecondEngine::shampoo(&shapes, base, ecfg);
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(312);
+    for step in 0..20 {
+        let grads = random_grads(&shapes, &mut rng);
+        reference.step(&mut p1, &grads);
+        engine.step(&mut p2, &grads);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "engine diverged from Shampoo at step {step}");
+        }
+    }
+}
+
+#[test]
+fn blocked_engine_adam_equals_fused_adam() {
+    // Adam is elementwise, so the blocked engine path must reproduce the
+    // fused implementation bitwise even across an arbitrary partition.
+    // The base config deliberately carries Shampoo-flavoured settings
+    // (grafting, driver momentum, intervals): PrecondEngine normalizes
+    // them away for UnitKind::Adam, so `engine-adam` can never silently
+    // stack a second momentum or graft on top of AdamUnit.
+    let shapes = [(5, 4), (3, 3)];
+    let mut fused = Adam::new(&shapes, 0.05);
+    fused.weight_decay = 0.01;
+    fused.clip = 1.0;
+    let base = ShampooConfig {
+        lr: 0.05,
+        beta2: 0.999,
+        weight_decay: 0.01,
+        clip: 1.0,
+        // Everything below is normalized away by the Adam engine path.
+        beta1: 0.9,
+        start_preconditioning_step: 7,
+        stat_interval: 2,
+        precond_interval: 3,
+        graft: GraftType::RmspropNormalized,
+        ..Default::default()
+    };
+    let ecfg = EngineConfig {
+        threads: 3,
+        block_size: 2,
+        refresh_interval: 1,
+        stagger: false,
+    };
+    let mut engine = PrecondEngine::adam(&shapes, base, ecfg);
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(313);
+    for step in 0..25 {
+        let grads = random_grads(&shapes, &mut rng);
+        fused.step(&mut p1, &grads);
+        engine.step(&mut p2, &grads);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "engine Adam diverged at step {step}");
+        }
+    }
+}
+
+#[test]
+fn fd_invariants_survive_concurrent_block_updates() {
+    // Property test over random shapes/seeds: after parallel stepping, every
+    // per-block FD sketch still satisfies the Alg. 1 invariants — the ℓ-th
+    // eigenvalue is exactly zero (deflation ran), eigenvalues descend, and
+    // the active basis is orthonormal.
+    for_all_msg(
+        314,
+        8,
+        |rng| {
+            let m = 8 + rng.below(7);
+            let n = 8 + rng.below(7);
+            let rank = 3 + rng.below(2);
+            let seed = rng.below(1 << 20) as u64;
+            (m, n, rank, seed)
+        },
+        |&(m, n, rank, seed)| {
+            let shapes = [(m, n)];
+            let base = ShampooConfig {
+                lr: 0.03,
+                start_preconditioning_step: 2,
+                graft: GraftType::Rmsprop,
+                ..Default::default()
+            };
+            let ecfg = EngineConfig {
+                threads: 4,
+                block_size: 6,
+                refresh_interval: 2,
+                stagger: true,
+            };
+            let mut engine = PrecondEngine::sketched(&shapes, rank, base, ecfg);
+            let mut params = vec![Matrix::zeros(m, n)];
+            let mut rng = Pcg64::new(seed);
+            for _ in 0..10 {
+                let grads = random_grads(&shapes, &mut rng);
+                engine.step(&mut params, &grads);
+            }
+            let mut checked = 0usize;
+            let mut failure = None;
+            engine.for_each_sketch(|fd| {
+                checked += 1;
+                let w = fd.eigenvalues();
+                let ell = fd.rank();
+                if w[ell - 1] != 0.0 {
+                    failure = Some(format!("ell-th eigenvalue nonzero: {}", w[ell - 1]));
+                    return;
+                }
+                for i in 1..w.len() {
+                    if w[i - 1] < w[i] - 1e-12 {
+                        failure = Some(format!("eigenvalues not descending at {i}"));
+                        return;
+                    }
+                }
+                let k = fd.active_rank();
+                if k > 0 {
+                    let basis = fd.basis().slice(0, fd.dim(), 0, k);
+                    let gram = at_a(&basis);
+                    let err = gram.max_diff(&Matrix::eye(k));
+                    if err > 1e-8 {
+                        failure = Some(format!("basis not orthonormal: {err}"));
+                    }
+                }
+            });
+            if let Some(msg) = failure {
+                return Err(msg);
+            }
+            if checked == 0 {
+                return Err("no sketched sides found — shrink rank or grow blocks".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn stale_refresh_schedule_amortizes_eigendecompositions() {
+    // refresh_interval = 4 with staggering: each block refreshes its
+    // inverse roots once per 4 steps (plus a forced first-use refresh),
+    // i.e. ~4x fewer eigendecompositions than the always-fresh schedule,
+    // spread across steps instead of bunched.
+    let shapes = [(8, 8)];
+    let base = ShampooConfig {
+        lr: 0.05,
+        start_preconditioning_step: 1,
+        graft: GraftType::Rmsprop,
+        ..Default::default()
+    };
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 4, // 4 blocks
+        refresh_interval: 4,
+        stagger: true,
+    };
+    let mut engine = PrecondEngine::shampoo(&shapes, base, ecfg);
+    assert_eq!(engine.blocks().len(), 4);
+    let mut params = vec![Matrix::zeros(8, 8)];
+    let mut rng = Pcg64::new(315);
+    let steps = 16;
+    for _ in 0..steps {
+        let grads = random_grads(&shapes, &mut rng);
+        engine.step(&mut params, &grads);
+    }
+    let blocks = engine.blocks().len();
+    let scheduled = steps * blocks / 4;
+    assert!(
+        engine.refreshes() >= scheduled && engine.refreshes() <= scheduled + blocks,
+        "refreshes {} outside amortized range [{}, {}]",
+        engine.refreshes(),
+        scheduled,
+        scheduled + blocks
+    );
+    // Sanity: the amortized engine still made parameter progress.
+    assert!(params[0].fro_norm() > 0.0);
+}

@@ -166,7 +166,7 @@ fn main() {
             .collect();
         let mut bh = bench("coordinator/allreduce_8x256x256", fast);
         bh.run(|| {
-            std::hint::black_box(sketchy::coordinator::tree_allreduce(shards.clone()));
+            std::hint::black_box(sketchy::coordinator::tree_allreduce(shards.clone()).unwrap());
         });
         record(&bh, String::new());
     }
@@ -174,7 +174,13 @@ fn main() {
     // ---------------- preconditioner engine (multi-block) ----------------
     // Serial-vs-parallel step latency over the §3.4 block partition with
     // the staggered stale-refresh schedule, plus a bitwise identity check.
-    // Emits bench_out/BENCH_precond_engine.json — the CI perf record.
+    // Emits bench_out/BENCH_precond_engine.json — the CI perf record,
+    // which `sketchy bench-gate` compares against the committed
+    // bench_out/BENCH_baseline.json. The record carries `calibration_ns`
+    // (a fixed single-threaded 256×256 matmul measured in this same
+    // process) so the gate can compare engine-time/calibration ratios
+    // instead of raw nanoseconds — baselines stay meaningful on CI
+    // runners of unknown speed.
     if run("engine/multiblock_step") {
         let eng_shapes = [(256usize, 256usize), (256, 128)];
         let block = 64;
@@ -211,6 +217,18 @@ fn main() {
                 }
             }
         }
+        // Machine-speed calibration for the regression gate: one fixed
+        // dense workload, pinned to a single thread so runner core
+        // counts cancel out of the normalized ratios.
+        let cal_a = Matrix::randn(256, 256, &mut rng);
+        let cal_b = Matrix::randn(256, 256, &mut rng);
+        let mut bh = bench("engine/calibration_matmul256_1t", fast);
+        let st_cal = bh.run(|| {
+            sketchy::tensor::ops::with_single_thread(|| {
+                std::hint::black_box(matmul(&cal_a, &cal_b));
+            });
+        });
+        record(&bh, "gate calibration".to_string());
         let mut eng = mk(1);
         let mut eng_params: Vec<Matrix> =
             eng_shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
@@ -226,15 +244,19 @@ fn main() {
         let speedup = st_serial.median.as_secs_f64() / st_par.median.as_secs_f64();
         record(&bh, format!("{n_blocks} blocks speedup x{speedup:.2} identical={identical}"));
         std::fs::create_dir_all("bench_out").ok();
+        let cal_ns = st_cal.median.as_nanos();
+        let serial_ns = st_serial.median.as_nanos();
+        let par_ns = st_par.median.as_nanos();
         let json = format!(
             "{{\n  \"bench\": \"precond_engine\",\n  \"shapes\": \"256x256+256x128\",\n  \
              \"block_size\": {block},\n  \"blocks\": {n_blocks},\n  \
              \"refresh_interval\": {refresh_interval},\n  \"serial_threads\": 1,\n  \
-             \"parallel_threads\": {par_threads},\n  \"serial_median_ns\": {},\n  \
-             \"parallel_median_ns\": {},\n  \"speedup\": {speedup:.4},\n  \
-             \"identical\": {identical}\n}}\n",
-            st_serial.median.as_nanos(),
-            st_par.median.as_nanos(),
+             \"parallel_threads\": {par_threads},\n  \"calibration_ns\": {cal_ns},\n  \
+             \"serial_median_ns\": {serial_ns},\n  \"parallel_median_ns\": {par_ns},\n  \
+             \"serial_per_calibration\": {:.4},\n  \"parallel_per_calibration\": {:.4},\n  \
+             \"speedup\": {speedup:.4},\n  \"identical\": {identical}\n}}\n",
+            serial_ns as f64 / cal_ns as f64,
+            par_ns as f64 / cal_ns as f64,
         );
         std::fs::write("bench_out/BENCH_precond_engine.json", &json).unwrap();
         println!("[engine perf record written to bench_out/BENCH_precond_engine.json]");

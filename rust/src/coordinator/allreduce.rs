@@ -17,9 +17,18 @@ pub struct AllreduceStats {
 
 /// Reduce worker gradient shards to their mean with a binary tree.
 /// Consumes the shards (rank 0's buffer becomes the output).
-pub fn tree_allreduce(mut shards: Vec<Vec<Matrix>>) -> (Vec<Matrix>, AllreduceStats) {
+///
+/// An empty shard list is a coordination bug (a step with zero workers);
+/// it surfaces as an error rather than a panic so driver loops — the
+/// data-parallel step and the cross-process shard engine alike — can
+/// report which step failed and shut down cleanly.
+pub fn tree_allreduce(
+    mut shards: Vec<Vec<Matrix>>,
+) -> anyhow::Result<(Vec<Matrix>, AllreduceStats)> {
     let w = shards.len();
-    assert!(w > 0, "no shards");
+    if w == 0 {
+        anyhow::bail!("tree_allreduce requires at least one shard");
+    }
     let mut stats = AllreduceStats::default();
     let mut stride = 1;
     while stride < w {
@@ -77,7 +86,7 @@ pub fn tree_allreduce(mut shards: Vec<Vec<Matrix>>) -> (Vec<Matrix>, AllreduceSt
     for m in &mut out {
         m.scale_inplace(scale);
     }
-    (out, stats)
+    Ok((out, stats))
 }
 
 #[cfg(test)]
@@ -124,7 +133,7 @@ mod tests {
                     })
                     .collect();
                 let want = serial_mean(&shards);
-                let (got, stats) = tree_allreduce(shards);
+                let (got, stats) = tree_allreduce(shards).expect("non-empty shards");
                 let expected_rounds = (workers as f64).log2().ceil() as usize;
                 if stats.rounds != expected_rounds {
                     return Err(format!(
@@ -145,16 +154,36 @@ mod tests {
     #[test]
     fn single_worker_is_identity() {
         let m = Matrix::from_rows(&[vec![1.0, 2.0]]);
-        let (out, stats) = tree_allreduce(vec![vec![m.clone()]]);
+        let (out, stats) = tree_allreduce(vec![vec![m.clone()]]).unwrap();
         assert_eq!(out[0], m);
         assert_eq!(stats.rounds, 0);
         assert_eq!(stats.elements_moved, 0);
     }
 
     #[test]
+    fn single_worker_is_bitwise_identity() {
+        // The single-shard path must not touch the payload at all: mean
+        // over one shard divides by 1, which preserves every bit.
+        let m = Matrix::from_vec(1, 3, vec![-0.0, f64::MIN_POSITIVE / 2.0, 1.0 / 3.0]);
+        let (out, _) = tree_allreduce(vec![vec![m.clone()]]).unwrap();
+        for (a, b) in out[0].as_slice().iter().zip(m.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_shard_list_is_an_error_not_a_panic() {
+        let err = tree_allreduce(vec![]).unwrap_err();
+        assert!(
+            err.to_string().contains("at least one shard"),
+            "unhelpful error: {err}"
+        );
+    }
+
+    #[test]
     fn elements_moved_counts_comm_volume() {
         let shards: Vec<Vec<Matrix>> = (0..4).map(|_| vec![Matrix::zeros(2, 3)]).collect();
-        let (_, stats) = tree_allreduce(shards);
+        let (_, stats) = tree_allreduce(shards).unwrap();
         // Round 1: 2 pairs × 6 elements; round 2: 1 pair × 6.
         assert_eq!(stats.elements_moved, 18);
     }

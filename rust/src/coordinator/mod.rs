@@ -10,10 +10,18 @@
 //! amortizing the batch-size-independent optimizer cost exactly as §7
 //! argues.
 
+//! A second coordination axis shards the *optimizer* itself:
+//! [`shard`] partitions the block engine's preconditioner blocks across
+//! worker processes over the [`wire`] protocol, so eigendecomposition
+//! refreshes stop being bound by one process's cores.
+
 pub mod allreduce;
 pub mod pipeline;
+pub mod shard;
+pub mod wire;
 pub mod worker;
 
 pub use allreduce::{tree_allreduce, AllreduceStats};
 pub use pipeline::BoundedQueue;
+pub use shard::{ShardConfig, ShardExecutor, ShardLaunch, ShardTransport};
 pub use worker::{data_parallel_step, GradientWorker, StepResult};

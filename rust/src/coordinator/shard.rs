@@ -1,0 +1,1117 @@
+//! Cross-process sharded block execution.
+//!
+//! The §3.4 blocked engine (`optim::engine`) parallelizes preconditioner
+//! blocks within one process; this module shards them **across worker
+//! processes**. The driver partitions the engine's block list over N
+//! `sketchy shard-worker` processes (spawned from the same binary),
+//! ships each shard its gathered block statistics, drives
+//! `Preconditioner::ingest/refresh/apply` remotely, and scatters the
+//! returned parameter blocks back — the engine's gather → drive →
+//! scatter step *is* the RPC boundary.
+//!
+//! Transport is localhost TCP or a Unix domain socket, speaking the
+//! length-prefixed codec of [`super::wire`]. Workers announce their
+//! listen address on stdout (`SKETCHY-SHARD-LISTENING <transport>
+//! <addr>`), keep all block state in-process across connections, and
+//! cache their last step reply keyed by `t` — so the driver can
+//! reconnect after a transport failure and replay the in-flight request
+//! without double-applying it. Hard worker failures (a dead process)
+//! surface as `anyhow` errors naming the shard.
+//!
+//! Determinism: every block's math runs in exactly one place, parameter
+//! payloads travel as raw IEEE-754 bits, and the scatter writes each
+//! disjoint block window directly — so an N-shard run is **bitwise
+//! identical** to the in-process engine (`tests/shard_determinism.rs`
+//! and the CI `shard-smoke` job assert this for N ∈ {2, 4}).
+
+use super::wire::{self, BlockSpec, InitMsg, StepEntry, StepMsg, StepOkMsg, WireMsg};
+use crate::optim::engine::{drive_all, effective_worker_threads, BlockExecutor, UnitKind};
+use crate::optim::precond::{BlockState, StepCtx};
+use crate::optim::{Block, GraftType, ShampooConfig};
+use crate::tensor::Matrix;
+use crate::util::cli::Args;
+use crate::util::config::Config;
+use anyhow::{anyhow, bail, ensure, Context};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Stdout handshake prefix a worker prints once its listener is bound.
+const LISTEN_PREFIX: &str = "SKETCHY-SHARD-LISTENING ";
+
+/// Bound on establishing a TCP connection to a worker.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Bound on waiting for any single worker reply. A hung (not dead)
+/// worker then surfaces as a shard-named error instead of freezing the
+/// driver; generous enough for a stale-schedule eigendecomposition burst
+/// on paper-scale (1024) blocks.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+
+// ---------------------------------------------------------------------------
+// Configuration.
+// ---------------------------------------------------------------------------
+
+/// Wire transport between driver and shard workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardTransport {
+    /// Localhost TCP (portable default).
+    Tcp,
+    /// Unix domain socket (lower latency; unix targets only).
+    #[cfg(unix)]
+    Unix,
+}
+
+impl ShardTransport {
+    /// Parse a `--shard-transport` / `shard.transport` value.
+    pub fn parse(s: &str) -> anyhow::Result<ShardTransport> {
+        match s.to_ascii_lowercase().as_str() {
+            "tcp" => Ok(ShardTransport::Tcp),
+            #[cfg(unix)]
+            "unix" => Ok(ShardTransport::Unix),
+            #[cfg(not(unix))]
+            "unix" => bail!("shard transport 'unix' is unavailable on this platform"),
+            other => bail!("unknown shard transport {other:?} (expected tcp or unix)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ShardTransport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardTransport::Tcp => f.write_str("tcp"),
+            #[cfg(unix)]
+            ShardTransport::Unix => f.write_str("unix"),
+        }
+    }
+}
+
+/// Sharding knobs, resolvable from CLI flags and `[shard]` config keys
+/// (same precedence discipline as [`crate::optim::EngineConfig::resolve`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// Worker process count (0 = sharding disabled, run in-process).
+    pub shards: usize,
+    /// Wire transport for the worker links.
+    pub transport: ShardTransport,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { shards: 0, transport: ShardTransport::Tcp }
+    }
+}
+
+impl ShardConfig {
+    /// Resolve from `--shards` / `--shard-transport` CLI flags with
+    /// `shard.count` / `shard.transport` config keys as fallback.
+    pub fn resolve(args: &Args, cfg: &Config) -> anyhow::Result<ShardConfig> {
+        let d = ShardConfig::default();
+        let shards = args.get_usize("shards", cfg.usize_or("shard.count", d.shards));
+        let transport = match args.get("shard-transport") {
+            Some(s) => ShardTransport::parse(s)?,
+            None => ShardTransport::parse(&cfg.str_or("shard.transport", "tcp"))?,
+        };
+        Ok(ShardConfig { shards, transport })
+    }
+
+    /// Whether cross-process sharding is requested.
+    pub fn enabled(&self) -> bool {
+        self.shards >= 1
+    }
+}
+
+/// How to start shard workers: which binary to exec, how many shards,
+/// which transport.
+#[derive(Clone, Debug)]
+pub struct ShardLaunch {
+    /// Binary exposing the `shard-worker` subcommand (normally this
+    /// process's own executable; tests pass `CARGO_BIN_EXE_sketchy`).
+    pub program: PathBuf,
+    pub shards: usize,
+    pub transport: ShardTransport,
+}
+
+impl ShardLaunch {
+    /// Launch plan re-execing the current binary.
+    pub fn current_exe(cfg: &ShardConfig) -> anyhow::Result<ShardLaunch> {
+        ensure!(cfg.shards >= 1, "shard launch requires --shards >= 1");
+        Ok(ShardLaunch {
+            program: std::env::current_exe().context("resolve current executable")?,
+            shards: cfg.shards,
+            transport: cfg.transport,
+        })
+    }
+}
+
+/// Deterministic contiguous block partition: shard `s` owns a balanced
+/// run of consecutive block indices (earlier shards take the remainder).
+pub fn assign_blocks(n_blocks: usize, shards: usize) -> Vec<Vec<usize>> {
+    assert!(shards >= 1, "assign_blocks requires at least one shard");
+    let base = n_blocks / shards;
+    let extra = n_blocks % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut next = 0;
+    for s in 0..shards {
+        let take = base + usize::from(s < extra);
+        out.push((next..next + take).collect());
+        next += take;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Transport plumbing shared by both sides.
+// ---------------------------------------------------------------------------
+
+/// A connected driver↔worker byte stream.
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn set_read_timeout(&self, dur: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(dur),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(dur),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A worker's announced listen address.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum WorkerAddr {
+    Tcp(String),
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+/// Parse a worker's stdout handshake line.
+fn parse_listen_line(line: &str) -> Option<WorkerAddr> {
+    let rest = line.trim().strip_prefix(LISTEN_PREFIX)?;
+    let (kind, addr) = rest.split_once(' ')?;
+    match kind {
+        "tcp" => Some(WorkerAddr::Tcp(addr.to_string())),
+        #[cfg(unix)]
+        "unix" => Some(WorkerAddr::Unix(PathBuf::from(addr))),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side: `sketchy shard-worker`.
+// ---------------------------------------------------------------------------
+
+/// Block states owned by one worker process. Persists across
+/// connections so the driver can reconnect without losing statistics.
+struct WorkerState {
+    graft: GraftType,
+    /// Thread knob for the worker's own block pool (0 = auto).
+    threads: usize,
+    states: Vec<Mutex<BlockState>>,
+    /// Global block index → local slot.
+    slot_of: BTreeMap<u32, usize>,
+    /// Last step reply, keyed by `t` — replayed verbatim when the driver
+    /// retries a step after a reconnect (idempotency).
+    last_step: Option<(u64, WireMsg)>,
+}
+
+impl WorkerState {
+    fn build(init: &InitMsg) -> anyhow::Result<WorkerState> {
+        let kind = UnitKind::from_code(init.kind, init.rank as usize)
+            .ok_or_else(|| anyhow!("unknown unit kind code {}", init.kind))?;
+        let graft = GraftType::from_code(init.graft)
+            .ok_or_else(|| anyhow!("unknown graft code {}", init.graft))?;
+        // Only beta2 / eps / one_sided / graft reach unit construction;
+        // per-step knobs (lr, momentum, decay, schedule) travel in every
+        // Step message, so the worker needs no full driver config.
+        let base = ShampooConfig {
+            beta2: init.beta2,
+            eps: init.eps,
+            one_sided: init.one_sided,
+            graft,
+            ..Default::default()
+        };
+        let mut states = Vec::with_capacity(init.blocks.len());
+        let mut slot_of = BTreeMap::new();
+        for (slot, b) in init.blocks.iter().enumerate() {
+            ensure!(b.rows > 0 && b.cols > 0, "block {} has empty shape", b.index);
+            ensure!(
+                slot_of.insert(b.index, slot).is_none(),
+                "duplicate block index {} in init",
+                b.index
+            );
+            let shape = (b.rows as usize, b.cols as usize);
+            states.push(Mutex::new(BlockState::new(
+                kind.make(shape, &base),
+                graft,
+                shape,
+                init.beta2,
+            )));
+        }
+        Ok(WorkerState {
+            graft,
+            threads: init.threads as usize,
+            states,
+            slot_of,
+            last_step: None,
+        })
+    }
+
+    fn process_step(&mut self, msg: &StepMsg) -> anyhow::Result<StepOkMsg> {
+        ensure!(
+            msg.entries.len() == self.states.len(),
+            "step carries {} blocks, shard owns {}",
+            msg.entries.len(),
+            self.states.len()
+        );
+        let mut ctxs: Vec<Option<StepCtx>> = vec![None; self.states.len()];
+        for ent in &msg.entries {
+            let slot = *self
+                .slot_of
+                .get(&ent.index)
+                .ok_or_else(|| anyhow!("unknown block index {}", ent.index))?;
+            ensure!(ctxs[slot].is_none(), "duplicate entry for block {}", ent.index);
+            let st = self.states[slot].get_mut().unwrap();
+            ensure!(
+                ent.param.shape() == st.param.shape() && ent.grad.shape() == st.grad.shape(),
+                "block {} shape mismatch: got {:?}/{:?}, own {:?}",
+                ent.index,
+                ent.param.shape(),
+                ent.grad.shape(),
+                st.param.shape()
+            );
+            st.param.as_mut_slice().copy_from_slice(ent.param.as_slice());
+            st.grad.as_mut_slice().copy_from_slice(ent.grad.as_slice());
+            ctxs[slot] = Some(StepCtx {
+                t: msg.t as usize,
+                scale: msg.scale,
+                preconditioning: msg.preconditioning,
+                refresh_due: ent.refresh_due,
+                lr: msg.lr,
+                beta1: msg.beta1,
+                weight_decay: msg.weight_decay,
+                stat_due: msg.stat_due,
+                graft: self.graft,
+            });
+        }
+        let ctxs: Vec<StepCtx> = ctxs
+            .into_iter()
+            .map(|c| c.ok_or_else(|| anyhow!("step is missing an assigned block")))
+            .collect::<anyhow::Result<_>>()?;
+        let threads = effective_worker_threads(self.threads, self.states.len());
+        let refreshes = drive_all(&mut self.states, &ctxs, threads);
+        let mut entries = Vec::with_capacity(msg.entries.len());
+        for ent in &msg.entries {
+            let slot = self.slot_of[&ent.index];
+            entries.push((ent.index, self.states[slot].get_mut().unwrap().param.clone()));
+        }
+        Ok(StepOkMsg { t: msg.t, refreshes: refreshes as u32, entries })
+    }
+
+    fn mem_stats(&mut self) -> (u64, u64) {
+        let mut mem = 0u64;
+        let mut second = 0u64;
+        for s in &mut self.states {
+            let st = s.get_mut().unwrap();
+            mem += st.mem_bytes() as u64;
+            second += st.second_moment_bytes() as u64;
+        }
+        (mem, second)
+    }
+}
+
+/// Serve one connection. `Ok(true)` keeps the worker alive for further
+/// connections (reconnect support); `Ok(false)` means clean shutdown.
+fn handle_conn<S: Read + Write>(
+    stream: &mut S,
+    state: &mut Option<WorkerState>,
+    worker_id: u32,
+) -> anyhow::Result<bool> {
+    wire::write_msg(stream, &WireMsg::Hello { worker_id })?;
+    loop {
+        let msg = match wire::read_msg_opt(stream)? {
+            None => return Ok(true), // driver closed; await a reconnect
+            Some(m) => m,
+        };
+        match msg {
+            WireMsg::Init(init) => {
+                let reply = match WorkerState::build(&init) {
+                    Ok(ws) => {
+                        *state = Some(ws);
+                        WireMsg::Ok
+                    }
+                    Err(e) => WireMsg::Error { message: format!("init: {e:#}") },
+                };
+                wire::write_msg(stream, &reply)?;
+            }
+            WireMsg::Step(step) => {
+                let reply = match state.as_mut() {
+                    None => WireMsg::Error { message: "step before init".into() },
+                    Some(ws) => match &ws.last_step {
+                        Some((t, cached)) if *t == step.t => cached.clone(),
+                        _ => match ws.process_step(&step) {
+                            Ok(ok) => {
+                                let reply = WireMsg::StepOk(ok);
+                                ws.last_step = Some((step.t, reply.clone()));
+                                reply
+                            }
+                            Err(e) => {
+                                WireMsg::Error { message: format!("step t={}: {e:#}", step.t) }
+                            }
+                        },
+                    },
+                };
+                wire::write_msg(stream, &reply)?;
+            }
+            WireMsg::MemStats => {
+                let reply = match state.as_mut() {
+                    None => WireMsg::MemStatsOk { mem_bytes: 0, second_moment_bytes: 0 },
+                    Some(ws) => {
+                        let (mem_bytes, second_moment_bytes) = ws.mem_stats();
+                        WireMsg::MemStatsOk { mem_bytes, second_moment_bytes }
+                    }
+                };
+                wire::write_msg(stream, &reply)?;
+            }
+            WireMsg::Shutdown => {
+                wire::write_msg(stream, &WireMsg::Ok)?;
+                return Ok(false);
+            }
+            other => {
+                let reply =
+                    WireMsg::Error { message: format!("unexpected driver message: {other:?}") };
+                wire::write_msg(stream, &reply)?;
+            }
+        }
+    }
+}
+
+fn announce(detail: &str) -> anyhow::Result<()> {
+    let mut out = std::io::stdout();
+    writeln!(out, "{LISTEN_PREFIX}{detail}").context("announce listen address")?;
+    out.flush().context("flush listen address")?;
+    Ok(())
+}
+
+/// Entry point for the `sketchy shard-worker` subcommand: bind a
+/// listener, announce it on stdout, then serve driver connections until
+/// a `Shutdown` message arrives. Block state persists across
+/// connections; per-connection transport errors are logged and the
+/// worker keeps listening.
+pub fn serve_worker(args: &Args) -> anyhow::Result<()> {
+    let worker_id = args.get_usize("worker-id", 0) as u32;
+    let transport = ShardTransport::parse(&args.get_or("transport", "tcp"))?;
+    let mut state: Option<WorkerState> = None;
+    match transport {
+        ShardTransport::Tcp => {
+            let listener = TcpListener::bind("127.0.0.1:0").context("shard worker: bind tcp")?;
+            let addr = listener.local_addr().context("shard worker: local addr")?;
+            announce(&format!("tcp {addr}"))?;
+            for conn in listener.incoming() {
+                let mut stream = match conn {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("shard worker {worker_id}: accept failed: {e}");
+                        continue;
+                    }
+                };
+                match handle_conn(&mut stream, &mut state, worker_id) {
+                    Ok(true) => continue,
+                    Ok(false) => break,
+                    Err(e) => {
+                        eprintln!("shard worker {worker_id}: connection error: {e:#}");
+                        continue;
+                    }
+                }
+            }
+        }
+        #[cfg(unix)]
+        ShardTransport::Unix => {
+            let dir = args
+                .get("socket-dir")
+                .map(PathBuf::from)
+                .unwrap_or_else(std::env::temp_dir);
+            let path = dir.join(format!(
+                "sketchy-shard-{worker_id}-{}.sock",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_file(&path);
+            let listener = UnixListener::bind(&path)
+                .with_context(|| format!("shard worker: bind {}", path.display()))?;
+            announce(&format!("unix {}", path.display()))?;
+            loop {
+                let mut stream = match listener.accept() {
+                    Ok((s, _)) => s,
+                    Err(e) => {
+                        eprintln!("shard worker {worker_id}: accept failed: {e}");
+                        continue;
+                    }
+                };
+                match handle_conn(&mut stream, &mut state, worker_id) {
+                    Ok(true) => continue,
+                    Ok(false) => break,
+                    Err(e) => {
+                        eprintln!("shard worker {worker_id}: connection error: {e:#}");
+                        continue;
+                    }
+                }
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Driver side.
+// ---------------------------------------------------------------------------
+
+/// One spawned worker process plus its (reconnectable) connection.
+struct WorkerProc {
+    shard: usize,
+    child: Child,
+    addr: WorkerAddr,
+    conn: Option<Stream>,
+    /// Encoded frame of the last request, replayed after a reconnect
+    /// (safe: the worker deduplicates steps by `t`).
+    last_req: Vec<u8>,
+    /// Held so late worker prints land in the pipe instead of EPIPE.
+    _stdout: BufReader<ChildStdout>,
+}
+
+impl WorkerProc {
+    fn spawn(launch: &ShardLaunch, shard: usize) -> anyhow::Result<WorkerProc> {
+        let mut cmd = Command::new(&launch.program);
+        cmd.arg("shard-worker")
+            .arg("--worker-id")
+            .arg(shard.to_string())
+            .arg("--transport")
+            .arg(launch.transport.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit());
+        let mut child = cmd
+            .spawn()
+            .with_context(|| format!("spawn {} shard-worker", launch.program.display()))?;
+        let stdout = child
+            .stdout
+            .take()
+            .ok_or_else(|| anyhow!("worker stdout pipe missing"))?;
+        let mut reader = BufReader::new(stdout);
+        let addr = loop {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).context("read worker handshake")?;
+            if n == 0 {
+                let _ = child.kill();
+                let _ = child.wait();
+                bail!("worker exited before announcing a listen address");
+            }
+            if let Some(addr) = parse_listen_line(&line) {
+                break addr;
+            }
+            // Tolerate stray prints ahead of the announcement.
+        };
+        Ok(WorkerProc { shard, child, addr, conn: None, last_req: Vec::new(), _stdout: reader })
+    }
+
+    fn connect(&mut self) -> anyhow::Result<()> {
+        let mut stream = match &self.addr {
+            WorkerAddr::Tcp(addr) => {
+                let sock = addr
+                    .to_socket_addrs()
+                    .with_context(|| format!("resolve {addr}"))?
+                    .next()
+                    .ok_or_else(|| anyhow!("no socket addr in {addr}"))?;
+                Stream::Tcp(
+                    TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
+                        .with_context(|| format!("connect tcp {addr}"))?,
+                )
+            }
+            #[cfg(unix)]
+            WorkerAddr::Unix(path) => Stream::Unix(
+                UnixStream::connect(path)
+                    .with_context(|| format!("connect unix {}", path.display()))?,
+            ),
+        };
+        // Bound every reply wait: a wedged worker becomes a shard-named
+        // error (after one reconnect attempt) instead of a frozen driver.
+        let _ = stream.set_read_timeout(Some(REPLY_TIMEOUT));
+        match wire::read_msg(&mut stream).context("read worker hello")? {
+            WireMsg::Hello { worker_id } if worker_id as usize == self.shard => {}
+            WireMsg::Hello { worker_id } => {
+                bail!("worker identity mismatch: got {worker_id}, want {}", self.shard)
+            }
+            other => bail!("expected hello, got {other:?}"),
+        }
+        if let Stream::Tcp(t) = &stream {
+            // Step frames are small; don't let Nagle delay them.
+            let _ = t.set_nodelay(true);
+        }
+        self.conn = Some(stream);
+        Ok(())
+    }
+
+    fn try_send(&mut self, frame: &[u8]) -> anyhow::Result<()> {
+        if self.conn.is_none() {
+            self.connect()?;
+        }
+        let conn = self.conn.as_mut().unwrap();
+        conn.write_all(frame).context("write frame")?;
+        conn.flush().context("flush frame")?;
+        Ok(())
+    }
+
+    /// Send a request, reconnecting once on transport failure.
+    fn send(&mut self, msg: &WireMsg) -> anyhow::Result<()> {
+        let frame = wire::encode_frame(msg)?;
+        if let Err(first) = self.try_send(&frame) {
+            self.conn = None;
+            self.try_send(&frame)
+                .with_context(|| format!("resend after transport error ({first:#})"))?;
+        }
+        self.last_req = frame;
+        Ok(())
+    }
+
+    /// Receive the pending reply. On transport failure, reconnect and
+    /// replay the last request once — the worker's step cache makes the
+    /// replay idempotent even if the original request already applied.
+    fn recv(&mut self) -> anyhow::Result<WireMsg> {
+        let first = match self.conn.as_mut() {
+            Some(conn) => wire::read_msg(conn),
+            None => Err(anyhow!("not connected")),
+        };
+        match first {
+            Ok(msg) => Ok(msg),
+            Err(first) => {
+                self.conn = None;
+                let frame = self.last_req.clone();
+                ensure!(!frame.is_empty(), "no request to replay after {first:#}");
+                self.try_send(&frame)
+                    .with_context(|| format!("reconnect after transport error ({first:#})"))?;
+                let conn = self.conn.as_mut().unwrap();
+                wire::read_msg(conn)
+                    .with_context(|| format!("reply after reconnect ({first:#})"))
+            }
+        }
+    }
+
+    fn request(&mut self, msg: &WireMsg) -> anyhow::Result<WireMsg> {
+        self.send(msg)?;
+        self.recv()
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        // Graceful stop: Shutdown over the live connection, short grace
+        // period, then SIGKILL as the backstop.
+        let graceful = match self.conn.as_mut() {
+            Some(conn) => {
+                let _ = conn.set_read_timeout(Some(Duration::from_secs(2)));
+                match wire::encode_frame(&WireMsg::Shutdown) {
+                    Ok(frame) => {
+                        conn.write_all(&frame).and_then(|_| conn.flush()).is_ok()
+                            && wire::read_msg(conn).is_ok()
+                    }
+                    Err(_) => false,
+                }
+            }
+            None => false,
+        };
+        if graceful {
+            let deadline = Instant::now() + Duration::from_secs(2);
+            loop {
+                match self.child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    _ => {
+                        let _ = self.child.kill();
+                        let _ = self.child.wait();
+                        break;
+                    }
+                }
+            }
+        } else {
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+        }
+        #[cfg(unix)]
+        if let WorkerAddr::Unix(path) = &self.addr {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// [`BlockExecutor`] driving blocks across worker processes.
+pub struct ShardExecutor {
+    /// Mutex for interior mutability: `mem_bytes` RPCs through `&self`.
+    workers: Mutex<Vec<WorkerProc>>,
+    /// shard → owned global block indices.
+    assignment: Vec<Vec<usize>>,
+    transport: ShardTransport,
+}
+
+impl ShardExecutor {
+    /// Spawn `launch.shards` workers (capped at the block count), assign
+    /// contiguous block runs, and initialize each worker's states.
+    pub fn launch(
+        launch: &ShardLaunch,
+        blocks: &[Block],
+        kind: UnitKind,
+        base: &ShampooConfig,
+        threads: usize,
+    ) -> anyhow::Result<ShardExecutor> {
+        ensure!(launch.shards >= 1, "shard launch requires at least one shard");
+        ensure!(!blocks.is_empty(), "shard launch requires at least one block");
+        let shards = launch.shards.min(blocks.len());
+        let assignment = assign_blocks(blocks.len(), shards);
+        // threads = 0 (auto) means "all cores" — but N colocated workers
+        // each doing that would oversubscribe the host N-fold. Split the
+        // auto budget across shards; an explicit knob passes through
+        // untouched. Thread counts never change the numbers.
+        let worker_threads = if threads == 0 {
+            (crate::tensor::ops::num_threads() / shards).max(1)
+        } else {
+            threads
+        };
+        let mut workers = Vec::with_capacity(shards);
+        for (shard, owned) in assignment.iter().enumerate() {
+            let mut w = WorkerProc::spawn(launch, shard)
+                .with_context(|| format!("shard {shard}: spawn worker"))?;
+            let specs: Vec<BlockSpec> = owned
+                .iter()
+                .map(|&i| {
+                    let (rows, cols) = blocks[i].shape();
+                    BlockSpec { index: i as u32, rows: rows as u32, cols: cols as u32 }
+                })
+                .collect();
+            let init = WireMsg::Init(InitMsg {
+                kind: kind.code(),
+                rank: kind.rank() as u32,
+                beta2: base.beta2,
+                eps: base.eps,
+                one_sided: base.one_sided,
+                graft: base.graft.code(),
+                threads: worker_threads as u32,
+                blocks: specs,
+            });
+            match w.request(&init).with_context(|| format!("shard {shard}: init"))? {
+                WireMsg::Ok => {}
+                WireMsg::Error { message } => bail!("shard {shard}: init failed: {message}"),
+                other => bail!("shard {shard}: unexpected init reply {other:?}"),
+            }
+            workers.push(w);
+        }
+        Ok(ShardExecutor {
+            workers: Mutex::new(workers),
+            assignment,
+            transport: launch.transport,
+        })
+    }
+
+    /// Worker process count actually launched.
+    pub fn shards(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Fault injection for tests: SIGKILL one worker process. The next
+    /// step surfaces an error naming the shard.
+    pub fn kill_worker(&mut self, shard: usize) -> anyhow::Result<()> {
+        let workers = self.workers.get_mut().unwrap();
+        let w = workers
+            .get_mut(shard)
+            .ok_or_else(|| anyhow!("no shard {shard}"))?;
+        w.child.kill().context("kill worker")?;
+        let _ = w.child.wait();
+        Ok(())
+    }
+
+    /// Fault injection for tests: drop every driver-side connection.
+    /// The next request reconnects transparently (workers keep state).
+    pub fn drop_connections(&mut self) {
+        for w in self.workers.get_mut().unwrap().iter_mut() {
+            w.conn = None;
+        }
+    }
+
+    fn mem_stats_total(&self) -> (usize, usize) {
+        let mut workers = self.workers.lock().unwrap();
+        let mut mem = 0usize;
+        let mut second = 0usize;
+        for w in workers.iter_mut() {
+            match w.request(&WireMsg::MemStats) {
+                Ok(WireMsg::MemStatsOk { mem_bytes, second_moment_bytes }) => {
+                    mem += mem_bytes as usize;
+                    second += second_moment_bytes as usize;
+                }
+                Ok(other) => {
+                    eprintln!("shard {}: unexpected memstats reply {other:?}", w.shard);
+                }
+                Err(e) => eprintln!("shard {}: memstats failed: {e:#}", w.shard),
+            }
+        }
+        (mem, second)
+    }
+}
+
+impl BlockExecutor for ShardExecutor {
+    fn step_blocks(
+        &mut self,
+        blocks: &[Block],
+        params: &mut [Matrix],
+        grads: &[Matrix],
+        ctxs: &[StepCtx],
+    ) -> anyhow::Result<usize> {
+        if blocks.is_empty() {
+            return Ok(0);
+        }
+        debug_assert_eq!(blocks.len(), ctxs.len());
+        // The wire ships the step-wide ctx fields once per shard (only
+        // refresh_due varies across blocks in the engine's schedule).
+        // Reject heterogeneous batches loudly instead of silently
+        // applying ctxs[0] to every block.
+        let common = &ctxs[0];
+        for (i, c) in ctxs.iter().enumerate() {
+            ensure!(
+                c.t == common.t
+                    && c.scale.to_bits() == common.scale.to_bits()
+                    && c.preconditioning == common.preconditioning
+                    && c.stat_due == common.stat_due
+                    && c.lr.to_bits() == common.lr.to_bits()
+                    && c.beta1.to_bits() == common.beta1.to_bits()
+                    && c.weight_decay.to_bits() == common.weight_decay.to_bits()
+                    && c.graft == common.graft,
+                "block {i}: ctx differs from block 0 in a step-wide field \
+                 (only refresh_due may vary across blocks on the shard wire)"
+            );
+        }
+        let ShardExecutor { workers, assignment, .. } = self;
+        let workers = workers.get_mut().unwrap();
+        // Ship every shard its gathered block statistics first, then
+        // collect replies in shard order — workers compute concurrently.
+        for (shard, w) in workers.iter_mut().enumerate() {
+            let entries: Vec<StepEntry> = assignment[shard]
+                .iter()
+                .map(|&i| {
+                    let b = &blocks[i];
+                    StepEntry {
+                        index: i as u32,
+                        refresh_due: ctxs[i].refresh_due,
+                        param: params[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
+                        grad: grads[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
+                    }
+                })
+                .collect();
+            let msg = WireMsg::Step(StepMsg {
+                t: common.t as u64,
+                scale: common.scale,
+                preconditioning: common.preconditioning,
+                stat_due: common.stat_due,
+                lr: common.lr,
+                beta1: common.beta1,
+                weight_decay: common.weight_decay,
+                entries,
+            });
+            w.send(&msg)
+                .with_context(|| format!("shard {shard}: send step t={}", common.t))?;
+        }
+        let mut refreshes = 0usize;
+        for (shard, w) in workers.iter_mut().enumerate() {
+            let reply = w
+                .recv()
+                .with_context(|| format!("shard {shard}: step t={} reply", common.t))?;
+            let ok = match reply {
+                WireMsg::StepOk(ok) => ok,
+                WireMsg::Error { message } => bail!("shard {shard}: worker error: {message}"),
+                other => bail!("shard {shard}: unexpected step reply {other:?}"),
+            };
+            ensure!(
+                ok.t == common.t as u64,
+                "shard {shard}: reply for step {} while driving step {}",
+                ok.t,
+                common.t
+            );
+            ensure!(
+                ok.entries.len() == assignment[shard].len(),
+                "shard {shard}: returned {} blocks, owns {}",
+                ok.entries.len(),
+                assignment[shard].len()
+            );
+            refreshes += ok.refreshes as usize;
+            // Ownership bounds: assignments are contiguous runs, so a
+            // range check validates each returned index in O(1).
+            let (own_lo, own_hi) = match (assignment[shard].first(), assignment[shard].last()) {
+                (Some(&lo), Some(&hi)) => (lo, hi),
+                _ => (1, 0), // empty shard: any index is foreign
+            };
+            // Scatter: write each returned block into its disjoint
+            // parameter window (bitwise — payloads are raw f64 bits).
+            for (index, block_param) in &ok.entries {
+                let i = *index as usize;
+                ensure!(
+                    i >= own_lo && i <= own_hi && i < blocks.len(),
+                    "shard {shard}: returned foreign block {i}"
+                );
+                let b = &blocks[i];
+                ensure!(
+                    block_param.shape() == b.shape(),
+                    "shard {shard}: block {i} shape {:?}, want {:?}",
+                    block_param.shape(),
+                    b.shape()
+                );
+                params[b.tensor].set_slice(b.r0, b.c0, block_param);
+            }
+        }
+        Ok(refreshes)
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.mem_stats_total().0
+    }
+
+    fn second_moment_bytes(&self) -> usize {
+        self.mem_stats_total().1
+    }
+
+    fn label(&self) -> String {
+        format!("shards={}/{}", self.assignment.len(), self.transport)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::engine::{EngineConfig, PrecondEngine};
+    use crate::optim::matrix_opt::Optimizer;
+    use crate::optim::partition;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn assignment_is_balanced_contiguous_and_total() {
+        let a = assign_blocks(10, 3);
+        assert_eq!(a, vec![vec![0, 1, 2, 3], vec![4, 5, 6], vec![7, 8, 9]]);
+        let b = assign_blocks(2, 4);
+        assert_eq!(b, vec![vec![0], vec![1], vec![], vec![]]);
+        let c = assign_blocks(0, 2);
+        assert_eq!(c, vec![Vec::<usize>::new(), vec![]]);
+        // Determinism: same inputs, same partition.
+        assert_eq!(assign_blocks(10, 3), a);
+    }
+
+    #[test]
+    fn transport_parse_and_display() {
+        assert_eq!(ShardTransport::parse("tcp").unwrap(), ShardTransport::Tcp);
+        assert_eq!(ShardTransport::parse("TCP").unwrap(), ShardTransport::Tcp);
+        assert!(ShardTransport::parse("carrier-pigeon").is_err());
+        assert_eq!(ShardTransport::Tcp.to_string(), "tcp");
+        #[cfg(unix)]
+        {
+            assert_eq!(ShardTransport::parse("unix").unwrap(), ShardTransport::Unix);
+            assert_eq!(ShardTransport::Unix.to_string(), "unix");
+        }
+    }
+
+    #[test]
+    fn shard_config_resolution_precedence() {
+        let cfg = Config::parse("[shard]\ncount = 3\ntransport = \"tcp\"").unwrap();
+        let args = Args::parse(["train", "--shards", "2"].iter().map(|s| s.to_string()));
+        let sc = ShardConfig::resolve(&args, &cfg).unwrap();
+        assert_eq!(sc.shards, 2); // CLI beats config
+        assert_eq!(sc.transport, ShardTransport::Tcp);
+        assert!(sc.enabled());
+        let defaults = ShardConfig::resolve(&Args::default(), &Config::default()).unwrap();
+        assert_eq!(defaults.shards, 0);
+        assert!(!defaults.enabled());
+        let bad = Args::parse(
+            ["train", "--shard-transport", "smoke-signals"].iter().map(|s| s.to_string()),
+        );
+        assert!(ShardConfig::resolve(&bad, &Config::default()).is_err());
+    }
+
+    #[test]
+    fn listen_line_parses() {
+        assert_eq!(
+            parse_listen_line("SKETCHY-SHARD-LISTENING tcp 127.0.0.1:4091\n"),
+            Some(WorkerAddr::Tcp("127.0.0.1:4091".into()))
+        );
+        assert_eq!(parse_listen_line("unrelated noise"), None);
+        assert_eq!(parse_listen_line("SKETCHY-SHARD-LISTENING warp 9"), None);
+        #[cfg(unix)]
+        assert_eq!(
+            parse_listen_line("SKETCHY-SHARD-LISTENING unix /tmp/w0.sock"),
+            Some(WorkerAddr::Unix(PathBuf::from("/tmp/w0.sock")))
+        );
+    }
+
+    #[test]
+    fn worker_state_matches_in_process_engine_bitwise() {
+        // Drive the same gradient stream through (a) the in-process
+        // engine and (b) the worker-side state machine fed by hand-built
+        // Step messages — the math on both sides of the wire must agree
+        // bitwise. This pins the worker implementation without sockets.
+        let shapes = [(6usize, 4usize)];
+        let base = ShampooConfig {
+            lr: 0.05,
+            start_preconditioning_step: 2,
+            graft: GraftType::Rmsprop,
+            ..Default::default()
+        };
+        let ecfg = EngineConfig { threads: 1, block_size: 3, refresh_interval: 2, stagger: false };
+        let mut engine = PrecondEngine::shampoo(&shapes, base.clone(), ecfg);
+        let blocks = partition(&shapes, 3);
+        let specs: Vec<BlockSpec> = blocks
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                let (rows, cols) = b.shape();
+                BlockSpec { index: i as u32, rows: rows as u32, cols: cols as u32 }
+            })
+            .collect();
+        let init = InitMsg {
+            kind: UnitKind::Shampoo.code(),
+            rank: 0,
+            beta2: base.beta2,
+            eps: base.eps,
+            one_sided: base.one_sided,
+            graft: base.graft.code(),
+            threads: 1,
+            blocks: specs,
+        };
+        let mut ws = WorkerState::build(&init).unwrap();
+        let mut p_eng = vec![crate::tensor::Matrix::zeros(6, 4)];
+        let mut p_ws = p_eng.clone();
+        let mut rng = Pcg64::new(99);
+        for t in 1..=6u64 {
+            let grads = vec![crate::tensor::Matrix::randn(6, 4, &mut rng)];
+            engine.step(&mut p_eng, &grads);
+            let entries: Vec<StepEntry> = blocks
+                .iter()
+                .enumerate()
+                .map(|(i, b)| StepEntry {
+                    index: i as u32,
+                    refresh_due: t % 2 == 0, // stagger off, interval 2
+                    param: p_ws[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
+                    grad: grads[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
+                })
+                .collect();
+            let msg = StepMsg {
+                t,
+                scale: 1.0, // clip disabled in base
+                preconditioning: t as usize >= base.start_preconditioning_step,
+                stat_due: true,
+                lr: base.lr,
+                beta1: base.beta1,
+                weight_decay: base.weight_decay,
+                entries,
+            };
+            let ok = ws.process_step(&msg).unwrap();
+            for (index, block_param) in &ok.entries {
+                let b = &blocks[*index as usize];
+                p_ws[b.tensor].set_slice(b.r0, b.c0, block_param);
+            }
+            assert_eq!(
+                p_eng[0].max_diff(&p_ws[0]),
+                0.0,
+                "worker path diverged from engine at step {t}"
+            );
+        }
+        // The idempotency cache replays the last step verbatim.
+        let cached = ws.last_step.clone().unwrap();
+        assert_eq!(cached.0, 6);
+    }
+
+    #[test]
+    fn worker_state_rejects_malformed_steps() {
+        let init = InitMsg {
+            kind: UnitKind::Adam.code(),
+            rank: 0,
+            beta2: 0.999,
+            eps: 1e-6,
+            one_sided: false,
+            graft: GraftType::None.code(),
+            threads: 1,
+            blocks: vec![BlockSpec { index: 4, rows: 2, cols: 2 }],
+        };
+        let mut ws = WorkerState::build(&init).unwrap();
+        let mk_step = |entries| StepMsg {
+            t: 1,
+            scale: 1.0,
+            preconditioning: true,
+            stat_due: true,
+            lr: 0.1,
+            beta1: 0.0,
+            weight_decay: 0.0,
+            entries,
+        };
+        // Unknown block index.
+        let bad = mk_step(vec![StepEntry {
+            index: 9,
+            refresh_due: false,
+            param: Matrix::zeros(2, 2),
+            grad: Matrix::zeros(2, 2),
+        }]);
+        assert!(ws.process_step(&bad).is_err());
+        // Shape mismatch.
+        let bad = mk_step(vec![StepEntry {
+            index: 4,
+            refresh_due: false,
+            param: Matrix::zeros(3, 2),
+            grad: Matrix::zeros(3, 2),
+        }]);
+        assert!(ws.process_step(&bad).is_err());
+        // Wrong block count.
+        assert!(ws.process_step(&mk_step(vec![])).is_err());
+        // Init rejects garbage codes and duplicate blocks.
+        assert!(WorkerState::build(&InitMsg { kind: 9, ..init.clone() }).is_err());
+        assert!(WorkerState::build(&InitMsg { graft: 77, ..init.clone() }).is_err());
+        let dup = InitMsg {
+            blocks: vec![
+                BlockSpec { index: 4, rows: 2, cols: 2 },
+                BlockSpec { index: 4, rows: 2, cols: 2 },
+            ],
+            ..init
+        };
+        assert!(WorkerState::build(&dup).is_err());
+    }
+}

@@ -1,0 +1,516 @@
+//! Length-prefixed wire codec for the cross-process shard engine.
+//!
+//! The driver and its `sketchy shard-worker` processes exchange frames
+//! over localhost TCP or Unix domain sockets (see [`super::shard`]). A
+//! frame is a little-endian `u32` payload length followed by the payload:
+//! a one-byte message tag plus fixed-width fields. Every `f64` travels as
+//! its IEEE-754 bit pattern (`to_bits`/`from_bits`), so a parameter block
+//! round-trips **bitwise exactly** — the property the shard determinism
+//! tests pin down. No serde, no external deps.
+//!
+//! Protocol (driver ⇄ worker, strict request/response):
+//!
+//! | driver sends      | worker replies      |
+//! |-------------------|---------------------|
+//! | [`WireMsg::Init`] | [`WireMsg::Ok`]     |
+//! | [`WireMsg::Step`] | [`WireMsg::StepOk`] |
+//! | [`WireMsg::MemStats`] | [`WireMsg::MemStatsOk`] |
+//! | [`WireMsg::Shutdown`] | [`WireMsg::Ok`], then exits |
+//!
+//! plus [`WireMsg::Hello`] (worker → driver, once per connection) and
+//! [`WireMsg::Error`] (worker → driver, in place of any reply).
+
+use crate::tensor::Matrix;
+use anyhow::{bail, Context};
+use std::io::{Read, Write};
+
+/// Upper bound on a single frame (guards against corrupt length
+/// prefixes allocating unbounded memory).
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Shard of one tensor block assigned to a worker: the engine's global
+/// block index plus the block shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockSpec {
+    pub index: u32,
+    pub rows: u32,
+    pub cols: u32,
+}
+
+/// Driver → worker: build per-block preconditioner states.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InitMsg {
+    /// Unit family: 0 = Shampoo, 1 = Sketched (`rank` applies), 2 = Adam.
+    pub kind: u8,
+    /// FD sketch size ℓ (sketched units only).
+    pub rank: u32,
+    pub beta2: f64,
+    pub eps: f64,
+    pub one_sided: bool,
+    /// Grafting method code ([`crate::optim::GraftType::code`]).
+    pub graft: u8,
+    /// Worker-side thread knob (0 = auto); never changes the numbers.
+    pub threads: u32,
+    pub blocks: Vec<BlockSpec>,
+}
+
+/// One block's inputs for a driven step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepEntry {
+    pub index: u32,
+    /// Whether this block's staggered refresh slot lands on this step.
+    pub refresh_due: bool,
+    pub param: Matrix,
+    pub grad: Matrix,
+}
+
+/// Driver → worker: drive every assigned block one step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepMsg {
+    pub t: u64,
+    pub scale: f64,
+    pub preconditioning: bool,
+    pub stat_due: bool,
+    pub lr: f64,
+    pub beta1: f64,
+    pub weight_decay: f64,
+    pub entries: Vec<StepEntry>,
+}
+
+/// Worker → driver: updated parameter blocks + refresh accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepOkMsg {
+    /// Echo of the driving step's `t` (idempotent-retry key).
+    pub t: u64,
+    /// Eigendecompositions run on this shard during the step.
+    pub refreshes: u32,
+    pub entries: Vec<(u32, Matrix)>,
+}
+
+/// Every message that can cross the shard wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    /// Worker → driver greeting carrying the identity it was spawned with.
+    Hello { worker_id: u32 },
+    Init(InitMsg),
+    Step(StepMsg),
+    StepOk(StepOkMsg),
+    MemStats,
+    MemStatsOk { mem_bytes: u64, second_moment_bytes: u64 },
+    Shutdown,
+    Ok,
+    Error { message: String },
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_INIT: u8 = 2;
+const TAG_STEP: u8 = 3;
+const TAG_STEP_OK: u8 = 4;
+const TAG_MEM_STATS: u8 = 5;
+const TAG_MEM_STATS_OK: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+const TAG_OK: u8 = 8;
+const TAG_ERROR: u8 = 9;
+
+// ---------------------------------------------------------------------------
+// Encoding.
+// ---------------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn boolean(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+    fn string(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn matrix(&mut self, m: &Matrix) {
+        self.u32(m.rows() as u32);
+        self.u32(m.cols() as u32);
+        for &x in m.as_slice() {
+            self.f64(x);
+        }
+    }
+}
+
+/// Encode a message as a complete length-prefixed frame, ready to write.
+///
+/// Fails (rather than truncating the `u32` length prefix or tripping the
+/// receiver's cap mid-run) when the payload exceeds [`MAX_FRAME_BYTES`]
+/// — both sides enforce the same bound.
+pub fn encode_frame(msg: &WireMsg) -> anyhow::Result<Vec<u8>> {
+    let mut e = Enc { buf: Vec::with_capacity(64) };
+    match msg {
+        WireMsg::Hello { worker_id } => {
+            e.u8(TAG_HELLO);
+            e.u32(*worker_id);
+        }
+        WireMsg::Init(init) => {
+            e.u8(TAG_INIT);
+            e.u8(init.kind);
+            e.u32(init.rank);
+            e.f64(init.beta2);
+            e.f64(init.eps);
+            e.boolean(init.one_sided);
+            e.u8(init.graft);
+            e.u32(init.threads);
+            e.u32(init.blocks.len() as u32);
+            for b in &init.blocks {
+                e.u32(b.index);
+                e.u32(b.rows);
+                e.u32(b.cols);
+            }
+        }
+        WireMsg::Step(step) => {
+            e.u8(TAG_STEP);
+            e.u64(step.t);
+            e.f64(step.scale);
+            e.boolean(step.preconditioning);
+            e.boolean(step.stat_due);
+            e.f64(step.lr);
+            e.f64(step.beta1);
+            e.f64(step.weight_decay);
+            e.u32(step.entries.len() as u32);
+            for ent in &step.entries {
+                e.u32(ent.index);
+                e.boolean(ent.refresh_due);
+                e.matrix(&ent.param);
+                e.matrix(&ent.grad);
+            }
+        }
+        WireMsg::StepOk(ok) => {
+            e.u8(TAG_STEP_OK);
+            e.u64(ok.t);
+            e.u32(ok.refreshes);
+            e.u32(ok.entries.len() as u32);
+            for (index, param) in &ok.entries {
+                e.u32(*index);
+                e.matrix(param);
+            }
+        }
+        WireMsg::MemStats => e.u8(TAG_MEM_STATS),
+        WireMsg::MemStatsOk { mem_bytes, second_moment_bytes } => {
+            e.u8(TAG_MEM_STATS_OK);
+            e.u64(*mem_bytes);
+            e.u64(*second_moment_bytes);
+        }
+        WireMsg::Shutdown => e.u8(TAG_SHUTDOWN),
+        WireMsg::Ok => e.u8(TAG_OK),
+        WireMsg::Error { message } => {
+            e.u8(TAG_ERROR);
+            e.string(message);
+        }
+    }
+    if e.buf.len() > MAX_FRAME_BYTES {
+        bail!(
+            "shard wire: frame payload {} bytes exceeds cap {MAX_FRAME_BYTES}; \
+             use more shards or a smaller --block-size so per-shard steps fit a frame",
+            e.buf.len()
+        );
+    }
+    let mut frame = Vec::with_capacity(4 + e.buf.len());
+    frame.extend_from_slice(&(e.buf.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&e.buf);
+    Ok(frame)
+}
+
+/// Write one message as a frame and flush.
+pub fn write_msg<W: Write>(w: &mut W, msg: &WireMsg) -> anyhow::Result<()> {
+    let frame = encode_frame(msg)?;
+    w.write_all(&frame).context("shard wire: write frame")?;
+    w.flush().context("shard wire: flush")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Decoding.
+// ---------------------------------------------------------------------------
+
+struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("shard wire: truncated frame (need {n} bytes at offset {})", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn boolean(&mut self) -> anyhow::Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("shard wire: bad bool byte {other}"),
+        }
+    }
+    fn string(&mut self) -> anyhow::Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).context("shard wire: non-utf8 string")
+    }
+    fn matrix(&mut self) -> anyhow::Result<Matrix> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        if rows > 1 << 20 || cols > 1 << 20 || rows.saturating_mul(cols) > 1 << 27 {
+            bail!("shard wire: implausible matrix shape {rows}x{cols}");
+        }
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(self.f64()?);
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+    fn done(&self) -> anyhow::Result<()> {
+        if self.i != self.b.len() {
+            bail!("shard wire: {} trailing bytes in frame", self.b.len() - self.i);
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame payload (without the length prefix).
+pub fn decode_payload(payload: &[u8]) -> anyhow::Result<WireMsg> {
+    let mut d = Dec { b: payload, i: 0 };
+    let msg = match d.u8()? {
+        TAG_HELLO => WireMsg::Hello { worker_id: d.u32()? },
+        TAG_INIT => {
+            let kind = d.u8()?;
+            let rank = d.u32()?;
+            let beta2 = d.f64()?;
+            let eps = d.f64()?;
+            let one_sided = d.boolean()?;
+            let graft = d.u8()?;
+            let threads = d.u32()?;
+            let n = d.u32()? as usize;
+            let mut blocks = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                blocks.push(BlockSpec { index: d.u32()?, rows: d.u32()?, cols: d.u32()? });
+            }
+            WireMsg::Init(InitMsg { kind, rank, beta2, eps, one_sided, graft, threads, blocks })
+        }
+        TAG_STEP => {
+            let t = d.u64()?;
+            let scale = d.f64()?;
+            let preconditioning = d.boolean()?;
+            let stat_due = d.boolean()?;
+            let lr = d.f64()?;
+            let beta1 = d.f64()?;
+            let weight_decay = d.f64()?;
+            let n = d.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let index = d.u32()?;
+                let refresh_due = d.boolean()?;
+                let param = d.matrix()?;
+                let grad = d.matrix()?;
+                entries.push(StepEntry { index, refresh_due, param, grad });
+            }
+            WireMsg::Step(StepMsg {
+                t,
+                scale,
+                preconditioning,
+                stat_due,
+                lr,
+                beta1,
+                weight_decay,
+                entries,
+            })
+        }
+        TAG_STEP_OK => {
+            let t = d.u64()?;
+            let refreshes = d.u32()?;
+            let n = d.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let index = d.u32()?;
+                let param = d.matrix()?;
+                entries.push((index, param));
+            }
+            WireMsg::StepOk(StepOkMsg { t, refreshes, entries })
+        }
+        TAG_MEM_STATS => WireMsg::MemStats,
+        TAG_MEM_STATS_OK => {
+            WireMsg::MemStatsOk { mem_bytes: d.u64()?, second_moment_bytes: d.u64()? }
+        }
+        TAG_SHUTDOWN => WireMsg::Shutdown,
+        TAG_OK => WireMsg::Ok,
+        TAG_ERROR => WireMsg::Error { message: d.string()? },
+        other => bail!("shard wire: unknown message tag {other}"),
+    };
+    d.done()?;
+    Ok(msg)
+}
+
+/// Read one frame. `Ok(None)` means the peer closed the connection
+/// cleanly (EOF before any length byte).
+pub fn read_msg_opt<R: Read>(r: &mut R) -> anyhow::Result<Option<WireMsg>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let n = r.read(&mut len_buf[got..]).context("shard wire: read frame length")?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("shard wire: connection closed mid-length ({got}/4 bytes)");
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME_BYTES {
+        bail!("shard wire: frame length {len} exceeds cap {MAX_FRAME_BYTES}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("shard wire: read frame payload")?;
+    decode_payload(&payload).map(Some)
+}
+
+/// Read one frame, treating EOF as an error (driver side: a reply is
+/// always expected).
+pub fn read_msg<R: Read>(r: &mut R) -> anyhow::Result<WireMsg> {
+    match read_msg_opt(r)? {
+        Some(msg) => Ok(msg),
+        None => bail!("shard wire: connection closed while awaiting reply"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn roundtrip(msg: WireMsg) {
+        let frame = encode_frame(&msg).unwrap();
+        let mut cursor = &frame[..];
+        let got = read_msg(&mut cursor).unwrap();
+        assert_eq!(got, msg);
+        assert!(cursor.is_empty(), "frame not fully consumed");
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        let mut rng = Pcg64::new(77);
+        roundtrip(WireMsg::Hello { worker_id: 3 });
+        roundtrip(WireMsg::Init(InitMsg {
+            kind: 1,
+            rank: 16,
+            beta2: 0.999,
+            eps: 1e-6,
+            one_sided: true,
+            graft: 4,
+            threads: 0,
+            blocks: vec![
+                BlockSpec { index: 0, rows: 7, cols: 5 },
+                BlockSpec { index: 3, rows: 4, cols: 4 },
+            ],
+        }));
+        roundtrip(WireMsg::Step(StepMsg {
+            t: 42,
+            scale: 0.5,
+            preconditioning: true,
+            stat_due: false,
+            lr: 1e-3,
+            beta1: 0.9,
+            weight_decay: 1e-4,
+            entries: vec![StepEntry {
+                index: 7,
+                refresh_due: true,
+                param: Matrix::randn(3, 4, &mut rng),
+                grad: Matrix::randn(3, 4, &mut rng),
+            }],
+        }));
+        roundtrip(WireMsg::StepOk(StepOkMsg {
+            t: 42,
+            refreshes: 2,
+            entries: vec![(7, Matrix::randn(3, 4, &mut rng))],
+        }));
+        roundtrip(WireMsg::MemStats);
+        roundtrip(WireMsg::MemStatsOk { mem_bytes: 1024, second_moment_bytes: 512 });
+        roundtrip(WireMsg::Shutdown);
+        roundtrip(WireMsg::Ok);
+        roundtrip(WireMsg::Error { message: "shard 2: boom".into() });
+    }
+
+    #[test]
+    fn f64_payloads_are_bitwise_exact() {
+        // Values that decimal formatting would mangle: subnormals, -0.0,
+        // NaN payloads, and an irrational-looking mantissa.
+        let vals =
+            [f64::MIN_POSITIVE / 2.0, -0.0, f64::from_bits(0x7ff8_0000_dead_beef), 1.0 / 3.0];
+        let m = Matrix::from_vec(1, 4, vals.to_vec());
+        let msg = WireMsg::StepOk(StepOkMsg { t: 1, refreshes: 0, entries: vec![(0, m.clone())] });
+        let frame = encode_frame(&msg).unwrap();
+        let got = read_msg(&mut &frame[..]).unwrap();
+        match got {
+            WireMsg::StepOk(ok) => {
+                for (a, b) in ok.entries[0].1.as_slice().iter().zip(m.as_slice()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eof_is_none_truncation_is_error() {
+        let frame = encode_frame(&WireMsg::Ok).unwrap();
+        assert_eq!(read_msg_opt(&mut std::io::empty()).unwrap(), None);
+        // Cut inside the length prefix.
+        assert!(read_msg_opt(&mut &frame[..2]).is_err());
+        // Cut inside the payload.
+        assert!(read_msg_opt(&mut &frame[..frame.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn corrupt_frames_fail_loudly() {
+        // Oversized length prefix.
+        let mut bad = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec();
+        bad.extend_from_slice(&[0; 8]);
+        assert!(read_msg_opt(&mut &bad[..]).is_err());
+        // Unknown tag.
+        let mut frame = encode_frame(&WireMsg::Ok).unwrap();
+        frame[4] = 0xEE;
+        assert!(read_msg_opt(&mut &frame[..]).is_err());
+        // Trailing garbage inside a valid-length frame.
+        let mut frame = encode_frame(&WireMsg::Shutdown).unwrap();
+        frame[0] = 2; // payload length 2: tag + 1 junk byte
+        frame.push(0);
+        assert!(read_msg_opt(&mut &frame[..]).is_err());
+    }
+}

@@ -51,7 +51,7 @@ pub fn data_parallel_step(
         shards.push(grads);
     }
     let loss = losses.iter().sum::<f64>() / workers as f64;
-    let (grads, allreduce) = tree_allreduce(shards);
+    let (grads, allreduce) = tree_allreduce(shards)?;
     Ok(StepResult { loss, grads, allreduce })
 }
 
@@ -126,7 +126,7 @@ mod tests {
             losses.push(l);
             shards.push(g);
         }
-        let (serial, _) = crate::coordinator::tree_allreduce(shards);
+        let (serial, _) = crate::coordinator::tree_allreduce(shards).unwrap();
         assert!(par.grads[0].max_diff(&serial[0]) < 1e-12);
         assert_eq!(par.loss, losses.iter().sum::<f64>() / 8.0);
     }

@@ -29,11 +29,20 @@ USAGE:
                 [--rank L] [--lr F] [--checkpoint PATH]
                 [--engine-threads N] [--block-size B]
                 [--refresh-interval K] [--stagger-refresh BOOL]
+                [--shards N] [--shard-transport tcp|unix]
+  sketchy bench-gate [--baseline F] [--current F] [--tolerance R]
+  sketchy shard-worker --worker-id N [--transport tcp|unix]
+                       [--socket-dir DIR]          (internal; spawned
+                                                    by --shards runs)
 
 The engine-* optimizers run the parallel blocked preconditioner engine:
 per-block statistics/root updates execute concurrently on a work queue,
 with inverse-root (eigendecomposition) refreshes amortized every
---refresh-interval steps and staggered across blocks.
+--refresh-interval steps and staggered across blocks. With --shards N
+the blocks are partitioned across N worker processes (same binary,
+localhost TCP or Unix sockets) — bitwise identical to the in-process
+engine. bench-gate compares a fresh engine bench record against the
+committed baseline and exits nonzero on a >tolerance regression.
 
 Run `sketchy list` for the experiment catalogue.";
 
@@ -44,6 +53,8 @@ fn main() {
         Some("info") => cmd_info(&args),
         Some("repro") => cmd_repro(&args),
         Some("train") => cmd_train(&args),
+        Some("bench-gate") => cmd_bench_gate(&args),
+        Some("shard-worker") => cmd_shard_worker(&args),
         _ => {
             println!("{USAGE}");
             if args.subcommand.is_some() {
@@ -119,11 +130,46 @@ fn cmd_train(args: &Args) -> i32 {
     }
 }
 
+/// Compare a fresh engine bench record against the committed baseline;
+/// exit 1 on regression (the CI bench job gates on this).
+fn cmd_bench_gate(args: &Args) -> i32 {
+    let baseline = args.get_or("baseline", "bench_out/BENCH_baseline.json");
+    let current = args.get_or("current", "bench_out/BENCH_precond_engine.json");
+    let tolerance = args.get_f64("tolerance", 0.25);
+    match sketchy::util::gate::run_gate(&baseline, &current, tolerance) {
+        Ok(report) => {
+            print!("{}", report.render());
+            if report.passed() {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("bench-gate failed: {e:#}");
+            2
+        }
+    }
+}
+
+/// Shard-worker mode: spawned (from this same binary) by a `--shards N`
+/// run; serves its block shard over the wire protocol until shutdown.
+fn cmd_shard_worker(args: &Args) -> i32 {
+    match sketchy::coordinator::shard::serve_worker(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("shard worker failed: {e:#}");
+            1
+        }
+    }
+}
+
 fn run_train(args: &Args) -> anyhow::Result<()> {
+    use sketchy::coordinator::{ShardConfig, ShardLaunch};
     use sketchy::data::MarkovCorpus;
     use sketchy::optim::{
-        engine_optimizer, Adam, EngineConfig, GraftType, Optimizer, SShampoo, SShampooConfig,
-        Shampoo, ShampooConfig, WarmupCosine,
+        engine_optimizer, sharded_engine_optimizer, Adam, EngineConfig, GraftType, Optimizer,
+        SShampoo, SShampooConfig, Shampoo, ShampooConfig, WarmupCosine,
     };
     use sketchy::train::LmTrainer;
     use std::sync::Arc;
@@ -179,6 +225,17 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
     if args.get("refresh-interval").is_none() && cfg_file.get("engine.refresh_interval").is_none() {
         ecfg.refresh_interval = base.precond_interval.max(1);
     }
+    // --shards N (or [shard] count) lifts the block engine across N
+    // worker processes; 0 keeps the in-process work queue. Sharding only
+    // exists for the engine-* family — refuse it loudly elsewhere rather
+    // than silently running in-process.
+    let shard_cfg = ShardConfig::resolve(args, &cfg_file)?;
+    if shard_cfg.enabled() && !opt_name.starts_with("engine-") {
+        anyhow::bail!(
+            "--shards requires an engine-* optimizer (engine-shampoo, engine-s-shampoo, \
+             engine-adam); got {opt_name}"
+        );
+    }
     let mut opt: Box<dyn Optimizer> = match opt_name.as_str() {
         "adam" => {
             let mut a = Adam::new(&shapes, lr);
@@ -188,19 +245,37 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         }
         "shampoo" => Box::new(Shampoo::new(&shapes, base)),
         "s-shampoo" => Box::new(SShampoo::new(&shapes, SShampooConfig { base, rank })),
-        name => match engine_optimizer(name, &shapes, base, rank, ecfg) {
-            Some(engine) => {
-                println!(
-                    "engine: {} blocks, {} threads, refresh every {} steps (stagger={})",
-                    engine.blocks().len(),
-                    ecfg.effective_threads(engine.blocks().len()),
-                    ecfg.refresh_interval,
-                    ecfg.stagger
-                );
-                Box::new(engine)
+        name => {
+            let engine = if shard_cfg.enabled() {
+                let launch = ShardLaunch::current_exe(&shard_cfg)?;
+                sharded_engine_optimizer(name, &shapes, base, rank, ecfg, &launch)?
+            } else {
+                engine_optimizer(name, &shapes, base, rank, ecfg)
+            };
+            match engine {
+                Some(engine) => {
+                    println!(
+                        "engine: {} blocks, refresh every {} steps (stagger={}), {}",
+                        engine.blocks().len(),
+                        ecfg.refresh_interval,
+                        ecfg.stagger,
+                        if shard_cfg.enabled() {
+                            // The executor caps shards at the block
+                            // count; report what actually launched.
+                            format!(
+                                "{} shards over {}",
+                                shard_cfg.shards.min(engine.blocks().len()),
+                                shard_cfg.transport
+                            )
+                        } else {
+                            format!("{} threads", ecfg.effective_threads(engine.blocks().len()))
+                        }
+                    );
+                    Box::new(engine)
+                }
+                None => anyhow::bail!("unknown optimizer {name}"),
             }
-            None => anyhow::bail!("unknown optimizer {name}"),
-        },
+        }
     };
     println!(
         "optimizer {} — covariance bytes {}",

@@ -24,6 +24,20 @@
 //! parameter region, no cross-block reductions), so the engine's output
 //! is **bitwise identical** for any thread count — `threads = 1` is the
 //! serial reference path, asserted by `tests/engine_determinism.rs`.
+//!
+//! ## Executors
+//!
+//! The step loop is split from the compute substrate by the
+//! [`BlockExecutor`] trait: the engine gathers per-block windows,
+//! computes one [`StepCtx`] per block, and hands the batch to an
+//! executor. Two implementations exist:
+//!
+//! - [`LocalExecutor`] — the in-process work queue described above
+//!   (bit-for-bit the PR-1 engine);
+//! - [`crate::coordinator::shard::ShardExecutor`] — blocks partitioned
+//!   across `sketchy shard-worker` processes over a length-prefixed
+//!   wire protocol ([`crate::coordinator::wire`]), with the same
+//!   bitwise-determinism contract (`tests/shard_determinism.rs`).
 
 use super::adam::clip_scale;
 use super::blocking::{partition, Block};
@@ -33,6 +47,7 @@ use super::precond::{
     drive_block, AdamUnit, BlockState, KroneckerUnit, Preconditioner, SketchUnit, StepCtx,
 };
 use super::shampoo::ShampooConfig;
+use crate::coordinator::shard::{ShardExecutor, ShardLaunch};
 use crate::coordinator::BoundedQueue;
 use crate::sketch::FdSketch;
 use crate::tensor::{ops, Matrix};
@@ -91,9 +106,15 @@ impl EngineConfig {
 
     /// Worker-thread count actually used for `blocks` tasks.
     pub fn effective_threads(&self, blocks: usize) -> usize {
-        let t = if self.threads == 0 { ops::num_threads() } else { self.threads };
-        t.clamp(1, blocks.max(1))
+        effective_worker_threads(self.threads, blocks)
     }
+}
+
+/// Resolve a thread knob (0 = auto) against a task count: at least one
+/// thread, never more threads than tasks.
+pub(crate) fn effective_worker_threads(knob: usize, tasks: usize) -> usize {
+    let t = if knob == 0 { ops::num_threads() } else { knob };
+    t.clamp(1, tasks.max(1))
 }
 
 /// Which preconditioner family the engine drives per block.
@@ -108,7 +129,11 @@ pub enum UnitKind {
 }
 
 impl UnitKind {
-    fn make(&self, shape: (usize, usize), base: &ShampooConfig) -> Box<dyn Preconditioner> {
+    pub(crate) fn make(
+        &self,
+        shape: (usize, usize),
+        base: &ShampooConfig,
+    ) -> Box<dyn Preconditioner> {
         match *self {
             UnitKind::Shampoo => {
                 Box::new(KroneckerUnit::new(shape, base.beta2, base.eps, base.one_sided))
@@ -129,18 +154,257 @@ impl UnitKind {
             UnitKind::Adam => "Adam".into(),
         }
     }
+
+    /// FD sketch size ℓ (0 for non-sketched kinds) — wire encoding.
+    pub(crate) fn rank(&self) -> usize {
+        match *self {
+            UnitKind::Sketched { rank } => rank,
+            _ => 0,
+        }
+    }
+
+    /// Stable one-byte code for the shard wire protocol.
+    pub(crate) fn code(&self) -> u8 {
+        match *self {
+            UnitKind::Shampoo => 0,
+            UnitKind::Sketched { .. } => 1,
+            UnitKind::Adam => 2,
+        }
+    }
+
+    /// Inverse of [`UnitKind::code`] (`rank` applies to Sketched only).
+    pub(crate) fn from_code(code: u8, rank: usize) -> Option<UnitKind> {
+        Some(match code {
+            0 => UnitKind::Shampoo,
+            1 => UnitKind::Sketched { rank },
+            2 => UnitKind::Adam,
+            _ => return None,
+        })
+    }
 }
 
+// ---------------------------------------------------------------------------
+// Block executors.
+// ---------------------------------------------------------------------------
+
+/// Executes one engine step over a batch of blocks: gather each block's
+/// parameter/gradient window, drive ingest/refresh/apply with the
+/// supplied per-block [`StepCtx`], and scatter updated parameters back.
+///
+/// The contract every implementation must honor: blocks are disjoint and
+/// self-contained, and the result is **bitwise identical** to driving
+/// the blocks serially in index order — execution strategy (threads,
+/// processes, hosts) is never allowed to change the numbers.
+///
+/// Ctx batch shape: the engine emits one [`StepCtx`] per block where
+/// only `refresh_due` varies across blocks (the stagger schedule); all
+/// other fields are step-wide. The shard wire protocol ships the shared
+/// fields once per shard and *rejects* heterogeneous batches, so keep
+/// that invariant if you drive an executor directly.
+pub trait BlockExecutor: Send {
+    /// Drive all `blocks` one step. Returns the number of inverse-root
+    /// refreshes (eigendecompositions) that ran.
+    fn step_blocks(
+        &mut self,
+        blocks: &[Block],
+        params: &mut [Matrix],
+        grads: &[Matrix],
+        ctxs: &[StepCtx],
+    ) -> anyhow::Result<usize>;
+
+    /// Total heap bytes of executor-owned optimizer state.
+    fn mem_bytes(&self) -> usize;
+
+    /// Bytes of second-moment (covariance) state only.
+    fn second_moment_bytes(&self) -> usize;
+
+    /// Visit every live FD sketch (invariant checks). Remote executors
+    /// hold their sketches out-of-process and visit nothing.
+    fn for_each_sketch(&mut self, _f: &mut dyn FnMut(&FdSketch)) {}
+
+    /// Short human label for `Optimizer::name` (e.g. `threads=4`,
+    /// `shards=2/tcp`).
+    fn label(&self) -> String;
+}
+
+/// Drive `states[i]` with `ctxs[i]` for all i, serially or on a
+/// self-scheduling work queue. Returns the number of eigendecomposition
+/// refreshes. Shared by [`LocalExecutor`] and the shard-worker server —
+/// both sides of the wire run exactly this loop.
+pub(crate) fn drive_all(
+    states: &mut [Mutex<BlockState>],
+    ctxs: &[StepCtx],
+    threads: usize,
+) -> usize {
+    let n = states.len();
+    debug_assert_eq!(n, ctxs.len());
+    if threads <= 1 {
+        // Serial reference path (identical math, no pool).
+        let mut refreshes = 0;
+        for i in 0..n {
+            let st = states[i].get_mut().unwrap();
+            if drive_block(st, &ctxs[i]) {
+                refreshes += 1;
+            }
+        }
+        refreshes
+    } else {
+        // Self-scheduling work queue: whichever worker frees up first
+        // takes the next block, so one slow eigendecomposition never
+        // idles the rest of the pool.
+        let refreshes = AtomicUsize::new(0);
+        let queue = BoundedQueue::work_list(0..n);
+        let states = &*states;
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| {
+                    // Pin dense kernels to one thread per worker: the
+                    // engine already owns the parallelism, so nested
+                    // kernel threading would only oversubscribe cores.
+                    ops::with_single_thread(|| {
+                        while let Some(i) = queue.pop() {
+                            let mut st = states[i].lock().unwrap();
+                            if drive_block(&mut st, &ctxs[i]) {
+                                refreshes.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    });
+                });
+            }
+        });
+        refreshes.load(Ordering::Relaxed)
+    }
+}
+
+/// In-process executor: per-block states driven on the work queue. This
+/// is the PR-1 engine path, preserved bit-for-bit.
+pub struct LocalExecutor {
+    states: Vec<Mutex<BlockState>>,
+    /// Raw thread knob (0 = auto).
+    threads: usize,
+}
+
+impl LocalExecutor {
+    pub fn new(blocks: &[Block], kind: UnitKind, base: &ShampooConfig, threads: usize) -> Self {
+        let states = blocks
+            .iter()
+            .map(|b| {
+                let shape = b.shape();
+                Mutex::new(BlockState::new(kind.make(shape, base), base.graft, shape, base.beta2))
+            })
+            .collect();
+        LocalExecutor { states, threads }
+    }
+}
+
+impl BlockExecutor for LocalExecutor {
+    fn step_blocks(
+        &mut self,
+        blocks: &[Block],
+        params: &mut [Matrix],
+        grads: &[Matrix],
+        ctxs: &[StepCtx],
+    ) -> anyhow::Result<usize> {
+        // Gather: copy each block's parameter/gradient window into its
+        // state scratch (allocation-free) so the parallel phase touches
+        // fully disjoint data.
+        for (i, b) in blocks.iter().enumerate() {
+            let st = self.states[i].get_mut().unwrap();
+            params[b.tensor].slice_into(b.r0, b.r1, b.c0, b.c1, &mut st.param);
+            grads[b.tensor].slice_into(b.r0, b.r1, b.c0, b.c1, &mut st.grad);
+        }
+        let threads = effective_worker_threads(self.threads, blocks.len());
+        let refreshes = drive_all(&mut self.states, ctxs, threads);
+        // Scatter: write updated parameter blocks back.
+        for (i, b) in blocks.iter().enumerate() {
+            let st = self.states[i].get_mut().unwrap();
+            params[b.tensor].set_slice(b.r0, b.c0, &st.param);
+        }
+        Ok(refreshes)
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.states.iter().map(|s| s.lock().unwrap().mem_bytes()).sum()
+    }
+
+    fn second_moment_bytes(&self) -> usize {
+        self.states
+            .iter()
+            .map(|s| s.lock().unwrap().second_moment_bytes())
+            .sum()
+    }
+
+    fn for_each_sketch(&mut self, f: &mut dyn FnMut(&FdSketch)) {
+        for st in &mut self.states {
+            let st = st.get_mut().unwrap();
+            for fd in st.unit.sketches() {
+                f(fd);
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("threads={}", effective_worker_threads(self.threads, self.states.len()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The engine.
+// ---------------------------------------------------------------------------
+
 /// Engine-driven blocked optimizer: any [`UnitKind`] over the §3.4 block
-/// partition, stepped in parallel.
+/// partition, stepped in parallel by a [`BlockExecutor`] — in-process
+/// threads by default, cross-process shards via [`PrecondEngine::sharded`].
 pub struct PrecondEngine {
     pub base: ShampooConfig,
     pub ecfg: EngineConfig,
     kind: UnitKind,
     blocks: Vec<Block>,
-    states: Vec<Mutex<BlockState>>,
+    executor: Box<dyn BlockExecutor>,
     t: usize,
-    refreshes: AtomicUsize,
+    refreshes: usize,
+    /// Set when a step failed partway: a sharded step error can leave
+    /// some shards having applied the step and others not, so retrying
+    /// would silently diverge from the single-process run. A poisoned
+    /// engine refuses further steps instead.
+    poisoned: Option<String>,
+}
+
+/// Normalize the driver config per unit kind, and compute the §3.4 block
+/// partition (shared by the local and sharded constructors so both paths
+/// see identical blocks and hyperparameters).
+fn plan(
+    shapes: &[(usize, usize)],
+    kind: UnitKind,
+    base: ShampooConfig,
+    ecfg: &EngineConfig,
+) -> (ShampooConfig, Vec<Block>) {
+    // Adam is fully handled inside AdamUnit (its own β₁ momentum,
+    // bias correction, per-step moments): normalize the driver config
+    // so `engine-adam` reproduces the fused `Adam` exactly instead of
+    // stacking grafting / second momentum / delayed preconditioning
+    // on top. Only lr / β₂ / weight decay / clip pass through.
+    let base = if kind == UnitKind::Adam {
+        ShampooConfig {
+            beta1: 0.0,
+            graft: GraftType::None,
+            stat_interval: 1,
+            precond_interval: 1,
+            start_preconditioning_step: 1,
+            ..base
+        }
+    } else {
+        base
+    };
+    // block_size = 0 means "no blocking": use the largest dimension so
+    // the partition yields exactly one block per tensor.
+    let bsize = if ecfg.block_size == 0 {
+        shapes.iter().map(|&(m, n)| m.max(n)).max().unwrap_or(1).max(1)
+    } else {
+        ecfg.block_size
+    };
+    let blocks = partition(shapes, bsize);
+    (base, blocks)
 }
 
 impl PrecondEngine {
@@ -150,47 +414,34 @@ impl PrecondEngine {
         base: ShampooConfig,
         ecfg: EngineConfig,
     ) -> Self {
-        // Adam is fully handled inside AdamUnit (its own β₁ momentum,
-        // bias correction, per-step moments): normalize the driver config
-        // so `engine-adam` reproduces the fused `Adam` exactly instead of
-        // stacking grafting / second momentum / delayed preconditioning
-        // on top. Only lr / β₂ / weight decay / clip pass through.
-        let base = if kind == UnitKind::Adam {
-            ShampooConfig {
-                beta1: 0.0,
-                graft: GraftType::None,
-                stat_interval: 1,
-                precond_interval: 1,
-                start_preconditioning_step: 1,
-                ..base
-            }
-        } else {
-            base
-        };
-        // block_size = 0 means "no blocking": use the largest dimension so
-        // the partition yields exactly one block per tensor.
-        let bsize = if ecfg.block_size == 0 {
-            shapes.iter().map(|&(m, n)| m.max(n)).max().unwrap_or(1).max(1)
-        } else {
-            ecfg.block_size
-        };
-        let blocks = partition(shapes, bsize);
-        let states = blocks
-            .iter()
-            .map(|b| {
-                let shape = b.shape();
-                Mutex::new(BlockState::new(kind.make(shape, &base), base.graft, shape, base.beta2))
-            })
-            .collect();
-        PrecondEngine {
+        let (base, blocks) = plan(shapes, kind, base, &ecfg);
+        let executor = Box::new(LocalExecutor::new(&blocks, kind, &base, ecfg.threads));
+        PrecondEngine { base, ecfg, kind, blocks, executor, t: 0, refreshes: 0, poisoned: None }
+    }
+
+    /// Cross-process engine: blocks are sharded across `sketchy
+    /// shard-worker` processes described by `launch`; statistics are
+    /// shipped, driven and scattered over the wire protocol. Numerics
+    /// are bitwise identical to the in-process engine.
+    pub fn sharded(
+        shapes: &[(usize, usize)],
+        kind: UnitKind,
+        base: ShampooConfig,
+        ecfg: EngineConfig,
+        launch: &ShardLaunch,
+    ) -> anyhow::Result<Self> {
+        let (base, blocks) = plan(shapes, kind, base, &ecfg);
+        let executor = ShardExecutor::launch(launch, &blocks, kind, &base, ecfg.threads)?;
+        Ok(PrecondEngine {
             base,
             ecfg,
             kind,
             blocks,
-            states,
+            executor: Box::new(executor),
             t: 0,
-            refreshes: AtomicUsize::new(0),
-        }
+            refreshes: 0,
+            poisoned: None,
+        })
     }
 
     /// Exact-Kronecker (Shampoo) engine.
@@ -219,126 +470,96 @@ impl PrecondEngine {
     }
 
     /// Total inverse-root refreshes (eigendecompositions) performed so
-    /// far — the quantity the stale schedule amortizes.
+    /// far — the quantity the stale schedule amortizes. For sharded
+    /// engines this aggregates worker-reported counts.
     pub fn refreshes(&self) -> usize {
-        self.refreshes.load(Ordering::Relaxed)
+        self.refreshes
     }
 
-    /// Visit every live FD sketch across blocks (invariant checks).
+    /// Visit every live FD sketch across blocks (invariant checks;
+    /// in-process executors only — sharded state lives out-of-process).
     pub fn for_each_sketch(&mut self, mut f: impl FnMut(&FdSketch)) {
-        for st in &mut self.states {
-            let st = st.get_mut().unwrap();
-            for fd in st.unit.sketches() {
-                f(fd);
-            }
+        self.executor.for_each_sketch(&mut f);
+    }
+
+    /// Fallible step — the sharded executor surfaces worker/transport
+    /// failures here instead of panicking.
+    ///
+    /// An `Err` is **terminal** for this engine: the failed step may
+    /// have applied on some shards but not others, so the engine
+    /// poisons itself and every subsequent step fails fast rather than
+    /// silently diverging from the single-process run. Recovery is a
+    /// fresh engine (and, for sharded runs, fresh workers).
+    pub fn try_step(&mut self, params: &mut [Matrix], grads: &[Matrix]) -> anyhow::Result<()> {
+        assert_eq!(params.len(), grads.len());
+        if let Some(why) = &self.poisoned {
+            anyhow::bail!("engine poisoned by earlier step failure ({why})");
         }
+        self.t += 1;
+        let t = self.t;
+        let scale = clip_scale(grads, self.base.clip);
+        let preconditioning = t >= self.base.start_preconditioning_step;
+        let stat_due = t % self.base.stat_interval == 0;
+        let refresh_interval = self.ecfg.refresh_interval.max(1);
+        let stagger = self.ecfg.stagger;
+        let base = &self.base;
+        let ctxs: Vec<StepCtx> = (0..self.blocks.len())
+            .map(|i| {
+                let phase = if stagger { i % refresh_interval } else { 0 };
+                StepCtx {
+                    t,
+                    scale,
+                    preconditioning,
+                    refresh_due: (t + phase) % refresh_interval == 0,
+                    lr: base.lr,
+                    beta1: base.beta1,
+                    weight_decay: base.weight_decay,
+                    stat_due,
+                    graft: base.graft,
+                }
+            })
+            .collect();
+        let refreshed = match self.executor.step_blocks(&self.blocks, params, grads, &ctxs) {
+            Ok(n) => n,
+            Err(e) => {
+                self.poisoned = Some(format!("step {t}: {e:#}"));
+                return Err(e);
+            }
+        };
+        self.refreshes += refreshed;
+        Ok(())
     }
 }
 
 impl Optimizer for PrecondEngine {
     fn name(&self) -> String {
         format!(
-            "Engine<{}>(blocks={}, threads={}, refresh={})",
+            "Engine<{}>(blocks={}, {}, refresh={})",
             self.kind.label(),
             self.blocks.len(),
-            self.ecfg.effective_threads(self.blocks.len()),
+            self.executor.label(),
             self.ecfg.refresh_interval,
         )
     }
 
     fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
-        assert_eq!(params.len(), grads.len());
-        self.t += 1;
-        let t = self.t;
-        let scale = clip_scale(grads, self.base.clip);
-        let preconditioning = t >= self.base.start_preconditioning_step;
-        let stat_due = t % self.base.stat_interval == 0;
-        // Gather: copy each block's parameter/gradient window into its
-        // state scratch (allocation-free) so the parallel phase touches
-        // fully disjoint data.
-        for (i, b) in self.blocks.iter().enumerate() {
-            let st = self.states[i].get_mut().unwrap();
-            params[b.tensor].slice_into(b.r0, b.r1, b.c0, b.c1, &mut st.param);
-            grads[b.tensor].slice_into(b.r0, b.r1, b.c0, b.c1, &mut st.grad);
+        if let Err(e) = PrecondEngine::try_step(self, params, grads) {
+            // The infallible entry point cannot surface executor errors;
+            // the trainers drive `Optimizer::try_step` instead.
+            panic!("engine step failed: {e:#}");
         }
-        let n = self.blocks.len();
-        let threads = self.ecfg.effective_threads(n);
-        let refresh_interval = self.ecfg.refresh_interval.max(1);
-        let stagger = self.ecfg.stagger;
-        let base = &self.base;
-        let ctx_for = |i: usize| {
-            let phase = if stagger { i % refresh_interval } else { 0 };
-            StepCtx {
-                t,
-                scale,
-                preconditioning,
-                refresh_due: (t + phase) % refresh_interval == 0,
-                lr: base.lr,
-                beta1: base.beta1,
-                weight_decay: base.weight_decay,
-                stat_due,
-                graft: base.graft,
-            }
-        };
-        let refreshes = &self.refreshes;
-        if threads <= 1 {
-            // Serial reference path (identical math, no pool).
-            for i in 0..n {
-                let st = self.states[i].get_mut().unwrap();
-                if drive_block(st, &ctx_for(i)) {
-                    refreshes.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-        } else {
-            // Self-scheduling work queue: whichever worker frees up first
-            // takes the next block, so one slow eigendecomposition never
-            // idles the rest of the pool.
-            let queue = BoundedQueue::work_list(0..n);
-            let states = &self.states;
-            std::thread::scope(|scope| {
-                for _ in 0..threads {
-                    scope.spawn(|| {
-                        // Pin dense kernels to one thread per worker: the
-                        // engine already owns the parallelism, so nested
-                        // kernel threading would only oversubscribe cores.
-                        ops::with_single_thread(|| {
-                            while let Some(i) = queue.pop() {
-                                let mut st = states[i].lock().unwrap();
-                                if drive_block(&mut st, &ctx_for(i)) {
-                                    refreshes.fetch_add(1, Ordering::Relaxed);
-                                }
-                            }
-                        });
-                    });
-                }
-            });
-        }
-        // Scatter: write updated parameter blocks back.
-        for (i, b) in self.blocks.iter().enumerate() {
-            let st = self.states[i].get_mut().unwrap();
-            params[b.tensor].set_slice(b.r0, b.c0, &st.param);
-        }
+    }
+
+    fn try_step(&mut self, params: &mut [Matrix], grads: &[Matrix]) -> anyhow::Result<()> {
+        PrecondEngine::try_step(self, params, grads)
     }
 
     fn mem_bytes(&self) -> usize {
-        self.states
-            .iter()
-            .map(|s| {
-                let st = s.lock().unwrap();
-                st.unit.mem_bytes()
-                    + st.graft.mem_bytes()
-                    + st.mu.mem_bytes()
-                    + st.param.mem_bytes()
-                    + st.grad.mem_bytes()
-            })
-            .sum()
+        self.executor.mem_bytes()
     }
 
     fn second_moment_bytes(&self) -> usize {
-        self.states
-            .iter()
-            .map(|s| s.lock().unwrap().unit.second_moment_bytes())
-            .sum()
+        self.executor.second_moment_bytes()
     }
 
     fn set_lr(&mut self, lr: f64) {
@@ -359,10 +580,31 @@ pub fn engine_optimizer(
     rank: usize,
     ecfg: EngineConfig,
 ) -> Option<PrecondEngine> {
+    engine_unit_kind(name, rank).map(|kind| PrecondEngine::new(shapes, kind, base, ecfg))
+}
+
+/// Sharded variant of [`engine_optimizer`]: same names, blocks driven by
+/// `launch.shards` worker processes.
+pub fn sharded_engine_optimizer(
+    name: &str,
+    shapes: &[(usize, usize)],
+    base: ShampooConfig,
+    rank: usize,
+    ecfg: EngineConfig,
+    launch: &ShardLaunch,
+) -> anyhow::Result<Option<PrecondEngine>> {
+    match engine_unit_kind(name, rank) {
+        Some(kind) => Ok(Some(PrecondEngine::sharded(shapes, kind, base, ecfg, launch)?)),
+        None => Ok(None),
+    }
+}
+
+/// CLI optimizer name → engine unit kind.
+fn engine_unit_kind(name: &str, rank: usize) -> Option<UnitKind> {
     match name {
-        "engine-shampoo" => Some(PrecondEngine::shampoo(shapes, base, ecfg)),
-        "engine-s-shampoo" => Some(PrecondEngine::sketched(shapes, rank, base, ecfg)),
-        "engine-adam" => Some(PrecondEngine::adam(shapes, base, ecfg)),
+        "engine-shampoo" => Some(UnitKind::Shampoo),
+        "engine-s-shampoo" => Some(UnitKind::Sketched { rank }),
+        "engine-adam" => Some(UnitKind::Adam),
         _ => None,
     }
 }
@@ -466,5 +708,21 @@ mod tests {
         }
         let unknown = engine_optimizer("sgd", &shapes, base_cfg(), 2, EngineConfig::default());
         assert!(unknown.is_none());
+    }
+
+    #[test]
+    fn unit_kind_codes_roundtrip() {
+        for kind in [UnitKind::Shampoo, UnitKind::Sketched { rank: 9 }, UnitKind::Adam] {
+            assert_eq!(UnitKind::from_code(kind.code(), kind.rank()), Some(kind));
+        }
+        assert_eq!(UnitKind::from_code(77, 0), None);
+    }
+
+    #[test]
+    fn local_executor_label_reports_effective_threads() {
+        let ecfg = EngineConfig { threads: 6, block_size: 4, ..Default::default() };
+        // 8×8 at b=4 → 4 blocks; 6 requested threads clamp to 4.
+        let eng = PrecondEngine::shampoo(&[(8, 8)], base_cfg(), ecfg);
+        assert!(eng.name().contains("threads=4"), "name: {}", eng.name());
     }
 }

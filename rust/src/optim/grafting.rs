@@ -38,6 +38,32 @@ impl GraftType {
             _ => return None,
         })
     }
+
+    /// Stable one-byte code for the shard wire protocol
+    /// ([`crate::coordinator::wire`]).
+    pub fn code(&self) -> u8 {
+        match self {
+            GraftType::None => 0,
+            GraftType::Sgd => 1,
+            GraftType::Rmsprop => 2,
+            GraftType::RmspropNormalized => 3,
+            GraftType::Adagrad => 4,
+            GraftType::AdagradNormalized => 5,
+        }
+    }
+
+    /// Inverse of [`GraftType::code`].
+    pub fn from_code(code: u8) -> Option<GraftType> {
+        Some(match code {
+            0 => GraftType::None,
+            1 => GraftType::Sgd,
+            2 => GraftType::Rmsprop,
+            3 => GraftType::RmspropNormalized,
+            4 => GraftType::Adagrad,
+            5 => GraftType::AdagradNormalized,
+            _ => return None,
+        })
+    }
 }
 
 /// Per-tensor grafting state.
@@ -122,6 +148,22 @@ pub fn transplant(graft_step: &Matrix, dir: &Matrix) -> Matrix {
 mod tests {
     use super::*;
     use crate::util::rng::Pcg64;
+
+    #[test]
+    fn wire_codes_roundtrip() {
+        let kinds = [
+            GraftType::None,
+            GraftType::Sgd,
+            GraftType::Rmsprop,
+            GraftType::RmspropNormalized,
+            GraftType::Adagrad,
+            GraftType::AdagradNormalized,
+        ];
+        for k in kinds {
+            assert_eq!(GraftType::from_code(k.code()), Some(k));
+        }
+        assert_eq!(GraftType::from_code(200), None);
+    }
 
     #[test]
     fn transplant_preserves_magnitude_and_direction() {

@@ -15,6 +15,16 @@ pub trait Optimizer {
     /// One training step: update `params[i]` using `grads[i]`.
     fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]);
 
+    /// Fallible step. In-process optimizers never fail and inherit this
+    /// default; optimizers backed by fallible executors (the
+    /// cross-process shard engine) override it so worker/transport
+    /// failures reach the training loop as errors naming the shard
+    /// instead of panics.
+    fn try_step(&mut self, params: &mut [Matrix], grads: &[Matrix]) -> anyhow::Result<()> {
+        self.step(params, grads);
+        Ok(())
+    }
+
     /// Total heap bytes of optimizer state.
     fn mem_bytes(&self) -> usize;
 

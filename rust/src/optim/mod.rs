@@ -19,6 +19,9 @@
 //!   behind Shampoo, S-Shampoo and Adam ([`precond`])
 //! - [`PrecondEngine`] — parallel blocked engine driving any unit kind
 //!   with a staggered stale-refresh schedule ([`engine`])
+//! - [`BlockExecutor`] — the engine's execution substrate: the
+//!   in-process work queue ([`LocalExecutor`]) or cross-process shard
+//!   workers ([`crate::coordinator::shard::ShardExecutor`])
 
 pub mod adam;
 pub mod blocking;
@@ -38,7 +41,10 @@ pub mod vector;
 
 pub use adam::{Adam, Sgd};
 pub use blocking::{partition, Block, Blocked};
-pub use engine::{engine_optimizer, EngineConfig, PrecondEngine, UnitKind};
+pub use engine::{
+    engine_optimizer, sharded_engine_optimizer, BlockExecutor, EngineConfig, LocalExecutor,
+    PrecondEngine, UnitKind,
+};
 pub use fd_baselines::{AdaFd, FdSon, RfdSon};
 pub use first_order::{AdaGradDiag, Ogd};
 pub use full_matrix::{AdaGradFull, EpochAdaGrad};

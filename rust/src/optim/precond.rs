@@ -426,11 +426,32 @@ impl BlockState {
             grad: Matrix::zeros(r, c),
         }
     }
+
+    /// Total heap bytes of this block's optimizer state (unit + graft +
+    /// momentum + gathered scratch) — the one accounting formula shared
+    /// by the in-process executor and the shard workers.
+    pub fn mem_bytes(&self) -> usize {
+        self.unit.mem_bytes()
+            + self.graft.mem_bytes()
+            + self.mu.mem_bytes()
+            + self.param.mem_bytes()
+            + self.grad.mem_bytes()
+    }
+
+    /// Bytes of second-moment (covariance) state only.
+    pub fn second_moment_bytes(&self) -> usize {
+        self.unit.second_moment_bytes()
+    }
 }
 
 /// Parameters controlling one driven step (shared by all blocks).
-#[derive(Clone, Copy)]
-pub(crate) struct StepCtx {
+///
+/// Public because it crosses the [`crate::optim::engine::BlockExecutor`]
+/// boundary: the engine computes one `StepCtx` per block (including the
+/// block's staggered `refresh_due` slot) and executors — in-process or
+/// cross-process — drive [`drive_block`]-equivalent logic from it.
+#[derive(Clone, Copy, Debug)]
+pub struct StepCtx {
     pub t: usize,
     pub scale: f64,
     pub preconditioning: bool,

@@ -92,7 +92,9 @@ impl LmTrainer {
             batches: &batches,
         };
         let res = data_parallel_step(&gw, self.step, workers)?;
-        opt.step(&mut self.params, &res.grads);
+        // Fallible path: a sharded engine's worker/transport failure
+        // surfaces here as an error naming the shard, not a panic.
+        opt.try_step(&mut self.params, &res.grads)?;
         self.step += 1;
         Ok((res.loss, res.grads))
     }

@@ -141,6 +141,19 @@ mod tests {
     }
 
     #[test]
+    fn shard_flags_parse() {
+        // The exact grammar the sharded-train entry point relies on.
+        let a = parse(&["train", "--shards", "2", "--shard-transport", "unix"]);
+        assert_eq!(a.get_usize("shards", 0), 2);
+        assert_eq!(a.get("shard-transport"), Some("unix"));
+        // And the worker side's own command line.
+        let w = parse(&["shard-worker", "--worker-id", "1", "--transport", "tcp"]);
+        assert_eq!(w.subcommand.as_deref(), Some("shard-worker"));
+        assert_eq!(w.get_usize("worker-id", 99), 1);
+        assert_eq!(w.get_or("transport", "unix"), "tcp");
+    }
+
+    #[test]
     fn bool_flags() {
         let a = parse(&["x", "--stagger-refresh", "--fresh", "false", "--stale=true"]);
         assert!(a.get_bool("stagger-refresh", false));

@@ -15,6 +15,9 @@
 //!   (stale-preconditioner eigendecomposition cadence),
 //!   `stagger_refresh` (spread refreshes across blocks); see
 //!   [`crate::optim::EngineConfig::resolve`]
+//! - `[shard]` — cross-process engine sharding: `count` (worker
+//!   processes, 0 = in-process) and `transport` (`"tcp"` or `"unix"`);
+//!   see [`crate::coordinator::ShardConfig::resolve`]
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -252,6 +255,17 @@ mod tests {
     fn section_key_listing() {
         let cfg = Config::parse("[s]\na = 1\nb = 2\n[t]\nc = 3").unwrap();
         assert_eq!(cfg.section_keys("s"), vec!["s.a", "s.b"]);
+    }
+
+    #[test]
+    fn shard_section_round_trips() {
+        let cfg = Config::parse("[shard]\ncount = 2\ntransport = \"unix\"").unwrap();
+        assert_eq!(cfg.usize_or("shard.count", 0), 2);
+        assert_eq!(cfg.str_or("shard.transport", "tcp"), "unix");
+        // Defaults apply when the section is absent.
+        let empty = Config::default();
+        assert_eq!(empty.usize_or("shard.count", 0), 0);
+        assert_eq!(empty.str_or("shard.transport", "tcp"), "tcp");
     }
 
     #[test]

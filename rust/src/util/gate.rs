@@ -1,0 +1,278 @@
+//! Bench regression gate (`sketchy bench-gate`).
+//!
+//! CI runs the quick-mode engine benchmark, which writes
+//! `bench_out/BENCH_precond_engine.json`, and compares it against the
+//! committed `bench_out/BENCH_baseline.json`: the gate **fails the PR**
+//! when any timing metric regresses more than the tolerance (default
+//! 25%), or when the bench's bitwise-identity invariant went false.
+//!
+//! Raw nanosecond medians are not comparable across machines, so the
+//! bench also records `calibration_ns` — the median of a fixed
+//! *single-threaded* 256×256 matmul measured in the same process. When
+//! both records carry a calibration, every `*_ns` metric is compared as
+//! a ratio to its own run's calibration, which cancels machine speed to
+//! first order and makes a committed baseline meaningful on CI runners
+//! of unknown speed. Refresh the baseline by copying the uploaded
+//! `BENCH_precond_engine.json` artifact over `BENCH_baseline.json`.
+
+use super::json::Json;
+use anyhow::{bail, Context};
+
+/// Outcome of one gate evaluation.
+#[derive(Debug)]
+pub struct GateReport {
+    /// One line per checked metric (for the CI log).
+    pub lines: Vec<String>,
+    /// Human-readable reasons the gate fired (empty = pass).
+    pub failures: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Render the full report (checked metrics, then verdict).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for l in &self.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        if self.passed() {
+            out.push_str("bench-gate: PASS\n");
+        } else {
+            for f in &self.failures {
+                out.push_str("bench-gate FAILURE: ");
+                out.push_str(f);
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+fn positive_num(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(|v| v.as_f64()).filter(|&x| x > 0.0)
+}
+
+/// Compare a fresh bench record against the committed baseline.
+///
+/// Every `*_ns` metric present in the baseline must be present in the
+/// current record and must not exceed the baseline by more than
+/// `tolerance` (relative). Metrics are normalized by each record's own
+/// `calibration_ns` when both carry one. A boolean `identical` field in
+/// the current record must be `true` — the benchmark's serial-vs-
+/// parallel bitwise check is part of the gate.
+pub fn compare_bench(
+    baseline: &Json,
+    current: &Json,
+    tolerance: f64,
+) -> anyhow::Result<GateReport> {
+    let base_obj = baseline
+        .as_obj()
+        .context("baseline record is not a JSON object")?;
+    if current.as_obj().is_none() {
+        bail!("current record is not a JSON object");
+    }
+    let mut report = GateReport { lines: vec![], failures: vec![] };
+    let base_cal = positive_num(baseline, "calibration_ns");
+    let cur_cal = positive_num(current, "calibration_ns");
+    let normalized = base_cal.is_some() && cur_cal.is_some();
+    if normalized {
+        report.lines.push(format!(
+            "calibration: baseline {}ns, current {}ns (metrics compared as ratios)",
+            base_cal.unwrap(),
+            cur_cal.unwrap()
+        ));
+    } else {
+        report.lines.push(
+            "calibration: absent in baseline or current — comparing raw nanoseconds".into(),
+        );
+        // Like a dropped `identical` field, a silently dropped
+        // calibration is itself a gate failure: without it the ratios
+        // degrade to machine-dependent raw nanoseconds.
+        if base_cal.is_some() && cur_cal.is_none() {
+            report.failures.push("current record dropped calibration_ns (raw-ns fallback)".into());
+        }
+    }
+    for (key, value) in base_obj {
+        if !key.ends_with("_ns") || key.as_str() == "calibration_ns" {
+            continue;
+        }
+        let base_raw = match value.as_f64().filter(|&x| x > 0.0) {
+            Some(v) => v,
+            None => continue,
+        };
+        let cur_raw = match positive_num(current, key) {
+            Some(v) => v,
+            None => {
+                report.failures.push(format!("metric {key} missing in current record"));
+                continue;
+            }
+        };
+        let (base_v, cur_v) = if normalized {
+            (base_raw / base_cal.unwrap(), cur_raw / cur_cal.unwrap())
+        } else {
+            (base_raw, cur_raw)
+        };
+        let ratio = cur_v / base_v;
+        report.lines.push(format!(
+            "{key}: baseline {base_v:.4}, current {cur_v:.4} (x{ratio:.3}, budget x{:.3})",
+            1.0 + tolerance
+        ));
+        if ratio > 1.0 + tolerance {
+            report.failures.push(format!(
+                "{key} regressed x{ratio:.3} (> x{:.3} budget)",
+                1.0 + tolerance
+            ));
+        }
+    }
+    match current.get("identical") {
+        Some(Json::Bool(true)) => report.lines.push("identical: true".into()),
+        Some(Json::Bool(false)) => {
+            report.failures.push("bench reports identical=false (parallel diverged)".into());
+        }
+        _ => {
+            if matches!(baseline.get("identical"), Some(Json::Bool(_))) {
+                report.failures.push("current record lost the 'identical' invariant field".into());
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// File-reading wrapper for the `bench-gate` CLI.
+pub fn run_gate(
+    baseline_path: &str,
+    current_path: &str,
+    tolerance: f64,
+) -> anyhow::Result<GateReport> {
+    let base_text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("read baseline {baseline_path}"))?;
+    let cur_text = std::fs::read_to_string(current_path)
+        .with_context(|| format!("read current record {current_path}"))?;
+    let baseline = Json::parse(&base_text)
+        .map_err(|e| anyhow::anyhow!("parse baseline {baseline_path}: {e}"))?;
+    let current = Json::parse(&cur_text)
+        .map_err(|e| anyhow::anyhow!("parse current record {current_path}: {e}"))?;
+    compare_bench(&baseline, &current, tolerance)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(serial: f64, parallel: f64, cal: f64, identical: bool) -> Json {
+        Json::parse(&format!(
+            r#"{{"serial_median_ns": {serial}, "parallel_median_ns": {parallel},
+                 "calibration_ns": {cal}, "identical": {identical}, "blocks": 24}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn equal_records_pass() {
+        let base = record(1000.0, 400.0, 100.0, true);
+        let r = compare_bench(&base, &base, 0.25).unwrap();
+        assert!(r.passed(), "failures: {:?}", r.failures);
+        assert!(r.render().contains("PASS"));
+    }
+
+    #[test]
+    fn gate_fires_on_artificially_slowed_run() {
+        // The "demonstrably fires" check: a 30% slowdown on one metric
+        // must fail a 25% budget.
+        let base = record(1000.0, 400.0, 100.0, true);
+        let slowed = record(1300.0, 400.0, 100.0, true);
+        let r = compare_bench(&base, &slowed, 0.25).unwrap();
+        assert!(!r.passed());
+        assert_eq!(r.failures.len(), 1);
+        assert!(r.failures[0].contains("serial_median_ns"), "{:?}", r.failures);
+        assert!(r.render().contains("FAILURE"));
+    }
+
+    #[test]
+    fn slowdown_within_budget_passes() {
+        let base = record(1000.0, 400.0, 100.0, true);
+        let slower = record(1200.0, 480.0, 100.0, true);
+        assert!(compare_bench(&base, &slower, 0.25).unwrap().passed());
+        // ...and the same run fails a tighter budget.
+        assert!(!compare_bench(&base, &slower, 0.1).unwrap().passed());
+    }
+
+    #[test]
+    fn calibration_cancels_machine_speed() {
+        // A machine 3x slower across the board (calibration included)
+        // is not a regression.
+        let base = record(1000.0, 400.0, 100.0, true);
+        let slow_machine = record(3000.0, 1200.0, 300.0, true);
+        let r = compare_bench(&base, &slow_machine, 0.25).unwrap();
+        assert!(r.passed(), "failures: {:?}", r.failures);
+        // Without calibration the same record would (correctly) fire.
+        let base_nocal = Json::parse(r#"{"serial_median_ns": 1000, "identical": true}"#).unwrap();
+        let cur_nocal = Json::parse(r#"{"serial_median_ns": 3000, "identical": true}"#).unwrap();
+        assert!(!compare_bench(&base_nocal, &cur_nocal, 0.25).unwrap().passed());
+    }
+
+    #[test]
+    fn genuine_regression_fires_despite_calibration() {
+        // Same machine speed (same calibration), engine 2x slower.
+        let base = record(1000.0, 400.0, 100.0, true);
+        let regressed = record(2000.0, 800.0, 100.0, true);
+        let r = compare_bench(&base, &regressed, 0.25).unwrap();
+        assert_eq!(r.failures.len(), 2, "{:?}", r.failures);
+    }
+
+    #[test]
+    fn broken_identity_fires() {
+        let base = record(1000.0, 400.0, 100.0, true);
+        let diverged = record(1000.0, 400.0, 100.0, false);
+        let r = compare_bench(&base, &diverged, 0.25).unwrap();
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("identical"), "{:?}", r.failures);
+        // Dropping the field entirely (while the baseline tracks it)
+        // also fires — a silently deleted invariant is not a pass.
+        let missing = Json::parse(
+            r#"{"serial_median_ns": 1000, "parallel_median_ns": 400, "calibration_ns": 100}"#,
+        )
+        .unwrap();
+        assert!(!compare_bench(&base, &missing, 0.25).unwrap().passed());
+    }
+
+    #[test]
+    fn missing_metric_fires_and_faster_passes() {
+        let base = record(1000.0, 400.0, 100.0, true);
+        let missing = Json::parse(r#"{"calibration_ns": 100, "identical": true}"#).unwrap();
+        let r = compare_bench(&base, &missing, 0.25).unwrap();
+        assert_eq!(r.failures.len(), 2, "{:?}", r.failures);
+        // Improvements are never failures.
+        let faster = record(500.0, 200.0, 100.0, true);
+        assert!(compare_bench(&base, &faster, 0.25).unwrap().passed());
+    }
+
+    #[test]
+    fn lost_calibration_fires() {
+        let base = record(1000.0, 400.0, 100.0, true);
+        let cur = Json::parse(
+            r#"{"serial_median_ns": 1000, "parallel_median_ns": 400, "identical": true}"#,
+        )
+        .unwrap();
+        let r = compare_bench(&base, &cur, 0.25).unwrap();
+        assert!(!r.passed());
+        assert!(
+            r.failures.iter().any(|f| f.contains("calibration")),
+            "{:?}",
+            r.failures
+        );
+        // Baselines without calibration stay on raw-ns comparison
+        // without firing this rule (covered elsewhere).
+    }
+
+    #[test]
+    fn non_object_records_error() {
+        let base = record(1000.0, 400.0, 100.0, true);
+        assert!(compare_bench(&Json::parse("[1,2]").unwrap(), &base, 0.25).is_err());
+        assert!(compare_bench(&base, &Json::parse("3").unwrap(), 0.25).is_err());
+    }
+}

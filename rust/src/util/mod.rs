@@ -1,11 +1,12 @@
 //! Cross-cutting utilities built from scratch for the offline environment:
 //! PCG64 RNG, a JSON parser (fixtures + manifest), a TOML-subset config
-//! parser, a CLI argument parser, a bench harness, and a tiny property-
-//! testing helper.
+//! parser, a CLI argument parser, a bench harness, a bench regression
+//! gate (CI), and a tiny property-testing helper.
 
 pub mod bench;
 pub mod cli;
 pub mod config;
+pub mod gate;
 pub mod json;
 pub mod proptest;
 pub mod rng;

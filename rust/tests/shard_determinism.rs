@@ -1,0 +1,259 @@
+//! Cross-process shard engine: bitwise determinism and failure handling.
+//!
+//! The contract under test: partitioning preconditioner blocks across
+//! `sketchy shard-worker` processes is an *execution* decision, never a
+//! numeric one — a 2-shard or 4-shard run must produce parameters
+//! **bitwise identical** to the in-process engine, for every unit kind
+//! and transport. These tests spawn real worker processes from the
+//! built `sketchy` binary (`CARGO_BIN_EXE_sketchy`); the CI
+//! `shard-smoke` job runs them in release mode.
+
+use sketchy::coordinator::shard::{ShardExecutor, ShardLaunch, ShardTransport};
+use sketchy::optim::precond::StepCtx;
+use sketchy::optim::{
+    partition, Adam, BlockExecutor, EngineConfig, GraftType, LocalExecutor, Optimizer,
+    PrecondEngine, ShampooConfig, UnitKind,
+};
+use sketchy::tensor::Matrix;
+use sketchy::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn sketchy_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_sketchy"))
+}
+
+fn mk_launch(shards: usize, transport: ShardTransport) -> ShardLaunch {
+    ShardLaunch { program: sketchy_bin(), shards, transport }
+}
+
+fn base_cfg() -> ShampooConfig {
+    ShampooConfig {
+        lr: 0.05,
+        start_preconditioning_step: 2,
+        graft: GraftType::Rmsprop,
+        clip: 5.0,
+        weight_decay: 1e-3,
+        ..Default::default()
+    }
+}
+
+fn random_grads(shapes: &[(usize, usize)], rng: &mut Pcg64) -> Vec<Matrix> {
+    shapes.iter().map(|&(m, n)| Matrix::randn(m, n, rng)).collect()
+}
+
+/// Step the in-process engine and an N-shard engine on one gradient
+/// stream; assert bitwise-equal parameters after every step and equal
+/// refresh accounting at the end.
+fn assert_sharded_matches_local(
+    shapes: &[(usize, usize)],
+    kind: UnitKind,
+    block_size: usize,
+    shards: usize,
+    transport: ShardTransport,
+    steps: usize,
+    seed: u64,
+) {
+    let ecfg = EngineConfig { threads: 2, block_size, refresh_interval: 3, stagger: true };
+    let mut local = PrecondEngine::new(shapes, kind, base_cfg(), ecfg);
+    let mut sharded =
+        PrecondEngine::sharded(shapes, kind, base_cfg(), ecfg, &mk_launch(shards, transport))
+            .expect("launch sharded engine");
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(seed);
+    for step in 0..steps {
+        let grads = random_grads(shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        sharded.try_step(&mut p2, &grads).expect("sharded step");
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(
+                a.max_diff(b),
+                0.0,
+                "{shards}-shard run diverged from in-process engine at step {step}"
+            );
+        }
+    }
+    assert_eq!(
+        local.refreshes(),
+        sharded.refreshes(),
+        "refresh accounting must survive the wire"
+    );
+}
+
+#[test]
+fn two_shard_tcp_matches_single_process_bitwise() {
+    let shapes = [(10, 7), (6, 6), (9, 1)];
+    assert_sharded_matches_local(&shapes, UnitKind::Shampoo, 4, 2, ShardTransport::Tcp, 12, 410);
+}
+
+#[test]
+fn four_shard_tcp_matches_single_process_bitwise() {
+    let shapes = [(12, 10), (8, 3)];
+    assert_sharded_matches_local(
+        &shapes,
+        UnitKind::Sketched { rank: 3 },
+        5,
+        4,
+        ShardTransport::Tcp,
+        12,
+        411,
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn two_shard_unix_socket_matches_single_process_bitwise() {
+    let shapes = [(8, 8), (5, 4)];
+    assert_sharded_matches_local(&shapes, UnitKind::Shampoo, 4, 2, ShardTransport::Unix, 8, 412);
+}
+
+#[test]
+fn sharded_engine_adam_equals_fused_adam() {
+    // The Adam normalization path (grafting / driver momentum stripped)
+    // must survive the wire: a 2-shard engine-adam reproduces the fused
+    // Adam bitwise across an arbitrary block partition.
+    let shapes = [(5, 4), (3, 3)];
+    let mut fused = Adam::new(&shapes, 0.05);
+    fused.weight_decay = 0.01;
+    fused.clip = 1.0;
+    let base = ShampooConfig {
+        lr: 0.05,
+        beta2: 0.999,
+        weight_decay: 0.01,
+        clip: 1.0,
+        beta1: 0.9,
+        start_preconditioning_step: 7,
+        stat_interval: 2,
+        precond_interval: 3,
+        graft: GraftType::RmspropNormalized,
+        ..Default::default()
+    };
+    let ecfg = EngineConfig { threads: 2, block_size: 2, refresh_interval: 1, stagger: false };
+    let mut engine = PrecondEngine::sharded(
+        &shapes,
+        UnitKind::Adam,
+        base,
+        ecfg,
+        &mk_launch(2, ShardTransport::Tcp),
+    )
+    .expect("launch sharded adam engine");
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(413);
+    for step in 0..15 {
+        let grads = random_grads(&shapes, &mut rng);
+        fused.step(&mut p1, &grads);
+        engine.try_step(&mut p2, &grads).expect("sharded step");
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "sharded engine-adam diverged at step {step}");
+        }
+    }
+}
+
+/// Deterministic per-block contexts for driving executors directly.
+fn mk_ctxs(n_blocks: usize, t: usize) -> Vec<StepCtx> {
+    (0..n_blocks)
+        .map(|i| StepCtx {
+            t,
+            scale: 1.0,
+            preconditioning: t >= 2,
+            refresh_due: (t + i % 3) % 3 == 0,
+            lr: 0.05,
+            beta1: 0.9,
+            weight_decay: 1e-3,
+            stat_due: true,
+            graft: GraftType::Rmsprop,
+        })
+        .collect()
+}
+
+#[test]
+fn driver_reconnects_after_dropped_connections() {
+    // Sever every driver-side connection mid-run: the workers keep
+    // their block state across connections, so the run continues and
+    // stays bitwise identical to the local executor.
+    let shapes = [(6usize, 6usize)];
+    let blocks = partition(&shapes, 3);
+    let base = base_cfg();
+    let mut local = LocalExecutor::new(&blocks, UnitKind::Shampoo, &base, 1);
+    let mut exec = ShardExecutor::launch(
+        &mk_launch(2, ShardTransport::Tcp),
+        &blocks,
+        UnitKind::Shampoo,
+        &base,
+        1,
+    )
+    .expect("launch executor");
+    let mut p1 = vec![Matrix::zeros(6, 6)];
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(414);
+    for t in 1..=6usize {
+        let grads = vec![Matrix::randn(6, 6, &mut rng)];
+        let ctxs = mk_ctxs(blocks.len(), t);
+        local.step_blocks(&blocks, &mut p1, &grads, &ctxs).unwrap();
+        exec.step_blocks(&blocks, &mut p2, &grads, &ctxs).expect("sharded step");
+        assert_eq!(p1[0].max_diff(&p2[0]), 0.0, "diverged at step {t}");
+        if t == 3 {
+            exec.drop_connections();
+        }
+    }
+}
+
+#[test]
+fn dead_worker_is_surfaced_with_its_shard_id() {
+    let shapes = [(6usize, 6usize)];
+    let blocks = partition(&shapes, 3);
+    let base = base_cfg();
+    let mut exec = ShardExecutor::launch(
+        &mk_launch(2, ShardTransport::Tcp),
+        &blocks,
+        UnitKind::Shampoo,
+        &base,
+        1,
+    )
+    .expect("launch executor");
+    assert_eq!(exec.shards(), 2);
+    let mut params = vec![Matrix::zeros(6, 6)];
+    let mut rng = Pcg64::new(415);
+    let grads = vec![Matrix::randn(6, 6, &mut rng)];
+    exec.step_blocks(&blocks, &mut params, &grads, &mk_ctxs(blocks.len(), 1))
+        .expect("first step");
+    exec.kill_worker(1).expect("fault injection");
+    let err = exec
+        .step_blocks(&blocks, &mut params, &grads, &mk_ctxs(blocks.len(), 2))
+        .expect_err("step through a dead worker must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 1"), "error must name the dead shard: {msg}");
+}
+
+#[test]
+fn spawn_failure_is_surfaced() {
+    let shapes = [(4usize, 4usize)];
+    let blocks = partition(&shapes, 4);
+    let bogus = ShardLaunch {
+        program: PathBuf::from("/definitely/not/a/real/binary"),
+        shards: 1,
+        transport: ShardTransport::Tcp,
+    };
+    let err = match ShardExecutor::launch(&bogus, &blocks, UnitKind::Shampoo, &base_cfg(), 1) {
+        Ok(_) => panic!("bogus worker binary must fail the launch"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("shard 0"), "got: {err:#}");
+}
+
+#[test]
+fn shards_are_capped_at_block_count() {
+    // More shards than blocks must not spawn idle workers.
+    let shapes = [(4usize, 4usize)];
+    let blocks = partition(&shapes, 4); // a single 4x4 block
+    let exec = ShardExecutor::launch(
+        &mk_launch(3, ShardTransport::Tcp),
+        &blocks,
+        UnitKind::Shampoo,
+        &base_cfg(),
+        1,
+    )
+    .expect("launch executor");
+    assert_eq!(exec.shards(), 1);
+}

@@ -337,7 +337,7 @@ impl WorkerState {
             .map(|c| c.ok_or_else(|| anyhow!("step is missing an assigned block")))
             .collect::<anyhow::Result<_>>()?;
         let threads = effective_worker_threads(self.threads, self.states.len());
-        let refreshes = drive_all(&mut self.states, &ctxs, threads);
+        let refreshes = drive_all(&self.states, &ctxs, threads)?;
         let mut entries = Vec::with_capacity(msg.entries.len());
         for ent in &msg.entries {
             let slot = self.slot_of[&ent.index];
@@ -997,7 +997,13 @@ mod tests {
             graft: GraftType::Rmsprop,
             ..Default::default()
         };
-        let ecfg = EngineConfig { threads: 1, block_size: 3, refresh_interval: 2, stagger: false };
+        let ecfg = EngineConfig {
+            threads: 1,
+            block_size: 3,
+            refresh_interval: 2,
+            stagger: false,
+            ..Default::default()
+        };
         let mut engine = PrecondEngine::shampoo(&shapes, base.clone(), ecfg);
         let blocks = partition(&shapes, 3);
         let specs: Vec<BlockSpec> = blocks

@@ -29,6 +29,7 @@ USAGE:
                 [--rank L] [--lr F] [--checkpoint PATH]
                 [--engine-threads N] [--block-size B]
                 [--refresh-interval K] [--stagger-refresh BOOL]
+                [--overlap-refresh BOOL] [--pool-threads N]
                 [--shards N] [--shard-transport tcp|unix]
   sketchy bench-gate [--baseline F] [--current F] [--tolerance R]
   sketchy shard-worker --worker-id N [--transport tcp|unix]
@@ -36,13 +37,18 @@ USAGE:
                                                     by --shards runs)
 
 The engine-* optimizers run the parallel blocked preconditioner engine:
-per-block statistics/root updates execute concurrently on a work queue,
+per-block statistics/root updates execute concurrently on a persistent
+worker pool (pre-sized with --pool-threads; grows on demand otherwise),
 with inverse-root (eigendecomposition) refreshes amortized every
---refresh-interval steps and staggered across blocks. With --shards N
-the blocks are partitioned across N worker processes (same binary,
-localhost TCP or Unix sockets) — bitwise identical to the in-process
-engine. bench-gate compares a fresh engine bench record against the
-committed baseline and exits nonzero on a >tolerance regression.
+--refresh-interval steps and staggered across blocks.
+--overlap-refresh pipelines those refreshes: the eigendecompositions
+due at step t+1 run in the background while the trainer computes step
+t+1's gradients — bitwise identical to the synchronous schedule. With
+--shards N the blocks are partitioned across N worker processes (same
+binary, localhost TCP or Unix sockets) — bitwise identical to the
+in-process engine (overlap is in-process only and is ignored by
+sharded runs). bench-gate compares a fresh engine bench record against
+the committed baseline and exits nonzero on a >tolerance regression.
 
 Run `sketchy list` for the experiment catalogue.";
 
@@ -252,13 +258,20 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
             } else {
                 engine_optimizer(name, &shapes, base, rank, ecfg)
             };
+            if ecfg.overlap && shard_cfg.enabled() {
+                eprintln!(
+                    "note: --overlap-refresh is in-process only; sharded runs refresh \
+                     synchronously (numerics are identical either way)"
+                );
+            }
             match engine {
                 Some(engine) => {
                     println!(
-                        "engine: {} blocks, refresh every {} steps (stagger={}), {}",
+                        "engine: {} blocks, refresh every {} steps (stagger={}, overlap={}), {}",
                         engine.blocks().len(),
                         ecfg.refresh_interval,
                         ecfg.stagger,
+                        ecfg.overlap,
                         if shard_cfg.enabled() {
                             // The executor caps shards at the block
                             // count; report what actually launched.

@@ -5,10 +5,10 @@
 //! and data-parallel execution amortizes the (batch-size-independent)
 //! optimizer cost. This module supplies the missing half of that story
 //! for the Rust layer — per-block statistics updates, root refreshes and
-//! preconditioner applications run **concurrently across blocks** on a
-//! self-scheduling work queue (the coordinator's [`BoundedQueue`], the
-//! same pool discipline as `coordinator/worker.rs`), instead of
-//! serializing inside the step loop.
+//! preconditioner applications run **concurrently across blocks** on the
+//! persistent worker pool (`crate::runtime::pool`, claiming blocks
+//! self-scheduled like the PR-1 work queue), instead of serializing
+//! inside the step loop.
 //!
 //! Two schedules compose with the parallelism:
 //!
@@ -24,6 +24,37 @@
 //! parameter region, no cross-block reductions), so the engine's output
 //! is **bitwise identical** for any thread count — `threads = 1` is the
 //! serial reference path, asserted by `tests/engine_determinism.rs`.
+//!
+//! ## Runtime substrate
+//!
+//! Parallel block phases run on the persistent worker pool
+//! ([`crate::runtime::pool`]) — long-lived threads with a phase barrier —
+//! instead of spawning a `std::thread::scope` per step. Task claiming is
+//! the same self-scheduling discipline as the PR-1 work queue, and the
+//! pool never changes what is computed, so the pool-backed step is
+//! bitwise identical to the scoped-thread path.
+//!
+//! ## RefreshAhead (pipelined refresh overlap)
+//!
+//! With [`EngineConfig::overlap`] on, the engine prefetches the next
+//! step's inverse-root refreshes: at the end of step `t` it knows which
+//! blocks' `refresh_due` slots fire at `t + 1` (the stagger schedule is
+//! a pure function of the step index), so it spawns the
+//! eigendecompositions of exactly those blocks as a background pool job
+//! while the trainer computes step `t + 1`'s gradients. The job is
+//! joined at the top of step `t + 1`, and prefetched blocks skip their
+//! in-step refresh.
+//!
+//! Overlap is **bitwise identical** to the synchronous schedule by
+//! construction: a refresh only moves ahead when step `t + 1` folds no
+//! statistics (`stat_due` false), in which case the roots computed from
+//! post-step-`t` statistics are exactly the roots the synchronous path
+//! would compute mid-step. Steps that do fold statistics refresh
+//! synchronously, as before (`tests/pool_runtime.rs` pins the 50-step
+//! equivalence). With the App. C cadence (`stat_interval` > 1) most
+//! staggered refresh slots land on prefetchable steps, so their
+//! eigendecompositions vanish from the step's critical path — the
+//! `engine/overlap_refresh` bench measures the win.
 //!
 //! ## Executors
 //!
@@ -48,13 +79,13 @@ use super::precond::{
 };
 use super::shampoo::ShampooConfig;
 use crate::coordinator::shard::{ShardExecutor, ShardLaunch};
-use crate::coordinator::BoundedQueue;
+use crate::runtime::pool;
 use crate::sketch::FdSketch;
 use crate::tensor::{ops, Matrix};
 use crate::util::cli::Args;
 use crate::util::config::Config;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Engine knobs, resolvable from CLI flags and `[engine]` config keys.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,23 +101,43 @@ pub struct EngineConfig {
     /// Phase-shift refresh slots across blocks so eigendecompositions
     /// spread over the interval instead of bunching on one step.
     pub stagger: bool,
+    /// Pipelined refresh overlap: run the next step's due
+    /// eigendecompositions in the background while the trainer computes
+    /// gradients (bitwise identical to the synchronous schedule; see the
+    /// module docs). In-process executors only — sharded engines ignore
+    /// it and refresh synchronously.
+    pub overlap: bool,
+    /// Pre-size the persistent worker pool to this many threads at
+    /// engine construction (0 = grow on demand). Purely a warmup knob —
+    /// never changes results.
+    pub pool_threads: usize,
 }
 
 impl Default for EngineConfig {
     /// The production defaults (shared by [`EngineConfig::resolve`]):
     /// auto threads, no blocking, roots refreshed every 10th step with
-    /// staggering — the App. C amortized cadence.
+    /// staggering — the App. C amortized cadence. Overlap is off by
+    /// default (opt in with `--overlap-refresh`).
     fn default() -> Self {
-        EngineConfig { threads: 0, block_size: 0, refresh_interval: 10, stagger: true }
+        EngineConfig {
+            threads: 0,
+            block_size: 0,
+            refresh_interval: 10,
+            stagger: true,
+            overlap: false,
+            pool_threads: 0,
+        }
     }
 }
 
 impl EngineConfig {
     /// Resolve knobs from CLI flags (`--engine-threads`, `--block-size`,
-    /// `--refresh-interval`, `--stagger-refresh`) with `[engine]` config
-    /// keys as fallback (`engine.threads`, `engine.block_size`,
-    /// `engine.refresh_interval`, `engine.stagger_refresh`) and
-    /// [`EngineConfig::default`] as the final fallback.
+    /// `--refresh-interval`, `--stagger-refresh`, `--overlap-refresh`,
+    /// `--pool-threads`) with `[engine]` config keys as fallback
+    /// (`engine.threads`, `engine.block_size`, `engine.refresh_interval`,
+    /// `engine.stagger_refresh`, `engine.overlap_refresh`,
+    /// `engine.pool_threads`) and [`EngineConfig::default`] as the final
+    /// fallback.
     pub fn resolve(args: &Args, cfg: &Config) -> EngineConfig {
         let d = EngineConfig::default();
         EngineConfig {
@@ -101,6 +152,10 @@ impl EngineConfig {
                 .max(1),
             stagger: args
                 .get_bool("stagger-refresh", cfg.bool_or("engine.stagger_refresh", d.stagger)),
+            overlap: args
+                .get_bool("overlap-refresh", cfg.bool_or("engine.overlap_refresh", d.overlap)),
+            pool_threads: args
+                .get_usize("pool-threads", cfg.usize_or("engine.pool_threads", d.pool_threads)),
         }
     }
 
@@ -222,66 +277,140 @@ pub trait BlockExecutor: Send {
     /// hold their sketches out-of-process and visit nothing.
     fn for_each_sketch(&mut self, _f: &mut dyn FnMut(&FdSketch)) {}
 
+    /// Start the RefreshAhead stage: recompute inverse roots *now*, in
+    /// the background, for every block whose refresh slot fires at the
+    /// next step (`plan.due`) or whose roots are still missing. Returns
+    /// `false` if this executor cannot overlap (the default — the engine
+    /// then refreshes synchronously, which is always correct).
+    fn begin_refresh_ahead(&mut self, _plan: RefreshAheadPlan) -> bool {
+        false
+    }
+
+    /// Join the in-flight RefreshAhead job, if any: which blocks were
+    /// refreshed ahead plus the eigendecomposition count. A task panic
+    /// in the background job surfaces here as an error naming the task.
+    fn finish_refresh_ahead(&mut self) -> anyhow::Result<Option<RefreshAheadDone>> {
+        Ok(None)
+    }
+
     /// Short human label for `Optimizer::name` (e.g. `threads=4`,
     /// `shards=2/tcp`).
     fn label(&self) -> String;
 }
 
-/// Drive `states[i]` with `ctxs[i]` for all i, serially or on a
-/// self-scheduling work queue. Returns the number of eigendecomposition
-/// refreshes. Shared by [`LocalExecutor`] and the shard-worker server —
-/// both sides of the wire run exactly this loop.
+/// Plan for the RefreshAhead stage: the engine's stagger schedule is a
+/// pure function of the step index, so the set of blocks due at step
+/// `t + 1` is known while step `t + 1`'s gradients are still being
+/// computed.
+#[derive(Clone, Debug)]
+pub struct RefreshAheadPlan {
+    /// Per-block: this block's refresh slot fires at the next step.
+    pub due: Vec<bool>,
+    /// Visit every block, not just the due subset — set for the first
+    /// preconditioning step, where blocks without roots refresh
+    /// regardless of their slot.
+    pub all: bool,
+}
+
+/// Result of a joined RefreshAhead job.
+#[derive(Clone, Debug)]
+pub struct RefreshAheadDone {
+    /// Per-block: roots were recomputed ahead, so the step must not
+    /// refresh them again.
+    pub refreshed: Vec<bool>,
+    /// Eigendecompositions that ran ahead (refresh accounting).
+    pub count: usize,
+}
+
+/// Lock a block state, recovering from a poisoned mutex. A panic inside
+/// a block phase is caught and surfaced as a named-task `Err` by
+/// [`drive_all`], which poisons the engine — so the step path can never
+/// silently keep stepping on half-updated state. What this recovery
+/// buys is the paths that legitimately run *after* that failure:
+/// diagnostics (memory accounting, sketch visits) and error reporting
+/// must not die on a bare `PoisonError`.
+fn lock_state(m: &Mutex<BlockState>) -> std::sync::MutexGuard<'_, BlockState> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Drive `states[i]` with `ctxs[i]` for all i, serially or on the
+/// persistent worker pool. Returns the number of eigendecomposition
+/// refreshes; a panicking block surfaces as an `Err` naming it (the
+/// engine poisons itself on that error, and a shard worker reports it
+/// over the wire instead of dying). Shared by [`LocalExecutor`] and the
+/// shard-worker server — both sides of the wire run exactly this loop.
+///
+/// The pool path keeps the PR-1 work-queue discipline (self-scheduling:
+/// whichever worker frees up first takes the next block, so one slow
+/// eigendecomposition never idles the rest) without spawning scoped
+/// threads per step — and, since per-block work is self-contained, its
+/// output is bitwise identical to the serial path.
 pub(crate) fn drive_all(
-    states: &mut [Mutex<BlockState>],
+    states: &[Mutex<BlockState>],
     ctxs: &[StepCtx],
     threads: usize,
-) -> usize {
+) -> anyhow::Result<usize> {
     let n = states.len();
     debug_assert_eq!(n, ctxs.len());
     if threads <= 1 {
-        // Serial reference path (identical math, no pool).
+        // Serial reference path: inline on the caller, with no kernel
+        // pin — a serial engine keeps nested dense-kernel parallelism,
+        // exactly as before the pool.
         let mut refreshes = 0;
         for i in 0..n {
-            let st = states[i].get_mut().unwrap();
-            if drive_block(st, &ctxs[i]) {
-                refreshes += 1;
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut st = lock_state(&states[i]);
+                drive_block(&mut st, &ctxs[i])
+            }));
+            match r {
+                Ok(true) => refreshes += 1,
+                Ok(false) => {}
+                Err(payload) => {
+                    anyhow::bail!("block {i} panicked: {}", pool::panic_message(&payload))
+                }
             }
         }
-        refreshes
+        Ok(refreshes)
     } else {
-        // Self-scheduling work queue: whichever worker frees up first
-        // takes the next block, so one slow eigendecomposition never
-        // idles the rest of the pool.
         let refreshes = AtomicUsize::new(0);
-        let queue = BoundedQueue::work_list(0..n);
-        let states = &*states;
-        std::thread::scope(|scope| {
-            for _ in 0..threads {
-                scope.spawn(|| {
-                    // Pin dense kernels to one thread per worker: the
-                    // engine already owns the parallelism, so nested
-                    // kernel threading would only oversubscribe cores.
-                    ops::with_single_thread(|| {
-                        while let Some(i) = queue.pop() {
-                            let mut st = states[i].lock().unwrap();
-                            if drive_block(&mut st, &ctxs[i]) {
-                                refreshes.fetch_add(1, Ordering::Relaxed);
-                            }
-                        }
-                    });
+        pool::global()
+            .try_run(threads, n, |i| {
+                // Pin dense kernels to one thread per task: the engine
+                // already owns the parallelism, so nested kernel
+                // threading would only oversubscribe cores.
+                ops::with_single_thread(|| {
+                    let mut st = lock_state(&states[i]);
+                    if drive_block(&mut st, &ctxs[i]) {
+                        refreshes.fetch_add(1, Ordering::Relaxed);
+                    }
                 });
-            }
-        });
-        refreshes.load(Ordering::Relaxed)
+            })
+            .map_err(|m| anyhow::anyhow!("block phase: {m}"))?;
+        Ok(refreshes.load(Ordering::Relaxed))
     }
 }
 
-/// In-process executor: per-block states driven on the work queue. This
-/// is the PR-1 engine path, preserved bit-for-bit.
+/// In-process executor: per-block states driven on the persistent pool.
+/// Numerically this is the PR-1 engine path, preserved bit-for-bit.
+///
+/// States live behind an `Arc` so the RefreshAhead background job can
+/// hold them across the gap between steps; the per-block `Mutex` is the
+/// double-buffer handoff — the job writes fresh roots into the unit's
+/// root slots under the lock, and the next step's `apply` picks them up
+/// bitwise-identically to a synchronous refresh.
 pub struct LocalExecutor {
-    states: Vec<Mutex<BlockState>>,
+    states: Arc<Vec<Mutex<BlockState>>>,
     /// Raw thread knob (0 = auto).
     threads: usize,
+    /// In-flight RefreshAhead job (overlap mode).
+    pending: Option<PendingRefresh>,
+}
+
+/// Handle + result slots of a spawned RefreshAhead job.
+struct PendingRefresh {
+    handle: pool::JobHandle,
+    flags: Arc<Vec<AtomicBool>>,
+    count: Arc<AtomicUsize>,
 }
 
 impl LocalExecutor {
@@ -293,7 +422,7 @@ impl LocalExecutor {
                 Mutex::new(BlockState::new(kind.make(shape, base), base.graft, shape, base.beta2))
             })
             .collect();
-        LocalExecutor { states, threads }
+        LocalExecutor { states: Arc::new(states), threads, pending: None }
     }
 }
 
@@ -305,42 +434,100 @@ impl BlockExecutor for LocalExecutor {
         grads: &[Matrix],
         ctxs: &[StepCtx],
     ) -> anyhow::Result<usize> {
+        // The engine joins any RefreshAhead job before stepping.
+        debug_assert!(self.pending.is_none(), "step with refresh-ahead in flight");
         // Gather: copy each block's parameter/gradient window into its
         // state scratch (allocation-free) so the parallel phase touches
         // fully disjoint data.
         for (i, b) in blocks.iter().enumerate() {
-            let st = self.states[i].get_mut().unwrap();
+            let mut st = lock_state(&self.states[i]);
             params[b.tensor].slice_into(b.r0, b.r1, b.c0, b.c1, &mut st.param);
             grads[b.tensor].slice_into(b.r0, b.r1, b.c0, b.c1, &mut st.grad);
         }
         let threads = effective_worker_threads(self.threads, blocks.len());
-        let refreshes = drive_all(&mut self.states, ctxs, threads);
+        let refreshes = drive_all(&self.states, ctxs, threads)?;
         // Scatter: write updated parameter blocks back.
         for (i, b) in blocks.iter().enumerate() {
-            let st = self.states[i].get_mut().unwrap();
+            let st = lock_state(&self.states[i]);
             params[b.tensor].set_slice(b.r0, b.c0, &st.param);
         }
         Ok(refreshes)
     }
 
     fn mem_bytes(&self) -> usize {
-        self.states.iter().map(|s| s.lock().unwrap().mem_bytes()).sum()
+        self.states.iter().map(|s| lock_state(s).mem_bytes()).sum()
     }
 
     fn second_moment_bytes(&self) -> usize {
-        self.states
-            .iter()
-            .map(|s| s.lock().unwrap().second_moment_bytes())
-            .sum()
+        self.states.iter().map(|s| lock_state(s).second_moment_bytes()).sum()
     }
 
     fn for_each_sketch(&mut self, f: &mut dyn FnMut(&FdSketch)) {
-        for st in &mut self.states {
-            let st = st.get_mut().unwrap();
+        for st in self.states.iter() {
+            let st = lock_state(st);
             for fd in st.unit.sketches() {
                 f(fd);
             }
         }
+    }
+
+    fn begin_refresh_ahead(&mut self, plan: RefreshAheadPlan) -> bool {
+        debug_assert!(self.pending.is_none(), "refresh-ahead already in flight");
+        let n = self.states.len();
+        debug_assert_eq!(plan.due.len(), n);
+        // One task per block that can actually have work: the due subset
+        // in steady state, every block on the first preconditioning step
+        // (`plan.all`, where not-yet-ready blocks refresh regardless of
+        // slot). Blocks outside the target set never spawn a task, so
+        // the background job does not steal pool workers from the
+        // trainer's own gradient kernels just to check a flag.
+        let mut targets: Vec<usize> = Vec::new();
+        for (i, &d) in plan.due.iter().enumerate() {
+            if plan.all || d {
+                targets.push(i);
+            }
+        }
+        if targets.is_empty() {
+            return false;
+        }
+        let flags: Arc<Vec<AtomicBool>> =
+            Arc::new((0..n).map(|_| AtomicBool::new(false)).collect());
+        let count = Arc::new(AtomicUsize::new(0));
+        let states = Arc::clone(&self.states);
+        let due = plan.due;
+        let job_flags = Arc::clone(&flags);
+        let job_count = Arc::clone(&count);
+        let parallelism = effective_worker_threads(self.threads, targets.len());
+        let handle = pool::global().spawn(parallelism, targets.len(), move |j| {
+            let i = targets[j];
+            // Same per-task kernel pin as the step phase.
+            ops::with_single_thread(|| {
+                let mut st = lock_state(&states[i]);
+                // Mirror of drive_block's refresh condition (the engine
+                // only schedules the job on preconditioning steps that
+                // fold no statistics, so the stats a synchronous refresh
+                // would see are exactly the current ones).
+                if !st.unit.ready() || due[i] {
+                    if st.unit.refresh() {
+                        job_count.fetch_add(1, Ordering::Relaxed);
+                    }
+                    job_flags[i].store(true, Ordering::Relaxed);
+                }
+            });
+        });
+        self.pending = Some(PendingRefresh { handle, flags, count });
+        true
+    }
+
+    fn finish_refresh_ahead(&mut self) -> anyhow::Result<Option<RefreshAheadDone>> {
+        let Some(p) = self.pending.take() else {
+            return Ok(None);
+        };
+        p.handle
+            .wait()
+            .map_err(|m| anyhow::anyhow!("refresh-ahead job failed: {m}"))?;
+        let refreshed = p.flags.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        Ok(Some(RefreshAheadDone { refreshed, count: p.count.load(Ordering::Relaxed) }))
     }
 
     fn label(&self) -> String {
@@ -415,6 +602,11 @@ impl PrecondEngine {
         ecfg: EngineConfig,
     ) -> Self {
         let (base, blocks) = plan(shapes, kind, base, &ecfg);
+        // Warm the persistent pool up front if asked to, so the first
+        // step pays no thread-spawn latency (never changes results).
+        if ecfg.pool_threads > 0 {
+            pool::global().ensure_workers(ecfg.pool_threads);
+        }
         let executor = Box::new(LocalExecutor::new(&blocks, kind, &base, ecfg.threads));
         PrecondEngine { base, ecfg, kind, blocks, executor, t: 0, refreshes: 0, poisoned: None }
     }
@@ -482,6 +674,46 @@ impl PrecondEngine {
         self.executor.for_each_sketch(&mut f);
     }
 
+    /// Whether block `i`'s refresh slot fires at step `t` — the stagger
+    /// schedule, a pure function of the indices (which is what makes the
+    /// RefreshAhead due-set known one step early).
+    fn refresh_due_at(&self, i: usize, t: usize) -> bool {
+        let refresh_interval = self.ecfg.refresh_interval.max(1);
+        let phase = if self.ecfg.stagger { i % refresh_interval } else { 0 };
+        (t + phase) % refresh_interval == 0
+    }
+
+    /// Kick off the RefreshAhead stage for step `t + 1`, when doing so
+    /// is bitwise-safe: the next step must precondition and must not
+    /// fold statistics (otherwise a synchronous refresh would see newer
+    /// statistics than a prefetched one — those steps stay synchronous).
+    fn schedule_refresh_ahead(&mut self) {
+        let t_next = self.t + 1;
+        if t_next < self.base.start_preconditioning_step {
+            return;
+        }
+        if t_next % self.base.stat_interval == 0 {
+            return; // next step ingests: roots would differ — stay sync
+        }
+        let due: Vec<bool> =
+            (0..self.blocks.len()).map(|i| self.refresh_due_at(i, t_next)).collect();
+        // First preconditioning step refreshes every not-yet-ready block
+        // regardless of its slot; otherwise skip the spawn when no slot
+        // fires (after the first refresh all blocks stay ready).
+        let all = t_next == self.base.start_preconditioning_step;
+        if !all && !due.iter().any(|&d| d) {
+            return;
+        }
+        if !self.executor.begin_refresh_ahead(RefreshAheadPlan { due, all }) {
+            // The executor cannot overlap (e.g. sharded): latch the knob
+            // off so we stop re-planning a declined job every step and
+            // `name()` reports what actually runs. (A local executor
+            // only declines on an empty plan, which the guards above
+            // rule out for engines with blocks.)
+            self.ecfg.overlap = false;
+        }
+    }
+
     /// Fallible step — the sharded executor surfaces worker/transport
     /// failures here instead of panicking.
     ///
@@ -497,28 +729,40 @@ impl PrecondEngine {
         }
         self.t += 1;
         let t = self.t;
+        // Join the RefreshAhead job spawned at the end of the previous
+        // step (if any): those blocks' roots are already fresh, so their
+        // in-step refresh slot is cleared below.
+        let ahead = match self.executor.finish_refresh_ahead() {
+            Ok(a) => a,
+            Err(e) => {
+                self.poisoned = Some(format!("step {t}: {e:#}"));
+                return Err(e);
+            }
+        };
         let scale = clip_scale(grads, self.base.clip);
         let preconditioning = t >= self.base.start_preconditioning_step;
         let stat_due = t % self.base.stat_interval == 0;
-        let refresh_interval = self.ecfg.refresh_interval.max(1);
-        let stagger = self.ecfg.stagger;
         let base = &self.base;
-        let ctxs: Vec<StepCtx> = (0..self.blocks.len())
-            .map(|i| {
-                let phase = if stagger { i % refresh_interval } else { 0 };
-                StepCtx {
-                    t,
-                    scale,
-                    preconditioning,
-                    refresh_due: (t + phase) % refresh_interval == 0,
-                    lr: base.lr,
-                    beta1: base.beta1,
-                    weight_decay: base.weight_decay,
-                    stat_due,
-                    graft: base.graft,
-                }
+        let mut ctxs: Vec<StepCtx> = (0..self.blocks.len())
+            .map(|i| StepCtx {
+                t,
+                scale,
+                preconditioning,
+                refresh_due: self.refresh_due_at(i, t),
+                lr: base.lr,
+                beta1: base.beta1,
+                weight_decay: base.weight_decay,
+                stat_due,
+                graft: base.graft,
             })
             .collect();
+        if let Some(done) = &ahead {
+            for (ctx, &pre) in ctxs.iter_mut().zip(&done.refreshed) {
+                if pre {
+                    ctx.refresh_due = false;
+                }
+            }
+        }
         let refreshed = match self.executor.step_blocks(&self.blocks, params, grads, &ctxs) {
             Ok(n) => n,
             Err(e) => {
@@ -526,7 +770,10 @@ impl PrecondEngine {
                 return Err(e);
             }
         };
-        self.refreshes += refreshed;
+        self.refreshes += refreshed + ahead.map(|d| d.count).unwrap_or(0);
+        if self.ecfg.overlap {
+            self.schedule_refresh_ahead();
+        }
         Ok(())
     }
 }
@@ -534,11 +781,12 @@ impl PrecondEngine {
 impl Optimizer for PrecondEngine {
     fn name(&self) -> String {
         format!(
-            "Engine<{}>(blocks={}, {}, refresh={})",
+            "Engine<{}>(blocks={}, {}, refresh={}{})",
             self.kind.label(),
             self.blocks.len(),
             self.executor.label(),
             self.ecfg.refresh_interval,
+            if self.ecfg.overlap { "+overlap" } else { "" },
         )
     }
 
@@ -650,6 +898,7 @@ mod tests {
             block_size: 3,
             refresh_interval: 2,
             stagger: true,
+            ..Default::default()
         };
         let mut opt = PrecondEngine::shampoo(&shapes, base_cfg(), ecfg);
         for _ in 0..3000 {
@@ -679,11 +928,11 @@ mod tests {
     #[test]
     fn config_resolution_precedence() {
         let cfg = Config::parse(
-            "[engine]\nthreads = 3\nblock_size = 256\nrefresh_interval = 5\nstagger_refresh = false",
+            "[engine]\nthreads = 3\nblock_size = 256\nrefresh_interval = 5\nstagger_refresh = false\noverlap_refresh = true\npool_threads = 6",
         )
         .unwrap();
         let args = Args::parse(
-            ["train", "--engine-threads", "8", "--stagger-refresh", "true"]
+            ["train", "--engine-threads", "8", "--stagger-refresh", "true", "--pool-threads", "2"]
                 .iter()
                 .map(|s| s.to_string()),
         );
@@ -693,10 +942,14 @@ mod tests {
         assert_eq!(e.block_size, 256);
         assert_eq!(e.refresh_interval, 5);
         assert!(e.stagger);
+        assert!(e.overlap);
+        assert_eq!(e.pool_threads, 2);
         let defaults = EngineConfig::resolve(&Args::default(), &Config::default());
         assert_eq!(defaults.threads, 0);
         assert_eq!(defaults.refresh_interval, 10);
         assert!(defaults.stagger);
+        assert!(!defaults.overlap);
+        assert_eq!(defaults.pool_threads, 0);
     }
 
     #[test]

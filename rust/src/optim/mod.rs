@@ -43,7 +43,7 @@ pub use adam::{Adam, Sgd};
 pub use blocking::{partition, Block, Blocked};
 pub use engine::{
     engine_optimizer, sharded_engine_optimizer, BlockExecutor, EngineConfig, LocalExecutor,
-    PrecondEngine, UnitKind,
+    PrecondEngine, RefreshAheadDone, RefreshAheadPlan, UnitKind,
 };
 pub use fd_baselines::{AdaFd, FdSon, RfdSon};
 pub use first_order::{AdaGradDiag, Ogd};

@@ -1,8 +1,15 @@
-//! PJRT runtime (system S7): loads the AOT-compiled HLO-text artifacts
-//! produced by `python/compile/aot.py` and executes them from the Rust
-//! training path. Python never runs at training time.
+//! Process runtime: the PJRT artifact plane (system S7) and the
+//! persistent worker-pool substrate every parallel phase runs on.
+//!
+//! [`artifact`] loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust training
+//! path (Python never runs at training time). [`pool`] is the
+//! process-wide pool of long-lived worker threads behind the dense
+//! kernels (`tensor::ops`) and the block engine (`optim::engine`).
 
 pub mod artifact;
 pub mod literal;
+pub mod pool;
 
 pub use artifact::{ArtifactSpec, IoSpec, Runtime};
+pub use pool::WorkerPool;

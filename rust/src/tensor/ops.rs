@@ -2,12 +2,24 @@
 //!
 //! These are the L3 hot paths of the optimizer family — an S-Shampoo step
 //! is dominated by `at_a` / `a_at` (covariance statistics) and three-way
-//! products (preconditioner application). The kernels use i-k-j loop order
-//! over row-major storage (unit-stride inner loops the compiler can
+//! products (preconditioner application). The kernels use i-k-j loop
+//! order over row-major storage (unit-stride inner loops the compiler can
 //! auto-vectorize) and split work across threads by output row blocks.
+//!
+//! Parallel dispatch runs on the persistent worker pool
+//! ([`crate::runtime::pool`]) instead of spawning a `std::thread::scope`
+//! per call: the row partition is computed here (matmul keeps the exact
+//! chunk boundaries of the old scoped-thread split; the triangle Gram
+//! kernels use finer bands the pool load-balances), each task owns a
+//! disjoint band of output rows, and every output element is
+//! accumulated entirely within one task in the same order as the serial
+//! loop — so results are **bitwise identical** for any thread count and
+//! any band split (`tests/pool_runtime.rs`).
 
 use super::matrix::Matrix;
+use crate::runtime::pool;
 use std::cell::Cell;
+use std::sync::OnceLock;
 
 thread_local! {
     /// When set, dense kernels on this thread stay single-threaded. The
@@ -30,24 +42,86 @@ pub fn with_single_thread<R>(f: impl FnOnce() -> R) -> R {
 
 /// Number of worker threads for the dense kernels. Resolution order:
 /// [`with_single_thread`] pin, `SKETCHY_THREADS` env var, then available
-/// parallelism, capped at 16.
+/// parallelism, capped at 16. The env/parallelism resolution is cached
+/// in a `OnceLock` on first use — this runs on every kernel call, so the
+/// hot path must not re-read and re-parse the environment (the pin stays
+/// a live thread-local check, so test overrides via the pin keep
+/// working).
 pub fn num_threads() -> usize {
     if SINGLE_THREAD.with(|s| s.get()) {
         return 1;
     }
-    if let Ok(s) = std::env::var("SKETCHY_THREADS") {
-        if let Ok(n) = s.parse::<usize>() {
-            return n.max(1);
+    static RESOLVED: OnceLock<usize> = OnceLock::new();
+    *RESOLVED.get_or_init(|| {
+        if let Ok(s) = std::env::var("SKETCHY_THREADS") {
+            if let Ok(n) = s.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(16)
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(16)
+    })
 }
 
-/// Threshold (in multiply-adds) below which matmul stays single-threaded.
+/// Threshold (in multiply-adds) below which kernels stay single-threaded.
 const PAR_FLOP_THRESHOLD: usize = 1 << 20;
+
+/// Disjoint-band pointer into an output buffer, so pool tasks can each
+/// take `&mut` to their own row band. Safety is the caller's: bands must
+/// not overlap, and the buffer must outlive the phase (the pool's `run`
+/// barriers before returning).
+#[derive(Clone, Copy)]
+struct BandPtr(*mut f64);
+unsafe impl Send for BandPtr {}
+unsafe impl Sync for BandPtr {}
+
+impl BandPtr {
+    /// The band `[offset, offset + len)` of the underlying buffer.
+    ///
+    /// SAFETY: caller guarantees disjointness across concurrent tasks
+    /// and that the buffer outlives the phase barrier.
+    unsafe fn band(self, offset: usize, len: usize) -> &'static mut [f64] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+}
+
+/// Partition output rows `[0, m)` into contiguous chunks of
+/// `ceil(m / (threads · granularity))` rows and run `f(band, r0, r1)`
+/// for each on the persistent pool, where `band` is the disjoint window
+/// of `out` covering rows `[r0, r1)` (each `row_width` wide).
+/// `granularity = 1` reproduces the exact split the pre-pool
+/// scoped-thread code used; the triangle kernels pass a finer
+/// granularity so the pool's self-scheduling cursor load-balances their
+/// descending per-row cost. Every output element is written by exactly
+/// one task regardless of the split, so the parallel result is bitwise
+/// identical to running the chunks serially at any granularity.
+fn par_row_chunks(
+    out: &mut [f64],
+    m: usize,
+    row_width: usize,
+    threads: usize,
+    granularity: usize,
+    f: impl Fn(&mut [f64], usize, usize) + Sync,
+) {
+    debug_assert_eq!(out.len(), m * row_width);
+    let chunk = m.div_ceil(threads * granularity.max(1)).max(1);
+    let n_chunks = m.div_ceil(chunk);
+    let base = BandPtr(out.as_mut_ptr());
+    pool::global().run(threads, n_chunks, |ci| {
+        let r0 = ci * chunk;
+        let r1 = (r0 + chunk).min(m);
+        let band = unsafe { base.band(r0 * row_width, (r1 - r0) * row_width) };
+        f(band, r0, r1);
+    });
+}
+
+/// Chunks per thread for the triangular Gram kernels: row `i` of the
+/// upper triangle costs `m - i`, so equal-row bands would leave the
+/// first band with ~2x the mean work; finer bands + self-scheduling
+/// even it out.
+const TRIANGLE_GRANULARITY: usize = 4;
 
 /// C = A · B.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
@@ -63,59 +137,55 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let n = b.cols();
     assert_eq!(b.rows(), k);
     assert_eq!(c.shape(), (m, n));
-    c.as_mut_slice().fill(0.0);
     let flops = m * n * k;
     let threads = num_threads();
     if flops < PAR_FLOP_THRESHOLD || threads == 1 || m < 2 {
-        matmul_rows(a, b, c.as_mut_slice(), 0, m);
+        matmul_rows_offset(a, b, c.as_mut_slice(), 0, m);
         return;
     }
-    // Partition output rows across threads.
-    let chunk = m.div_ceil(threads);
-    let n_cols = n;
-    let c_data = c.as_mut_slice();
-    std::thread::scope(|scope| {
-        let mut rest = c_data;
-        let mut row0 = 0;
-        while row0 < m {
-            let rows_here = chunk.min(m - row0);
-            let (head, tail) = rest.split_at_mut(rows_here * n_cols);
-            rest = tail;
-            let r0 = row0;
-            scope.spawn(move || {
-                matmul_rows_offset(a, b, head, r0, r0 + rows_here);
-            });
-            row0 += rows_here;
-        }
+    par_row_chunks(c.as_mut_slice(), m, n, threads, 1, |band, r0, r1| {
+        matmul_rows_offset(a, b, band, r0, r1);
     });
 }
 
-/// Compute rows [r0, r1) of A·B into `out` (out is the full C buffer).
-fn matmul_rows(a: &Matrix, b: &Matrix, out: &mut [f64], r0: usize, r1: usize) {
-    let n = b.cols();
-    let sub = &mut out[r0 * n..r1 * n];
-    matmul_rows_offset(a, b, sub, r0, r1);
-}
-
-/// Compute rows [r0, r1) of A·B into `out`, where out[0..] corresponds to
-/// row r0 of C. i-k-j order: for each output row, accumulate scaled rows
-/// of B — unit stride everywhere.
+/// Compute rows [r0, r1) of A·B into `out`, where out[0..] corresponds
+/// to row r0 of C; `out` is overwritten. i-k-j order: for each output
+/// row, the first contributing row of B is written directly and the rest
+/// accumulate — no separate zero-fill pass over C (rows of A with no
+/// nonzero entry still zero their output row). Unit stride everywhere.
 fn matmul_rows_offset(a: &Matrix, b: &Matrix, out: &mut [f64], r0: usize, r1: usize) {
     let k = a.cols();
     let n = b.cols();
     for i in r0..r1 {
         let arow = a.row(i);
         let crow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+        let mut wrote = false;
         for p in 0..k {
             let aip = arow[p];
             if aip == 0.0 {
                 continue;
             }
             let brow = b.row(p);
-            // Unit-stride AXPY the compiler vectorizes.
-            for j in 0..n {
-                crow[j] += aip * brow[j];
+            if wrote {
+                // Unit-stride AXPY the compiler vectorizes.
+                for j in 0..n {
+                    crow[j] += aip * brow[j];
+                }
+            } else {
+                // First contribution replaces the old full zero-fill
+                // pass over C. The explicit `0.0 +` keeps the exact
+                // arithmetic of that path (fill then accumulate) so the
+                // result stays bitwise identical even when the first
+                // product is -0.0 (0.0 + -0.0 == +0.0, while a direct
+                // store would keep the sign bit).
+                for j in 0..n {
+                    crow[j] = 0.0 + aip * brow[j];
+                }
+                wrote = true;
             }
+        }
+        if !wrote {
+            crow.fill(0.0);
         }
     }
 }
@@ -126,24 +196,38 @@ pub fn at_b(a: &Matrix, b: &Matrix) -> Matrix {
     let (k, m) = a.shape();
     let n = b.cols();
     let mut c = Matrix::zeros(m, n);
-    // (AᵀB)[i][j] = Σ_p A[p][i] B[p][j]; loop p outermost, rows of A and B
-    // both unit stride.
-    let c_data = c.as_mut_slice();
+    let threads = num_threads();
+    if k * m * n < PAR_FLOP_THRESHOLD || threads == 1 || m < 2 {
+        at_b_rows(a, b, c.as_mut_slice(), 0, m);
+    } else {
+        par_row_chunks(c.as_mut_slice(), m, n, threads, 1, |band, r0, r1| {
+            at_b_rows(a, b, band, r0, r1);
+        });
+    }
+    c
+}
+
+/// Rows [i0, i1) of AᵀB into `out` (out[0..] is row i0).
+/// (AᵀB)[i][j] = Σ_p A[p][i] B[p][j]; loop p outermost, rows of A and B
+/// both unit stride; accumulation over p is ascending for every element,
+/// independent of the band split.
+fn at_b_rows(a: &Matrix, b: &Matrix, out: &mut [f64], i0: usize, i1: usize) {
+    let k = a.rows();
+    let n = b.cols();
     for p in 0..k {
         let arow = a.row(p);
         let brow = b.row(p);
-        for i in 0..m {
+        for i in i0..i1 {
             let api = arow[i];
             if api == 0.0 {
                 continue;
             }
-            let crow = &mut c_data[i * n..(i + 1) * n];
+            let crow = &mut out[(i - i0) * n..(i - i0 + 1) * n];
             for j in 0..n {
                 crow[j] += api * brow[j];
             }
         }
     }
-    c
 }
 
 /// C = A · Bᵀ without materializing Bᵀ.
@@ -152,9 +236,24 @@ pub fn a_bt(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
     let n = b.rows();
     let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
+    let threads = num_threads();
+    if m * n * k < PAR_FLOP_THRESHOLD || threads == 1 || m < 2 {
+        a_bt_rows(a, b, c.as_mut_slice(), 0, m);
+    } else {
+        par_row_chunks(c.as_mut_slice(), m, n, threads, 1, |band, r0, r1| {
+            a_bt_rows(a, b, band, r0, r1);
+        });
+    }
+    c
+}
+
+/// Rows [i0, i1) of A·Bᵀ into `out` (out[0..] is row i0).
+fn a_bt_rows(a: &Matrix, b: &Matrix, out: &mut [f64], i0: usize, i1: usize) {
+    let k = a.cols();
+    let n = b.rows();
+    for i in i0..i1 {
         let arow = a.row(i);
-        let crow = c.row_mut(i);
+        let crow = &mut out[(i - i0) * n..(i - i0 + 1) * n];
         #[allow(clippy::needless_range_loop)]
         for j in 0..n {
             let brow = b.row(j);
@@ -165,53 +264,84 @@ pub fn a_bt(a: &Matrix, b: &Matrix) -> Matrix {
             crow[j] = s;
         }
     }
-    c
 }
 
-/// Gram matrix AᵀA (symmetric; only upper triangle computed, mirrored).
+/// Gram matrix AᵀA — the S-Shampoo covariance-statistics kernel. Only
+/// the upper triangle is computed (half the flops of a full product),
+/// mirrored afterwards; the triangle rows are band-partitioned across
+/// the pool.
 pub fn at_a(a: &Matrix) -> Matrix {
     let (k, m) = a.shape();
     let mut c = Matrix::zeros(m, m);
-    let c_data = c.as_mut_slice();
+    let threads = num_threads();
+    // Upper triangle only: ~k·m²/2 multiply-adds.
+    if k * m * m / 2 < PAR_FLOP_THRESHOLD || threads == 1 || m < 2 {
+        at_a_rows(a, c.as_mut_slice(), 0, m);
+    } else {
+        par_row_chunks(c.as_mut_slice(), m, m, threads, TRIANGLE_GRANULARITY, |band, i0, i1| {
+            at_a_rows(a, band, i0, i1);
+        });
+    }
+    mirror_upper(&mut c);
+    c
+}
+
+/// Upper-triangle rows [i0, i1) of AᵀA into `out` (out[0..] is row i0).
+fn at_a_rows(a: &Matrix, out: &mut [f64], i0: usize, i1: usize) {
+    let (k, m) = a.shape();
     for p in 0..k {
         let row = a.row(p);
-        for i in 0..m {
+        for i in i0..i1 {
             let v = row[i];
             if v == 0.0 {
                 continue;
             }
-            let crow = &mut c_data[i * m..(i + 1) * m];
+            let crow = &mut out[(i - i0) * m..(i - i0 + 1) * m];
             for j in i..m {
                 crow[j] += v * row[j];
             }
         }
     }
-    // Mirror upper to lower.
-    for i in 0..m {
-        for j in (i + 1)..m {
-            c_data[j * m + i] = c_data[i * m + j];
-        }
+}
+
+/// Outer Gram matrix AAᵀ. Upper triangle only (half the flops),
+/// band-partitioned across the pool, mirrored afterwards.
+pub fn a_at(a: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let mut c = Matrix::zeros(m, m);
+    let threads = num_threads();
+    if m * m * k / 2 < PAR_FLOP_THRESHOLD || threads == 1 || m < 2 {
+        a_at_rows(a, c.as_mut_slice(), 0, m);
+    } else {
+        par_row_chunks(c.as_mut_slice(), m, m, threads, TRIANGLE_GRANULARITY, |band, i0, i1| {
+            a_at_rows(a, band, i0, i1);
+        });
     }
+    mirror_upper(&mut c);
     c
 }
 
-/// Outer Gram matrix AAᵀ.
-pub fn a_at(a: &Matrix) -> Matrix {
-    let (m, _) = a.shape();
-    let mut c = Matrix::zeros(m, m);
-    for i in 0..m {
+/// Upper-triangle rows [i0, i1) of AAᵀ into `out` (out[0..] is row i0).
+fn a_at_rows(a: &Matrix, out: &mut [f64], i0: usize, i1: usize) {
+    let m = a.rows();
+    for i in i0..i1 {
         let ri = a.row(i);
+        let crow = &mut out[(i - i0) * m..(i - i0 + 1) * m];
         for j in i..m {
-            let rj = a.row(j);
-            let mut s = 0.0;
-            for p in 0..ri.len() {
-                s += ri[p] * rj[p];
-            }
-            c[(i, j)] = s;
-            c[(j, i)] = s;
+            crow[j] = dot(ri, a.row(j));
         }
     }
-    c
+}
+
+/// Copy the strict upper triangle onto the lower (symmetric output).
+fn mirror_upper(c: &mut Matrix) {
+    let m = c.rows();
+    let data = c.as_mut_slice();
+    for i in 0..m {
+        for j in (i + 1)..m {
+            data[j * m + i] = data[i * m + j];
+        }
+    }
 }
 
 /// y = A · x.
@@ -284,6 +414,39 @@ mod tests {
         c
     }
 
+    /// The pre-optimization matmul inner loop: zero-fill C, then
+    /// accumulate every k-iteration — the reference the write-first
+    /// variant must match bitwise.
+    fn zero_fill_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let mut c = Matrix::zeros(m, n);
+        let out = c.as_mut_slice();
+        for i in 0..m {
+            let arow = a.row(i);
+            let crow = &mut out[i * n..(i + 1) * n];
+            crow.fill(0.0);
+            for p in 0..k {
+                let aip = arow[p];
+                if aip == 0.0 {
+                    continue;
+                }
+                let brow = b.row(p);
+                for j in 0..n {
+                    crow[j] += aip * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    fn assert_bitwise_eq(a: &Matrix, b: &Matrix, what: &str) {
+        assert_eq!(a.shape(), b.shape(), "{what}: shape");
+        for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} vs {y}");
+        }
+    }
+
     #[test]
     fn matmul_matches_naive() {
         let mut rng = Pcg64::new(2);
@@ -293,6 +456,38 @@ mod tests {
             let c = matmul(&a, &b);
             assert!(c.max_diff(&naive_matmul(&a, &b)) < 1e-10);
         }
+    }
+
+    #[test]
+    fn write_first_matmul_matches_zero_fill_bitwise() {
+        let mut rng = Pcg64::new(7);
+        // Dense case plus sparse rows (whole zero rows exercise the
+        // no-contribution path the old zero-fill handled implicitly).
+        for &(m, k, n) in &[(9, 6, 11), (32, 17, 8)] {
+            let mut a = Matrix::randn(m, k, &mut rng);
+            for j in 0..k {
+                a[(1, j)] = 0.0; // a fully-zero row of A
+                if j % 3 == 0 {
+                    a[(0, j)] = 0.0; // scattered zeros
+                }
+            }
+            let b = Matrix::randn(k, n, &mut rng);
+            assert_bitwise_eq(&matmul(&a, &b), &zero_fill_matmul(&a, &b), "write-first");
+            // Dirty output buffers are fully overwritten.
+            let mut c = Matrix::randn(m, n, &mut rng);
+            matmul_into(&a, &b, &mut c);
+            assert_bitwise_eq(&c, &zero_fill_matmul(&a, &b), "dirty-buffer overwrite");
+        }
+        // Signed-zero edge: when the only contribution is -0.0 the old
+        // fill-then-accumulate produced +0.0 (0.0 + -0.0); the
+        // write-first path must reproduce that bit pattern, not store
+        // the raw -0.0 product.
+        let a = Matrix::from_rows(&[vec![-1.0]]);
+        let b = Matrix::from_rows(&[vec![0.0, 3.0]]);
+        let c = matmul(&a, &b);
+        assert_bitwise_eq(&c, &zero_fill_matmul(&a, &b), "signed-zero first contribution");
+        assert_eq!(c[(0, 0)].to_bits(), 0f64.to_bits(), "must be +0.0, not -0.0");
+        assert_eq!(c[(0, 1)], -3.0);
     }
 
     #[test]
@@ -307,6 +502,8 @@ mod tests {
         assert_eq!(inner, 1);
         assert_eq!(nested, 1);
         assert_eq!(num_threads(), outer, "pin leaked past its scope");
+        // The cached resolution is stable across calls.
+        assert_eq!(num_threads(), outer);
     }
 
     #[test]
@@ -316,6 +513,10 @@ mod tests {
         let a = Matrix::randn(160, 160, &mut rng);
         let b = Matrix::randn(160, 160, &mut rng);
         assert!(matmul(&a, &b).max_diff(&naive_matmul(&a, &b)) < 1e-9);
+        // Pooled dispatch is bitwise identical to the pinned-serial path.
+        let pooled = matmul(&a, &b);
+        let serial = with_single_thread(|| matmul(&a, &b));
+        assert_bitwise_eq(&pooled, &serial, "pooled matmul");
     }
 
     #[test]
@@ -328,6 +529,26 @@ mod tests {
         assert!(a_bt(&a, &b2).max_diff(&matmul(&a, &b2.t())) < 1e-12);
         assert!(at_a(&a).max_diff(&matmul(&a.t(), &a)) < 1e-12);
         assert!(a_at(&a).max_diff(&matmul(&a, &a.t())) < 1e-12);
+    }
+
+    #[test]
+    fn gram_kernels_match_oracle_above_parallel_threshold() {
+        // Sizes that cross PAR_FLOP_THRESHOLD so the pooled triangle
+        // path runs; validated against the full-product oracle.
+        let mut rng = Pcg64::new(6);
+        let a = Matrix::randn(400, 96, &mut rng);
+        let g = at_a(&a);
+        assert!(g.max_diff(&matmul(&a.t(), &a)) < 1e-12 * 400.0);
+        assert!(g.is_symmetric(0.0));
+        let b = Matrix::randn(96, 400, &mut rng);
+        let h = a_at(&b);
+        assert!(h.max_diff(&matmul(&b, &b.t())) < 1e-12 * 400.0);
+        assert!(h.is_symmetric(0.0));
+        // Parallel ≡ pinned-serial, bitwise.
+        assert_bitwise_eq(&g, &with_single_thread(|| at_a(&a)), "pooled at_a");
+        assert_bitwise_eq(&h, &with_single_thread(|| a_at(&b)), "pooled a_at");
+        let c = Matrix::randn(400, 64, &mut rng);
+        assert_bitwise_eq(&at_b(&a, &c), &with_single_thread(|| at_b(&a, &c)), "pooled at_b");
     }
 
     #[test]

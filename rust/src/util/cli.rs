@@ -154,6 +154,16 @@ mod tests {
     }
 
     #[test]
+    fn pool_and_overlap_flags_parse() {
+        // The exact grammar the engine runtime knobs rely on.
+        let a = parse(&["train", "--pool-threads", "6", "--overlap-refresh"]);
+        assert_eq!(a.get_usize("pool-threads", 0), 6);
+        assert!(a.get_bool("overlap-refresh", false));
+        let b = parse(&["train", "--overlap-refresh", "false"]);
+        assert!(!b.get_bool("overlap-refresh", true));
+    }
+
+    #[test]
     fn bool_flags() {
         let a = parse(&["x", "--stagger-refresh", "--fresh", "false", "--stale=true"]);
         assert!(a.get_bool("stagger-refresh", false));

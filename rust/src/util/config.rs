@@ -13,7 +13,10 @@
 //! - `[engine]` — parallel block-engine knobs: `threads` (0 = auto),
 //!   `block_size` (0 = one block per tensor), `refresh_interval`
 //!   (stale-preconditioner eigendecomposition cadence),
-//!   `stagger_refresh` (spread refreshes across blocks); see
+//!   `stagger_refresh` (spread refreshes across blocks),
+//!   `overlap_refresh` (pipeline next-step refreshes behind gradient
+//!   computation), `pool_threads` (pre-size the persistent worker
+//!   pool; 0 = grow on demand); see
 //!   [`crate::optim::EngineConfig::resolve`]
 //! - `[shard]` — cross-process engine sharding: `count` (worker
 //!   processes, 0 = in-process) and `transport` (`"tcp"` or `"unix"`);
@@ -271,12 +274,18 @@ mod tests {
     #[test]
     fn engine_section_round_trips() {
         let cfg = Config::parse(
-            "[engine]\nthreads = 4\nblock_size = 1024\nrefresh_interval = 10\nstagger_refresh = true",
+            "[engine]\nthreads = 4\nblock_size = 1024\nrefresh_interval = 10\nstagger_refresh = true\noverlap_refresh = true\npool_threads = 8",
         )
         .unwrap();
         assert_eq!(cfg.usize_or("engine.threads", 0), 4);
         assert_eq!(cfg.usize_or("engine.block_size", 0), 1024);
         assert_eq!(cfg.usize_or("engine.refresh_interval", 1), 10);
         assert!(cfg.bool_or("engine.stagger_refresh", false));
+        assert!(cfg.bool_or("engine.overlap_refresh", false));
+        assert_eq!(cfg.usize_or("engine.pool_threads", 0), 8);
+        // Defaults apply when the keys are absent.
+        let empty = Config::default();
+        assert!(!empty.bool_or("engine.overlap_refresh", false));
+        assert_eq!(empty.usize_or("engine.pool_threads", 0), 0);
     }
 }

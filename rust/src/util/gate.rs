@@ -14,6 +14,14 @@
 //! first order and makes a committed baseline meaningful on CI runners
 //! of unknown speed. Refresh the baseline by copying the uploaded
 //! `BENCH_precond_engine.json` artifact over `BENCH_baseline.json`.
+//!
+//! Besides regression budgets, the baseline can demand **floors**: a
+//! baseline key `<metric>_min` requires the current record to carry
+//! `<metric>` with a value at or above the floor. This is how the
+//! RefreshAhead overlap win is enforced — `overlap_speedup_min` fails
+//! the PR if the pipelined engine stops beating the synchronous one
+//! (speedups are already machine-normalized ratios, so no calibration
+//! is applied to floors).
 
 use super::json::Json;
 use anyhow::{bail, Context};
@@ -126,6 +134,28 @@ pub fn compare_bench(
                 "{key} regressed x{ratio:.3} (> x{:.3} budget)",
                 1.0 + tolerance
             ));
+        }
+    }
+    // Floor metrics: `<metric>_min` in the baseline demands the current
+    // record carry `<metric>` at or above the floor.
+    for (key, value) in base_obj {
+        let Some(metric) = key.strip_suffix("_min") else {
+            continue;
+        };
+        let floor = match value.as_f64() {
+            Some(v) => v,
+            None => continue,
+        };
+        match positive_num(current, metric) {
+            None => {
+                report.failures.push(format!("floor metric {metric} missing in current record"));
+            }
+            Some(v) => {
+                report.lines.push(format!("{metric}: current {v:.4} (floor {floor:.4})"));
+                if v < floor {
+                    report.failures.push(format!("{metric} {v:.4} under floor {floor:.4}"));
+                }
+            }
         }
     }
     match current.get("identical") {
@@ -267,6 +297,45 @@ mod tests {
         );
         // Baselines without calibration stay on raw-ns comparison
         // without firing this rule (covered elsewhere).
+    }
+
+    #[test]
+    fn floor_metric_enforced() {
+        let base = Json::parse(
+            r#"{"serial_median_ns": 1000, "calibration_ns": 100,
+                 "overlap_speedup_min": 1.2, "identical": true}"#,
+        )
+        .unwrap();
+        // At/above the floor passes.
+        let good = Json::parse(
+            r#"{"serial_median_ns": 1000, "calibration_ns": 100,
+                 "overlap_speedup": 1.45, "identical": true}"#,
+        )
+        .unwrap();
+        let r = compare_bench(&base, &good, 0.25).unwrap();
+        assert!(r.passed(), "failures: {:?}", r.failures);
+        assert!(r.render().contains("floor"));
+        // Below the floor fires.
+        let slow = Json::parse(
+            r#"{"serial_median_ns": 1000, "calibration_ns": 100,
+                 "overlap_speedup": 1.05, "identical": true}"#,
+        )
+        .unwrap();
+        let r = compare_bench(&base, &slow, 0.25).unwrap();
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("overlap_speedup"), "{:?}", r.failures);
+        // Dropping the metric entirely also fires.
+        let missing = Json::parse(
+            r#"{"serial_median_ns": 1000, "calibration_ns": 100, "identical": true}"#,
+        )
+        .unwrap();
+        let r = compare_bench(&base, &missing, 0.25).unwrap();
+        assert!(!r.passed());
+        assert!(
+            r.failures.iter().any(|f| f.contains("missing")),
+            "{:?}",
+            r.failures
+        );
     }
 
     #[test]

@@ -42,6 +42,7 @@ fn assert_parallel_matches_serial(
         block_size,
         refresh_interval: 3,
         stagger: true,
+        ..Default::default()
     };
     let parallel_cfg = EngineConfig { threads: 4, ..serial_cfg };
     let mut serial = make(serial_cfg);
@@ -106,6 +107,7 @@ fn engine_reproduces_plain_shampoo_bitwise() {
         block_size: 0,
         refresh_interval: base.precond_interval,
         stagger: false,
+        ..Default::default()
     };
     let mut reference = Shampoo::new(&shapes, base.clone());
     let mut engine = PrecondEngine::shampoo(&shapes, base, ecfg);
@@ -152,6 +154,7 @@ fn blocked_engine_adam_equals_fused_adam() {
         block_size: 2,
         refresh_interval: 1,
         stagger: false,
+        ..Default::default()
     };
     let mut engine = PrecondEngine::adam(&shapes, base, ecfg);
     let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
@@ -196,6 +199,7 @@ fn fd_invariants_survive_concurrent_block_updates() {
                 block_size: 6,
                 refresh_interval: 2,
                 stagger: true,
+                ..Default::default()
             };
             let mut engine = PrecondEngine::sketched(&shapes, rank, base, ecfg);
             let mut params = vec![Matrix::zeros(m, n)];
@@ -259,6 +263,7 @@ fn stale_refresh_schedule_amortizes_eigendecompositions() {
         block_size: 4, // 4 blocks
         refresh_interval: 4,
         stagger: true,
+        ..Default::default()
     };
     let mut engine = PrecondEngine::shampoo(&shapes, base, ecfg);
     assert_eq!(engine.blocks().len(), 4);

@@ -1,0 +1,276 @@
+//! The persistent worker-pool runtime and the RefreshAhead overlap
+//! stage: determinism, lifecycle, and failure-surfacing contracts.
+//!
+//! The pool never decides *what* is computed, only *where* — so every
+//! pooled path (dense kernels, engine block phases, background refresh
+//! jobs) must be **bitwise identical** to its pinned-serial reference,
+//! and a worker panic must surface as an error naming the task instead
+//! of wedging the phase. The CI `SKETCHY_THREADS: [1, 4]` matrix runs
+//! this whole suite at both thread counts; within one process the
+//! serial reference is driven through the `with_single_thread` pin
+//! (thread count 1), which takes exactly the code path `SKETCHY_THREADS
+//! = 1` takes.
+
+use sketchy::optim::{EngineConfig, GraftType, Optimizer, PrecondEngine, ShampooConfig};
+use sketchy::runtime::WorkerPool;
+use sketchy::sketch::FdSketch;
+use sketchy::tensor::ops::{self, with_single_thread};
+use sketchy::tensor::{a_at, at_a, at_b, matmul, Matrix};
+use sketchy::util::rng::Pcg64;
+
+fn assert_bitwise_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape mismatch");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn pooled_kernels_bitwise_match_pinned_serial() {
+    // Sizes crossing the parallel threshold so the pool path actually
+    // dispatches (under SKETCHY_THREADS=1 both sides are serial and the
+    // assertion is trivially true — that leg pins the env contract).
+    let mut rng = Pcg64::new(520);
+    let a = Matrix::randn(300, 120, &mut rng);
+    let b = Matrix::randn(120, 300, &mut rng);
+    assert_bitwise_eq(&matmul(&a, &b), &with_single_thread(|| matmul(&a, &b)), "matmul");
+    assert_bitwise_eq(&at_a(&a), &with_single_thread(|| at_a(&a)), "at_a");
+    assert_bitwise_eq(&a_at(&a), &with_single_thread(|| a_at(&a)), "a_at");
+    let c = Matrix::randn(300, 80, &mut rng);
+    assert_bitwise_eq(&at_b(&a, &c), &with_single_thread(|| at_b(&a, &c)), "at_b");
+}
+
+#[test]
+fn fd_sketch_update_unchanged_by_pooled_kernels() {
+    // The FD update (Gram build + eigh + deflation) sits on top of the
+    // covariance kernels; pooled dispatch must leave its results
+    // untouched bit for bit. Sizes chosen so the update's Gram and
+    // basis-rotation kernels cross the parallel threshold
+    // (256·96²/2 and 256·96·96 are both ≥ 2²⁰).
+    let mut rng = Pcg64::new(521);
+    let news: Vec<Matrix> = (0..2).map(|_| Matrix::randn(256, 96, &mut rng)).collect();
+    let mut pooled = FdSketch::new(256, 32, 0.999);
+    let mut pinned = FdSketch::new(256, 32, 0.999);
+    for y in &news {
+        pooled.update(y);
+        with_single_thread(|| pinned.update(y));
+    }
+    assert_eq!(pooled.escaped_mass().to_bits(), pinned.escaped_mass().to_bits());
+    let (wp, ws) = (pooled.eigenvalues(), pinned.eigenvalues());
+    assert_eq!(wp.len(), ws.len());
+    for (x, y) in wp.iter().zip(ws.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "eigenvalue diverged");
+    }
+}
+
+fn base_cfg() -> ShampooConfig {
+    ShampooConfig {
+        lr: 0.05,
+        start_preconditioning_step: 3,
+        stat_interval: 2,
+        graft: GraftType::Rmsprop,
+        clip: 5.0,
+        weight_decay: 1e-3,
+        ..Default::default()
+    }
+}
+
+fn random_grads(shapes: &[(usize, usize)], rng: &mut Pcg64) -> Vec<Matrix> {
+    shapes.iter().map(|&(m, n)| Matrix::randn(m, n, rng)).collect()
+}
+
+#[test]
+fn pool_backed_engine_bitwise_matches_serial() {
+    // The pool-backed engine step (threads = 4) against the serial
+    // reference (threads = 1) over 50 steps — the PR-2 scoped-thread
+    // contract, now running on persistent workers.
+    let shapes = [(11, 7), (6, 6), (9, 1)];
+    let mk = |threads: usize| {
+        let ecfg = EngineConfig {
+            threads,
+            block_size: 4,
+            refresh_interval: 3,
+            stagger: true,
+            ..Default::default()
+        };
+        PrecondEngine::shampoo(&shapes, base_cfg(), ecfg)
+    };
+    let mut serial = mk(1);
+    let mut pooled = mk(4);
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(522);
+    for step in 0..50 {
+        let grads = random_grads(&shapes, &mut rng);
+        serial.step(&mut p1, &grads);
+        pooled.step(&mut p2, &grads);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "pooled engine diverged at step {step}");
+        }
+    }
+    assert_eq!(serial.refreshes(), pooled.refreshes());
+}
+
+/// Drive an overlap engine and a synchronous engine over one gradient
+/// stream; parameters must match bitwise after every step and refresh
+/// accounting must agree at the end.
+fn assert_overlap_matches_sync(
+    shapes: &[(usize, usize)],
+    make: impl Fn(EngineConfig) -> PrecondEngine,
+    ecfg: EngineConfig,
+    steps: usize,
+    seed: u64,
+) {
+    let mut sync = make(EngineConfig { overlap: false, ..ecfg });
+    let mut over = make(EngineConfig { overlap: true, ..ecfg });
+    assert!(over.name().contains("overlap"), "name should mark overlap: {}", over.name());
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(seed);
+    for step in 0..steps {
+        let grads = random_grads(shapes, &mut rng);
+        sync.step(&mut p1, &grads);
+        over.step(&mut p2, &grads);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "overlap diverged from sync at step {step}");
+        }
+    }
+    assert_eq!(
+        sync.refreshes(),
+        over.refreshes(),
+        "refresh accounting must survive the RefreshAhead handoff"
+    );
+    assert!(sync.refreshes() > 0, "test must exercise refreshes");
+}
+
+#[test]
+fn overlap_refresh_bitwise_matches_synchronous_shampoo() {
+    let shapes = [(12, 8), (6, 5)];
+    let ecfg = EngineConfig {
+        threads: 3,
+        block_size: 4,
+        refresh_interval: 2,
+        stagger: true,
+        ..Default::default()
+    };
+    assert_overlap_matches_sync(
+        &shapes,
+        |e| PrecondEngine::shampoo(&shapes, base_cfg(), e),
+        ecfg,
+        50,
+        523,
+    );
+}
+
+#[test]
+fn overlap_refresh_bitwise_matches_synchronous_sketched() {
+    let shapes = [(10, 6)];
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 5,
+        refresh_interval: 3,
+        stagger: true,
+        ..Default::default()
+    };
+    assert_overlap_matches_sync(
+        &shapes,
+        |e| PrecondEngine::sketched(&shapes, 3, base_cfg(), e),
+        ecfg,
+        50,
+        524,
+    );
+}
+
+#[test]
+fn overlap_degrades_to_synchronous_when_every_step_ingests() {
+    // stat_interval = 1: every next step folds statistics, so nothing
+    // is ever prefetchable — overlap mode must quietly run the fully
+    // synchronous schedule (and still match it, trivially).
+    let shapes = [(8, 8)];
+    let base = ShampooConfig { stat_interval: 1, ..base_cfg() };
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 4,
+        refresh_interval: 2,
+        stagger: true,
+        ..Default::default()
+    };
+    assert_overlap_matches_sync(
+        &shapes,
+        |e| PrecondEngine::shampoo(&shapes, base.clone(), e),
+        ecfg,
+        20,
+        525,
+    );
+}
+
+#[test]
+fn overlap_without_stagger_matches_synchronous() {
+    // Stagger off: refresh slots bunch on every refresh_interval-th
+    // step; with stat_interval 2 and refresh_interval 3, due steps
+    // alternate between prefetchable and not.
+    let shapes = [(9, 9)];
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 3,
+        refresh_interval: 3,
+        stagger: false,
+        ..Default::default()
+    };
+    assert_overlap_matches_sync(
+        &shapes,
+        |e| PrecondEngine::shampoo(&shapes, base_cfg(), e),
+        ecfg,
+        30,
+        526,
+    );
+}
+
+#[test]
+fn pool_shutdown_and_reentry() {
+    // Drop + rebuild: a pool joins its workers on drop and a fresh pool
+    // (same process) serves new phases — the lifecycle the engine's
+    // drop/rebuild path depends on.
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let out: Vec<AtomicU64> = (0..32).map(|_| AtomicU64::new(0)).collect();
+    let pool = WorkerPool::new(3);
+    pool.run(3, 32, |i| {
+        out[i].store((i * i) as u64, Ordering::Relaxed);
+    });
+    drop(pool);
+    let pool = WorkerPool::new(2);
+    pool.run(2, 32, |i| {
+        out[i].fetch_add(i as u64, Ordering::Relaxed);
+    });
+    drop(pool);
+    for (i, v) in out.iter().enumerate() {
+        assert_eq!(v.load(Ordering::Relaxed), (i * i + i) as u64, "task {i} result");
+    }
+}
+
+#[test]
+fn worker_panic_surfaces_as_error_naming_the_task() {
+    let pool = WorkerPool::new(2);
+    let err = pool
+        .try_run(3, 10, |i| {
+            if i == 7 {
+                panic!("eigh exploded");
+            }
+        })
+        .expect_err("panicking task must fail the phase");
+    assert!(err.contains("task 7"), "error must name the task: {err}");
+    assert!(err.contains("eigh exploded"), "error must carry the message: {err}");
+    // The phase still completed and the pool is reusable.
+    pool.run(3, 10, |_| {});
+}
+
+#[test]
+fn global_pool_grows_with_engine_pool_threads_knob() {
+    let before = sketchy::runtime::pool::global().workers();
+    let ecfg = EngineConfig { pool_threads: 2, ..Default::default() };
+    let _eng = PrecondEngine::shampoo(&[(4, 4)], base_cfg(), ecfg);
+    let after = sketchy::runtime::pool::global().workers();
+    assert!(after >= 2.max(before), "pool must be pre-sized: {before} -> {after}");
+    // And the thread resolution the kernels use is cached + stable.
+    assert_eq!(ops::num_threads(), ops::num_threads());
+}

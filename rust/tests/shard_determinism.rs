@@ -53,7 +53,13 @@ fn assert_sharded_matches_local(
     steps: usize,
     seed: u64,
 ) {
-    let ecfg = EngineConfig { threads: 2, block_size, refresh_interval: 3, stagger: true };
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size,
+        refresh_interval: 3,
+        stagger: true,
+        ..Default::default()
+    };
     let mut local = PrecondEngine::new(shapes, kind, base_cfg(), ecfg);
     let mut sharded =
         PrecondEngine::sharded(shapes, kind, base_cfg(), ecfg, &mk_launch(shards, transport))
@@ -128,7 +134,13 @@ fn sharded_engine_adam_equals_fused_adam() {
         graft: GraftType::RmspropNormalized,
         ..Default::default()
     };
-    let ecfg = EngineConfig { threads: 2, block_size: 2, refresh_interval: 1, stagger: false };
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 2,
+        refresh_interval: 1,
+        stagger: false,
+        ..Default::default()
+    };
     let mut engine = PrecondEngine::sharded(
         &shapes,
         UnitKind::Adam,

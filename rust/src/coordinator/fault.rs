@@ -1,0 +1,553 @@
+//! Deterministic in-memory transport with scripted fault injection.
+//!
+//! The shard wire protocol now carries **two** in-flight request kinds
+//! per connection (`Step`, and the parked `RefreshAhead` whose reply is
+//! read one step later), which doubles the concurrent states a transport
+//! failure can interrupt. Exercising those states over real sockets
+//! means racing `kill(2)` against the kernel's buffers — inherently
+//! flaky. This module replaces the socket with a pair of in-memory byte
+//! pipes and a **fault script**: frames crossing the link are counted
+//! per direction, and at scripted frame indices the harness drops,
+//! delays, duplicates, or severs — exactly once, at exactly that frame,
+//! every run.
+//!
+//! The pieces:
+//!
+//! - [`FaultScript`] — `(direction, frame index) → action` entries,
+//!   counted across reconnects (a sever at request #3 means the 4th
+//!   request frame of the *run*, not of the connection — indices are
+//!   0-based and include handshake frames on the reply direction).
+//! - [`FaultInjectingTransport`] — the listener: hands the driver a
+//!   [`FaultConn`] per [`FaultInjectingTransport::dial`] and queues the
+//!   matching worker-side end on an acceptor channel
+//!   ([`FaultInjectingTransport::take_acceptor`]), with an optional
+//!   connection budget so tests can model *permanent* link loss.
+//! - [`FaultConn`] — one end of a connection. Writes are split into
+//!   wire frames (length-prefix parsing, so multi-`write` callers are
+//!   handled) and the script is consulted per frame; reads block with a
+//!   capped timeout so a dropped frame surfaces as a timed-out read
+//!   (the same failure shape a hung socket produces) instead of a hang.
+//!
+//! No sockets, no extra processes: a worker serve loop runs on a plain
+//! thread (`ShardExecutor::launch_in_proc` wires this up), so
+//! integration tests drive the full driver ↔ worker protocol — replay,
+//! reconnect, idempotency — under exact, reproducible fault timing.
+
+use super::wire::Conn;
+use std::collections::VecDeque;
+use std::io::{Error, ErrorKind, Read, Write};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// What happens to the frame at a scripted index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The frame is discarded; the connection stays up. The waiting
+    /// peer times out, which the driver treats as a transport failure
+    /// (reconnect + replay).
+    DropFrame,
+    /// The frame is withheld and delivered immediately before the next
+    /// frame sent in the same direction (a late packet). If the
+    /// connection dies first, the frame dies with it.
+    DelayFrame,
+    /// The frame is delivered twice back to back (a replayed request
+    /// arriving on top of the original — the worker's idempotency cache
+    /// must absorb it). Request-direction only: a duplicated *reply*
+    /// would be read as the answer to the next request, desyncing the
+    /// strict request/reply channel in a way no real transport produces
+    /// — [`FaultScript::on_reply`] rejects it.
+    DuplicateFrame,
+    /// The connection dies as this frame is sent: the frame is lost,
+    /// both directions close, and the writer gets a connection error.
+    Sever,
+}
+
+/// Direction of a frame, from the driver's point of view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// Driver → worker (requests).
+    Request,
+    /// Worker → driver (replies, including the handshake hello).
+    Reply,
+}
+
+/// Scripted faults: each entry fires exactly once, at the given
+/// per-direction frame index (0-based, counted across reconnects).
+#[derive(Clone, Debug, Default)]
+pub struct FaultScript {
+    entries: Vec<(Dir, usize, FaultAction)>,
+}
+
+impl FaultScript {
+    /// The empty script: a perfectly reliable link.
+    pub fn none() -> FaultScript {
+        FaultScript::default()
+    }
+
+    /// Add a fault on the `idx`-th driver → worker frame.
+    pub fn on_request(mut self, idx: usize, action: FaultAction) -> FaultScript {
+        self.entries.push((Dir::Request, idx, action));
+        self
+    }
+
+    /// Add a fault on the `idx`-th worker → driver frame (index 0 is
+    /// the first connection's hello). Panics on
+    /// [`FaultAction::DuplicateFrame`]: a duplicated reply desyncs the
+    /// strict request/reply channel in a way no real transport can
+    /// (TCP never duplicates; real-world duplicates are request
+    /// *replays*, which [`FaultScript::on_request`] models).
+    pub fn on_reply(mut self, idx: usize, action: FaultAction) -> FaultScript {
+        assert!(
+            action != FaultAction::DuplicateFrame,
+            "FaultScript::on_reply(DuplicateFrame) would desync the request/reply \
+             protocol; script the duplicate on the request direction instead"
+        );
+        self.entries.push((Dir::Reply, idx, action));
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-memory half-duplex byte pipe.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct PipeBuf {
+    buf: VecDeque<u8>,
+    closed: bool,
+}
+
+/// One direction of a connection: bytes in, bytes out, close flag.
+struct Pipe {
+    state: Mutex<PipeBuf>,
+    cv: Condvar,
+}
+
+impl Pipe {
+    fn new() -> Pipe {
+        Pipe { state: Mutex::new(PipeBuf::default()), cv: Condvar::new() }
+    }
+
+    fn push(&self, bytes: &[u8]) -> std::io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(Error::new(ErrorKind::BrokenPipe, "fault pipe: peer closed"));
+        }
+        st.buf.extend(bytes.iter().copied());
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking read with an optional bound. EOF (`Ok(0)`) once closed
+    /// and drained; `TimedOut` if the bound expires with no data.
+    fn read_into(&self, out: &mut [u8], timeout: Option<Duration>) -> std::io::Result<usize> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.buf.is_empty() {
+                // Bulk copy from the deque's (up to two) contiguous
+                // runs — block payloads are hundreds of KB, so a
+                // byte-at-a-time pop would dominate bench timings.
+                let n = out.len().min(st.buf.len());
+                let (a, b) = st.buf.as_slices();
+                if n <= a.len() {
+                    out[..n].copy_from_slice(&a[..n]);
+                } else {
+                    out[..a.len()].copy_from_slice(a);
+                    out[a.len()..n].copy_from_slice(&b[..n - a.len()]);
+                }
+                st.buf.drain(..n);
+                return Ok(n);
+            }
+            if st.closed {
+                return Ok(0);
+            }
+            match timeout {
+                None => st = self.cv.wait(st).unwrap(),
+                Some(d) => {
+                    let (guard, res) = self.cv.wait_timeout(st, d).unwrap();
+                    st = guard;
+                    if res.timed_out() && st.buf.is_empty() && !st.closed {
+                        return Err(Error::new(
+                            ErrorKind::TimedOut,
+                            "fault pipe: read timed out",
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared per-transport fault state.
+// ---------------------------------------------------------------------------
+
+struct FaultState {
+    /// Remaining (unfired) script entries.
+    script: Mutex<Vec<(Dir, usize, FaultAction)>>,
+    req_frames: AtomicUsize,
+    rep_frames: AtomicUsize,
+    connections: AtomicUsize,
+    max_connections: usize,
+}
+
+impl FaultState {
+    /// Claim the next frame index in `dir` and take its fault, if any.
+    fn next_fault(&self, dir: Dir) -> Option<FaultAction> {
+        let idx = match dir {
+            Dir::Request => self.req_frames.fetch_add(1, Ordering::SeqCst),
+            Dir::Reply => self.rep_frames.fetch_add(1, Ordering::SeqCst),
+        };
+        let mut script = self.script.lock().unwrap();
+        let pos = script.iter().position(|&(d, i, _)| d == dir && i == idx)?;
+        Some(script.swap_remove(pos).2)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection end.
+// ---------------------------------------------------------------------------
+
+/// One end of an in-memory connection. Writes pass through the fault
+/// script (per complete wire frame); reads come straight off the
+/// incoming pipe with a capped timeout.
+pub struct FaultConn {
+    dir: Dir,
+    state: Arc<FaultState>,
+    incoming: Arc<Pipe>,
+    outgoing: Arc<Pipe>,
+    /// Write-side frame assembly (writers may deliver a frame across
+    /// several `write` calls).
+    partial: Vec<u8>,
+    /// A `DelayFrame` stash, delivered before the next delivered frame.
+    delayed: Option<Vec<u8>>,
+    severed: bool,
+    timeout: Option<Duration>,
+    /// Upper bound on any timeout a caller sets — keeps drop-fault
+    /// tests fast regardless of the driver's production reply bound.
+    timeout_cap: Option<Duration>,
+}
+
+/// Split one complete length-prefixed frame off the front of `partial`.
+fn take_frame(partial: &mut Vec<u8>) -> Option<Vec<u8>> {
+    if partial.len() < 4 {
+        return None;
+    }
+    let len = u32::from_le_bytes([partial[0], partial[1], partial[2], partial[3]]) as usize;
+    let total = 4usize.checked_add(len)?;
+    if partial.len() < total {
+        return None;
+    }
+    let rest = partial.split_off(total);
+    Some(std::mem::replace(partial, rest))
+}
+
+impl FaultConn {
+    fn deliver(&mut self, frame: &[u8]) -> std::io::Result<()> {
+        if let Some(d) = self.delayed.take() {
+            self.outgoing.push(&d)?;
+        }
+        self.outgoing.push(frame)
+    }
+}
+
+impl Read for FaultConn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.incoming.read_into(buf, self.timeout)
+    }
+}
+
+impl Write for FaultConn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.severed {
+            return Err(Error::new(
+                ErrorKind::BrokenPipe,
+                "fault transport: connection severed by script",
+            ));
+        }
+        self.partial.extend_from_slice(buf);
+        while let Some(frame) = take_frame(&mut self.partial) {
+            match self.state.next_fault(self.dir) {
+                None => self.deliver(&frame)?,
+                Some(FaultAction::DropFrame) => {}
+                Some(FaultAction::DelayFrame) => self.delayed = Some(frame),
+                Some(FaultAction::DuplicateFrame) => {
+                    self.deliver(&frame)?;
+                    self.deliver(&frame)?;
+                }
+                Some(FaultAction::Sever) => {
+                    self.severed = true;
+                    self.incoming.close();
+                    self.outgoing.close();
+                    return Err(Error::new(
+                        ErrorKind::ConnectionReset,
+                        "fault transport: connection severed by script",
+                    ));
+                }
+            }
+        }
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Conn for FaultConn {
+    fn set_timeout(&mut self, dur: Option<Duration>) -> std::io::Result<()> {
+        self.timeout = match (dur, self.timeout_cap) {
+            (Some(d), Some(cap)) => Some(d.min(cap)),
+            (Some(d), None) => Some(d),
+            (None, cap) => cap,
+        };
+        Ok(())
+    }
+}
+
+impl Drop for FaultConn {
+    /// Dropping either end closes both pipes, so the peer observes EOF
+    /// — the same shape as a socket close.
+    fn drop(&mut self) {
+        self.incoming.close();
+        self.outgoing.close();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The transport (listener + dialer).
+// ---------------------------------------------------------------------------
+
+/// In-memory fault-injecting replacement for a worker's socket listener.
+/// Each [`FaultInjectingTransport::dial`] yields a fresh driver-side
+/// [`FaultConn`] and queues the worker-side end on the acceptor; frame
+/// counters and the fault script persist across those connections.
+pub struct FaultInjectingTransport {
+    state: Arc<FaultState>,
+    accept_tx: Mutex<Sender<FaultConn>>,
+    accept_rx: Mutex<Option<Receiver<FaultConn>>>,
+    timeout_cap: Option<Duration>,
+}
+
+impl FaultInjectingTransport {
+    /// Transport with the default read-timeout cap (200 ms — a dropped
+    /// frame costs a test a fifth of a second, not two minutes) and no
+    /// connection budget.
+    pub fn new(script: FaultScript) -> Arc<FaultInjectingTransport> {
+        FaultInjectingTransport::with_config(script, usize::MAX, Some(Duration::from_millis(200)))
+    }
+
+    /// Transport with an explicit connection budget (dials past it fail
+    /// — models permanent link loss) and read-timeout cap.
+    pub fn with_config(
+        script: FaultScript,
+        max_connections: usize,
+        timeout_cap: Option<Duration>,
+    ) -> Arc<FaultInjectingTransport> {
+        let (tx, rx) = mpsc::channel();
+        Arc::new(FaultInjectingTransport {
+            state: Arc::new(FaultState {
+                script: Mutex::new(script.entries),
+                req_frames: AtomicUsize::new(0),
+                rep_frames: AtomicUsize::new(0),
+                connections: AtomicUsize::new(0),
+                max_connections,
+            }),
+            accept_tx: Mutex::new(tx),
+            accept_rx: Mutex::new(Some(rx)),
+            timeout_cap,
+        })
+    }
+
+    /// Driver side: open a new connection. Fails once the connection
+    /// budget is exhausted or the worker loop is gone.
+    pub fn dial(&self) -> std::io::Result<FaultConn> {
+        let n = self.state.connections.fetch_add(1, Ordering::SeqCst);
+        if n >= self.state.max_connections {
+            return Err(Error::new(
+                ErrorKind::ConnectionRefused,
+                format!(
+                    "fault transport: connection budget exhausted ({} allowed)",
+                    self.state.max_connections
+                ),
+            ));
+        }
+        let requests = Arc::new(Pipe::new());
+        let replies = Arc::new(Pipe::new());
+        let worker_end = FaultConn {
+            dir: Dir::Reply,
+            state: Arc::clone(&self.state),
+            incoming: Arc::clone(&requests),
+            outgoing: Arc::clone(&replies),
+            partial: Vec::new(),
+            delayed: None,
+            severed: false,
+            timeout: None,
+            timeout_cap: None,
+        };
+        let driver_end = FaultConn {
+            dir: Dir::Request,
+            state: Arc::clone(&self.state),
+            incoming: replies,
+            outgoing: requests,
+            partial: Vec::new(),
+            delayed: None,
+            severed: false,
+            timeout: self.timeout_cap,
+            timeout_cap: self.timeout_cap,
+        };
+        self.accept_tx
+            .lock()
+            .unwrap()
+            .send(worker_end)
+            .map_err(|_| Error::new(ErrorKind::NotConnected, "fault transport: worker gone"))?;
+        Ok(driver_end)
+    }
+
+    /// Worker side: the acceptor stream of incoming connections. Can be
+    /// taken once; the worker serve loop recvs on it.
+    pub fn take_acceptor(&self) -> Option<Receiver<FaultConn>> {
+        self.accept_rx.lock().unwrap().take()
+    }
+
+    /// Connections dialed so far (successful or refused).
+    pub fn connections(&self) -> usize {
+        self.state.connections.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::wire::{self, WireMsg};
+
+    /// Dial and return both ends of one connection.
+    fn pair(t: &FaultInjectingTransport, acc: &Receiver<FaultConn>) -> (FaultConn, FaultConn) {
+        let driver = t.dial().expect("dial");
+        let worker = acc.recv().expect("accept");
+        (driver, worker)
+    }
+
+    #[test]
+    fn clean_link_roundtrips_messages() {
+        let t = FaultInjectingTransport::new(FaultScript::none());
+        let acc = t.take_acceptor().unwrap();
+        let (mut driver, mut worker) = pair(&t, &acc);
+        wire::write_msg(&mut driver, &WireMsg::MemStats).unwrap();
+        assert_eq!(wire::read_msg(&mut worker).unwrap(), WireMsg::MemStats);
+        wire::write_msg(&mut worker, &WireMsg::Ok).unwrap();
+        assert_eq!(wire::read_msg(&mut driver).unwrap(), WireMsg::Ok);
+        assert!(t.take_acceptor().is_none(), "acceptor can be taken once");
+    }
+
+    #[test]
+    fn dropped_frame_times_out_reader() {
+        let t = FaultInjectingTransport::new(
+            FaultScript::none().on_request(0, FaultAction::DropFrame),
+        );
+        let acc = t.take_acceptor().unwrap();
+        let (mut driver, mut worker) = pair(&t, &acc);
+        wire::write_msg(&mut driver, &WireMsg::MemStats).unwrap(); // dropped
+        worker.set_timeout(Some(Duration::from_millis(50))).unwrap();
+        let err = wire::read_msg(&mut worker).expect_err("dropped frame must not arrive");
+        assert!(format!("{err:#}").contains("read"), "{err:#}");
+        // The next frame (index 1) sails through.
+        wire::write_msg(&mut driver, &WireMsg::Shutdown).unwrap();
+        assert_eq!(wire::read_msg(&mut worker).unwrap(), WireMsg::Shutdown);
+    }
+
+    #[test]
+    fn delayed_frame_arrives_before_the_next_one() {
+        let t = FaultInjectingTransport::new(
+            FaultScript::none().on_request(0, FaultAction::DelayFrame),
+        );
+        let acc = t.take_acceptor().unwrap();
+        let (mut driver, mut worker) = pair(&t, &acc);
+        wire::write_msg(&mut driver, &WireMsg::MemStats).unwrap(); // delayed
+        wire::write_msg(&mut driver, &WireMsg::Shutdown).unwrap(); // releases it
+        assert_eq!(wire::read_msg(&mut worker).unwrap(), WireMsg::MemStats);
+        assert_eq!(wire::read_msg(&mut worker).unwrap(), WireMsg::Shutdown);
+    }
+
+    #[test]
+    fn duplicated_frame_arrives_twice() {
+        let t = FaultInjectingTransport::new(
+            FaultScript::none().on_request(0, FaultAction::DuplicateFrame),
+        );
+        let acc = t.take_acceptor().unwrap();
+        let (mut driver, mut worker) = pair(&t, &acc);
+        wire::write_msg(&mut driver, &WireMsg::MemStats).unwrap();
+        assert_eq!(wire::read_msg(&mut worker).unwrap(), WireMsg::MemStats);
+        assert_eq!(wire::read_msg(&mut worker).unwrap(), WireMsg::MemStats);
+    }
+
+    #[test]
+    fn sever_kills_both_directions_and_the_frame() {
+        let t = FaultInjectingTransport::new(FaultScript::none().on_request(1, FaultAction::Sever));
+        let acc = t.take_acceptor().unwrap();
+        let (mut driver, mut worker) = pair(&t, &acc);
+        wire::write_msg(&mut driver, &WireMsg::MemStats).unwrap();
+        assert_eq!(wire::read_msg(&mut worker).unwrap(), WireMsg::MemStats);
+        let err = wire::write_msg(&mut driver, &WireMsg::Shutdown)
+            .expect_err("severed write must fail");
+        assert!(format!("{err:#}").contains("severed"), "{err:#}");
+        // The worker sees EOF, not the severed frame.
+        assert_eq!(wire::read_msg_opt(&mut worker).unwrap(), None);
+        // Reconnecting continues the frame count past the sever point.
+        let (mut driver2, mut worker2) = pair(&t, &acc);
+        wire::write_msg(&mut driver2, &WireMsg::Shutdown).unwrap(); // request #2
+        assert_eq!(wire::read_msg(&mut worker2).unwrap(), WireMsg::Shutdown);
+        assert_eq!(t.connections(), 2);
+    }
+
+    #[test]
+    fn connection_budget_models_permanent_loss() {
+        let t = FaultInjectingTransport::with_config(
+            FaultScript::none(),
+            1,
+            Some(Duration::from_millis(50)),
+        );
+        let acc = t.take_acceptor().unwrap();
+        let (_driver, _worker) = pair(&t, &acc);
+        let err = t.dial().expect_err("second dial must be refused");
+        assert!(format!("{err}").contains("budget"), "{err}");
+    }
+
+    #[test]
+    fn frames_split_across_writes_are_reassembled() {
+        let t = FaultInjectingTransport::new(FaultScript::none());
+        let acc = t.take_acceptor().unwrap();
+        let (mut driver, mut worker) = pair(&t, &acc);
+        let frame = wire::encode_frame(&WireMsg::Error { message: "boom".into() }).unwrap();
+        for chunk in frame.chunks(3) {
+            driver.write_all(chunk).unwrap();
+        }
+        assert_eq!(
+            wire::read_msg(&mut worker).unwrap(),
+            WireMsg::Error { message: "boom".into() }
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "desync")]
+    fn reply_duplication_is_rejected_by_the_script_builder() {
+        let _ = FaultScript::none().on_reply(0, FaultAction::DuplicateFrame);
+    }
+
+    #[test]
+    fn dropping_an_end_gives_the_peer_eof() {
+        let t = FaultInjectingTransport::new(FaultScript::none());
+        let acc = t.take_acceptor().unwrap();
+        let (driver, mut worker) = pair(&t, &acc);
+        drop(driver);
+        assert_eq!(wire::read_msg_opt(&mut worker).unwrap(), None);
+    }
+}

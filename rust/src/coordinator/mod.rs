@@ -16,12 +16,14 @@
 //! refreshes stop being bound by one process's cores.
 
 pub mod allreduce;
+pub mod fault;
 pub mod pipeline;
 pub mod shard;
 pub mod wire;
 pub mod worker;
 
 pub use allreduce::{tree_allreduce, AllreduceStats};
+pub use fault::{FaultAction, FaultInjectingTransport, FaultScript};
 pub use pipeline::BoundedQueue;
 pub use shard::{ShardConfig, ShardExecutor, ShardLaunch, ShardTransport};
 pub use worker::{data_parallel_step, GradientWorker, StepResult};

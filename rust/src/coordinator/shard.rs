@@ -18,28 +18,65 @@
 //! without double-applying it. Hard worker failures (a dead process)
 //! surface as `anyhow` errors naming the shard.
 //!
+//! ## Sharded RefreshAhead (pipelined refresh overlap)
+//!
+//! With `--overlap-refresh`, the engine prefetches step `t + 1`'s
+//! inverse-root refreshes. On the sharded executor that prefetch is a
+//! **second in-flight request per shard**: at the end of step `t` the
+//! driver ships each worker a [`WireMsg::RefreshAhead`] carrying the
+//! worker's share of the `t + 1` due-set and does *not* read the reply —
+//! the worker runs those eigendecompositions (on its own worker pool)
+//! while the trainer computes gradients, and the driver joins the
+//! [`WireMsg::RefreshAheadOk`] replies just before `t + 1`'s `Step`.
+//! Prefetching only happens on steps that fold no statistics, so the
+//! roots computed ahead are bit-for-bit the roots a synchronous refresh
+//! would compute; a joined-but-unused prefetch (the cancel path) is also
+//! harmless, because an in-step refresh from unchanged statistics
+//! recomputes identical roots. Workers cache their last
+//! `RefreshAheadOk` keyed by `t_next`, so a reconnect that replays the
+//! request cannot double-count refreshes.
+//!
+//! Capability is negotiated at handshake: v2 workers greet with
+//! [`WireMsg::HelloV2`] carrying an explicit overlap-capability report,
+//! v1 workers greet with the legacy [`WireMsg::Hello`] and the driver
+//! degrades that shard (and, for determinism of accounting, the whole
+//! run) to synchronous refresh with a logged one-time notice.
+//!
 //! Determinism: every block's math runs in exactly one place, parameter
 //! payloads travel as raw IEEE-754 bits, and the scatter writes each
 //! disjoint block window directly — so an N-shard run is **bitwise
-//! identical** to the in-process engine (`tests/shard_determinism.rs`
-//! and the CI `shard-smoke` job assert this for N ∈ {2, 4}).
+//! identical** to the in-process engine, with or without overlap
+//! (`tests/shard_determinism.rs` and the CI `shard-smoke` job assert
+//! this for N ∈ {2, 4}, including under scripted transport faults via
+//! [`super::fault::FaultInjectingTransport`] and
+//! [`ShardExecutor::launch_in_proc`]).
 
-use super::wire::{self, BlockSpec, InitMsg, StepEntry, StepMsg, StepOkMsg, WireMsg};
-use crate::optim::engine::{drive_all, effective_worker_threads, BlockExecutor, UnitKind};
+use super::fault::FaultInjectingTransport;
+use super::wire::{
+    self, BlockSpec, Conn, InitMsg, RefreshAheadMsg, RefreshAheadOkMsg, StepEntry, StepMsg,
+    StepOkMsg, WireMsg, PROTO_VERSION,
+};
+use crate::optim::engine::{
+    drive_all, effective_worker_threads, lock_state, BlockExecutor, RefreshAheadDone,
+    RefreshAheadPlan, UnitKind,
+};
 use crate::optim::precond::{BlockState, StepCtx};
 use crate::optim::{Block, GraftType, ShampooConfig};
+use crate::runtime::pool;
 use crate::tensor::Matrix;
 use crate::util::cli::Args;
 use crate::util::config::Config;
 use anyhow::{anyhow, bail, ensure, Context};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::process::{Child, ChildStdout, Command, Stdio};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Stdout handshake prefix a worker prints once its listener is bound.
@@ -100,17 +137,22 @@ pub struct ShardConfig {
     pub shards: usize,
     /// Wire transport for the worker links.
     pub transport: ShardTransport,
+    /// Wire protocol version workers are spawned to speak
+    /// ([`PROTO_VERSION`] normally; 1 pins the pre-RefreshAhead
+    /// protocol, degrading refresh overlap to synchronous).
+    pub proto: u32,
 }
 
 impl Default for ShardConfig {
     fn default() -> Self {
-        ShardConfig { shards: 0, transport: ShardTransport::Tcp }
+        ShardConfig { shards: 0, transport: ShardTransport::Tcp, proto: PROTO_VERSION }
     }
 }
 
 impl ShardConfig {
-    /// Resolve from `--shards` / `--shard-transport` CLI flags with
-    /// `shard.count` / `shard.transport` config keys as fallback.
+    /// Resolve from `--shards` / `--shard-transport` / `--shard-proto`
+    /// CLI flags with `shard.count` / `shard.transport` / `shard.proto`
+    /// config keys as fallback.
     pub fn resolve(args: &Args, cfg: &Config) -> anyhow::Result<ShardConfig> {
         let d = ShardConfig::default();
         let shards = args.get_usize("shards", cfg.usize_or("shard.count", d.shards));
@@ -118,7 +160,13 @@ impl ShardConfig {
             Some(s) => ShardTransport::parse(s)?,
             None => ShardTransport::parse(&cfg.str_or("shard.transport", "tcp"))?,
         };
-        Ok(ShardConfig { shards, transport })
+        let proto =
+            args.get_usize("shard-proto", cfg.usize_or("shard.proto", d.proto as usize)) as u32;
+        ensure!(
+            (1..=PROTO_VERSION).contains(&proto),
+            "unsupported shard wire protocol v{proto} (this build speaks v1..=v{PROTO_VERSION})"
+        );
+        Ok(ShardConfig { shards, transport, proto })
     }
 
     /// Whether cross-process sharding is requested.
@@ -128,7 +176,7 @@ impl ShardConfig {
 }
 
 /// How to start shard workers: which binary to exec, how many shards,
-/// which transport.
+/// which transport, which wire protocol version.
 #[derive(Clone, Debug)]
 pub struct ShardLaunch {
     /// Binary exposing the `shard-worker` subcommand (normally this
@@ -136,6 +184,8 @@ pub struct ShardLaunch {
     pub program: PathBuf,
     pub shards: usize,
     pub transport: ShardTransport,
+    /// Protocol version passed to workers as `--proto-version`.
+    pub proto: u32,
 }
 
 impl ShardLaunch {
@@ -146,6 +196,7 @@ impl ShardLaunch {
             program: std::env::current_exe().context("resolve current executable")?,
             shards: cfg.shards,
             transport: cfg.transport,
+            proto: cfg.proto,
         })
     }
 }
@@ -170,48 +221,16 @@ pub fn assign_blocks(n_blocks: usize, shards: usize) -> Vec<Vec<usize>> {
 // Transport plumbing shared by both sides.
 // ---------------------------------------------------------------------------
 
-/// A connected driver↔worker byte stream.
-enum Stream {
-    Tcp(TcpStream),
-    #[cfg(unix)]
-    Unix(UnixStream),
-}
-
-impl Stream {
-    fn set_read_timeout(&self, dur: Option<Duration>) -> std::io::Result<()> {
-        match self {
-            Stream::Tcp(s) => s.set_read_timeout(dur),
-            #[cfg(unix)]
-            Stream::Unix(s) => s.set_read_timeout(dur),
-        }
+impl Conn for TcpStream {
+    fn set_timeout(&mut self, dur: Option<Duration>) -> std::io::Result<()> {
+        TcpStream::set_read_timeout(self, dur)
     }
 }
 
-impl Read for Stream {
-    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
-        match self {
-            Stream::Tcp(s) => s.read(buf),
-            #[cfg(unix)]
-            Stream::Unix(s) => s.read(buf),
-        }
-    }
-}
-
-impl Write for Stream {
-    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
-        match self {
-            Stream::Tcp(s) => s.write(buf),
-            #[cfg(unix)]
-            Stream::Unix(s) => s.write(buf),
-        }
-    }
-
-    fn flush(&mut self) -> std::io::Result<()> {
-        match self {
-            Stream::Tcp(s) => s.flush(),
-            #[cfg(unix)]
-            Stream::Unix(s) => s.flush(),
-        }
+#[cfg(unix)]
+impl Conn for UnixStream {
+    fn set_timeout(&mut self, dur: Option<Duration>) -> std::io::Result<()> {
+        UnixStream::set_read_timeout(self, dur)
     }
 }
 
@@ -235,6 +254,30 @@ fn parse_listen_line(line: &str) -> Option<WorkerAddr> {
     }
 }
 
+/// Open one connection to an announced worker address.
+fn dial_addr(addr: &WorkerAddr) -> anyhow::Result<Box<dyn Conn>> {
+    match addr {
+        WorkerAddr::Tcp(addr) => {
+            let sock = addr
+                .to_socket_addrs()
+                .with_context(|| format!("resolve {addr}"))?
+                .next()
+                .ok_or_else(|| anyhow!("no socket addr in {addr}"))?;
+            let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
+                .with_context(|| format!("connect tcp {addr}"))?;
+            // Step frames are small; don't let Nagle delay them.
+            let _ = stream.set_nodelay(true);
+            Ok(Box::new(stream))
+        }
+        #[cfg(unix)]
+        WorkerAddr::Unix(path) => {
+            let stream = UnixStream::connect(path)
+                .with_context(|| format!("connect unix {}", path.display()))?;
+            Ok(Box::new(stream))
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Worker side: `sketchy shard-worker`.
 // ---------------------------------------------------------------------------
@@ -251,6 +294,11 @@ struct WorkerState {
     /// Last step reply, keyed by `t` — replayed verbatim when the driver
     /// retries a step after a reconnect (idempotency).
     last_step: Option<(u64, WireMsg)>,
+    /// Last RefreshAhead reply, keyed by `t_next` — same idempotent
+    /// replay for the overlap request that raced a reconnect (re-running
+    /// the eigendecompositions would be bitwise harmless but would skew
+    /// the refresh accounting).
+    last_refresh_ahead: Option<(u64, WireMsg)>,
 }
 
 impl WorkerState {
@@ -292,6 +340,7 @@ impl WorkerState {
             states,
             slot_of,
             last_step: None,
+            last_refresh_ahead: None,
         })
     }
 
@@ -346,6 +395,70 @@ impl WorkerState {
         Ok(StepOkMsg { t: msg.t, refreshes: refreshes as u32, entries })
     }
 
+    /// Run the RefreshAhead stage against the owned block states: visit
+    /// the due subset (every owned block when `all`) and recompute
+    /// inverse roots where the slot fires or roots are still missing —
+    /// exactly the in-process `LocalExecutor` job body, on this worker's
+    /// share of the pool. The driver parks the reply, so this work
+    /// overlaps the trainer's gradient computation.
+    fn process_refresh_ahead(
+        &mut self,
+        msg: &RefreshAheadMsg,
+    ) -> anyhow::Result<RefreshAheadOkMsg> {
+        let due: BTreeSet<u32> = msg.due.iter().copied().collect();
+        for &i in &due {
+            ensure!(
+                self.slot_of.contains_key(&i),
+                "unknown block index {i} in refresh-ahead"
+            );
+        }
+        // BTreeMap iteration is index-ordered, so the target list (and
+        // the reply's refreshed list) is deterministic.
+        let targets: Vec<(usize, u32, bool)> = self
+            .slot_of
+            .iter()
+            .filter_map(|(&index, &slot)| {
+                let d = due.contains(&index);
+                (msg.all || d).then_some((slot, index, d))
+            })
+            .collect();
+        let count = AtomicUsize::new(0);
+        let flags: Vec<AtomicBool> = targets.iter().map(|_| AtomicBool::new(false)).collect();
+        if !targets.is_empty() {
+            let threads = effective_worker_threads(self.threads, targets.len());
+            let states = &self.states;
+            pool::global()
+                .try_run(threads, targets.len(), |j| {
+                    let (slot, _, d) = targets[j];
+                    // Same per-task kernel pin and refresh condition as
+                    // the in-process RefreshAhead job: the driver only
+                    // prefetches on steps that fold no statistics, so
+                    // these roots equal a synchronous refresh bitwise.
+                    crate::tensor::ops::with_single_thread(|| {
+                        let mut st = lock_state(&states[slot]);
+                        if !st.unit.ready() || d {
+                            if st.unit.refresh() {
+                                count.fetch_add(1, Ordering::Relaxed);
+                            }
+                            flags[j].store(true, Ordering::Relaxed);
+                        }
+                    });
+                })
+                .map_err(|m| anyhow!("refresh-ahead phase: {m}"))?;
+        }
+        let refreshed = targets
+            .iter()
+            .zip(&flags)
+            .filter(|(_, f)| f.load(Ordering::Relaxed))
+            .map(|(&(_, index, _), _)| index)
+            .collect();
+        Ok(RefreshAheadOkMsg {
+            t_next: msg.t_next,
+            count: count.load(Ordering::Relaxed) as u32,
+            refreshed,
+        })
+    }
+
     fn mem_stats(&mut self) -> (u64, u64) {
         let mut mem = 0u64;
         let mut second = 0u64;
@@ -358,14 +471,22 @@ impl WorkerState {
     }
 }
 
-/// Serve one connection. `Ok(true)` keeps the worker alive for further
-/// connections (reconnect support); `Ok(false)` means clean shutdown.
+/// Serve one connection at wire protocol version `proto`. `Ok(true)`
+/// keeps the worker alive for further connections (reconnect support);
+/// `Ok(false)` means clean shutdown.
 fn handle_conn<S: Read + Write>(
     stream: &mut S,
     state: &mut Option<WorkerState>,
     worker_id: u32,
+    proto: u32,
 ) -> anyhow::Result<bool> {
-    wire::write_msg(stream, &WireMsg::Hello { worker_id })?;
+    if proto <= 1 {
+        // Legacy greeting: no capability report — the driver keeps this
+        // shard's refreshes synchronous.
+        wire::write_msg(stream, &WireMsg::Hello { worker_id })?;
+    } else {
+        wire::write_msg(stream, &WireMsg::HelloV2 { worker_id, proto, overlap: true })?;
+    }
     loop {
         let msg = match wire::read_msg_opt(stream)? {
             None => return Ok(true), // driver closed; await a reconnect
@@ -398,6 +519,33 @@ fn handle_conn<S: Read + Write>(
                             }
                         },
                     },
+                };
+                wire::write_msg(stream, &reply)?;
+            }
+            WireMsg::RefreshAhead(ra) => {
+                let reply = if proto <= 1 {
+                    // A v1 worker emulation must behave like the old
+                    // binary: it never advertised this capability.
+                    WireMsg::Error {
+                        message: "refresh-ahead unsupported at wire protocol v1".into(),
+                    }
+                } else {
+                    match state.as_mut() {
+                        None => WireMsg::Error { message: "refresh-ahead before init".into() },
+                        Some(ws) => match &ws.last_refresh_ahead {
+                            Some((t, cached)) if *t == ra.t_next => cached.clone(),
+                            _ => match ws.process_refresh_ahead(&ra) {
+                                Ok(ok) => {
+                                    let reply = WireMsg::RefreshAheadOk(ok);
+                                    ws.last_refresh_ahead = Some((ra.t_next, reply.clone()));
+                                    reply
+                                }
+                                Err(e) => WireMsg::Error {
+                                    message: format!("refresh-ahead t={}: {e:#}", ra.t_next),
+                                },
+                            },
+                        },
+                    }
                 };
                 wire::write_msg(stream, &reply)?;
             }
@@ -435,10 +583,17 @@ fn announce(detail: &str) -> anyhow::Result<()> {
 /// listener, announce it on stdout, then serve driver connections until
 /// a `Shutdown` message arrives. Block state persists across
 /// connections; per-connection transport errors are logged and the
-/// worker keeps listening.
+/// worker keeps listening. `--proto-version 1` pins the legacy
+/// (pre-RefreshAhead) handshake so degraded-mode deployments stay
+/// testable end to end.
 pub fn serve_worker(args: &Args) -> anyhow::Result<()> {
     let worker_id = args.get_usize("worker-id", 0) as u32;
     let transport = ShardTransport::parse(&args.get_or("transport", "tcp"))?;
+    let proto = args.get_usize("proto-version", PROTO_VERSION as usize) as u32;
+    ensure!(
+        (1..=PROTO_VERSION).contains(&proto),
+        "unsupported --proto-version {proto} (this build speaks v1..=v{PROTO_VERSION})"
+    );
     let mut state: Option<WorkerState> = None;
     match transport {
         ShardTransport::Tcp => {
@@ -453,7 +608,7 @@ pub fn serve_worker(args: &Args) -> anyhow::Result<()> {
                         continue;
                     }
                 };
-                match handle_conn(&mut stream, &mut state, worker_id) {
+                match handle_conn(&mut stream, &mut state, worker_id, proto) {
                     Ok(true) => continue,
                     Ok(false) => break,
                     Err(e) => {
@@ -485,7 +640,7 @@ pub fn serve_worker(args: &Args) -> anyhow::Result<()> {
                         continue;
                     }
                 };
-                match handle_conn(&mut stream, &mut state, worker_id) {
+                match handle_conn(&mut stream, &mut state, worker_id, proto) {
                     Ok(true) => continue,
                     Ok(false) => break,
                     Err(e) => {
@@ -504,88 +659,64 @@ pub fn serve_worker(args: &Args) -> anyhow::Result<()> {
 // Driver side.
 // ---------------------------------------------------------------------------
 
-/// One spawned worker process plus its (reconnectable) connection.
-struct WorkerProc {
+/// Factory for fresh connections to one worker (reconnects reuse it).
+type Dialer = Box<dyn FnMut() -> anyhow::Result<Box<dyn Conn>> + Send>;
+
+/// The driver's (reconnectable) request/reply channel to one worker,
+/// over any [`Conn`] transport. Holds the per-shard **in-flight slot**:
+/// besides the usual strict request/response traffic, at most one
+/// RefreshAhead request may be parked with its reply unread.
+struct ShardChannel {
     shard: usize,
-    child: Child,
-    addr: WorkerAddr,
-    conn: Option<Stream>,
+    dial: Dialer,
+    conn: Option<Box<dyn Conn>>,
     /// Encoded frame of the last request, replayed after a reconnect
-    /// (safe: the worker deduplicates steps by `t`).
+    /// (safe: the worker deduplicates steps and refresh-aheads by `t`).
     last_req: Vec<u8>,
-    /// Held so late worker prints land in the pipe instead of EPIPE.
-    _stdout: BufReader<ChildStdout>,
+    /// Wire protocol version from the worker's greeting (0 = never
+    /// connected).
+    proto: u32,
+    /// RefreshAhead capability from the worker's greeting.
+    overlap: bool,
+    /// `t_next` of a sent-but-unjoined RefreshAhead request.
+    pending_refresh: Option<u64>,
 }
 
-impl WorkerProc {
-    fn spawn(launch: &ShardLaunch, shard: usize) -> anyhow::Result<WorkerProc> {
-        let mut cmd = Command::new(&launch.program);
-        cmd.arg("shard-worker")
-            .arg("--worker-id")
-            .arg(shard.to_string())
-            .arg("--transport")
-            .arg(launch.transport.to_string())
-            .stdin(Stdio::null())
-            .stdout(Stdio::piped())
-            .stderr(Stdio::inherit());
-        let mut child = cmd
-            .spawn()
-            .with_context(|| format!("spawn {} shard-worker", launch.program.display()))?;
-        let stdout = child
-            .stdout
-            .take()
-            .ok_or_else(|| anyhow!("worker stdout pipe missing"))?;
-        let mut reader = BufReader::new(stdout);
-        let addr = loop {
-            let mut line = String::new();
-            let n = reader.read_line(&mut line).context("read worker handshake")?;
-            if n == 0 {
-                let _ = child.kill();
-                let _ = child.wait();
-                bail!("worker exited before announcing a listen address");
-            }
-            if let Some(addr) = parse_listen_line(&line) {
-                break addr;
-            }
-            // Tolerate stray prints ahead of the announcement.
-        };
-        Ok(WorkerProc { shard, child, addr, conn: None, last_req: Vec::new(), _stdout: reader })
+impl ShardChannel {
+    fn new(shard: usize, dial: Dialer) -> ShardChannel {
+        ShardChannel {
+            shard,
+            dial,
+            conn: None,
+            last_req: Vec::new(),
+            proto: 0,
+            overlap: false,
+            pending_refresh: None,
+        }
     }
 
     fn connect(&mut self) -> anyhow::Result<()> {
-        let mut stream = match &self.addr {
-            WorkerAddr::Tcp(addr) => {
-                let sock = addr
-                    .to_socket_addrs()
-                    .with_context(|| format!("resolve {addr}"))?
-                    .next()
-                    .ok_or_else(|| anyhow!("no socket addr in {addr}"))?;
-                Stream::Tcp(
-                    TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
-                        .with_context(|| format!("connect tcp {addr}"))?,
-                )
-            }
-            #[cfg(unix)]
-            WorkerAddr::Unix(path) => Stream::Unix(
-                UnixStream::connect(path)
-                    .with_context(|| format!("connect unix {}", path.display()))?,
-            ),
-        };
+        let mut conn = (self.dial)()?;
         // Bound every reply wait: a wedged worker becomes a shard-named
         // error (after one reconnect attempt) instead of a frozen driver.
-        let _ = stream.set_read_timeout(Some(REPLY_TIMEOUT));
-        match wire::read_msg(&mut stream).context("read worker hello")? {
-            WireMsg::Hello { worker_id } if worker_id as usize == self.shard => {}
-            WireMsg::Hello { worker_id } => {
+        let _ = conn.set_timeout(Some(REPLY_TIMEOUT));
+        match wire::read_msg(&mut conn).context("read worker hello")? {
+            WireMsg::Hello { worker_id } if worker_id as usize == self.shard => {
+                self.proto = 1;
+                self.overlap = false;
+            }
+            WireMsg::HelloV2 { worker_id, proto, overlap }
+                if worker_id as usize == self.shard =>
+            {
+                self.proto = proto;
+                self.overlap = overlap;
+            }
+            WireMsg::Hello { worker_id } | WireMsg::HelloV2 { worker_id, .. } => {
                 bail!("worker identity mismatch: got {worker_id}, want {}", self.shard)
             }
             other => bail!("expected hello, got {other:?}"),
         }
-        if let Stream::Tcp(t) = &stream {
-            // Step frames are small; don't let Nagle delay them.
-            let _ = t.set_nodelay(true);
-        }
-        self.conn = Some(stream);
+        self.conn = Some(conn);
         Ok(())
     }
 
@@ -612,7 +743,7 @@ impl WorkerProc {
     }
 
     /// Receive the pending reply. On transport failure, reconnect and
-    /// replay the last request once — the worker's step cache makes the
+    /// replay the last request once — the worker's reply caches make the
     /// replay idempotent even if the original request already applied.
     fn recv(&mut self) -> anyhow::Result<WireMsg> {
         let first = match self.conn.as_mut() {
@@ -638,58 +769,208 @@ impl WorkerProc {
         self.send(msg)?;
         self.recv()
     }
-}
 
-impl Drop for WorkerProc {
-    fn drop(&mut self) {
-        // Graceful stop: Shutdown over the live connection, short grace
-        // period, then SIGKILL as the backstop.
-        let graceful = match self.conn.as_mut() {
-            Some(conn) => {
-                let _ = conn.set_read_timeout(Some(Duration::from_secs(2)));
-                match wire::encode_frame(&WireMsg::Shutdown) {
-                    Ok(frame) => {
-                        conn.write_all(&frame).and_then(|_| conn.flush()).is_ok()
-                            && wire::read_msg(conn).is_ok()
-                    }
-                    Err(_) => false,
-                }
+    /// Best-effort Shutdown over the live connection (no reconnect
+    /// attempts — used on drop). Returns whether the worker acked.
+    fn shutdown_quietly(&mut self) -> bool {
+        let Some(conn) = self.conn.as_mut() else { return false };
+        let _ = conn.set_timeout(Some(Duration::from_secs(2)));
+        match wire::encode_frame(&WireMsg::Shutdown) {
+            Ok(frame) => {
+                conn.write_all(&frame).and_then(|_| conn.flush()).is_ok()
+                    && wire::read_msg(conn).is_ok()
             }
-            None => false,
-        };
-        if graceful {
-            let deadline = Instant::now() + Duration::from_secs(2);
-            loop {
-                match self.child.try_wait() {
-                    Ok(Some(_)) => break,
-                    Ok(None) if Instant::now() < deadline => {
-                        std::thread::sleep(Duration::from_millis(10));
-                    }
-                    _ => {
-                        let _ = self.child.kill();
-                        let _ = self.child.wait();
-                        break;
-                    }
-                }
-            }
-        } else {
-            let _ = self.child.kill();
-            let _ = self.child.wait();
-        }
-        #[cfg(unix)]
-        if let WorkerAddr::Unix(path) = &self.addr {
-            let _ = std::fs::remove_file(path);
+            Err(_) => false,
         }
     }
 }
 
-/// [`BlockExecutor`] driving blocks across worker processes.
+/// What backs one shard: a spawned `sketchy shard-worker` process or an
+/// in-process thread over the fault-injection transport.
+enum WorkerBackend {
+    Process {
+        child: Child,
+        addr: WorkerAddr,
+        /// Held so late worker prints land in the pipe instead of EPIPE.
+        _stdout: BufReader<ChildStdout>,
+    },
+    InProc {
+        join: Option<JoinHandle<()>>,
+    },
+}
+
+/// One shard: its channel plus whatever runs the worker.
+struct WorkerHandle {
+    channel: ShardChannel,
+    backend: WorkerBackend,
+}
+
+impl WorkerHandle {
+    /// Join-and-discard a parked RefreshAhead reply, if any — the
+    /// cancel path, and the barrier keeping the strict request/response
+    /// wire clear before any other request goes out. Discarding is
+    /// bitwise-safe: the step's own refresh slot recomputes identical
+    /// roots from unchanged statistics, and the accounting counts that
+    /// in-step refresh exactly once.
+    fn drain_pending_refresh(&mut self) {
+        if self.channel.pending_refresh.take().is_some() {
+            // A failed drain leaves conn = None; the next request dials
+            // a fresh connection, which starts with no queued replies.
+            let _ = self.channel.recv();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        // Clear the wire, then graceful stop: Shutdown over the live
+        // connection, short grace period, then SIGKILL as the backstop.
+        self.drain_pending_refresh();
+        let graceful = self.channel.shutdown_quietly();
+        match &mut self.backend {
+            WorkerBackend::Process { child, addr, .. } => {
+                if graceful {
+                    let deadline = Instant::now() + Duration::from_secs(2);
+                    loop {
+                        match child.try_wait() {
+                            Ok(Some(_)) => break,
+                            Ok(None) if Instant::now() < deadline => {
+                                std::thread::sleep(Duration::from_millis(10));
+                            }
+                            _ => {
+                                let _ = child.kill();
+                                let _ = child.wait();
+                                break;
+                            }
+                        }
+                    }
+                } else {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+                #[cfg(unix)]
+                if let WorkerAddr::Unix(path) = addr {
+                    let _ = std::fs::remove_file(path);
+                }
+                #[cfg(not(unix))]
+                let _ = addr;
+            }
+            WorkerBackend::InProc { join } => {
+                if graceful {
+                    if let Some(j) = join.take() {
+                        let _ = j.join();
+                    }
+                }
+                // Not graceful: the thread parks on its acceptor until
+                // the transport drops; detach instead of hanging here.
+            }
+        }
+    }
+}
+
+/// Spawn one worker process and read its announced listen address.
+fn spawn_process_worker(launch: &ShardLaunch, shard: usize) -> anyhow::Result<WorkerHandle> {
+    let mut cmd = Command::new(&launch.program);
+    cmd.arg("shard-worker")
+        .arg("--worker-id")
+        .arg(shard.to_string())
+        .arg("--transport")
+        .arg(launch.transport.to_string())
+        .arg("--proto-version")
+        .arg(launch.proto.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    let mut child = cmd
+        .spawn()
+        .with_context(|| format!("spawn {} shard-worker", launch.program.display()))?;
+    let stdout = child
+        .stdout
+        .take()
+        .ok_or_else(|| anyhow!("worker stdout pipe missing"))?;
+    let mut reader = BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).context("read worker handshake")?;
+        if n == 0 {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!("worker exited before announcing a listen address");
+        }
+        if let Some(addr) = parse_listen_line(&line) {
+            break addr;
+        }
+        // Tolerate stray prints ahead of the announcement.
+    };
+    let dial_addr_copy = addr.clone();
+    let channel = ShardChannel::new(shard, Box::new(move || dial_addr(&dial_addr_copy)));
+    Ok(WorkerHandle {
+        channel,
+        backend: WorkerBackend::Process { child, addr, _stdout: reader },
+    })
+}
+
+/// Build the Init message for one shard's owned blocks.
+fn init_msg_for(
+    owned: &[usize],
+    blocks: &[Block],
+    kind: UnitKind,
+    base: &ShampooConfig,
+    worker_threads: usize,
+) -> WireMsg {
+    let specs: Vec<BlockSpec> = owned
+        .iter()
+        .map(|&i| {
+            let (rows, cols) = blocks[i].shape();
+            BlockSpec { index: i as u32, rows: rows as u32, cols: cols as u32 }
+        })
+        .collect();
+    WireMsg::Init(InitMsg {
+        kind: kind.code(),
+        rank: kind.rank() as u32,
+        beta2: base.beta2,
+        eps: base.eps,
+        one_sided: base.one_sided,
+        graft: base.graft.code(),
+        threads: worker_threads as u32,
+        blocks: specs,
+    })
+}
+
+/// Drive one shard's Init request/reply.
+fn init_worker(w: &mut WorkerHandle, shard: usize, msg: &WireMsg) -> anyhow::Result<()> {
+    match w.channel.request(msg).with_context(|| format!("shard {shard}: init"))? {
+        WireMsg::Ok => Ok(()),
+        WireMsg::Error { message } => bail!("shard {shard}: init failed: {message}"),
+        other => bail!("shard {shard}: unexpected init reply {other:?}"),
+    }
+}
+
+/// `threads = 0` (auto) means "all cores" — but N colocated workers
+/// each doing that would oversubscribe the host N-fold. Split the auto
+/// budget across shards; an explicit knob passes through untouched.
+/// Thread counts never change the numbers.
+fn split_thread_budget(threads: usize, shards: usize) -> usize {
+    if threads == 0 {
+        (crate::tensor::ops::num_threads() / shards).max(1)
+    } else {
+        threads
+    }
+}
+
+/// [`BlockExecutor`] driving blocks across worker processes (or
+/// in-process harness workers — see [`ShardExecutor::launch_in_proc`]).
 pub struct ShardExecutor {
     /// Mutex for interior mutability: `mem_bytes` RPCs through `&self`.
-    workers: Mutex<Vec<WorkerProc>>,
+    workers: Mutex<Vec<WorkerHandle>>,
     /// shard → owned global block indices.
     assignment: Vec<Vec<usize>>,
-    transport: ShardTransport,
+    /// Total engine block count (sizes RefreshAhead flag vectors).
+    n_blocks: usize,
+    /// Human transport label: `tcp`, `unix`, or `in-proc`.
+    transport: String,
+    /// Every worker reported RefreshAhead capability at handshake.
+    overlap: bool,
 }
 
 impl ShardExecutor {
@@ -706,48 +987,116 @@ impl ShardExecutor {
         ensure!(!blocks.is_empty(), "shard launch requires at least one block");
         let shards = launch.shards.min(blocks.len());
         let assignment = assign_blocks(blocks.len(), shards);
-        // threads = 0 (auto) means "all cores" — but N colocated workers
-        // each doing that would oversubscribe the host N-fold. Split the
-        // auto budget across shards; an explicit knob passes through
-        // untouched. Thread counts never change the numbers.
-        let worker_threads = if threads == 0 {
-            (crate::tensor::ops::num_threads() / shards).max(1)
-        } else {
-            threads
-        };
+        let worker_threads = split_thread_budget(threads, shards);
         let mut workers = Vec::with_capacity(shards);
         for (shard, owned) in assignment.iter().enumerate() {
-            let mut w = WorkerProc::spawn(launch, shard)
+            let mut w = spawn_process_worker(launch, shard)
                 .with_context(|| format!("shard {shard}: spawn worker"))?;
-            let specs: Vec<BlockSpec> = owned
-                .iter()
-                .map(|&i| {
-                    let (rows, cols) = blocks[i].shape();
-                    BlockSpec { index: i as u32, rows: rows as u32, cols: cols as u32 }
-                })
-                .collect();
-            let init = WireMsg::Init(InitMsg {
-                kind: kind.code(),
-                rank: kind.rank() as u32,
-                beta2: base.beta2,
-                eps: base.eps,
-                one_sided: base.one_sided,
-                graft: base.graft.code(),
-                threads: worker_threads as u32,
-                blocks: specs,
-            });
-            match w.request(&init).with_context(|| format!("shard {shard}: init"))? {
-                WireMsg::Ok => {}
-                WireMsg::Error { message } => bail!("shard {shard}: init failed: {message}"),
-                other => bail!("shard {shard}: unexpected init reply {other:?}"),
-            }
+            init_worker(&mut w, shard, &init_msg_for(owned, blocks, kind, base, worker_threads))?;
             workers.push(w);
         }
-        Ok(ShardExecutor {
-            workers: Mutex::new(workers),
-            assignment,
-            transport: launch.transport,
-        })
+        Ok(ShardExecutor::assemble(workers, assignment, blocks.len(), launch.transport.to_string()))
+    }
+
+    /// Test/bench-facing variant of [`ShardExecutor::launch`]: shard
+    /// "workers" are threads in this process, served over the in-memory
+    /// [`FaultInjectingTransport`] — no sockets, no child processes — so
+    /// integration tests can script transport faults at exact frame
+    /// indices. One transport per shard (shard count = transport count,
+    /// capped at the block count). `proto` pins the workers' wire
+    /// protocol version ([`PROTO_VERSION`] normally; 1 emulates a
+    /// pre-RefreshAhead worker for the degrade-to-sync matrix).
+    pub fn launch_in_proc(
+        blocks: &[Block],
+        kind: UnitKind,
+        base: &ShampooConfig,
+        threads: usize,
+        transports: &[Arc<FaultInjectingTransport>],
+        proto: u32,
+    ) -> anyhow::Result<ShardExecutor> {
+        ensure!(!transports.is_empty(), "in-proc shard launch requires at least one transport");
+        ensure!(!blocks.is_empty(), "shard launch requires at least one block");
+        ensure!(
+            (1..=PROTO_VERSION).contains(&proto),
+            "unsupported wire protocol v{proto} (this build speaks v1..=v{PROTO_VERSION})"
+        );
+        let shards = transports.len().min(blocks.len());
+        let assignment = assign_blocks(blocks.len(), shards);
+        let worker_threads = split_thread_budget(threads, shards);
+        let mut workers = Vec::with_capacity(shards);
+        for (shard, owned) in assignment.iter().enumerate() {
+            let transport = &transports[shard];
+            let acceptor = transport
+                .take_acceptor()
+                .ok_or_else(|| anyhow!("shard {shard}: transport acceptor already taken"))?;
+            let wid = shard as u32;
+            let join = std::thread::Builder::new()
+                .name(format!("sketchy-inproc-shard-{shard}"))
+                .spawn(move || {
+                    // The serve loop of `serve_worker`, minus the socket:
+                    // block state persists across connections, transport
+                    // errors leave the worker awaiting a redial.
+                    let mut state: Option<WorkerState> = None;
+                    while let Ok(mut conn) = acceptor.recv() {
+                        match handle_conn(&mut conn, &mut state, wid, proto) {
+                            Ok(true) => continue,
+                            Ok(false) => break,
+                            Err(e) => {
+                                // Same surfacing as serve_worker: scripted
+                                // faults kill connections on purpose, but a
+                                // genuine protocol error must leave a trace.
+                                eprintln!(
+                                    "in-proc shard worker {wid}: connection error: {e:#}"
+                                );
+                                continue;
+                            }
+                        }
+                    }
+                })
+                .with_context(|| format!("shard {shard}: spawn in-proc worker"))?;
+            let dial_t = Arc::clone(transport);
+            let channel = ShardChannel::new(
+                shard,
+                Box::new(move || {
+                    let conn = dial_t.dial().context("dial in-proc transport")?;
+                    Ok(Box::new(conn) as Box<dyn Conn>)
+                }),
+            );
+            let mut w = WorkerHandle {
+                channel,
+                backend: WorkerBackend::InProc { join: Some(join) },
+            };
+            init_worker(&mut w, shard, &init_msg_for(owned, blocks, kind, base, worker_threads))?;
+            workers.push(w);
+        }
+        Ok(ShardExecutor::assemble(workers, assignment, blocks.len(), "in-proc".to_string()))
+    }
+
+    /// Shared tail of the launch paths: record the per-worker capability
+    /// reports (with a one-time notice for degraded workers) and build
+    /// the executor.
+    fn assemble(
+        workers: Vec<WorkerHandle>,
+        assignment: Vec<Vec<usize>>,
+        n_blocks: usize,
+        transport: String,
+    ) -> ShardExecutor {
+        let overlap = workers.iter().all(|w| w.channel.overlap);
+        for w in &workers {
+            if !w.channel.overlap {
+                // Neutral capability report: whether this *disables*
+                // anything is the engine's call (`resolve_overlap`
+                // prints the one-time knob notice when overlap was
+                // actually requested).
+                eprintln!(
+                    "shard {}: worker greeted with wire protocol v{} (no RefreshAhead \
+                     capability)",
+                    w.channel.shard,
+                    w.channel.proto.max(1)
+                );
+            }
+        }
+        ShardExecutor { workers: Mutex::new(workers), assignment, n_blocks, transport, overlap }
     }
 
     /// Worker process count actually launched.
@@ -762,16 +1111,24 @@ impl ShardExecutor {
         let w = workers
             .get_mut(shard)
             .ok_or_else(|| anyhow!("no shard {shard}"))?;
-        w.child.kill().context("kill worker")?;
-        let _ = w.child.wait();
-        Ok(())
+        match &mut w.backend {
+            WorkerBackend::Process { child, .. } => {
+                child.kill().context("kill worker")?;
+                let _ = child.wait();
+                Ok(())
+            }
+            WorkerBackend::InProc { .. } => bail!(
+                "shard {shard} is an in-proc harness worker; script a Sever with a \
+                 connection budget on its FaultInjectingTransport instead"
+            ),
+        }
     }
 
     /// Fault injection for tests: drop every driver-side connection.
     /// The next request reconnects transparently (workers keep state).
     pub fn drop_connections(&mut self) {
         for w in self.workers.get_mut().unwrap().iter_mut() {
-            w.conn = None;
+            w.channel.conn = None;
         }
     }
 
@@ -780,15 +1137,20 @@ impl ShardExecutor {
         let mut mem = 0usize;
         let mut second = 0usize;
         for w in workers.iter_mut() {
-            match w.request(&WireMsg::MemStats) {
+            // The wire is strict request/response outside the parked
+            // RefreshAhead slot — join-and-discard it before any other
+            // request.
+            w.drain_pending_refresh();
+            let shard = w.channel.shard;
+            match w.channel.request(&WireMsg::MemStats) {
                 Ok(WireMsg::MemStatsOk { mem_bytes, second_moment_bytes }) => {
                     mem += mem_bytes as usize;
                     second += second_moment_bytes as usize;
                 }
                 Ok(other) => {
-                    eprintln!("shard {}: unexpected memstats reply {other:?}", w.shard);
+                    eprintln!("shard {shard}: unexpected memstats reply {other:?}");
                 }
-                Err(e) => eprintln!("shard {}: memstats failed: {e:#}", w.shard),
+                Err(e) => eprintln!("shard {shard}: memstats failed: {e:#}"),
             }
         }
         (mem, second)
@@ -831,6 +1193,11 @@ impl BlockExecutor for ShardExecutor {
         // Ship every shard its gathered block statistics first, then
         // collect replies in shard order — workers compute concurrently.
         for (shard, w) in workers.iter_mut().enumerate() {
+            // Cancel path: a RefreshAhead parked by a caller that never
+            // joined it is drained and discarded before the Step goes
+            // out (the engine normally joins first; direct executor
+            // drivers may not).
+            w.drain_pending_refresh();
             let entries: Vec<StepEntry> = assignment[shard]
                 .iter()
                 .map(|&i| {
@@ -853,12 +1220,14 @@ impl BlockExecutor for ShardExecutor {
                 weight_decay: common.weight_decay,
                 entries,
             });
-            w.send(&msg)
+            w.channel
+                .send(&msg)
                 .with_context(|| format!("shard {shard}: send step t={}", common.t))?;
         }
         let mut refreshes = 0usize;
         for (shard, w) in workers.iter_mut().enumerate() {
             let reply = w
+                .channel
                 .recv()
                 .with_context(|| format!("shard {shard}: step t={} reply", common.t))?;
             let ok = match reply {
@@ -914,6 +1283,99 @@ impl BlockExecutor for ShardExecutor {
         self.mem_stats_total().1
     }
 
+    fn overlap_capable(&self) -> bool {
+        self.overlap
+    }
+
+    fn begin_refresh_ahead(&mut self, plan: RefreshAheadPlan) -> bool {
+        if !self.overlap {
+            return false;
+        }
+        let ShardExecutor { workers, assignment, n_blocks, .. } = self;
+        debug_assert_eq!(plan.due.len(), *n_blocks);
+        let workers = workers.get_mut().unwrap();
+        let mut any = false;
+        for (shard, w) in workers.iter_mut().enumerate() {
+            debug_assert!(
+                w.channel.pending_refresh.is_none(),
+                "refresh-ahead already in flight on shard {shard}"
+            );
+            let due: Vec<u32> = assignment[shard]
+                .iter()
+                .copied()
+                .filter(|&i| plan.due[i])
+                .map(|i| i as u32)
+                .collect();
+            if assignment[shard].is_empty() || (!plan.all && due.is_empty()) {
+                continue; // nothing for this shard to prefetch
+            }
+            let t_next = plan.t_next as u64;
+            let msg = WireMsg::RefreshAhead(RefreshAheadMsg { t_next, all: plan.all, due });
+            match w.channel.send(&msg) {
+                Ok(()) => {
+                    // The reply stays parked until finish_refresh_ahead:
+                    // this is the second in-flight request per shard.
+                    w.channel.pending_refresh = Some(t_next);
+                    any = true;
+                }
+                Err(e) => {
+                    // Degrade just this step to a synchronous refresh on
+                    // this shard — its blocks keep refresh_due in-step,
+                    // so the numbers cannot change.
+                    eprintln!(
+                        "shard {shard}: refresh-ahead send failed ({e:#}); \
+                         refreshing synchronously this step"
+                    );
+                }
+            }
+        }
+        any
+    }
+
+    fn finish_refresh_ahead(&mut self) -> anyhow::Result<Option<RefreshAheadDone>> {
+        let ShardExecutor { workers, assignment, n_blocks, .. } = self;
+        let workers = workers.get_mut().unwrap();
+        let mut refreshed = vec![false; *n_blocks];
+        let mut count = 0usize;
+        let mut any = false;
+        for (shard, w) in workers.iter_mut().enumerate() {
+            let Some(t_next) = w.channel.pending_refresh.take() else {
+                continue;
+            };
+            any = true;
+            let reply = w
+                .channel
+                .recv()
+                .with_context(|| format!("shard {shard}: refresh-ahead t={t_next} reply"))?;
+            let ok = match reply {
+                WireMsg::RefreshAheadOk(ok) => ok,
+                WireMsg::Error { message } => {
+                    bail!("shard {shard}: worker error: {message}")
+                }
+                other => bail!("shard {shard}: unexpected refresh-ahead reply {other:?}"),
+            };
+            ensure!(
+                ok.t_next == t_next,
+                "shard {shard}: refresh-ahead reply for t={} while awaiting t={t_next}",
+                ok.t_next
+            );
+            count += ok.count as usize;
+            let (own_lo, own_hi) = match (assignment[shard].first(), assignment[shard].last()) {
+                (Some(&lo), Some(&hi)) => (lo, hi),
+                _ => (1, 0),
+            };
+            for idx in ok.refreshed {
+                let i = idx as usize;
+                ensure!(
+                    i >= own_lo && i <= own_hi && i < *n_blocks,
+                    "shard {shard}: refresh-ahead reported foreign block {i}"
+                );
+                refreshed[i] = true;
+            }
+        }
+        Ok(any.then_some(RefreshAheadDone { refreshed, count }))
+    }
+
     fn label(&self) -> String {
         format!("shards={}/{}", self.assignment.len(), self.transport)
     }
@@ -922,6 +1384,7 @@ impl BlockExecutor for ShardExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::fault::FaultScript;
     use crate::optim::engine::{EngineConfig, PrecondEngine};
     use crate::optim::matrix_opt::Optimizer;
     use crate::optim::partition;
@@ -954,19 +1417,24 @@ mod tests {
 
     #[test]
     fn shard_config_resolution_precedence() {
-        let cfg = Config::parse("[shard]\ncount = 3\ntransport = \"tcp\"").unwrap();
+        let cfg = Config::parse("[shard]\ncount = 3\ntransport = \"tcp\"\nproto = 1").unwrap();
         let args = Args::parse(["train", "--shards", "2"].iter().map(|s| s.to_string()));
         let sc = ShardConfig::resolve(&args, &cfg).unwrap();
         assert_eq!(sc.shards, 2); // CLI beats config
         assert_eq!(sc.transport, ShardTransport::Tcp);
+        assert_eq!(sc.proto, 1); // config beats default
         assert!(sc.enabled());
         let defaults = ShardConfig::resolve(&Args::default(), &Config::default()).unwrap();
         assert_eq!(defaults.shards, 0);
+        assert_eq!(defaults.proto, PROTO_VERSION);
         assert!(!defaults.enabled());
         let bad = Args::parse(
             ["train", "--shard-transport", "smoke-signals"].iter().map(|s| s.to_string()),
         );
         assert!(ShardConfig::resolve(&bad, &Config::default()).is_err());
+        // Unknown future protocol versions are refused, not guessed at.
+        let future = Args::parse(["train", "--shard-proto", "99"].iter().map(|s| s.to_string()));
+        assert!(ShardConfig::resolve(&future, &Config::default()).is_err());
     }
 
     #[test]
@@ -1065,6 +1533,209 @@ mod tests {
         // The idempotency cache replays the last step verbatim.
         let cached = ws.last_step.clone().unwrap();
         assert_eq!(cached.0, 6);
+    }
+
+    #[test]
+    fn worker_refresh_ahead_runs_due_blocks_only() {
+        // Two 3x3 blocks; feed one step of statistics, then refresh
+        // ahead block 0 only — its roots must exist afterwards and the
+        // skipped block's must not, and the reply must name exactly the
+        // refreshed block.
+        let init = InitMsg {
+            kind: UnitKind::Shampoo.code(),
+            rank: 0,
+            beta2: 0.999,
+            eps: 1e-6,
+            one_sided: false,
+            graft: GraftType::Rmsprop.code(),
+            threads: 1,
+            blocks: vec![
+                BlockSpec { index: 0, rows: 3, cols: 3 },
+                BlockSpec { index: 1, rows: 3, cols: 3 },
+            ],
+        };
+        let mut ws = WorkerState::build(&init).unwrap();
+        let mut rng = Pcg64::new(515);
+        let step = StepMsg {
+            t: 1,
+            scale: 1.0,
+            preconditioning: false, // ingest only; no refresh yet
+            stat_due: true,
+            lr: 0.05,
+            beta1: 0.9,
+            weight_decay: 0.0,
+            entries: (0..2)
+                .map(|i| StepEntry {
+                    index: i,
+                    refresh_due: false,
+                    param: Matrix::zeros(3, 3),
+                    grad: Matrix::randn(3, 3, &mut rng),
+                })
+                .collect(),
+        };
+        ws.process_step(&step).unwrap();
+        let ra = RefreshAheadMsg { t_next: 2, all: false, due: vec![0] };
+        let ok = ws.process_refresh_ahead(&ra).unwrap();
+        assert_eq!(ok.t_next, 2);
+        assert_eq!(ok.refreshed, vec![0]);
+        assert!(ok.count >= 1, "a Kronecker refresh runs an eigendecomposition");
+        assert!(ws.states[0].get_mut().unwrap().unit.ready());
+        assert!(!ws.states[1].get_mut().unwrap().unit.ready());
+        // `all` visits the not-yet-ready block regardless of its slot.
+        let ra_all = RefreshAheadMsg { t_next: 3, all: true, due: vec![] };
+        let ok_all = ws.process_refresh_ahead(&ra_all).unwrap();
+        assert_eq!(ok_all.refreshed, vec![1], "only the unready block needs work");
+        assert!(ws.states[1].get_mut().unwrap().unit.ready());
+        // Unknown indices are rejected loudly.
+        let bad = RefreshAheadMsg { t_next: 4, all: false, due: vec![9] };
+        assert!(ws.process_refresh_ahead(&bad).is_err());
+    }
+
+    #[test]
+    fn duplicated_requests_are_absorbed_by_the_reply_caches() {
+        // Drive a worker serve loop over the fault transport and
+        // duplicate the Step request frame (a replayed request landing
+        // on top of the original). The worker must answer both with the
+        // *same bytes* — the cached reply. Re-processing would fold the
+        // gradient statistics twice and change the parameters.
+        use crate::coordinator::fault::FaultAction;
+        let t = FaultInjectingTransport::with_config(
+            // Request frames: 0 = Init, 1 = Step (duplicated).
+            FaultScript::none().on_request(1, FaultAction::DuplicateFrame),
+            usize::MAX,
+            // Generous cap: this test reads replies by hand, with no
+            // reconnect logic to absorb a scheduling-stall timeout.
+            Some(Duration::from_secs(30)),
+        );
+        let acceptor = t.take_acceptor().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut state: Option<WorkerState> = None;
+            while let Ok(mut conn) = acceptor.recv() {
+                match handle_conn(&mut conn, &mut state, 0, PROTO_VERSION) {
+                    Ok(true) => continue,
+                    _ => break,
+                }
+            }
+        });
+        let mut conn = t.dial().unwrap();
+        let _ = conn.set_timeout(Some(Duration::from_secs(10)));
+        match wire::read_msg(&mut conn).unwrap() {
+            WireMsg::HelloV2 { worker_id: 0, overlap: true, .. } => {}
+            other => panic!("unexpected hello: {other:?}"),
+        }
+        let init = WireMsg::Init(InitMsg {
+            kind: UnitKind::Shampoo.code(),
+            rank: 0,
+            beta2: 0.999,
+            eps: 1e-6,
+            one_sided: false,
+            graft: GraftType::Rmsprop.code(),
+            threads: 1,
+            blocks: vec![BlockSpec { index: 0, rows: 3, cols: 3 }],
+        });
+        wire::write_msg(&mut conn, &init).unwrap();
+        assert_eq!(wire::read_msg(&mut conn).unwrap(), WireMsg::Ok);
+        let mut rng = Pcg64::new(517);
+        let step = WireMsg::Step(StepMsg {
+            t: 1,
+            scale: 1.0,
+            preconditioning: true,
+            stat_due: true,
+            lr: 0.05,
+            beta1: 0.9,
+            weight_decay: 0.0,
+            entries: vec![StepEntry {
+                index: 0,
+                refresh_due: true,
+                param: Matrix::zeros(3, 3),
+                grad: Matrix::randn(3, 3, &mut rng),
+            }],
+        });
+        wire::write_msg(&mut conn, &step).unwrap(); // arrives twice
+        let r1 = wire::read_msg(&mut conn).unwrap();
+        let r2 = wire::read_msg(&mut conn).unwrap();
+        assert!(matches!(r1, WireMsg::StepOk(_)), "got {r1:?}");
+        assert_eq!(
+            wire::encode_frame(&r1).unwrap(),
+            wire::encode_frame(&r2).unwrap(),
+            "duplicate step must be served from the reply cache"
+        );
+        wire::write_msg(&mut conn, &WireMsg::Shutdown).unwrap();
+        assert_eq!(wire::read_msg(&mut conn).unwrap(), WireMsg::Ok);
+        drop(conn);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn in_proc_executor_matches_local_executor_bitwise() {
+        // The full driver ↔ worker protocol over the in-memory
+        // transport (no faults): bitwise identity with the local
+        // executor, including the second-in-flight RefreshAhead slot.
+        let shapes = [(6usize, 6usize)];
+        let blocks = partition(&shapes, 3);
+        let base = ShampooConfig {
+            lr: 0.05,
+            start_preconditioning_step: 2,
+            graft: GraftType::Rmsprop,
+            ..Default::default()
+        };
+        let mut local = crate::optim::LocalExecutor::new(&blocks, UnitKind::Shampoo, &base, 1);
+        let transports: Vec<_> =
+            (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
+        let mut exec = ShardExecutor::launch_in_proc(
+            &blocks,
+            UnitKind::Shampoo,
+            &base,
+            1,
+            &transports,
+            PROTO_VERSION,
+        )
+        .expect("launch in-proc executor");
+        assert!(exec.overlap_capable());
+        assert_eq!(exec.label(), "shards=2/in-proc");
+        let mut p1 = vec![Matrix::zeros(6, 6)];
+        let mut p2 = p1.clone();
+        let mut rng = Pcg64::new(516);
+        for t in 1..=6usize {
+            let grads = vec![Matrix::randn(6, 6, &mut rng)];
+            let ctxs: Vec<StepCtx> = (0..blocks.len())
+                .map(|i| StepCtx {
+                    t,
+                    scale: 1.0,
+                    preconditioning: t >= 2,
+                    refresh_due: (t + i) % 2 == 0,
+                    lr: 0.05,
+                    beta1: 0.9,
+                    weight_decay: 1e-3,
+                    stat_due: true,
+                    graft: GraftType::Rmsprop,
+                })
+                .collect();
+            local.step_blocks(&blocks, &mut p1, &grads, &ctxs).unwrap();
+            exec.step_blocks(&blocks, &mut p2, &grads, &ctxs).expect("in-proc step");
+            assert_eq!(p1[0].max_diff(&p2[0]), 0.0, "diverged at step {t}");
+        }
+    }
+
+    #[test]
+    fn legacy_proto_worker_reports_no_overlap_capability() {
+        let shapes = [(4usize, 4usize)];
+        let blocks = partition(&shapes, 2);
+        let base = ShampooConfig::default();
+        let transports: Vec<_> =
+            (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
+        let mut exec =
+            ShardExecutor::launch_in_proc(&blocks, UnitKind::Shampoo, &base, 1, &transports, 1)
+                .expect("launch v1 in-proc executor");
+        assert!(!exec.overlap_capable(), "v1 workers must not report overlap capability");
+        // And begin_refresh_ahead declines instead of wedging the wire.
+        let declined = exec.begin_refresh_ahead(RefreshAheadPlan {
+            due: vec![true; blocks.len()],
+            all: false,
+            t_next: 2,
+        });
+        assert!(!declined);
+        assert!(exec.finish_refresh_ahead().unwrap().is_none());
     }
 
     #[test]

@@ -14,15 +14,41 @@
 //! |-------------------|---------------------|
 //! | [`WireMsg::Init`] | [`WireMsg::Ok`]     |
 //! | [`WireMsg::Step`] | [`WireMsg::StepOk`] |
+//! | [`WireMsg::RefreshAhead`] | [`WireMsg::RefreshAheadOk`] |
 //! | [`WireMsg::MemStats`] | [`WireMsg::MemStatsOk`] |
 //! | [`WireMsg::Shutdown`] | [`WireMsg::Ok`], then exits |
 //!
-//! plus [`WireMsg::Hello`] (worker → driver, once per connection) and
-//! [`WireMsg::Error`] (worker → driver, in place of any reply).
+//! plus the handshake ([`WireMsg::Hello`] at protocol v1,
+//! [`WireMsg::HelloV2`] from v2 — worker → driver, once per connection)
+//! and [`WireMsg::Error`] (worker → driver, in place of any reply).
+//!
+//! `RefreshAhead` is the only request the driver parks: it is sent at the
+//! end of step `t` and its reply is not read until the top of step
+//! `t + 1`, so the worker's eigendecompositions overlap the trainer's
+//! gradient computation (a second in-flight request per shard). Workers
+//! that greet with the v1 `Hello` never receive it — the driver degrades
+//! that shard to synchronous refresh.
 
 use crate::tensor::Matrix;
 use anyhow::{bail, Context};
 use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Current wire protocol version, carried in [`WireMsg::HelloV2`].
+/// Version 1 (the plain [`WireMsg::Hello`] greeting) predates the
+/// `RefreshAhead` messages; drivers treat v1 workers as refresh-overlap
+/// incapable and keep their refreshes synchronous.
+pub const PROTO_VERSION: u32 = 2;
+
+/// A connected driver↔worker byte stream: any transport the shard
+/// channel can speak — TCP, Unix sockets, or the in-memory
+/// fault-injection harness ([`super::fault`]).
+pub trait Conn: Read + Write + Send {
+    /// Bound blocking reads (`None` = block forever). Transports that
+    /// cannot honor a bound may clamp it; the driver treats a timed-out
+    /// read as a transport failure (reconnect + replay).
+    fn set_timeout(&mut self, dur: Option<Duration>) -> std::io::Result<()>;
+}
 
 /// Upper bound on a single frame (guards against corrupt length
 /// prefixes allocating unbounded memory).
@@ -87,10 +113,42 @@ pub struct StepOkMsg {
     pub entries: Vec<(u32, Matrix)>,
 }
 
+/// Driver → worker: recompute inverse roots *now*, ahead of the step
+/// that will use them. Sent at the end of step `t_next - 1`; the reply
+/// is read just before `t_next`'s [`WireMsg::Step`], so the work hides
+/// behind the trainer's gradient computation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RefreshAheadMsg {
+    /// The step whose refresh slots are being prefetched (idempotency
+    /// key for replay after a reconnect).
+    pub t_next: u64,
+    /// Visit every owned block, not just the due subset (first
+    /// preconditioning step, where not-yet-ready blocks refresh
+    /// regardless of their slot).
+    pub all: bool,
+    /// Global indices of the owned blocks whose refresh slot fires at
+    /// `t_next`.
+    pub due: Vec<u32>,
+}
+
+/// Worker → driver: which blocks were refreshed ahead, plus the
+/// eigendecomposition count (refresh accounting).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RefreshAheadOkMsg {
+    /// Echo of the request's `t_next`.
+    pub t_next: u64,
+    /// Eigendecompositions that ran ahead.
+    pub count: u32,
+    /// Global indices of blocks whose roots are now fresh — the step at
+    /// `t_next` must not refresh them again.
+    pub refreshed: Vec<u32>,
+}
+
 /// Every message that can cross the shard wire.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireMsg {
-    /// Worker → driver greeting carrying the identity it was spawned with.
+    /// Worker → driver greeting carrying the identity it was spawned
+    /// with (protocol v1 — no capability report).
     Hello { worker_id: u32 },
     Init(InitMsg),
     Step(StepMsg),
@@ -100,6 +158,13 @@ pub enum WireMsg {
     Shutdown,
     Ok,
     Error { message: String },
+    /// Worker → driver greeting from protocol v2 on: identity plus an
+    /// explicit capability report. `overlap` means the worker accepts
+    /// [`WireMsg::RefreshAhead`]; a false report (or a v1 `Hello`)
+    /// degrades that shard to synchronous refresh.
+    HelloV2 { worker_id: u32, proto: u32, overlap: bool },
+    RefreshAhead(RefreshAheadMsg),
+    RefreshAheadOk(RefreshAheadOkMsg),
 }
 
 const TAG_HELLO: u8 = 1;
@@ -111,6 +176,9 @@ const TAG_MEM_STATS_OK: u8 = 6;
 const TAG_SHUTDOWN: u8 = 7;
 const TAG_OK: u8 = 8;
 const TAG_ERROR: u8 = 9;
+const TAG_HELLO_V2: u8 = 10;
+const TAG_REFRESH_AHEAD: u8 = 11;
+const TAG_REFRESH_AHEAD_OK: u8 = 12;
 
 // ---------------------------------------------------------------------------
 // Encoding.
@@ -215,6 +283,30 @@ pub fn encode_frame(msg: &WireMsg) -> anyhow::Result<Vec<u8>> {
         WireMsg::Error { message } => {
             e.u8(TAG_ERROR);
             e.string(message);
+        }
+        WireMsg::HelloV2 { worker_id, proto, overlap } => {
+            e.u8(TAG_HELLO_V2);
+            e.u32(*worker_id);
+            e.u32(*proto);
+            e.boolean(*overlap);
+        }
+        WireMsg::RefreshAhead(ra) => {
+            e.u8(TAG_REFRESH_AHEAD);
+            e.u64(ra.t_next);
+            e.boolean(ra.all);
+            e.u32(ra.due.len() as u32);
+            for &i in &ra.due {
+                e.u32(i);
+            }
+        }
+        WireMsg::RefreshAheadOk(ok) => {
+            e.u8(TAG_REFRESH_AHEAD_OK);
+            e.u64(ok.t_next);
+            e.u32(ok.count);
+            e.u32(ok.refreshed.len() as u32);
+            for &i in &ok.refreshed {
+                e.u32(i);
+            }
         }
     }
     if e.buf.len() > MAX_FRAME_BYTES {
@@ -371,6 +463,31 @@ pub fn decode_payload(payload: &[u8]) -> anyhow::Result<WireMsg> {
         TAG_SHUTDOWN => WireMsg::Shutdown,
         TAG_OK => WireMsg::Ok,
         TAG_ERROR => WireMsg::Error { message: d.string()? },
+        TAG_HELLO_V2 => WireMsg::HelloV2 {
+            worker_id: d.u32()?,
+            proto: d.u32()?,
+            overlap: d.boolean()?,
+        },
+        TAG_REFRESH_AHEAD => {
+            let t_next = d.u64()?;
+            let all = d.boolean()?;
+            let n = d.u32()? as usize;
+            let mut due = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                due.push(d.u32()?);
+            }
+            WireMsg::RefreshAhead(RefreshAheadMsg { t_next, all, due })
+        }
+        TAG_REFRESH_AHEAD_OK => {
+            let t_next = d.u64()?;
+            let count = d.u32()?;
+            let n = d.u32()? as usize;
+            let mut refreshed = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                refreshed.push(d.u32()?);
+            }
+            WireMsg::RefreshAheadOk(RefreshAheadOkMsg { t_next, count, refreshed })
+        }
         other => bail!("shard wire: unknown message tag {other}"),
     };
     d.done()?;
@@ -396,8 +513,18 @@ pub fn read_msg_opt<R: Read>(r: &mut R) -> anyhow::Result<Option<WireMsg>> {
     if len > MAX_FRAME_BYTES {
         bail!("shard wire: frame length {len} exceeds cap {MAX_FRAME_BYTES}");
     }
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload).context("shard wire: read frame payload")?;
+    // Grow the payload buffer as bytes actually arrive instead of
+    // trusting the prefix with one up-front `vec![0; len]`: four corrupt
+    // bytes under the cap would otherwise trigger a transient ~1 GB
+    // allocation before the read even fails.
+    let mut payload = Vec::with_capacity(len.min(1 << 16));
+    let got = Read::by_ref(r)
+        .take(len as u64)
+        .read_to_end(&mut payload)
+        .context("shard wire: read frame payload")?;
+    if got < len {
+        bail!("shard wire: connection closed mid-payload ({got}/{len} bytes)");
+    }
     decode_payload(&payload).map(Some)
 }
 
@@ -427,6 +554,24 @@ mod tests {
     fn all_messages_roundtrip() {
         let mut rng = Pcg64::new(77);
         roundtrip(WireMsg::Hello { worker_id: 3 });
+        roundtrip(WireMsg::HelloV2 { worker_id: 5, proto: PROTO_VERSION, overlap: true });
+        roundtrip(WireMsg::HelloV2 { worker_id: 0, proto: 7, overlap: false });
+        roundtrip(WireMsg::RefreshAhead(RefreshAheadMsg {
+            t_next: 9,
+            all: true,
+            due: vec![0, 3, u32::MAX],
+        }));
+        roundtrip(WireMsg::RefreshAhead(RefreshAheadMsg { t_next: 0, all: false, due: vec![] }));
+        roundtrip(WireMsg::RefreshAheadOk(RefreshAheadOkMsg {
+            t_next: 9,
+            count: 4,
+            refreshed: vec![1, 2],
+        }));
+        roundtrip(WireMsg::RefreshAheadOk(RefreshAheadOkMsg {
+            t_next: u64::MAX,
+            count: 0,
+            refreshed: vec![],
+        }));
         roundtrip(WireMsg::Init(InitMsg {
             kind: 1,
             rank: 16,
@@ -495,6 +640,213 @@ mod tests {
         assert!(read_msg_opt(&mut &frame[..2]).is_err());
         // Cut inside the payload.
         assert!(read_msg_opt(&mut &frame[..frame.len() - 1]).is_err());
+    }
+
+    // -----------------------------------------------------------------
+    // Property-style coverage: every message kind, adversarial payloads.
+    // -----------------------------------------------------------------
+
+    /// f64 bit patterns decimal formatting would mangle (and equality
+    /// would lie about): NaNs with payloads, ±0, subnormals, infinities.
+    fn adversarial_f64(rng: &mut Pcg64) -> f64 {
+        match rng.below(8) {
+            0 => f64::from_bits(0x7ff8_0000_dead_beef), // quiet NaN w/ payload
+            1 => f64::from_bits(0xfff0_0000_0000_0001), // signaling-ish NaN
+            2 => -0.0,
+            3 => f64::MIN_POSITIVE / 4.0, // subnormal
+            4 => f64::INFINITY,
+            5 => f64::NEG_INFINITY,
+            6 => f64::from_bits(rng.next_u64()), // arbitrary bits
+            _ => rng.gaussian(),
+        }
+    }
+
+    fn adversarial_matrix(rng: &mut Pcg64) -> Matrix {
+        let rows = 1 + rng.below(4);
+        let cols = 1 + rng.below(4);
+        let data = (0..rows * cols).map(|_| adversarial_f64(rng)).collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    fn arbitrary_msg(rng: &mut Pcg64) -> WireMsg {
+        match rng.below(12) {
+            0 => WireMsg::Hello { worker_id: rng.next_u64() as u32 },
+            1 => WireMsg::HelloV2 {
+                worker_id: rng.next_u64() as u32,
+                proto: rng.next_u64() as u32,
+                overlap: rng.bernoulli(0.5),
+            },
+            2 => {
+                // Block lists from empty up to a large (max-len-ish) run.
+                let n = [0, 1, 7, 4096][rng.below(4)];
+                let blocks = (0..n)
+                    .map(|i| BlockSpec {
+                        index: i as u32,
+                        rows: 1 + rng.below(64) as u32,
+                        cols: 1 + rng.below(64) as u32,
+                    })
+                    .collect();
+                WireMsg::Init(InitMsg {
+                    kind: rng.below(3) as u8,
+                    rank: rng.below(512) as u32,
+                    beta2: adversarial_f64(rng),
+                    eps: adversarial_f64(rng),
+                    one_sided: rng.bernoulli(0.5),
+                    graft: rng.below(6) as u8,
+                    threads: rng.below(64) as u32,
+                    blocks,
+                })
+            }
+            3 => {
+                let n = rng.below(4);
+                let entries = (0..n)
+                    .map(|i| StepEntry {
+                        index: i as u32,
+                        refresh_due: rng.bernoulli(0.5),
+                        param: adversarial_matrix(rng),
+                        grad: adversarial_matrix(rng),
+                    })
+                    .collect();
+                WireMsg::Step(StepMsg {
+                    t: rng.next_u64(),
+                    scale: adversarial_f64(rng),
+                    preconditioning: rng.bernoulli(0.5),
+                    stat_due: rng.bernoulli(0.5),
+                    lr: adversarial_f64(rng),
+                    beta1: adversarial_f64(rng),
+                    weight_decay: adversarial_f64(rng),
+                    entries,
+                })
+            }
+            4 => {
+                let n = rng.below(4);
+                let entries =
+                    (0..n).map(|i| (i as u32, adversarial_matrix(rng))).collect();
+                WireMsg::StepOk(StepOkMsg {
+                    t: rng.next_u64(),
+                    refreshes: rng.next_u64() as u32,
+                    entries,
+                })
+            }
+            5 => WireMsg::MemStats,
+            6 => WireMsg::MemStatsOk {
+                mem_bytes: rng.next_u64(),
+                second_moment_bytes: rng.next_u64(),
+            },
+            7 => WireMsg::Shutdown,
+            8 => WireMsg::Ok,
+            9 => {
+                let len = [0, 1, 200][rng.below(3)];
+                let message: String =
+                    (0..len).map(|_| char::from(b'a' + rng.below(26) as u8)).collect();
+                WireMsg::Error { message }
+            }
+            10 => {
+                let n = [0, 3, 1000][rng.below(3)];
+                WireMsg::RefreshAhead(RefreshAheadMsg {
+                    t_next: rng.next_u64(),
+                    all: rng.bernoulli(0.5),
+                    due: (0..n).map(|_| rng.next_u64() as u32).collect(),
+                })
+            }
+            _ => {
+                let n = rng.below(16);
+                WireMsg::RefreshAheadOk(RefreshAheadOkMsg {
+                    t_next: rng.next_u64(),
+                    count: rng.next_u64() as u32,
+                    refreshed: (0..n).map(|_| rng.next_u64() as u32).collect(),
+                })
+            }
+        }
+    }
+
+    #[test]
+    fn every_message_kind_roundtrips_over_adversarial_payloads() {
+        // encode → decode → re-encode identity, compared at the byte
+        // level: `Matrix` equality uses f64 `==`, which would falsely
+        // reject NaN payloads that in fact round-tripped bit-exactly.
+        crate::util::proptest::for_all_msg(
+            0x5117e,
+            300,
+            arbitrary_msg,
+            |msg| {
+                let frame = encode_frame(msg).map_err(|e| format!("encode: {e}"))?;
+                let decoded = decode_payload(&frame[4..]).map_err(|e| format!("decode: {e}"))?;
+                let reframe = encode_frame(&decoded).map_err(|e| format!("re-encode: {e}"))?;
+                if frame == reframe {
+                    Ok(())
+                } else {
+                    Err("re-encoded frame differs from original".to_string())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn every_truncation_of_every_kind_is_rejected() {
+        // For one representative frame of each message kind, every
+        // strict prefix must fail to read (no silent partial decode).
+        let mut rng = Pcg64::new(0x7c);
+        let mut kinds_seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let msg = arbitrary_msg(&mut rng);
+            let tag = std::mem::discriminant(&msg);
+            if !kinds_seen.insert(tag) {
+                continue;
+            }
+            let frame = encode_frame(&msg).unwrap();
+            for cut in 0..frame.len() {
+                assert!(
+                    read_msg(&mut &frame[..cut]).is_err(),
+                    "prefix of {cut}/{} bytes decoded for {msg:?}",
+                    frame.len()
+                );
+            }
+        }
+        assert!(kinds_seen.len() >= 12, "generator missed kinds: {}", kinds_seen.len());
+    }
+
+    #[test]
+    fn bad_lengths_are_rejected_without_allocation_blowup() {
+        // A list-count field claiming u32::MAX entries in a tiny frame
+        // must fail on the missing bytes, not try to allocate for it.
+        let mut payload = vec![TAG_REFRESH_AHEAD];
+        payload.extend_from_slice(&7u64.to_le_bytes()); // t_next
+        payload.push(0); // all = false
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // due count lie
+        assert!(decode_payload(&payload).is_err());
+        // Same lie on a matrix-bearing message.
+        let mut payload = vec![TAG_STEP_OK];
+        payload.extend_from_slice(&1u64.to_le_bytes()); // t
+        payload.extend_from_slice(&0u32.to_le_bytes()); // refreshes
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // entry count lie
+        assert!(decode_payload(&payload).is_err());
+        // Implausible matrix shapes are rejected before the data reads.
+        let mut payload = vec![TAG_STEP_OK];
+        payload.extend_from_slice(&1u64.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.extend_from_slice(&1u32.to_le_bytes()); // one entry
+        payload.extend_from_slice(&0u32.to_le_bytes()); // index
+        payload.extend_from_slice(&((1u32 << 21).to_le_bytes())); // rows too big
+        payload.extend_from_slice(&1u32.to_le_bytes()); // cols
+        assert!(decode_payload(&payload).is_err());
+        // A frame length prefix longer than the stream is a read error.
+        let frame = encode_frame(&WireMsg::Ok).unwrap();
+        let mut lying = frame.clone();
+        lying[0] = 200; // declares 200 payload bytes; only 1 follows
+        assert!(read_msg_opt(&mut &lying[..]).is_err());
+        // A corrupt prefix claiming a near-cap (512 MB) payload fails on
+        // the missing bytes — the reader grows its buffer with arriving
+        // data rather than allocating the full declared length up front.
+        let mut huge = (1u32 << 29).to_le_bytes().to_vec();
+        huge.extend_from_slice(&[0u8; 16]);
+        assert!(read_msg_opt(&mut &huge[..]).is_err());
+        // Bad bool byte inside an otherwise valid frame.
+        let mut payload = vec![TAG_REFRESH_AHEAD];
+        payload.extend_from_slice(&7u64.to_le_bytes());
+        payload.push(2); // bool must be 0 or 1
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        assert!(decode_payload(&payload).is_err());
     }
 
     #[test]

@@ -31,9 +31,11 @@ USAGE:
                 [--refresh-interval K] [--stagger-refresh BOOL]
                 [--overlap-refresh BOOL] [--pool-threads N]
                 [--shards N] [--shard-transport tcp|unix]
+                [--shard-proto V]
   sketchy bench-gate [--baseline F] [--current F] [--tolerance R]
   sketchy shard-worker --worker-id N [--transport tcp|unix]
-                       [--socket-dir DIR]          (internal; spawned
+                       [--socket-dir DIR] [--proto-version V]
+                                                   (internal; spawned
                                                     by --shards runs)
 
 The engine-* optimizers run the parallel blocked preconditioner engine:
@@ -46,9 +48,14 @@ due at step t+1 run in the background while the trainer computes step
 t+1's gradients — bitwise identical to the synchronous schedule. With
 --shards N the blocks are partitioned across N worker processes (same
 binary, localhost TCP or Unix sockets) — bitwise identical to the
-in-process engine (overlap is in-process only and is ignored by
-sharded runs). bench-gate compares a fresh engine bench record against
-the committed baseline and exits nonzero on a >tolerance regression.
+in-process engine. Overlap composes with sharding: the t+1 due-set
+ships to each worker as a second in-flight RefreshAhead RPC so remote
+eigendecompositions also hide behind gradient computation; workers
+pinned to the legacy wire protocol (--shard-proto 1) report no such
+capability at handshake and the run degrades to synchronous refresh
+with a logged notice. bench-gate compares a fresh engine bench record
+against the committed baseline and exits nonzero on a >tolerance
+regression.
 
 Run `sketchy list` for the experiment catalogue.";
 
@@ -252,26 +259,26 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         "shampoo" => Box::new(Shampoo::new(&shapes, base)),
         "s-shampoo" => Box::new(SShampoo::new(&shapes, SShampooConfig { base, rank })),
         name => {
+            // Overlap composes with sharding: the engine resolves the
+            // knob against the executor's capability report (workers on
+            // the legacy protocol degrade to synchronous refresh with a
+            // logged notice).
             let engine = if shard_cfg.enabled() {
                 let launch = ShardLaunch::current_exe(&shard_cfg)?;
                 sharded_engine_optimizer(name, &shapes, base, rank, ecfg, &launch)?
             } else {
                 engine_optimizer(name, &shapes, base, rank, ecfg)
             };
-            if ecfg.overlap && shard_cfg.enabled() {
-                eprintln!(
-                    "note: --overlap-refresh is in-process only; sharded runs refresh \
-                     synchronously (numerics are identical either way)"
-                );
-            }
             match engine {
                 Some(engine) => {
                     println!(
                         "engine: {} blocks, refresh every {} steps (stagger={}, overlap={}), {}",
                         engine.blocks().len(),
-                        ecfg.refresh_interval,
-                        ecfg.stagger,
-                        ecfg.overlap,
+                        engine.ecfg.refresh_interval,
+                        engine.ecfg.stagger,
+                        // Post-resolution: reports what actually runs
+                        // (off when a worker lacks the capability).
+                        engine.ecfg.overlap,
                         if shard_cfg.enabled() {
                             // The executor caps shards at the block
                             // count; report what actually launched.

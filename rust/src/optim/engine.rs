@@ -277,11 +277,21 @@ pub trait BlockExecutor: Send {
     /// hold their sketches out-of-process and visit nothing.
     fn for_each_sketch(&mut self, _f: &mut dyn FnMut(&FdSketch)) {}
 
+    /// Whether this executor can run the RefreshAhead stage at all —
+    /// reported once, at construction time, so the engine can resolve
+    /// the `--overlap-refresh` knob explicitly (with a logged notice)
+    /// instead of silently latching it off after a declined first step.
+    /// The sharded executor derives this from the per-worker capability
+    /// reports in the version handshake.
+    fn overlap_capable(&self) -> bool {
+        false
+    }
+
     /// Start the RefreshAhead stage: recompute inverse roots *now*, in
     /// the background, for every block whose refresh slot fires at the
     /// next step (`plan.due`) or whose roots are still missing. Returns
-    /// `false` if this executor cannot overlap (the default — the engine
-    /// then refreshes synchronously, which is always correct).
+    /// `false` if nothing was scheduled (the engine then refreshes
+    /// synchronously, which is always correct).
     fn begin_refresh_ahead(&mut self, _plan: RefreshAheadPlan) -> bool {
         false
     }
@@ -310,6 +320,10 @@ pub struct RefreshAheadPlan {
     /// preconditioning step, where blocks without roots refresh
     /// regardless of their slot.
     pub all: bool,
+    /// The step being prefetched (`t + 1`). Remote executors ship it as
+    /// the idempotent-replay key for an overlap request that races a
+    /// reconnect; the local executor ignores it.
+    pub t_next: usize,
 }
 
 /// Result of a joined RefreshAhead job.
@@ -329,7 +343,7 @@ pub struct RefreshAheadDone {
 /// buys is the paths that legitimately run *after* that failure:
 /// diagnostics (memory accounting, sketch visits) and error reporting
 /// must not die on a bare `PoisonError`.
-fn lock_state(m: &Mutex<BlockState>) -> std::sync::MutexGuard<'_, BlockState> {
+pub(crate) fn lock_state(m: &Mutex<BlockState>) -> std::sync::MutexGuard<'_, BlockState> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
@@ -434,8 +448,15 @@ impl BlockExecutor for LocalExecutor {
         grads: &[Matrix],
         ctxs: &[StepCtx],
     ) -> anyhow::Result<usize> {
-        // The engine joins any RefreshAhead job before stepping.
-        debug_assert!(self.pending.is_none(), "step with refresh-ahead in flight");
+        // Join-and-discard a RefreshAhead the caller never finished (the
+        // engine always joins first; direct executor drivers may not) —
+        // the same cancel path as the sharded executor. Discarding is
+        // bitwise-safe: the step's own refresh slot recomputes roots
+        // from current statistics. Letting the background job race
+        // `drive_all` on the same block states would not be.
+        if self.pending.is_some() {
+            self.finish_refresh_ahead()?;
+        }
         // Gather: copy each block's parameter/gradient window into its
         // state scratch (allocation-free) so the parallel phase touches
         // fully disjoint data.
@@ -469,6 +490,10 @@ impl BlockExecutor for LocalExecutor {
                 f(fd);
             }
         }
+    }
+
+    fn overlap_capable(&self) -> bool {
+        true
     }
 
     fn begin_refresh_ahead(&mut self, plan: RefreshAheadPlan) -> bool {
@@ -594,6 +619,24 @@ fn plan(
     (base, blocks)
 }
 
+/// Resolve the `--overlap-refresh` knob against the executor's
+/// capability report, **once, at construction**: an executor that cannot
+/// run the RefreshAhead stage (e.g. a shard fleet containing a
+/// protocol-v1 worker) gets the knob turned off with a logged one-time
+/// notice — replacing the old behavior of silently latching overlap off
+/// after the first declined step, which left `name()` claiming
+/// "+overlap" for a run that never overlapped anything.
+fn resolve_overlap(ecfg: &mut EngineConfig, executor: &dyn BlockExecutor) {
+    if ecfg.overlap && !executor.overlap_capable() {
+        eprintln!(
+            "note: --overlap-refresh requested, but executor '{}' reports no RefreshAhead \
+             capability; refreshes run synchronously (numerics are identical either way)",
+            executor.label()
+        );
+        ecfg.overlap = false;
+    }
+}
+
 impl PrecondEngine {
     pub fn new(
         shapes: &[(usize, usize)],
@@ -601,20 +644,19 @@ impl PrecondEngine {
         base: ShampooConfig,
         ecfg: EngineConfig,
     ) -> Self {
-        let (base, blocks) = plan(shapes, kind, base, &ecfg);
-        // Warm the persistent pool up front if asked to, so the first
-        // step pays no thread-spawn latency (never changes results).
-        if ecfg.pool_threads > 0 {
-            pool::global().ensure_workers(ecfg.pool_threads);
-        }
-        let executor = Box::new(LocalExecutor::new(&blocks, kind, &base, ecfg.threads));
-        PrecondEngine { base, ecfg, kind, blocks, executor, t: 0, refreshes: 0, poisoned: None }
+        PrecondEngine::with_executor(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
+            Ok(Box::new(LocalExecutor::new(blocks, kind, base, threads)))
+        })
+        .expect("local executor construction is infallible")
     }
 
     /// Cross-process engine: blocks are sharded across `sketchy
     /// shard-worker` processes described by `launch`; statistics are
     /// shipped, driven and scattered over the wire protocol. Numerics
-    /// are bitwise identical to the in-process engine.
+    /// are bitwise identical to the in-process engine. With
+    /// `ecfg.overlap` the t+1 due-set ships to the workers as a second
+    /// in-flight `RefreshAhead` RPC per shard (degrading to synchronous
+    /// refresh when any worker lacks the capability).
     pub fn sharded(
         shapes: &[(usize, usize)],
         kind: UnitKind,
@@ -622,18 +664,36 @@ impl PrecondEngine {
         ecfg: EngineConfig,
         launch: &ShardLaunch,
     ) -> anyhow::Result<Self> {
-        let (base, blocks) = plan(shapes, kind, base, &ecfg);
-        let executor = ShardExecutor::launch(launch, &blocks, kind, &base, ecfg.threads)?;
-        Ok(PrecondEngine {
-            base,
-            ecfg,
-            kind,
-            blocks,
-            executor: Box::new(executor),
-            t: 0,
-            refreshes: 0,
-            poisoned: None,
+        PrecondEngine::with_executor(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
+            Ok(Box::new(ShardExecutor::launch(launch, blocks, kind, base, threads)?))
         })
+    }
+
+    /// Engine over an executor built by the caller: `build` receives the
+    /// planned block partition, the (normalized) unit config, and the
+    /// thread knob, and returns any [`BlockExecutor`]. This is how tests
+    /// and benches mount the in-memory fault-injected shard executor
+    /// ([`ShardExecutor::launch_in_proc`]) under a full engine.
+    pub fn with_executor(
+        shapes: &[(usize, usize)],
+        kind: UnitKind,
+        base: ShampooConfig,
+        ecfg: EngineConfig,
+        build: impl FnOnce(
+            &[Block],
+            UnitKind,
+            &ShampooConfig,
+            usize,
+        ) -> anyhow::Result<Box<dyn BlockExecutor>>,
+    ) -> anyhow::Result<Self> {
+        let (base, blocks) = plan(shapes, kind, base, &ecfg);
+        if ecfg.pool_threads > 0 {
+            pool::global().ensure_workers(ecfg.pool_threads);
+        }
+        let executor = build(&blocks, kind, &base, ecfg.threads)?;
+        let mut ecfg = ecfg;
+        resolve_overlap(&mut ecfg, executor.as_ref());
+        Ok(PrecondEngine { base, ecfg, kind, blocks, executor, t: 0, refreshes: 0, poisoned: None })
     }
 
     /// Exact-Kronecker (Shampoo) engine.
@@ -704,14 +764,12 @@ impl PrecondEngine {
         if !all && !due.iter().any(|&d| d) {
             return;
         }
-        if !self.executor.begin_refresh_ahead(RefreshAheadPlan { due, all }) {
-            // The executor cannot overlap (e.g. sharded): latch the knob
-            // off so we stop re-planning a declined job every step and
-            // `name()` reports what actually runs. (A local executor
-            // only declines on an empty plan, which the guards above
-            // rule out for engines with blocks.)
-            self.ecfg.overlap = false;
-        }
+        // A `false` return means nothing was scheduled this step (e.g. a
+        // shard link refused the send); the step then refreshes
+        // synchronously, which is always bitwise-correct. Capability is
+        // resolved once at construction (`resolve_overlap`), so there is
+        // no silent knob-latching here.
+        let _ = self.executor.begin_refresh_ahead(RefreshAheadPlan { due, all, t_next });
     }
 
     /// Fallible step — the sharded executor surfaces worker/transport
@@ -969,6 +1027,70 @@ mod tests {
             assert_eq!(UnitKind::from_code(kind.code(), kind.rank()), Some(kind));
         }
         assert_eq!(UnitKind::from_code(77, 0), None);
+    }
+
+    #[test]
+    fn overlap_knob_resolves_against_executor_capability_at_construction() {
+        // Satellite bugfix pin: an executor that reports no RefreshAhead
+        // capability must get the overlap knob turned off *at
+        // construction* (with the logged notice), not silently latched
+        // off after a declined first step — and `name()` must reflect
+        // what actually runs.
+        struct NoOverlap(LocalExecutor);
+        impl BlockExecutor for NoOverlap {
+            fn step_blocks(
+                &mut self,
+                blocks: &[Block],
+                params: &mut [Matrix],
+                grads: &[Matrix],
+                ctxs: &[StepCtx],
+            ) -> anyhow::Result<usize> {
+                self.0.step_blocks(blocks, params, grads, ctxs)
+            }
+            fn mem_bytes(&self) -> usize {
+                self.0.mem_bytes()
+            }
+            fn second_moment_bytes(&self) -> usize {
+                self.0.second_moment_bytes()
+            }
+            fn label(&self) -> String {
+                "no-overlap".into()
+            }
+            // overlap_capable stays the default `false`; begin/finish
+            // stay the decline defaults.
+        }
+        let shapes = [(6usize, 6usize)];
+        let ecfg = EngineConfig { block_size: 3, overlap: true, ..Default::default() };
+        let mut incapable = PrecondEngine::with_executor(
+            &shapes,
+            UnitKind::Shampoo,
+            base_cfg(),
+            ecfg,
+            |blocks, kind, base, threads| {
+                Ok(Box::new(NoOverlap(LocalExecutor::new(blocks, kind, base, threads))))
+            },
+        )
+        .unwrap();
+        assert!(!incapable.ecfg.overlap, "knob must resolve off for incapable executors");
+        assert!(!incapable.name().contains("overlap"), "name: {}", incapable.name());
+        // A capable (local) executor keeps the knob on.
+        let capable = PrecondEngine::shampoo(&shapes, base_cfg(), ecfg);
+        assert!(capable.ecfg.overlap);
+        assert!(capable.name().contains("+overlap"), "name: {}", capable.name());
+        // And the incapable engine still steps correctly (synchronous
+        // refreshes), bitwise equal to a plain sync engine.
+        let sync_ecfg = EngineConfig { block_size: 3, overlap: false, ..Default::default() };
+        let mut sync = PrecondEngine::shampoo(&shapes, base_cfg(), sync_ecfg);
+        let mut p1 = vec![Matrix::zeros(6, 6)];
+        let mut p2 = p1.clone();
+        let mut rng = Pcg64::new(218);
+        for _ in 0..8 {
+            let grads = vec![Matrix::randn(6, 6, &mut rng)];
+            sync.step(&mut p1, &grads);
+            incapable.step(&mut p2, &grads);
+            assert_eq!(p1[0].max_diff(&p2[0]), 0.0);
+        }
+        assert_eq!(sync.refreshes(), incapable.refreshes());
     }
 
     #[test]

@@ -154,6 +154,18 @@ mod tests {
     }
 
     #[test]
+    fn shard_proto_flags_parse() {
+        // The version-handshake knobs: the driver's --shard-proto and
+        // the worker's --proto-version (passed through on spawn).
+        let a = parse(&["train", "--shards", "2", "--shard-proto", "1"]);
+        assert_eq!(a.get_usize("shard-proto", 2), 1);
+        let d = parse(&["train", "--shards", "2"]);
+        assert_eq!(d.get_usize("shard-proto", 2), 2); // defaults apply
+        let w = parse(&["shard-worker", "--worker-id", "0", "--proto-version", "1"]);
+        assert_eq!(w.get_usize("proto-version", 2), 1);
+    }
+
+    #[test]
     fn pool_and_overlap_flags_parse() {
         // The exact grammar the engine runtime knobs rely on.
         let a = parse(&["train", "--pool-threads", "6", "--overlap-refresh"]);

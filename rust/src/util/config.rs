@@ -19,8 +19,11 @@
 //!   pool; 0 = grow on demand); see
 //!   [`crate::optim::EngineConfig::resolve`]
 //! - `[shard]` — cross-process engine sharding: `count` (worker
-//!   processes, 0 = in-process) and `transport` (`"tcp"` or `"unix"`);
-//!   see [`crate::coordinator::ShardConfig::resolve`]
+//!   processes, 0 = in-process), `transport` (`"tcp"` or `"unix"`), and
+//!   `proto` (wire protocol version workers speak; pin to 1 for the
+//!   legacy pre-RefreshAhead handshake, which degrades sharded refresh
+//!   overlap to synchronous); see
+//!   [`crate::coordinator::ShardConfig::resolve`]
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -262,13 +265,15 @@ mod tests {
 
     #[test]
     fn shard_section_round_trips() {
-        let cfg = Config::parse("[shard]\ncount = 2\ntransport = \"unix\"").unwrap();
+        let cfg = Config::parse("[shard]\ncount = 2\ntransport = \"unix\"\nproto = 1").unwrap();
         assert_eq!(cfg.usize_or("shard.count", 0), 2);
         assert_eq!(cfg.str_or("shard.transport", "tcp"), "unix");
+        assert_eq!(cfg.usize_or("shard.proto", 2), 1);
         // Defaults apply when the section is absent.
         let empty = Config::default();
         assert_eq!(empty.usize_or("shard.count", 0), 0);
         assert_eq!(empty.str_or("shard.transport", "tcp"), "tcp");
+        assert_eq!(empty.usize_or("shard.proto", 2), 2);
     }
 
     #[test]

@@ -11,12 +11,16 @@
 //! (thread count 1), which takes exactly the code path `SKETCHY_THREADS
 //! = 1` takes.
 
-use sketchy::optim::{EngineConfig, GraftType, Optimizer, PrecondEngine, ShampooConfig};
+use sketchy::coordinator::shard::ShardExecutor;
+use sketchy::coordinator::wire::PROTO_VERSION;
+use sketchy::coordinator::{FaultInjectingTransport, FaultScript};
+use sketchy::optim::{EngineConfig, GraftType, Optimizer, PrecondEngine, ShampooConfig, UnitKind};
 use sketchy::runtime::WorkerPool;
 use sketchy::sketch::FdSketch;
 use sketchy::tensor::ops::{self, with_single_thread};
 use sketchy::tensor::{a_at, at_a, at_b, matmul, Matrix};
 use sketchy::util::rng::Pcg64;
+use std::sync::Arc;
 
 fn assert_bitwise_eq(a: &Matrix, b: &Matrix, what: &str) {
     assert_eq!(a.shape(), b.shape(), "{what}: shape mismatch");
@@ -224,6 +228,103 @@ fn overlap_without_stagger_matches_synchronous() {
         30,
         526,
     );
+}
+
+/// A sharded engine over the in-memory harness (fault-free), for the
+/// accounting-parity tests: same worker protocol as real processes, no
+/// sockets, so this runs inside the regular test budget.
+fn in_proc_sharded_engine(shards: usize, ecfg: EngineConfig, proto: u32) -> PrecondEngine {
+    let shapes = [(10usize, 8usize), (6, 5)];
+    let transports: Vec<Arc<FaultInjectingTransport>> =
+        (0..shards).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
+    PrecondEngine::with_executor(
+        &shapes,
+        UnitKind::Shampoo,
+        base_cfg(),
+        ecfg,
+        |blocks, kind, base, threads| {
+            Ok(Box::new(ShardExecutor::launch_in_proc(
+                blocks, kind, base, threads, &transports, proto,
+            )?))
+        },
+    )
+    .expect("launch in-proc sharded engine")
+}
+
+#[test]
+fn sharded_overlap_refresh_accounting_matches_sync_and_local() {
+    // Satellite: the pool_runtime refresh-accounting contract, extended
+    // to the sharded path — per-step parameters and total refresh
+    // counts must agree across the in-process engine, the sharded sync
+    // engine, and the sharded overlap engine (RefreshAhead counts
+    // crossing the wire must neither drop nor double).
+    let shapes = [(10usize, 8usize), (6, 5)];
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 4,
+        refresh_interval: 2,
+        stagger: true,
+        ..Default::default()
+    };
+    let mut local = PrecondEngine::shampoo(&shapes, base_cfg(), ecfg);
+    let mut shard_sync = in_proc_sharded_engine(2, ecfg, PROTO_VERSION);
+    let mut shard_over =
+        in_proc_sharded_engine(2, EngineConfig { overlap: true, ..ecfg }, PROTO_VERSION);
+    assert!(shard_over.name().contains("overlap"), "name: {}", shard_over.name());
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut p3 = p1.clone();
+    let mut rng = Pcg64::new(527);
+    for step in 0..30 {
+        let grads = random_grads(&shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        shard_over.try_step(&mut p3, &grads).expect("sharded overlap step");
+        shard_sync.try_step(&mut p2, &grads).expect("sharded sync step");
+        for ((a, b), c) in p1.iter().zip(&p2).zip(&p3) {
+            assert_eq!(a.max_diff(b), 0.0, "sharded sync diverged at step {step}");
+            assert_eq!(a.max_diff(c), 0.0, "sharded overlap diverged at step {step}");
+        }
+    }
+    assert_eq!(local.refreshes(), shard_sync.refreshes(), "sync sharded accounting");
+    assert_eq!(local.refreshes(), shard_over.refreshes(), "overlap sharded accounting");
+    assert!(local.refreshes() > 0, "test must exercise refreshes");
+}
+
+#[test]
+fn sharded_overlap_latches_off_cleanly_without_worker_capability() {
+    // Satellite: a worker fleet that reports no RefreshAhead capability
+    // (wire protocol v1) must resolve the overlap knob off at
+    // construction — visibly (no "+overlap" in the name) — and still
+    // run bitwise identically with identical refresh accounting.
+    let shapes = [(10usize, 8usize), (6, 5)];
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 4,
+        refresh_interval: 2,
+        stagger: true,
+        overlap: true,
+        ..Default::default()
+    };
+    let mut degraded = in_proc_sharded_engine(2, ecfg, 1);
+    assert!(
+        !degraded.name().contains("overlap"),
+        "overlap must latch off for v1 workers: {}",
+        degraded.name()
+    );
+    let mut local =
+        PrecondEngine::shampoo(&shapes, base_cfg(), EngineConfig { overlap: false, ..ecfg });
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(528);
+    for step in 0..12 {
+        let grads = random_grads(&shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        degraded.try_step(&mut p2, &grads).expect("degraded sharded step");
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "degraded run diverged at step {step}");
+        }
+    }
+    assert_eq!(local.refreshes(), degraded.refreshes());
 }
 
 #[test]

@@ -9,6 +9,8 @@
 //! `shard-smoke` job runs them in release mode.
 
 use sketchy::coordinator::shard::{ShardExecutor, ShardLaunch, ShardTransport};
+use sketchy::coordinator::wire::PROTO_VERSION;
+use sketchy::coordinator::{FaultAction, FaultInjectingTransport, FaultScript};
 use sketchy::optim::precond::StepCtx;
 use sketchy::optim::{
     partition, Adam, BlockExecutor, EngineConfig, GraftType, LocalExecutor, Optimizer,
@@ -17,13 +19,15 @@ use sketchy::optim::{
 use sketchy::tensor::Matrix;
 use sketchy::util::rng::Pcg64;
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn sketchy_bin() -> PathBuf {
     PathBuf::from(env!("CARGO_BIN_EXE_sketchy"))
 }
 
 fn mk_launch(shards: usize, transport: ShardTransport) -> ShardLaunch {
-    ShardLaunch { program: sketchy_bin(), shards, transport }
+    ShardLaunch { program: sketchy_bin(), shards, transport, proto: PROTO_VERSION }
 }
 
 fn base_cfg() -> ShampooConfig {
@@ -162,6 +166,326 @@ fn sharded_engine_adam_equals_fused_adam() {
     }
 }
 
+/// A config where prefetchable steps exist (`stat_interval` 2: odd
+/// steps fold no statistics), so RefreshAhead has real work to overlap.
+fn overlap_base() -> ShampooConfig {
+    ShampooConfig { stat_interval: 2, ..base_cfg() }
+}
+
+/// Step three engines — in-process sync (the reference), sharded sync,
+/// and sharded overlap — on one gradient stream; assert all three are
+/// bitwise identical after every step and agree on refresh accounting.
+fn assert_overlap_sharded_matches_sync_and_local(
+    shapes: &[(usize, usize)],
+    kind: UnitKind,
+    block_size: usize,
+    shards: usize,
+    steps: usize,
+    seed: u64,
+) {
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size,
+        refresh_interval: 3,
+        stagger: true,
+        ..Default::default()
+    };
+    let overlap_ecfg = EngineConfig { overlap: true, ..ecfg };
+    let mut local = PrecondEngine::new(shapes, kind, overlap_base(), ecfg);
+    let mut shard_sync = PrecondEngine::sharded(
+        shapes,
+        kind,
+        overlap_base(),
+        ecfg,
+        &mk_launch(shards, ShardTransport::Tcp),
+    )
+    .expect("launch sync sharded engine");
+    let mut shard_over = PrecondEngine::sharded(
+        shapes,
+        kind,
+        overlap_base(),
+        overlap_ecfg,
+        &mk_launch(shards, ShardTransport::Tcp),
+    )
+    .expect("launch overlap sharded engine");
+    assert!(
+        shard_over.name().contains("overlap"),
+        "v2 workers must keep the overlap knob on: {}",
+        shard_over.name()
+    );
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut p3 = p1.clone();
+    let mut rng = Pcg64::new(seed);
+    for step in 0..steps {
+        let grads = random_grads(shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        shard_sync.try_step(&mut p2, &grads).expect("sync sharded step");
+        shard_over.try_step(&mut p3, &grads).expect("overlap sharded step");
+        for ((a, b), c) in p1.iter().zip(&p2).zip(&p3) {
+            assert_eq!(
+                a.max_diff(b),
+                0.0,
+                "{shards}-shard sync run diverged from in-process at step {step}"
+            );
+            assert_eq!(
+                a.max_diff(c),
+                0.0,
+                "{shards}-shard overlap run diverged from in-process at step {step}"
+            );
+        }
+    }
+    assert_eq!(local.refreshes(), shard_sync.refreshes(), "sync refresh accounting");
+    assert_eq!(
+        local.refreshes(),
+        shard_over.refreshes(),
+        "overlap refresh accounting must survive the RefreshAhead handoff"
+    );
+    assert!(local.refreshes() > 0, "test must exercise refreshes");
+}
+
+#[test]
+fn two_shard_overlap_matches_sync_sharded_and_local_bitwise() {
+    let shapes = [(10, 7), (6, 6), (9, 1)];
+    assert_overlap_sharded_matches_sync_and_local(&shapes, UnitKind::Shampoo, 4, 2, 12, 420);
+}
+
+#[test]
+fn four_shard_overlap_matches_sync_sharded_and_local_bitwise() {
+    let shapes = [(12, 10), (8, 3)];
+    assert_overlap_sharded_matches_sync_and_local(
+        &shapes,
+        UnitKind::Sketched { rank: 3 },
+        5,
+        4,
+        12,
+        421,
+    );
+}
+
+#[test]
+fn legacy_proto_workers_degrade_overlap_to_sync_with_identical_numbers() {
+    // Spawn real worker processes pinned to wire protocol v1: they
+    // greet with the legacy Hello, the engine resolves the overlap knob
+    // off (logged notice), and the run stays bitwise identical to the
+    // in-process engine.
+    let shapes = [(8usize, 8usize), (5, 4)];
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 4,
+        refresh_interval: 3,
+        stagger: true,
+        overlap: true,
+        ..Default::default()
+    };
+    let launch = ShardLaunch {
+        program: sketchy_bin(),
+        shards: 2,
+        transport: ShardTransport::Tcp,
+        proto: 1,
+    };
+    let mut local = PrecondEngine::new(
+        &shapes,
+        UnitKind::Shampoo,
+        overlap_base(),
+        EngineConfig { overlap: false, ..ecfg },
+    );
+    let mut sharded =
+        PrecondEngine::sharded(&shapes, UnitKind::Shampoo, overlap_base(), ecfg, &launch)
+            .expect("launch v1 sharded engine");
+    assert!(
+        !sharded.name().contains("overlap"),
+        "v1 workers must resolve the overlap knob off: {}",
+        sharded.name()
+    );
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(422);
+    for step in 0..8 {
+        let grads = random_grads(&shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        sharded.try_step(&mut p2, &grads).expect("degraded sharded step");
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "degraded run diverged at step {step}");
+        }
+    }
+    assert_eq!(local.refreshes(), sharded.refreshes());
+}
+
+// ---------------------------------------------------------------------------
+// Fault-injection chaos: the in-memory harness, no sockets involved.
+// ---------------------------------------------------------------------------
+
+const CHAOS_SHAPES: [(usize, usize); 2] = [(8, 6), (5, 5)];
+const CHAOS_STEPS: usize = 8;
+
+fn chaos_ecfg(overlap: bool) -> EngineConfig {
+    EngineConfig {
+        threads: 1,
+        block_size: 4,
+        refresh_interval: 2,
+        stagger: true,
+        overlap,
+        ..Default::default()
+    }
+}
+
+/// Run the overlap engine over in-proc harness workers with the given
+/// per-shard fault scripts; return final params + refresh count.
+fn chaos_overlap_run(
+    scripts: Vec<FaultScript>,
+    max_connections: usize,
+) -> anyhow::Result<(Vec<Matrix>, usize)> {
+    // A 2s read-timeout cap: long enough that parallel-test scheduling
+    // stalls never masquerade as faults, short enough that a scripted
+    // DropFrame resolves quickly. (Recovery is idempotent either way —
+    // the cap only shapes test latency.)
+    let transports: Vec<Arc<FaultInjectingTransport>> = scripts
+        .into_iter()
+        .map(|s| {
+            FaultInjectingTransport::with_config(s, max_connections, Some(Duration::from_secs(2)))
+        })
+        .collect();
+    let mut eng = PrecondEngine::with_executor(
+        &CHAOS_SHAPES,
+        UnitKind::Shampoo,
+        overlap_base(),
+        chaos_ecfg(true),
+        |blocks, kind, base, threads| {
+            Ok(Box::new(ShardExecutor::launch_in_proc(
+                blocks,
+                kind,
+                base,
+                threads,
+                &transports,
+                PROTO_VERSION,
+            )?))
+        },
+    )?;
+    let mut params: Vec<Matrix> = CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut rng = Pcg64::new(423);
+    for _ in 0..CHAOS_STEPS {
+        let grads = random_grads(&CHAOS_SHAPES, &mut rng);
+        eng.try_step(&mut params, &grads)?;
+    }
+    Ok((params, eng.refreshes()))
+}
+
+/// The fault-free reference: the plain in-process synchronous engine on
+/// the same stream.
+fn chaos_reference() -> (Vec<Matrix>, usize) {
+    let mut eng =
+        PrecondEngine::new(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(false));
+    let mut params: Vec<Matrix> = CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut rng = Pcg64::new(423);
+    for _ in 0..CHAOS_STEPS {
+        let grads = random_grads(&CHAOS_SHAPES, &mut rng);
+        eng.step(&mut params, &grads);
+    }
+    (params, eng.refreshes())
+}
+
+fn assert_matches_reference(
+    got: &(Vec<Matrix>, usize),
+    want: &(Vec<Matrix>, usize),
+    what: &str,
+) {
+    for (i, (a, b)) in want.0.iter().zip(&got.0).enumerate() {
+        assert_eq!(a.max_diff(b), 0.0, "{what}: tensor {i} diverged from reference");
+    }
+    assert_eq!(want.1, got.1, "{what}: refresh accounting diverged");
+}
+
+#[test]
+fn overlap_over_clean_in_proc_harness_matches_reference() {
+    let want = chaos_reference();
+    let got = chaos_overlap_run(vec![FaultScript::none(), FaultScript::none()], usize::MAX)
+        .expect("fault-free harness run");
+    assert_matches_reference(&got, &want, "clean harness");
+    assert!(want.1 > 0, "test must exercise refreshes");
+}
+
+#[test]
+fn overlap_survives_severing_every_request_frame_bitwise() {
+    // The acceptance sweep: sever shard 0's link at every scripted
+    // request-frame index in turn — in particular every gap between a
+    // RefreshAhead RPC and the following Step — and assert the
+    // reconnect + idempotent-replay path reproduces the reference run
+    // bit for bit, refresh accounting included. The 8-step run sends
+    // ~17 request frames per shard (Init, then Step + RefreshAhead per
+    // step); sweeping past the end just proves a fault that never fires
+    // is harmless.
+    let want = chaos_reference();
+    for fault_at in 0..20 {
+        let script = FaultScript::none().on_request(fault_at, FaultAction::Sever);
+        let got = chaos_overlap_run(vec![script, FaultScript::none()], usize::MAX)
+            .unwrap_or_else(|e| panic!("sever at request {fault_at}: run failed: {e:#}"));
+        assert_matches_reference(&got, &want, &format!("sever at request frame {fault_at}"));
+    }
+}
+
+#[test]
+fn overlap_survives_severing_reply_frames_bitwise() {
+    // Same sweep on the worker → driver direction (replies + hellos):
+    // the driver loses replies — including parked RefreshAhead replies —
+    // mid-flight and must recover through replay without double
+    // counting.
+    let want = chaos_reference();
+    for fault_at in 0..20 {
+        let script = FaultScript::none().on_reply(fault_at, FaultAction::Sever);
+        let got = chaos_overlap_run(vec![FaultScript::none(), script], usize::MAX)
+            .unwrap_or_else(|e| panic!("sever at reply {fault_at}: run failed: {e:#}"));
+        assert_matches_reference(&got, &want, &format!("sever at reply frame {fault_at}"));
+    }
+}
+
+#[test]
+fn overlap_survives_dropped_and_delayed_frames_bitwise() {
+    // (Outright frame *duplication* is exercised at the worker protocol
+    // level — see `duplicated_requests_are_absorbed_by_the_reply_caches`
+    // in coordinator::shard — because a strict request/response channel
+    // never legitimately sees an unsolicited duplicate; the realistic
+    // duplicate is a replay after reconnect, which the delay/sever
+    // scenarios here produce.)
+    let want = chaos_reference();
+    for (what, script) in [
+        // Drop a mid-run request (lands in the RefreshAhead/Step
+        // cadence): the reply wait times out, the driver replays.
+        ("drop request 5", FaultScript::none().on_request(5, FaultAction::DropFrame)),
+        // Drop a mid-run reply: same recovery from the other side.
+        ("drop reply 6", FaultScript::none().on_reply(6, FaultAction::DropFrame)),
+        // Delay a request: it is withheld, the reply wait times out, and
+        // the stash dies with the abandoned connection — the worker then
+        // sees only the replayed copy on the fresh connection.
+        ("delay request 4", FaultScript::none().on_request(4, FaultAction::DelayFrame)),
+        // A compound scenario across both directions.
+        (
+            "drop request 3 + sever reply 9",
+            FaultScript::none()
+                .on_request(3, FaultAction::DropFrame)
+                .on_reply(9, FaultAction::Sever),
+        ),
+    ] {
+        let got = chaos_overlap_run(vec![script, FaultScript::none()], usize::MAX)
+            .unwrap_or_else(|e| panic!("{what}: run failed: {e:#}"));
+        assert_matches_reference(&got, &want, what);
+    }
+}
+
+#[test]
+fn overlap_permanent_link_loss_surfaces_shard_named_error() {
+    // Sever mid-run with a connection budget of 1: the reconnect is
+    // refused, so the run must fail — naming the shard — instead of
+    // hanging or silently diverging.
+    let script = FaultScript::none().on_request(4, FaultAction::Sever);
+    let err = match chaos_overlap_run(vec![script, FaultScript::none()], 1) {
+        Ok(_) => panic!("run through a permanently lost link must fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 0"), "error must name the lost shard: {msg}");
+}
+
 /// Deterministic per-block contexts for driving executors directly.
 fn mk_ctxs(n_blocks: usize, t: usize) -> Vec<StepCtx> {
     (0..n_blocks)
@@ -246,6 +570,7 @@ fn spawn_failure_is_surfaced() {
         program: PathBuf::from("/definitely/not/a/real/binary"),
         shards: 1,
         transport: ShardTransport::Tcp,
+        proto: PROTO_VERSION,
     };
     let err = match ShardExecutor::launch(&bogus, &blocks, UnitKind::Shampoo, &base_cfg(), 1) {
         Ok(_) => panic!("bogus worker binary must fail the launch"),

@@ -480,6 +480,10 @@ fn main() {
                         threads,
                         &transports,
                         PROTO_VERSION,
+                        // Full frames: this bench times the RefreshAhead
+                        // overlap win against the PR-4 baseline; wire
+                        // payload size has its own bench + gate below.
+                        false,
                     )?))
                 },
             )
@@ -580,6 +584,120 @@ fn main() {
         assert!(sh_identical, "sharded overlap diverged from synchronous — record invalid");
     }
 
+    // ---------------- shard wire bytes (delta-compressed payloads) -----
+    // The multi-host payoff metric: total frame bytes delivered over the
+    // in-memory transport for the same stagger-refresh workload at wire
+    // protocol v2 (full frames) vs v3 with delta compression. The
+    // workload is LM-shaped — a one-sided embedding-style tensor whose
+    // gradient touches a small rotating subset of token columns each
+    // step (most of a vocab is absent from any one batch) plus a dense
+    // projection — under the staggered stale-refresh schedule. Byte
+    // counts are fully deterministic (no timing), so the recorded
+    // `shard_wire_ratio` is machine-independent and the baseline floors
+    // it at 3x (`shard_wire_ratio_min`).
+    let mut shard_wire_v2_bytes: Option<u64> = None;
+    let mut shard_wire_v3_bytes: Option<u64> = None;
+    let mut shard_wire_ratio: Option<f64> = None;
+    if run("engine/shard_wire_bytes") {
+        use sketchy::coordinator::shard::ShardExecutor;
+        use sketchy::coordinator::wire::PROTO_VERSION;
+        use sketchy::coordinator::{FaultInjectingTransport, FaultScript};
+        use sketchy::optim::UnitKind;
+        use std::sync::Arc;
+        use std::time::Duration;
+        let wb_shapes = [(32usize, 512usize), (64, 64)];
+        let wb_base = ShampooConfig {
+            lr: 1e-3,
+            beta1: 0.0,
+            weight_decay: 0.0,
+            one_sided: true,
+            start_preconditioning_step: 2,
+            stat_interval: 2,
+            graft: GraftType::Rmsprop,
+            ..Default::default()
+        };
+        let wb_ecfg = EngineConfig {
+            threads: 1,
+            block_size: 64,
+            refresh_interval: 2,
+            stagger: true,
+            ..Default::default()
+        };
+        let wb_steps = 12usize;
+        // Deterministic embedding-style gradient stream: 16 active
+        // token columns per step, dense projection fully active.
+        let wb_grads = |rng: &mut Pcg64| -> Vec<Matrix> {
+            let (r, c) = wb_shapes[0];
+            let mut emb = vec![0.0f64; r * c];
+            for _ in 0..16 {
+                let col = rng.below(c);
+                for row in 0..r {
+                    emb[row * c + col] = rng.gaussian();
+                }
+            }
+            vec![Matrix::from_vec(r, c, emb), Matrix::randn(wb_shapes[1].0, wb_shapes[1].1, rng)]
+        };
+        let run_wire = |proto: u32, compress: bool| -> (u64, Vec<Matrix>, usize) {
+            let transports: Vec<Arc<FaultInjectingTransport>> = (0..2)
+                .map(|_| {
+                    FaultInjectingTransport::with_config(
+                        FaultScript::none(),
+                        usize::MAX,
+                        Some(Duration::from_secs(60)),
+                    )
+                })
+                .collect();
+            let mut eng = PrecondEngine::with_executor(
+                &wb_shapes,
+                UnitKind::Shampoo,
+                wb_base.clone(),
+                wb_ecfg,
+                |blocks, kind, base, threads| {
+                    Ok(Box::new(ShardExecutor::launch_in_proc(
+                        blocks, kind, base, threads, &transports, proto, compress,
+                    )?))
+                },
+            )
+            .expect("launch wire-bytes engine");
+            let mut params = zeros_like(&wb_shapes);
+            let mut srng = Pcg64::new(0x11173);
+            for _ in 0..wb_steps {
+                let grads = wb_grads(&mut srng);
+                eng.try_step(&mut params, &grads).expect("wire-bytes step");
+            }
+            let refreshes = eng.refreshes();
+            drop(eng); // count the shutdown frames too — both legs pay them
+            (transports.iter().map(|t| t.bytes_delivered()).sum(), params, refreshes)
+        };
+        let (v2_bytes, v2_params, v2_refreshes) = run_wire(2, false);
+        let (v3_bytes, v3_params, v3_refreshes) = run_wire(PROTO_VERSION, true);
+        // Reference: the in-process engine on the same stream.
+        let mut local = PrecondEngine::new(&wb_shapes, UnitKind::Shampoo, wb_base, wb_ecfg);
+        let mut local_params = zeros_like(&wb_shapes);
+        let mut srng = Pcg64::new(0x11173);
+        for _ in 0..wb_steps {
+            let grads = wb_grads(&mut srng);
+            local.step(&mut local_params, &grads);
+        }
+        let mut wb_identical = v2_refreshes == local.refreshes()
+            && v3_refreshes == local.refreshes();
+        for ((a, b), c) in local_params.iter().zip(&v2_params).zip(&v3_params) {
+            if a.max_diff(b) != 0.0 || a.max_diff(c) != 0.0 {
+                wb_identical = false;
+            }
+        }
+        identical = identical && wb_identical;
+        let ratio = v2_bytes as f64 / (v3_bytes.max(1)) as f64;
+        println!(
+            "engine/shard_wire_bytes_12step_2sh  v2 {v2_bytes} B, v3+delta {v3_bytes} B, \
+             reduction x{ratio:.2} identical={wb_identical}"
+        );
+        shard_wire_v2_bytes = Some(v2_bytes);
+        shard_wire_v3_bytes = Some(v3_bytes);
+        shard_wire_ratio = Some(ratio);
+        assert!(wb_identical, "compressed transport diverged — wire record invalid");
+    }
+
     // Assemble the gate-facing perf record from whichever engine
     // sections ran (CI runs `--filter engine/`, which runs them all; a
     // narrower filter yields a partial record the gate will reject —
@@ -624,6 +742,17 @@ fn main() {
             // The sharded win carries wire-serialization overhead in
             // both legs, so its floor sits below the in-process 1.2.
             fields.push(("shard_overlap_speedup_min", "1.1".to_string()));
+        }
+        if let (Some(v2), Some(v3), Some(r)) =
+            (shard_wire_v2_bytes, shard_wire_v3_bytes, shard_wire_ratio)
+        {
+            // Byte counts, not timings: deterministic on any machine,
+            // so the ratio floor is the binding (machine-independent)
+            // check — emitted here so a baseline refresh keeps it.
+            fields.push(("shard_wire_v2_bytes", v2.to_string()));
+            fields.push(("shard_wire_v3_bytes", v3.to_string()));
+            fields.push(("shard_wire_ratio", format!("{r:.4}")));
+            fields.push(("shard_wire_ratio_min", "3.0".to_string()));
         }
         fields.push(("identical", identical.to_string()));
         let body = fields

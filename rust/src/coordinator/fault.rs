@@ -36,7 +36,7 @@
 use super::wire::Conn;
 use std::collections::VecDeque;
 use std::io::{Error, ErrorKind, Read, Write};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -197,6 +197,10 @@ struct FaultState {
     rep_frames: AtomicUsize,
     connections: AtomicUsize,
     max_connections: usize,
+    /// Frame bytes actually delivered across both directions (length
+    /// prefixes included; dropped/severed frames excluded, duplicates
+    /// counted twice) — the `shard_wire_bytes` bench's meter.
+    bytes: AtomicU64,
 }
 
 impl FaultState {
@@ -254,8 +258,11 @@ impl FaultConn {
     fn deliver(&mut self, frame: &[u8]) -> std::io::Result<()> {
         if let Some(d) = self.delayed.take() {
             self.outgoing.push(&d)?;
+            self.state.bytes.fetch_add(d.len() as u64, Ordering::Relaxed);
         }
-        self.outgoing.push(frame)
+        self.outgoing.push(frame)?;
+        self.state.bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        Ok(())
     }
 }
 
@@ -360,6 +367,7 @@ impl FaultInjectingTransport {
                 rep_frames: AtomicUsize::new(0),
                 connections: AtomicUsize::new(0),
                 max_connections,
+                bytes: AtomicU64::new(0),
             }),
             accept_tx: Mutex::new(tx),
             accept_rx: Mutex::new(Some(rx)),
@@ -422,6 +430,13 @@ impl FaultInjectingTransport {
     pub fn connections(&self) -> usize {
         self.state.connections.load(Ordering::SeqCst)
     }
+
+    /// Frame bytes delivered so far, both directions (length prefixes
+    /// included) — the payoff meter for the delta-compressed payload
+    /// layer. Deterministic: same run, same bytes, on any machine.
+    pub fn bytes_delivered(&self) -> u64 {
+        self.state.bytes.load(Ordering::SeqCst)
+    }
 }
 
 #[cfg(test)]
@@ -446,6 +461,28 @@ mod tests {
         wire::write_msg(&mut worker, &WireMsg::Ok).unwrap();
         assert_eq!(wire::read_msg(&mut driver).unwrap(), WireMsg::Ok);
         assert!(t.take_acceptor().is_none(), "acceptor can be taken once");
+    }
+
+    #[test]
+    fn byte_meter_counts_delivered_frames_only() {
+        let t = FaultInjectingTransport::new(
+            FaultScript::none()
+                .on_request(0, FaultAction::DropFrame)
+                .on_request(2, FaultAction::DuplicateFrame),
+        );
+        let acc = t.take_acceptor().unwrap();
+        let (mut driver, mut worker) = pair(&t, &acc);
+        let frame = wire::encode_frame(&WireMsg::MemStats).unwrap();
+        worker.set_timeout(Some(Duration::from_millis(50))).unwrap();
+        wire::write_msg(&mut driver, &WireMsg::MemStats).unwrap(); // dropped: 0 bytes
+        assert!(wire::read_msg(&mut worker).is_err());
+        assert_eq!(t.bytes_delivered(), 0, "dropped frames never cross the wire");
+        wire::write_msg(&mut driver, &WireMsg::MemStats).unwrap(); // delivered once
+        wire::write_msg(&mut driver, &WireMsg::MemStats).unwrap(); // duplicated: twice
+        for _ in 0..3 {
+            assert_eq!(wire::read_msg(&mut worker).unwrap(), WireMsg::MemStats);
+        }
+        assert_eq!(t.bytes_delivered(), 3 * frame.len() as u64);
     }
 
     #[test]

@@ -9,8 +9,9 @@
 //! returned parameter blocks back — the engine's gather → drive →
 //! scatter step *is* the RPC boundary.
 //!
-//! Transport is localhost TCP or a Unix domain socket, speaking the
-//! length-prefixed codec of [`super::wire`]. Workers announce their
+//! Transport is TCP (localhost by default, any host via the launcher
+//! template) or a Unix domain socket, speaking the length-prefixed
+//! codec of [`super::wire`]. Workers announce their
 //! listen address on stdout (`SKETCHY-SHARD-LISTENING <transport>
 //! <addr>`), keep all block state in-process across connections, and
 //! cache their last step reply keyed by `t` — so the driver can
@@ -42,10 +43,33 @@
 //! degrades that shard (and, for determinism of accounting, the whole
 //! run) to synchronous refresh with a logged one-time notice.
 //!
+//! ## Multi-host launch + delta-compressed payloads (protocol v3)
+//!
+//! Worker spawning is pluggable: by default the driver exec's its own
+//! binary on localhost, but a launcher command template
+//! (`--shard-launch`, see [`ShardLaunch`]) renders an arbitrary argv
+//! per shard — `ssh host{shard} /path/to/sketchy {worker_cmd} ...` —
+//! and the worker's stdout announcement (with `--listen` /
+//! `--advertise-host`) flows back through the launcher process. The
+//! in-test launcher is [`ShardExecutor::launch_in_proc`], which mounts
+//! the same worker state machine on threads over the scriptable fault
+//! harness.
+//!
+//! Cross-host links make full dense frames the bottleneck, so protocol
+//! v3 negotiates a delta-compressed payload layer per connection (the
+//! [`WireMsg::HelloV3`] capability report + the `--shard-compress`
+//! knob): each block matrix ships as the RLE/varint compression of its
+//! bits XORed against the last mutually acked step ([`DeltaMat`]),
+//! with tagged baselines, idempotent-replay safety, and a full-frame
+//! resync after any reconnect. v2/v1 workers degrade to uncompressed
+//! full frames exactly like the refresh-overlap degrade matrix.
+//!
 //! Determinism: every block's math runs in exactly one place, parameter
-//! payloads travel as raw IEEE-754 bits, and the scatter writes each
+//! payloads travel as raw IEEE-754 bits (the delta codec is
+//! bit-lossless), and the scatter writes each
 //! disjoint block window directly — so an N-shard run is **bitwise
-//! identical** to the in-process engine, with or without overlap
+//! identical** to the in-process engine, with or without overlap or
+//! compression
 //! (`tests/shard_determinism.rs` and the CI `shard-smoke` job assert
 //! this for N ∈ {2, 4}, including under scripted transport faults via
 //! [`super::fault::FaultInjectingTransport`] and
@@ -53,8 +77,9 @@
 
 use super::fault::FaultInjectingTransport;
 use super::wire::{
-    self, BlockSpec, Conn, InitMsg, RefreshAheadMsg, RefreshAheadOkMsg, StepEntry, StepMsg,
-    StepOkMsg, WireMsg, PROTO_VERSION,
+    self, bits_matrix, mat_bits, BlockSpec, Conn, DeltaMat, InitMsg, RefreshAheadMsg,
+    RefreshAheadOkMsg, StepEntry, StepEntryV3, StepMsg, StepOkMsg, StepOkV3Msg, StepV3Msg,
+    WireMsg, PROTO_VERSION,
 };
 use crate::optim::engine::{
     drive_all, effective_worker_threads, lock_state, BlockExecutor, RefreshAheadDone,
@@ -131,7 +156,7 @@ impl std::fmt::Display for ShardTransport {
 
 /// Sharding knobs, resolvable from CLI flags and `[shard]` config keys
 /// (same precedence discipline as [`crate::optim::EngineConfig::resolve`]).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardConfig {
     /// Worker process count (0 = sharding disabled, run in-process).
     pub shards: usize,
@@ -139,20 +164,37 @@ pub struct ShardConfig {
     pub transport: ShardTransport,
     /// Wire protocol version workers are spawned to speak
     /// ([`PROTO_VERSION`] normally; 1 pins the pre-RefreshAhead
-    /// protocol, degrading refresh overlap to synchronous).
+    /// protocol, degrading refresh overlap to synchronous; 2 pins the
+    /// pre-compression protocol, degrading payloads to full frames).
     pub proto: u32,
+    /// Use the v3 delta-compressed payload layer on links whose worker
+    /// reports the capability at handshake (v2/v1 workers keep full
+    /// frames regardless). Never changes the numbers — payloads are
+    /// bit-lossless either way.
+    pub compress: bool,
+    /// Optional launcher command template for spawning workers on
+    /// remote hosts (e.g. over ssh) instead of exec-ing the local
+    /// binary; see [`ShardLaunch`] for the placeholder grammar.
+    pub launch: Option<String>,
 }
 
 impl Default for ShardConfig {
     fn default() -> Self {
-        ShardConfig { shards: 0, transport: ShardTransport::Tcp, proto: PROTO_VERSION }
+        ShardConfig {
+            shards: 0,
+            transport: ShardTransport::Tcp,
+            proto: PROTO_VERSION,
+            compress: true,
+            launch: None,
+        }
     }
 }
 
 impl ShardConfig {
-    /// Resolve from `--shards` / `--shard-transport` / `--shard-proto`
-    /// CLI flags with `shard.count` / `shard.transport` / `shard.proto`
-    /// config keys as fallback.
+    /// Resolve from `--shards` / `--shard-transport` / `--shard-proto` /
+    /// `--shard-compress` / `--shard-launch` CLI flags with
+    /// `shard.count` / `shard.transport` / `shard.proto` /
+    /// `shard.compress` / `shard.launch` config keys as fallback.
     pub fn resolve(args: &Args, cfg: &Config) -> anyhow::Result<ShardConfig> {
         let d = ShardConfig::default();
         let shards = args.get_usize("shards", cfg.usize_or("shard.count", d.shards));
@@ -166,7 +208,19 @@ impl ShardConfig {
             (1..=PROTO_VERSION).contains(&proto),
             "unsupported shard wire protocol v{proto} (this build speaks v1..=v{PROTO_VERSION})"
         );
-        Ok(ShardConfig { shards, transport, proto })
+        let compress = args.get_bool("shard-compress", cfg.bool_or("shard.compress", d.compress));
+        let launch = match args.get("shard-launch") {
+            // An explicit empty value (`--shard-launch ""`) disables a
+            // config-file template — the only CLI spelling that can
+            // restore plain local exec.
+            Some(s) if !s.trim().is_empty() => Some(s.to_string()),
+            Some(_) => None,
+            None => {
+                let s = cfg.str_or("shard.launch", "");
+                (!s.trim().is_empty()).then_some(s)
+            }
+        };
+        Ok(ShardConfig { shards, transport, proto, compress, launch })
     }
 
     /// Whether cross-process sharding is requested.
@@ -175,8 +229,32 @@ impl ShardConfig {
     }
 }
 
-/// How to start shard workers: which binary to exec, how many shards,
-/// which transport, which wire protocol version.
+/// How to start shard workers: which binary to exec (or which launcher
+/// command to run), how many shards, which transport, which wire
+/// protocol version, and whether to use the v3 compressed payloads.
+///
+/// ## Launcher templates (multi-host)
+///
+/// `launch` lifts worker spawning off localhost: instead of exec-ing
+/// `program` directly, the driver renders the template per shard and
+/// runs the result. Placeholders: `{shard}` → the shard index,
+/// `{program}` → the local binary path, `{worker_cmd}` → the standard
+/// `shard-worker --worker-id N --transport T --proto-version V`
+/// invocation (appended at the end when the placeholder is absent).
+/// Tokens split on whitespace — there is no shell quoting; point the
+/// template at real argv words. The spawned command's stdout must
+/// carry the worker's listen announcement back to the driver, which
+/// `ssh` does natively:
+///
+/// ```text
+/// --shard-launch "ssh worker-{shard}.cluster /opt/sketchy/sketchy
+///     {worker_cmd} --listen 0.0.0.0:0 --advertise-host worker-{shard}.cluster"
+/// ```
+///
+/// The worker binds `--listen`, announces `--advertise-host` plus the
+/// bound port, and the driver dials that address — same handshake,
+/// same reconnect/replay machinery, same bitwise contract as
+/// localhost.
 #[derive(Clone, Debug)]
 pub struct ShardLaunch {
     /// Binary exposing the `shard-worker` subcommand (normally this
@@ -186,6 +264,10 @@ pub struct ShardLaunch {
     pub transport: ShardTransport,
     /// Protocol version passed to workers as `--proto-version`.
     pub proto: u32,
+    /// Use delta-compressed payloads on capable (v3) links.
+    pub compress: bool,
+    /// Optional launcher command template (see the type-level docs).
+    pub launch: Option<String>,
 }
 
 impl ShardLaunch {
@@ -197,8 +279,46 @@ impl ShardLaunch {
             shards: cfg.shards,
             transport: cfg.transport,
             proto: cfg.proto,
+            compress: cfg.compress,
+            launch: cfg.launch.clone(),
         })
     }
+}
+
+/// Render the launcher command line for one shard: substitute
+/// `{shard}` / `{program}`, split on whitespace, and splice the worker
+/// invocation at `{worker_cmd}` (appended when absent). Returns the
+/// program to exec plus its arguments.
+fn render_launch_command(
+    template: &str,
+    program: &std::path::Path,
+    shard: usize,
+    worker_args: &[String],
+) -> anyhow::Result<(PathBuf, Vec<String>)> {
+    let rendered = template
+        .replace("{shard}", &shard.to_string())
+        .replace("{program}", &program.display().to_string());
+    let mut toks: Vec<String> = rendered.split_whitespace().map(str::to_string).collect();
+    ensure!(!toks.is_empty(), "shard launch template rendered to an empty command");
+    match toks.iter().position(|t| t == "{worker_cmd}") {
+        Some(pos) => {
+            toks.splice(pos..=pos, worker_args.iter().cloned());
+        }
+        None => toks.extend(worker_args.iter().cloned()),
+    }
+    // An embedded occurrence (`cmd={worker_cmd}` or a missing space)
+    // would otherwise ship the literal placeholder to the remote argv —
+    // fail fast instead of producing a confusing remote exec error.
+    ensure!(
+        toks.iter().all(|t| !t.contains("{worker_cmd}")),
+        "shard launch template: {{worker_cmd}} must be a standalone whitespace-separated token"
+    );
+    ensure!(
+        toks.first().map(String::as_str) != Some("shard-worker"),
+        "shard launch template must name a program before the worker command"
+    );
+    let prog = PathBuf::from(toks.remove(0));
+    Ok((prog, toks))
 }
 
 /// Deterministic contiguous block partition: shard `s` owns a balanced
@@ -282,6 +402,28 @@ fn dial_addr(addr: &WorkerAddr) -> anyhow::Result<Box<dyn Conn>> {
 // Worker side: `sketchy shard-worker`.
 // ---------------------------------------------------------------------------
 
+/// Per-slot (param, grad) bit snapshots — a worker-side delta baseline.
+type SlotBits = Vec<(Vec<u64>, Vec<u64>)>;
+
+/// Per-block (param, grad) bit snapshots keyed by global block index —
+/// a driver-side upload baseline.
+type BlockBits = BTreeMap<u32, (Vec<u64>, Vec<u64>)>;
+
+/// Per-block param bit snapshots keyed by global block index — a
+/// driver-side download baseline.
+type ParamBits = BTreeMap<u32, Vec<u64>>;
+
+/// Lock-recovery for worker-side block states: a block panic surfaces
+/// as a named error through [`drive_all`] (and the wire turns it into a
+/// shard-named `Error` reply), but the panicking task leaves its state
+/// mutex poisoned — every later touch through a bare `.unwrap()` would
+/// die with an opaque `PoisonError` instead of the shard-error
+/// contract. Recover the inner value, exactly like the engine's
+/// [`lock_state`].
+fn state_mut(m: &mut Mutex<BlockState>) -> &mut BlockState {
+    m.get_mut().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Block states owned by one worker process. Persists across
 /// connections so the driver can reconnect without losing statistics.
 struct WorkerState {
@@ -299,6 +441,17 @@ struct WorkerState {
     /// the eigendecompositions would be bitwise harmless but would skew
     /// the refresh accounting).
     last_refresh_ahead: Option<(u64, WireMsg)>,
+    /// v3 delta-codec download baseline: per-slot (param, grad) bits of
+    /// the last successfully processed `StepV3`, tagged with its `t`.
+    /// Survives reconnects (like all worker state); advanced only after
+    /// a step fully succeeds, so an errored or replayed frame can never
+    /// corrupt it.
+    delta_rx: Option<(u64, SlotBits)>,
+    /// v3 upload baseline: per-slot returned-param bits of the last
+    /// `StepOkV3` this worker encoded, tagged with its `t`. The
+    /// lockstep protocol guarantees the driver decoded that reply
+    /// (possibly via cache replay) before it could send the next step.
+    delta_tx: Option<(u64, Vec<Vec<u64>>)>,
 }
 
 impl WorkerState {
@@ -341,6 +494,8 @@ impl WorkerState {
             slot_of,
             last_step: None,
             last_refresh_ahead: None,
+            delta_rx: None,
+            delta_tx: None,
         })
     }
 
@@ -358,7 +513,7 @@ impl WorkerState {
                 .get(&ent.index)
                 .ok_or_else(|| anyhow!("unknown block index {}", ent.index))?;
             ensure!(ctxs[slot].is_none(), "duplicate entry for block {}", ent.index);
-            let st = self.states[slot].get_mut().unwrap();
+            let st = state_mut(&mut self.states[slot]);
             ensure!(
                 ent.param.shape() == st.param.shape() && ent.grad.shape() == st.grad.shape(),
                 "block {} shape mismatch: got {:?}/{:?}, own {:?}",
@@ -390,9 +545,121 @@ impl WorkerState {
         let mut entries = Vec::with_capacity(msg.entries.len());
         for ent in &msg.entries {
             let slot = self.slot_of[&ent.index];
-            entries.push((ent.index, self.states[slot].get_mut().unwrap().param.clone()));
+            entries.push((ent.index, state_mut(&mut self.states[slot]).param.clone()));
         }
         Ok(StepOkMsg { t: msg.t, refreshes: refreshes as u32, entries })
+    }
+
+    /// The v3 counterpart of [`WorkerState::process_step`]: resolve the
+    /// delta-encoded payloads against the download baseline, drive the
+    /// identical per-block math, and reply with payloads delta-encoded
+    /// against this worker's previous reply. Baselines advance only on
+    /// full success; `resync` drops them first (the driver sets it
+    /// after a reconnect), re-anchoring the stream on full frames.
+    fn process_step_v3(&mut self, msg: &StepV3Msg) -> anyhow::Result<StepOkV3Msg> {
+        if msg.resync {
+            self.delta_rx = None;
+            self.delta_tx = None;
+        }
+        ensure!(
+            msg.entries.len() == self.states.len(),
+            "step carries {} blocks, shard owns {}",
+            msg.entries.len(),
+            self.states.len()
+        );
+        let n = self.states.len();
+        let mut ctxs: Vec<Option<StepCtx>> = vec![None; n];
+        let mut resolved: Vec<Option<(Vec<u64>, Vec<u64>)>> = vec![None; n];
+        for ent in &msg.entries {
+            let slot = *self
+                .slot_of
+                .get(&ent.index)
+                .ok_or_else(|| anyhow!("unknown block index {}", ent.index))?;
+            ensure!(resolved[slot].is_none(), "duplicate entry for block {}", ent.index);
+            let shape = state_mut(&mut self.states[slot]).param.shape();
+            ensure!(
+                ent.param.shape() == shape && ent.grad.shape() == shape,
+                "block {} shape mismatch: got {:?}/{:?}, own {:?}",
+                ent.index,
+                ent.param.shape(),
+                ent.grad.shape(),
+                shape
+            );
+            // A Delta payload may only be applied against the baseline
+            // it was encoded from — tagged by `base_t`, validated here.
+            let needs_base = matches!(ent.param, DeltaMat::Delta { .. })
+                || matches!(ent.grad, DeltaMat::Delta { .. });
+            let base = if needs_base {
+                match &self.delta_rx {
+                    Some((bt, bases)) if *bt == msg.base_t && msg.base_t != 0 => {
+                        Some(&bases[slot])
+                    }
+                    Some((bt, _)) => bail!(
+                        "delta base mismatch: step t={} encoded against t={}, baseline \
+                         holds t={bt} (full-frame resync required)",
+                        msg.t,
+                        msg.base_t
+                    ),
+                    None => bail!(
+                        "delta step t={} without a baseline (full-frame resync required)",
+                        msg.t
+                    ),
+                }
+            } else {
+                None
+            };
+            let pbits = ent.param.resolve(base.map(|(p, _)| p.as_slice()))?;
+            let gbits = ent.grad.resolve(base.map(|(_, g)| g.as_slice()))?;
+            resolved[slot] = Some((pbits, gbits));
+            ctxs[slot] = Some(StepCtx {
+                t: msg.t as usize,
+                scale: msg.scale,
+                preconditioning: msg.preconditioning,
+                refresh_due: ent.refresh_due,
+                lr: msg.lr,
+                beta1: msg.beta1,
+                weight_decay: msg.weight_decay,
+                stat_due: msg.stat_due,
+                graft: self.graft,
+            });
+        }
+        let ctxs: Vec<StepCtx> = ctxs
+            .into_iter()
+            .map(|c| c.ok_or_else(|| anyhow!("step is missing an assigned block")))
+            .collect::<anyhow::Result<_>>()?;
+        let resolved: SlotBits = resolved
+            .into_iter()
+            .map(|r| r.ok_or_else(|| anyhow!("step is missing an assigned block")))
+            .collect::<anyhow::Result<_>>()?;
+        for (slot, (pbits, gbits)) in resolved.iter().enumerate() {
+            let st = state_mut(&mut self.states[slot]);
+            for (dst, &b) in st.param.as_mut_slice().iter_mut().zip(pbits) {
+                *dst = f64::from_bits(b);
+            }
+            for (dst, &b) in st.grad.as_mut_slice().iter_mut().zip(gbits) {
+                *dst = f64::from_bits(b);
+            }
+        }
+        let threads = effective_worker_threads(self.threads, n);
+        let refreshes = drive_all(&self.states, &ctxs, threads)?;
+        // Encode the reply against the previous reply's bits — valid
+        // only when that reply was for the immediately preceding step.
+        let tx_base = self.delta_tx.take().filter(|(bt, _)| bt + 1 == msg.t);
+        let base_t = tx_base.as_ref().map(|(bt, _)| *bt).unwrap_or(0);
+        let mut out_bits: Vec<Vec<u64>> = Vec::with_capacity(n);
+        let mut entries = Vec::with_capacity(msg.entries.len());
+        for s in self.states.iter_mut() {
+            out_bits.push(mat_bits(&state_mut(s).param));
+        }
+        for ent in &msg.entries {
+            let slot = self.slot_of[&ent.index];
+            let (rows, cols) = state_mut(&mut self.states[slot]).param.shape();
+            let base = tx_base.as_ref().map(|(_, b)| b[slot].as_slice());
+            entries.push((ent.index, DeltaMat::encode(rows, cols, &out_bits[slot], base)));
+        }
+        self.delta_rx = Some((msg.t, resolved));
+        self.delta_tx = Some((msg.t, out_bits));
+        Ok(StepOkV3Msg { t: msg.t, base_t, refreshes: refreshes as u32, entries })
     }
 
     /// Run the RefreshAhead stage against the owned block states: visit
@@ -463,9 +730,18 @@ impl WorkerState {
         let mut mem = 0u64;
         let mut second = 0u64;
         for s in &mut self.states {
-            let st = s.get_mut().unwrap();
+            let st = state_mut(s);
             mem += st.mem_bytes() as u64;
             second += st.second_moment_bytes() as u64;
+        }
+        // The delta codec's baselines are real worker memory (full bit
+        // snapshots of params + grads) — keep them visible to operators
+        // sizing hosts from the MemStats report.
+        if let Some((_, slots)) = &self.delta_rx {
+            mem += slots.iter().map(|(p, g)| (p.len() + g.len()) as u64 * 8).sum::<u64>();
+        }
+        if let Some((_, slots)) = &self.delta_tx {
+            mem += slots.iter().map(|p| p.len() as u64 * 8).sum::<u64>();
         }
         (mem, second)
     }
@@ -482,10 +758,15 @@ fn handle_conn<S: Read + Write>(
 ) -> anyhow::Result<bool> {
     if proto <= 1 {
         // Legacy greeting: no capability report — the driver keeps this
-        // shard's refreshes synchronous.
+        // shard's refreshes synchronous and its payloads full-frame.
         wire::write_msg(stream, &WireMsg::Hello { worker_id })?;
-    } else {
+    } else if proto == 2 {
         wire::write_msg(stream, &WireMsg::HelloV2 { worker_id, proto, overlap: true })?;
+    } else {
+        wire::write_msg(
+            stream,
+            &WireMsg::HelloV3 { worker_id, proto, overlap: true, compress: true },
+        )?;
     }
     loop {
         let msg = match wire::read_msg_opt(stream)? {
@@ -519,6 +800,39 @@ fn handle_conn<S: Read + Write>(
                             }
                         },
                     },
+                };
+                wire::write_msg(stream, &reply)?;
+            }
+            WireMsg::StepV3(step) => {
+                let reply = if proto < 3 {
+                    // A v2/v1 worker emulation must behave like the old
+                    // binary: it never advertised the payload layer.
+                    WireMsg::Error {
+                        message: format!(
+                            "delta-compressed step unsupported at wire protocol v{proto}"
+                        ),
+                    }
+                } else {
+                    match state.as_mut() {
+                        None => WireMsg::Error { message: "step before init".into() },
+                        // Shared idempotency cache with plain Step: the
+                        // replay of a delta frame must serve the cached
+                        // bytes *before* any baseline logic runs, so a
+                        // duplicate can never re-apply or re-tag.
+                        Some(ws) => match &ws.last_step {
+                            Some((t, cached)) if *t == step.t => cached.clone(),
+                            _ => match ws.process_step_v3(&step) {
+                                Ok(ok) => {
+                                    let reply = WireMsg::StepOkV3(ok);
+                                    ws.last_step = Some((step.t, reply.clone()));
+                                    reply
+                                }
+                                Err(e) => WireMsg::Error {
+                                    message: format!("step t={}: {e:#}", step.t),
+                                },
+                            },
+                        },
+                    }
                 };
                 wire::write_msg(stream, &reply)?;
             }
@@ -597,9 +911,19 @@ pub fn serve_worker(args: &Args) -> anyhow::Result<()> {
     let mut state: Option<WorkerState> = None;
     match transport {
         ShardTransport::Tcp => {
-            let listener = TcpListener::bind("127.0.0.1:0").context("shard worker: bind tcp")?;
+            // Multi-host launches bind a reachable interface
+            // (`--listen 0.0.0.0:0`) and announce a dialable name
+            // (`--advertise-host`) with the bound port; the localhost
+            // defaults preserve the single-host behavior exactly.
+            let listen = args.get_or("listen", "127.0.0.1:0");
+            let listener = TcpListener::bind(listen.as_str())
+                .with_context(|| format!("shard worker: bind tcp {listen}"))?;
             let addr = listener.local_addr().context("shard worker: local addr")?;
-            announce(&format!("tcp {addr}"))?;
+            let announced = match args.get("advertise-host") {
+                Some(host) => format!("{host}:{}", addr.port()),
+                None => addr.to_string(),
+            };
+            announce(&format!("tcp {announced}"))?;
             for conn in listener.incoming() {
                 let mut stream = match conn {
                     Ok(s) => s,
@@ -678,6 +1002,13 @@ struct ShardChannel {
     proto: u32,
     /// RefreshAhead capability from the worker's greeting.
     overlap: bool,
+    /// Delta-compression capability from the worker's greeting
+    /// (v3 `HelloV3` only; v2/v1 greetings report none).
+    compress: bool,
+    /// Bumped on every successful (re)connect — the delta codec
+    /// compares it against the generation its baselines were taken on
+    /// and resyncs with full frames after any reconnect.
+    generation: u64,
     /// `t_next` of a sent-but-unjoined RefreshAhead request.
     pending_refresh: Option<u64>,
 }
@@ -691,6 +1022,8 @@ impl ShardChannel {
             last_req: Vec::new(),
             proto: 0,
             overlap: false,
+            compress: false,
+            generation: 0,
             pending_refresh: None,
         }
     }
@@ -704,19 +1037,31 @@ impl ShardChannel {
             WireMsg::Hello { worker_id } if worker_id as usize == self.shard => {
                 self.proto = 1;
                 self.overlap = false;
+                self.compress = false;
             }
             WireMsg::HelloV2 { worker_id, proto, overlap }
                 if worker_id as usize == self.shard =>
             {
                 self.proto = proto;
                 self.overlap = overlap;
+                self.compress = false;
             }
-            WireMsg::Hello { worker_id } | WireMsg::HelloV2 { worker_id, .. } => {
+            WireMsg::HelloV3 { worker_id, proto, overlap, compress }
+                if worker_id as usize == self.shard =>
+            {
+                self.proto = proto;
+                self.overlap = overlap;
+                self.compress = compress;
+            }
+            WireMsg::Hello { worker_id }
+            | WireMsg::HelloV2 { worker_id, .. }
+            | WireMsg::HelloV3 { worker_id, .. } => {
                 bail!("worker identity mismatch: got {worker_id}, want {}", self.shard)
             }
             other => bail!("expected hello, got {other:?}"),
         }
         self.conn = Some(conn);
+        self.generation += 1;
         Ok(())
     }
 
@@ -799,10 +1144,49 @@ enum WorkerBackend {
     },
 }
 
+/// Driver-side per-shard delta-codec state (the v3 payload layer).
+/// Baselines are tagged with the step they were taken at and advance
+/// only on acked traffic, so a replayed frame always decodes against
+/// bits both sides agree on; a reconnect (tracked by the channel
+/// generation) drops everything and the next encoded step resyncs with
+/// full frames.
+#[derive(Default)]
+struct DeltaCodec {
+    /// Upload baseline: per-block (param, grad) bits of the last
+    /// *acked* step, tagged with its `t`.
+    tx: Option<(u64, BlockBits)>,
+    /// Upload sent but not yet acked; promoted to `tx` on `StepOk`.
+    tx_pending: Option<(u64, BlockBits)>,
+    /// Download baseline: per-block param bits of the last decoded
+    /// reply, tagged with its `t`.
+    rx: Option<(u64, ParamBits)>,
+    /// Channel generation the baselines belong to.
+    generation: u64,
+}
+
+impl DeltaCodec {
+    /// Heap bytes held by the baselines (driver-side memory accounting).
+    fn mem_bytes(&self) -> usize {
+        let pair_map = |m: &Option<(u64, BlockBits)>| {
+            m.as_ref()
+                .map(|(_, b)| b.values().map(|(p, g)| (p.len() + g.len()) * 8).sum::<usize>())
+                .unwrap_or(0)
+        };
+        let rx = self
+            .rx
+            .as_ref()
+            .map(|(_, b)| b.values().map(|p| p.len() * 8).sum::<usize>())
+            .unwrap_or(0);
+        pair_map(&self.tx) + pair_map(&self.tx_pending) + rx
+    }
+}
+
 /// One shard: its channel plus whatever runs the worker.
 struct WorkerHandle {
     channel: ShardChannel,
     backend: WorkerBackend,
+    /// v3 payload-layer state (inert on full-frame links).
+    delta: DeltaCodec,
 }
 
 impl WorkerHandle {
@@ -868,22 +1252,32 @@ impl Drop for WorkerHandle {
     }
 }
 
-/// Spawn one worker process and read its announced listen address.
+/// Spawn one worker process — directly, or through the launcher
+/// command template (ssh and friends) — and read its announced listen
+/// address off the spawned command's stdout.
 fn spawn_process_worker(launch: &ShardLaunch, shard: usize) -> anyhow::Result<WorkerHandle> {
-    let mut cmd = Command::new(&launch.program);
-    cmd.arg("shard-worker")
-        .arg("--worker-id")
-        .arg(shard.to_string())
-        .arg("--transport")
-        .arg(launch.transport.to_string())
-        .arg("--proto-version")
-        .arg(launch.proto.to_string())
+    let worker_args: Vec<String> = vec![
+        "shard-worker".into(),
+        "--worker-id".into(),
+        shard.to_string(),
+        "--transport".into(),
+        launch.transport.to_string(),
+        "--proto-version".into(),
+        launch.proto.to_string(),
+    ];
+    let (program, args) = match &launch.launch {
+        None => (launch.program.clone(), worker_args),
+        Some(template) => render_launch_command(template, &launch.program, shard, &worker_args)
+            .with_context(|| format!("shard {shard}: render launch template"))?,
+    };
+    let mut cmd = Command::new(&program);
+    cmd.args(&args)
         .stdin(Stdio::null())
         .stdout(Stdio::piped())
         .stderr(Stdio::inherit());
     let mut child = cmd
         .spawn()
-        .with_context(|| format!("spawn {} shard-worker", launch.program.display()))?;
+        .with_context(|| format!("spawn {} shard-worker", program.display()))?;
     let stdout = child
         .stdout
         .take()
@@ -907,6 +1301,7 @@ fn spawn_process_worker(launch: &ShardLaunch, shard: usize) -> anyhow::Result<Wo
     Ok(WorkerHandle {
         channel,
         backend: WorkerBackend::Process { child, addr, _stdout: reader },
+        delta: DeltaCodec::default(),
     })
 }
 
@@ -971,6 +1366,25 @@ pub struct ShardExecutor {
     transport: String,
     /// Every worker reported RefreshAhead capability at handshake.
     overlap: bool,
+    /// Delta-compressed payloads requested; applied per link to the
+    /// workers that reported the capability (v2/v1 links keep full
+    /// frames — the degrade matrix).
+    compress: bool,
+}
+
+/// Map a poisoned driver-side worker-table lock into the shard-failure
+/// error contract instead of an opaque `PoisonError` panic. The lock
+/// only poisons when an earlier panic tore through a worker RPC, so
+/// the table's consistency is unknown — step paths must refuse it.
+fn workers_mut(
+    workers: &mut Mutex<Vec<WorkerHandle>>,
+) -> anyhow::Result<&mut Vec<WorkerHandle>> {
+    workers.get_mut().map_err(|_| {
+        anyhow!(
+            "shard executor: worker table lock poisoned by an earlier panic \
+             (a failed step is terminal; rebuild the engine and its workers)"
+        )
+    })
 }
 
 impl ShardExecutor {
@@ -995,7 +1409,13 @@ impl ShardExecutor {
             init_worker(&mut w, shard, &init_msg_for(owned, blocks, kind, base, worker_threads))?;
             workers.push(w);
         }
-        Ok(ShardExecutor::assemble(workers, assignment, blocks.len(), launch.transport.to_string()))
+        Ok(ShardExecutor::assemble(
+            workers,
+            assignment,
+            blocks.len(),
+            launch.transport.to_string(),
+            launch.compress,
+        ))
     }
 
     /// Test/bench-facing variant of [`ShardExecutor::launch`]: shard
@@ -1005,7 +1425,12 @@ impl ShardExecutor {
     /// indices. One transport per shard (shard count = transport count,
     /// capped at the block count). `proto` pins the workers' wire
     /// protocol version ([`PROTO_VERSION`] normally; 1 emulates a
-    /// pre-RefreshAhead worker for the degrade-to-sync matrix).
+    /// pre-RefreshAhead worker for the degrade-to-sync matrix, 2 a
+    /// pre-compression worker for the full-frame degrade matrix);
+    /// `compress` requests the v3 delta payload layer (inert below v3).
+    /// This doubles as the scriptable in-test *launcher*: the same
+    /// worker state machine the process/ssh launchers run, mounted on
+    /// threads over the fault harness.
     pub fn launch_in_proc(
         blocks: &[Block],
         kind: UnitKind,
@@ -1013,6 +1438,7 @@ impl ShardExecutor {
         threads: usize,
         transports: &[Arc<FaultInjectingTransport>],
         proto: u32,
+        compress: bool,
     ) -> anyhow::Result<ShardExecutor> {
         ensure!(!transports.is_empty(), "in-proc shard launch requires at least one transport");
         ensure!(!blocks.is_empty(), "shard launch requires at least one block");
@@ -1065,11 +1491,18 @@ impl ShardExecutor {
             let mut w = WorkerHandle {
                 channel,
                 backend: WorkerBackend::InProc { join: Some(join) },
+                delta: DeltaCodec::default(),
             };
             init_worker(&mut w, shard, &init_msg_for(owned, blocks, kind, base, worker_threads))?;
             workers.push(w);
         }
-        Ok(ShardExecutor::assemble(workers, assignment, blocks.len(), "in-proc".to_string()))
+        Ok(ShardExecutor::assemble(
+            workers,
+            assignment,
+            blocks.len(),
+            "in-proc".to_string(),
+            compress,
+        ))
     }
 
     /// Shared tail of the launch paths: record the per-worker capability
@@ -1080,6 +1513,7 @@ impl ShardExecutor {
         assignment: Vec<Vec<usize>>,
         n_blocks: usize,
         transport: String,
+        compress: bool,
     ) -> ShardExecutor {
         let overlap = workers.iter().all(|w| w.channel.overlap);
         for w in &workers {
@@ -1096,7 +1530,14 @@ impl ShardExecutor {
                 );
             }
         }
-        ShardExecutor { workers: Mutex::new(workers), assignment, n_blocks, transport, overlap }
+        ShardExecutor {
+            workers: Mutex::new(workers),
+            assignment,
+            n_blocks,
+            transport,
+            overlap,
+            compress,
+        }
     }
 
     /// Worker process count actually launched.
@@ -1107,7 +1548,7 @@ impl ShardExecutor {
     /// Fault injection for tests: SIGKILL one worker process. The next
     /// step surfaces an error naming the shard.
     pub fn kill_worker(&mut self, shard: usize) -> anyhow::Result<()> {
-        let workers = self.workers.get_mut().unwrap();
+        let workers = workers_mut(&mut self.workers)?;
         let w = workers
             .get_mut(shard)
             .ok_or_else(|| anyhow!("no shard {shard}"))?;
@@ -1127,13 +1568,17 @@ impl ShardExecutor {
     /// Fault injection for tests: drop every driver-side connection.
     /// The next request reconnects transparently (workers keep state).
     pub fn drop_connections(&mut self) {
-        for w in self.workers.get_mut().unwrap().iter_mut() {
+        // Recover from poisoning: this only clears connection handles.
+        let workers = self.workers.get_mut().unwrap_or_else(std::sync::PoisonError::into_inner);
+        for w in workers.iter_mut() {
             w.channel.conn = None;
         }
     }
 
     fn mem_stats_total(&self) -> (usize, usize) {
-        let mut workers = self.workers.lock().unwrap();
+        // Diagnostics must not die on a poisoned lock — recover the
+        // inner table (the accounting reads are safe either way).
+        let mut workers = self.workers.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut mem = 0usize;
         let mut second = 0usize;
         for w in workers.iter_mut() {
@@ -1141,6 +1586,9 @@ impl ShardExecutor {
             // RefreshAhead slot — join-and-discard it before any other
             // request.
             w.drain_pending_refresh();
+            // Driver-side delta baselines are part of the engine's real
+            // footprint too (the workers report their own).
+            mem += w.delta.mem_bytes();
             let shard = w.channel.shard;
             match w.channel.request(&WireMsg::MemStats) {
                 Ok(WireMsg::MemStatsOk { mem_bytes, second_moment_bytes }) => {
@@ -1188,8 +1636,10 @@ impl BlockExecutor for ShardExecutor {
                  (only refresh_due may vary across blocks on the shard wire)"
             );
         }
-        let ShardExecutor { workers, assignment, .. } = self;
-        let workers = workers.get_mut().unwrap();
+        let ShardExecutor { workers, assignment, compress, .. } = self;
+        let compress = *compress;
+        let workers = workers_mut(workers)?;
+        let t64 = common.t as u64;
         // Ship every shard its gathered block statistics first, then
         // collect replies in shard order — workers compute concurrently.
         for (shard, w) in workers.iter_mut().enumerate() {
@@ -1198,28 +1648,71 @@ impl BlockExecutor for ShardExecutor {
             // out (the engine normally joins first; direct executor
             // drivers may not).
             w.drain_pending_refresh();
-            let entries: Vec<StepEntry> = assignment[shard]
-                .iter()
-                .map(|&i| {
+            let msg = if compress && w.channel.proto >= 3 && w.channel.compress {
+                // v3 payload layer. A reconnect since the last encode
+                // invalidates nothing semantically (baselines are
+                // tagged), but we drop them and resync with full
+                // frames anyway — the worker is told to do the same.
+                let resync = w.delta.generation != w.channel.generation;
+                if resync {
+                    w.delta = DeltaCodec { generation: w.channel.generation, ..Default::default() };
+                }
+                let base = w.delta.tx.take().filter(|(bt, _)| bt + 1 == t64);
+                let base_t = base.as_ref().map(|(bt, _)| *bt).unwrap_or(0);
+                let mut sent: BlockBits = BTreeMap::new();
+                let mut entries = Vec::with_capacity(assignment[shard].len());
+                for &i in &assignment[shard] {
                     let b = &blocks[i];
-                    StepEntry {
+                    let (rows, cols) = b.shape();
+                    let pbits = mat_bits(&params[b.tensor].slice(b.r0, b.r1, b.c0, b.c1));
+                    let gbits = mat_bits(&grads[b.tensor].slice(b.r0, b.r1, b.c0, b.c1));
+                    let bb = base.as_ref().and_then(|(_, m)| m.get(&(i as u32)));
+                    entries.push(StepEntryV3 {
                         index: i as u32,
                         refresh_due: ctxs[i].refresh_due,
-                        param: params[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
-                        grad: grads[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
-                    }
+                        param: DeltaMat::encode(rows, cols, &pbits, bb.map(|(p, _)| p.as_slice())),
+                        grad: DeltaMat::encode(rows, cols, &gbits, bb.map(|(_, g)| g.as_slice())),
+                    });
+                    sent.insert(i as u32, (pbits, gbits));
+                }
+                w.delta.tx = base;
+                w.delta.tx_pending = Some((t64, sent));
+                WireMsg::StepV3(StepV3Msg {
+                    t: t64,
+                    base_t,
+                    resync,
+                    scale: common.scale,
+                    preconditioning: common.preconditioning,
+                    stat_due: common.stat_due,
+                    lr: common.lr,
+                    beta1: common.beta1,
+                    weight_decay: common.weight_decay,
+                    entries,
                 })
-                .collect();
-            let msg = WireMsg::Step(StepMsg {
-                t: common.t as u64,
-                scale: common.scale,
-                preconditioning: common.preconditioning,
-                stat_due: common.stat_due,
-                lr: common.lr,
-                beta1: common.beta1,
-                weight_decay: common.weight_decay,
-                entries,
-            });
+            } else {
+                let entries: Vec<StepEntry> = assignment[shard]
+                    .iter()
+                    .map(|&i| {
+                        let b = &blocks[i];
+                        StepEntry {
+                            index: i as u32,
+                            refresh_due: ctxs[i].refresh_due,
+                            param: params[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
+                            grad: grads[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
+                        }
+                    })
+                    .collect();
+                WireMsg::Step(StepMsg {
+                    t: t64,
+                    scale: common.scale,
+                    preconditioning: common.preconditioning,
+                    stat_due: common.stat_due,
+                    lr: common.lr,
+                    beta1: common.beta1,
+                    weight_decay: common.weight_decay,
+                    entries,
+                })
+            };
             w.channel
                 .send(&msg)
                 .with_context(|| format!("shard {shard}: send step t={}", common.t))?;
@@ -1230,47 +1723,119 @@ impl BlockExecutor for ShardExecutor {
                 .channel
                 .recv()
                 .with_context(|| format!("shard {shard}: step t={} reply", common.t))?;
-            let ok = match reply {
-                WireMsg::StepOk(ok) => ok,
-                WireMsg::Error { message } => bail!("shard {shard}: worker error: {message}"),
-                other => bail!("shard {shard}: unexpected step reply {other:?}"),
-            };
-            ensure!(
-                ok.t == common.t as u64,
-                "shard {shard}: reply for step {} while driving step {}",
-                ok.t,
-                common.t
-            );
-            ensure!(
-                ok.entries.len() == assignment[shard].len(),
-                "shard {shard}: returned {} blocks, owns {}",
-                ok.entries.len(),
-                assignment[shard].len()
-            );
-            refreshes += ok.refreshes as usize;
             // Ownership bounds: assignments are contiguous runs, so a
             // range check validates each returned index in O(1).
             let (own_lo, own_hi) = match (assignment[shard].first(), assignment[shard].last()) {
                 (Some(&lo), Some(&hi)) => (lo, hi),
                 _ => (1, 0), // empty shard: any index is foreign
             };
-            // Scatter: write each returned block into its disjoint
-            // parameter window (bitwise — payloads are raw f64 bits).
-            for (index, block_param) in &ok.entries {
-                let i = *index as usize;
-                ensure!(
-                    i >= own_lo && i <= own_hi && i < blocks.len(),
-                    "shard {shard}: returned foreign block {i}"
-                );
-                let b = &blocks[i];
-                ensure!(
-                    block_param.shape() == b.shape(),
-                    "shard {shard}: block {i} shape {:?}, want {:?}",
-                    block_param.shape(),
-                    b.shape()
-                );
-                params[b.tensor].set_slice(b.r0, b.c0, block_param);
-            }
+            // Both reply forms validate t / count / per-block ownership
+            // and shape *before* any scatter or payload resolution —
+            // the shape bound is what keeps a corrupt or hostile reply
+            // from turning a few-byte compressed frame into a giant
+            // decompression (the same contract the worker side enforces
+            // on uploads). The scatter writes each disjoint block
+            // window directly (bitwise — payloads are raw f64 bits, and
+            // the delta codec is bit-lossless).
+            refreshes += match reply {
+                WireMsg::StepOk(ok) => {
+                    ensure!(
+                        ok.t == t64,
+                        "shard {shard}: reply for step {} while driving step {}",
+                        ok.t,
+                        common.t
+                    );
+                    ensure!(
+                        ok.entries.len() == assignment[shard].len(),
+                        "shard {shard}: returned {} blocks, owns {}",
+                        ok.entries.len(),
+                        assignment[shard].len()
+                    );
+                    for (index, m) in &ok.entries {
+                        let i = *index as usize;
+                        ensure!(
+                            i >= own_lo && i <= own_hi && i < blocks.len(),
+                            "shard {shard}: returned foreign block {i}"
+                        );
+                        let b = &blocks[i];
+                        ensure!(
+                            m.shape() == b.shape(),
+                            "shard {shard}: block {i} shape {:?}, want {:?}",
+                            m.shape(),
+                            b.shape()
+                        );
+                        params[b.tensor].set_slice(b.r0, b.c0, m);
+                    }
+                    ok.refreshes as usize
+                }
+                WireMsg::StepOkV3(ok) => {
+                    ensure!(
+                        ok.t == t64,
+                        "shard {shard}: reply for step {} while driving step {}",
+                        ok.t,
+                        common.t
+                    );
+                    ensure!(
+                        ok.entries.len() == assignment[shard].len(),
+                        "shard {shard}: returned {} blocks, owns {}",
+                        ok.entries.len(),
+                        assignment[shard].len()
+                    );
+                    let mut rx_new: ParamBits = BTreeMap::new();
+                    for (index, dm) in &ok.entries {
+                        let i = *index as usize;
+                        ensure!(
+                            i >= own_lo && i <= own_hi && i < blocks.len(),
+                            "shard {shard}: returned foreign block {i}"
+                        );
+                        let b = &blocks[i];
+                        let (rows, cols) = b.shape();
+                        ensure!(
+                            dm.shape() == (rows, cols),
+                            "shard {shard}: block {i} shape {:?}, want {:?}",
+                            dm.shape(),
+                            b.shape()
+                        );
+                        let base = match dm {
+                            DeltaMat::Delta { .. } => match &w.delta.rx {
+                                Some((bt, map)) if *bt == ok.base_t && ok.base_t != 0 => {
+                                    Some(map.get(index).ok_or_else(|| {
+                                        anyhow!(
+                                            "shard {shard}: delta reply for block {index} \
+                                             with no baseline entry"
+                                        )
+                                    })?)
+                                }
+                                _ => bail!(
+                                    "shard {shard}: delta reply base t={} does not match \
+                                     the held baseline",
+                                    ok.base_t
+                                ),
+                            },
+                            _ => None,
+                        };
+                        let bits = dm
+                            .resolve(base.map(|b| b.as_slice()))
+                            .with_context(|| format!("shard {shard}: block {index} payload"))?;
+                        params[b.tensor].set_slice(b.r0, b.c0, &bits_matrix(rows, cols, &bits));
+                        rx_new.insert(*index, bits);
+                    }
+                    // Advance the codec baselines only after every
+                    // entry decoded: the upload is now acked and the
+                    // download fully resolved.
+                    if compress && w.channel.proto >= 3 && w.channel.compress {
+                        w.delta.rx = Some((t64, rx_new));
+                        if let Some((pt, m)) = w.delta.tx_pending.take() {
+                            if pt == t64 {
+                                w.delta.tx = Some((pt, m));
+                            }
+                        }
+                    }
+                    ok.refreshes as usize
+                }
+                WireMsg::Error { message } => bail!("shard {shard}: worker error: {message}"),
+                other => bail!("shard {shard}: unexpected step reply {other:?}"),
+            };
         }
         Ok(refreshes)
     }
@@ -1293,7 +1858,16 @@ impl BlockExecutor for ShardExecutor {
         }
         let ShardExecutor { workers, assignment, n_blocks, .. } = self;
         debug_assert_eq!(plan.due.len(), *n_blocks);
-        let workers = workers.get_mut().unwrap();
+        let workers = match workers_mut(workers) {
+            Ok(w) => w,
+            Err(e) => {
+                // Declining is always bitwise-safe (the step refreshes
+                // synchronously); the poisoned table will fail the next
+                // step with the shard-error contract.
+                eprintln!("refresh-ahead declined: {e:#}");
+                return false;
+            }
+        };
         let mut any = false;
         for (shard, w) in workers.iter_mut().enumerate() {
             debug_assert!(
@@ -1334,7 +1908,7 @@ impl BlockExecutor for ShardExecutor {
 
     fn finish_refresh_ahead(&mut self) -> anyhow::Result<Option<RefreshAheadDone>> {
         let ShardExecutor { workers, assignment, n_blocks, .. } = self;
-        let workers = workers.get_mut().unwrap();
+        let workers = workers_mut(workers)?;
         let mut refreshed = vec![false; *n_blocks];
         let mut count = 0usize;
         let mut any = false;
@@ -1377,7 +1951,12 @@ impl BlockExecutor for ShardExecutor {
     }
 
     fn label(&self) -> String {
-        format!("shards={}/{}", self.assignment.len(), self.transport)
+        format!(
+            "shards={}/{}{}",
+            self.assignment.len(),
+            self.transport,
+            if self.compress { "+delta" } else { "" }
+        )
     }
 }
 
@@ -1427,7 +2006,30 @@ mod tests {
         let defaults = ShardConfig::resolve(&Args::default(), &Config::default()).unwrap();
         assert_eq!(defaults.shards, 0);
         assert_eq!(defaults.proto, PROTO_VERSION);
+        assert!(defaults.compress, "delta compression defaults on");
+        assert_eq!(defaults.launch, None);
         assert!(!defaults.enabled());
+        // Compression + launcher knobs resolve with the same precedence.
+        let cfg2 = Config::parse(
+            "[shard]\ncompress = false\nlaunch = \"ssh host{shard} /opt/sk {worker_cmd}\"",
+        )
+        .unwrap();
+        let sc2 = ShardConfig::resolve(&Args::default(), &cfg2).unwrap();
+        assert!(!sc2.compress);
+        assert_eq!(sc2.launch.as_deref(), Some("ssh host{shard} /opt/sk {worker_cmd}"));
+        let args2 = Args::parse(
+            ["train", "--shard-compress", "true", "--shard-launch", "env {program} {worker_cmd}"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let sc3 = ShardConfig::resolve(&args2, &cfg2).unwrap();
+        assert!(sc3.compress, "CLI beats config");
+        assert_eq!(sc3.launch.as_deref(), Some("env {program} {worker_cmd}"));
+        // An explicit empty CLI template clears a config-file one
+        // (back to plain local exec).
+        let clear = Args::parse(["train", "--shard-launch", ""].iter().map(|s| s.to_string()));
+        let sc4 = ShardConfig::resolve(&clear, &cfg2).unwrap();
+        assert_eq!(sc4.launch, None, "empty CLI template disables the config template");
         let bad = Args::parse(
             ["train", "--shard-transport", "smoke-signals"].iter().map(|s| s.to_string()),
         );
@@ -1620,7 +2222,7 @@ mod tests {
         let mut conn = t.dial().unwrap();
         let _ = conn.set_timeout(Some(Duration::from_secs(10)));
         match wire::read_msg(&mut conn).unwrap() {
-            WireMsg::HelloV2 { worker_id: 0, overlap: true, .. } => {}
+            WireMsg::HelloV3 { worker_id: 0, overlap: true, compress: true, .. } => {}
             other => panic!("unexpected hello: {other:?}"),
         }
         let init = WireMsg::Init(InitMsg {
@@ -1689,6 +2291,7 @@ mod tests {
             1,
             &transports,
             PROTO_VERSION,
+            false,
         )
         .expect("launch in-proc executor");
         assert!(exec.overlap_capable());
@@ -1724,9 +2327,16 @@ mod tests {
         let base = ShampooConfig::default();
         let transports: Vec<_> =
             (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
-        let mut exec =
-            ShardExecutor::launch_in_proc(&blocks, UnitKind::Shampoo, &base, 1, &transports, 1)
-                .expect("launch v1 in-proc executor");
+        let mut exec = ShardExecutor::launch_in_proc(
+            &blocks,
+            UnitKind::Shampoo,
+            &base,
+            1,
+            &transports,
+            1,
+            true,
+        )
+        .expect("launch v1 in-proc executor");
         assert!(!exec.overlap_capable(), "v1 workers must not report overlap capability");
         // And begin_refresh_ahead declines instead of wedging the wire.
         let declined = exec.begin_refresh_ahead(RefreshAheadPlan {
@@ -1736,6 +2346,320 @@ mod tests {
         });
         assert!(!declined);
         assert!(exec.finish_refresh_ahead().unwrap().is_none());
+    }
+
+    #[test]
+    fn compressed_in_proc_executor_matches_local_executor_bitwise() {
+        // Full driver ↔ worker protocol with the v3 delta payload layer
+        // on: the codec is bit-lossless, so the run must stay bitwise
+        // identical to the local executor while shipping fewer bytes.
+        let shapes = [(6usize, 6usize)];
+        let blocks = partition(&shapes, 3);
+        let base = ShampooConfig {
+            lr: 0.05,
+            start_preconditioning_step: 2,
+            graft: GraftType::Rmsprop,
+            ..Default::default()
+        };
+        let mut local = crate::optim::LocalExecutor::new(&blocks, UnitKind::Shampoo, &base, 1);
+        let transports: Vec<_> =
+            (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
+        let mut exec = ShardExecutor::launch_in_proc(
+            &blocks,
+            UnitKind::Shampoo,
+            &base,
+            1,
+            &transports,
+            PROTO_VERSION,
+            true,
+        )
+        .expect("launch compressed in-proc executor");
+        assert_eq!(exec.label(), "shards=2/in-proc+delta");
+        let mut p1 = vec![Matrix::zeros(6, 6)];
+        let mut p2 = p1.clone();
+        let mut rng = Pcg64::new(530);
+        for t in 1..=8usize {
+            let grads = vec![Matrix::randn(6, 6, &mut rng)];
+            let ctxs: Vec<StepCtx> = (0..blocks.len())
+                .map(|i| StepCtx {
+                    t,
+                    scale: 1.0,
+                    preconditioning: t >= 2,
+                    refresh_due: (t + i) % 2 == 0,
+                    lr: 0.05,
+                    beta1: 0.9,
+                    weight_decay: 1e-3,
+                    stat_due: true,
+                    graft: GraftType::Rmsprop,
+                })
+                .collect();
+            local.step_blocks(&blocks, &mut p1, &grads, &ctxs).unwrap();
+            exec.step_blocks(&blocks, &mut p2, &grads, &ctxs).expect("compressed step");
+            assert_eq!(p1[0].max_diff(&p2[0]), 0.0, "diverged at step {t}");
+            if t == 4 {
+                // Mid-run reconnect: the next encoded step must resync
+                // with full frames and keep the numbers identical.
+                exec.drop_connections();
+            }
+        }
+        let v2_bytes: u64 = transports.iter().map(|t| t.bytes_delivered()).sum();
+        assert!(v2_bytes > 0);
+    }
+
+    #[test]
+    fn duplicated_delta_steps_are_served_from_the_reply_cache() {
+        // A replayed StepV3 landing on top of the original (frame
+        // duplication inside a delta stream) must be answered with the
+        // *same bytes* — before any baseline logic runs. Re-processing
+        // would re-fold statistics and re-tag the baselines.
+        use crate::coordinator::fault::FaultAction;
+        let t = FaultInjectingTransport::with_config(
+            // Request frames: 0 = Init, 1 = StepV3 #1, 2 = StepV3 #2
+            // (duplicated — it carries Delta payloads).
+            FaultScript::none().on_request(2, FaultAction::DuplicateFrame),
+            usize::MAX,
+            Some(Duration::from_secs(30)),
+        );
+        let acceptor = t.take_acceptor().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut state: Option<WorkerState> = None;
+            while let Ok(mut conn) = acceptor.recv() {
+                match handle_conn(&mut conn, &mut state, 0, PROTO_VERSION) {
+                    Ok(true) => continue,
+                    _ => break,
+                }
+            }
+        });
+        let mut conn = t.dial().unwrap();
+        let _ = conn.set_timeout(Some(Duration::from_secs(10)));
+        match wire::read_msg(&mut conn).unwrap() {
+            WireMsg::HelloV3 { compress: true, .. } => {}
+            other => panic!("unexpected hello: {other:?}"),
+        }
+        let init = WireMsg::Init(InitMsg {
+            kind: UnitKind::Shampoo.code(),
+            rank: 0,
+            beta2: 0.999,
+            eps: 1e-6,
+            one_sided: false,
+            graft: GraftType::Rmsprop.code(),
+            threads: 1,
+            blocks: vec![BlockSpec { index: 0, rows: 3, cols: 3 }],
+        });
+        wire::write_msg(&mut conn, &init).unwrap();
+        assert_eq!(wire::read_msg(&mut conn).unwrap(), WireMsg::Ok);
+        let mut rng = Pcg64::new(531);
+        let mk_step =
+            |t: u64, base_t: u64, pbits: &[u64], gbits: &[u64], base: Option<(&[u64], &[u64])>| {
+                WireMsg::StepV3(StepV3Msg {
+                    t,
+                    base_t,
+                    resync: false,
+                    scale: 1.0,
+                    preconditioning: true,
+                    stat_due: true,
+                    lr: 0.05,
+                    beta1: 0.9,
+                    weight_decay: 0.0,
+                    entries: vec![StepEntryV3 {
+                        index: 0,
+                        refresh_due: true,
+                        param: DeltaMat::encode(3, 3, pbits, base.map(|(p, _)| p)),
+                        grad: DeltaMat::encode(3, 3, gbits, base.map(|(_, g)| g)),
+                    }],
+                })
+            };
+        let p1 = mat_bits(&Matrix::zeros(3, 3));
+        let g1 = mat_bits(&Matrix::randn(3, 3, &mut rng));
+        wire::write_msg(&mut conn, &mk_step(1, 0, &p1, &g1, None)).unwrap();
+        let r1 = wire::read_msg(&mut conn).unwrap();
+        let p2 = match &r1 {
+            WireMsg::StepOkV3(ok) => ok.entries[0].1.resolve(None).unwrap(),
+            other => panic!("unexpected reply: {other:?}"),
+        };
+        // Step 2: delta-encoded against step 1 — this frame duplicates.
+        let g2 = mat_bits(&Matrix::randn(3, 3, &mut rng));
+        wire::write_msg(&mut conn, &mk_step(2, 1, &p2, &g2, Some((&p1, &g1)))).unwrap();
+        let r2 = wire::read_msg(&mut conn).unwrap();
+        let r2_dup = wire::read_msg(&mut conn).unwrap();
+        assert!(matches!(r2, WireMsg::StepOkV3(_)), "got {r2:?}");
+        assert_eq!(
+            wire::encode_frame(&r2).unwrap(),
+            wire::encode_frame(&r2_dup).unwrap(),
+            "duplicate delta step must be served from the reply cache"
+        );
+        wire::write_msg(&mut conn, &WireMsg::Shutdown).unwrap();
+        assert_eq!(wire::read_msg(&mut conn).unwrap(), WireMsg::Ok);
+        drop(conn);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn delta_base_mismatch_is_rejected_and_resync_recovers() {
+        let init = InitMsg {
+            kind: UnitKind::Adam.code(),
+            rank: 0,
+            beta2: 0.999,
+            eps: 1e-6,
+            one_sided: false,
+            graft: GraftType::None.code(),
+            threads: 1,
+            blocks: vec![BlockSpec { index: 0, rows: 2, cols: 2 }],
+        };
+        let mut ws = WorkerState::build(&init).unwrap();
+        let mut rng = Pcg64::new(532);
+        let bits = |m: &Matrix| mat_bits(m);
+        let p = bits(&Matrix::zeros(2, 2));
+        let g = bits(&Matrix::randn(2, 2, &mut rng));
+        let mk = |t: u64, base_t: u64, resync: bool, param: DeltaMat, grad: DeltaMat| StepV3Msg {
+            t,
+            base_t,
+            resync,
+            scale: 1.0,
+            preconditioning: true,
+            stat_due: true,
+            lr: 0.05,
+            beta1: 0.0,
+            weight_decay: 0.0,
+            entries: vec![StepEntryV3 { index: 0, refresh_due: false, param, grad }],
+        };
+        // A Delta payload claiming a baseline the worker never saw must
+        // be rejected loudly, not XORed against garbage.
+        let orphan = mk(
+            1,
+            7,
+            false,
+            DeltaMat::Delta { rows: 2, cols: 2, comp: wire::rle_compress(&[0u8; 32]) },
+            DeltaMat::encode(2, 2, &g, None),
+        );
+        let err = ws.process_step_v3(&orphan).unwrap_err();
+        assert!(format!("{err:#}").contains("baseline"), "{err:#}");
+        // Full frames (the resync path) recover the stream.
+        let full =
+            mk(1, 0, true, DeltaMat::encode(2, 2, &p, None), DeltaMat::encode(2, 2, &g, None));
+        let ok1 = ws.process_step_v3(&full).unwrap();
+        assert_eq!(ok1.t, 1);
+        assert_eq!(ok1.base_t, 0, "first reply has no baseline to delta against");
+        // Steady state: deltas against t=1 decode and the reply deltas
+        // against the previous reply.
+        let p2 = ok1.entries[0].1.resolve(None).unwrap();
+        let g2 = bits(&Matrix::randn(2, 2, &mut rng));
+        let step2 = mk(
+            2,
+            1,
+            false,
+            DeltaMat::encode(2, 2, &p2, Some(&p)),
+            DeltaMat::encode(2, 2, &g2, Some(&g)),
+        );
+        let ok2 = ws.process_step_v3(&step2).unwrap();
+        assert_eq!(ok2.base_t, 1, "steady-state replies delta against the previous reply");
+        // A stale tag (t=1 again after t=2 advanced the baseline) is a
+        // mismatch, not a silent mis-application.
+        let stale = mk(
+            3,
+            1,
+            false,
+            DeltaMat::Delta { rows: 2, cols: 2, comp: wire::rle_compress(&[0u8; 32]) },
+            DeltaMat::encode(2, 2, &g2, None),
+        );
+        let err = ws.process_step_v3(&stale).unwrap_err();
+        assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn launch_template_renders_argv() {
+        let worker_args: Vec<String> =
+            ["shard-worker", "--worker-id", "1"].iter().map(|s| s.to_string()).collect();
+        let prog = PathBuf::from("/opt/sketchy/sketchy");
+        // Placeholder splice in the middle, {shard}/{program} substitution.
+        let (p, args) = render_launch_command(
+            "ssh worker-{shard}.cluster {program} {worker_cmd} --advertise-host worker-{shard}.cluster",
+            &prog,
+            1,
+            &worker_args,
+        )
+        .unwrap();
+        assert_eq!(p, PathBuf::from("ssh"));
+        assert_eq!(
+            args,
+            vec![
+                "worker-1.cluster",
+                "/opt/sketchy/sketchy",
+                "shard-worker",
+                "--worker-id",
+                "1",
+                "--advertise-host",
+                "worker-1.cluster",
+            ]
+        );
+        // No placeholder: worker command appended.
+        let (p, args) = render_launch_command("env {program}", &prog, 0, &worker_args).unwrap();
+        assert_eq!(p, PathBuf::from("env"));
+        assert_eq!(
+            args,
+            vec!["/opt/sketchy/sketchy", "shard-worker", "--worker-id", "1"]
+        );
+        // Degenerate templates are refused.
+        assert!(render_launch_command("   ", &prog, 0, &worker_args).is_err());
+        assert!(render_launch_command("{worker_cmd}", &prog, 0, &worker_args).is_err());
+        // An embedded placeholder (missing space) fails fast instead of
+        // shipping the literal to the remote argv.
+        let glued = "ssh h {program} {worker_cmd}--listen 0.0.0.0:0";
+        assert!(render_launch_command(glued, &prog, 0, &worker_args).is_err());
+    }
+
+    #[test]
+    fn poisoned_worker_table_surfaces_shard_error_not_poison_panic() {
+        let shapes = [(4usize, 4usize)];
+        let blocks = partition(&shapes, 2);
+        let base = ShampooConfig::default();
+        let transports: Vec<_> =
+            (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
+        let mut exec = ShardExecutor::launch_in_proc(
+            &blocks,
+            UnitKind::Shampoo,
+            &base,
+            1,
+            &transports,
+            PROTO_VERSION,
+            false,
+        )
+        .expect("launch executor");
+        // Poison the worker-table lock the way a real failure would: a
+        // panic while a shared-ref path holds it.
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = exec.workers.lock().unwrap();
+            panic!("boom while holding the worker table");
+        }));
+        assert!(poison.is_err());
+        let mut params = vec![Matrix::zeros(4, 4)];
+        let grads = vec![Matrix::zeros(4, 4)];
+        let ctxs: Vec<StepCtx> = (0..blocks.len())
+            .map(|_| StepCtx {
+                t: 1,
+                scale: 1.0,
+                preconditioning: false,
+                refresh_due: false,
+                lr: 0.05,
+                beta1: 0.9,
+                weight_decay: 0.0,
+                stat_due: true,
+                graft: GraftType::Rmsprop,
+            })
+            .collect();
+        let err = exec
+            .step_blocks(&blocks, &mut params, &grads, &ctxs)
+            .expect_err("a poisoned table must fail the step, not panic");
+        assert!(format!("{err:#}").contains("poisoned"), "{err:#}");
+        // RefreshAhead declines instead of panicking…
+        assert!(!exec.begin_refresh_ahead(RefreshAheadPlan {
+            due: vec![false; blocks.len()],
+            all: true,
+            t_next: 2,
+        }));
+        assert!(exec.finish_refresh_ahead().is_err());
+        // …and diagnostics recover rather than dying on the poison.
+        let _ = exec.mem_bytes();
     }
 
     #[test]

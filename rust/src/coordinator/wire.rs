@@ -14,13 +14,35 @@
 //! |-------------------|---------------------|
 //! | [`WireMsg::Init`] | [`WireMsg::Ok`]     |
 //! | [`WireMsg::Step`] | [`WireMsg::StepOk`] |
+//! | [`WireMsg::StepV3`] | [`WireMsg::StepOkV3`] |
 //! | [`WireMsg::RefreshAhead`] | [`WireMsg::RefreshAheadOk`] |
 //! | [`WireMsg::MemStats`] | [`WireMsg::MemStatsOk`] |
 //! | [`WireMsg::Shutdown`] | [`WireMsg::Ok`], then exits |
 //!
 //! plus the handshake ([`WireMsg::Hello`] at protocol v1,
-//! [`WireMsg::HelloV2`] from v2 — worker → driver, once per connection)
-//! and [`WireMsg::Error`] (worker → driver, in place of any reply).
+//! [`WireMsg::HelloV2`] at v2, [`WireMsg::HelloV3`] from v3 — worker →
+//! driver, once per connection) and [`WireMsg::Error`] (worker →
+//! driver, in place of any reply).
+//!
+//! ## Wire protocol v3: delta-compressed block payloads
+//!
+//! Full frames ship every block's dense factors as raw `f64` bits —
+//! fine on localhost, prohibitive on cross-host links. Protocol v3 adds
+//! a payload layer ([`WireMsg::StepV3`] / [`WireMsg::StepOkV3`]) that
+//! exploits what the Sketchy argument implies about the state worth
+//! moving: between consecutive steps most parameter bits either do not
+//! change at all (the driver re-uploads exactly the block the worker
+//! returned; inactive embedding columns are bit-frozen) or change by a
+//! small update. Each matrix travels as a [`DeltaMat`]: raw, or the
+//! RLE/varint compression of its `f64` bit patterns XORed against the
+//! receiver's baseline — the payload of the last mutually acked step,
+//! tagged by `base_t` so a replayed frame can never be applied against
+//! the wrong baseline. A `resync` flag (set by the driver after any
+//! reconnect) drops all baselines and forces full frames in both
+//! directions. The codec is **lossless on bit patterns**, so the shard
+//! determinism contract (bitwise identity with the in-process engine)
+//! is untouched; v2/v1 peers simply keep receiving uncompressed full
+//! frames, exactly like the refresh-overlap degrade matrix.
 //!
 //! `RefreshAhead` is the only request the driver parks: it is sent at the
 //! end of step `t` and its reply is not read until the top of step
@@ -30,15 +52,18 @@
 //! that shard to synchronous refresh.
 
 use crate::tensor::Matrix;
-use anyhow::{bail, Context};
+use anyhow::{anyhow, bail, ensure, Context};
 use std::io::{Read, Write};
 use std::time::Duration;
 
-/// Current wire protocol version, carried in [`WireMsg::HelloV2`].
+/// Current wire protocol version, carried in [`WireMsg::HelloV3`].
 /// Version 1 (the plain [`WireMsg::Hello`] greeting) predates the
 /// `RefreshAhead` messages; drivers treat v1 workers as refresh-overlap
-/// incapable and keep their refreshes synchronous.
-pub const PROTO_VERSION: u32 = 2;
+/// incapable and keep their refreshes synchronous. Version 2 added the
+/// capability handshake + RefreshAhead; version 3 adds the
+/// delta-compressed block payload layer ([`DeltaMat`]). Drivers treat
+/// v2/v1 workers as compression-incapable and ship full frames.
+pub const PROTO_VERSION: u32 = 3;
 
 /// A connected driver↔worker byte stream: any transport the shard
 /// channel can speak — TCP, Unix sockets, or the in-memory
@@ -144,6 +169,273 @@ pub struct RefreshAheadOkMsg {
     pub refreshed: Vec<u32>,
 }
 
+/// One matrix payload in a v3 delta stream. The codec is stateless:
+/// decoding yields the mode + compressed bytes, and XOR application
+/// against the receiver's baseline happens in the message handler —
+/// after the step-replay cache and shape validation have run, so a
+/// replayed or malformed frame can never corrupt baseline state.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeltaMat {
+    /// Uncompressed full frame — bit-for-bit the v2 matrix encoding
+    /// (chosen when compression would not shrink the payload).
+    Raw(Matrix),
+    /// RLE/varint-compressed full frame (no baseline needed).
+    Full { rows: u32, cols: u32, comp: Vec<u8> },
+    /// RLE/varint-compressed XOR of the matrix's `f64` bit patterns
+    /// against the receiver's baseline bits for this block, which must
+    /// be tagged with the enclosing message's `base_t`.
+    Delta { rows: u32, cols: u32, comp: Vec<u8> },
+}
+
+impl DeltaMat {
+    /// Declared shape (validated against the plausibility bound at
+    /// decode; the receiver still checks it against the block it owns
+    /// before resolving).
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            DeltaMat::Raw(m) => m.shape(),
+            DeltaMat::Full { rows, cols, .. } | DeltaMat::Delta { rows, cols, .. } => {
+                (*rows as usize, *cols as usize)
+            }
+        }
+    }
+
+    /// Encode a `rows`×`cols` matrix given as bit patterns, choosing
+    /// the smallest of raw / compressed-full / compressed-delta (delta
+    /// requires `base`, the receiver's baseline bits). Deterministic:
+    /// same inputs, same choice, same bytes.
+    pub fn encode(rows: usize, cols: usize, cur: &[u64], base: Option<&[u64]>) -> DeltaMat {
+        debug_assert_eq!(rows * cols, cur.len());
+        let raw_len = cur.len() * 8;
+        // Prefer a winning delta outright — compressing the full frame
+        // as well, just to compare, would double the per-step encode
+        // cost for payloads whose delta already crushes (the unchanged
+        // upload / frozen-parameter hot cases).
+        if let Some(base) = base {
+            debug_assert_eq!(base.len(), cur.len());
+            let mut xored = Vec::with_capacity(raw_len);
+            for (c, b) in cur.iter().zip(base) {
+                xored.extend_from_slice(&(c ^ b).to_le_bytes());
+            }
+            let d = rle_compress(&xored);
+            if d.len() < raw_len {
+                return DeltaMat::Delta { rows: rows as u32, cols: cols as u32, comp: d };
+            }
+        }
+        let mut plain = Vec::with_capacity(raw_len);
+        for c in cur {
+            plain.extend_from_slice(&c.to_le_bytes());
+        }
+        let full = rle_compress(&plain);
+        if full.len() < raw_len {
+            DeltaMat::Full { rows: rows as u32, cols: cols as u32, comp: full }
+        } else {
+            DeltaMat::Raw(bits_matrix(rows, cols, cur))
+        }
+    }
+
+    /// Resolve to full bit patterns, XORing `Delta` payloads against
+    /// `base`. The caller must have validated the shape against the
+    /// block it owns first — `expected` output length derives from it,
+    /// which is what bounds the decompressor's allocation.
+    pub fn resolve(&self, base: Option<&[u64]>) -> anyhow::Result<Vec<u64>> {
+        let (rows, cols) = self.shape();
+        let n = rows * cols;
+        match self {
+            DeltaMat::Raw(m) => Ok(mat_bits(m)),
+            DeltaMat::Full { comp, .. } => {
+                let bytes = rle_decompress(comp, n * 8)?;
+                Ok(le_bytes_to_bits(&bytes))
+            }
+            DeltaMat::Delta { comp, .. } => {
+                let base = base
+                    .ok_or_else(|| anyhow!("shard wire: delta payload without a baseline"))?;
+                ensure!(
+                    base.len() == n,
+                    "shard wire: delta baseline holds {} values, payload claims {n}",
+                    base.len()
+                );
+                let bytes = rle_decompress(comp, n * 8)?;
+                let mut bits = le_bytes_to_bits(&bytes);
+                for (x, b) in bits.iter_mut().zip(base) {
+                    *x ^= b;
+                }
+                Ok(bits)
+            }
+        }
+    }
+}
+
+/// Bit-pattern vector of a matrix — the delta codec's working form.
+pub fn mat_bits(m: &Matrix) -> Vec<u64> {
+    m.as_slice().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Rebuild a matrix from bit patterns (bitwise inverse of [`mat_bits`]).
+pub fn bits_matrix(rows: usize, cols: usize, bits: &[u64]) -> Matrix {
+    debug_assert_eq!(rows * cols, bits.len());
+    Matrix::from_vec(rows, cols, bits.iter().map(|&b| f64::from_bits(b)).collect())
+}
+
+fn le_bytes_to_bits(bytes: &[u8]) -> Vec<u64> {
+    debug_assert_eq!(bytes.len() % 8, 0);
+    bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect()
+}
+
+fn push_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            break;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+fn read_varint(b: &[u8], i: &mut usize) -> anyhow::Result<u64> {
+    let mut out = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = *b
+            .get(*i)
+            .ok_or_else(|| anyhow!("shard wire: truncated varint"))?;
+        *i += 1;
+        ensure!(shift < 64, "shard wire: varint overflows u64");
+        out |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(out);
+        }
+        shift += 7;
+    }
+}
+
+/// Byte-level RLE over zero runs: a token is a varint `v` where
+/// `v & 1 == 0` means a run of `v >> 1` zero bytes and `v & 1 == 1`
+/// means `v >> 1` literal bytes follow. Lone zeros ride inside
+/// literals (a run token would cost more than the byte it replaces).
+/// XORed f64 bit patterns are mostly zero wherever entries did not
+/// change, which is exactly what this crushes — no deps, deterministic,
+/// lossless.
+pub fn rle_compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 4 + 16);
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == 0 {
+            let start = i;
+            while i < data.len() && data[i] == 0 {
+                i += 1;
+            }
+            if i - start >= 2 {
+                push_varint(&mut out, ((i - start) as u64) << 1);
+                continue;
+            }
+            i = start; // lone zero: cheaper inside the literal below
+        }
+        let start = i;
+        while i < data.len() {
+            if data[i] == 0 {
+                let mut j = i;
+                while j < data.len() && data[j] == 0 {
+                    j += 1;
+                }
+                if j - i >= 2 {
+                    break; // a real zero run ends the literal
+                }
+                i = j; // lone zero joins the literal
+            } else {
+                i += 1;
+            }
+        }
+        push_varint(&mut out, (((i - start) as u64) << 1) | 1);
+        out.extend_from_slice(&data[start..i]);
+    }
+    out
+}
+
+/// Inverse of [`rle_compress`]. `expected` is the exact output length
+/// the caller derived from a validated block shape — every token is
+/// checked against it before any byte materializes, so a corrupt
+/// stream can neither over-allocate nor silently under-fill.
+pub fn rle_decompress(comp: &[u8], expected: usize) -> anyhow::Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(expected.min(1 << 20));
+    let mut i = 0;
+    while i < comp.len() {
+        let v = read_varint(comp, &mut i)?;
+        let len = usize::try_from(v >> 1).map_err(|_| anyhow!("shard wire: rle run too long"))?;
+        ensure!(len > 0, "shard wire: zero-length rle token");
+        ensure!(
+            out.len().checked_add(len).is_some_and(|t| t <= expected),
+            "shard wire: rle output overruns expected {expected} bytes"
+        );
+        if v & 1 == 1 {
+            ensure!(
+                i.checked_add(len).is_some_and(|t| t <= comp.len()),
+                "shard wire: rle literal overruns input"
+            );
+            out.extend_from_slice(&comp[i..i + len]);
+            i += len;
+        } else {
+            out.resize(out.len() + len, 0);
+        }
+    }
+    ensure!(
+        out.len() == expected,
+        "shard wire: rle output {} bytes, expected {expected}",
+        out.len()
+    );
+    Ok(out)
+}
+
+/// One block's inputs for a v3 delta-compressed step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepEntryV3 {
+    pub index: u32,
+    pub refresh_due: bool,
+    pub param: DeltaMat,
+    pub grad: DeltaMat,
+}
+
+/// Driver → worker: drive every assigned block one step, with the
+/// block payloads delta-encoded against the last mutually acked step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepV3Msg {
+    pub t: u64,
+    /// Step whose decoded payload the [`DeltaMat::Delta`] entries XOR
+    /// against (0 = no baseline: every entry is `Raw`/`Full`). The
+    /// receiver rejects a mismatch against its own baseline tag instead
+    /// of applying a delta to the wrong bits.
+    pub base_t: u64,
+    /// Receiver must drop every delta baseline (both directions) before
+    /// processing and reply with full frames. The driver sets this on
+    /// the first step encoded after any reconnect — the full-frame
+    /// resync that re-anchors the stream.
+    pub resync: bool,
+    pub scale: f64,
+    pub preconditioning: bool,
+    pub stat_due: bool,
+    pub lr: f64,
+    pub beta1: f64,
+    pub weight_decay: f64,
+    pub entries: Vec<StepEntryV3>,
+}
+
+/// Worker → driver: updated parameter blocks, delta-encoded against the
+/// worker's previous reply (which the lockstep protocol guarantees the
+/// driver has decoded before it could send this step).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepOkV3Msg {
+    pub t: u64,
+    /// Baseline tag for `Delta` entries (0 = none).
+    pub base_t: u64,
+    pub refreshes: u32,
+    pub entries: Vec<(u32, DeltaMat)>,
+}
+
 /// Every message that can cross the shard wire.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireMsg {
@@ -165,6 +457,13 @@ pub enum WireMsg {
     HelloV2 { worker_id: u32, proto: u32, overlap: bool },
     RefreshAhead(RefreshAheadMsg),
     RefreshAheadOk(RefreshAheadOkMsg),
+    /// Worker → driver greeting from protocol v3 on: identity,
+    /// capability report, and whether the worker accepts the
+    /// delta-compressed payload layer ([`WireMsg::StepV3`]). A false
+    /// report (or a v2/v1 greeting) keeps that link on full frames.
+    HelloV3 { worker_id: u32, proto: u32, overlap: bool, compress: bool },
+    StepV3(StepV3Msg),
+    StepOkV3(StepOkV3Msg),
 }
 
 const TAG_HELLO: u8 = 1;
@@ -179,6 +478,14 @@ const TAG_ERROR: u8 = 9;
 const TAG_HELLO_V2: u8 = 10;
 const TAG_REFRESH_AHEAD: u8 = 11;
 const TAG_REFRESH_AHEAD_OK: u8 = 12;
+const TAG_HELLO_V3: u8 = 13;
+const TAG_STEP_V3: u8 = 14;
+const TAG_STEP_OK_V3: u8 = 15;
+
+/// [`DeltaMat`] mode bytes.
+const DM_RAW: u8 = 0;
+const DM_FULL: u8 = 1;
+const DM_DELTA: u8 = 2;
 
 // ---------------------------------------------------------------------------
 // Encoding.
@@ -213,6 +520,28 @@ impl Enc {
         self.u32(m.cols() as u32);
         for &x in m.as_slice() {
             self.f64(x);
+        }
+    }
+    fn delta_mat(&mut self, m: &DeltaMat) {
+        match m {
+            DeltaMat::Raw(mat) => {
+                self.u8(DM_RAW);
+                self.matrix(mat);
+            }
+            DeltaMat::Full { rows, cols, comp } => {
+                self.u8(DM_FULL);
+                self.u32(*rows);
+                self.u32(*cols);
+                self.u32(comp.len() as u32);
+                self.buf.extend_from_slice(comp);
+            }
+            DeltaMat::Delta { rows, cols, comp } => {
+                self.u8(DM_DELTA);
+                self.u32(*rows);
+                self.u32(*cols);
+                self.u32(comp.len() as u32);
+                self.buf.extend_from_slice(comp);
+            }
         }
     }
 }
@@ -308,6 +637,43 @@ pub fn encode_frame(msg: &WireMsg) -> anyhow::Result<Vec<u8>> {
                 e.u32(i);
             }
         }
+        WireMsg::HelloV3 { worker_id, proto, overlap, compress } => {
+            e.u8(TAG_HELLO_V3);
+            e.u32(*worker_id);
+            e.u32(*proto);
+            e.boolean(*overlap);
+            e.boolean(*compress);
+        }
+        WireMsg::StepV3(step) => {
+            e.u8(TAG_STEP_V3);
+            e.u64(step.t);
+            e.u64(step.base_t);
+            e.boolean(step.resync);
+            e.f64(step.scale);
+            e.boolean(step.preconditioning);
+            e.boolean(step.stat_due);
+            e.f64(step.lr);
+            e.f64(step.beta1);
+            e.f64(step.weight_decay);
+            e.u32(step.entries.len() as u32);
+            for ent in &step.entries {
+                e.u32(ent.index);
+                e.boolean(ent.refresh_due);
+                e.delta_mat(&ent.param);
+                e.delta_mat(&ent.grad);
+            }
+        }
+        WireMsg::StepOkV3(ok) => {
+            e.u8(TAG_STEP_OK_V3);
+            e.u64(ok.t);
+            e.u64(ok.base_t);
+            e.u32(ok.refreshes);
+            e.u32(ok.entries.len() as u32);
+            for (index, dm) in &ok.entries {
+                e.u32(*index);
+                e.delta_mat(dm);
+            }
+        }
     }
     if e.buf.len() > MAX_FRAME_BYTES {
         bail!(
@@ -387,6 +753,30 @@ impl<'a> Dec<'a> {
             data.push(self.f64()?);
         }
         Ok(Matrix::from_vec(rows, cols, data))
+    }
+    fn delta_mat(&mut self) -> anyhow::Result<DeltaMat> {
+        match self.u8()? {
+            DM_RAW => Ok(DeltaMat::Raw(self.matrix()?)),
+            mode @ (DM_FULL | DM_DELTA) => {
+                let rows = self.u32()?;
+                let cols = self.u32()?;
+                let (r, c) = (rows as usize, cols as usize);
+                if r > 1 << 20 || c > 1 << 20 || r.saturating_mul(c) > 1 << 27 {
+                    bail!("shard wire: implausible matrix shape {r}x{c}");
+                }
+                // The compressed body is bounded by the frame itself
+                // (`take` fails on a lying length); decompression is
+                // deferred to the handler, after shape validation.
+                let n = self.u32()? as usize;
+                let comp = self.take(n)?.to_vec();
+                Ok(if mode == DM_FULL {
+                    DeltaMat::Full { rows, cols, comp }
+                } else {
+                    DeltaMat::Delta { rows, cols, comp }
+                })
+            }
+            other => bail!("shard wire: unknown delta-matrix mode {other}"),
+        }
     }
     fn done(&self) -> anyhow::Result<()> {
         if self.i != self.b.len() {
@@ -488,6 +878,57 @@ pub fn decode_payload(payload: &[u8]) -> anyhow::Result<WireMsg> {
             }
             WireMsg::RefreshAheadOk(RefreshAheadOkMsg { t_next, count, refreshed })
         }
+        TAG_HELLO_V3 => WireMsg::HelloV3 {
+            worker_id: d.u32()?,
+            proto: d.u32()?,
+            overlap: d.boolean()?,
+            compress: d.boolean()?,
+        },
+        TAG_STEP_V3 => {
+            let t = d.u64()?;
+            let base_t = d.u64()?;
+            let resync = d.boolean()?;
+            let scale = d.f64()?;
+            let preconditioning = d.boolean()?;
+            let stat_due = d.boolean()?;
+            let lr = d.f64()?;
+            let beta1 = d.f64()?;
+            let weight_decay = d.f64()?;
+            let n = d.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let index = d.u32()?;
+                let refresh_due = d.boolean()?;
+                let param = d.delta_mat()?;
+                let grad = d.delta_mat()?;
+                entries.push(StepEntryV3 { index, refresh_due, param, grad });
+            }
+            WireMsg::StepV3(StepV3Msg {
+                t,
+                base_t,
+                resync,
+                scale,
+                preconditioning,
+                stat_due,
+                lr,
+                beta1,
+                weight_decay,
+                entries,
+            })
+        }
+        TAG_STEP_OK_V3 => {
+            let t = d.u64()?;
+            let base_t = d.u64()?;
+            let refreshes = d.u32()?;
+            let n = d.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let index = d.u32()?;
+                let dm = d.delta_mat()?;
+                entries.push((index, dm));
+            }
+            WireMsg::StepOkV3(StepOkV3Msg { t, base_t, refreshes, entries })
+        }
         other => bail!("shard wire: unknown message tag {other}"),
     };
     d.done()?;
@@ -554,8 +995,41 @@ mod tests {
     fn all_messages_roundtrip() {
         let mut rng = Pcg64::new(77);
         roundtrip(WireMsg::Hello { worker_id: 3 });
-        roundtrip(WireMsg::HelloV2 { worker_id: 5, proto: PROTO_VERSION, overlap: true });
+        roundtrip(WireMsg::HelloV2 { worker_id: 5, proto: 2, overlap: true });
         roundtrip(WireMsg::HelloV2 { worker_id: 0, proto: 7, overlap: false });
+        roundtrip(WireMsg::HelloV3 {
+            worker_id: 2,
+            proto: PROTO_VERSION,
+            overlap: true,
+            compress: true,
+        });
+        roundtrip(WireMsg::HelloV3 { worker_id: 9, proto: 4, overlap: false, compress: false });
+        roundtrip(WireMsg::StepV3(StepV3Msg {
+            t: 7,
+            base_t: 6,
+            resync: false,
+            scale: 1.0,
+            preconditioning: true,
+            stat_due: false,
+            lr: 1e-3,
+            beta1: 0.9,
+            weight_decay: 0.0,
+            entries: vec![StepEntryV3 {
+                index: 3,
+                refresh_due: true,
+                param: DeltaMat::Delta { rows: 2, cols: 3, comp: vec![1, 2, 3] },
+                grad: DeltaMat::Raw(Matrix::randn(2, 3, &mut rng)),
+            }],
+        }));
+        roundtrip(WireMsg::StepOkV3(StepOkV3Msg {
+            t: 7,
+            base_t: 0,
+            refreshes: 1,
+            entries: vec![
+                (3, DeltaMat::Full { rows: 2, cols: 3, comp: vec![9] }),
+                (4, DeltaMat::Raw(Matrix::randn(1, 2, &mut rng))),
+            ],
+        }));
         roundtrip(WireMsg::RefreshAhead(RefreshAheadMsg {
             t_next: 9,
             all: true,
@@ -668,8 +1142,32 @@ mod tests {
         Matrix::from_vec(rows, cols, data)
     }
 
+    fn arbitrary_delta_mat(rng: &mut Pcg64) -> DeltaMat {
+        let rows = 1 + rng.below(4) as u32;
+        let cols = 1 + rng.below(4) as u32;
+        match rng.below(3) {
+            0 => DeltaMat::Raw(adversarial_matrix(rng)),
+            1 => {
+                let n = rng.below(32);
+                DeltaMat::Full {
+                    rows,
+                    cols,
+                    comp: (0..n).map(|_| rng.next_u64() as u8).collect(),
+                }
+            }
+            _ => {
+                let n = rng.below(32);
+                DeltaMat::Delta {
+                    rows,
+                    cols,
+                    comp: (0..n).map(|_| rng.next_u64() as u8).collect(),
+                }
+            }
+        }
+    }
+
     fn arbitrary_msg(rng: &mut Pcg64) -> WireMsg {
-        match rng.below(12) {
+        match rng.below(15) {
             0 => WireMsg::Hello { worker_id: rng.next_u64() as u32 },
             1 => WireMsg::HelloV2 {
                 worker_id: rng.next_u64() as u32,
@@ -749,12 +1247,52 @@ mod tests {
                     due: (0..n).map(|_| rng.next_u64() as u32).collect(),
                 })
             }
-            _ => {
+            11 => {
                 let n = rng.below(16);
                 WireMsg::RefreshAheadOk(RefreshAheadOkMsg {
                     t_next: rng.next_u64(),
                     count: rng.next_u64() as u32,
                     refreshed: (0..n).map(|_| rng.next_u64() as u32).collect(),
+                })
+            }
+            12 => WireMsg::HelloV3 {
+                worker_id: rng.next_u64() as u32,
+                proto: rng.next_u64() as u32,
+                overlap: rng.bernoulli(0.5),
+                compress: rng.bernoulli(0.5),
+            },
+            13 => {
+                let n = rng.below(4);
+                let entries = (0..n)
+                    .map(|i| StepEntryV3 {
+                        index: i as u32,
+                        refresh_due: rng.bernoulli(0.5),
+                        param: arbitrary_delta_mat(rng),
+                        grad: arbitrary_delta_mat(rng),
+                    })
+                    .collect();
+                WireMsg::StepV3(StepV3Msg {
+                    t: rng.next_u64(),
+                    base_t: rng.next_u64(),
+                    resync: rng.bernoulli(0.5),
+                    scale: adversarial_f64(rng),
+                    preconditioning: rng.bernoulli(0.5),
+                    stat_due: rng.bernoulli(0.5),
+                    lr: adversarial_f64(rng),
+                    beta1: adversarial_f64(rng),
+                    weight_decay: adversarial_f64(rng),
+                    entries,
+                })
+            }
+            _ => {
+                let n = rng.below(4);
+                let entries =
+                    (0..n).map(|i| (i as u32, arbitrary_delta_mat(rng))).collect();
+                WireMsg::StepOkV3(StepOkV3Msg {
+                    t: rng.next_u64(),
+                    base_t: rng.next_u64(),
+                    refreshes: rng.next_u64() as u32,
+                    entries,
                 })
             }
         }
@@ -803,7 +1341,7 @@ mod tests {
                 );
             }
         }
-        assert!(kinds_seen.len() >= 12, "generator missed kinds: {}", kinds_seen.len());
+        assert!(kinds_seen.len() >= 15, "generator missed kinds: {}", kinds_seen.len());
     }
 
     #[test]
@@ -847,6 +1385,129 @@ mod tests {
         payload.push(2); // bool must be 0 or 1
         payload.extend_from_slice(&0u32.to_le_bytes());
         assert!(decode_payload(&payload).is_err());
+    }
+
+    // -----------------------------------------------------------------
+    // v3 payload layer: RLE/varint compressor + DeltaMat codec.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn rle_roundtrips_and_crushes_zero_runs() {
+        // Hand-picked shapes: empty, all-zero, no zeros, lone zeros,
+        // alternating runs, trailing run.
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![0; 4096],
+            (1..=200u8).collect(),
+            vec![1, 0, 2, 0, 3],
+            vec![0, 0, 0, 7, 7, 0, 0, 1, 0],
+            vec![5, 5, 5, 0, 0, 0, 0],
+        ];
+        for data in &cases {
+            let comp = rle_compress(data);
+            let back = rle_decompress(&comp, data.len()).unwrap();
+            assert_eq!(&back, data);
+        }
+        // The all-zero case must actually compress.
+        assert!(rle_compress(&[0u8; 4096]).len() < 8);
+        // Random property sweep (zero-biased bytes so both token kinds
+        // fire).
+        crate::util::proptest::for_all_msg(
+            0x41e,
+            200,
+            |rng| {
+                let n = rng.below(600);
+                (0..n)
+                    .map(|_| if rng.bernoulli(0.6) { 0u8 } else { rng.next_u64() as u8 })
+                    .collect::<Vec<u8>>()
+            },
+            |data| {
+                let comp = rle_compress(data);
+                let back =
+                    rle_decompress(&comp, data.len()).map_err(|e| format!("decompress: {e}"))?;
+                if &back == data {
+                    Ok(())
+                } else {
+                    Err("rle roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn rle_decompress_rejects_corrupt_streams() {
+        let comp = rle_compress(&[1, 2, 0, 0, 0, 3]);
+        // Wrong expected length (both directions).
+        assert!(rle_decompress(&comp, 5).is_err());
+        assert!(rle_decompress(&comp, 7).is_err());
+        // Truncated literal.
+        let mut lit = Vec::new();
+        super::push_varint(&mut lit, (8 << 1) | 1);
+        lit.extend_from_slice(&[1, 2, 3]); // claims 8 literal bytes, has 3
+        assert!(rle_decompress(&lit, 8).is_err());
+        // A zero-run token claiming far more than `expected` must fail
+        // before allocating for it.
+        let mut bomb = Vec::new();
+        super::push_varint(&mut bomb, u64::MAX & !1);
+        assert!(rle_decompress(&bomb, 64).is_err());
+        // Zero-length tokens cannot loop forever.
+        let zero_tok = vec![0u8];
+        assert!(rle_decompress(&zero_tok, 0).is_err());
+        // Truncated varint.
+        assert!(rle_decompress(&[0x80], 4).is_err());
+        // Varint longer than u64.
+        assert!(rle_decompress(&[0xff; 11], 4).is_err());
+    }
+
+    #[test]
+    fn delta_mat_encodes_losslessly_in_every_mode() {
+        let mut rng = Pcg64::new(0xd31a);
+        for _ in 0..50 {
+            let rows = 1 + rng.below(5);
+            let cols = 1 + rng.below(5);
+            let cur: Vec<u64> = (0..rows * cols)
+                .map(|_| adversarial_f64(&mut rng).to_bits())
+                .collect();
+            // Baseline close to `cur` (sparse delta), far, and absent.
+            let mut near = cur.clone();
+            if !near.is_empty() {
+                let k = rng.below(near.len());
+                near[k] ^= 1;
+            }
+            let far: Vec<u64> = (0..cur.len()).map(|_| rng.next_u64()).collect();
+            for base in [Some(&near), Some(&far), None] {
+                let dm = DeltaMat::encode(rows, cols, &cur, base.map(|b| b.as_slice()));
+                assert_eq!(dm.shape(), (rows, cols));
+                let back = dm.resolve(base.map(|b| b.as_slice())).unwrap();
+                assert_eq!(back, cur, "delta codec must be bit-lossless");
+            }
+        }
+        // An unchanged payload deltas down to almost nothing.
+        let cur = vec![0x3ff0_0000_0000_0001u64; 256];
+        let dm = DeltaMat::encode(16, 16, &cur, Some(&cur));
+        match &dm {
+            DeltaMat::Delta { comp, .. } => assert!(comp.len() < 8, "got {} bytes", comp.len()),
+            other => panic!("unchanged payload should pick Delta, got {other:?}"),
+        }
+        // Incompressible data without a baseline falls back to Raw.
+        let mut rng = Pcg64::new(0xd31b);
+        let noise: Vec<u64> = (0..64).map(|_| rng.next_u64() | 0x0101_0101_0101_0101).collect();
+        assert!(matches!(DeltaMat::encode(8, 8, &noise, None), DeltaMat::Raw(_)));
+    }
+
+    #[test]
+    fn delta_mat_resolve_rejects_bad_baselines() {
+        let cur = vec![1u64, 2, 3, 4];
+        let base = vec![9u64, 9, 9, 9];
+        let dm = DeltaMat::encode(2, 2, &cur, Some(&base));
+        assert!(matches!(dm, DeltaMat::Delta { .. }));
+        // Delta without a baseline is an error, not garbage bits.
+        assert!(dm.resolve(None).is_err());
+        // Wrong-length baseline is rejected.
+        assert!(dm.resolve(Some(&base[..2])).is_err());
+        // Corrupt compressed body cannot satisfy the expected length.
+        let bad = DeltaMat::Delta { rows: 2, cols: 2, comp: vec![0x03, 0xff] };
+        assert!(bad.resolve(Some(&base)).is_err());
     }
 
     #[test]

@@ -31,10 +31,12 @@ USAGE:
                 [--refresh-interval K] [--stagger-refresh BOOL]
                 [--overlap-refresh BOOL] [--pool-threads N]
                 [--shards N] [--shard-transport tcp|unix]
-                [--shard-proto V]
+                [--shard-proto V] [--shard-compress BOOL]
+                [--shard-launch TEMPLATE]
   sketchy bench-gate [--baseline F] [--current F] [--tolerance R]
   sketchy shard-worker --worker-id N [--transport tcp|unix]
                        [--socket-dir DIR] [--proto-version V]
+                       [--listen ADDR] [--advertise-host HOST]
                                                    (internal; spawned
                                                     by --shards runs)
 
@@ -53,9 +55,17 @@ ships to each worker as a second in-flight RefreshAhead RPC so remote
 eigendecompositions also hide behind gradient computation; workers
 pinned to the legacy wire protocol (--shard-proto 1) report no such
 capability at handshake and the run degrades to synchronous refresh
-with a logged notice. bench-gate compares a fresh engine bench record
-against the committed baseline and exits nonzero on a >tolerance
-regression.
+with a logged notice. From wire protocol v3 the shard links negotiate
+delta-compressed block payloads (--shard-compress, default on): each
+step ships only the XOR of block bits against the last acked step,
+RLE-compressed — bit-lossless, so runs stay bitwise identical while
+cross-host traffic shrinks. --shard-launch lifts worker spawning onto
+remote hosts via a command template (placeholders {shard}, {program},
+{worker_cmd}; e.g. "ssh worker-{shard} /opt/sketchy {worker_cmd}
+--listen 0.0.0.0:0 --advertise-host worker-{shard}"); workers pinned
+to v2/v1 degrade to uncompressed full frames. bench-gate compares a
+fresh engine bench record against the committed baseline and exits
+nonzero on a >tolerance regression.
 
 Run `sketchy list` for the experiment catalogue.";
 
@@ -283,9 +293,11 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
                             // The executor caps shards at the block
                             // count; report what actually launched.
                             format!(
-                                "{} shards over {}",
+                                "{} shards over {}{}{}",
                                 shard_cfg.shards.min(engine.blocks().len()),
-                                shard_cfg.transport
+                                shard_cfg.transport,
+                                if shard_cfg.compress { ", delta-compressed" } else { "" },
+                                if shard_cfg.launch.is_some() { ", templated launch" } else { "" }
                             )
                         } else {
                             format!("{} threads", ecfg.effective_threads(engine.blocks().len()))

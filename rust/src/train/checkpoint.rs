@@ -3,37 +3,92 @@
 //!
 //! Layout: magic "SKCH" | u32 version | u64 step | u32 tensor count |
 //! per tensor: u32 rows | u32 cols | rows*cols f64 little-endian.
+//!
+//! Durability: [`save_checkpoint`] is **atomic** — it writes to
+//! `<path>.tmp`, flushes and fsyncs, then renames over the final path,
+//! so a crash mid-write can only ever leave (a) the previous complete
+//! checkpoint at `path` plus a stray `.tmp`, never a truncated file
+//! that later fails to load. [`load_checkpoint`] trusts nothing: every
+//! header field is bounded by the bytes actually remaining in the
+//! file, so a corrupt or truncated checkpoint is a clean error, not an
+//! allocation bomb (the same class of bug the shard wire reader
+//! guards against).
 
 use crate::tensor::Matrix;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
 const MAGIC: &[u8; 4] = b"SKCH";
 const VERSION: u32 = 1;
 
-/// Save parameters + step to `path`.
+/// Fixed header size: magic + version + step + tensor count.
+const HEADER_BYTES: u64 = 4 + 4 + 8 + 4;
+
+/// Save parameters + step to `path` — atomically: write `<path>.tmp`,
+/// flush + fsync, rename. Readers concurrently loading `path` always
+/// see a complete checkpoint (old or new, never a torn one).
 pub fn save_checkpoint(path: &str, step: usize, params: &[Matrix]) -> Result<()> {
     if let Some(parent) = std::path::Path::new(path).parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&(step as u64).to_le_bytes())?;
-    f.write_all(&(params.len() as u32).to_le_bytes())?;
-    for p in params {
-        f.write_all(&(p.rows() as u32).to_le_bytes())?;
-        f.write_all(&(p.cols() as u32).to_le_bytes())?;
-        for &v in p.as_slice() {
-            f.write_all(&v.to_le_bytes())?;
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
         }
+    }
+    // Pid-suffixed staging name: two processes racing the same
+    // checkpoint path stage independently, so one saver can never
+    // rename the other's half-written bytes into place.
+    let tmp = format!("{path}.{}.tmp", std::process::id());
+    let write = || -> Result<()> {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("create checkpoint staging file {tmp}"))?;
+        let mut f = std::io::BufWriter::new(file);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(step as u64).to_le_bytes())?;
+        f.write_all(&(params.len() as u32).to_le_bytes())?;
+        for p in params {
+            f.write_all(&(p.rows() as u32).to_le_bytes())?;
+            f.write_all(&(p.cols() as u32).to_le_bytes())?;
+            for &v in p.as_slice() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        f.flush()?;
+        // Push the bytes to disk before the rename publishes them: a
+        // rename alone could land while the data is still cache-only,
+        // which is exactly the torn state atomicity is meant to rule out.
+        f.get_ref().sync_all().context("sync checkpoint staging file")?;
+        Ok(())
+    };
+    if let Err(e) = write() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publish checkpoint {tmp} -> {path}"))?;
+    // Make the publish itself durable: without a directory fsync the
+    // rename may still be journal-only, and a crash after returning Ok
+    // could silently revert `path` to the previous checkpoint.
+    #[cfg(unix)]
+    {
+        let parent = std::path::Path::new(path).parent().filter(|p| !p.as_os_str().is_empty());
+        let dir = parent.unwrap_or_else(|| std::path::Path::new("."));
+        std::fs::File::open(dir)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("sync checkpoint directory {}", dir.display()))?;
     }
     Ok(())
 }
 
-/// Load a checkpoint; returns (step, params).
+/// Load a checkpoint; returns (step, params). Header fields are
+/// validated against the file's actual size before any allocation.
 pub fn load_checkpoint(path: &str) -> Result<(usize, Vec<Matrix>)> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let file = std::fs::File::open(path)?;
+    let total = file.metadata()?.len();
+    ensure!(
+        total >= HEADER_BYTES,
+        "not a sketchy checkpoint: {total} bytes is shorter than the header"
+    );
+    let mut f = std::io::BufReader::new(file);
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -50,12 +105,35 @@ pub fn load_checkpoint(path: &str) -> Result<(usize, Vec<Matrix>)> {
     let step = u64::from_le_bytes(u64buf) as usize;
     f.read_exact(&mut u32buf)?;
     let count = u32::from_le_bytes(u32buf) as usize;
+    // Bytes left after the fixed header: every tensor costs at least
+    // its own 8-byte shape header, so `count` is bounded by the file
+    // size — a corrupt count cannot pre-allocate beyond it.
+    let mut remaining = total - HEADER_BYTES;
+    ensure!(
+        (count as u64) <= remaining / 8,
+        "checkpoint header claims {count} tensors but only {remaining} bytes follow"
+    );
     let mut params = Vec::with_capacity(count);
-    for _ in 0..count {
+    for k in 0..count {
         f.read_exact(&mut u32buf)?;
         let rows = u32::from_le_bytes(u32buf) as usize;
         f.read_exact(&mut u32buf)?;
         let cols = u32::from_le_bytes(u32buf) as usize;
+        remaining -= 8;
+        ensure!(
+            rows > 0 && cols > 0 && rows <= 1 << 20 && cols <= 1 << 20,
+            "checkpoint tensor {k}: implausible shape {rows}x{cols}"
+        );
+        let need = (rows as u64)
+            .checked_mul(cols as u64)
+            .and_then(|c| c.checked_mul(8))
+            .ok_or_else(|| anyhow::anyhow!("checkpoint tensor {k}: shape overflows"))?;
+        ensure!(
+            need <= remaining,
+            "checkpoint tensor {k} claims {rows}x{cols} ({need} bytes) but only \
+             {remaining} bytes remain — truncated or corrupt"
+        );
+        remaining -= need;
         let mut data = vec![0.0f64; rows * cols];
         let mut vbuf = [0u8; 8];
         for v in &mut data {
@@ -64,6 +142,7 @@ pub fn load_checkpoint(path: &str) -> Result<(usize, Vec<Matrix>)> {
         }
         params.push(Matrix::from_vec(rows, cols, data));
     }
+    ensure!(remaining == 0, "checkpoint carries {remaining} trailing bytes");
     Ok((step, params))
 }
 
@@ -71,6 +150,23 @@ pub fn load_checkpoint(path: &str) -> Result<(usize, Vec<Matrix>)> {
 mod tests {
     use super::*;
     use crate::util::rng::Pcg64;
+
+    fn tmp_path(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("{name}_{}", std::process::id()))
+            .to_str()
+            .unwrap()
+            .to_string()
+    }
+
+    fn sample_params(seed: u64) -> Vec<Matrix> {
+        let mut rng = Pcg64::new(seed);
+        vec![
+            Matrix::randn(3, 4, &mut rng),
+            Matrix::randn(1, 1, &mut rng),
+            Matrix::randn(2, 5, &mut rng),
+        ]
+    }
 
     #[test]
     fn roundtrip() {
@@ -80,23 +176,116 @@ mod tests {
             Matrix::randn(1, 1, &mut rng),
             Matrix::zeros(2, 5),
         ];
-        let path = std::env::temp_dir().join("sketchy_ckpt_test.bin");
-        let path = path.to_str().unwrap();
-        save_checkpoint(path, 42, &params).unwrap();
-        let (step, loaded) = load_checkpoint(path).unwrap();
+        let path = tmp_path("sketchy_ckpt_test.bin");
+        save_checkpoint(&path, 42, &params).unwrap();
+        let (step, loaded) = load_checkpoint(&path).unwrap();
         assert_eq!(step, 42);
         assert_eq!(loaded.len(), 3);
         for (a, b) in params.iter().zip(&loaded) {
             assert_eq!(a, b);
         }
-        std::fs::remove_file(path).ok();
+        // No staging file left behind.
+        let staged = format!("{path}.{}.tmp", std::process::id());
+        assert!(!std::path::Path::new(&staged).exists());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
     fn rejects_garbage() {
-        let path = std::env::temp_dir().join("sketchy_ckpt_garbage.bin");
+        let path = tmp_path("sketchy_ckpt_garbage.bin");
         std::fs::write(&path, b"not a checkpoint").unwrap();
-        assert!(load_checkpoint(path.to_str().unwrap()).is_err());
-        std::fs::remove_file(path).ok();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_under_simulated_crashes() {
+        // A crash mid-save leaves the staging `.tmp` torn but the
+        // published checkpoint intact: simulate by writing the old
+        // checkpoint at `path`, dropping truncated new bytes at
+        // `<path>.tmp` (where a crashed writer would leave them), and
+        // asserting the load still yields the old checkpoint. Then a
+        // completed save over the same path replaces it.
+        let path = tmp_path("sketchy_ckpt_atomic.bin");
+        let old = sample_params(501);
+        save_checkpoint(&path, 7, &old).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let new = sample_params(502);
+        let staged = format!("{path}.{}.tmp", std::process::id());
+        for cut in [0usize, 1, 11, full.len() / 2, full.len() - 1] {
+            std::fs::write(&staged, &full[..cut]).unwrap();
+            let (step, loaded) = load_checkpoint(&path).expect("old checkpoint must survive");
+            assert_eq!(step, 7);
+            assert_eq!(loaded[0], old[0]);
+        }
+        save_checkpoint(&path, 8, &new).unwrap();
+        let (step, loaded) = load_checkpoint(&path).unwrap();
+        assert_eq!(step, 8);
+        assert_eq!(loaded[0], new[0]);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&staged).ok();
+    }
+
+    #[test]
+    fn every_truncation_errors_cleanly() {
+        // Truncate a valid checkpoint at every byte boundary: the load
+        // must either succeed (only at full length) or error cleanly —
+        // no panic, no giant allocation.
+        let path = tmp_path("sketchy_ckpt_trunc.bin");
+        save_checkpoint(&path, 3, &sample_params(503)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for cut in 0..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            assert!(
+                load_checkpoint(&path).is_err(),
+                "prefix of {cut}/{} bytes must not load",
+                full.len()
+            );
+        }
+        std::fs::write(&path, &full).unwrap();
+        assert!(load_checkpoint(&path).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn adversarial_headers_cannot_allocate_beyond_the_file() {
+        let path = tmp_path("sketchy_ckpt_adversarial.bin");
+        let header = |count: u32| {
+            let mut b = Vec::new();
+            b.extend_from_slice(MAGIC);
+            b.extend_from_slice(&VERSION.to_le_bytes());
+            b.extend_from_slice(&0u64.to_le_bytes());
+            b.extend_from_slice(&count.to_le_bytes());
+            b
+        };
+        // A count lie: u32::MAX tensors in a header-only file.
+        std::fs::write(&path, header(u32::MAX)).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        // A shape lie: one tensor claiming 2^20 x 2^20 f64s.
+        let mut b = header(1);
+        b.extend_from_slice(&(1u32 << 20).to_le_bytes());
+        b.extend_from_slice(&(1u32 << 20).to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        // Implausible (beyond-bound) dimensions are rejected outright.
+        let mut b = header(1);
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&[0u8; 64]);
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        // Zero-sized shapes are rejected.
+        let mut b = header(1);
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&5u32.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        // Trailing garbage after a valid body is rejected, not ignored.
+        save_checkpoint(&path, 1, &[Matrix::zeros(2, 2)]).unwrap();
+        let mut full = std::fs::read(&path).unwrap();
+        full.push(0xEE);
+        std::fs::write(&path, &full).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -166,6 +166,38 @@ mod tests {
     }
 
     #[test]
+    fn shard_compress_and_launch_flags_parse() {
+        // The v3 payload-layer knob and the multi-host launcher
+        // template (quoted as one argv word by the shell).
+        let a = parse(&[
+            "train",
+            "--shards",
+            "2",
+            "--shard-compress",
+            "false",
+            "--shard-launch",
+            "ssh worker-{shard} /opt/sketchy/sketchy {worker_cmd}",
+        ]);
+        assert!(!a.get_bool("shard-compress", true));
+        assert_eq!(
+            a.get("shard-launch"),
+            Some("ssh worker-{shard} /opt/sketchy/sketchy {worker_cmd}")
+        );
+        // Worker-side multi-host flags.
+        let w = parse(&[
+            "shard-worker",
+            "--worker-id",
+            "0",
+            "--listen",
+            "0.0.0.0:0",
+            "--advertise-host",
+            "worker-0.cluster",
+        ]);
+        assert_eq!(w.get_or("listen", "127.0.0.1:0"), "0.0.0.0:0");
+        assert_eq!(w.get("advertise-host"), Some("worker-0.cluster"));
+    }
+
+    #[test]
     fn pool_and_overlap_flags_parse() {
         // The exact grammar the engine runtime knobs rely on.
         let a = parse(&["train", "--pool-threads", "6", "--overlap-refresh"]);

@@ -19,10 +19,14 @@
 //!   pool; 0 = grow on demand); see
 //!   [`crate::optim::EngineConfig::resolve`]
 //! - `[shard]` — cross-process engine sharding: `count` (worker
-//!   processes, 0 = in-process), `transport` (`"tcp"` or `"unix"`), and
+//!   processes, 0 = in-process), `transport` (`"tcp"` or `"unix"`),
 //!   `proto` (wire protocol version workers speak; pin to 1 for the
 //!   legacy pre-RefreshAhead handshake, which degrades sharded refresh
-//!   overlap to synchronous); see
+//!   overlap to synchronous, or 2 for the pre-compression handshake,
+//!   which degrades payloads to full frames), `compress` (v3
+//!   delta-compressed block payloads, default true), and `launch`
+//!   (multi-host worker launcher command template with `{shard}` /
+//!   `{program}` / `{worker_cmd}` placeholders, e.g. ssh); see
 //!   [`crate::coordinator::ShardConfig::resolve`]
 
 use std::collections::BTreeMap;
@@ -265,15 +269,26 @@ mod tests {
 
     #[test]
     fn shard_section_round_trips() {
-        let cfg = Config::parse("[shard]\ncount = 2\ntransport = \"unix\"\nproto = 1").unwrap();
+        let cfg = Config::parse(
+            "[shard]\ncount = 2\ntransport = \"unix\"\nproto = 1\ncompress = false\n\
+             launch = \"ssh w{shard} /opt/sketchy {worker_cmd}\"",
+        )
+        .unwrap();
         assert_eq!(cfg.usize_or("shard.count", 0), 2);
         assert_eq!(cfg.str_or("shard.transport", "tcp"), "unix");
         assert_eq!(cfg.usize_or("shard.proto", 2), 1);
+        assert!(!cfg.bool_or("shard.compress", true));
+        assert_eq!(
+            cfg.str_or("shard.launch", ""),
+            "ssh w{shard} /opt/sketchy {worker_cmd}"
+        );
         // Defaults apply when the section is absent.
         let empty = Config::default();
         assert_eq!(empty.usize_or("shard.count", 0), 0);
         assert_eq!(empty.str_or("shard.transport", "tcp"), "tcp");
         assert_eq!(empty.usize_or("shard.proto", 2), 2);
+        assert!(empty.bool_or("shard.compress", true));
+        assert_eq!(empty.str_or("shard.launch", ""), "");
     }
 
     #[test]

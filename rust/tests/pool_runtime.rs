@@ -237,6 +237,8 @@ fn in_proc_sharded_engine(shards: usize, ecfg: EngineConfig, proto: u32) -> Prec
     let shapes = [(10usize, 8usize), (6, 5)];
     let transports: Vec<Arc<FaultInjectingTransport>> =
         (0..shards).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
+    // Delta-compressed payloads on (inert below wire protocol v3): the
+    // accounting-parity contract must hold over the compressed wire too.
     PrecondEngine::with_executor(
         &shapes,
         UnitKind::Shampoo,
@@ -244,7 +246,7 @@ fn in_proc_sharded_engine(shards: usize, ecfg: EngineConfig, proto: u32) -> Prec
         ecfg,
         |blocks, kind, base, threads| {
             Ok(Box::new(ShardExecutor::launch_in_proc(
-                blocks, kind, base, threads, &transports, proto,
+                blocks, kind, base, threads, &transports, proto, true,
             )?))
         },
     )

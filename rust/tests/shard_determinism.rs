@@ -27,7 +27,14 @@ fn sketchy_bin() -> PathBuf {
 }
 
 fn mk_launch(shards: usize, transport: ShardTransport) -> ShardLaunch {
-    ShardLaunch { program: sketchy_bin(), shards, transport, proto: PROTO_VERSION }
+    ShardLaunch {
+        program: sketchy_bin(),
+        shards,
+        transport,
+        proto: PROTO_VERSION,
+        compress: false,
+        launch: None,
+    }
 }
 
 fn base_cfg() -> ShampooConfig {
@@ -283,6 +290,8 @@ fn legacy_proto_workers_degrade_overlap_to_sync_with_identical_numbers() {
         shards: 2,
         transport: ShardTransport::Tcp,
         proto: 1,
+        compress: true, // inert below v3 — part of the degrade matrix
+        launch: None,
     };
     let mut local = PrecondEngine::new(
         &shapes,
@@ -331,8 +340,11 @@ fn chaos_ecfg(overlap: bool) -> EngineConfig {
 }
 
 /// Run the overlap engine over in-proc harness workers with the given
-/// per-shard fault scripts; return final params + refresh count.
-fn chaos_overlap_run(
+/// per-shard fault scripts at the given wire protocol (compression on
+/// from v3 when `compress`); return final params + refresh count.
+fn chaos_run(
+    proto: u32,
+    compress: bool,
     scripts: Vec<FaultScript>,
     max_connections: usize,
 ) -> anyhow::Result<(Vec<Matrix>, usize)> {
@@ -358,7 +370,8 @@ fn chaos_overlap_run(
                 base,
                 threads,
                 &transports,
-                PROTO_VERSION,
+                proto,
+                compress,
             )?))
         },
     )?;
@@ -369,6 +382,14 @@ fn chaos_overlap_run(
         eng.try_step(&mut params, &grads)?;
     }
     Ok((params, eng.refreshes()))
+}
+
+/// PR-4 shape of the chaos runner: current protocol, full frames.
+fn chaos_overlap_run(
+    scripts: Vec<FaultScript>,
+    max_connections: usize,
+) -> anyhow::Result<(Vec<Matrix>, usize)> {
+    chaos_run(PROTO_VERSION, false, scripts, max_connections)
 }
 
 /// The fault-free reference: the plain in-process synchronous engine on
@@ -486,6 +507,217 @@ fn overlap_permanent_link_loss_surfaces_shard_named_error() {
     assert!(msg.contains("shard 0"), "error must name the lost shard: {msg}");
 }
 
+// ---------------------------------------------------------------------------
+// Wire protocol v3: delta-compressed payloads — degrade matrix + chaos.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn compressed_transport_proto_degrade_matrix_matches_reference_bitwise() {
+    // The v3 ↔ v2 ↔ v1 degrade matrix with the compression knob held
+    // on: v3 workers negotiate delta payloads, v2 workers keep full
+    // frames (and RefreshAhead), v1 workers degrade all the way to the
+    // legacy synchronous protocol — every cell bitwise identical to
+    // the fault-free reference, refresh accounting included.
+    let want = chaos_reference();
+    for proto in [1u32, 2, PROTO_VERSION] {
+        let got = chaos_run(proto, true, vec![FaultScript::none(), FaultScript::none()], usize::MAX)
+            .unwrap_or_else(|e| panic!("proto v{proto} + compress run failed: {e:#}"));
+        assert_matches_reference(&got, &want, &format!("compress-on at proto v{proto}"));
+    }
+    // Shard count is orthogonal to the payload layer: a 4-shard
+    // compressed run holds the same identity.
+    let got4 = chaos_run(PROTO_VERSION, true, vec![FaultScript::none(); 4], usize::MAX)
+        .unwrap_or_else(|e| panic!("4-shard compress run failed: {e:#}"));
+    assert_matches_reference(&got4, &want, "compress-on, 4 shards");
+    assert!(want.1 > 0, "test must exercise refreshes");
+}
+
+#[test]
+fn compressed_stream_survives_severing_every_request_frame_bitwise() {
+    // The delta-stream acceptance sweep: sever shard 0's link at every
+    // request-frame index in turn — killing delta-encoded Steps, the
+    // RefreshAhead gaps between them, and the frames whose loss forces
+    // a reconnect mid-baseline — and assert the replay + full-frame
+    // resync path reproduces the reference bit for bit.
+    let want = chaos_reference();
+    for fault_at in 0..20 {
+        let script = FaultScript::none().on_request(fault_at, FaultAction::Sever);
+        let got =
+            chaos_run(PROTO_VERSION, true, vec![script, FaultScript::none()], usize::MAX)
+                .unwrap_or_else(|e| panic!("sever at request {fault_at}: run failed: {e:#}"));
+        assert_matches_reference(
+            &got,
+            &want,
+            &format!("compressed sever at request frame {fault_at}"),
+        );
+    }
+}
+
+#[test]
+fn compressed_stream_survives_severing_every_reply_frame_bitwise() {
+    // Same sweep on the worker → driver direction: delta-encoded
+    // replies (whose loss desynchronizes the download baseline until
+    // the resync) die mid-flight at every index in turn.
+    let want = chaos_reference();
+    for fault_at in 0..20 {
+        let script = FaultScript::none().on_reply(fault_at, FaultAction::Sever);
+        let got =
+            chaos_run(PROTO_VERSION, true, vec![FaultScript::none(), script], usize::MAX)
+                .unwrap_or_else(|e| panic!("sever at reply {fault_at}: run failed: {e:#}"));
+        assert_matches_reference(
+            &got,
+            &want,
+            &format!("compressed sever at reply frame {fault_at}"),
+        );
+    }
+}
+
+#[test]
+fn compressed_stream_survives_dropped_and_delayed_frames_bitwise() {
+    // Drop/delay inside the delta stream: the reply wait times out,
+    // the driver replays (worker reply caches absorb any duplicate
+    // application), and the next encoded step resyncs with full
+    // frames. (Outright duplication is exercised at the worker
+    // protocol level — `duplicated_delta_steps_are_served_from_the_
+    // reply_cache` in coordinator::shard — because a strict
+    // request/response channel never sees an unsolicited duplicate.)
+    let want = chaos_reference();
+    for (what, script) in [
+        ("drop request 5", FaultScript::none().on_request(5, FaultAction::DropFrame)),
+        ("drop reply 6", FaultScript::none().on_reply(6, FaultAction::DropFrame)),
+        ("delay request 4", FaultScript::none().on_request(4, FaultAction::DelayFrame)),
+        (
+            "drop request 3 + sever reply 9",
+            FaultScript::none()
+                .on_request(3, FaultAction::DropFrame)
+                .on_reply(9, FaultAction::Sever),
+        ),
+    ] {
+        let got = chaos_run(PROTO_VERSION, true, vec![script, FaultScript::none()], usize::MAX)
+            .unwrap_or_else(|e| panic!("{what}: run failed: {e:#}"));
+        assert_matches_reference(&got, &want, &format!("compressed {what}"));
+    }
+}
+
+#[test]
+fn compressed_sparse_grads_shrink_the_wire_and_stay_bitwise() {
+    // An LM-ish workload (a one-sided embedding tensor whose gradient
+    // touches a few token columns per step + a dense projection): the
+    // delta layer must cut delivered bytes by a wide margin while the
+    // run stays bitwise identical to the uncompressed transport.
+    let shapes = [(8usize, 64usize), (8, 8)];
+    let base = ShampooConfig {
+        lr: 1e-3,
+        beta1: 0.0,
+        weight_decay: 0.0,
+        one_sided: true,
+        start_preconditioning_step: 2,
+        stat_interval: 2,
+        graft: GraftType::Rmsprop,
+        ..Default::default()
+    };
+    let ecfg = EngineConfig {
+        threads: 1,
+        block_size: 16,
+        refresh_interval: 2,
+        stagger: true,
+        ..Default::default()
+    };
+    let grads_at = |rng: &mut Pcg64| -> Vec<Matrix> {
+        let (r, c) = shapes[0];
+        let mut emb = vec![0.0f64; r * c];
+        for _ in 0..4 {
+            let col = rng.below(c);
+            for row in 0..r {
+                emb[row * c + col] = rng.gaussian();
+            }
+        }
+        vec![Matrix::from_vec(r, c, emb), Matrix::randn(shapes[1].0, shapes[1].1, rng)]
+    };
+    let run = |compress: bool| -> (Vec<Matrix>, usize, u64) {
+        let transports: Vec<Arc<FaultInjectingTransport>> =
+            (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
+        let mut eng = PrecondEngine::with_executor(
+            &shapes,
+            UnitKind::Shampoo,
+            base.clone(),
+            ecfg,
+            |blocks, kind, b, threads| {
+                Ok(Box::new(ShardExecutor::launch_in_proc(
+                    blocks,
+                    kind,
+                    b,
+                    threads,
+                    &transports,
+                    PROTO_VERSION,
+                    compress,
+                )?))
+            },
+        )
+        .expect("launch in-proc engine");
+        let mut params: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+        let mut rng = Pcg64::new(424);
+        for _ in 0..10 {
+            let grads = grads_at(&mut rng);
+            eng.try_step(&mut params, &grads).expect("step");
+        }
+        let refreshes = eng.refreshes();
+        drop(eng);
+        (params, refreshes, transports.iter().map(|t| t.bytes_delivered()).sum())
+    };
+    let (p_full, r_full, bytes_full) = run(false);
+    let (p_comp, r_comp, bytes_comp) = run(true);
+    for (i, (a, b)) in p_full.iter().zip(&p_comp).enumerate() {
+        assert_eq!(a.max_diff(b), 0.0, "tensor {i}: compressed transport diverged");
+    }
+    assert_eq!(r_full, r_comp, "refresh accounting diverged");
+    assert!(
+        (bytes_comp as f64) * 2.0 < bytes_full as f64,
+        "delta layer should at least halve this workload's wire bytes \
+         (full {bytes_full}, compressed {bytes_comp})"
+    );
+}
+
+#[test]
+fn launch_template_spawns_real_workers_and_stays_bitwise() {
+    // The pluggable launcher end to end with a real prefix command
+    // (`env VAR=1 {program} {worker_cmd}` — same argv mechanics as an
+    // ssh template) driving real worker processes, with compression
+    // on: bitwise identical to the in-process engine.
+    let shapes = [(8usize, 8usize), (5, 4)];
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 4,
+        refresh_interval: 3,
+        stagger: true,
+        ..Default::default()
+    };
+    let launch = ShardLaunch {
+        program: sketchy_bin(),
+        shards: 2,
+        transport: ShardTransport::Tcp,
+        proto: PROTO_VERSION,
+        compress: true,
+        launch: Some("env SKETCHY_LAUNCH_TEMPLATE_TEST={shard} {program} {worker_cmd}".into()),
+    };
+    let mut local = PrecondEngine::new(&shapes, UnitKind::Shampoo, base_cfg(), ecfg);
+    let mut sharded =
+        PrecondEngine::sharded(&shapes, UnitKind::Shampoo, base_cfg(), ecfg, &launch)
+            .expect("launch templated sharded engine");
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(425);
+    for step in 0..8 {
+        let grads = random_grads(&shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        sharded.try_step(&mut p2, &grads).expect("templated sharded step");
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "templated launch diverged at step {step}");
+        }
+    }
+    assert_eq!(local.refreshes(), sharded.refreshes());
+}
+
 /// Deterministic per-block contexts for driving executors directly.
 fn mk_ctxs(n_blocks: usize, t: usize) -> Vec<StepCtx> {
     (0..n_blocks)
@@ -571,6 +803,8 @@ fn spawn_failure_is_surfaced() {
         shards: 1,
         transport: ShardTransport::Tcp,
         proto: PROTO_VERSION,
+        compress: true,
+        launch: None,
     };
     let err = match ShardExecutor::launch(&bogus, &blocks, UnitKind::Shampoo, &base_cfg(), 1) {
         Ok(_) => panic!("bogus worker binary must fail the launch"),

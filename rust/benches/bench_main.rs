@@ -698,6 +698,152 @@ fn main() {
         assert!(wb_identical, "compressed transport diverged — wire record invalid");
     }
 
+    // ---------------- sketch state bytes (wire v4 + checkpoint v2) ----
+    // The sketch-native state-format payoff: total bytes the wire v4
+    // `StateSnap` RPC delivers for a full optimizer-state snapshot of
+    // the same LM-shaped workload (tall one-sided embedding block +
+    // small projection) when the covariance travels as rank-ℓ FD
+    // factors (`engine-s-shampoo`) vs as dense Kronecker blocks
+    // (`engine-shampoo`) — the O(dℓ) vs O(d²) claim, measured on the
+    // metered in-proc transport. The same entries become each leg's
+    // checkpoint-v2 state section, so the file sizes are recorded too.
+    // Byte counts are fully deterministic, so the recorded
+    // `sketch_wire_ratio` is machine-independent and the baseline
+    // floors it at 10x (`sketch_wire_ratio_min`).
+    let mut sketch_state_dense_bytes: Option<u64> = None;
+    let mut sketch_state_v4_bytes: Option<u64> = None;
+    let mut sketch_wire_ratio: Option<f64> = None;
+    let mut sketch_ckpt_bytes: Option<u64> = None;
+    let mut dense_ckpt_bytes: Option<u64> = None;
+    if run("engine/shard_sketch_bytes") {
+        use sketchy::coordinator::shard::ShardExecutor;
+        use sketchy::coordinator::wire::{BlockStateMsg, PROTO_VERSION};
+        use sketchy::coordinator::{FaultInjectingTransport, FaultScript};
+        use sketchy::optim::UnitKind;
+        use std::sync::Arc;
+        use std::time::Duration;
+        let sk_shapes = [(384usize, 16usize), (48, 16)];
+        let sk_base = ShampooConfig {
+            lr: 1e-3,
+            beta1: 0.9,
+            weight_decay: 0.0,
+            one_sided: true,
+            start_preconditioning_step: 2,
+            stat_interval: 1,
+            graft: GraftType::None,
+            ..Default::default()
+        };
+        let sk_ecfg = EngineConfig {
+            threads: 1,
+            block_size: 0,
+            refresh_interval: 2,
+            stagger: true,
+            ..Default::default()
+        };
+        let sk_steps = 6usize;
+        let run_state = |kind: UnitKind| -> (u64, Vec<Matrix>, Vec<BlockStateMsg>) {
+            let transports: Vec<Arc<FaultInjectingTransport>> = (0..2)
+                .map(|_| {
+                    FaultInjectingTransport::with_config(
+                        FaultScript::none(),
+                        usize::MAX,
+                        Some(Duration::from_secs(60)),
+                    )
+                })
+                .collect();
+            let mut eng = PrecondEngine::with_executor(
+                &sk_shapes,
+                kind,
+                sk_base.clone(),
+                sk_ecfg,
+                |blocks, kind, base, threads| {
+                    Ok(Box::new(ShardExecutor::launch_in_proc(
+                        blocks,
+                        kind,
+                        base,
+                        threads,
+                        &transports,
+                        PROTO_VERSION,
+                        true,
+                    )?))
+                },
+            )
+            .expect("launch sketch-bytes engine");
+            let mut params = zeros_like(&sk_shapes);
+            let mut srng = Pcg64::new(0x5ce7c);
+            for _ in 0..sk_steps {
+                let grads: Vec<Matrix> =
+                    sk_shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut srng)).collect();
+                eng.try_step(&mut params, &grads).expect("sketch-bytes step");
+            }
+            let before: u64 = transports.iter().map(|t| t.bytes_delivered()).sum();
+            let snaps = eng.state_snapshot().expect("v4 state snapshot");
+            let after: u64 = transports.iter().map(|t| t.bytes_delivered()).sum();
+            let entries: Vec<BlockStateMsg> = snaps
+                .iter()
+                .enumerate()
+                .map(|(i, s)| BlockStateMsg::from_snap(i as u32, s))
+                .collect();
+            (after - before, params, entries)
+        };
+        let (dense_bytes, _dense_params, dense_entries) = run_state(UnitKind::Shampoo);
+        let (v4_bytes, sk_params, sk_entries) = run_state(UnitKind::Sketched { rank: 8 });
+        // Reference: the in-process sketched engine on the same stream.
+        let mut local = PrecondEngine::new(
+            &sk_shapes,
+            UnitKind::Sketched { rank: 8 },
+            sk_base.clone(),
+            sk_ecfg,
+        );
+        let mut local_params = zeros_like(&sk_shapes);
+        let mut srng = Pcg64::new(0x5ce7c);
+        for _ in 0..sk_steps {
+            let grads: Vec<Matrix> =
+                sk_shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut srng)).collect();
+            local.step(&mut local_params, &grads);
+        }
+        let mut sk_identical = true;
+        for (a, b) in local_params.iter().zip(&sk_params) {
+            if a.max_diff(b) != 0.0 {
+                sk_identical = false;
+            }
+        }
+        identical = identical && sk_identical;
+        // Checkpoint v2 carries the same typed entries: record the file
+        // sizes of both legs on identical params.
+        std::fs::create_dir_all("bench_out").ok();
+        let dense_ckpt = "bench_out/ckpt_dense_state.bin";
+        let sketch_ckpt = "bench_out/ckpt_sketch_state.bin";
+        sketchy::train::save_checkpoint_with_state(
+            dense_ckpt,
+            sk_steps,
+            &sk_params,
+            Some(&dense_entries),
+        )
+        .expect("dense-state checkpoint");
+        sketchy::train::save_checkpoint_with_state(
+            sketch_ckpt,
+            sk_steps,
+            &sk_params,
+            Some(&sk_entries),
+        )
+        .expect("sketch-state checkpoint");
+        let dense_ckpt_len = std::fs::metadata(dense_ckpt).unwrap().len();
+        let sketch_ckpt_len = std::fs::metadata(sketch_ckpt).unwrap().len();
+        let ratio = dense_bytes as f64 / (v4_bytes.max(1)) as f64;
+        println!(
+            "engine/shard_sketch_bytes_6step_2sh  dense-state {dense_bytes} B, v4 factored \
+             {v4_bytes} B, reduction x{ratio:.2}, ckpt {dense_ckpt_len} -> {sketch_ckpt_len} B \
+             identical={sk_identical}"
+        );
+        sketch_state_dense_bytes = Some(dense_bytes);
+        sketch_state_v4_bytes = Some(v4_bytes);
+        sketch_wire_ratio = Some(ratio);
+        dense_ckpt_bytes = Some(dense_ckpt_len);
+        sketch_ckpt_bytes = Some(sketch_ckpt_len);
+        assert!(sk_identical, "sharded sketch run diverged — sketch-bytes record invalid");
+    }
+
     // Assemble the gate-facing perf record from whichever engine
     // sections ran (CI runs `--filter engine/`, which runs them all; a
     // narrower filter yields a partial record the gate will reject —
@@ -753,6 +899,21 @@ fn main() {
             fields.push(("shard_wire_v3_bytes", v3.to_string()));
             fields.push(("shard_wire_ratio", format!("{r:.4}")));
             fields.push(("shard_wire_ratio_min", "3.0".to_string()));
+        }
+        if let (Some(d), Some(s), Some(r)) =
+            (sketch_state_dense_bytes, sketch_state_v4_bytes, sketch_wire_ratio)
+        {
+            // Also deterministic byte counts (no timings): the floor is
+            // the binding machine-independent check for the sketch-
+            // native state format.
+            fields.push(("sketch_state_dense_bytes", d.to_string()));
+            fields.push(("sketch_state_v4_bytes", s.to_string()));
+            fields.push(("sketch_wire_ratio", format!("{r:.4}")));
+            fields.push(("sketch_wire_ratio_min", "10.0".to_string()));
+        }
+        if let (Some(d), Some(s)) = (dense_ckpt_bytes, sketch_ckpt_bytes) {
+            fields.push(("dense_state_ckpt_bytes", d.to_string()));
+            fields.push(("sketch_state_ckpt_bytes", s.to_string()));
         }
         fields.push(("identical", identical.to_string()));
         let body = fields

@@ -77,15 +77,16 @@
 
 use super::fault::FaultInjectingTransport;
 use super::wire::{
-    self, bits_matrix, mat_bits, BlockSpec, Conn, DeltaMat, InitMsg, RefreshAheadMsg,
-    RefreshAheadOkMsg, StepEntry, StepEntryV3, StepMsg, StepOkMsg, StepOkV3Msg, StepV3Msg,
-    WireMsg, PROTO_VERSION,
+    self, bits_matrix, mat_bits, BlockPayload, BlockSpec, BlockStateMsg, Conn, DeltaMat, InitMsg,
+    RefreshAheadMsg, RefreshAheadOkMsg, RefreshAheadOkV4Msg, StateExpect, StateRestoreMsg,
+    StateSnapMsg, StateSnapOkMsg, StepEntry, StepEntryV3, StepEntryV4, StepMsg, StepOkMsg,
+    StepOkV3Msg, StepOkV4Msg, StepV3Msg, StepV4Msg, WireMsg, PROTO_VERSION,
 };
 use crate::optim::engine::{
     drive_all, effective_worker_threads, lock_state, BlockExecutor, RefreshAheadDone,
     RefreshAheadPlan, UnitKind,
 };
-use crate::optim::precond::{BlockState, StepCtx};
+use crate::optim::precond::{BlockState, BlockStateSnap, StepCtx};
 use crate::optim::{Block, GraftType, ShampooConfig};
 use crate::runtime::pool;
 use crate::tensor::Matrix;
@@ -428,6 +429,11 @@ fn state_mut(m: &mut Mutex<BlockState>) -> &mut BlockState {
 /// connections so the driver can reconnect without losing statistics.
 struct WorkerState {
     graft: GraftType,
+    /// Unit kind + sidedness from Init — the worker's own copy of the
+    /// block table, used to validate v4 state payloads (shape/rank/kind)
+    /// *before* any payload resolution or allocation.
+    kind: UnitKind,
+    one_sided: bool,
     /// Thread knob for the worker's own block pool (0 = auto).
     threads: usize,
     states: Vec<Mutex<BlockState>>,
@@ -489,6 +495,8 @@ impl WorkerState {
         }
         Ok(WorkerState {
             graft,
+            kind,
+            one_sided: init.one_sided,
             threads: init.threads as usize,
             states,
             slot_of,
@@ -726,6 +734,132 @@ impl WorkerState {
         })
     }
 
+    /// The v4 typed-payload step: `param`/`grad` must travel as `Dense`
+    /// payloads (gradients have no factored form), so the step unwraps
+    /// them to the v3 delta layer and shares its entire core — baseline
+    /// discipline, resync, reply encoding — then re-wraps the reply.
+    fn process_step_v4(&mut self, msg: &StepV4Msg) -> anyhow::Result<StepOkV4Msg> {
+        let entries = msg
+            .entries
+            .iter()
+            .map(|e| {
+                let (param, grad) = match (&e.param, &e.grad) {
+                    (BlockPayload::Dense(p), BlockPayload::Dense(g)) => (p.clone(), g.clone()),
+                    _ => bail!(
+                        "block {}: step payloads must be Dense (sketch/diag payloads \
+                         only travel in state frames)",
+                        e.index
+                    ),
+                };
+                Ok(StepEntryV3 { index: e.index, refresh_due: e.refresh_due, param, grad })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let v3 = StepV3Msg {
+            t: msg.t,
+            base_t: msg.base_t,
+            resync: msg.resync,
+            scale: msg.scale,
+            preconditioning: msg.preconditioning,
+            stat_due: msg.stat_due,
+            lr: msg.lr,
+            beta1: msg.beta1,
+            weight_decay: msg.weight_decay,
+            entries,
+        };
+        let ok = self.process_step_v3(&v3)?;
+        Ok(StepOkV4Msg {
+            t: ok.t,
+            base_t: ok.base_t,
+            refreshes: ok.refreshes,
+            entries: ok
+                .entries
+                .into_iter()
+                .map(|(i, dm)| (i, BlockPayload::Dense(dm)))
+                .collect(),
+        })
+    }
+
+    /// The worker's own [`StateExpect`] row for one owned slot — the
+    /// block table every v4 state payload is validated against before
+    /// any resolve/allocation.
+    fn expect_for(&mut self, slot: usize) -> StateExpect {
+        let (rows, cols) = state_mut(&mut self.states[slot]).param.shape();
+        StateExpect {
+            rows,
+            cols,
+            kind: self.kind.code(),
+            rank: self.kind.rank(),
+            one_sided: self.one_sided,
+        }
+    }
+
+    /// Serve a v4 `StateSnap`: export the typed state of the wanted
+    /// blocks (all owned when `want` is empty), in index order. Pure
+    /// read — naturally idempotent under reconnect replay.
+    fn process_state_snap(&mut self, msg: &StateSnapMsg) -> anyhow::Result<StateSnapOkMsg> {
+        let want: Vec<u32> = if msg.want.is_empty() {
+            self.slot_of.keys().copied().collect()
+        } else {
+            for &i in &msg.want {
+                ensure!(self.slot_of.contains_key(&i), "unknown block index {i} in state-snap");
+            }
+            msg.want.clone()
+        };
+        let mut entries = Vec::with_capacity(want.len());
+        for index in want {
+            let slot = self.slot_of[&index];
+            let snap = state_mut(&mut self.states[slot]).snapshot();
+            entries.push(BlockStateMsg::from_snap(index, &snap));
+        }
+        Ok(StateSnapOkMsg { entries })
+    }
+
+    /// Serve a v4 `StateRestore`: validate every payload against the
+    /// worker's block table (shape/rank/kind, *before* resolving any
+    /// compressed buffer), then restore. Idempotent: re-applying the
+    /// same payloads lands on the same bitwise state.
+    fn process_state_restore(&mut self, msg: &StateRestoreMsg) -> anyhow::Result<()> {
+        // Validate all entries first so a bad batch cannot leave a
+        // half-restored worker behind.
+        let mut staged = Vec::with_capacity(msg.entries.len());
+        for entry in &msg.entries {
+            let index = entry.index;
+            let slot = *self
+                .slot_of
+                .get(&index)
+                .ok_or_else(|| anyhow!("unknown block index {index} in state-restore"))?;
+            let exp = self.expect_for(slot);
+            let snap = entry
+                .clone()
+                .into_snap(&exp)
+                .with_context(|| format!("block {index} state payload"))?;
+            staged.push((slot, index, snap));
+        }
+        for (slot, index, snap) in staged {
+            state_mut(&mut self.states[slot])
+                .restore(snap)
+                .with_context(|| format!("restore block {index}"))?;
+        }
+        Ok(())
+    }
+
+    /// Per-block cumulative escaped mass ρ_{1:t} of every sketched
+    /// block, in index order — the RFD diagnostic shipped in v4
+    /// `RefreshAheadOk` replies so drivers can watch sketch-escape
+    /// growth without a state RPC.
+    fn escaped_masses(&mut self) -> Vec<(u32, f64)> {
+        let mut out = Vec::new();
+        let slots: Vec<(u32, usize)> = self.slot_of.iter().map(|(&i, &s)| (i, s)).collect();
+        for (index, slot) in slots {
+            let st = state_mut(&mut self.states[slot]);
+            let sketches = st.unit.sketches();
+            if !sketches.is_empty() {
+                out.push((index, sketches.iter().map(|fd| fd.escaped_mass()).sum()));
+            }
+        }
+        out
+    }
+
     fn mem_stats(&mut self) -> (u64, u64) {
         let mut mem = 0u64;
         let mut second = 0u64;
@@ -762,10 +896,15 @@ fn handle_conn<S: Read + Write>(
         wire::write_msg(stream, &WireMsg::Hello { worker_id })?;
     } else if proto == 2 {
         wire::write_msg(stream, &WireMsg::HelloV2 { worker_id, proto, overlap: true })?;
-    } else {
+    } else if proto == 3 {
         wire::write_msg(
             stream,
             &WireMsg::HelloV3 { worker_id, proto, overlap: true, compress: true },
+        )?;
+    } else {
+        wire::write_msg(
+            stream,
+            &WireMsg::HelloV4 { worker_id, proto, overlap: true, compress: true, state: true },
         )?;
     }
     loop {
@@ -849,8 +988,21 @@ fn handle_conn<S: Read + Write>(
                         Some(ws) => match &ws.last_refresh_ahead {
                             Some((t, cached)) if *t == ra.t_next => cached.clone(),
                             _ => match ws.process_refresh_ahead(&ra) {
+                                // v4 links get the extended reply with
+                                // the per-block escaped-mass diagnostics
+                                // (the RFD accumulator); older links keep
+                                // the v2 reply shape.
                                 Ok(ok) => {
-                                    let reply = WireMsg::RefreshAheadOk(ok);
+                                    let reply = if proto >= 4 {
+                                        WireMsg::RefreshAheadOkV4(RefreshAheadOkV4Msg {
+                                            t_next: ok.t_next,
+                                            count: ok.count,
+                                            refreshed: ok.refreshed,
+                                            escaped: ws.escaped_masses(),
+                                        })
+                                    } else {
+                                        WireMsg::RefreshAheadOk(ok)
+                                    };
                                     ws.last_refresh_ahead = Some((ra.t_next, reply.clone()));
                                     reply
                                 }
@@ -858,6 +1010,81 @@ fn handle_conn<S: Read + Write>(
                                     message: format!("refresh-ahead t={}: {e:#}", ra.t_next),
                                 },
                             },
+                        },
+                    }
+                };
+                wire::write_msg(stream, &reply)?;
+            }
+            WireMsg::StepV4(step) => {
+                let reply = if proto < 4 {
+                    // A v3/v2/v1 worker emulation must behave like the
+                    // old binary: it never advertised the typed layer.
+                    WireMsg::Error {
+                        message: format!(
+                            "typed-payload step unsupported at wire protocol v{proto}"
+                        ),
+                    }
+                } else {
+                    match state.as_mut() {
+                        None => WireMsg::Error { message: "step before init".into() },
+                        // Shared idempotency cache with Step/StepV3: a
+                        // replayed frame is served the cached bytes
+                        // before any baseline logic runs.
+                        Some(ws) => match &ws.last_step {
+                            Some((t, cached)) if *t == step.t => cached.clone(),
+                            _ => match ws.process_step_v4(&step) {
+                                Ok(ok) => {
+                                    let reply = WireMsg::StepOkV4(ok);
+                                    ws.last_step = Some((step.t, reply.clone()));
+                                    reply
+                                }
+                                Err(e) => WireMsg::Error {
+                                    message: format!("step t={}: {e:#}", step.t),
+                                },
+                            },
+                        },
+                    }
+                };
+                wire::write_msg(stream, &reply)?;
+            }
+            WireMsg::StateSnap(snap) => {
+                let reply = if proto < 4 {
+                    WireMsg::Error {
+                        message: format!(
+                            "state snapshots unsupported at wire protocol v{proto}"
+                        ),
+                    }
+                } else {
+                    match state.as_mut() {
+                        None => WireMsg::Error { message: "state-snap before init".into() },
+                        // Pure read: no cache needed — a replay re-reads
+                        // the same (unchanged-by-this-RPC) state.
+                        Some(ws) => match ws.process_state_snap(&snap) {
+                            Ok(ok) => WireMsg::StateSnapOk(ok),
+                            Err(e) => WireMsg::Error { message: format!("state-snap: {e:#}") },
+                        },
+                    }
+                };
+                wire::write_msg(stream, &reply)?;
+            }
+            WireMsg::StateRestore(restore) => {
+                let reply = if proto < 4 {
+                    WireMsg::Error {
+                        message: format!(
+                            "state restore unsupported at wire protocol v{proto}"
+                        ),
+                    }
+                } else {
+                    match state.as_mut() {
+                        None => WireMsg::Error { message: "state-restore before init".into() },
+                        // Idempotent: re-applying the same payloads lands
+                        // on the same bitwise state, so replay is safe
+                        // without a cache.
+                        Some(ws) => match ws.process_state_restore(&restore) {
+                            Ok(()) => WireMsg::Ok,
+                            Err(e) => {
+                                WireMsg::Error { message: format!("state-restore: {e:#}") }
+                            }
                         },
                     }
                 };
@@ -1003,8 +1230,11 @@ struct ShardChannel {
     /// RefreshAhead capability from the worker's greeting.
     overlap: bool,
     /// Delta-compression capability from the worker's greeting
-    /// (v3 `HelloV3` only; v2/v1 greetings report none).
+    /// (v3+ greetings only; v2/v1 greetings report none).
     compress: bool,
+    /// Typed block-state capability (v4 `HelloV4` only): the worker
+    /// serves `StepV4`/`StateSnap`/`StateRestore` frames.
+    state: bool,
     /// Bumped on every successful (re)connect — the delta codec
     /// compares it against the generation its baselines were taken on
     /// and resyncs with full frames after any reconnect.
@@ -1023,6 +1253,7 @@ impl ShardChannel {
             proto: 0,
             overlap: false,
             compress: false,
+            state: false,
             generation: 0,
             pending_refresh: None,
         }
@@ -1038,6 +1269,7 @@ impl ShardChannel {
                 self.proto = 1;
                 self.overlap = false;
                 self.compress = false;
+                self.state = false;
             }
             WireMsg::HelloV2 { worker_id, proto, overlap }
                 if worker_id as usize == self.shard =>
@@ -1045,6 +1277,7 @@ impl ShardChannel {
                 self.proto = proto;
                 self.overlap = overlap;
                 self.compress = false;
+                self.state = false;
             }
             WireMsg::HelloV3 { worker_id, proto, overlap, compress }
                 if worker_id as usize == self.shard =>
@@ -1052,10 +1285,20 @@ impl ShardChannel {
                 self.proto = proto;
                 self.overlap = overlap;
                 self.compress = compress;
+                self.state = false;
+            }
+            WireMsg::HelloV4 { worker_id, proto, overlap, compress, state }
+                if worker_id as usize == self.shard =>
+            {
+                self.proto = proto;
+                self.overlap = overlap;
+                self.compress = compress;
+                self.state = state;
             }
             WireMsg::Hello { worker_id }
             | WireMsg::HelloV2 { worker_id, .. }
-            | WireMsg::HelloV3 { worker_id, .. } => {
+            | WireMsg::HelloV3 { worker_id, .. }
+            | WireMsg::HelloV4 { worker_id, .. } => {
                 bail!("worker identity mismatch: got {worker_id}, want {}", self.shard)
             }
             other => bail!("expected hello, got {other:?}"),
@@ -1332,6 +1575,26 @@ fn init_msg_for(
     })
 }
 
+/// Driver-side block table for validating returned v4 state payloads:
+/// the same shape/kind/rank facts `init_msg_for` ships to the workers,
+/// kept locally so a hostile or corrupt snapshot reply can be rejected
+/// before any payload resolution allocates.
+fn expects_for(blocks: &[Block], kind: UnitKind, base: &ShampooConfig) -> Vec<StateExpect> {
+    blocks
+        .iter()
+        .map(|b| {
+            let (rows, cols) = b.shape();
+            StateExpect {
+                rows,
+                cols,
+                kind: kind.code(),
+                rank: kind.rank(),
+                one_sided: base.one_sided,
+            }
+        })
+        .collect()
+}
+
 /// Drive one shard's Init request/reply.
 fn init_worker(w: &mut WorkerHandle, shard: usize, msg: &WireMsg) -> anyhow::Result<()> {
     match w.channel.request(msg).with_context(|| format!("shard {shard}: init"))? {
@@ -1370,6 +1633,13 @@ pub struct ShardExecutor {
     /// workers that reported the capability (v2/v1 links keep full
     /// frames — the degrade matrix).
     compress: bool,
+    /// Every worker reported the typed block-state capability (v4
+    /// `HelloV4`); snapshot/restore refuses to run without it.
+    state: bool,
+    /// Driver's own copy of the block table, one [`StateExpect`] per
+    /// global block — returned state payloads are validated against
+    /// this *before* any payload resolution allocates.
+    expects: Vec<StateExpect>,
 }
 
 /// Map a poisoned driver-side worker-table lock into the shard-failure
@@ -1415,6 +1685,7 @@ impl ShardExecutor {
             blocks.len(),
             launch.transport.to_string(),
             launch.compress,
+            expects_for(blocks, kind, base),
         ))
     }
 
@@ -1502,6 +1773,7 @@ impl ShardExecutor {
             blocks.len(),
             "in-proc".to_string(),
             compress,
+            expects_for(blocks, kind, base),
         ))
     }
 
@@ -1514,8 +1786,10 @@ impl ShardExecutor {
         n_blocks: usize,
         transport: String,
         compress: bool,
+        expects: Vec<StateExpect>,
     ) -> ShardExecutor {
         let overlap = workers.iter().all(|w| w.channel.overlap);
+        let state = workers.iter().all(|w| w.channel.state);
         for w in &workers {
             if !w.channel.overlap {
                 // Neutral capability report: whether this *disables*
@@ -1537,6 +1811,8 @@ impl ShardExecutor {
             transport,
             overlap,
             compress,
+            state,
+            expects,
         }
     }
 
@@ -1677,18 +1953,41 @@ impl BlockExecutor for ShardExecutor {
                 }
                 w.delta.tx = base;
                 w.delta.tx_pending = Some((t64, sent));
-                WireMsg::StepV3(StepV3Msg {
-                    t: t64,
-                    base_t,
-                    resync,
-                    scale: common.scale,
-                    preconditioning: common.preconditioning,
-                    stat_due: common.stat_due,
-                    lr: common.lr,
-                    beta1: common.beta1,
-                    weight_decay: common.weight_decay,
-                    entries,
-                })
+                if w.channel.proto >= 4 {
+                    // v4 typed payloads share the v3 delta/baseline core:
+                    // the same `DeltaMat` entries travel wrapped in
+                    // `BlockPayload::Dense` (param/grad are always dense
+                    // on the step path — sketch factors only travel on
+                    // the state RPCs).
+                    WireMsg::StepV4(StepV4Msg {
+                        t: t64,
+                        base_t,
+                        resync,
+                        scale: common.scale,
+                        preconditioning: common.preconditioning,
+                        stat_due: common.stat_due,
+                        lr: common.lr,
+                        beta1: common.beta1,
+                        weight_decay: common.weight_decay,
+                        entries: entries
+                            .into_iter()
+                            .map(|e| StepEntryV4::new(e.index, e.refresh_due, e.param, e.grad))
+                            .collect(),
+                    })
+                } else {
+                    WireMsg::StepV3(StepV3Msg {
+                        t: t64,
+                        base_t,
+                        resync,
+                        scale: common.scale,
+                        preconditioning: common.preconditioning,
+                        stat_due: common.stat_due,
+                        lr: common.lr,
+                        beta1: common.beta1,
+                        weight_decay: common.weight_decay,
+                        entries,
+                    })
+                }
             } else {
                 let entries: Vec<StepEntry> = assignment[shard]
                     .iter()
@@ -1723,6 +2022,30 @@ impl BlockExecutor for ShardExecutor {
                 .channel
                 .recv()
                 .with_context(|| format!("shard {shard}: step t={} reply", common.t))?;
+            // A v4 reply is the v3 reply with each entry wrapped in a
+            // typed payload; unwrap the mandatory `Dense` layer up
+            // front so one arm below handles both protocols.
+            let reply = match reply {
+                WireMsg::StepOkV4(ok) => {
+                    let mut entries = Vec::with_capacity(ok.entries.len().min(1 << 16));
+                    for (index, payload) in ok.entries {
+                        let BlockPayload::Dense(dm) = payload else {
+                            bail!(
+                                "shard {shard}: v4 step reply for block {index} is not a \
+                                 dense payload"
+                            );
+                        };
+                        entries.push((index, dm));
+                    }
+                    WireMsg::StepOkV3(StepOkV3Msg {
+                        t: ok.t,
+                        base_t: ok.base_t,
+                        refreshes: ok.refreshes,
+                        entries,
+                    })
+                }
+                other => other,
+            };
             // Ownership bounds: assignments are contiguous runs, so a
             // range check validates each returned index in O(1).
             let (own_lo, own_hi) = match (assignment[shard].first(), assignment[shard].last()) {
@@ -1923,6 +2246,20 @@ impl BlockExecutor for ShardExecutor {
                 .with_context(|| format!("shard {shard}: refresh-ahead t={t_next} reply"))?;
             let ok = match reply {
                 WireMsg::RefreshAheadOk(ok) => ok,
+                WireMsg::RefreshAheadOkV4(ok) => {
+                    // v4 adds per-block escaped-mass diagnostics. They
+                    // are informational (nothing numeric consumes them),
+                    // but a non-finite ρ from a worker is still a bug
+                    // worth surfacing at the protocol boundary.
+                    for (idx, rho) in &ok.escaped {
+                        ensure!(
+                            rho.is_finite(),
+                            "shard {shard}: refresh-ahead reported non-finite escaped \
+                             mass {rho} for block {idx}"
+                        );
+                    }
+                    RefreshAheadOkMsg { t_next: ok.t_next, count: ok.count, refreshed: ok.refreshed }
+                }
                 WireMsg::Error { message } => {
                     bail!("shard {shard}: worker error: {message}")
                 }
@@ -1948,6 +2285,97 @@ impl BlockExecutor for ShardExecutor {
             }
         }
         Ok(any.then_some(RefreshAheadDone { refreshed, count }))
+    }
+
+    fn state_snapshot(&mut self) -> anyhow::Result<Vec<BlockStateSnap>> {
+        ensure!(
+            self.state,
+            "shard executor: a worker greeted below wire protocol v4 (no typed \
+             block-state capability); checkpoint snapshots need every link at v4"
+        );
+        let ShardExecutor { workers, assignment, n_blocks, expects, .. } = self;
+        let workers = workers_mut(workers)?;
+        let mut out: Vec<Option<BlockStateSnap>> = Vec::new();
+        out.resize_with(*n_blocks, || None);
+        for (shard, w) in workers.iter_mut().enumerate() {
+            // The wire is strict request/response outside the parked
+            // RefreshAhead slot — join-and-discard it first.
+            w.drain_pending_refresh();
+            let reply = w
+                .channel
+                .request(&WireMsg::StateSnap(StateSnapMsg { want: vec![] }))
+                .with_context(|| format!("shard {shard}: state snapshot"))?;
+            let entries = match reply {
+                WireMsg::StateSnapOk(ok) => ok.entries,
+                WireMsg::Error { message } => bail!("shard {shard}: worker error: {message}"),
+                other => bail!("shard {shard}: unexpected state-snapshot reply {other:?}"),
+            };
+            ensure!(
+                entries.len() == assignment[shard].len(),
+                "shard {shard}: returned {} block states, owns {}",
+                entries.len(),
+                assignment[shard].len()
+            );
+            let (own_lo, own_hi) = match (assignment[shard].first(), assignment[shard].last()) {
+                (Some(&lo), Some(&hi)) => (lo, hi),
+                _ => (1, 0), // empty shard: any index is foreign
+            };
+            for msg in entries {
+                let i = msg.index as usize;
+                ensure!(
+                    i >= own_lo && i <= own_hi && i < *n_blocks,
+                    "shard {shard}: returned foreign block state {i}"
+                );
+                ensure!(out[i].is_none(), "shard {shard}: duplicate block state {i}");
+                // `into_snap` validates every declared shape/rank
+                // against the driver's own block table before any
+                // payload resolution allocates.
+                let snap = msg
+                    .into_snap(&expects[i])
+                    .with_context(|| format!("shard {shard}: block {i} state"))?;
+                out[i] = Some(snap);
+            }
+        }
+        out.into_iter()
+            .enumerate()
+            .map(|(i, s)| s.ok_or_else(|| anyhow!("no shard returned state for block {i}")))
+            .collect()
+    }
+
+    fn state_restore(&mut self, snaps: Vec<BlockStateSnap>) -> anyhow::Result<()> {
+        ensure!(
+            self.state,
+            "shard executor: a worker greeted below wire protocol v4 (no typed \
+             block-state capability); checkpoint restore needs every link at v4"
+        );
+        let ShardExecutor { workers, assignment, n_blocks, .. } = self;
+        ensure!(
+            snaps.len() == *n_blocks,
+            "shard executor: restoring {} block states into {} blocks",
+            snaps.len(),
+            *n_blocks
+        );
+        let workers = workers_mut(workers)?;
+        for (shard, w) in workers.iter_mut().enumerate() {
+            w.drain_pending_refresh();
+            let entries: Vec<BlockStateMsg> = assignment[shard]
+                .iter()
+                .map(|&i| BlockStateMsg::from_snap(i as u32, &snaps[i]))
+                .collect();
+            if entries.is_empty() {
+                continue;
+            }
+            let reply = w
+                .channel
+                .request(&WireMsg::StateRestore(StateRestoreMsg { entries }))
+                .with_context(|| format!("shard {shard}: state restore"))?;
+            match reply {
+                WireMsg::Ok => {}
+                WireMsg::Error { message } => bail!("shard {shard}: worker error: {message}"),
+                other => bail!("shard {shard}: unexpected state-restore reply {other:?}"),
+            }
+        }
+        Ok(())
     }
 
     fn label(&self) -> String {
@@ -2222,7 +2650,7 @@ mod tests {
         let mut conn = t.dial().unwrap();
         let _ = conn.set_timeout(Some(Duration::from_secs(10)));
         match wire::read_msg(&mut conn).unwrap() {
-            WireMsg::HelloV3 { worker_id: 0, overlap: true, compress: true, .. } => {}
+            WireMsg::HelloV4 { worker_id: 0, overlap: true, compress: true, state: true, .. } => {}
             other => panic!("unexpected hello: {other:?}"),
         }
         let init = WireMsg::Init(InitMsg {
@@ -2433,7 +2861,7 @@ mod tests {
         let mut conn = t.dial().unwrap();
         let _ = conn.set_timeout(Some(Duration::from_secs(10)));
         match wire::read_msg(&mut conn).unwrap() {
-            WireMsg::HelloV3 { compress: true, .. } => {}
+            WireMsg::HelloV4 { compress: true, .. } => {}
             other => panic!("unexpected hello: {other:?}"),
         }
         let init = WireMsg::Init(InitMsg {
@@ -2714,5 +3142,292 @@ mod tests {
             ..init
         };
         assert!(WorkerState::build(&dup).is_err());
+    }
+
+    /// Step-wide ctx fields shared by the v4 state tests below.
+    fn sketch_ctxs(blocks: &[Block], t: usize) -> Vec<StepCtx> {
+        (0..blocks.len())
+            .map(|i| StepCtx {
+                t,
+                scale: 1.0,
+                preconditioning: t >= 2,
+                refresh_due: (t + i) % 2 == 0,
+                lr: 0.05,
+                beta1: 0.9,
+                weight_decay: 1e-3,
+                stat_due: true,
+                graft: GraftType::Rmsprop,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn v4_state_snapshot_restore_over_wire_is_bitwise() {
+        // Sketched blocks, so the O(dk) factored payloads actually
+        // travel: snapshot a sharded run, check it equals the local
+        // executor's snapshot payload for payload, restore it into a
+        // *fresh* worker fleet, and the continued run must stay bitwise
+        // identical to the local executor — the sketch payloads are
+        // lossless factor transports, not approximations.
+        let shapes = [(9usize, 6usize)];
+        let blocks = partition(&shapes, 5);
+        let kind = UnitKind::Sketched { rank: 3 };
+        let base = ShampooConfig {
+            lr: 0.05,
+            start_preconditioning_step: 2,
+            graft: GraftType::Rmsprop,
+            ..Default::default()
+        };
+        let mut local = crate::optim::LocalExecutor::new(&blocks, kind, &base, 1);
+        let transports: Vec<_> =
+            (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
+        let mut exec =
+            ShardExecutor::launch_in_proc(&blocks, kind, &base, 1, &transports, PROTO_VERSION, true)
+                .expect("launch v4 executor");
+        assert!(exec.state, "v4 workers must report the typed block-state capability");
+        let mut p1 = vec![Matrix::zeros(9, 6)];
+        let mut p2 = p1.clone();
+        let mut rng = Pcg64::new(612);
+        for t in 1..=5usize {
+            let grads = vec![Matrix::randn(9, 6, &mut rng)];
+            let ctxs = sketch_ctxs(&blocks, t);
+            local.step_blocks(&blocks, &mut p1, &grads, &ctxs).unwrap();
+            exec.step_blocks(&blocks, &mut p2, &grads, &ctxs).unwrap();
+            assert_eq!(p1[0].max_diff(&p2[0]), 0.0, "diverged at step {t}");
+        }
+        // The wire snapshot equals the local snapshot, payload for
+        // payload (compare through the canonical codec encoding).
+        let local_snaps = local.state_snapshot().unwrap();
+        let wire_snaps = exec.state_snapshot().unwrap();
+        assert_eq!(local_snaps.len(), wire_snaps.len());
+        for (i, (a, b)) in local_snaps.iter().zip(&wire_snaps).enumerate() {
+            assert_eq!(
+                BlockStateMsg::from_snap(i as u32, a),
+                BlockStateMsg::from_snap(i as u32, b),
+                "block {i} state differs between local and wire snapshots"
+            );
+        }
+        // Restore into a fresh fleet (blank worker states) and keep
+        // stepping: still bitwise against the uninterrupted local run.
+        let transports2: Vec<_> =
+            (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
+        let mut exec2 = ShardExecutor::launch_in_proc(
+            &blocks,
+            kind,
+            &base,
+            1,
+            &transports2,
+            PROTO_VERSION,
+            true,
+        )
+        .expect("launch restore target");
+        exec2.state_restore(wire_snaps).unwrap();
+        let mut p3 = p2.clone();
+        for t in 6..=9usize {
+            let grads = vec![Matrix::randn(9, 6, &mut rng)];
+            let ctxs = sketch_ctxs(&blocks, t);
+            local.step_blocks(&blocks, &mut p1, &grads, &ctxs).unwrap();
+            exec2.step_blocks(&blocks, &mut p3, &grads, &ctxs).unwrap();
+            assert_eq!(p1[0].max_diff(&p3[0]), 0.0, "diverged at step {t} after restore");
+        }
+        // Restore rejects a wrong-length snapshot vector outright.
+        assert!(exec2.state_restore(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn v4_severed_state_rpc_streams_recover_bitwise() {
+        // Chaos leg: sever the connection inside the sketch-payload
+        // state RPCs — once as the StateSnap request goes out (shard 0),
+        // once as the StateSnapOk reply comes back (shard 1), and once
+        // as the restore target's StateRestore goes out. The channel's
+        // reconnect + replay must absorb all three (StateSnap is a pure
+        // read, StateRestore idempotent), and the restored fleet must
+        // continue bitwise identical to the local executor.
+        use crate::coordinator::fault::FaultAction;
+        let shapes = [(9usize, 6usize)];
+        let blocks = partition(&shapes, 5);
+        let kind = UnitKind::Sketched { rank: 3 };
+        let base = ShampooConfig {
+            lr: 0.05,
+            start_preconditioning_step: 2,
+            graft: GraftType::Rmsprop,
+            ..Default::default()
+        };
+        let mut local = crate::optim::LocalExecutor::new(&blocks, kind, &base, 1);
+        // Request frames per shard: 0 = Init, 1..=5 = StepV4, 6 = the
+        // StateSnap. Reply frames: 0 = hello, 1 = init Ok, 2..=6 =
+        // StepOkV4, 7 = the StateSnapOk.
+        let transports = vec![
+            FaultInjectingTransport::new(
+                FaultScript::none().on_request(6, FaultAction::Sever),
+            ),
+            FaultInjectingTransport::new(FaultScript::none().on_reply(7, FaultAction::Sever)),
+        ];
+        let mut exec =
+            ShardExecutor::launch_in_proc(&blocks, kind, &base, 1, &transports, PROTO_VERSION, true)
+                .expect("launch v4 executor");
+        let mut p1 = vec![Matrix::zeros(9, 6)];
+        let mut p2 = p1.clone();
+        let mut rng = Pcg64::new(613);
+        for t in 1..=5usize {
+            let grads = vec![Matrix::randn(9, 6, &mut rng)];
+            let ctxs = sketch_ctxs(&blocks, t);
+            local.step_blocks(&blocks, &mut p1, &grads, &ctxs).unwrap();
+            exec.step_blocks(&blocks, &mut p2, &grads, &ctxs).unwrap();
+        }
+        let local_snaps = local.state_snapshot().unwrap();
+        let wire_snaps = exec.state_snapshot().expect("snapshot must survive both severs");
+        assert_eq!(transports[0].connections(), 2, "shard 0 reconnected mid-snap");
+        assert_eq!(transports[1].connections(), 2, "shard 1 reconnected mid-snap");
+        for (i, (a, b)) in local_snaps.iter().zip(&wire_snaps).enumerate() {
+            assert_eq!(
+                BlockStateMsg::from_snap(i as u32, a),
+                BlockStateMsg::from_snap(i as u32, b),
+                "block {i} state differs after severed snapshot RPCs"
+            );
+        }
+        // Restore target: sever the StateRestore request itself
+        // (request frames: 0 = Init, 1 = StateRestore).
+        let transports2 = vec![
+            FaultInjectingTransport::new(
+                FaultScript::none().on_request(1, FaultAction::Sever),
+            ),
+            FaultInjectingTransport::new(FaultScript::none()),
+        ];
+        let mut exec2 = ShardExecutor::launch_in_proc(
+            &blocks,
+            kind,
+            &base,
+            1,
+            &transports2,
+            PROTO_VERSION,
+            true,
+        )
+        .expect("launch restore target");
+        exec2.state_restore(wire_snaps).expect("restore must survive the sever");
+        assert_eq!(transports2[0].connections(), 2, "restore target reconnected mid-restore");
+        let mut p3 = p2.clone();
+        for t in 6..=9usize {
+            let grads = vec![Matrix::randn(9, 6, &mut rng)];
+            let ctxs = sketch_ctxs(&blocks, t);
+            local.step_blocks(&blocks, &mut p1, &grads, &ctxs).unwrap();
+            exec2.step_blocks(&blocks, &mut p3, &grads, &ctxs).unwrap();
+            assert_eq!(p1[0].max_diff(&p3[0]), 0.0, "diverged at step {t} after chaos restore");
+        }
+    }
+
+    #[test]
+    fn v4_driver_degrades_to_v3_worker_without_state_capability() {
+        // Mixed-version deployment: v4 driver, workers pinned at v3.
+        // Steps keep the delta payload layer and stay bitwise; the
+        // state RPCs fail loudly with the capability message instead of
+        // wedging the wire or half-restoring anything.
+        let shapes = [(6usize, 6usize)];
+        let blocks = partition(&shapes, 3);
+        let kind = UnitKind::Sketched { rank: 2 };
+        let base = ShampooConfig {
+            lr: 0.05,
+            start_preconditioning_step: 2,
+            graft: GraftType::Rmsprop,
+            ..Default::default()
+        };
+        let mut local = crate::optim::LocalExecutor::new(&blocks, kind, &base, 1);
+        let transports: Vec<_> =
+            (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
+        let mut exec = ShardExecutor::launch_in_proc(&blocks, kind, &base, 1, &transports, 3, true)
+            .expect("launch v3-pinned executor");
+        assert!(!exec.state, "v3 greetings must not report the typed-state capability");
+        assert!(exec.overlap_capable(), "v3 keeps the overlap capability");
+        let mut p1 = vec![Matrix::zeros(6, 6)];
+        let mut p2 = p1.clone();
+        let mut rng = Pcg64::new(614);
+        for t in 1..=5usize {
+            let grads = vec![Matrix::randn(6, 6, &mut rng)];
+            let ctxs = sketch_ctxs(&blocks, t);
+            local.step_blocks(&blocks, &mut p1, &grads, &ctxs).unwrap();
+            exec.step_blocks(&blocks, &mut p2, &grads, &ctxs).unwrap();
+            assert_eq!(p1[0].max_diff(&p2[0]), 0.0, "mixed-version run diverged at step {t}");
+        }
+        let err = exec.state_snapshot().expect_err("v3 links must refuse state snapshots");
+        assert!(format!("{err:#}").contains("below wire protocol v4"), "{err:#}");
+        let snaps = local.state_snapshot().unwrap();
+        let err = exec.state_restore(snaps).expect_err("v3 links must refuse state restore");
+        assert!(format!("{err:#}").contains("below wire protocol v4"), "{err:#}");
+        // The refusal is clean: the wire still steps bitwise afterwards.
+        let grads = vec![Matrix::randn(6, 6, &mut rng)];
+        let ctxs = sketch_ctxs(&blocks, 6);
+        local.step_blocks(&blocks, &mut p1, &grads, &ctxs).unwrap();
+        exec.step_blocks(&blocks, &mut p2, &grads, &ctxs).unwrap();
+        assert_eq!(p1[0].max_diff(&p2[0]), 0.0, "diverged after refused state RPCs");
+    }
+
+    #[test]
+    fn worker_state_restore_validates_batch_before_applying() {
+        // One good + one bad entry: the worker must reject the batch
+        // and leave even the *good* block untouched — no half-restored
+        // worker — and a fully valid self-restore must be bitwise
+        // idempotent.
+        let init = InitMsg {
+            kind: UnitKind::Sketched { rank: 2 }.code(),
+            rank: 2,
+            beta2: 0.999,
+            eps: 1e-6,
+            one_sided: false,
+            graft: GraftType::Rmsprop.code(),
+            threads: 1,
+            blocks: vec![
+                BlockSpec { index: 0, rows: 4, cols: 3 },
+                BlockSpec { index: 1, rows: 4, cols: 3 },
+            ],
+        };
+        let mut ws = WorkerState::build(&init).unwrap();
+        let mut rng = Pcg64::new(640);
+        let step = StepMsg {
+            t: 1,
+            scale: 1.0,
+            preconditioning: true,
+            stat_due: true,
+            lr: 0.05,
+            beta1: 0.9,
+            weight_decay: 0.0,
+            entries: (0..2)
+                .map(|i| StepEntry {
+                    index: i,
+                    refresh_due: true,
+                    param: Matrix::zeros(4, 3),
+                    grad: Matrix::randn(4, 3, &mut rng),
+                })
+                .collect(),
+        };
+        ws.process_step(&step).unwrap();
+        let before = ws.process_state_snap(&StateSnapMsg { want: vec![] }).unwrap();
+        assert_eq!(before.entries.len(), 2);
+        // Block 0 keeps its own valid payload; block 1 smuggles a
+        // foreign-shaped momentum.
+        let good = before.entries[0].clone();
+        let mut bad = before.entries[1].clone();
+        bad.mu = BlockPayload::dense(&Matrix::zeros(9, 9));
+        let err = ws
+            .process_state_restore(&StateRestoreMsg { entries: vec![good, bad] })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("block 1"), "{err:#}");
+        // Unknown indices are rejected before anything resolves.
+        let mut foreign = before.entries[0].clone();
+        foreign.index = 7;
+        assert!(ws
+            .process_state_restore(&StateRestoreMsg { entries: vec![foreign] })
+            .is_err());
+        // The worker is bitwise untouched by the rejected batches.
+        let after = ws.process_state_snap(&StateSnapMsg { want: vec![] }).unwrap();
+        assert_eq!(before, after, "a rejected batch must not half-restore");
+        // A fully valid self-restore lands and is bitwise idempotent.
+        ws.process_state_restore(&StateRestoreMsg { entries: before.entries.clone() }).unwrap();
+        let again = ws.process_state_snap(&StateSnapMsg { want: vec![] }).unwrap();
+        assert_eq!(before, again, "self-restore must be bitwise idempotent");
+        // Narrow snapshots honor the want-list and reject unknowns.
+        let one = ws.process_state_snap(&StateSnapMsg { want: vec![1] }).unwrap();
+        assert_eq!(one.entries.len(), 1);
+        assert_eq!(one.entries[0].index, 1);
+        assert!(ws.process_state_snap(&StateSnapMsg { want: vec![9] }).is_err());
     }
 }

@@ -50,20 +50,42 @@
 //! gradient computation (a second in-flight request per shard). Workers
 //! that greet with the v1 `Hello` never receive it — the driver degrades
 //! that shard to synchronous refresh.
+//!
+//! ## Wire protocol v4: sketch-native typed block payloads
+//!
+//! Protocol v4 replaces the untyped matrix round-trips with the
+//! [`BlockPayload`] codec: every matrix-shaped object crosses the wire as
+//! a typed payload — `Dense` (composing with the [`DeltaMat`] delta
+//! layer), `Sketch` (rank-ℓ FD factors + the escaped-mass scalar, O(dℓ)
+//! bytes instead of a materialized O(d²) covariance), or `Diag`. On top
+//! of it ride the typed step frames ([`WireMsg::StepV4`] /
+//! [`WireMsg::StepOkV4`]), the escaped-mass-reporting
+//! [`WireMsg::RefreshAheadOkV4`], and the block-state RPCs
+//! ([`WireMsg::StateSnap`] / [`WireMsg::StateSnapOk`] /
+//! [`WireMsg::StateRestore`]) that let a driver pull or push entire
+//! optimizer states ([`StatePayload`]) — sketched `SketchUnit` sides
+//! travel as their factors, never densified. The same payload types are
+//! the checkpoint v2 block format ([`crate::train::checkpoint`]). v3/v2/
+//! v1 peers keep working exactly as before (typed frames and state RPCs
+//! simply never flow on those links), following the established degrade
+//! matrix.
 
+use crate::optim::precond::{BlockStateSnap, PrecondState, SideState, SketchState};
 use crate::tensor::Matrix;
 use anyhow::{anyhow, bail, ensure, Context};
 use std::io::{Read, Write};
 use std::time::Duration;
 
-/// Current wire protocol version, carried in [`WireMsg::HelloV3`].
+/// Current wire protocol version, carried in [`WireMsg::HelloV4`].
 /// Version 1 (the plain [`WireMsg::Hello`] greeting) predates the
 /// `RefreshAhead` messages; drivers treat v1 workers as refresh-overlap
 /// incapable and keep their refreshes synchronous. Version 2 added the
 /// capability handshake + RefreshAhead; version 3 adds the
-/// delta-compressed block payload layer ([`DeltaMat`]). Drivers treat
-/// v2/v1 workers as compression-incapable and ship full frames.
-pub const PROTO_VERSION: u32 = 3;
+/// delta-compressed block payload layer ([`DeltaMat`]); version 4 adds
+/// the typed [`BlockPayload`] codec and the block-state RPCs. Drivers
+/// treat lower-version workers as lacking the newer layers and degrade
+/// per link.
+pub const PROTO_VERSION: u32 = 4;
 
 /// A connected driver↔worker byte stream: any transport the shard
 /// channel can speak — TCP, Unix sockets, or the in-memory
@@ -106,6 +128,10 @@ pub struct InitMsg {
 }
 
 /// One block's inputs for a driven step.
+///
+/// Construct via [`StepEntry::new`] — entry assembly lives in this codec
+/// module so the payload layers (v1 raw, v3 delta, v4 typed) stay in one
+/// place; building the struct literally outside it is deprecated.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StepEntry {
     pub index: u32,
@@ -113,6 +139,13 @@ pub struct StepEntry {
     pub refresh_due: bool,
     pub param: Matrix,
     pub grad: Matrix,
+}
+
+impl StepEntry {
+    /// Codec-owned constructor for v1/v2 full-frame step entries.
+    pub fn new(index: u32, refresh_due: bool, param: Matrix, grad: Matrix) -> StepEntry {
+        StepEntry { index, refresh_due, param, grad }
+    }
 }
 
 /// Driver → worker: drive every assigned block one step.
@@ -232,6 +265,23 @@ impl DeltaMat {
         } else {
             DeltaMat::Raw(bits_matrix(rows, cols, cur))
         }
+    }
+
+    /// Standalone (baseline-free) encode of a matrix: compressed-full
+    /// when that wins, raw otherwise. This is the codec entry point that
+    /// replaced the scattered `mat_bits` call sites — state payloads and
+    /// checkpoint tensors all come through here.
+    pub fn from_matrix(m: &Matrix) -> DeltaMat {
+        DeltaMat::encode(m.rows(), m.cols(), &mat_bits(m), None)
+    }
+
+    /// Resolve to a [`Matrix`] (bitwise inverse of the encode path; the
+    /// matrix-side companion of [`DeltaMat::resolve`]). The caller must
+    /// have validated [`DeltaMat::shape`] against the block it owns
+    /// first.
+    pub fn resolve_matrix(&self, base: Option<&[u64]>) -> anyhow::Result<Matrix> {
+        let (rows, cols) = self.shape();
+        Ok(bits_matrix(rows, cols, &self.resolve(base)?))
     }
 
     /// Resolve to full bit patterns, XORing `Delta` payloads against
@@ -436,6 +486,410 @@ pub struct StepOkV3Msg {
     pub entries: Vec<(u32, DeltaMat)>,
 }
 
+impl StepEntryV3 {
+    /// Codec-owned constructor for v3 delta-compressed step entries.
+    pub fn new(index: u32, refresh_due: bool, param: DeltaMat, grad: DeltaMat) -> StepEntryV3 {
+        StepEntryV3 { index, refresh_due, param, grad }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v4 typed block payloads + state codec.
+// ---------------------------------------------------------------------------
+
+/// How one matrix-shaped object crosses a v4 wire (or lands in a v2
+/// checkpoint): dense matrices keep composing with the [`DeltaMat`]
+/// delta layer; FD-sketched factors travel in factored O(dℓ) form;
+/// diagonal accumulators are tagged so a receiver can sanity-check the
+/// payload kind against the unit it owns.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BlockPayload {
+    /// Dense matrix (raw / compressed-full / delta against a baseline).
+    Dense(DeltaMat),
+    /// Rank-ℓ FD sketch factors + escaped-mass scalar.
+    Sketch(SketchPayload),
+    /// Elementwise (diagonal-method) accumulator.
+    Diag(DeltaMat),
+}
+
+/// Serialized FD sketch: the d×ℓ eigenbasis, ℓ eigenvalues, and the
+/// RFD escaped-mass bookkeeping that makes the sketch self-contained.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SketchPayload {
+    /// Eigenbasis, d×ℓ (standalone-encoded; never `Delta`).
+    pub basis: DeltaMat,
+    /// Eigenvalues (descending, length ℓ) as IEEE-754 bit-exact f64s.
+    pub eigvals: Vec<f64>,
+    /// Cumulative escaped mass ρ_{1:t}.
+    pub escaped_mass: f64,
+    /// Escaped mass of the most recent update.
+    pub last_rho: f64,
+    /// Update counter.
+    pub steps: u64,
+}
+
+impl SketchPayload {
+    /// Encode an FD sketch state ([`SketchState`]) for the wire.
+    pub fn from_state(s: &SketchState) -> SketchPayload {
+        SketchPayload {
+            basis: DeltaMat::from_matrix(&s.basis),
+            eigvals: s.eigvals.clone(),
+            escaped_mass: s.escaped_mass,
+            last_rho: s.last_rho,
+            steps: s.steps,
+        }
+    }
+
+    /// Validate this payload's declared geometry against the expected
+    /// sketch dimensions **without resolving anything** — the alloc-bomb
+    /// guard for adversarial rank fields.
+    pub fn validate(&self, dim: usize, rank: usize) -> anyhow::Result<()> {
+        let (r, c) = self.basis.shape();
+        ensure!(
+            r == dim && c == rank,
+            "state payload: sketch basis {r}x{c} != expected {dim}x{rank}"
+        );
+        ensure!(
+            self.eigvals.len() == rank,
+            "state payload: {} eigenvalues for a rank-{rank} sketch",
+            self.eigvals.len()
+        );
+        ensure!(
+            !matches!(self.basis, DeltaMat::Delta { .. }),
+            "state payload: sketch basis must be standalone, not delta-encoded"
+        );
+        Ok(())
+    }
+
+    /// Decode into a [`SketchState`], validating against the expected
+    /// dimensions before any allocation-bearing resolve runs.
+    pub fn into_state(self, dim: usize, rank: usize) -> anyhow::Result<SketchState> {
+        self.validate(dim, rank)?;
+        Ok(SketchState {
+            basis: self.basis.resolve_matrix(None)?,
+            eigvals: self.eigvals,
+            escaped_mass: self.escaped_mass,
+            last_rho: self.last_rho,
+            steps: self.steps,
+        })
+    }
+}
+
+impl BlockPayload {
+    /// Standalone dense payload for a matrix (codec entry point that
+    /// replaced direct `mat_bits` construction at the call sites).
+    pub fn dense(m: &Matrix) -> BlockPayload {
+        BlockPayload::Dense(DeltaMat::from_matrix(m))
+    }
+
+    /// Standalone diagonal-accumulator payload.
+    pub fn diag(m: &Matrix) -> BlockPayload {
+        BlockPayload::Diag(DeltaMat::from_matrix(m))
+    }
+
+    /// Declared shape of the payload (sketches report their basis shape).
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            BlockPayload::Dense(dm) | BlockPayload::Diag(dm) => dm.shape(),
+            BlockPayload::Sketch(s) => s.basis.shape(),
+        }
+    }
+
+    /// Resolve a `Dense` payload to a matrix, validating the declared
+    /// shape against the expected block geometry *before* the resolve
+    /// allocates. `Sketch`/`Diag` payloads in a dense position are a
+    /// protocol error.
+    pub fn resolve_dense(
+        &self,
+        rows: usize,
+        cols: usize,
+        base: Option<&[u64]>,
+    ) -> anyhow::Result<Matrix> {
+        let BlockPayload::Dense(dm) = self else {
+            bail!("block payload: expected a dense payload, got {}", self.kind_label());
+        };
+        let (r, c) = dm.shape();
+        ensure!(r == rows && c == cols, "block payload: shape {r}x{c} != expected {rows}x{cols}");
+        dm.resolve_matrix(base)
+    }
+
+    /// Resolve a `Diag` payload (standalone; same pre-resolve shape
+    /// validation as [`BlockPayload::resolve_dense`]).
+    pub fn resolve_diag(&self, rows: usize, cols: usize) -> anyhow::Result<Matrix> {
+        let BlockPayload::Diag(dm) = self else {
+            bail!("block payload: expected a diagonal payload, got {}", self.kind_label());
+        };
+        let (r, c) = dm.shape();
+        ensure!(r == rows && c == cols, "block payload: shape {r}x{c} != expected {rows}x{cols}");
+        dm.resolve_matrix(None)
+    }
+
+    fn kind_label(&self) -> &'static str {
+        match self {
+            BlockPayload::Dense(_) => "dense",
+            BlockPayload::Sketch(_) => "sketch",
+            BlockPayload::Diag(_) => "diag",
+        }
+    }
+}
+
+/// One side of a serialized [`StatePayload::Sketch`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SidePayload {
+    /// dim ≤ ℓ: exact small factor + cached root.
+    Exact { c: BlockPayload, root: Option<BlockPayload> },
+    /// dim > ℓ: factored FD sketch.
+    Sketch(SketchPayload),
+}
+
+/// Full serialized preconditioner-unit state — the wire/checkpoint form
+/// of [`PrecondState`]. Sketched sides stay factored end to end.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StatePayload {
+    /// Exact Kronecker factors + cached inverse roots.
+    Kron {
+        l: BlockPayload,
+        r: BlockPayload,
+        l_root: Option<BlockPayload>,
+        r_root: Option<BlockPayload>,
+    },
+    /// Per-side sketched (or small-exact) factors.
+    Sketch { left: SidePayload, right: SidePayload },
+    /// Diagonal Adam moments + step counter.
+    Diag { m: BlockPayload, v: BlockPayload, t: u64 },
+}
+
+/// What the receiver knows a block's state must look like — the
+/// pre-resolve validation context for state payloads. Every declared
+/// shape/rank in an incoming [`BlockStateMsg`] is checked against this
+/// (derived from the receiver's own block table) before any payload
+/// resolves, so adversarial rank/shape fields can never drive
+/// allocations.
+#[derive(Clone, Copy, Debug)]
+pub struct StateExpect {
+    pub rows: usize,
+    pub cols: usize,
+    /// Unit family code (same codes as [`InitMsg::kind`]).
+    pub kind: u8,
+    /// FD sketch size ℓ (sketched units only).
+    pub rank: usize,
+    pub one_sided: bool,
+}
+
+impl StateExpect {
+    /// Whether a sketch unit's side of dimension `dim` is exact
+    /// (dim ≤ ℓ) or sketched — must mirror `Side::new`.
+    fn side_is_exact(&self, dim: usize) -> bool {
+        dim <= self.rank
+    }
+}
+
+fn side_from_state(s: &SideState) -> SidePayload {
+    match s {
+        SideState::Exact { c, root } => SidePayload::Exact {
+            c: BlockPayload::dense(c),
+            root: root.as_ref().map(BlockPayload::dense),
+        },
+        SideState::Sketch(sk) => SidePayload::Sketch(SketchPayload::from_state(sk)),
+    }
+}
+
+fn side_into_state(p: SidePayload, dim: usize, exp: &StateExpect) -> anyhow::Result<SideState> {
+    match p {
+        SidePayload::Exact { c, root } => {
+            ensure!(
+                exp.side_is_exact(dim),
+                "state payload: exact side payload for a sketched dim-{dim} side"
+            );
+            Ok(SideState::Exact {
+                c: c.resolve_dense(dim, dim, None)?,
+                root: root.map(|r| r.resolve_dense(dim, dim, None)).transpose()?,
+            })
+        }
+        SidePayload::Sketch(sk) => {
+            ensure!(
+                !exp.side_is_exact(dim),
+                "state payload: sketch payload for an exact dim-{dim} side"
+            );
+            Ok(SideState::Sketch(sk.into_state(dim, exp.rank)?))
+        }
+    }
+}
+
+impl StatePayload {
+    /// Encode a unit's [`PrecondState`] for the wire / checkpoint.
+    pub fn from_state(s: &PrecondState) -> StatePayload {
+        match s {
+            PrecondState::Kronecker { l, r, l_root, r_root } => StatePayload::Kron {
+                l: BlockPayload::dense(l),
+                r: BlockPayload::dense(r),
+                l_root: l_root.as_ref().map(BlockPayload::dense),
+                r_root: r_root.as_ref().map(BlockPayload::dense),
+            },
+            PrecondState::Sketch { left, right } => StatePayload::Sketch {
+                left: side_from_state(left),
+                right: side_from_state(right),
+            },
+            PrecondState::Diag { m, v, t } => {
+                StatePayload::Diag { m: BlockPayload::diag(m), v: BlockPayload::diag(v), t: *t }
+            }
+        }
+    }
+
+    /// Decode into a [`PrecondState`], validating the payload kind and
+    /// every declared shape against `exp` **before** resolving (the
+    /// alloc-bomb discipline: nothing materializes until the geometry
+    /// checks out against the receiver's block table).
+    pub fn into_state(self, exp: &StateExpect) -> anyhow::Result<PrecondState> {
+        let (rows, cols) = (exp.rows, exp.cols);
+        match (self, exp.kind) {
+            (StatePayload::Kron { l, r, l_root, r_root }, 0) => Ok(PrecondState::Kronecker {
+                l: l.resolve_dense(rows, rows, None)?,
+                r: r.resolve_dense(cols, cols, None)?,
+                l_root: l_root.map(|m| m.resolve_dense(rows, rows, None)).transpose()?,
+                r_root: r_root.map(|m| m.resolve_dense(cols, cols, None)).transpose()?,
+            }),
+            (StatePayload::Sketch { left, right }, 1) => Ok(PrecondState::Sketch {
+                left: side_into_state(left, rows, exp)?,
+                right: side_into_state(right, cols, exp)?,
+            }),
+            (StatePayload::Diag { m, v, t }, 2) => Ok(PrecondState::Diag {
+                m: m.resolve_diag(rows, cols)?,
+                v: v.resolve_diag(rows, cols)?,
+                t,
+            }),
+            (payload, kind) => bail!(
+                "state payload: {} payload for unit-kind code {kind}",
+                match payload {
+                    StatePayload::Kron { .. } => "Kronecker",
+                    StatePayload::Sketch { .. } => "sketch",
+                    StatePayload::Diag { .. } => "diagonal",
+                }
+            ),
+        }
+    }
+}
+
+/// Full serialized optimizer state of one block: the unit's
+/// [`StatePayload`] plus the first-order companions. The wire form of
+/// [`BlockStateSnap`]; also the checkpoint v2 block-state record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockStateMsg {
+    /// Global block index.
+    pub index: u32,
+    pub state: StatePayload,
+    /// Momentum (always dense, block-shaped).
+    pub mu: BlockPayload,
+    /// Grafting accumulator (kinds that keep one).
+    pub graft_v: Option<BlockPayload>,
+    /// Grafting step counter.
+    pub graft_t: u64,
+}
+
+impl BlockStateMsg {
+    /// Encode one block's [`BlockStateSnap`] for the wire / checkpoint.
+    pub fn from_snap(index: u32, snap: &BlockStateSnap) -> BlockStateMsg {
+        BlockStateMsg {
+            index,
+            state: StatePayload::from_state(&snap.unit),
+            mu: BlockPayload::dense(&snap.mu),
+            graft_v: snap.graft_v.as_ref().map(BlockPayload::dense),
+            graft_t: snap.graft_t,
+        }
+    }
+
+    /// Decode into a [`BlockStateSnap`], validating every declared
+    /// shape/rank against `exp` before resolving any payload.
+    pub fn into_snap(self, exp: &StateExpect) -> anyhow::Result<BlockStateSnap> {
+        let index = self.index;
+        let unit = self.state.into_state(exp).with_context(|| format!("block {index} state"))?;
+        let mu = self.mu.resolve_dense(exp.rows, exp.cols, None)?;
+        let graft_v =
+            self.graft_v.map(|g| g.resolve_dense(exp.rows, exp.cols, None)).transpose()?;
+        Ok(BlockStateSnap { unit, mu, graft_v, graft_t: self.graft_t })
+    }
+}
+
+/// One block's inputs for a v4 typed step (the param/grad payloads must
+/// be `Dense`; the worker rejects anything else before touching them).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepEntryV4 {
+    pub index: u32,
+    pub refresh_due: bool,
+    pub param: BlockPayload,
+    pub grad: BlockPayload,
+}
+
+impl StepEntryV4 {
+    /// Codec-owned constructor for v4 typed step entries.
+    pub fn new(index: u32, refresh_due: bool, param: DeltaMat, grad: DeltaMat) -> StepEntryV4 {
+        StepEntryV4 {
+            index,
+            refresh_due,
+            param: BlockPayload::Dense(param),
+            grad: BlockPayload::Dense(grad),
+        }
+    }
+}
+
+/// Driver → worker: drive every assigned block one step (v4 typed
+/// payloads; same delta/baseline/resync semantics as [`StepV3Msg`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepV4Msg {
+    pub t: u64,
+    pub base_t: u64,
+    pub resync: bool,
+    pub scale: f64,
+    pub preconditioning: bool,
+    pub stat_due: bool,
+    pub lr: f64,
+    pub beta1: f64,
+    pub weight_decay: f64,
+    pub entries: Vec<StepEntryV4>,
+}
+
+/// Worker → driver: updated parameter blocks as typed payloads.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepOkV4Msg {
+    pub t: u64,
+    pub base_t: u64,
+    pub refreshes: u32,
+    pub entries: Vec<(u32, BlockPayload)>,
+}
+
+/// Worker → driver: v4 RefreshAhead reply — the v2 fields plus the
+/// per-block cumulative escaped mass of every refreshed sketched block
+/// (left + right sides), the ρ_{1:t} diagnostic the driver aggregates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RefreshAheadOkV4Msg {
+    pub t_next: u64,
+    pub count: u32,
+    pub refreshed: Vec<u32>,
+    /// `(block index, ρ_left + ρ_right)` for refreshed sketched blocks.
+    pub escaped: Vec<(u32, f64)>,
+}
+
+/// Driver → worker: snapshot the full optimizer state of the listed
+/// blocks (empty = every owned block). Read-only and idempotent — safe
+/// to replay verbatim after a reconnect.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateSnapMsg {
+    pub want: Vec<u32>,
+}
+
+/// Worker → driver: the requested block states, sketched sides factored.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateSnapOkMsg {
+    pub entries: Vec<BlockStateMsg>,
+}
+
+/// Driver → worker: overwrite the listed blocks' optimizer state
+/// (reply: [`WireMsg::Ok`]). Idempotent — replay-safe.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateRestoreMsg {
+    pub entries: Vec<BlockStateMsg>,
+}
+
 /// Every message that can cross the shard wire.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireMsg {
@@ -464,6 +918,17 @@ pub enum WireMsg {
     HelloV3 { worker_id: u32, proto: u32, overlap: bool, compress: bool },
     StepV3(StepV3Msg),
     StepOkV3(StepOkV3Msg),
+    /// Worker → driver greeting from protocol v4 on: the v3 capability
+    /// report plus `state` — whether the worker accepts the typed
+    /// payload layer and the block-state RPCs. A false report (or any
+    /// older greeting) keeps that link on the v3-and-below frames.
+    HelloV4 { worker_id: u32, proto: u32, overlap: bool, compress: bool, state: bool },
+    StepV4(StepV4Msg),
+    StepOkV4(StepOkV4Msg),
+    RefreshAheadOkV4(RefreshAheadOkV4Msg),
+    StateSnap(StateSnapMsg),
+    StateSnapOk(StateSnapOkMsg),
+    StateRestore(StateRestoreMsg),
 }
 
 const TAG_HELLO: u8 = 1;
@@ -481,11 +946,32 @@ const TAG_REFRESH_AHEAD_OK: u8 = 12;
 const TAG_HELLO_V3: u8 = 13;
 const TAG_STEP_V3: u8 = 14;
 const TAG_STEP_OK_V3: u8 = 15;
+const TAG_HELLO_V4: u8 = 16;
+const TAG_STEP_V4: u8 = 17;
+const TAG_STEP_OK_V4: u8 = 18;
+const TAG_REFRESH_AHEAD_OK_V4: u8 = 19;
+const TAG_STATE_SNAP: u8 = 20;
+const TAG_STATE_SNAP_OK: u8 = 21;
+const TAG_STATE_RESTORE: u8 = 22;
 
 /// [`DeltaMat`] mode bytes.
 const DM_RAW: u8 = 0;
 const DM_FULL: u8 = 1;
 const DM_DELTA: u8 = 2;
+
+/// [`BlockPayload`] mode bytes.
+const BP_DENSE: u8 = 0;
+const BP_SKETCH: u8 = 1;
+const BP_DIAG: u8 = 2;
+
+/// [`StatePayload`] mode bytes.
+const SP_KRON: u8 = 0;
+const SP_SKETCH: u8 = 1;
+const SP_DIAG: u8 = 2;
+
+/// [`SidePayload`] mode bytes.
+const SIDE_EXACT: u8 = 0;
+const SIDE_SKETCH: u8 = 1;
 
 // ---------------------------------------------------------------------------
 // Encoding.
@@ -543,6 +1029,83 @@ impl Enc {
                 self.buf.extend_from_slice(comp);
             }
         }
+    }
+    fn sketch_payload(&mut self, s: &SketchPayload) {
+        self.delta_mat(&s.basis);
+        self.u32(s.eigvals.len() as u32);
+        for &v in &s.eigvals {
+            self.f64(v);
+        }
+        self.f64(s.escaped_mass);
+        self.f64(s.last_rho);
+        self.u64(s.steps);
+    }
+    fn block_payload(&mut self, p: &BlockPayload) {
+        match p {
+            BlockPayload::Dense(dm) => {
+                self.u8(BP_DENSE);
+                self.delta_mat(dm);
+            }
+            BlockPayload::Sketch(s) => {
+                self.u8(BP_SKETCH);
+                self.sketch_payload(s);
+            }
+            BlockPayload::Diag(dm) => {
+                self.u8(BP_DIAG);
+                self.delta_mat(dm);
+            }
+        }
+    }
+    fn opt_block_payload(&mut self, p: &Option<BlockPayload>) {
+        match p {
+            Some(p) => {
+                self.boolean(true);
+                self.block_payload(p);
+            }
+            None => self.boolean(false),
+        }
+    }
+    fn side_payload(&mut self, s: &SidePayload) {
+        match s {
+            SidePayload::Exact { c, root } => {
+                self.u8(SIDE_EXACT);
+                self.block_payload(c);
+                self.opt_block_payload(root);
+            }
+            SidePayload::Sketch(sk) => {
+                self.u8(SIDE_SKETCH);
+                self.sketch_payload(sk);
+            }
+        }
+    }
+    fn state_payload(&mut self, s: &StatePayload) {
+        match s {
+            StatePayload::Kron { l, r, l_root, r_root } => {
+                self.u8(SP_KRON);
+                self.block_payload(l);
+                self.block_payload(r);
+                self.opt_block_payload(l_root);
+                self.opt_block_payload(r_root);
+            }
+            StatePayload::Sketch { left, right } => {
+                self.u8(SP_SKETCH);
+                self.side_payload(left);
+                self.side_payload(right);
+            }
+            StatePayload::Diag { m, v, t } => {
+                self.u8(SP_DIAG);
+                self.block_payload(m);
+                self.block_payload(v);
+                self.u64(*t);
+            }
+        }
+    }
+    fn block_state(&mut self, b: &BlockStateMsg) {
+        self.u32(b.index);
+        self.state_payload(&b.state);
+        self.block_payload(&b.mu);
+        self.opt_block_payload(&b.graft_v);
+        self.u64(b.graft_t);
     }
 }
 
@@ -674,6 +1237,79 @@ pub fn encode_frame(msg: &WireMsg) -> anyhow::Result<Vec<u8>> {
                 e.delta_mat(dm);
             }
         }
+        WireMsg::HelloV4 { worker_id, proto, overlap, compress, state } => {
+            e.u8(TAG_HELLO_V4);
+            e.u32(*worker_id);
+            e.u32(*proto);
+            e.boolean(*overlap);
+            e.boolean(*compress);
+            e.boolean(*state);
+        }
+        WireMsg::StepV4(step) => {
+            e.u8(TAG_STEP_V4);
+            e.u64(step.t);
+            e.u64(step.base_t);
+            e.boolean(step.resync);
+            e.f64(step.scale);
+            e.boolean(step.preconditioning);
+            e.boolean(step.stat_due);
+            e.f64(step.lr);
+            e.f64(step.beta1);
+            e.f64(step.weight_decay);
+            e.u32(step.entries.len() as u32);
+            for ent in &step.entries {
+                e.u32(ent.index);
+                e.boolean(ent.refresh_due);
+                e.block_payload(&ent.param);
+                e.block_payload(&ent.grad);
+            }
+        }
+        WireMsg::StepOkV4(ok) => {
+            e.u8(TAG_STEP_OK_V4);
+            e.u64(ok.t);
+            e.u64(ok.base_t);
+            e.u32(ok.refreshes);
+            e.u32(ok.entries.len() as u32);
+            for (index, p) in &ok.entries {
+                e.u32(*index);
+                e.block_payload(p);
+            }
+        }
+        WireMsg::RefreshAheadOkV4(ok) => {
+            e.u8(TAG_REFRESH_AHEAD_OK_V4);
+            e.u64(ok.t_next);
+            e.u32(ok.count);
+            e.u32(ok.refreshed.len() as u32);
+            for &i in &ok.refreshed {
+                e.u32(i);
+            }
+            e.u32(ok.escaped.len() as u32);
+            for (i, rho) in &ok.escaped {
+                e.u32(*i);
+                e.f64(*rho);
+            }
+        }
+        WireMsg::StateSnap(snap) => {
+            e.u8(TAG_STATE_SNAP);
+            e.u32(snap.want.len() as u32);
+            for &i in &snap.want {
+                e.u32(i);
+            }
+        }
+        WireMsg::StateSnapOk(ok) => {
+            e.u8(TAG_STATE_SNAP_OK);
+            e.u32(ok.entries.len() as u32);
+            for b in &ok.entries {
+                e.block_state(b);
+            }
+        }
+        WireMsg::StateRestore(restore) => {
+            e.u8(TAG_STATE_RESTORE);
+            e.u32(restore.entries.len() as u32);
+            for b in &restore.entries {
+                e.block_state(b);
+            }
+        }
     }
     if e.buf.len() > MAX_FRAME_BYTES {
         bail!(
@@ -777,6 +1413,76 @@ impl<'a> Dec<'a> {
             }
             other => bail!("shard wire: unknown delta-matrix mode {other}"),
         }
+    }
+    fn sketch_payload(&mut self) -> anyhow::Result<SketchPayload> {
+        let basis = self.delta_mat()?;
+        let n = self.u32()? as usize;
+        // The basis shape bound (≤ 2^20 per dim) also bounds any honest
+        // eigenvalue count; a bigger claim is rejected before the reads.
+        if n > 1 << 20 {
+            bail!("shard wire: implausible sketch rank {n}");
+        }
+        let mut eigvals = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            eigvals.push(self.f64()?);
+        }
+        let escaped_mass = self.f64()?;
+        let last_rho = self.f64()?;
+        let steps = self.u64()?;
+        Ok(SketchPayload { basis, eigvals, escaped_mass, last_rho, steps })
+    }
+    fn block_payload(&mut self) -> anyhow::Result<BlockPayload> {
+        match self.u8()? {
+            BP_DENSE => Ok(BlockPayload::Dense(self.delta_mat()?)),
+            BP_SKETCH => Ok(BlockPayload::Sketch(self.sketch_payload()?)),
+            BP_DIAG => Ok(BlockPayload::Diag(self.delta_mat()?)),
+            other => bail!("shard wire: unknown block-payload mode {other}"),
+        }
+    }
+    fn opt_block_payload(&mut self) -> anyhow::Result<Option<BlockPayload>> {
+        Ok(if self.boolean()? { Some(self.block_payload()?) } else { None })
+    }
+    fn side_payload(&mut self) -> anyhow::Result<SidePayload> {
+        match self.u8()? {
+            SIDE_EXACT => {
+                let c = self.block_payload()?;
+                let root = self.opt_block_payload()?;
+                Ok(SidePayload::Exact { c, root })
+            }
+            SIDE_SKETCH => Ok(SidePayload::Sketch(self.sketch_payload()?)),
+            other => bail!("shard wire: unknown side-payload mode {other}"),
+        }
+    }
+    fn state_payload(&mut self) -> anyhow::Result<StatePayload> {
+        match self.u8()? {
+            SP_KRON => {
+                let l = self.block_payload()?;
+                let r = self.block_payload()?;
+                let l_root = self.opt_block_payload()?;
+                let r_root = self.opt_block_payload()?;
+                Ok(StatePayload::Kron { l, r, l_root, r_root })
+            }
+            SP_SKETCH => {
+                let left = self.side_payload()?;
+                let right = self.side_payload()?;
+                Ok(StatePayload::Sketch { left, right })
+            }
+            SP_DIAG => {
+                let m = self.block_payload()?;
+                let v = self.block_payload()?;
+                let t = self.u64()?;
+                Ok(StatePayload::Diag { m, v, t })
+            }
+            other => bail!("shard wire: unknown state-payload mode {other}"),
+        }
+    }
+    fn block_state(&mut self) -> anyhow::Result<BlockStateMsg> {
+        let index = self.u32()?;
+        let state = self.state_payload()?;
+        let mu = self.block_payload()?;
+        let graft_v = self.opt_block_payload()?;
+        let graft_t = self.u64()?;
+        Ok(BlockStateMsg { index, state, mu, graft_v, graft_t })
     }
     fn done(&self) -> anyhow::Result<()> {
         if self.i != self.b.len() {
@@ -928,6 +1634,99 @@ pub fn decode_payload(payload: &[u8]) -> anyhow::Result<WireMsg> {
                 entries.push((index, dm));
             }
             WireMsg::StepOkV3(StepOkV3Msg { t, base_t, refreshes, entries })
+        }
+        TAG_HELLO_V4 => WireMsg::HelloV4 {
+            worker_id: d.u32()?,
+            proto: d.u32()?,
+            overlap: d.boolean()?,
+            compress: d.boolean()?,
+            state: d.boolean()?,
+        },
+        TAG_STEP_V4 => {
+            let t = d.u64()?;
+            let base_t = d.u64()?;
+            let resync = d.boolean()?;
+            let scale = d.f64()?;
+            let preconditioning = d.boolean()?;
+            let stat_due = d.boolean()?;
+            let lr = d.f64()?;
+            let beta1 = d.f64()?;
+            let weight_decay = d.f64()?;
+            let n = d.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let index = d.u32()?;
+                let refresh_due = d.boolean()?;
+                let param = d.block_payload()?;
+                let grad = d.block_payload()?;
+                entries.push(StepEntryV4 { index, refresh_due, param, grad });
+            }
+            WireMsg::StepV4(StepV4Msg {
+                t,
+                base_t,
+                resync,
+                scale,
+                preconditioning,
+                stat_due,
+                lr,
+                beta1,
+                weight_decay,
+                entries,
+            })
+        }
+        TAG_STEP_OK_V4 => {
+            let t = d.u64()?;
+            let base_t = d.u64()?;
+            let refreshes = d.u32()?;
+            let n = d.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let index = d.u32()?;
+                let p = d.block_payload()?;
+                entries.push((index, p));
+            }
+            WireMsg::StepOkV4(StepOkV4Msg { t, base_t, refreshes, entries })
+        }
+        TAG_REFRESH_AHEAD_OK_V4 => {
+            let t_next = d.u64()?;
+            let count = d.u32()?;
+            let n = d.u32()? as usize;
+            let mut refreshed = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                refreshed.push(d.u32()?);
+            }
+            let n = d.u32()? as usize;
+            let mut escaped = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let i = d.u32()?;
+                let rho = d.f64()?;
+                escaped.push((i, rho));
+            }
+            WireMsg::RefreshAheadOkV4(RefreshAheadOkV4Msg { t_next, count, refreshed, escaped })
+        }
+        TAG_STATE_SNAP => {
+            let n = d.u32()? as usize;
+            let mut want = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                want.push(d.u32()?);
+            }
+            WireMsg::StateSnap(StateSnapMsg { want })
+        }
+        TAG_STATE_SNAP_OK => {
+            let n = d.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                entries.push(d.block_state()?);
+            }
+            WireMsg::StateSnapOk(StateSnapOkMsg { entries })
+        }
+        TAG_STATE_RESTORE => {
+            let n = d.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                entries.push(d.block_state()?);
+            }
+            WireMsg::StateRestore(StateRestoreMsg { entries })
         }
         other => bail!("shard wire: unknown message tag {other}"),
     };
@@ -1084,6 +1883,101 @@ mod tests {
         roundtrip(WireMsg::Shutdown);
         roundtrip(WireMsg::Ok);
         roundtrip(WireMsg::Error { message: "shard 2: boom".into() });
+        // v4 typed-payload layer.
+        roundtrip(WireMsg::HelloV4 {
+            worker_id: 1,
+            proto: PROTO_VERSION,
+            overlap: true,
+            compress: true,
+            state: true,
+        });
+        roundtrip(WireMsg::HelloV4 {
+            worker_id: 0,
+            proto: 9,
+            overlap: false,
+            compress: false,
+            state: false,
+        });
+        roundtrip(WireMsg::StepV4(StepV4Msg {
+            t: 11,
+            base_t: 10,
+            resync: true,
+            scale: 0.25,
+            preconditioning: true,
+            stat_due: true,
+            lr: 1e-2,
+            beta1: 0.9,
+            weight_decay: 1e-4,
+            entries: vec![StepEntryV4::new(
+                5,
+                false,
+                DeltaMat::Full { rows: 2, cols: 2, comp: vec![4, 5] },
+                DeltaMat::Raw(Matrix::randn(2, 2, &mut rng)),
+            )],
+        }));
+        roundtrip(WireMsg::StepOkV4(StepOkV4Msg {
+            t: 11,
+            base_t: 0,
+            refreshes: 3,
+            entries: vec![(5, BlockPayload::Dense(DeltaMat::Raw(Matrix::randn(2, 2, &mut rng))))],
+        }));
+        roundtrip(WireMsg::RefreshAheadOkV4(RefreshAheadOkV4Msg {
+            t_next: 12,
+            count: 2,
+            refreshed: vec![0, 5],
+            escaped: vec![(5, 0.125)],
+        }));
+        roundtrip(WireMsg::StateSnap(StateSnapMsg { want: vec![] }));
+        roundtrip(WireMsg::StateSnap(StateSnapMsg { want: vec![1, 4, u32::MAX] }));
+        let sketch = SketchPayload {
+            basis: DeltaMat::Raw(Matrix::randn(6, 2, &mut rng)),
+            eigvals: vec![2.0, 0.0],
+            escaped_mass: 0.5,
+            last_rho: 0.25,
+            steps: 40,
+        };
+        let block_state = BlockStateMsg {
+            index: 4,
+            state: StatePayload::Sketch {
+                left: SidePayload::Sketch(sketch.clone()),
+                right: SidePayload::Exact {
+                    c: BlockPayload::dense(&Matrix::randn(2, 2, &mut rng)),
+                    root: Some(BlockPayload::dense(&Matrix::randn(2, 2, &mut rng))),
+                },
+            },
+            mu: BlockPayload::dense(&Matrix::randn(6, 2, &mut rng)),
+            graft_v: Some(BlockPayload::dense(&Matrix::randn(6, 2, &mut rng))),
+            graft_t: 7,
+        };
+        roundtrip(WireMsg::StateSnapOk(StateSnapOkMsg { entries: vec![block_state.clone()] }));
+        roundtrip(WireMsg::StateRestore(StateRestoreMsg { entries: vec![block_state] }));
+        roundtrip(WireMsg::StateSnapOk(StateSnapOkMsg {
+            entries: vec![BlockStateMsg {
+                index: 0,
+                state: StatePayload::Kron {
+                    l: BlockPayload::dense(&Matrix::randn(3, 3, &mut rng)),
+                    r: BlockPayload::dense(&Matrix::randn(2, 2, &mut rng)),
+                    l_root: None,
+                    r_root: None,
+                },
+                mu: BlockPayload::dense(&Matrix::randn(3, 2, &mut rng)),
+                graft_v: None,
+                graft_t: 0,
+            }],
+        }));
+        roundtrip(WireMsg::StateSnapOk(StateSnapOkMsg {
+            entries: vec![BlockStateMsg {
+                index: 2,
+                state: StatePayload::Diag {
+                    m: BlockPayload::diag(&Matrix::randn(2, 2, &mut rng)),
+                    v: BlockPayload::diag(&Matrix::randn(2, 2, &mut rng)),
+                    t: 9,
+                },
+                mu: BlockPayload::dense(&Matrix::randn(2, 2, &mut rng)),
+                graft_v: None,
+                graft_t: 9,
+            }],
+        }));
     }
 
     #[test]
@@ -1166,8 +2060,72 @@ mod tests {
         }
     }
 
+    fn arbitrary_sketch_payload(rng: &mut Pcg64) -> SketchPayload {
+        let n = rng.below(5);
+        SketchPayload {
+            basis: arbitrary_delta_mat(rng),
+            eigvals: (0..n).map(|_| adversarial_f64(rng)).collect(),
+            escaped_mass: adversarial_f64(rng),
+            last_rho: adversarial_f64(rng),
+            steps: rng.next_u64(),
+        }
+    }
+
+    fn arbitrary_block_payload(rng: &mut Pcg64) -> BlockPayload {
+        match rng.below(3) {
+            0 => BlockPayload::Dense(arbitrary_delta_mat(rng)),
+            1 => BlockPayload::Sketch(arbitrary_sketch_payload(rng)),
+            _ => BlockPayload::Diag(arbitrary_delta_mat(rng)),
+        }
+    }
+
+    fn arbitrary_opt_block_payload(rng: &mut Pcg64) -> Option<BlockPayload> {
+        if rng.bernoulli(0.5) { Some(arbitrary_block_payload(rng)) } else { None }
+    }
+
+    fn arbitrary_side_payload(rng: &mut Pcg64) -> SidePayload {
+        if rng.bernoulli(0.5) {
+            SidePayload::Sketch(arbitrary_sketch_payload(rng))
+        } else {
+            SidePayload::Exact {
+                c: arbitrary_block_payload(rng),
+                root: arbitrary_opt_block_payload(rng),
+            }
+        }
+    }
+
+    fn arbitrary_state_payload(rng: &mut Pcg64) -> StatePayload {
+        match rng.below(3) {
+            0 => StatePayload::Kron {
+                l: arbitrary_block_payload(rng),
+                r: arbitrary_block_payload(rng),
+                l_root: arbitrary_opt_block_payload(rng),
+                r_root: arbitrary_opt_block_payload(rng),
+            },
+            1 => StatePayload::Sketch {
+                left: arbitrary_side_payload(rng),
+                right: arbitrary_side_payload(rng),
+            },
+            _ => StatePayload::Diag {
+                m: arbitrary_block_payload(rng),
+                v: arbitrary_block_payload(rng),
+                t: rng.next_u64(),
+            },
+        }
+    }
+
+    fn arbitrary_block_state(rng: &mut Pcg64, index: u32) -> BlockStateMsg {
+        BlockStateMsg {
+            index,
+            state: arbitrary_state_payload(rng),
+            mu: arbitrary_block_payload(rng),
+            graft_v: arbitrary_opt_block_payload(rng),
+            graft_t: rng.next_u64(),
+        }
+    }
+
     fn arbitrary_msg(rng: &mut Pcg64) -> WireMsg {
-        match rng.below(15) {
+        match rng.below(22) {
             0 => WireMsg::Hello { worker_id: rng.next_u64() as u32 },
             1 => WireMsg::HelloV2 {
                 worker_id: rng.next_u64() as u32,
@@ -1284,7 +2242,7 @@ mod tests {
                     entries,
                 })
             }
-            _ => {
+            14 => {
                 let n = rng.below(4);
                 let entries =
                     (0..n).map(|i| (i as u32, arbitrary_delta_mat(rng))).collect();
@@ -1293,6 +2251,77 @@ mod tests {
                     base_t: rng.next_u64(),
                     refreshes: rng.next_u64() as u32,
                     entries,
+                })
+            }
+            15 => WireMsg::HelloV4 {
+                worker_id: rng.next_u64() as u32,
+                proto: rng.next_u64() as u32,
+                overlap: rng.bernoulli(0.5),
+                compress: rng.bernoulli(0.5),
+                state: rng.bernoulli(0.5),
+            },
+            16 => {
+                let n = rng.below(4);
+                let entries = (0..n)
+                    .map(|i| StepEntryV4 {
+                        index: i as u32,
+                        refresh_due: rng.bernoulli(0.5),
+                        param: arbitrary_block_payload(rng),
+                        grad: arbitrary_block_payload(rng),
+                    })
+                    .collect();
+                WireMsg::StepV4(StepV4Msg {
+                    t: rng.next_u64(),
+                    base_t: rng.next_u64(),
+                    resync: rng.bernoulli(0.5),
+                    scale: adversarial_f64(rng),
+                    preconditioning: rng.bernoulli(0.5),
+                    stat_due: rng.bernoulli(0.5),
+                    lr: adversarial_f64(rng),
+                    beta1: adversarial_f64(rng),
+                    weight_decay: adversarial_f64(rng),
+                    entries,
+                })
+            }
+            17 => {
+                let n = rng.below(4);
+                let entries =
+                    (0..n).map(|i| (i as u32, arbitrary_block_payload(rng))).collect();
+                WireMsg::StepOkV4(StepOkV4Msg {
+                    t: rng.next_u64(),
+                    base_t: rng.next_u64(),
+                    refreshes: rng.next_u64() as u32,
+                    entries,
+                })
+            }
+            18 => {
+                let n = rng.below(8);
+                let m = rng.below(8);
+                WireMsg::RefreshAheadOkV4(RefreshAheadOkV4Msg {
+                    t_next: rng.next_u64(),
+                    count: rng.next_u64() as u32,
+                    refreshed: (0..n).map(|_| rng.next_u64() as u32).collect(),
+                    escaped: (0..m)
+                        .map(|_| (rng.next_u64() as u32, adversarial_f64(rng)))
+                        .collect(),
+                })
+            }
+            19 => {
+                let n = [0, 1, 9][rng.below(3)];
+                WireMsg::StateSnap(StateSnapMsg {
+                    want: (0..n).map(|_| rng.next_u64() as u32).collect(),
+                })
+            }
+            20 => {
+                let n = rng.below(3);
+                WireMsg::StateSnapOk(StateSnapOkMsg {
+                    entries: (0..n).map(|i| arbitrary_block_state(rng, i as u32)).collect(),
+                })
+            }
+            _ => {
+                let n = rng.below(3);
+                WireMsg::StateRestore(StateRestoreMsg {
+                    entries: (0..n).map(|i| arbitrary_block_state(rng, i as u32)).collect(),
                 })
             }
         }
@@ -1326,7 +2355,7 @@ mod tests {
         // strict prefix must fail to read (no silent partial decode).
         let mut rng = Pcg64::new(0x7c);
         let mut kinds_seen = std::collections::HashSet::new();
-        for _ in 0..200 {
+        for _ in 0..600 {
             let msg = arbitrary_msg(&mut rng);
             let tag = std::mem::discriminant(&msg);
             if !kinds_seen.insert(tag) {
@@ -1341,7 +2370,7 @@ mod tests {
                 );
             }
         }
-        assert!(kinds_seen.len() >= 15, "generator missed kinds: {}", kinds_seen.len());
+        assert!(kinds_seen.len() >= 22, "generator missed kinds: {}", kinds_seen.len());
     }
 
     #[test]
@@ -1385,6 +2414,159 @@ mod tests {
         payload.push(2); // bool must be 0 or 1
         payload.extend_from_slice(&0u32.to_le_bytes());
         assert!(decode_payload(&payload).is_err());
+    }
+
+    // -----------------------------------------------------------------
+    // v4 payload layer: typed block-state payloads.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn sketch_payload_count_lies_are_rejected_before_allocation() {
+        // An eigenvalue-count field claiming 2^30 entries in a tiny frame
+        // must fail on plausibility/missing bytes, not allocate for it.
+        let mut payload = vec![TAG_STATE_SNAP_OK];
+        payload.extend_from_slice(&1u32.to_le_bytes()); // one entry
+        payload.extend_from_slice(&0u32.to_le_bytes()); // index
+        payload.push(SP_SKETCH);
+        payload.push(SIDE_SKETCH);
+        payload.push(DM_RAW); // basis: 1x1 raw matrix
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&1.0f64.to_bits().to_le_bytes());
+        payload.extend_from_slice(&(1u32 << 30).to_le_bytes()); // eigval count lie
+        assert!(decode_payload(&payload).is_err());
+        // Same lie on the block-state entry count itself.
+        let mut payload = vec![TAG_STATE_RESTORE];
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_payload(&payload).is_err());
+        // And on a StateSnap `want` list.
+        let mut payload = vec![TAG_STATE_SNAP];
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_payload(&payload).is_err());
+    }
+
+    #[test]
+    fn adversarial_rank_fields_are_rejected_against_the_block_table() {
+        // A sketch payload whose declared basis shape / eigval count do
+        // not match the driver's block table (dim x rank) must be
+        // rejected by `validate` before any resolve/allocation happens.
+        let good = SketchPayload {
+            basis: DeltaMat::from_matrix(&Matrix::zeros(12, 4)),
+            eigvals: vec![1.0; 4],
+            escaped_mass: 0.5,
+            last_rho: 0.25,
+            steps: 3,
+        };
+        assert!(good.validate(12, 4).is_ok());
+        assert!(good.clone().into_state(12, 4).is_ok());
+        // Rank-field lies: basis wider than the table's rank, eigval
+        // list longer/shorter than rank, dim mismatch.
+        assert!(good.validate(12, 3).is_err());
+        assert!(good.validate(11, 4).is_err());
+        let mut short = good.clone();
+        short.eigvals.truncate(2);
+        assert!(short.validate(12, 4).is_err());
+        // A compressed basis lying about its own shape is caught by the
+        // declared-dims check without decompressing.
+        let bomb = SketchPayload {
+            basis: DeltaMat::Full { rows: 1 << 19, cols: 1 << 7, comp: vec![] },
+            eigvals: vec![],
+            escaped_mass: 0.0,
+            last_rho: 0.0,
+            steps: 0,
+        };
+        assert!(bomb.validate(12, 4).is_err());
+        assert!(bomb.into_state(12, 4).is_err());
+        // Delta-mode bases are meaningless for standalone state payloads
+        // (no baseline exists on the restoring side).
+        let delta = SketchPayload {
+            basis: DeltaMat::Delta { rows: 12, cols: 4, comp: vec![] },
+            eigvals: vec![0.0; 4],
+            escaped_mass: 0.0,
+            last_rho: 0.0,
+            steps: 0,
+        };
+        assert!(delta.validate(12, 4).is_err());
+        // Payload kind must match the block table's unit kind.
+        let diag = StatePayload::Diag {
+            m: BlockPayload::diag(&Matrix::zeros(2, 2)),
+            v: BlockPayload::diag(&Matrix::zeros(2, 2)),
+            t: 1,
+        };
+        let kron_exp = StateExpect { rows: 2, cols: 2, kind: 0, rank: 0, one_sided: false };
+        assert!(diag.into_state(&kron_exp).is_err());
+        // Dense payloads resolve only after the shape check passes.
+        let dense = BlockPayload::dense(&Matrix::zeros(3, 2));
+        assert!(dense.resolve_dense(3, 2, None).is_ok());
+        assert!(dense.resolve_dense(2, 3, None).is_err());
+        assert!(dense.resolve_dense(1 << 19, 1 << 9, None).is_err());
+    }
+
+    #[test]
+    fn precond_state_roundtrips_bitwise_through_wire_payloads() {
+        use crate::optim::precond::{AdamUnit, KroneckerUnit, Preconditioner, SketchUnit};
+
+        // Encode a unit's state as a StateSnapOk frame; bitwise identity
+        // is checked by comparing the re-encoded frames of the original
+        // and the restored unit (f64 `==` would falsely reject NaN).
+        fn state_frame(u: &dyn Preconditioner, exp: &StateExpect) -> Vec<u8> {
+            let msg = BlockStateMsg {
+                index: 0,
+                state: StatePayload::from_state(&u.state_payload()),
+                mu: BlockPayload::dense(&Matrix::zeros(exp.rows, exp.cols)),
+                graft_v: None,
+                graft_t: 0,
+            };
+            encode_frame(&WireMsg::StateSnapOk(StateSnapOkMsg { entries: vec![msg] })).unwrap()
+        }
+        fn check(mut mk: impl FnMut() -> Box<dyn Preconditioner>, exp: StateExpect) {
+            let mut rng = Pcg64::new(0x51a7e);
+            let mut unit = mk();
+            for _ in 0..7 {
+                unit.ingest(&Matrix::randn(exp.rows, exp.cols, &mut rng));
+            }
+            unit.refresh();
+            unit.ingest(&Matrix::randn(exp.rows, exp.cols, &mut rng));
+            let frame = state_frame(unit.as_ref(), &exp);
+            // Wire roundtrip, then restore into a fresh unit.
+            let decoded = decode_payload(&frame[4..]).unwrap();
+            let WireMsg::StateSnapOk(ok) = decoded else { panic!("wrong kind") };
+            let entry = ok.entries.into_iter().next().unwrap();
+            let state = entry.state.into_state(&exp).unwrap();
+            let mut fresh = mk();
+            fresh.restore_payload(state).unwrap();
+            assert_eq!(
+                state_frame(unit.as_ref(), &exp),
+                state_frame(fresh.as_ref(), &exp),
+                "restored state is not bitwise identical"
+            );
+            // Restored unit must evolve identically.
+            let g = Matrix::randn(exp.rows, exp.cols, &mut rng);
+            unit.ingest(&g);
+            fresh.ingest(&g);
+            unit.refresh();
+            fresh.refresh();
+            assert_eq!(state_frame(unit.as_ref(), &exp), state_frame(fresh.as_ref(), &exp));
+        }
+
+        check(
+            || Box::new(KroneckerUnit::new((6, 4), 0.999, 1e-6, false)),
+            StateExpect { rows: 6, cols: 4, kind: 0, rank: 0, one_sided: false },
+        );
+        // Sketched unit with one sketched side (rows > rank) and one
+        // exact side (cols <= rank) — the mixed case.
+        check(
+            || Box::new(SketchUnit::new((12, 3), 4, 0.999, 1e-6, false)),
+            StateExpect { rows: 12, cols: 3, kind: 1, rank: 4, one_sided: false },
+        );
+        check(
+            || Box::new(SketchUnit::new((12, 9), 4, 0.999, 1e-6, true)),
+            StateExpect { rows: 12, cols: 9, kind: 1, rank: 4, one_sided: true },
+        );
+        check(
+            || Box::new(AdamUnit::new((5, 5), 0.9, 0.999, 1e-8)),
+            StateExpect { rows: 5, cols: 5, kind: 2, rank: 0, one_sided: false },
+        );
     }
 
     // -----------------------------------------------------------------

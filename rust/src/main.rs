@@ -12,6 +12,7 @@
 //!   sketchy repro fig2 --task image --steps 200
 //!   sketchy train --preset small --steps 300 --optimizer s-shampoo
 
+use anyhow::Context as _;
 use sketchy::experiments;
 use sketchy::util::cli::Args;
 
@@ -26,7 +27,7 @@ USAGE:
   sketchy train [--preset tiny|small|base] [--steps N] [--workers N]
                 [--optimizer adam|shampoo|s-shampoo
                              |engine-adam|engine-shampoo|engine-s-shampoo]
-                [--rank L] [--lr F] [--checkpoint PATH]
+                [--rank L] [--lr F] [--checkpoint PATH] [--resume PATH]
                 [--engine-threads N] [--block-size B]
                 [--refresh-interval K] [--stagger-refresh BOOL]
                 [--overlap-refresh BOOL] [--pool-threads N]
@@ -63,7 +64,14 @@ cross-host traffic shrinks. --shard-launch lifts worker spawning onto
 remote hosts via a command template (placeholders {shard}, {program},
 {worker_cmd}; e.g. "ssh worker-{shard} /opt/sketchy {worker_cmd}
 --listen 0.0.0.0:0 --advertise-host worker-{shard}"); workers pinned
-to v2/v1 degrade to uncompressed full frames. bench-gate compares a
+to v2/v1 degrade to uncompressed full frames. From wire protocol v4
+(the default) block optimizer state ships in factored form — FD
+sketches as rank-L bases + eigenvalues + an escaped-mass scalar, O(dL)
+instead of O(d^2) — over the StateSnap/StateRestore RPCs; --checkpoint
+embeds that same typed state (checkpoint v2) and --resume restores it,
+so a resumed run continues bitwise where the saved one stopped.
+Workers pinned to v3 or below keep stepping, but state RPCs are
+refused and checkpoints degrade to params only. bench-gate compares a
 fresh engine bench record against the committed baseline and exits
 nonzero on a >tolerance regression.
 
@@ -316,10 +324,44 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
     );
     let mut corpus = MarkovCorpus::new(trainer.vocab, seed ^ 0xc0).into();
     let schedule = WarmupCosine { peak: lr, warmup: steps / 20 + 1, total: steps };
+    // --resume PATH: reload params and, when the checkpoint carries the
+    // typed optimizer state (v2 with engine-* optimizers), the full
+    // block states + step counter — the resumed run continues exactly
+    // where the saved one stopped.
+    let mut start_step = 0usize;
+    if let Some(path) = args.get("resume") {
+        let (step, params, state) = sketchy::train::load_checkpoint_full(path)?;
+        anyhow::ensure!(
+            params.len() == trainer.params.len(),
+            "resume: checkpoint has {} tensors, model has {}",
+            params.len(),
+            trainer.params.len()
+        );
+        for (i, (dst, src)) in trainer.params.iter_mut().zip(params).enumerate() {
+            anyhow::ensure!(
+                dst.rows() == src.rows() && dst.cols() == src.cols(),
+                "resume: tensor {i} is {}x{} in the checkpoint, {}x{} in the model",
+                src.rows(),
+                src.cols(),
+                dst.rows(),
+                dst.cols()
+            );
+            *dst = src;
+        }
+        match state {
+            Some(entries) => {
+                opt.restore_payloads(step, entries)
+                    .with_context(|| format!("resume: restore optimizer state from {path}"))?;
+                println!("resumed from {path} at step {step} (params + optimizer state)");
+            }
+            None => println!("resumed from {path} at step {step} (params only)"),
+        }
+        start_step = step.min(steps);
+    }
     let t0 = std::time::Instant::now();
     let mut last_log = std::time::Instant::now();
     let mut curve = sketchy::train::CurveLog::new(&opt.name());
-    for s in 0..steps {
+    for s in start_step..steps {
         opt.set_lr(schedule.at(s));
         let (loss, _) = trainer.step(opt.as_mut(), &mut corpus, workers)?;
         curve.push(s, loss);
@@ -340,8 +382,27 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         &curve.to_csv(),
     )?;
     if let Some(path) = args.get("checkpoint") {
-        sketchy::train::save_checkpoint(path, steps, &trainer.params)?;
-        println!("checkpoint written to {path}");
+        // Engine optimizers contribute their typed block state (FD
+        // sketches as rank-ℓ factors); anything else — or a sharded run
+        // degraded below wire v4 — falls back to a params-only save
+        // rather than failing the whole run at the finish line.
+        let state = match opt.state_payloads() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("checkpoint: optimizer state unavailable ({e:#}); saving params only");
+                None
+            }
+        };
+        match state {
+            Some(entries) => {
+                sketchy::train::save_checkpoint_with_state(path, steps, &trainer.params, Some(&entries))?;
+                println!("checkpoint written to {path} (+{} block states)", entries.len());
+            }
+            None => {
+                sketchy::train::save_checkpoint(path, steps, &trainer.params)?;
+                println!("checkpoint written to {path} (params only)");
+            }
+        }
     }
     Ok(())
 }

@@ -75,10 +75,12 @@ use super::blocking::{partition, Block};
 use super::grafting::GraftType;
 use super::matrix_opt::Optimizer;
 use super::precond::{
-    drive_block, AdamUnit, BlockState, KroneckerUnit, Preconditioner, SketchUnit, StepCtx,
+    drive_block, AdamUnit, BlockState, BlockStateSnap, KroneckerUnit, Preconditioner, SketchUnit,
+    StepCtx,
 };
 use super::shampoo::ShampooConfig;
 use crate::coordinator::shard::{ShardExecutor, ShardLaunch};
+use crate::coordinator::wire::{BlockStateMsg, StateExpect};
 use crate::runtime::pool;
 use crate::sketch::FdSketch;
 use crate::tensor::{ops, Matrix};
@@ -306,6 +308,22 @@ pub trait BlockExecutor: Send {
     /// Short human label for `Optimizer::name` (e.g. `threads=4`,
     /// `shards=2/tcp`).
     fn label(&self) -> String;
+
+    /// Snapshot every block's typed optimizer state, in block order —
+    /// the payload behind checkpoint format v2 and the wire v4
+    /// `StateSnap` RPC. Sketched blocks export O(dℓ) factors. Default:
+    /// unsupported (executors that cannot reach their state, e.g. a
+    /// degraded shard link, report an error instead of lying).
+    fn state_snapshot(&mut self) -> anyhow::Result<Vec<BlockStateSnap>> {
+        anyhow::bail!("executor {} does not support state snapshots", self.label())
+    }
+
+    /// Restore a [`BlockExecutor::state_snapshot`] (one snap per block,
+    /// in block order). On success the executor's state is bitwise
+    /// identical to the snapshotted one.
+    fn state_restore(&mut self, _snaps: Vec<BlockStateSnap>) -> anyhow::Result<()> {
+        anyhow::bail!("executor {} does not support state restore", self.label())
+    }
 }
 
 /// Plan for the RefreshAhead stage: the engine's stagger schedule is a
@@ -558,6 +576,29 @@ impl BlockExecutor for LocalExecutor {
     fn label(&self) -> String {
         format!("threads={}", effective_worker_threads(self.threads, self.states.len()))
     }
+
+    fn state_snapshot(&mut self) -> anyhow::Result<Vec<BlockStateSnap>> {
+        // Join any in-flight RefreshAhead first so the snapshot can't
+        // race the background job on the block states.
+        self.finish_refresh_ahead()?;
+        Ok(self.states.iter().map(|s| lock_state(s).snapshot()).collect())
+    }
+
+    fn state_restore(&mut self, snaps: Vec<BlockStateSnap>) -> anyhow::Result<()> {
+        self.finish_refresh_ahead()?;
+        anyhow::ensure!(
+            snaps.len() == self.states.len(),
+            "state restore: {} snaps for {} blocks",
+            snaps.len(),
+            self.states.len()
+        );
+        for (i, (s, snap)) in self.states.iter().zip(snaps).enumerate() {
+            lock_state(s)
+                .restore(snap)
+                .map_err(|e| anyhow::anyhow!("block {i}: {e}"))?;
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -734,6 +775,61 @@ impl PrecondEngine {
         self.executor.for_each_sketch(&mut f);
     }
 
+    /// Re-seat the step counter after a [`PrecondEngine::state_restore`]:
+    /// the stagger/stat/refresh schedules are pure functions of `t`,
+    /// which travels in checkpoint metadata rather than in the block
+    /// payloads, so resume wires it back explicitly.
+    pub fn set_steps(&mut self, t: usize) {
+        self.t = t;
+    }
+
+    /// Typed snapshot of every block's optimizer state, in block order —
+    /// the checkpoint-v2 payload. Sharded engines fetch it over the wire
+    /// v4 `StateSnap` RPC; executors without the capability (degraded
+    /// links, pre-v4 workers) return an error rather than a dense dump.
+    pub fn state_snapshot(&mut self) -> anyhow::Result<Vec<BlockStateSnap>> {
+        if let Some(why) = &self.poisoned {
+            anyhow::bail!("engine poisoned by earlier step failure: {why}");
+        }
+        self.executor.state_snapshot()
+    }
+
+    /// Restore a [`PrecondEngine::state_snapshot`] (one snap per block,
+    /// in block order). Restores are bitwise: a restored engine steps
+    /// identically to the snapshotted one.
+    pub fn state_restore(&mut self, snaps: Vec<BlockStateSnap>) -> anyhow::Result<()> {
+        if let Some(why) = &self.poisoned {
+            anyhow::bail!("engine poisoned by earlier step failure: {why}");
+        }
+        anyhow::ensure!(
+            snaps.len() == self.blocks.len(),
+            "state restore: {} snaps for {} blocks",
+            snaps.len(),
+            self.blocks.len()
+        );
+        self.executor.state_restore(snaps)
+    }
+
+    /// Per-block decode expectations for the typed state codec, derived
+    /// from the engine's own block table — never from payload headers —
+    /// so adversarial rank/shape fields in a checkpoint or wire frame
+    /// cannot drive allocations.
+    pub fn state_expects(&self) -> Vec<StateExpect> {
+        self.blocks
+            .iter()
+            .map(|b| {
+                let (rows, cols) = b.shape();
+                StateExpect {
+                    rows,
+                    cols,
+                    kind: self.kind.code(),
+                    rank: self.kind.rank(),
+                    one_sided: self.base.one_sided,
+                }
+            })
+            .collect()
+    }
+
     /// Whether block `i`'s refresh slot fires at step `t` — the stagger
     /// schedule, a pure function of the indices (which is what makes the
     /// RefreshAhead due-set known one step early).
@@ -875,6 +971,37 @@ impl Optimizer for PrecondEngine {
     fn steps(&self) -> usize {
         self.t
     }
+
+    fn state_payloads(&mut self) -> anyhow::Result<Option<Vec<BlockStateMsg>>> {
+        let snaps = PrecondEngine::state_snapshot(self)?;
+        Ok(Some(
+            snaps.iter().enumerate().map(|(i, s)| BlockStateMsg::from_snap(i as u32, s)).collect(),
+        ))
+    }
+
+    fn restore_payloads(&mut self, step: usize, entries: Vec<BlockStateMsg>) -> anyhow::Result<()> {
+        let expects = self.state_expects();
+        anyhow::ensure!(
+            entries.len() == expects.len(),
+            "state restore: {} entries for {} blocks",
+            entries.len(),
+            expects.len()
+        );
+        let mut snaps = Vec::with_capacity(entries.len());
+        for (i, e) in entries.into_iter().enumerate() {
+            anyhow::ensure!(
+                e.index as usize == i,
+                "state restore: entry {i} carries block index {}",
+                e.index
+            );
+            snaps.push(
+                e.into_snap(&expects[i]).map_err(|err| anyhow::anyhow!("block {i}: {err:#}"))?,
+            );
+        }
+        PrecondEngine::state_restore(self, snaps)?;
+        self.t = step;
+        Ok(())
+    }
 }
 
 /// Optimizer factory for the engine-backed family, keyed by the CLI
@@ -943,6 +1070,55 @@ mod tests {
             cells += r * c;
         }
         assert_eq!(cells, 7 * 5 + 4);
+    }
+
+    #[test]
+    fn engine_state_snapshot_restore_is_bitwise() {
+        // A restored engine must continue bitwise-identically to the
+        // original — the contract checkpoint v2 and the wire v4 state
+        // RPCs are built on.
+        let shapes = [(9, 4), (3, 5)];
+        let ecfg = EngineConfig {
+            threads: 2,
+            block_size: 4,
+            refresh_interval: 2,
+            stagger: true,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(0x5a51);
+        let mut opt = PrecondEngine::sketched(&shapes, 3, base_cfg(), ecfg);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut rng)).collect();
+        for _ in 0..7 {
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut rng)).collect();
+            opt.try_step(&mut params, &grads).unwrap();
+        }
+        let snaps = opt.state_snapshot().unwrap();
+        let mut fresh = PrecondEngine::sketched(&shapes, 3, base_cfg(), ecfg);
+        // Snap count must match the partition.
+        assert_eq!(snaps.len(), fresh.blocks().len());
+        fresh.state_restore(snaps).unwrap();
+        let mut params2 = params.clone();
+        // Seat the restored engine's step counter the way the trainer
+        // does on resume: the stagger/stat schedules are functions of
+        // `t`, which travels in checkpoint metadata, not block payloads.
+        fresh.set_steps(opt.steps());
+        for _ in 0..6 {
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut rng)).collect();
+            opt.try_step(&mut params, &grads).unwrap();
+            fresh.try_step(&mut params2, &grads).unwrap();
+            for (a, b) in params.iter().zip(&params2) {
+                for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+        // Mismatched snap counts are rejected.
+        let snaps = opt.state_snapshot().unwrap();
+        let mut wrong = PrecondEngine::sketched(&[(9, 4)], 3, base_cfg(), EngineConfig::default());
+        assert!(wrong.state_restore(snaps).is_err());
     }
 
     #[test]

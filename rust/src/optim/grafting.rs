@@ -131,6 +131,38 @@ impl Graft {
     pub fn mem_bytes(&self) -> usize {
         self.v.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
     }
+
+    /// Serializable snapshot of the mutable grafting state (accumulator
+    /// + step counter); the hyperparameters stay construction-owned.
+    pub fn snapshot(&self) -> (Option<Matrix>, u64) {
+        (self.v.clone(), self.t as u64)
+    }
+
+    /// Restore a [`Graft::snapshot`]. The accumulator's presence and
+    /// shape must match this graft's kind/shape (a kind needing no
+    /// accumulator refuses one, and vice versa).
+    pub fn restore(&mut self, v: Option<Matrix>, t: u64) -> anyhow::Result<()> {
+        match (&self.v, &v) {
+            (Some(cur), Some(new)) => {
+                anyhow::ensure!(
+                    cur.rows() == new.rows() && cur.cols() == new.cols(),
+                    "graft restore: accumulator shape {}x{} != expected {}x{}",
+                    new.rows(),
+                    new.cols(),
+                    cur.rows(),
+                    cur.cols()
+                );
+            }
+            (None, None) => {}
+            (Some(_), None) => anyhow::bail!("graft restore: missing accumulator for {:?}", self.kind),
+            (None, Some(_)) => {
+                anyhow::bail!("graft restore: unexpected accumulator for {:?}", self.kind)
+            }
+        }
+        self.v = v;
+        self.t = t as usize;
+        Ok(())
+    }
 }
 
 /// Transplant the grafting magnitude onto a preconditioned direction:

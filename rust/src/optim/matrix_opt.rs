@@ -5,6 +5,7 @@
 //! produced by the AOT-compiled L2 artifacts; the optimizers themselves —
 //! the paper's contribution — run entirely in Rust.
 
+use crate::coordinator::wire::BlockStateMsg;
 use crate::tensor::Matrix;
 
 /// Optimizer over a list of matrix parameters.
@@ -39,6 +40,22 @@ pub trait Optimizer {
 
     /// Steps taken so far.
     fn steps(&self) -> usize;
+
+    /// Typed snapshot of the optimizer state as checkpoint/wire
+    /// [`BlockStateMsg`] records (one per block, in block order, FD
+    /// sketches factored). `Ok(None)` means this optimizer has no
+    /// typed-state surface — its checkpoints carry parameters only.
+    fn state_payloads(&mut self) -> anyhow::Result<Option<Vec<BlockStateMsg>>> {
+        Ok(None)
+    }
+
+    /// Restore a [`Optimizer::state_payloads`] snapshot taken at
+    /// `step`. Entries are validated against the optimizer's own block
+    /// table before anything is applied; on success the optimizer steps
+    /// bitwise-identically to the snapshotted one.
+    fn restore_payloads(&mut self, _step: usize, _entries: Vec<BlockStateMsg>) -> anyhow::Result<()> {
+        anyhow::bail!("optimizer {} does not support typed state restore", self.name())
+    }
 }
 
 /// Learning-rate schedule used across the paper's experiments (App. C):

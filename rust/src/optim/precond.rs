@@ -58,6 +58,86 @@ pub trait Preconditioner: Send {
     fn sketches(&self) -> Vec<&FdSketch> {
         vec![]
     }
+
+    /// Serializable snapshot of the unit's mutable state — the typed
+    /// payload behind wire protocol v4 and checkpoint format v2. Sketched
+    /// sides export their rank-ℓ factors (O(dℓ)), never a materialized
+    /// d×d covariance.
+    fn state_payload(&self) -> PrecondState;
+
+    /// Restore a [`Preconditioner::state_payload`] snapshot. The payload
+    /// kind and every shape/rank must match this unit's construction
+    /// (hyperparameters are construction-owned and never travel); on
+    /// success the unit is bitwise identical to the snapshotted one. A
+    /// failed restore may leave the unit partially updated — callers
+    /// treat an `Err` as fatal for the hosting engine.
+    fn restore_payload(&mut self, state: PrecondState) -> anyhow::Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// Typed state snapshots (wire v4 / checkpoint v2 payloads).
+// ---------------------------------------------------------------------------
+
+/// Snapshot of one preconditioner unit's mutable state, in the unit's
+/// natural factored form. This is the *semantic* payload type; the wire
+/// and checkpoint codecs ([`crate::coordinator::wire::StatePayload`])
+/// encode it without ever densifying sketched sides.
+#[derive(Clone, Debug)]
+pub enum PrecondState {
+    /// Exact Kronecker factors and their cached inverse roots.
+    Kronecker { l: Matrix, r: Matrix, l_root: Option<Matrix>, r_root: Option<Matrix> },
+    /// Per-side sketched (or small-exact) factors.
+    Sketch { left: SideState, right: SideState },
+    /// Diagonal Adam moments + step counter.
+    Diag { m: Matrix, v: Matrix, t: u64 },
+}
+
+/// One side of a [`PrecondState::Sketch`] snapshot.
+#[derive(Clone, Debug)]
+pub enum SideState {
+    /// dim ≤ ℓ: exact factor plus cached root.
+    Exact { c: Matrix, root: Option<Matrix> },
+    /// dim > ℓ: the FD sketch's factored state.
+    Sketch(SketchState),
+}
+
+/// Factored FD sketch state: O(dℓ) basis + ℓ eigenvalues + the RFD-style
+/// escaped-mass accumulator that makes the sketch a self-contained
+/// serialization unit (restore needs no replay of the stream).
+#[derive(Clone, Debug)]
+pub struct SketchState {
+    /// Orthonormal eigenbasis, d×ℓ.
+    pub basis: Matrix,
+    /// Eigenvalues, descending, length ℓ.
+    pub eigvals: Vec<f64>,
+    /// Cumulative escaped mass ρ_{1:t}.
+    pub escaped_mass: f64,
+    /// Escaped mass of the most recent update.
+    pub last_rho: f64,
+    /// Update counter.
+    pub steps: u64,
+}
+
+fn ensure_shape(what: &str, m: &Matrix, rows: usize, cols: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        m.rows() == rows && m.cols() == cols,
+        "state restore: {what} shape {}x{} != expected {rows}x{cols}",
+        m.rows(),
+        m.cols()
+    );
+    Ok(())
+}
+
+fn ensure_opt_shape(
+    what: &str,
+    m: &Option<Matrix>,
+    rows: usize,
+    cols: usize,
+) -> anyhow::Result<()> {
+    if let Some(m) = m {
+        ensure_shape(what, m, rows, cols)?;
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -132,6 +212,37 @@ impl Preconditioner for KroneckerUnit {
 
     fn second_moment_bytes(&self) -> usize {
         self.l.mem_bytes() + self.r.mem_bytes()
+    }
+
+    fn state_payload(&self) -> PrecondState {
+        PrecondState::Kronecker {
+            l: self.l.clone(),
+            r: self.r.clone(),
+            l_root: self.l_root.clone(),
+            r_root: self.r_root.clone(),
+        }
+    }
+
+    fn restore_payload(&mut self, state: PrecondState) -> anyhow::Result<()> {
+        let PrecondState::Kronecker { l, r, l_root, r_root } = state else {
+            anyhow::bail!("state restore: non-Kronecker payload for a Kronecker unit");
+        };
+        let (m, n) = (self.l.rows(), self.r.rows());
+        ensure_shape("L factor", &l, m, m)?;
+        ensure_shape("R factor", &r, n, n)?;
+        ensure_opt_shape("L root", &l_root, m, m)?;
+        ensure_opt_shape("R root", &r_root, n, n)?;
+        if self.one_sided {
+            anyhow::ensure!(
+                r_root.is_none(),
+                "state restore: R root present for a one-sided Kronecker unit"
+            );
+        }
+        self.l = l;
+        self.r = r;
+        self.l_root = l_root;
+        self.r_root = r_root;
+        Ok(())
     }
 }
 
@@ -236,6 +347,59 @@ impl Side {
             Side::Sketched { fd } => fd.escaped_mass(),
         }
     }
+
+    /// Snapshot this side's mutable state in its natural factored form.
+    pub(crate) fn snapshot(&self) -> SideState {
+        match self {
+            Side::Exact { c, root } => SideState::Exact { c: c.clone(), root: root.clone() },
+            Side::Sketched { fd } => SideState::Sketch(SketchState {
+                basis: fd.basis().clone(),
+                eigvals: fd.eigenvalues().to_vec(),
+                escaped_mass: fd.escaped_mass(),
+                last_rho: fd.last_escaped(),
+                steps: fd.steps() as u64,
+            }),
+        }
+    }
+
+    /// Restore a [`Side::snapshot`]; the side mode (exact vs sketched)
+    /// and every dimension must match this side's construction.
+    pub(crate) fn restore(&mut self, state: SideState) -> anyhow::Result<()> {
+        match (self, state) {
+            (Side::Exact { c, root }, SideState::Exact { c: nc, root: nroot }) => {
+                let d = c.rows();
+                ensure_shape("exact side factor", &nc, d, d)?;
+                ensure_opt_shape("exact side root", &nroot, d, d)?;
+                *c = nc;
+                *root = nroot;
+            }
+            (Side::Sketched { fd }, SideState::Sketch(s)) => {
+                anyhow::ensure!(
+                    s.basis.rows() == fd.dim() && s.basis.cols() == fd.rank(),
+                    "state restore: sketch basis {}x{} != expected {}x{}",
+                    s.basis.rows(),
+                    s.basis.cols(),
+                    fd.dim(),
+                    fd.rank()
+                );
+                *fd = FdSketch::from_parts(
+                    s.basis,
+                    s.eigvals,
+                    fd.decay(),
+                    s.escaped_mass,
+                    s.last_rho,
+                    s.steps as usize,
+                )?;
+            }
+            (Side::Exact { .. }, SideState::Sketch(_)) => {
+                anyhow::bail!("state restore: sketch payload for an exact side")
+            }
+            (Side::Sketched { .. }, SideState::Exact { .. }) => {
+                anyhow::bail!("state restore: exact payload for a sketched side")
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Sketched S-Shampoo unit: an FD sketch (or exact small factor) per side.
@@ -322,6 +486,18 @@ impl Preconditioner for SketchUnit {
         }
         out
     }
+
+    fn state_payload(&self) -> PrecondState {
+        PrecondState::Sketch { left: self.left.snapshot(), right: self.right.snapshot() }
+    }
+
+    fn restore_payload(&mut self, state: PrecondState) -> anyhow::Result<()> {
+        let PrecondState::Sketch { left, right } = state else {
+            anyhow::bail!("state restore: non-sketch payload for a sketch unit");
+        };
+        self.left.restore(left)?;
+        self.right.restore(right)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -392,6 +568,23 @@ impl Preconditioner for AdamUnit {
     fn second_moment_bytes(&self) -> usize {
         self.v.mem_bytes()
     }
+
+    fn state_payload(&self) -> PrecondState {
+        PrecondState::Diag { m: self.m.clone(), v: self.v.clone(), t: self.t as u64 }
+    }
+
+    fn restore_payload(&mut self, state: PrecondState) -> anyhow::Result<()> {
+        let PrecondState::Diag { m, v, t } = state else {
+            anyhow::bail!("state restore: non-diagonal payload for an Adam unit");
+        };
+        let (r, c) = (self.m.rows(), self.m.cols());
+        ensure_shape("Adam first moment", &m, r, c)?;
+        ensure_shape("Adam second moment", &v, r, c)?;
+        self.m = m;
+        self.v = v;
+        self.t = t as usize;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -442,6 +635,38 @@ impl BlockState {
     pub fn second_moment_bytes(&self) -> usize {
         self.unit.second_moment_bytes()
     }
+
+    /// Snapshot the block's full mutable optimizer state: the unit's
+    /// typed payload plus the first-order companions (momentum, grafting
+    /// accumulator). Scratch buffers never travel.
+    pub fn snapshot(&self) -> BlockStateSnap {
+        let (graft_v, graft_t) = self.graft.snapshot();
+        BlockStateSnap { unit: self.unit.state_payload(), mu: self.mu.clone(), graft_v, graft_t }
+    }
+
+    /// Restore a [`BlockState::snapshot`]; every shape/kind must match
+    /// this block's construction. On success the block steps bitwise
+    /// identically to the snapshotted one. A failed restore may leave
+    /// the block partially updated — callers treat `Err` as fatal.
+    pub fn restore(&mut self, snap: BlockStateSnap) -> anyhow::Result<()> {
+        ensure_shape("momentum", &snap.mu, self.mu.rows(), self.mu.cols())?;
+        self.unit.restore_payload(snap.unit)?;
+        self.graft.restore(snap.graft_v, snap.graft_t)?;
+        self.mu = snap.mu;
+        Ok(())
+    }
+}
+
+/// Full serialized optimizer state of one block: the preconditioner
+/// unit's [`PrecondState`] plus momentum and grafting companions. This is
+/// what crosses the [`crate::optim::engine::BlockExecutor`] state
+/// boundary and lands in v2 checkpoints.
+#[derive(Clone, Debug)]
+pub struct BlockStateSnap {
+    pub unit: PrecondState,
+    pub mu: Matrix,
+    pub graft_v: Option<Matrix>,
+    pub graft_t: u64,
 }
 
 /// Parameters controlling one driven step (shared by all blocks).
@@ -549,6 +774,135 @@ mod tests {
         let mut rng = Pcg64::new(202);
         unit.ingest(&Matrix::randn(10, 2, &mut rng));
         assert!(unit.sketches()[0].steps() > 0);
+    }
+
+    /// Drive two identical blocks a few steps, snapshot/restore one into
+    /// a fresh block, then keep driving both and demand bitwise equality.
+    fn assert_snapshot_restore_is_bitwise(mk: impl Fn() -> BlockState, shape: (usize, usize)) {
+        let mut rng = Pcg64::new(205);
+        let mut a = mk();
+        let ctx = StepCtx {
+            t: 0,
+            scale: 1.0,
+            preconditioning: true,
+            refresh_due: true,
+            lr: 0.05,
+            beta1: 0.9,
+            weight_decay: 0.001,
+            stat_due: true,
+            graft: GraftType::Rmsprop,
+        };
+        for t in 1..=5 {
+            a.grad = Matrix::randn(shape.0, shape.1, &mut rng);
+            drive_block(&mut a, &StepCtx { t, refresh_due: t % 2 == 0, ..ctx });
+        }
+        let mut b = mk();
+        b.restore(a.snapshot()).unwrap();
+        b.param = a.param.clone();
+        assert_eq!(a.mem_bytes(), b.mem_bytes());
+        for t in 6..=10 {
+            let g = Matrix::randn(shape.0, shape.1, &mut rng);
+            a.grad = g.clone();
+            b.grad = g;
+            let c = StepCtx { t, refresh_due: t % 2 == 0, ..ctx };
+            drive_block(&mut a, &c);
+            drive_block(&mut b, &c);
+            assert_eq!(a.param.max_diff(&b.param), 0.0, "diverged at t={t}");
+            assert_eq!(a.mu.max_diff(&b.mu), 0.0);
+        }
+    }
+
+    #[test]
+    fn kronecker_state_roundtrips_bitwise() {
+        assert_snapshot_restore_is_bitwise(
+            || {
+                BlockState::new(
+                    Box::new(KroneckerUnit::new((6, 4), 0.999, 1e-9, false)),
+                    GraftType::Rmsprop,
+                    (6, 4),
+                    0.999,
+                )
+            },
+            (6, 4),
+        );
+    }
+
+    #[test]
+    fn sketch_state_roundtrips_bitwise() {
+        // 10×3 at rank 4: left sketched, right exact — both side modes.
+        assert_snapshot_restore_is_bitwise(
+            || {
+                BlockState::new(
+                    Box::new(SketchUnit::new((10, 3), 4, 0.999, 1e-9, false)),
+                    GraftType::Rmsprop,
+                    (10, 3),
+                    0.999,
+                )
+            },
+            (10, 3),
+        );
+    }
+
+    #[test]
+    fn adam_state_roundtrips_bitwise() {
+        assert_snapshot_restore_is_bitwise(
+            || {
+                BlockState::new(
+                    Box::new(AdamUnit::new((5, 5), 0.9, 0.999, 1e-8)),
+                    GraftType::Rmsprop,
+                    (5, 5),
+                    0.999,
+                )
+            },
+            (5, 5),
+        );
+    }
+
+    #[test]
+    fn state_restore_rejects_mismatched_payloads() {
+        // Wrong kind.
+        let mut kron = KroneckerUnit::new((4, 4), 0.999, 1e-9, false);
+        let adam = AdamUnit::new((4, 4), 0.9, 0.999, 1e-8);
+        assert!(kron.restore_payload(adam.state_payload()).is_err());
+        // Wrong shape.
+        let other = KroneckerUnit::new((5, 4), 0.999, 1e-9, false);
+        assert!(kron.restore_payload(other.state_payload()).is_err());
+        // One-sided unit refuses a right root.
+        let mut one_sided = KroneckerUnit::new((4, 4), 0.999, 1e-9, true);
+        let mut two_sided = KroneckerUnit::new((4, 4), 0.999, 1e-9, false);
+        let mut rng = Pcg64::new(206);
+        two_sided.ingest(&Matrix::randn(4, 4, &mut rng));
+        two_sided.refresh();
+        assert!(one_sided.restore_payload(two_sided.state_payload()).is_err());
+        // Sketched/exact side mode mismatch (rank 4: dim 10 sketched,
+        // dim 3 exact — transposed unit flips the modes).
+        let mut unit = SketchUnit::new((10, 3), 4, 0.999, 1e-9, false);
+        let flipped = SketchUnit::new((3, 10), 4, 0.999, 1e-9, false);
+        assert!(unit.restore_payload(flipped.state_payload()).is_err());
+        // Adversarial sketch rank: basis with the wrong column count.
+        let PrecondState::Sketch { left, right } = unit.state_payload() else { unreachable!() };
+        let SideState::Sketch(mut s) = left else { unreachable!() };
+        s.basis = Matrix::zeros(10, 7);
+        s.eigvals = vec![0.0; 7];
+        assert!(unit
+            .restore_payload(PrecondState::Sketch { left: SideState::Sketch(s), right })
+            .is_err());
+        // Graft companion shape mismatch surfaces through BlockState.
+        let mk = || {
+            BlockState::new(
+                Box::new(AdamUnit::new((3, 3), 0.9, 0.999, 1e-8)),
+                GraftType::Rmsprop,
+                (3, 3),
+                0.999,
+            )
+        };
+        let mut blk = mk();
+        let mut snap = mk().snapshot();
+        snap.graft_v = Some(Matrix::zeros(2, 2));
+        assert!(blk.restore(snap).is_err());
+        let mut snap = mk().snapshot();
+        snap.mu = Matrix::zeros(9, 1);
+        assert!(blk.restore(snap).is_err());
     }
 
     #[test]

@@ -65,9 +65,49 @@ impl FdSketch {
         }
     }
 
+    /// Rebuild a sketch from serialized parts (wire / checkpoint restore).
+    ///
+    /// `u` is the d×ℓ eigenbasis, `w` the ℓ eigenvalues; `decay`,
+    /// `rho_sum`, `last_rho` and `steps` restore the EMA/escaped-mass
+    /// bookkeeping. Shape and range invariants are validated (the caller
+    /// has already bounded allocations at decode time); the value
+    /// contents are restored bit-for-bit so a snapshot/restore round
+    /// trip is exact.
+    pub fn from_parts(
+        u: Matrix,
+        w: Vec<f64>,
+        decay: f64,
+        rho_sum: f64,
+        last_rho: f64,
+        steps: usize,
+    ) -> anyhow::Result<Self> {
+        let d = u.rows();
+        let ell = u.cols();
+        anyhow::ensure!(
+            ell >= 1 && ell <= d,
+            "sketch restore: need 1 <= ell <= d (got ell={ell}, d={d})"
+        );
+        anyhow::ensure!(
+            decay > 0.0 && decay <= 1.0,
+            "sketch restore: decay {decay} outside (0, 1]"
+        );
+        anyhow::ensure!(
+            w.len() == ell,
+            "sketch restore: {} eigenvalues for rank-{ell} sketch",
+            w.len()
+        );
+        Ok(FdSketch { d, ell, u, w, decay, rho_sum, last_rho, steps })
+    }
+
     #[inline]
     pub fn dim(&self) -> usize {
         self.d
+    }
+
+    /// Exponential decay β₂ applied at each update (1.0 = unweighted).
+    #[inline]
+    pub fn decay(&self) -> f64 {
+        self.decay
     }
 
     #[inline]
@@ -432,6 +472,44 @@ mod tests {
             "chunked path diverged from sequential composition"
         );
         assert!((fd_wide.escaped_mass() - fd_seq.escaped_mass()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn from_parts_roundtrips_bitwise_and_validates() {
+        let mut rng = Pcg64::new(67);
+        let mut fd = FdSketch::new(14, 5, 0.97);
+        for _ in 0..12 {
+            let g = rng.gaussian_vec(14);
+            fd.update_vec(&g);
+        }
+        let restored = FdSketch::from_parts(
+            fd.basis().clone(),
+            fd.eigenvalues().to_vec(),
+            fd.decay(),
+            fd.escaped_mass(),
+            fd.last_escaped(),
+            fd.steps(),
+        )
+        .unwrap();
+        assert_eq!(restored.dim(), 14);
+        assert_eq!(restored.rank(), 5);
+        assert_eq!(restored.escaped_mass().to_bits(), fd.escaped_mass().to_bits());
+        assert_eq!(restored.steps(), fd.steps());
+        for (a, b) in restored.eigenvalues().iter().zip(fd.eigenvalues()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(restored.basis().max_diff(fd.basis()), 0.0);
+        // A further update evolves both copies identically.
+        let g = rng.gaussian_vec(14);
+        let mut fd2 = restored;
+        fd.update_vec(&g);
+        fd2.update_vec(&g);
+        assert_eq!(fd.materialize().max_diff(&fd2.materialize()), 0.0);
+        assert_eq!(fd.escaped_mass().to_bits(), fd2.escaped_mass().to_bits());
+        // Invalid parts are refused.
+        assert!(FdSketch::from_parts(Matrix::zeros(4, 5), vec![0.0; 5], 1.0, 0.0, 0.0, 0).is_err());
+        assert!(FdSketch::from_parts(Matrix::zeros(5, 3), vec![0.0; 2], 1.0, 0.0, 0.0, 0).is_err());
+        assert!(FdSketch::from_parts(Matrix::zeros(5, 3), vec![0.0; 3], 0.0, 0.0, 0.0, 0).is_err());
     }
 
     #[test]

@@ -1,8 +1,16 @@
 //! Checkpointing: a simple self-describing binary format for parameter
 //! lists plus the step counter (serde is not vendored).
 //!
-//! Layout: magic "SKCH" | u32 version | u64 step | u32 tensor count |
-//! per tensor: u32 rows | u32 cols | rows*cols f64 little-endian.
+//! Layout (v2): magic "SKCH" | u32 version | u64 step | u32 tensor
+//! count | per tensor: u32 rows | u32 cols | rows*cols f64
+//! little-endian | u8 has_state | \[one wire `StateSnapOk` frame\].
+//!
+//! The optional tail is the **typed optimizer state**: the same
+//! [`BlockStateMsg`] records the wire v4 `StateSnap` RPC ships, encoded
+//! as one length-prefixed [`crate::coordinator::wire`] frame. FD-sketched
+//! blocks therefore cost O(dℓ) in the checkpoint exactly as on the wire
+//! — rank-ℓ factors + escaped-mass scalar, never the O(d²) dense
+//! covariance. Version-1 files (params only) still load.
 //!
 //! Durability: [`save_checkpoint`] is **atomic** — it writes to
 //! `<path>.tmp`, flushes and fsyncs, then renames over the final path,
@@ -12,14 +20,18 @@
 //! header field is bounded by the bytes actually remaining in the
 //! file, so a corrupt or truncated checkpoint is a clean error, not an
 //! allocation bomb (the same class of bug the shard wire reader
-//! guards against).
+//! guards against — the embedded state frame reuses that reader, whose
+//! buffers grow only as bytes actually arrive).
 
+use crate::coordinator::wire::{self, BlockStateMsg, StateSnapOkMsg, WireMsg};
 use crate::tensor::Matrix;
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
 const MAGIC: &[u8; 4] = b"SKCH";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Params-only layout (pre-typed-state); still accepted by the loader.
+const VERSION_V1: u32 = 1;
 
 /// Fixed header size: magic + version + step + tensor count.
 const HEADER_BYTES: u64 = 4 + 4 + 8 + 4;
@@ -28,6 +40,19 @@ const HEADER_BYTES: u64 = 4 + 4 + 8 + 4;
 /// flush + fsync, rename. Readers concurrently loading `path` always
 /// see a complete checkpoint (old or new, never a torn one).
 pub fn save_checkpoint(path: &str, step: usize, params: &[Matrix]) -> Result<()> {
+    save_checkpoint_with_state(path, step, params, None)
+}
+
+/// [`save_checkpoint`] plus the typed optimizer state: the
+/// [`BlockStateMsg`] records (one per engine block, in block order)
+/// travel as an embedded wire `StateSnapOk` frame after the parameter
+/// tensors, so sketched blocks persist as factors, not dense blocks.
+pub fn save_checkpoint_with_state(
+    path: &str,
+    step: usize,
+    params: &[Matrix],
+    state: Option<&[BlockStateMsg]>,
+) -> Result<()> {
     if let Some(parent) = std::path::Path::new(path).parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
@@ -51,6 +76,16 @@ pub fn save_checkpoint(path: &str, step: usize, params: &[Matrix]) -> Result<()>
             for &v in p.as_slice() {
                 f.write_all(&v.to_le_bytes())?;
             }
+        }
+        match state {
+            Some(entries) => {
+                f.write_all(&[1u8])?;
+                // One wire frame: the codec's encode-side frame cap and
+                // the loader's byte-bounded decode both apply unchanged.
+                let msg = WireMsg::StateSnapOk(StateSnapOkMsg { entries: entries.to_vec() });
+                wire::write_msg(&mut f, &msg).context("write checkpoint optimizer state")?;
+            }
+            None => f.write_all(&[0u8])?,
         }
         f.flush()?;
         // Push the bytes to disk before the rename publishes them: a
@@ -80,8 +115,20 @@ pub fn save_checkpoint(path: &str, step: usize, params: &[Matrix]) -> Result<()>
 }
 
 /// Load a checkpoint; returns (step, params). Header fields are
-/// validated against the file's actual size before any allocation.
+/// validated against the file's actual size before any allocation. Any
+/// embedded optimizer state is parsed (so corruption never passes) but
+/// dropped — params-only consumers need no typed-state plumbing.
 pub fn load_checkpoint(path: &str) -> Result<(usize, Vec<Matrix>)> {
+    let (step, params, _) = load_checkpoint_full(path)?;
+    Ok((step, params))
+}
+
+/// Load a checkpoint with its typed optimizer state, when present:
+/// `(step, params, state)`. `state` is `None` for v1 files and v2 files
+/// saved without state; the returned [`BlockStateMsg`] records are
+/// structurally validated by the wire decoder here and shape-validated
+/// against the engine's own block table at restore time.
+pub fn load_checkpoint_full(path: &str) -> Result<(usize, Vec<Matrix>, Option<Vec<BlockStateMsg>>)> {
     let file = std::fs::File::open(path)?;
     let total = file.metadata()?.len();
     ensure!(
@@ -98,7 +145,7 @@ pub fn load_checkpoint(path: &str) -> Result<(usize, Vec<Matrix>)> {
     let mut u64buf = [0u8; 8];
     f.read_exact(&mut u32buf)?;
     let version = u32::from_le_bytes(u32buf);
-    if version != VERSION {
+    if version != VERSION && version != VERSION_V1 {
         bail!("unsupported checkpoint version {version}");
     }
     f.read_exact(&mut u64buf)?;
@@ -142,13 +189,43 @@ pub fn load_checkpoint(path: &str) -> Result<(usize, Vec<Matrix>)> {
         }
         params.push(Matrix::from_vec(rows, cols, data));
     }
-    ensure!(remaining == 0, "checkpoint carries {remaining} trailing bytes");
-    Ok((step, params))
+    if version == VERSION_V1 {
+        ensure!(remaining == 0, "checkpoint carries {remaining} trailing bytes");
+        return Ok((step, params, None));
+    }
+    ensure!(remaining >= 1, "checkpoint v2 is missing the state flag");
+    let mut flag = [0u8; 1];
+    f.read_exact(&mut flag)?;
+    remaining -= 1;
+    let state = match flag[0] {
+        0 => {
+            ensure!(remaining == 0, "checkpoint carries {remaining} trailing bytes");
+            None
+        }
+        1 => {
+            // The wire reader bounds its buffers by bytes actually read,
+            // so a corrupt frame length cannot allocate past the file.
+            let msg =
+                wire::read_msg(&mut f).context("read checkpoint optimizer-state frame")?;
+            let WireMsg::StateSnapOk(snap) = msg else {
+                bail!("checkpoint state section holds an unexpected wire message");
+            };
+            let mut probe = [0u8; 1];
+            ensure!(
+                f.read(&mut probe)? == 0,
+                "checkpoint carries trailing bytes after the state frame"
+            );
+            Some(snap.entries)
+        }
+        n => bail!("checkpoint state flag {n} is neither 0 nor 1"),
+    };
+    Ok((step, params, state))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::{EngineConfig, Optimizer, PrecondEngine, ShampooConfig, UnitKind};
     use crate::util::rng::Pcg64;
 
     fn tmp_path(name: &str) -> String {
@@ -286,6 +363,173 @@ mod tests {
         full.push(0xEE);
         std::fs::write(&path, &full).unwrap();
         assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A small sketched engine (rank 3, blocks with mixed exact and
+    /// sketched sides) — the typed-state source for the v2 tests.
+    fn sketched_engine(shapes: &[(usize, usize)]) -> PrecondEngine {
+        let base = ShampooConfig {
+            start_preconditioning_step: 2,
+            stat_interval: 1,
+            precond_interval: 2,
+            ..Default::default()
+        };
+        let ecfg = EngineConfig {
+            threads: 1,
+            block_size: 5,
+            refresh_interval: 2,
+            ..EngineConfig::default()
+        };
+        PrecondEngine::new(shapes, UnitKind::Sketched { rank: 3 }, base, ecfg)
+    }
+
+    /// Params + typed state after a few steps of a sketched engine.
+    fn sketched_entries() -> (Vec<Matrix>, Vec<BlockStateMsg>) {
+        let shapes = [(9usize, 6), (4, 4)];
+        let mut eng = sketched_engine(&shapes);
+        let mut rng = Pcg64::new(604);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut rng)).collect();
+        for _ in 0..5 {
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut rng)).collect();
+            eng.try_step(&mut params, &grads).unwrap();
+        }
+        (params, eng.state_payloads().unwrap().expect("engine has typed state"))
+    }
+
+    #[test]
+    fn v2_state_roundtrip_resumes_bitwise() {
+        let shapes = [(9usize, 6), (4, 4)];
+        let mut rng = Pcg64::new(605);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut rng)).collect();
+        let grads: Vec<Vec<Matrix>> = (0..9)
+            .map(|_| shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut rng)).collect())
+            .collect();
+        let mut eng = sketched_engine(&shapes);
+        for g in &grads[..5] {
+            eng.try_step(&mut params, g).unwrap();
+        }
+        let entries = eng.state_payloads().unwrap().expect("engine has typed state");
+        let path = tmp_path("sketchy_ckpt_v2_state.bin");
+        save_checkpoint_with_state(&path, 5, &params, Some(&entries)).unwrap();
+        let (step, loaded, state) = load_checkpoint_full(&path).unwrap();
+        assert_eq!(step, 5);
+        let state = state.expect("v2 checkpoint carries state");
+        // The codec roundtrip is bit-lossless: the decoded records equal
+        // the saved ones field for field.
+        assert_eq!(state, entries);
+        for (a, b) in params.iter().zip(&loaded) {
+            assert_eq!(a, b);
+        }
+        // Resume: a fresh engine restored from the checkpoint continues
+        // bitwise-identically to the uninterrupted one.
+        let mut resumed = sketched_engine(&shapes);
+        let mut resumed_params = loaded;
+        resumed.restore_payloads(step, state).unwrap();
+        assert_eq!(resumed.steps(), 5);
+        for g in &grads[5..] {
+            eng.try_step(&mut params, g).unwrap();
+            resumed.try_step(&mut resumed_params, g).unwrap();
+        }
+        for (a, b) in params.iter().zip(&resumed_params) {
+            assert_eq!(a, b);
+        }
+        // Restoring into an engine with a different block table is
+        // refused before anything is applied.
+        let mut wrong = sketched_engine(&[(4usize, 4)]);
+        let (_, _, state2) = load_checkpoint_full(&path).unwrap();
+        assert!(wrong.restore_payloads(5, state2.unwrap()).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_v1_checkpoints_still_load() {
+        // Hand-build a version-1 file (params only, no state flag): the
+        // v2 loader must accept it unchanged and report no state.
+        let params = sample_params(504);
+        let path = tmp_path("sketchy_ckpt_v1_legacy.bin");
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&VERSION_V1.to_le_bytes());
+        b.extend_from_slice(&9u64.to_le_bytes());
+        b.extend_from_slice(&(params.len() as u32).to_le_bytes());
+        for p in &params {
+            b.extend_from_slice(&(p.rows() as u32).to_le_bytes());
+            b.extend_from_slice(&(p.cols() as u32).to_le_bytes());
+            for &v in p.as_slice() {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(&path, &b).unwrap();
+        let (step, loaded, state) = load_checkpoint_full(&path).unwrap();
+        assert_eq!(step, 9);
+        assert!(state.is_none());
+        for (a, b) in params.iter().zip(&loaded) {
+            assert_eq!(a, b);
+        }
+        // A v1 file with trailing bytes is still rejected.
+        b.push(0);
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_checkpoint_full(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_state_truncations_error_cleanly() {
+        // Truncate a state-bearing checkpoint at every byte boundary:
+        // only the full file loads; every prefix — including cuts inside
+        // the embedded state frame — errors cleanly.
+        let (params, entries) = sketched_entries();
+        let path = tmp_path("sketchy_ckpt_v2_trunc.bin");
+        save_checkpoint_with_state(&path, 5, &params, Some(&entries)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for cut in 0..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            assert!(
+                load_checkpoint_full(&path).is_err(),
+                "prefix of {cut}/{} bytes must not load",
+                full.len()
+            );
+        }
+        std::fs::write(&path, &full).unwrap();
+        assert!(load_checkpoint_full(&path).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn adversarial_state_sections_are_rejected() {
+        let (params, entries) = sketched_entries();
+        let path = tmp_path("sketchy_ckpt_v2_adversarial.bin");
+        // Baseline: a no-state save ends in the 0 flag byte.
+        save_checkpoint(&path, 5, &params).unwrap();
+        let base = std::fs::read(&path).unwrap();
+        assert_eq!(*base.last().unwrap(), 0);
+        // An out-of-range flag is rejected.
+        let mut b = base.clone();
+        *b.last_mut().unwrap() = 2;
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_checkpoint_full(&path).is_err());
+        // Flag 1 followed by the wrong wire message is rejected.
+        let mut b = base.clone();
+        *b.last_mut().unwrap() = 1;
+        wire::write_msg(&mut b, &WireMsg::Ok).unwrap();
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_checkpoint_full(&path).is_err());
+        // Flag 1 with a valid snapshot frame loads...
+        let mut b = base.clone();
+        *b.last_mut().unwrap() = 1;
+        wire::write_msg(&mut b, &WireMsg::StateSnapOk(StateSnapOkMsg { entries: entries.clone() }))
+            .unwrap();
+        std::fs::write(&path, &b).unwrap();
+        let (_, _, state) = load_checkpoint_full(&path).unwrap();
+        assert_eq!(state.unwrap(), entries);
+        // ...but trailing bytes after the frame are rejected.
+        b.push(0xEE);
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_checkpoint_full(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 }

@@ -7,7 +7,9 @@ pub mod lm;
 pub mod metrics;
 pub mod proxy_train;
 
-pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use checkpoint::{
+    load_checkpoint, load_checkpoint_full, save_checkpoint, save_checkpoint_with_state,
+};
 pub use lm::LmTrainer;
 pub use metrics::CurveLog;
 pub use proxy_train::{ProxyTask, ProxyTrainer};

@@ -17,6 +17,7 @@ use sketchy::optim::{
     PrecondEngine, ShampooConfig, UnitKind,
 };
 use sketchy::tensor::Matrix;
+use sketchy::train::{load_checkpoint_full, save_checkpoint_with_state};
 use sketchy::util::rng::Pcg64;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -519,7 +520,7 @@ fn compressed_transport_proto_degrade_matrix_matches_reference_bitwise() {
     // legacy synchronous protocol — every cell bitwise identical to
     // the fault-free reference, refresh accounting included.
     let want = chaos_reference();
-    for proto in [1u32, 2, PROTO_VERSION] {
+    for proto in [1u32, 2, 3, PROTO_VERSION] {
         let got = chaos_run(proto, true, vec![FaultScript::none(), FaultScript::none()], usize::MAX)
             .unwrap_or_else(|e| panic!("proto v{proto} + compress run failed: {e:#}"));
         assert_matches_reference(&got, &want, &format!("compress-on at proto v{proto}"));
@@ -811,6 +812,231 @@ fn spawn_failure_is_surfaced() {
         Err(e) => e,
     };
     assert!(format!("{err:#}").contains("shard 0"), "got: {err:#}");
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocol v4: typed block-state payloads — state RPCs, checkpoint
+// resume through real workers, mixed-version refusal, state-RPC chaos.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v4_checkpoint_resume_through_real_workers_is_bitwise() {
+    // The end-to-end sketch-native state story over real worker
+    // processes: step a 2-shard Sketched engine in lockstep with the
+    // in-process reference, pull the typed snapshot over the v4
+    // `StateSnap` RPC (rank-ℓ FD factors, never dense covariance),
+    // embed it in a checkpoint-v2 file, kill the workers, relaunch a
+    // fresh fleet, restore over `StateRestore`, and continue — the
+    // resumed run must track the never-interrupted reference bit for
+    // bit.
+    let shapes = [(9usize, 6), (5, 4)];
+    let kind = UnitKind::Sketched { rank: 3 };
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 4,
+        refresh_interval: 3,
+        stagger: true,
+        ..Default::default()
+    };
+    let launch = ShardLaunch {
+        program: sketchy_bin(),
+        shards: 2,
+        transport: ShardTransport::Tcp,
+        proto: PROTO_VERSION,
+        compress: true,
+        launch: None,
+    };
+    let mut local = PrecondEngine::new(&shapes, kind, base_cfg(), ecfg);
+    let mut sharded = PrecondEngine::sharded(&shapes, kind, base_cfg(), ecfg, &launch)
+        .expect("launch v4 sharded engine");
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(430);
+    for step in 0..5 {
+        let grads = random_grads(&shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        sharded.try_step(&mut p2, &grads).expect("sharded step");
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "sharded run diverged at step {step}");
+        }
+    }
+    let entries = sharded
+        .state_payloads()
+        .expect("StateSnap RPC")
+        .expect("v4 engines expose typed block state");
+    let path = std::env::temp_dir().join(format!("sketchy_v4_resume_{}.ckpt", std::process::id()));
+    let path = path.to_str().expect("utf8 temp path").to_string();
+    save_checkpoint_with_state(&path, 5, &p2, Some(&entries)).expect("save checkpoint v2");
+    drop(sharded); // the worker fleet dies with its driver
+    let (step, params, state) = load_checkpoint_full(&path).expect("load checkpoint v2");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(step, 5, "checkpoint must carry the save step");
+    let mut resumed = PrecondEngine::sharded(&shapes, kind, base_cfg(), ecfg, &launch)
+        .expect("relaunch sharded engine");
+    resumed
+        .restore_payloads(step, state.expect("checkpoint v2 carries typed state"))
+        .expect("restore over StateRestore RPC");
+    let mut p3 = params;
+    for step in 5..10 {
+        let grads = random_grads(&shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        resumed.try_step(&mut p3, &grads).expect("resumed sharded step");
+        for (a, b) in p1.iter().zip(&p3) {
+            assert_eq!(a.max_diff(b), 0.0, "resumed run diverged at step {step}");
+        }
+    }
+}
+
+#[test]
+fn v4_driver_with_v3_workers_steps_bitwise_but_refuses_state_rpcs() {
+    // The mixed-version cell of the degrade matrix over real
+    // processes: workers pinned to v3 keep the delta-compressed step
+    // stream bitwise, but the typed-state capability is absent, so the
+    // state RPCs must refuse loudly — and the refusal must not poison
+    // the stepping stream.
+    let shapes = [(8usize, 8), (5, 4)];
+    let kind = UnitKind::Sketched { rank: 3 };
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 4,
+        refresh_interval: 3,
+        stagger: true,
+        ..Default::default()
+    };
+    let launch = ShardLaunch {
+        program: sketchy_bin(),
+        shards: 2,
+        transport: ShardTransport::Tcp,
+        proto: 3,
+        compress: true,
+        launch: None,
+    };
+    let mut local = PrecondEngine::new(&shapes, kind, base_cfg(), ecfg);
+    let mut sharded = PrecondEngine::sharded(&shapes, kind, base_cfg(), ecfg, &launch)
+        .expect("launch v3 sharded engine");
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(431);
+    for step in 0..6 {
+        let grads = random_grads(&shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        sharded.try_step(&mut p2, &grads).expect("v3 sharded step");
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "v3 run diverged at step {step}");
+        }
+    }
+    let err = sharded.state_payloads().expect_err("v3 workers cannot serve StateSnap");
+    assert!(
+        format!("{err:#}").contains("below wire protocol v4"),
+        "refusal must name the capability gap: {err:#}"
+    );
+    for step in 6..8 {
+        let grads = random_grads(&shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        sharded.try_step(&mut p2, &grads).expect("post-refusal sharded step");
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "post-refusal run diverged at step {step}");
+        }
+    }
+    assert_eq!(local.refreshes(), sharded.refreshes());
+}
+
+/// Chaos runner for the state RPCs: a Sketched engine over in-proc
+/// harness workers steps, snapshots + self-restores mid-run (a pure
+/// read followed by an idempotent full-state write), then keeps
+/// stepping. Faults land on whatever frame index the script names —
+/// including inside the `StateSnap`/`StateRestore` payload streams.
+fn sketch_state_chaos_run(
+    scripts: Vec<FaultScript>,
+    max_connections: usize,
+) -> anyhow::Result<(Vec<Matrix>, usize)> {
+    let transports: Vec<Arc<FaultInjectingTransport>> = scripts
+        .into_iter()
+        .map(|s| {
+            FaultInjectingTransport::with_config(s, max_connections, Some(Duration::from_secs(2)))
+        })
+        .collect();
+    let mut eng = PrecondEngine::with_executor(
+        &CHAOS_SHAPES,
+        UnitKind::Sketched { rank: 2 },
+        overlap_base(),
+        chaos_ecfg(false),
+        |blocks, kind, base, threads| {
+            Ok(Box::new(ShardExecutor::launch_in_proc(
+                blocks,
+                kind,
+                base,
+                threads,
+                &transports,
+                PROTO_VERSION,
+                true,
+            )?))
+        },
+    )?;
+    let mut params: Vec<Matrix> = CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut rng = Pcg64::new(426);
+    for _ in 0..4 {
+        let grads = random_grads(&CHAOS_SHAPES, &mut rng);
+        eng.try_step(&mut params, &grads)?;
+    }
+    let snaps = eng.state_snapshot()?;
+    eng.state_restore(snaps)?;
+    for _ in 4..CHAOS_STEPS {
+        let grads = random_grads(&CHAOS_SHAPES, &mut rng);
+        eng.try_step(&mut params, &grads)?;
+    }
+    Ok((params, eng.refreshes()))
+}
+
+/// Fault-free reference for the state-RPC chaos: the in-process engine
+/// on the same stream, snapshot + self-restore included so both runs
+/// exercise the identical sequence of state mutations.
+fn sketch_state_reference() -> (Vec<Matrix>, usize) {
+    let mut eng = PrecondEngine::new(
+        &CHAOS_SHAPES,
+        UnitKind::Sketched { rank: 2 },
+        overlap_base(),
+        chaos_ecfg(false),
+    );
+    let mut params: Vec<Matrix> = CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut rng = Pcg64::new(426);
+    for _ in 0..4 {
+        let grads = random_grads(&CHAOS_SHAPES, &mut rng);
+        eng.step(&mut params, &grads);
+    }
+    let snaps = eng.state_snapshot().expect("local snapshot");
+    eng.state_restore(snaps).expect("local restore");
+    for _ in 4..CHAOS_STEPS {
+        let grads = random_grads(&CHAOS_SHAPES, &mut rng);
+        eng.step(&mut params, &grads);
+    }
+    (params, eng.refreshes())
+}
+
+#[test]
+fn v4_state_rpcs_survive_severed_frames_bitwise() {
+    // The sketch-payload acceptance sweep: sever the link at every
+    // request- and reply-frame index in turn on a run whose stream
+    // interleaves delta-compressed Steps with a `StateSnap` +
+    // `StateRestore` pair. Severed snapshot replies are re-requested
+    // (pure read), severed restore requests are replayed (idempotent
+    // full-state overwrite) — every cell must reproduce the reference
+    // bit for bit, refresh accounting included. The run sends ~11
+    // request frames per shard (Init, 8 Steps, StateSnap,
+    // StateRestore); sweeping past the end proves a fault that never
+    // fires is harmless.
+    let want = sketch_state_reference();
+    assert!(want.1 > 0, "test must exercise refreshes");
+    for fault_at in 0..14 {
+        let script = FaultScript::none().on_request(fault_at, FaultAction::Sever);
+        let got = sketch_state_chaos_run(vec![script, FaultScript::none()], usize::MAX)
+            .unwrap_or_else(|e| panic!("sever at request {fault_at}: run failed: {e:#}"));
+        assert_matches_reference(&got, &want, &format!("state-RPC sever at request {fault_at}"));
+        let script = FaultScript::none().on_reply(fault_at, FaultAction::Sever);
+        let got = sketch_state_chaos_run(vec![FaultScript::none(), script], usize::MAX)
+            .unwrap_or_else(|e| panic!("sever at reply {fault_at}: run failed: {e:#}"));
+        assert_matches_reference(&got, &want, &format!("state-RPC sever at reply {fault_at}"));
+    }
 }
 
 #[test]

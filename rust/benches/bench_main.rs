@@ -433,10 +433,9 @@ fn main() {
     // gradient work. Gate-tracked as `shard_overlap_sync_ns`,
     // `shard_overlap_on_ns`, and the floored `shard_overlap_speedup`.
     if run("engine/shard_overlap") {
-        use sketchy::coordinator::shard::ShardExecutor;
         use sketchy::coordinator::wire::PROTO_VERSION;
         use sketchy::coordinator::{FaultInjectingTransport, FaultScript};
-        use sketchy::optim::UnitKind;
+        use sketchy::optim::{ExecutorBuilder, UnitKind};
         use std::sync::Arc;
         use std::time::Duration;
         let sh_shapes = [(192usize, 384usize)];
@@ -460,34 +459,24 @@ fn main() {
                     )
                 })
                 .collect();
-            PrecondEngine::with_executor(
-                &sh_shapes,
-                UnitKind::Shampoo,
-                sh_base.clone(),
-                EngineConfig {
-                    threads: 1,
-                    block_size: 96,
-                    refresh_interval: 2,
-                    stagger: true,
-                    overlap,
-                    ..Default::default()
-                },
-                |blocks, kind, base, threads| {
-                    Ok(Box::new(ShardExecutor::launch_in_proc(
-                        blocks,
-                        kind,
-                        base,
-                        threads,
-                        &transports,
-                        PROTO_VERSION,
-                        // Full frames: this bench times the RefreshAhead
-                        // overlap win against the PR-4 baseline; wire
-                        // payload size has its own bench + gate below.
-                        false,
-                    )?))
-                },
-            )
-            .expect("launch in-proc sharded engine")
+            // Full frames: this bench times the RefreshAhead overlap win
+            // against the PR-4 baseline; wire payload size has its own
+            // bench + gate below.
+            ExecutorBuilder::in_proc(transports, PROTO_VERSION, false)
+                .build(
+                    &sh_shapes,
+                    UnitKind::Shampoo,
+                    sh_base.clone(),
+                    EngineConfig {
+                        threads: 1,
+                        block_size: 96,
+                        refresh_interval: 2,
+                        stagger: true,
+                        overlap,
+                        ..Default::default()
+                    },
+                )
+                .expect("launch in-proc sharded engine")
         };
         // Bitwise identity + refresh accounting: sharded overlap ≡
         // sharded synchronous (both are pinned ≡ local elsewhere).
@@ -599,10 +588,9 @@ fn main() {
     let mut shard_wire_v3_bytes: Option<u64> = None;
     let mut shard_wire_ratio: Option<f64> = None;
     if run("engine/shard_wire_bytes") {
-        use sketchy::coordinator::shard::ShardExecutor;
         use sketchy::coordinator::wire::PROTO_VERSION;
         use sketchy::coordinator::{FaultInjectingTransport, FaultScript};
-        use sketchy::optim::UnitKind;
+        use sketchy::optim::{ExecutorBuilder, UnitKind};
         use std::sync::Arc;
         use std::time::Duration;
         let wb_shapes = [(32usize, 512usize), (64, 64)];
@@ -647,18 +635,9 @@ fn main() {
                     )
                 })
                 .collect();
-            let mut eng = PrecondEngine::with_executor(
-                &wb_shapes,
-                UnitKind::Shampoo,
-                wb_base.clone(),
-                wb_ecfg,
-                |blocks, kind, base, threads| {
-                    Ok(Box::new(ShardExecutor::launch_in_proc(
-                        blocks, kind, base, threads, &transports, proto, compress,
-                    )?))
-                },
-            )
-            .expect("launch wire-bytes engine");
+            let mut eng = ExecutorBuilder::in_proc(transports.clone(), proto, compress)
+                .build(&wb_shapes, UnitKind::Shampoo, wb_base.clone(), wb_ecfg)
+                .expect("launch wire-bytes engine");
             let mut params = zeros_like(&wb_shapes);
             let mut srng = Pcg64::new(0x11173);
             for _ in 0..wb_steps {
@@ -672,7 +651,9 @@ fn main() {
         let (v2_bytes, v2_params, v2_refreshes) = run_wire(2, false);
         let (v3_bytes, v3_params, v3_refreshes) = run_wire(PROTO_VERSION, true);
         // Reference: the in-process engine on the same stream.
-        let mut local = PrecondEngine::new(&wb_shapes, UnitKind::Shampoo, wb_base, wb_ecfg);
+        let mut local = ExecutorBuilder::local()
+            .build(&wb_shapes, UnitKind::Shampoo, wb_base, wb_ecfg)
+            .expect("launch wire-bytes local reference");
         let mut local_params = zeros_like(&wb_shapes);
         let mut srng = Pcg64::new(0x11173);
         for _ in 0..wb_steps {
@@ -716,10 +697,9 @@ fn main() {
     let mut sketch_ckpt_bytes: Option<u64> = None;
     let mut dense_ckpt_bytes: Option<u64> = None;
     if run("engine/shard_sketch_bytes") {
-        use sketchy::coordinator::shard::ShardExecutor;
         use sketchy::coordinator::wire::{BlockStateMsg, PROTO_VERSION};
         use sketchy::coordinator::{FaultInjectingTransport, FaultScript};
-        use sketchy::optim::UnitKind;
+        use sketchy::optim::{ExecutorBuilder, UnitKind};
         use std::sync::Arc;
         use std::time::Duration;
         let sk_shapes = [(384usize, 16usize), (48, 16)];
@@ -751,24 +731,9 @@ fn main() {
                     )
                 })
                 .collect();
-            let mut eng = PrecondEngine::with_executor(
-                &sk_shapes,
-                kind,
-                sk_base.clone(),
-                sk_ecfg,
-                |blocks, kind, base, threads| {
-                    Ok(Box::new(ShardExecutor::launch_in_proc(
-                        blocks,
-                        kind,
-                        base,
-                        threads,
-                        &transports,
-                        PROTO_VERSION,
-                        true,
-                    )?))
-                },
-            )
-            .expect("launch sketch-bytes engine");
+            let mut eng = ExecutorBuilder::in_proc(transports.clone(), PROTO_VERSION, true)
+                .build(&sk_shapes, kind, sk_base.clone(), sk_ecfg)
+                .expect("launch sketch-bytes engine");
             let mut params = zeros_like(&sk_shapes);
             let mut srng = Pcg64::new(0x5ce7c);
             for _ in 0..sk_steps {
@@ -789,12 +754,9 @@ fn main() {
         let (dense_bytes, _dense_params, dense_entries) = run_state(UnitKind::Shampoo);
         let (v4_bytes, sk_params, sk_entries) = run_state(UnitKind::Sketched { rank: 8 });
         // Reference: the in-process sketched engine on the same stream.
-        let mut local = PrecondEngine::new(
-            &sk_shapes,
-            UnitKind::Sketched { rank: 8 },
-            sk_base.clone(),
-            sk_ecfg,
-        );
+        let mut local = ExecutorBuilder::local()
+            .build(&sk_shapes, UnitKind::Sketched { rank: 8 }, sk_base.clone(), sk_ecfg)
+            .expect("launch sketch-bytes local reference");
         let mut local_params = zeros_like(&sk_shapes);
         let mut srng = Pcg64::new(0x5ce7c);
         for _ in 0..sk_steps {
@@ -842,6 +804,99 @@ fn main() {
         dense_ckpt_bytes = Some(dense_ckpt_len);
         sketch_ckpt_bytes = Some(sketch_ckpt_len);
         assert!(sk_identical, "sharded sketch run diverged — sketch-bytes record invalid");
+    }
+
+    // ---------------- shard migration (elastic kill-and-replace) ------
+    // The elastic-fleet recovery metric: an in-proc fleet of 2 seats
+    // plus 1 warm spare runs the stagger-refresh workload, seat 0 is
+    // killed mid-run, and the driver migrates its blocks to the spare
+    // from the last sync-point snapshot plus a journal replay. Both
+    // counters are fully deterministic: `shard_migrate_steps` is the
+    // replayed journal length (bounded by the failover budget — the
+    // baseline enforces that as the `shard_migrate_steps_max` ceiling)
+    // and `shard_migrate_state_bytes` is the encoded `StateRestore`
+    // traffic the handoff shipped. Bitwise identity with the local
+    // engine on the same gradient stream is asserted, so the record is
+    // only ever written for a correct migration.
+    let mut shard_migrate_steps: Option<usize> = None;
+    let mut shard_migrate_state_bytes: Option<usize> = None;
+    if run("engine/shard_migration") {
+        use sketchy::coordinator::wire::PROTO_VERSION;
+        use sketchy::coordinator::{FaultInjectingTransport, FaultScript};
+        use sketchy::optim::{ExecutorBuilder, UnitKind};
+        use std::sync::Arc;
+        use std::time::Duration;
+        let mg_shapes = [(96usize, 128usize), (48, 48)];
+        let mg_base = ShampooConfig {
+            lr: 1e-3,
+            start_preconditioning_step: 2,
+            stat_interval: 2,
+            graft: GraftType::Rmsprop,
+            ..Default::default()
+        };
+        let mg_ecfg = EngineConfig {
+            threads: 1,
+            block_size: 48,
+            refresh_interval: 2,
+            stagger: true,
+            ..Default::default()
+        };
+        let mg_steps = 12usize;
+        let mg_budget = 8u64;
+        // Kill after step t=10: last sync-point snapshot is t=8, so the
+        // handoff ships that snapshot and replays the t=9..=10 journal.
+        let kill_before = 10usize;
+        let transports: Vec<Arc<FaultInjectingTransport>> = (0..3)
+            .map(|_| {
+                FaultInjectingTransport::with_config(
+                    FaultScript::none(),
+                    usize::MAX,
+                    Some(Duration::from_secs(60)),
+                )
+            })
+            .collect();
+        let mut eng = ExecutorBuilder::in_proc(transports, PROTO_VERSION, true)
+            .spares(1)
+            .failover_budget(mg_budget)
+            .build(&mg_shapes, UnitKind::Shampoo, mg_base.clone(), mg_ecfg)
+            .expect("launch elastic migration engine");
+        let control = eng.fleet_control().expect("elastic fleet exposes control");
+        let mut local = ExecutorBuilder::local()
+            .build(&mg_shapes, UnitKind::Shampoo, mg_base, mg_ecfg)
+            .expect("launch migration local reference");
+        let mut p_fleet = zeros_like(&mg_shapes);
+        let mut p_local = p_fleet.clone();
+        let mut srng = Pcg64::new(0x317e);
+        for i in 0..mg_steps {
+            if i == kill_before {
+                control.kill_worker(0).expect("kill seat 0");
+            }
+            let grads: Vec<Matrix> =
+                mg_shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut srng)).collect();
+            eng.try_step(&mut p_fleet, &grads).expect("elastic step survives the kill");
+            local.step(&mut p_local, &grads);
+        }
+        let mut mg_identical = eng.refreshes() == local.refreshes();
+        for (a, b) in p_fleet.iter().zip(&p_local) {
+            if a.max_diff(b) != 0.0 {
+                mg_identical = false;
+            }
+        }
+        identical = identical && mg_identical;
+        let stats = control.stats();
+        println!(
+            "engine/shard_migration_12step_2sh_1spare  {} migration(s), {} replayed step(s) \
+             (budget {mg_budget}), state {} B identical={mg_identical}",
+            stats.migrations, stats.migrated_steps, stats.migrated_state_bytes
+        );
+        shard_migrate_steps = Some(stats.migrated_steps);
+        shard_migrate_state_bytes = Some(stats.migrated_state_bytes);
+        assert!(mg_identical, "elastic migration diverged — migration record invalid");
+        assert_eq!(stats.migrations, 1, "expected exactly one migration");
+        assert!(
+            stats.migrated_steps as u64 <= mg_budget,
+            "journal replay exceeded the failover budget"
+        );
     }
 
     // Assemble the gate-facing perf record from whichever engine
@@ -914,6 +969,16 @@ fn main() {
         if let (Some(d), Some(s)) = (dense_ckpt_bytes, sketch_ckpt_bytes) {
             fields.push(("dense_state_ckpt_bytes", d.to_string()));
             fields.push(("sketch_state_ckpt_bytes", s.to_string()));
+        }
+        if let (Some(steps), Some(bytes)) = (shard_migrate_steps, shard_migrate_state_bytes) {
+            // Deterministic counters (no timings). The ceiling is the
+            // binding machine-independent check: a kill-and-replace
+            // handoff must never replay more than one failover budget's
+            // worth of journal — emitted here so a baseline refresh
+            // keeps the bound.
+            fields.push(("shard_migrate_steps", steps.to_string()));
+            fields.push(("shard_migrate_state_bytes", bytes.to_string()));
+            fields.push(("shard_migrate_steps_max", "8".to_string()));
         }
         fields.push(("identical", identical.to_string()));
         let body = fields

@@ -36,7 +36,7 @@
 use super::wire::Conn;
 use std::collections::VecDeque;
 use std::io::{Error, ErrorKind, Read, Write};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -197,6 +197,9 @@ struct FaultState {
     rep_frames: AtomicUsize,
     connections: AtomicUsize,
     max_connections: usize,
+    /// Set by [`FaultInjectingTransport::kill`]: every future dial is
+    /// refused, modeling a worker host that is gone for good.
+    killed: AtomicBool,
     /// Frame bytes actually delivered across both directions (length
     /// prefixes included; dropped/severed frames excluded, duplicates
     /// counted twice) — the `shard_wire_bytes` bench's meter.
@@ -367,6 +370,7 @@ impl FaultInjectingTransport {
                 rep_frames: AtomicUsize::new(0),
                 connections: AtomicUsize::new(0),
                 max_connections,
+                killed: AtomicBool::new(false),
                 bytes: AtomicU64::new(0),
             }),
             accept_tx: Mutex::new(tx),
@@ -378,6 +382,12 @@ impl FaultInjectingTransport {
     /// Driver side: open a new connection. Fails once the connection
     /// budget is exhausted or the worker loop is gone.
     pub fn dial(&self) -> std::io::Result<FaultConn> {
+        if self.state.killed.load(Ordering::SeqCst) {
+            return Err(Error::new(
+                ErrorKind::ConnectionRefused,
+                "fault transport: worker killed",
+            ));
+        }
         let n = self.state.connections.fetch_add(1, Ordering::SeqCst);
         if n >= self.state.max_connections {
             return Err(Error::new(
@@ -418,6 +428,16 @@ impl FaultInjectingTransport {
             .send(worker_end)
             .map_err(|_| Error::new(ErrorKind::NotConnected, "fault transport: worker gone"))?;
         Ok(driver_end)
+    }
+
+    /// Kill the transport: every future dial is refused, modeling a
+    /// worker host that is gone for good (a scripted [`FaultAction::Sever`]
+    /// is survivable by reconnecting; this is not). Connections already
+    /// open are untouched — the driver notices on its next reconnect.
+    /// `FleetControl::kill_worker` calls this on in-proc seats so a
+    /// dead seat can never be quietly revived through its old link.
+    pub fn kill(&self) {
+        self.state.killed.store(true, Ordering::SeqCst);
     }
 
     /// Worker side: the acceptor stream of incoming connections. Can be
@@ -556,6 +576,20 @@ mod tests {
         let (_driver, _worker) = pair(&t, &acc);
         let err = t.dial().expect_err("second dial must be refused");
         assert!(format!("{err}").contains("budget"), "{err}");
+    }
+
+    #[test]
+    fn killed_transport_refuses_new_dials() {
+        let t = FaultInjectingTransport::new(FaultScript::none());
+        let acc = t.take_acceptor().unwrap();
+        let (mut driver, mut worker) = pair(&t, &acc);
+        t.kill();
+        // The live connection still works …
+        wire::write_msg(&mut driver, &WireMsg::MemStats).unwrap();
+        assert_eq!(wire::read_msg(&mut worker).unwrap(), WireMsg::MemStats);
+        // … but no new one can be made, ever.
+        let err = t.dial().expect_err("dial after kill must be refused");
+        assert!(format!("{err}").contains("killed"), "{err}");
     }
 
     #[test]

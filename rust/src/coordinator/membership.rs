@@ -1,0 +1,495 @@
+//! Driver-side shard membership: epoch-numbered fleet views, the block
+//! assignment policy surface, and the latency-fed rebalancing
+//! controller behind the elastic fleet.
+//!
+//! The shard executor (`coordinator/shard.rs`) owns the wire plumbing;
+//! this module owns the *decisions*: which seat serves which blocks
+//! ([`FleetView`]), when a seat change bumps the fleet epoch, and when
+//! observed per-shard step latency justifies moving blocks
+//! ([`MembershipController::maybe_rebalance`]). Keeping the transitions
+//! here makes them unit-testable without a worker fleet — see the tests
+//! at the bottom for the join/leave/replace/rebalance contract.
+//!
+//! ## Determinism
+//!
+//! Assignment policies are pure functions of `(n_blocks, seats,
+//! weights)` and every transition is driver-initiated at a wire-quiescent
+//! point, so two runs that make the same membership decisions at the
+//! same steps produce bitwise-identical parameters. Block math is
+//! placement-independent: a block's update depends only on its own
+//! `(param, grad, ctx)` stream, never on which worker computes it.
+
+use anyhow::ensure;
+
+/// Default bounded failover budget: the journal keeps at most this many
+/// steps of replay history, so re-seating a replacement worker replays
+/// at most this many steps past the last state sync point.
+pub const DEFAULT_FAILOVER_BUDGET: u64 = 8;
+
+/// EWMA smoothing factor for per-shard step latency observations.
+const LATENCY_ALPHA: f64 = 0.3;
+
+/// Rebalance trigger: slowest/fastest seat EWMA ratio must exceed this
+/// before the controller proposes moving blocks.
+const REBALANCE_IMBALANCE: f64 = 1.5;
+
+// ---------------------------------------------------------------------------
+// Assignment policy.
+// ---------------------------------------------------------------------------
+
+/// Block-to-shard assignment policy. The contiguous balanced policy
+/// ([`ContiguousAssignment`]) is the default and is preserved bit-for-bit
+/// from the original free function; the rebalancer and the tests share
+/// this one surface.
+pub trait BlockAssignment: Send + Sync {
+    /// Partition `n_blocks` across `seats` shards. Every block index in
+    /// `0..n_blocks` must appear exactly once; each seat's list must be
+    /// an ascending contiguous run (the wire layer's reply validation
+    /// depends on contiguity).
+    fn assign(&self, n_blocks: usize, seats: usize) -> Vec<Vec<usize>>;
+
+    /// Re-partition under per-seat weights (higher weight → more
+    /// blocks; the controller feeds `1 / latency`). The default ignores
+    /// the weights and falls back to [`BlockAssignment::assign`].
+    fn rebalance(&self, n_blocks: usize, seats: usize, weights: &[f64]) -> Vec<Vec<usize>> {
+        let _ = weights;
+        self.assign(n_blocks, seats)
+    }
+}
+
+/// Deterministic contiguous block partition: seat `s` owns a balanced
+/// run of consecutive block indices (earlier seats take the remainder).
+/// `assign` is bit-for-bit the historical `assign_blocks` policy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ContiguousAssignment;
+
+impl BlockAssignment for ContiguousAssignment {
+    fn assign(&self, n_blocks: usize, seats: usize) -> Vec<Vec<usize>> {
+        assert!(seats >= 1, "assign_blocks requires at least one shard");
+        let base = n_blocks / seats;
+        let extra = n_blocks % seats;
+        let mut out = Vec::with_capacity(seats);
+        let mut next = 0;
+        for s in 0..seats {
+            let take = base + usize::from(s < extra);
+            out.push((next..next + take).collect());
+            next += take;
+        }
+        out
+    }
+
+    /// Weighted contiguous partition via largest-remainder quotas:
+    /// seat `s` gets `round(n * w_s / Σw)` blocks (floors first, the
+    /// remainder goes to the largest fractional parts, ties to lower
+    /// seat index), still as consecutive runs in seat order. Degenerate
+    /// weights (non-finite, non-positive, or empty) fall back to the
+    /// balanced partition.
+    fn rebalance(&self, n_blocks: usize, seats: usize, weights: &[f64]) -> Vec<Vec<usize>> {
+        assert!(seats >= 1, "rebalance requires at least one shard");
+        let usable = weights.len() == seats
+            && weights.iter().all(|w| w.is_finite() && *w > 0.0)
+            && weights.iter().sum::<f64>() > 0.0;
+        if !usable {
+            return self.assign(n_blocks, seats);
+        }
+        let total: f64 = weights.iter().sum();
+        let mut quota: Vec<usize> = Vec::with_capacity(seats);
+        let mut frac: Vec<(usize, f64)> = Vec::with_capacity(seats);
+        let mut assigned = 0usize;
+        for (s, w) in weights.iter().enumerate() {
+            let exact = n_blocks as f64 * w / total;
+            let floor = exact.floor() as usize;
+            quota.push(floor);
+            frac.push((s, exact - floor as f64));
+            assigned += floor;
+        }
+        // Largest fractional remainder first; ties go to the lower seat
+        // index so the result is deterministic.
+        frac.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+        });
+        for (s, _) in frac.iter().take(n_blocks.saturating_sub(assigned)) {
+            quota[*s] += 1;
+        }
+        let mut out = Vec::with_capacity(seats);
+        let mut next = 0;
+        for take in quota {
+            out.push((next..next + take).collect());
+            next += take;
+        }
+        debug_assert_eq!(next, n_blocks);
+        out
+    }
+}
+
+/// Validate an assignment for wire use: every block in `0..n_blocks`
+/// exactly once, each seat an ascending contiguous run.
+pub fn validate_assignment(assignment: &[Vec<usize>], n_blocks: usize) -> anyhow::Result<()> {
+    let mut next = 0usize;
+    for (s, owned) in assignment.iter().enumerate() {
+        for &b in owned {
+            ensure!(
+                b == next,
+                "assignment for seat {s} is not a contiguous in-order partition (block {b}, expected {next})"
+            );
+            next += 1;
+        }
+    }
+    ensure!(next == n_blocks, "assignment covers {next} of {n_blocks} blocks");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fleet view.
+// ---------------------------------------------------------------------------
+
+/// Epoch-numbered view of the shard fleet: which seat serves which
+/// blocks, and how many times each seat has been re-seated. Every
+/// membership change (join, leave, replace, effective rebalance) bumps
+/// `epoch`; a no-op rebalance does not. The epoch is carried on the
+/// wire in the v5 `Adopt` handshake so a replacement worker is seated
+/// into a specific view.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FleetView {
+    /// Monotone view counter; 0 is the construction-time view.
+    pub epoch: u64,
+    /// Blocks served per seat (contiguous runs, in seat order).
+    pub assignment: Vec<Vec<usize>>,
+    /// Per-seat incarnation: bumped each time the seat's worker is
+    /// replaced, so late frames from a dead incarnation are
+    /// distinguishable in logs and tests.
+    pub incarnations: Vec<u32>,
+}
+
+impl FleetView {
+    /// Construction-time view (epoch 0, incarnation 0 everywhere).
+    pub fn new(assignment: Vec<Vec<usize>>) -> FleetView {
+        let seats = assignment.len();
+        FleetView { epoch: 0, assignment, incarnations: vec![0; seats] }
+    }
+
+    /// Number of seats (including currently-empty ones).
+    pub fn seats(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// A new seat joins with no blocks (a later rebalance moves work
+    /// onto it). Returns the new seat index.
+    pub fn join(&mut self) -> usize {
+        self.assignment.push(Vec::new());
+        self.incarnations.push(0);
+        self.epoch += 1;
+        self.assignment.len() - 1
+    }
+
+    /// Seat `seat` leaves the fleet: its blocks are orphaned (returned
+    /// to the caller for reassignment) and the seat is retired in
+    /// place — seat indices are stable, a retired seat just serves
+    /// nothing until a rebalance or replace re-seats it.
+    pub fn leave(&mut self, seat: usize) -> Vec<usize> {
+        let orphaned = std::mem::take(&mut self.assignment[seat]);
+        self.epoch += 1;
+        orphaned
+    }
+
+    /// Seat `seat`'s worker is replaced by a fresh one serving the same
+    /// blocks: incarnation and epoch bump, assignment unchanged.
+    pub fn replace(&mut self, seat: usize) -> u64 {
+        self.incarnations[seat] += 1;
+        self.epoch += 1;
+        self.epoch
+    }
+
+    /// Install a new assignment. A no-op (identical assignment) leaves
+    /// the epoch unchanged and returns `false`.
+    pub fn rebalance(&mut self, assignment: Vec<Vec<usize>>) -> bool {
+        assert_eq!(
+            assignment.len(),
+            self.assignment.len(),
+            "rebalance cannot change the seat count"
+        );
+        if assignment == self.assignment {
+            return false;
+        }
+        self.assignment = assignment;
+        self.epoch += 1;
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Latency tracking + controller.
+// ---------------------------------------------------------------------------
+
+/// Per-seat step-latency EWMA, fed from the executor's step timing.
+#[derive(Clone, Debug)]
+pub struct LatencyTracker {
+    ewma: Vec<Option<f64>>,
+}
+
+impl LatencyTracker {
+    pub fn new(seats: usize) -> LatencyTracker {
+        LatencyTracker { ewma: vec![None; seats] }
+    }
+
+    /// Fold one observed per-step latency (nanoseconds) for `seat`.
+    pub fn observe(&mut self, seat: usize, nanos: f64) {
+        if !nanos.is_finite() || nanos <= 0.0 {
+            return;
+        }
+        let cell = &mut self.ewma[seat];
+        *cell = Some(match *cell {
+            Some(prev) => prev + LATENCY_ALPHA * (nanos - prev),
+            None => nanos,
+        });
+    }
+
+    /// Forget a seat's history (its worker was replaced).
+    pub fn reset_seat(&mut self, seat: usize) {
+        self.ewma[seat] = None;
+    }
+
+    /// Slowest/fastest EWMA ratio, once every seat has been observed.
+    pub fn imbalance(&self) -> Option<f64> {
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for cell in &self.ewma {
+            let v = (*cell)?;
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo > 0.0 && hi.is_finite()).then(|| hi / lo)
+    }
+
+    /// Per-seat rebalance weights (`1 / latency`), once every seat has
+    /// been observed.
+    pub fn weights(&self) -> Option<Vec<f64>> {
+        self.ewma.iter().map(|c| c.map(|v| 1.0 / v)).collect()
+    }
+}
+
+/// Elastic-fleet knobs, resolved from `--shard-spares` / `--rebalance`
+/// and the `[shard]` config section.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MembershipConfig {
+    /// Warm spare workers kept idle for failover. 0 disables elastic
+    /// failover: a dead worker is a named, terminal error (the
+    /// historical behavior).
+    pub spares: usize,
+    /// Enable latency-fed block rebalancing at state sync points.
+    pub rebalance: bool,
+    /// Journal depth / maximum replay length for a migration (steps).
+    pub failover_budget: u64,
+}
+
+impl Default for MembershipConfig {
+    fn default() -> Self {
+        MembershipConfig { spares: 0, rebalance: false, failover_budget: DEFAULT_FAILOVER_BUDGET }
+    }
+}
+
+impl MembershipConfig {
+    /// Whether any elastic machinery (journaling, sync snapshots,
+    /// migration) should be active at all.
+    pub fn elastic(&self) -> bool {
+        self.spares > 0 || self.rebalance
+    }
+}
+
+/// Driver-side membership controller: owns the fleet view, the latency
+/// tracker, and the rebalance policy, and answers the executor's
+/// "should anything change?" questions at sync points.
+pub struct MembershipController {
+    pub cfg: MembershipConfig,
+    pub view: FleetView,
+    latency: LatencyTracker,
+    policy: Box<dyn BlockAssignment>,
+    /// Weights staged by an explicit `FleetControl::request_rebalance`,
+    /// consumed at the next sync point.
+    staged: Option<Vec<f64>>,
+}
+
+impl MembershipController {
+    pub fn new(cfg: MembershipConfig, assignment: Vec<Vec<usize>>) -> MembershipController {
+        let seats = assignment.len();
+        MembershipController {
+            cfg,
+            view: FleetView::new(assignment),
+            latency: LatencyTracker::new(seats),
+            policy: Box::new(ContiguousAssignment),
+            staged: None,
+        }
+    }
+
+    /// Fold one per-seat step latency observation.
+    pub fn observe_step_latency(&mut self, seat: usize, nanos: f64) {
+        self.latency.observe(seat, nanos);
+    }
+
+    /// Stage an explicit rebalance (tests and operators): applied at
+    /// the next sync point regardless of the imbalance trigger.
+    pub fn stage_rebalance(&mut self, weights: Vec<f64>) {
+        self.staged = Some(weights);
+    }
+
+    /// Record a seat replacement: bumps the epoch + incarnation and
+    /// forgets the dead worker's latency history. Returns the new epoch.
+    pub fn on_replace(&mut self, seat: usize) -> u64 {
+        self.latency.reset_seat(seat);
+        self.view.replace(seat)
+    }
+
+    /// Called at a wire-quiescent sync point: propose a new assignment
+    /// if one is justified (an explicitly staged rebalance, or the
+    /// latency imbalance trigger when `--rebalance` is on). Returns
+    /// `None` when nothing should move; an accepted proposal must be
+    /// installed with [`FleetView::rebalance`] by the caller *after*
+    /// the state migration succeeds.
+    pub fn maybe_rebalance(&mut self, n_blocks: usize) -> Option<Vec<Vec<usize>>> {
+        let weights = match self.staged.take() {
+            Some(w) => w,
+            None => {
+                if !self.cfg.rebalance {
+                    return None;
+                }
+                if self.latency.imbalance()? < REBALANCE_IMBALANCE {
+                    return None;
+                }
+                self.latency.weights()?
+            }
+        };
+        let seats = self.view.seats();
+        let proposal = self.policy.rebalance(n_blocks, seats, &weights);
+        if validate_assignment(&proposal, n_blocks).is_err() || proposal == self.view.assignment {
+            return None;
+        }
+        Some(proposal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_assignment_matches_historical_policy() {
+        let p = ContiguousAssignment;
+        assert_eq!(p.assign(10, 3), vec![vec![0, 1, 2, 3], vec![4, 5, 6], vec![7, 8, 9]]);
+        assert_eq!(p.assign(2, 4), vec![vec![0], vec![1], vec![], vec![]]);
+        assert_eq!(p.assign(6, 2), vec![vec![0, 1, 2], vec![3, 4, 5]]);
+        validate_assignment(&p.assign(10, 3), 10).unwrap();
+    }
+
+    #[test]
+    fn weighted_rebalance_is_contiguous_and_weight_proportional() {
+        let p = ContiguousAssignment;
+        // Seat 0 twice as fast as seat 1 → twice the blocks.
+        let a = p.rebalance(9, 2, &[2.0, 1.0]);
+        assert_eq!(a, vec![(0..6).collect::<Vec<_>>(), (6..9).collect::<Vec<_>>()]);
+        validate_assignment(&a, 9).unwrap();
+        // Degenerate weights fall back to the balanced partition.
+        assert_eq!(p.rebalance(10, 3, &[0.0, 1.0, 1.0]), p.assign(10, 3));
+        assert_eq!(p.rebalance(10, 3, &[f64::NAN, 1.0, 1.0]), p.assign(10, 3));
+        assert_eq!(p.rebalance(10, 2, &[1.0]), p.assign(10, 2));
+        // Equal weights reproduce the balanced partition exactly.
+        assert_eq!(p.rebalance(10, 3, &[1.0, 1.0, 1.0]), p.assign(10, 3));
+    }
+
+    #[test]
+    fn fleet_view_join_transition_bumps_epoch() {
+        let mut v = FleetView::new(vec![vec![0, 1], vec![2, 3]]);
+        assert_eq!(v.epoch, 0);
+        let seat = v.join();
+        assert_eq!(seat, 2);
+        assert_eq!(v.epoch, 1);
+        assert_eq!(v.seats(), 3);
+        assert!(v.assignment[2].is_empty());
+        assert_eq!(v.incarnations, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn fleet_view_leave_transition_orphans_blocks() {
+        let mut v = FleetView::new(vec![vec![0, 1], vec![2, 3]]);
+        let orphaned = v.leave(1);
+        assert_eq!(orphaned, vec![2, 3]);
+        assert_eq!(v.epoch, 1);
+        // Seat indices are stable: the seat stays, empty.
+        assert_eq!(v.seats(), 2);
+        assert!(v.assignment[1].is_empty());
+    }
+
+    #[test]
+    fn fleet_view_replace_transition_bumps_incarnation_not_assignment() {
+        let mut v = FleetView::new(vec![vec![0, 1], vec![2, 3]]);
+        let epoch = v.replace(0);
+        assert_eq!(epoch, 1);
+        assert_eq!(v.epoch, 1);
+        assert_eq!(v.incarnations, vec![1, 0]);
+        assert_eq!(v.assignment, vec![vec![0, 1], vec![2, 3]]);
+        let epoch = v.replace(0);
+        assert_eq!(epoch, 2);
+        assert_eq!(v.incarnations, vec![2, 0]);
+    }
+
+    #[test]
+    fn fleet_view_rebalance_noop_keeps_epoch() {
+        let mut v = FleetView::new(vec![vec![0, 1], vec![2, 3]]);
+        assert!(!v.rebalance(vec![vec![0, 1], vec![2, 3]]));
+        assert_eq!(v.epoch, 0);
+        assert!(v.rebalance(vec![vec![0, 1, 2], vec![3]]));
+        assert_eq!(v.epoch, 1);
+    }
+
+    #[test]
+    fn latency_tracker_feeds_rebalance_trigger() {
+        let mut c = MembershipController::new(
+            MembershipConfig { spares: 0, rebalance: true, failover_budget: 8 },
+            ContiguousAssignment.assign(8, 2),
+        );
+        // No observations yet → no proposal.
+        assert!(c.maybe_rebalance(8).is_none());
+        // Balanced latencies → imbalance below trigger → no proposal.
+        for _ in 0..8 {
+            c.observe_step_latency(0, 1_000.0);
+            c.observe_step_latency(1, 1_100.0);
+        }
+        assert!(c.maybe_rebalance(8).is_none());
+        // Seat 1 three times slower → proposal shifts blocks to seat 0.
+        for _ in 0..32 {
+            c.observe_step_latency(1, 3_000.0);
+        }
+        let proposal = c.maybe_rebalance(8).expect("imbalance above trigger");
+        assert!(proposal[0].len() > proposal[1].len());
+        validate_assignment(&proposal, 8).unwrap();
+    }
+
+    #[test]
+    fn staged_rebalance_bypasses_trigger_and_rebalance_flag() {
+        let mut c = MembershipController::new(
+            MembershipConfig { spares: 1, rebalance: false, failover_budget: 8 },
+            ContiguousAssignment.assign(8, 2),
+        );
+        c.stage_rebalance(vec![3.0, 1.0]);
+        let proposal = c.maybe_rebalance(8).expect("staged rebalance always proposes");
+        assert_eq!(proposal, vec![(0..6).collect::<Vec<_>>(), (6..8).collect::<Vec<_>>()]);
+        // Consumed: a second call with no staging and rebalance off → None.
+        assert!(c.maybe_rebalance(8).is_none());
+    }
+
+    #[test]
+    fn replace_resets_latency_history() {
+        let mut c = MembershipController::new(
+            MembershipConfig { spares: 1, rebalance: true, failover_budget: 8 },
+            ContiguousAssignment.assign(8, 2),
+        );
+        for _ in 0..16 {
+            c.observe_step_latency(0, 1_000.0);
+            c.observe_step_latency(1, 9_000.0);
+        }
+        let epoch = c.on_replace(1);
+        assert_eq!(epoch, 1);
+        assert_eq!(c.view.incarnations, vec![0, 1]);
+        // Seat 1's history is gone → weights unavailable → no proposal.
+        assert!(c.maybe_rebalance(8).is_none());
+    }
+}

@@ -17,6 +17,7 @@
 
 pub mod allreduce;
 pub mod fault;
+pub mod membership;
 pub mod pipeline;
 pub mod shard;
 pub mod wire;
@@ -24,6 +25,10 @@ pub mod worker;
 
 pub use allreduce::{tree_allreduce, AllreduceStats};
 pub use fault::{FaultAction, FaultInjectingTransport, FaultScript};
+pub use membership::{
+    BlockAssignment, ContiguousAssignment, FleetView, LatencyTracker, MembershipConfig,
+    MembershipController,
+};
 pub use pipeline::BoundedQueue;
-pub use shard::{ShardConfig, ShardExecutor, ShardLaunch, ShardTransport};
+pub use shard::{FleetControl, ShardConfig, ShardExecutor, ShardLaunch, ShardTransport};
 pub use worker::{data_parallel_step, GradientWorker, StepResult};

@@ -74,8 +74,31 @@
 //! this for N ∈ {2, 4}, including under scripted transport faults via
 //! [`super::fault::FaultInjectingTransport`] and
 //! [`ShardExecutor::launch_in_proc`]).
+//!
+//! ## Elastic membership (protocol v5)
+//!
+//! With `--shard-spares`/`--rebalance` the fleet becomes **elastic**: a
+//! [`MembershipController`] (see [`super::membership`]) keeps an
+//! epoch-numbered fleet view, the driver journals each step's block
+//! payloads between bounded-budget sync points (driver-side
+//! [`WireMsg::StateSnap`] snapshots every `failover_budget` steps), and
+//! a dead worker is healed in place: a warm spare is adopted onto the
+//! vacant seat ([`WireMsg::Adopt`] re-seats its identity under the new
+//! epoch), re-initialized, restored from the last-acked snapshot, and
+//! replayed through the journal — at most `failover_budget` steps — so
+//! the fleet's math stays **bitwise identical** to an uninterrupted run
+//! with exact refresh accounting. Delta-codec baselines resync on the
+//! fresh link automatically (full-frame resync, as after any
+//! reconnect). Optional latency-fed rebalancing re-cuts the contiguous
+//! assignment at sync points only, migrating blocks over the same
+//! snapshot/restore path. Elastic control (kill, stats, staged
+//! rebalance) lives on the [`FleetControl`] handle.
 
 use super::fault::FaultInjectingTransport;
+use super::membership::{
+    validate_assignment, BlockAssignment, ContiguousAssignment, MembershipConfig,
+    MembershipController,
+};
 use super::wire::{
     self, bits_matrix, mat_bits, BlockPayload, BlockSpec, BlockStateMsg, Conn, DeltaMat, InitMsg,
     RefreshAheadMsg, RefreshAheadOkMsg, RefreshAheadOkV4Msg, StateExpect, StateRestoreMsg,
@@ -100,7 +123,7 @@ use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::process::{Child, ChildStdout, Command, Stdio};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -177,26 +200,67 @@ pub struct ShardConfig {
     /// remote hosts (e.g. over ssh) instead of exec-ing the local
     /// binary; see [`ShardLaunch`] for the placeholder grammar.
     pub launch: Option<String>,
+    /// Warm spare workers to keep on standby for elastic failover
+    /// (`--shard-spares`). 0 disables elastic membership unless
+    /// `rebalance` is set.
+    pub spares: usize,
+    /// Enable latency-fed block rebalancing at sync points
+    /// (`--rebalance`).
+    pub rebalance: bool,
+    /// Elastic failover budget: the driver snapshots worker state every
+    /// this many steps, bounding journal replay after a kill
+    /// (`--shard-failover-budget`).
+    pub failover_budget: u64,
 }
 
 impl Default for ShardConfig {
     fn default() -> Self {
+        let m = MembershipConfig::default();
         ShardConfig {
             shards: 0,
             transport: ShardTransport::Tcp,
             proto: PROTO_VERSION,
             compress: true,
             launch: None,
+            spares: m.spares,
+            rebalance: m.rebalance,
+            failover_budget: m.failover_budget,
         }
     }
 }
 
 impl ShardConfig {
+    /// Config keys the `[shard]` section understands; anything else is
+    /// a named error from [`ShardConfig::resolve`] (so a typo'd knob —
+    /// `shard.spare` for `shard.spares` — can't silently become a
+    /// no-op).
+    const KNOWN_KEYS: &'static [&'static str] = &[
+        "count",
+        "transport",
+        "proto",
+        "compress",
+        "launch",
+        "spares",
+        "rebalance",
+        "failover_budget",
+    ];
+
     /// Resolve from `--shards` / `--shard-transport` / `--shard-proto` /
-    /// `--shard-compress` / `--shard-launch` CLI flags with
+    /// `--shard-compress` / `--shard-launch` / `--shard-spares` /
+    /// `--rebalance` / `--shard-failover-budget` CLI flags with
     /// `shard.count` / `shard.transport` / `shard.proto` /
-    /// `shard.compress` / `shard.launch` config keys as fallback.
+    /// `shard.compress` / `shard.launch` / `shard.spares` /
+    /// `shard.rebalance` / `shard.failover_budget` config keys as
+    /// fallback. Unknown `[shard]` keys are a named error.
     pub fn resolve(args: &Args, cfg: &Config) -> anyhow::Result<ShardConfig> {
+        for key in cfg.section_keys("shard") {
+            let bare = key.strip_prefix("shard.").unwrap_or(&key);
+            ensure!(
+                Self::KNOWN_KEYS.contains(&bare),
+                "unknown [shard] config key {key:?} (known keys: {})",
+                Self::KNOWN_KEYS.join(", ")
+            );
+        }
         let d = ShardConfig::default();
         let shards = args.get_usize("shards", cfg.usize_or("shard.count", d.shards));
         let transport = match args.get("shard-transport") {
@@ -221,12 +285,43 @@ impl ShardConfig {
                 (!s.trim().is_empty()).then_some(s)
             }
         };
-        Ok(ShardConfig { shards, transport, proto, compress, launch })
+        let spares = args.get_usize("shard-spares", cfg.usize_or("shard.spares", d.spares));
+        let rebalance = args.get_bool("rebalance", cfg.bool_or("shard.rebalance", d.rebalance));
+        let failover_budget = args.get_u64(
+            "shard-failover-budget",
+            cfg.usize_or("shard.failover_budget", d.failover_budget as usize) as u64,
+        );
+        ensure!(failover_budget >= 1, "--shard-failover-budget must be >= 1");
+        if (spares > 0 || rebalance) && proto < 5 {
+            bail!(
+                "elastic membership (--shard-spares/--rebalance) needs wire protocol v5, \
+                 but --shard-proto pins v{proto}"
+            );
+        }
+        Ok(ShardConfig {
+            shards,
+            transport,
+            proto,
+            compress,
+            launch,
+            spares,
+            rebalance,
+            failover_budget,
+        })
     }
 
     /// Whether cross-process sharding is requested.
     pub fn enabled(&self) -> bool {
         self.shards >= 1
+    }
+
+    /// The elastic-membership slice of these knobs.
+    pub fn membership(&self) -> MembershipConfig {
+        MembershipConfig {
+            spares: self.spares,
+            rebalance: self.rebalance,
+            failover_budget: self.failover_budget,
+        }
     }
 }
 
@@ -324,18 +419,9 @@ fn render_launch_command(
 
 /// Deterministic contiguous block partition: shard `s` owns a balanced
 /// run of consecutive block indices (earlier shards take the remainder).
+#[deprecated(note = "use coordinator::membership::ContiguousAssignment (BlockAssignment trait)")]
 pub fn assign_blocks(n_blocks: usize, shards: usize) -> Vec<Vec<usize>> {
-    assert!(shards >= 1, "assign_blocks requires at least one shard");
-    let base = n_blocks / shards;
-    let extra = n_blocks % shards;
-    let mut out = Vec::with_capacity(shards);
-    let mut next = 0;
-    for s in 0..shards {
-        let take = base + usize::from(s < extra);
-        out.push((next..next + take).collect());
-        next += take;
-    }
-    out
+    ContiguousAssignment.assign(n_blocks, shards)
 }
 
 // ---------------------------------------------------------------------------
@@ -883,28 +969,49 @@ impl WorkerState {
 
 /// Serve one connection at wire protocol version `proto`. `Ok(true)`
 /// keeps the worker alive for further connections (reconnect support);
-/// `Ok(false)` means clean shutdown.
+/// `Ok(false)` means clean shutdown. `worker_id` is mutable because a
+/// v5 [`WireMsg::Adopt`] re-seats the worker's identity: a spare that
+/// adopts shard `s` greets future reconnects as `s`.
 fn handle_conn<S: Read + Write>(
     stream: &mut S,
     state: &mut Option<WorkerState>,
-    worker_id: u32,
+    worker_id: &mut u32,
     proto: u32,
 ) -> anyhow::Result<bool> {
+    let wid = *worker_id;
     if proto <= 1 {
         // Legacy greeting: no capability report — the driver keeps this
         // shard's refreshes synchronous and its payloads full-frame.
-        wire::write_msg(stream, &WireMsg::Hello { worker_id })?;
+        wire::write_msg(stream, &WireMsg::Hello { worker_id: wid })?;
     } else if proto == 2 {
-        wire::write_msg(stream, &WireMsg::HelloV2 { worker_id, proto, overlap: true })?;
+        wire::write_msg(stream, &WireMsg::HelloV2 { worker_id: wid, proto, overlap: true })?;
     } else if proto == 3 {
         wire::write_msg(
             stream,
-            &WireMsg::HelloV3 { worker_id, proto, overlap: true, compress: true },
+            &WireMsg::HelloV3 { worker_id: wid, proto, overlap: true, compress: true },
+        )?;
+    } else if proto == 4 {
+        wire::write_msg(
+            stream,
+            &WireMsg::HelloV4 {
+                worker_id: wid,
+                proto,
+                overlap: true,
+                compress: true,
+                state: true,
+            },
         )?;
     } else {
         wire::write_msg(
             stream,
-            &WireMsg::HelloV4 { worker_id, proto, overlap: true, compress: true, state: true },
+            &WireMsg::HelloV5 {
+                worker_id: wid,
+                proto,
+                overlap: true,
+                compress: true,
+                state: true,
+                member: true,
+            },
         )?;
     }
     loop {
@@ -1090,6 +1197,24 @@ fn handle_conn<S: Read + Write>(
                 };
                 wire::write_msg(stream, &reply)?;
             }
+            WireMsg::Adopt { epoch, shard } => {
+                let reply = if proto < 5 {
+                    WireMsg::Error {
+                        message: format!(
+                            "membership adoption unsupported at wire protocol v{proto}"
+                        ),
+                    }
+                } else {
+                    // Re-seat this worker's identity: drop any block
+                    // state from a previous seat (the driver re-inits
+                    // and restores), and greet future reconnects with
+                    // the adopted shard id.
+                    *worker_id = shard;
+                    *state = None;
+                    WireMsg::AdoptOk { epoch, shard }
+                };
+                wire::write_msg(stream, &reply)?;
+            }
             WireMsg::MemStats => {
                 let reply = match state.as_mut() {
                     None => WireMsg::MemStatsOk { mem_bytes: 0, second_moment_bytes: 0 },
@@ -1128,7 +1253,7 @@ fn announce(detail: &str) -> anyhow::Result<()> {
 /// (pre-RefreshAhead) handshake so degraded-mode deployments stay
 /// testable end to end.
 pub fn serve_worker(args: &Args) -> anyhow::Result<()> {
-    let worker_id = args.get_usize("worker-id", 0) as u32;
+    let mut worker_id = args.get_usize("worker-id", 0) as u32;
     let transport = ShardTransport::parse(&args.get_or("transport", "tcp"))?;
     let proto = args.get_usize("proto-version", PROTO_VERSION as usize) as u32;
     ensure!(
@@ -1159,7 +1284,7 @@ pub fn serve_worker(args: &Args) -> anyhow::Result<()> {
                         continue;
                     }
                 };
-                match handle_conn(&mut stream, &mut state, worker_id, proto) {
+                match handle_conn(&mut stream, &mut state, &mut worker_id, proto) {
                     Ok(true) => continue,
                     Ok(false) => break,
                     Err(e) => {
@@ -1191,7 +1316,7 @@ pub fn serve_worker(args: &Args) -> anyhow::Result<()> {
                         continue;
                     }
                 };
-                match handle_conn(&mut stream, &mut state, worker_id, proto) {
+                match handle_conn(&mut stream, &mut state, &mut worker_id, proto) {
                     Ok(true) => continue,
                     Ok(false) => break,
                     Err(e) => {
@@ -1235,6 +1360,9 @@ struct ShardChannel {
     /// Typed block-state capability (v4 `HelloV4` only): the worker
     /// serves `StepV4`/`StateSnap`/`StateRestore` frames.
     state: bool,
+    /// Membership capability (v5 `HelloV5` only): the worker serves
+    /// `Adopt` frames and can be re-seated as another shard.
+    member: bool,
     /// Bumped on every successful (re)connect — the delta codec
     /// compares it against the generation its baselines were taken on
     /// and resyncs with full frames after any reconnect.
@@ -1254,6 +1382,7 @@ impl ShardChannel {
             overlap: false,
             compress: false,
             state: false,
+            member: false,
             generation: 0,
             pending_refresh: None,
         }
@@ -1270,6 +1399,7 @@ impl ShardChannel {
                 self.overlap = false;
                 self.compress = false;
                 self.state = false;
+                self.member = false;
             }
             WireMsg::HelloV2 { worker_id, proto, overlap }
                 if worker_id as usize == self.shard =>
@@ -1278,6 +1408,7 @@ impl ShardChannel {
                 self.overlap = overlap;
                 self.compress = false;
                 self.state = false;
+                self.member = false;
             }
             WireMsg::HelloV3 { worker_id, proto, overlap, compress }
                 if worker_id as usize == self.shard =>
@@ -1286,6 +1417,7 @@ impl ShardChannel {
                 self.overlap = overlap;
                 self.compress = compress;
                 self.state = false;
+                self.member = false;
             }
             WireMsg::HelloV4 { worker_id, proto, overlap, compress, state }
                 if worker_id as usize == self.shard =>
@@ -1294,15 +1426,62 @@ impl ShardChannel {
                 self.overlap = overlap;
                 self.compress = compress;
                 self.state = state;
+                self.member = false;
+            }
+            WireMsg::HelloV5 { worker_id, proto, overlap, compress, state, member }
+                if worker_id as usize == self.shard =>
+            {
+                self.proto = proto;
+                self.overlap = overlap;
+                self.compress = compress;
+                self.state = state;
+                self.member = member;
             }
             WireMsg::Hello { worker_id }
             | WireMsg::HelloV2 { worker_id, .. }
             | WireMsg::HelloV3 { worker_id, .. }
-            | WireMsg::HelloV4 { worker_id, .. } => {
+            | WireMsg::HelloV4 { worker_id, .. }
+            | WireMsg::HelloV5 { worker_id, .. } => {
                 bail!("worker identity mismatch: got {worker_id}, want {}", self.shard)
             }
             other => bail!("expected hello, got {other:?}"),
         }
+        self.conn = Some(conn);
+        self.generation += 1;
+        Ok(())
+    }
+
+    /// Re-seat this channel onto `shard` by adopting the worker on the
+    /// other end (a warm spare): dial, expect a v5 membership-capable
+    /// greeting under *any* identity, and hand the worker its new seat
+    /// via [`WireMsg::Adopt`]. On success the channel's identity checks,
+    /// reply caches, and delta baselines all start fresh.
+    fn adopt(&mut self, shard: usize, epoch: u64) -> anyhow::Result<()> {
+        self.conn = None;
+        self.last_req.clear();
+        self.pending_refresh = None;
+        let mut conn = (self.dial)()?;
+        let _ = conn.set_timeout(Some(REPLY_TIMEOUT));
+        match wire::read_msg(&mut conn).context("read spare hello")? {
+            WireMsg::HelloV5 { proto, overlap, compress, state, member: true, .. } => {
+                self.proto = proto;
+                self.overlap = overlap;
+                self.compress = compress;
+                self.state = state;
+                self.member = true;
+            }
+            other => bail!(
+                "elastic failover needs a wire protocol v5 membership-capable spare, \
+                 got {other:?}"
+            ),
+        }
+        let msg = WireMsg::Adopt { epoch, shard: shard as u32 };
+        wire::write_msg(&mut conn, &msg).context("send adopt")?;
+        match wire::read_msg(&mut conn).context("adopt reply")? {
+            WireMsg::AdoptOk { epoch: e, shard: s } if e == epoch && s == shard as u32 => {}
+            other => bail!("adopt reply mismatch: {other:?}"),
+        }
+        self.shard = shard;
         self.conn = Some(conn);
         self.generation += 1;
         Ok(())
@@ -1384,6 +1563,10 @@ enum WorkerBackend {
     },
     InProc {
         join: Option<JoinHandle<()>>,
+        /// The seat's fault transport, kept so `kill_worker` can refuse
+        /// future dials at the link layer — a killed in-proc seat must
+        /// not be quietly revivable through its old link.
+        transport: Arc<FaultInjectingTransport>,
     },
 }
 
@@ -1482,7 +1665,7 @@ impl Drop for WorkerHandle {
                 #[cfg(not(unix))]
                 let _ = addr;
             }
-            WorkerBackend::InProc { join } => {
+            WorkerBackend::InProc { join, .. } => {
                 if graceful {
                     if let Some(j) = join.take() {
                         let _ = j.join();
@@ -1616,11 +1799,206 @@ fn split_thread_budget(threads: usize, shards: usize) -> usize {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Elastic fleet bookkeeping.
+// ---------------------------------------------------------------------------
+
+/// Cumulative elastic-fleet event counters, readable through
+/// [`FleetControl::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FleetStats {
+    /// Seats migrated to a replacement worker.
+    pub migrations: usize,
+    /// Journal steps replayed across all migrations.
+    pub migrated_steps: usize,
+    /// Encoded bytes of `StateRestore` frames shipped during migrations.
+    pub migrated_state_bytes: usize,
+    /// Assignment re-cuts applied at sync points.
+    pub rebalances: usize,
+}
+
+/// Shared driver-side fleet flags: which seats are known dead, the
+/// current membership epoch, staged rebalance weights, and the event
+/// counters. Shared (`Arc`) between the executor and any number of
+/// [`FleetControl`] handles.
+struct FleetFlags {
+    dead: Mutex<Vec<bool>>,
+    epoch: AtomicU64,
+    staged: Mutex<Option<Vec<f64>>>,
+    stats: Mutex<FleetStats>,
+}
+
+impl FleetFlags {
+    fn new(seats: usize) -> FleetFlags {
+        FleetFlags {
+            dead: Mutex::new(vec![false; seats]),
+            epoch: AtomicU64::new(0),
+            staged: Mutex::new(None),
+            stats: Mutex::new(FleetStats::default()),
+        }
+    }
+
+    /// Flag reads/writes must survive a poisoned-by-panic lock: the
+    /// flags are plain values with no invariants spanning the lock.
+    fn is_dead(&self, seat: usize) -> bool {
+        let dead = self.dead.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        dead.get(seat).copied().unwrap_or(false)
+    }
+
+    fn set_dead(&self, seat: usize, val: bool) {
+        let mut dead = self.dead.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(d) = dead.get_mut(seat) {
+            *d = val;
+        }
+    }
+
+    fn dead_seats(&self) -> Vec<usize> {
+        let dead = self.dead.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        dead.iter().enumerate().filter(|(_, d)| **d).map(|(s, _)| s).collect()
+    }
+
+    fn take_staged(&self) -> Option<Vec<f64>> {
+        self.staged.lock().unwrap_or_else(std::sync::PoisonError::into_inner).take()
+    }
+
+    fn bump_stats(&self, f: impl FnOnce(&mut FleetStats)) {
+        let mut stats = self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        f(&mut stats);
+    }
+}
+
+/// Cloneable control handle over a [`ShardExecutor`]'s fleet: fault
+/// injection (kill, drop connections), membership introspection
+/// (epoch, stats), and operator-staged rebalancing — usable while the
+/// executor itself is owned by an engine.
+#[derive(Clone)]
+pub struct FleetControl {
+    workers: Arc<Mutex<Vec<WorkerHandle>>>,
+    flags: Arc<FleetFlags>,
+}
+
+impl FleetControl {
+    /// Kill one worker: process workers are SIGKILLed, in-proc harness
+    /// workers have their link severed and their seat marked dead (the
+    /// harness thread idles unadopted). Under elastic membership the
+    /// next step migrates the seat to a spare; without it the next step
+    /// surfaces an error naming the shard.
+    pub fn kill_worker(&self, shard: usize) -> anyhow::Result<()> {
+        let mut workers =
+            self.workers.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let w = workers.get_mut(shard).ok_or_else(|| anyhow!("no shard {shard}"))?;
+        self.flags.set_dead(shard, true);
+        // A parked RefreshAhead on a dead seat can never be joined —
+        // drop the slot so the blocks stay refresh-due in-step.
+        w.channel.pending_refresh = None;
+        w.channel.conn = None;
+        match &mut w.backend {
+            WorkerBackend::Process { child, .. } => {
+                child.kill().context("kill worker")?;
+                let _ = child.wait();
+            }
+            WorkerBackend::InProc { transport, .. } => {
+                // Refuse future dials at the link layer too: the dead
+                // seat must not be revivable through its old transport.
+                transport.kill();
+            }
+        }
+        Ok(())
+    }
+
+    /// Fault injection for tests: drop every driver-side connection.
+    /// The next request reconnects transparently (workers keep state).
+    pub fn drop_connections(&self) {
+        let mut workers =
+            self.workers.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        for w in workers.iter_mut() {
+            w.channel.conn = None;
+        }
+    }
+
+    /// Current membership epoch (0 until the first replace/rebalance).
+    pub fn epoch(&self) -> u64 {
+        self.flags.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Cumulative elastic-fleet event counters.
+    pub fn stats(&self) -> FleetStats {
+        *self.flags.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Stage an explicit rebalance (per-seat weights; higher = more
+    /// blocks), applied at the executor's next sync point.
+    pub fn request_rebalance(&self, weights: Vec<f64>) {
+        let mut staged =
+            self.flags.staged.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        *staged = Some(weights);
+    }
+}
+
+/// One journaled step: everything needed to replay the step to a
+/// replacement worker as a plain (v1 full-frame) `Step` — per-block
+/// pre-step payload slices plus the *effective* refresh flags
+/// (`refresh_due` OR refreshed-ahead, so an in-step refresh on replay
+/// reproduces the ahead-refreshed roots bitwise).
+struct JournalStep {
+    t: u64,
+    scale: f64,
+    preconditioning: bool,
+    stat_due: bool,
+    lr: f64,
+    beta1: f64,
+    weight_decay: f64,
+    flags: Vec<bool>,
+    params: Vec<Matrix>,
+    grads: Vec<Matrix>,
+}
+
+/// Bounded migration journal: the driver's last-acked per-block state
+/// snapshots (taken every `failover_budget` steps at a wire-quiescent
+/// point) plus every step journaled since. A replacement worker is
+/// restored from `snaps` and replayed through `steps` — at most
+/// `failover_budget` of them.
+struct StepJournal {
+    /// Step whose post-step state `snaps` captures (0 = pre-training).
+    sync_t: u64,
+    /// Last-acked snapshot per global block (`None` until the first
+    /// sync point: a fresh Init *is* the t=0 state).
+    snaps: Option<Vec<BlockStateSnap>>,
+    steps: Vec<JournalStep>,
+}
+
+/// Per-seat accounting of the refresh-ahead joined for step `t_next`:
+/// which blocks were refreshed ahead, and how many each seat reported
+/// (already counted by the engine — a migrated seat's in-step replay
+/// refreshes must not be double-counted).
+struct AheadRecord {
+    t_next: u64,
+    refreshed: Vec<bool>,
+    counts: Vec<usize>,
+}
+
+/// Driver-side elastic runtime: membership controller, warm spares,
+/// the migration journal, and the last joined refresh-ahead record.
+struct ElasticRuntime {
+    controller: MembershipController,
+    spares: Vec<WorkerHandle>,
+    /// Launch plan for spawning replacement workers once the warm
+    /// spares run out (process fleets only; in-proc fleets are limited
+    /// to the transports handed in at launch).
+    launch: Option<ShardLaunch>,
+    /// Next `--worker-id` for a cold-spawned replacement.
+    next_spare_id: usize,
+    journal: StepJournal,
+    ahead: Option<AheadRecord>,
+}
+
 /// [`BlockExecutor`] driving blocks across worker processes (or
-/// in-process harness workers — see [`ShardExecutor::launch_in_proc`]).
+/// in-process harness workers — see [`ShardExecutor::launch_in_proc_with`]).
 pub struct ShardExecutor {
-    /// Mutex for interior mutability: `mem_bytes` RPCs through `&self`.
-    workers: Mutex<Vec<WorkerHandle>>,
+    /// Mutex for interior mutability (`mem_bytes` RPCs through `&self`);
+    /// Arc so [`FleetControl`] handles stay valid while an engine owns
+    /// the executor.
+    workers: Arc<Mutex<Vec<WorkerHandle>>>,
     /// shard → owned global block indices.
     assignment: Vec<Vec<usize>>,
     /// Total engine block count (sizes RefreshAhead flag vectors).
@@ -1640,16 +2018,24 @@ pub struct ShardExecutor {
     /// global block — returned state payloads are validated against
     /// this *before* any payload resolution allocates.
     expects: Vec<StateExpect>,
+    /// Construction facts needed to re-Init a migrated or rebalanced
+    /// seat without the original `&[Block]` slice.
+    kind: UnitKind,
+    base: ShampooConfig,
+    worker_threads: usize,
+    flags: Arc<FleetFlags>,
+    /// `Some` iff elastic membership was requested at launch.
+    elastic: Option<ElasticRuntime>,
 }
 
 /// Map a poisoned driver-side worker-table lock into the shard-failure
 /// error contract instead of an opaque `PoisonError` panic. The lock
 /// only poisons when an earlier panic tore through a worker RPC, so
 /// the table's consistency is unknown — step paths must refuse it.
-fn workers_mut(
-    workers: &mut Mutex<Vec<WorkerHandle>>,
-) -> anyhow::Result<&mut Vec<WorkerHandle>> {
-    workers.get_mut().map_err(|_| {
+fn workers_guard(
+    workers: &Mutex<Vec<WorkerHandle>>,
+) -> anyhow::Result<std::sync::MutexGuard<'_, Vec<WorkerHandle>>> {
+    workers.lock().map_err(|_| {
         anyhow!(
             "shard executor: worker table lock poisoned by an earlier panic \
              (a failed step is terminal; rebuild the engine and its workers)"
@@ -1657,20 +2043,55 @@ fn workers_mut(
     })
 }
 
+/// Build the Init message for a seat's owned blocks from the driver's
+/// own block table (shapes live in `expects`) — the migration/rebalance
+/// equivalent of `init_msg_for`, usable without the engine's `&[Block]`.
+fn init_msg_from_expects(
+    owned: &[usize],
+    expects: &[StateExpect],
+    kind: UnitKind,
+    base: &ShampooConfig,
+    worker_threads: usize,
+) -> WireMsg {
+    let specs: Vec<BlockSpec> = owned
+        .iter()
+        .map(|&i| BlockSpec {
+            index: i as u32,
+            rows: expects[i].rows as u32,
+            cols: expects[i].cols as u32,
+        })
+        .collect();
+    WireMsg::Init(InitMsg {
+        kind: kind.code(),
+        rank: kind.rank() as u32,
+        beta2: base.beta2,
+        eps: base.eps,
+        one_sided: base.one_sided,
+        graft: base.graft.code(),
+        threads: worker_threads as u32,
+        blocks: specs,
+    })
+}
+
 impl ShardExecutor {
     /// Spawn `launch.shards` workers (capped at the block count), assign
     /// contiguous block runs, and initialize each worker's states.
-    pub fn launch(
+    /// `membership` turns on the elastic fleet: `membership.spares`
+    /// extra workers are spawned warm (announced but uninitialized) and
+    /// the driver journals steps between bounded sync points so a dead
+    /// seat can be migrated deterministically.
+    pub fn launch_with(
         launch: &ShardLaunch,
         blocks: &[Block],
         kind: UnitKind,
         base: &ShampooConfig,
         threads: usize,
+        membership: &MembershipConfig,
     ) -> anyhow::Result<ShardExecutor> {
         ensure!(launch.shards >= 1, "shard launch requires at least one shard");
         ensure!(!blocks.is_empty(), "shard launch requires at least one block");
         let shards = launch.shards.min(blocks.len());
-        let assignment = assign_blocks(blocks.len(), shards);
+        let assignment = ContiguousAssignment.assign(blocks.len(), shards);
         let worker_threads = split_thread_budget(threads, shards);
         let mut workers = Vec::with_capacity(shards);
         for (shard, owned) in assignment.iter().enumerate() {
@@ -1679,14 +2100,65 @@ impl ShardExecutor {
             init_worker(&mut w, shard, &init_msg_for(owned, blocks, kind, base, worker_threads))?;
             workers.push(w);
         }
-        Ok(ShardExecutor::assemble(
+        let mut spares = Vec::with_capacity(membership.spares);
+        for k in 0..membership.spares {
+            let id = shards + k;
+            spares.push(
+                spawn_process_worker(launch, id)
+                    .with_context(|| format!("spare worker {id}: spawn"))?,
+            );
+        }
+        ShardExecutor::assemble(
             workers,
             assignment,
             blocks.len(),
             launch.transport.to_string(),
             launch.compress,
             expects_for(blocks, kind, base),
-        ))
+            kind,
+            base.clone(),
+            worker_threads,
+            membership,
+            spares,
+            Some(launch.clone()),
+        )
+    }
+
+    /// Non-elastic [`ShardExecutor::launch_with`].
+    #[deprecated(note = "use optim::ExecutorBuilder (or ShardExecutor::launch_with)")]
+    pub fn launch(
+        launch: &ShardLaunch,
+        blocks: &[Block],
+        kind: UnitKind,
+        base: &ShampooConfig,
+        threads: usize,
+    ) -> anyhow::Result<ShardExecutor> {
+        let membership = MembershipConfig::default();
+        ShardExecutor::launch_with(launch, blocks, kind, base, threads, &membership)
+    }
+
+    /// Non-elastic [`ShardExecutor::launch_in_proc_with`].
+    #[deprecated(note = "use optim::ExecutorBuilder (or ShardExecutor::launch_in_proc_with)")]
+    #[allow(clippy::too_many_arguments)]
+    pub fn launch_in_proc(
+        blocks: &[Block],
+        kind: UnitKind,
+        base: &ShampooConfig,
+        threads: usize,
+        transports: &[Arc<FaultInjectingTransport>],
+        proto: u32,
+        compress: bool,
+    ) -> anyhow::Result<ShardExecutor> {
+        ShardExecutor::launch_in_proc_with(
+            blocks,
+            kind,
+            base,
+            threads,
+            transports,
+            proto,
+            compress,
+            &MembershipConfig::default(),
+        )
     }
 
     /// Test/bench-facing variant of [`ShardExecutor::launch`]: shard
@@ -1701,8 +2173,11 @@ impl ShardExecutor {
     /// `compress` requests the v3 delta payload layer (inert below v3).
     /// This doubles as the scriptable in-test *launcher*: the same
     /// worker state machine the process/ssh launchers run, mounted on
-    /// threads over the fault harness.
-    pub fn launch_in_proc(
+    /// threads over the fault harness. Under elastic membership the
+    /// *last* `membership.spares` transports back warm spare workers
+    /// (announced, never initialized) instead of seats.
+    #[allow(clippy::too_many_arguments)]
+    pub fn launch_in_proc_with(
         blocks: &[Block],
         kind: UnitKind,
         base: &ShampooConfig,
@@ -1710,6 +2185,7 @@ impl ShardExecutor {
         transports: &[Arc<FaultInjectingTransport>],
         proto: u32,
         compress: bool,
+        membership: &MembershipConfig,
     ) -> anyhow::Result<ShardExecutor> {
         ensure!(!transports.is_empty(), "in-proc shard launch requires at least one transport");
         ensure!(!blocks.is_empty(), "shard launch requires at least one block");
@@ -1717,25 +2193,32 @@ impl ShardExecutor {
             (1..=PROTO_VERSION).contains(&proto),
             "unsupported wire protocol v{proto} (this build speaks v1..=v{PROTO_VERSION})"
         );
-        let shards = transports.len().min(blocks.len());
-        let assignment = assign_blocks(blocks.len(), shards);
+        ensure!(
+            transports.len() > membership.spares,
+            "in-proc shard launch: {} transports cannot cover {} spares plus at least one seat",
+            transports.len(),
+            membership.spares
+        );
+        let shards = (transports.len() - membership.spares).min(blocks.len());
+        let assignment = ContiguousAssignment.assign(blocks.len(), shards);
         let worker_threads = split_thread_budget(threads, shards);
-        let mut workers = Vec::with_capacity(shards);
-        for (shard, owned) in assignment.iter().enumerate() {
-            let transport = &transports[shard];
+        let mount = |slot: usize| -> anyhow::Result<WorkerHandle> {
+            let transport = &transports[slot];
             let acceptor = transport
                 .take_acceptor()
-                .ok_or_else(|| anyhow!("shard {shard}: transport acceptor already taken"))?;
-            let wid = shard as u32;
+                .ok_or_else(|| anyhow!("shard {slot}: transport acceptor already taken"))?;
+            let wid = slot as u32;
             let join = std::thread::Builder::new()
-                .name(format!("sketchy-inproc-shard-{shard}"))
+                .name(format!("sketchy-inproc-shard-{slot}"))
                 .spawn(move || {
                     // The serve loop of `serve_worker`, minus the socket:
                     // block state persists across connections, transport
-                    // errors leave the worker awaiting a redial.
+                    // errors leave the worker awaiting a redial. The
+                    // worker id is mutable — a v5 Adopt re-seats it.
+                    let mut wid = wid;
                     let mut state: Option<WorkerState> = None;
                     while let Ok(mut conn) = acceptor.recv() {
-                        match handle_conn(&mut conn, &mut state, wid, proto) {
+                        match handle_conn(&mut conn, &mut state, &mut wid, proto) {
                             Ok(true) => continue,
                             Ok(false) => break,
                             Err(e) => {
@@ -1750,36 +2233,54 @@ impl ShardExecutor {
                         }
                     }
                 })
-                .with_context(|| format!("shard {shard}: spawn in-proc worker"))?;
+                .with_context(|| format!("shard {slot}: spawn in-proc worker"))?;
             let dial_t = Arc::clone(transport);
             let channel = ShardChannel::new(
-                shard,
+                slot,
                 Box::new(move || {
                     let conn = dial_t.dial().context("dial in-proc transport")?;
                     Ok(Box::new(conn) as Box<dyn Conn>)
                 }),
             );
-            let mut w = WorkerHandle {
+            Ok(WorkerHandle {
                 channel,
-                backend: WorkerBackend::InProc { join: Some(join) },
+                backend: WorkerBackend::InProc {
+                    join: Some(join),
+                    transport: Arc::clone(transport),
+                },
                 delta: DeltaCodec::default(),
-            };
+            })
+        };
+        let mut workers = Vec::with_capacity(shards);
+        for (shard, owned) in assignment.iter().enumerate() {
+            let mut w = mount(shard)?;
             init_worker(&mut w, shard, &init_msg_for(owned, blocks, kind, base, worker_threads))?;
             workers.push(w);
         }
-        Ok(ShardExecutor::assemble(
+        let mut spares = Vec::with_capacity(membership.spares);
+        for k in 0..membership.spares {
+            spares.push(mount(shards + k)?);
+        }
+        ShardExecutor::assemble(
             workers,
             assignment,
             blocks.len(),
             "in-proc".to_string(),
             compress,
             expects_for(blocks, kind, base),
-        ))
+            kind,
+            base.clone(),
+            worker_threads,
+            membership,
+            spares,
+            None,
+        )
     }
 
     /// Shared tail of the launch paths: record the per-worker capability
-    /// reports (with a one-time notice for degraded workers) and build
-    /// the executor.
+    /// reports (with a one-time notice for degraded workers), stand up
+    /// the elastic runtime when requested, and build the executor.
+    #[allow(clippy::too_many_arguments)]
     fn assemble(
         workers: Vec<WorkerHandle>,
         assignment: Vec<Vec<usize>>,
@@ -1787,9 +2288,16 @@ impl ShardExecutor {
         transport: String,
         compress: bool,
         expects: Vec<StateExpect>,
-    ) -> ShardExecutor {
+        kind: UnitKind,
+        base: ShampooConfig,
+        worker_threads: usize,
+        membership: &MembershipConfig,
+        spares: Vec<WorkerHandle>,
+        launch: Option<ShardLaunch>,
+    ) -> anyhow::Result<ShardExecutor> {
         let overlap = workers.iter().all(|w| w.channel.overlap);
         let state = workers.iter().all(|w| w.channel.state);
+        let member = workers.iter().all(|w| w.channel.member);
         for w in &workers {
             if !w.channel.overlap {
                 // Neutral capability report: whether this *disables*
@@ -1804,8 +2312,28 @@ impl ShardExecutor {
                 );
             }
         }
-        ShardExecutor {
-            workers: Mutex::new(workers),
+        let elastic = if membership.elastic() {
+            ensure!(
+                member && state,
+                "elastic membership requires every worker link at wire protocol v5 \
+                 (a worker greeted below v5; drop --shard-spares/--rebalance or unpin \
+                 --shard-proto)"
+            );
+            let next_spare_id = workers.len() + spares.len();
+            Some(ElasticRuntime {
+                controller: MembershipController::new(membership.clone(), assignment.clone()),
+                spares,
+                launch,
+                next_spare_id,
+                journal: StepJournal { sync_t: 0, snaps: None, steps: Vec::new() },
+                ahead: None,
+            })
+        } else {
+            None
+        };
+        let seats = workers.len();
+        Ok(ShardExecutor {
+            workers: Arc::new(Mutex::new(workers)),
             assignment,
             n_blocks,
             transport,
@@ -1813,7 +2341,12 @@ impl ShardExecutor {
             compress,
             state,
             expects,
-        }
+            kind,
+            base,
+            worker_threads,
+            flags: Arc::new(FleetFlags::new(seats)),
+            elastic,
+        })
     }
 
     /// Worker process count actually launched.
@@ -1821,34 +2354,26 @@ impl ShardExecutor {
         self.assignment.len()
     }
 
-    /// Fault injection for tests: SIGKILL one worker process. The next
-    /// step surfaces an error naming the shard.
+    /// Control handle over this executor's fleet: kill/sever fault
+    /// injection, membership epoch + stats, staged rebalancing. Clones
+    /// stay valid while an engine owns the executor.
+    pub fn control(&self) -> FleetControl {
+        FleetControl { workers: Arc::clone(&self.workers), flags: Arc::clone(&self.flags) }
+    }
+
+    /// Fault injection for tests: kill one worker. The next step
+    /// surfaces an error naming the shard (or, under elastic
+    /// membership, migrates the seat to a spare).
+    #[deprecated(note = "use ShardExecutor::control() and FleetControl::kill_worker")]
     pub fn kill_worker(&mut self, shard: usize) -> anyhow::Result<()> {
-        let workers = workers_mut(&mut self.workers)?;
-        let w = workers
-            .get_mut(shard)
-            .ok_or_else(|| anyhow!("no shard {shard}"))?;
-        match &mut w.backend {
-            WorkerBackend::Process { child, .. } => {
-                child.kill().context("kill worker")?;
-                let _ = child.wait();
-                Ok(())
-            }
-            WorkerBackend::InProc { .. } => bail!(
-                "shard {shard} is an in-proc harness worker; script a Sever with a \
-                 connection budget on its FaultInjectingTransport instead"
-            ),
-        }
+        self.control().kill_worker(shard)
     }
 
     /// Fault injection for tests: drop every driver-side connection.
     /// The next request reconnects transparently (workers keep state).
+    #[deprecated(note = "use ShardExecutor::control() and FleetControl::drop_connections")]
     pub fn drop_connections(&mut self) {
-        // Recover from poisoning: this only clears connection handles.
-        let workers = self.workers.get_mut().unwrap_or_else(std::sync::PoisonError::into_inner);
-        for w in workers.iter_mut() {
-            w.channel.conn = None;
-        }
+        self.control().drop_connections()
     }
 
     fn mem_stats_total(&self) -> (usize, usize) {
@@ -1857,7 +2382,12 @@ impl ShardExecutor {
         let mut workers = self.workers.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut mem = 0usize;
         let mut second = 0usize;
-        for w in workers.iter_mut() {
+        for (seat, w) in workers.iter_mut().enumerate() {
+            // A killed seat awaiting migration has nothing to report
+            // (and an in-proc "killed" worker must not be dialed).
+            if self.flags.is_dead(seat) {
+                continue;
+            }
             // The wire is strict request/response outside the parked
             // RefreshAhead slot — join-and-discard it before any other
             // request.
@@ -1879,6 +2409,588 @@ impl ShardExecutor {
         }
         (mem, second)
     }
+}
+
+/// Encode one seat's step frame (delta-compressed when the link and the
+/// knob allow it), advancing the seat's delta-codec baselines. Factored
+/// out of `step_blocks` so the elastic paths share it verbatim.
+#[allow(clippy::too_many_arguments)]
+fn encode_step_msg(
+    w: &mut WorkerHandle,
+    owned: &[usize],
+    blocks: &[Block],
+    params: &[Matrix],
+    grads: &[Matrix],
+    ctxs: &[StepCtx],
+    common: &StepCtx,
+    compress: bool,
+) -> WireMsg {
+    let t64 = common.t as u64;
+    if compress && w.channel.proto >= 3 && w.channel.compress {
+        // v3 payload layer. A reconnect since the last encode
+        // invalidates nothing semantically (baselines are tagged), but
+        // we drop them and resync with full frames anyway — the worker
+        // is told to do the same.
+        let resync = w.delta.generation != w.channel.generation;
+        if resync {
+            w.delta = DeltaCodec { generation: w.channel.generation, ..Default::default() };
+        }
+        let base = w.delta.tx.take().filter(|(bt, _)| bt + 1 == t64);
+        let base_t = base.as_ref().map(|(bt, _)| *bt).unwrap_or(0);
+        let mut sent: BlockBits = BTreeMap::new();
+        let mut entries = Vec::with_capacity(owned.len());
+        for &i in owned {
+            let b = &blocks[i];
+            let (rows, cols) = b.shape();
+            let pbits = mat_bits(&params[b.tensor].slice(b.r0, b.r1, b.c0, b.c1));
+            let gbits = mat_bits(&grads[b.tensor].slice(b.r0, b.r1, b.c0, b.c1));
+            let bb = base.as_ref().and_then(|(_, m)| m.get(&(i as u32)));
+            entries.push(StepEntryV3 {
+                index: i as u32,
+                refresh_due: ctxs[i].refresh_due,
+                param: DeltaMat::encode(rows, cols, &pbits, bb.map(|(p, _)| p.as_slice())),
+                grad: DeltaMat::encode(rows, cols, &gbits, bb.map(|(_, g)| g.as_slice())),
+            });
+            sent.insert(i as u32, (pbits, gbits));
+        }
+        w.delta.tx = base;
+        w.delta.tx_pending = Some((t64, sent));
+        if w.channel.proto >= 4 {
+            // v4 typed payloads share the v3 delta/baseline core: the
+            // same `DeltaMat` entries travel wrapped in
+            // `BlockPayload::Dense` (param/grad are always dense on the
+            // step path — sketch factors only travel on the state RPCs).
+            WireMsg::StepV4(StepV4Msg {
+                t: t64,
+                base_t,
+                resync,
+                scale: common.scale,
+                preconditioning: common.preconditioning,
+                stat_due: common.stat_due,
+                lr: common.lr,
+                beta1: common.beta1,
+                weight_decay: common.weight_decay,
+                entries: entries
+                    .into_iter()
+                    .map(|e| StepEntryV4::new(e.index, e.refresh_due, e.param, e.grad))
+                    .collect(),
+            })
+        } else {
+            WireMsg::StepV3(StepV3Msg {
+                t: t64,
+                base_t,
+                resync,
+                scale: common.scale,
+                preconditioning: common.preconditioning,
+                stat_due: common.stat_due,
+                lr: common.lr,
+                beta1: common.beta1,
+                weight_decay: common.weight_decay,
+                entries,
+            })
+        }
+    } else {
+        let entries: Vec<StepEntry> = owned
+            .iter()
+            .map(|&i| {
+                let b = &blocks[i];
+                StepEntry {
+                    index: i as u32,
+                    refresh_due: ctxs[i].refresh_due,
+                    param: params[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
+                    grad: grads[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
+                }
+            })
+            .collect();
+        WireMsg::Step(StepMsg {
+            t: t64,
+            scale: common.scale,
+            preconditioning: common.preconditioning,
+            stat_due: common.stat_due,
+            lr: common.lr,
+            beta1: common.beta1,
+            weight_decay: common.weight_decay,
+            entries,
+        })
+    }
+}
+
+/// Validate and scatter one seat's step reply, advancing the seat's
+/// delta-codec baselines; returns the reply's refresh count. Factored
+/// out of `step_blocks` so the elastic replay path shares it verbatim.
+#[allow(clippy::too_many_arguments)]
+fn apply_step_reply(
+    reply: WireMsg,
+    w: &mut WorkerHandle,
+    shard: usize,
+    owned: &[usize],
+    blocks: &[Block],
+    params: &mut [Matrix],
+    common: &StepCtx,
+    compress: bool,
+) -> anyhow::Result<usize> {
+    let t64 = common.t as u64;
+    // A v4 reply is the v3 reply with each entry wrapped in a typed
+    // payload; unwrap the mandatory `Dense` layer up front so one arm
+    // below handles both protocols.
+    let reply = match reply {
+        WireMsg::StepOkV4(ok) => {
+            let mut entries = Vec::with_capacity(ok.entries.len().min(1 << 16));
+            for (index, payload) in ok.entries {
+                let BlockPayload::Dense(dm) = payload else {
+                    bail!("shard {shard}: v4 step reply for block {index} is not a dense payload");
+                };
+                entries.push((index, dm));
+            }
+            WireMsg::StepOkV3(StepOkV3Msg {
+                t: ok.t,
+                base_t: ok.base_t,
+                refreshes: ok.refreshes,
+                entries,
+            })
+        }
+        other => other,
+    };
+    // Ownership bounds: assignments are contiguous runs, so a range
+    // check validates each returned index in O(1).
+    let (own_lo, own_hi) = match (owned.first(), owned.last()) {
+        (Some(&lo), Some(&hi)) => (lo, hi),
+        _ => (1, 0), // empty shard: any index is foreign
+    };
+    // Both reply forms validate t / count / per-block ownership and
+    // shape *before* any scatter or payload resolution — the shape
+    // bound is what keeps a corrupt or hostile reply from turning a
+    // few-byte compressed frame into a giant decompression (the same
+    // contract the worker side enforces on uploads). The scatter writes
+    // each disjoint block window directly (bitwise — payloads are raw
+    // f64 bits, and the delta codec is bit-lossless).
+    let refreshes = match reply {
+        WireMsg::StepOk(ok) => {
+            ensure!(
+                ok.t == t64,
+                "shard {shard}: reply for step {} while driving step {}",
+                ok.t,
+                common.t
+            );
+            ensure!(
+                ok.entries.len() == owned.len(),
+                "shard {shard}: returned {} blocks, owns {}",
+                ok.entries.len(),
+                owned.len()
+            );
+            for (index, m) in &ok.entries {
+                let i = *index as usize;
+                ensure!(
+                    i >= own_lo && i <= own_hi && i < blocks.len(),
+                    "shard {shard}: returned foreign block {i}"
+                );
+                let b = &blocks[i];
+                ensure!(
+                    m.shape() == b.shape(),
+                    "shard {shard}: block {i} shape {:?}, want {:?}",
+                    m.shape(),
+                    b.shape()
+                );
+                params[b.tensor].set_slice(b.r0, b.c0, m);
+            }
+            ok.refreshes as usize
+        }
+        WireMsg::StepOkV3(ok) => {
+            ensure!(
+                ok.t == t64,
+                "shard {shard}: reply for step {} while driving step {}",
+                ok.t,
+                common.t
+            );
+            ensure!(
+                ok.entries.len() == owned.len(),
+                "shard {shard}: returned {} blocks, owns {}",
+                ok.entries.len(),
+                owned.len()
+            );
+            let mut rx_new: ParamBits = BTreeMap::new();
+            for (index, dm) in &ok.entries {
+                let i = *index as usize;
+                ensure!(
+                    i >= own_lo && i <= own_hi && i < blocks.len(),
+                    "shard {shard}: returned foreign block {i}"
+                );
+                let b = &blocks[i];
+                let (rows, cols) = b.shape();
+                ensure!(
+                    dm.shape() == (rows, cols),
+                    "shard {shard}: block {i} shape {:?}, want {:?}",
+                    dm.shape(),
+                    b.shape()
+                );
+                let base = match dm {
+                    DeltaMat::Delta { .. } => match &w.delta.rx {
+                        Some((bt, map)) if *bt == ok.base_t && ok.base_t != 0 => {
+                            Some(map.get(index).ok_or_else(|| {
+                                anyhow!(
+                                    "shard {shard}: delta reply for block {index} with no \
+                                     baseline entry"
+                                )
+                            })?)
+                        }
+                        _ => bail!(
+                            "shard {shard}: delta reply base t={} does not match the held \
+                             baseline",
+                            ok.base_t
+                        ),
+                    },
+                    _ => None,
+                };
+                let bits = dm
+                    .resolve(base.map(|b| b.as_slice()))
+                    .with_context(|| format!("shard {shard}: block {index} payload"))?;
+                params[b.tensor].set_slice(b.r0, b.c0, &bits_matrix(rows, cols, &bits));
+                rx_new.insert(*index, bits);
+            }
+            // Advance the codec baselines only after every entry
+            // decoded: the upload is now acked and the download fully
+            // resolved.
+            if compress && w.channel.proto >= 3 && w.channel.compress {
+                w.delta.rx = Some((t64, rx_new));
+                if let Some((pt, m)) = w.delta.tx_pending.take() {
+                    if pt == t64 {
+                        w.delta.tx = Some((pt, m));
+                    }
+                }
+            }
+            ok.refreshes as usize
+        }
+        WireMsg::Error { message } => bail!("shard {shard}: worker error: {message}"),
+        other => bail!("shard {shard}: unexpected step reply {other:?}"),
+    };
+    Ok(refreshes)
+}
+
+/// Append step `t` to the elastic journal (replacing a same-`t` entry,
+/// so a re-driven step cannot double-journal). Returns the per-seat
+/// ahead-refresh counts the last `finish_refresh_ahead` delivered for
+/// this step, if any — the reactive migration path subtracts them from
+/// a replayed reply's refresh count to keep engine accounting exact.
+fn journal_push(
+    el: &mut ElasticRuntime,
+    blocks: &[Block],
+    params: &[Matrix],
+    grads: &[Matrix],
+    ctxs: &[StepCtx],
+    common: &StepCtx,
+) -> Option<Vec<usize>> {
+    let t64 = common.t as u64;
+    let ahead = el.ahead.take().filter(|a| a.t_next == t64);
+    // Journal the *effective* refresh flag: a block served by the joined
+    // refresh-ahead arrives with refresh_due cleared, but its refresh
+    // already happened — the replay must re-run it in-step so the
+    // replacement's state matches the fleet's bitwise (ahead roots are
+    // computed from the same frozen statistics as in-step roots).
+    let flags: Vec<bool> = ctxs
+        .iter()
+        .enumerate()
+        .map(|(i, c)| c.refresh_due || ahead.as_ref().is_some_and(|a| a.refreshed[i]))
+        .collect();
+    let mut ps = Vec::with_capacity(blocks.len());
+    let mut gs = Vec::with_capacity(blocks.len());
+    for b in blocks {
+        ps.push(params[b.tensor].slice(b.r0, b.r1, b.c0, b.c1));
+        gs.push(grads[b.tensor].slice(b.r0, b.r1, b.c0, b.c1));
+    }
+    if el.journal.steps.last().map(|s| s.t) == Some(t64) {
+        el.journal.steps.pop();
+    }
+    el.journal.steps.push(JournalStep {
+        t: t64,
+        scale: common.scale,
+        preconditioning: common.preconditioning,
+        stat_due: common.stat_due,
+        lr: common.lr,
+        beta1: common.beta1,
+        weight_decay: common.weight_decay,
+        flags,
+        params: ps,
+        grads: gs,
+    });
+    ahead.map(|a| a.counts)
+}
+
+/// Migrate a dead seat onto a replacement worker: adopt a warm spare
+/// (or cold-spawn one on process fleets), re-`Init` the seat's blocks,
+/// restore the driver's last-acked snapshot, and replay the journal
+/// through `replay_through`. Returns the replayed reply for step
+/// `replay_through` when the journal holds that step — the reactive
+/// mid-step path scatters it as the seat's own step reply.
+#[allow(clippy::too_many_arguments)]
+fn migrate_and_replay(
+    el: &mut ElasticRuntime,
+    flags: &FleetFlags,
+    workers: &mut [WorkerHandle],
+    assignment: &[Vec<usize>],
+    expects: &[StateExpect],
+    kind: UnitKind,
+    base: &ShampooConfig,
+    worker_threads: usize,
+    seat: usize,
+    replay_through: u64,
+) -> anyhow::Result<Option<WireMsg>> {
+    let mut nw = match el.spares.pop() {
+        Some(w) => w,
+        None => match &el.launch {
+            Some(launch) => {
+                let id = el.next_spare_id;
+                el.next_spare_id += 1;
+                spawn_process_worker(launch, id)
+                    .with_context(|| format!("spare worker {id}: spawn"))?
+            }
+            None => {
+                bail!("shard {seat}: worker died and no spare remains (raise --shard-spares)")
+            }
+        },
+    };
+    let epoch = el.controller.on_replace(seat);
+    flags.epoch.store(epoch, Ordering::SeqCst);
+    nw.channel
+        .adopt(seat, epoch)
+        .with_context(|| format!("shard {seat}: adopt replacement worker"))?;
+    // Fresh link, fresh codec: generation 0 never matches an adopted
+    // channel's generation, so the first compressed step resyncs with
+    // full frames on both directions.
+    nw.delta = DeltaCodec::default();
+    let init = init_msg_from_expects(&assignment[seat], expects, kind, base, worker_threads);
+    init_worker(&mut nw, seat, &init)?;
+    let mut state_bytes = 0usize;
+    if let Some(snaps) = &el.journal.snaps {
+        let entries: Vec<BlockStateMsg> = assignment[seat]
+            .iter()
+            .map(|&i| BlockStateMsg::from_snap(i as u32, &snaps[i]))
+            .collect();
+        if !entries.is_empty() {
+            let msg = WireMsg::StateRestore(StateRestoreMsg { entries });
+            state_bytes = wire::encode_frame(&msg)?.len();
+            let reply = nw
+                .channel
+                .request(&msg)
+                .with_context(|| format!("shard {seat}: migrate state restore"))?;
+            match reply {
+                WireMsg::Ok => {}
+                WireMsg::Error { message } => {
+                    bail!("shard {seat}: migrate restore failed: {message}")
+                }
+                other => bail!("shard {seat}: unexpected migrate restore reply {other:?}"),
+            }
+        }
+    }
+    // Replay the journal from the snapshot point through the target
+    // step, as plain full-frame Step messages (every v5 worker accepts
+    // them regardless of the fleet's compression setting).
+    let mut final_reply = None;
+    let mut replayed = 0usize;
+    for js in &el.journal.steps {
+        if js.t > replay_through {
+            break;
+        }
+        let entries: Vec<StepEntry> = assignment[seat]
+            .iter()
+            .map(|&i| StepEntry {
+                index: i as u32,
+                refresh_due: js.flags[i],
+                param: js.params[i].clone(),
+                grad: js.grads[i].clone(),
+            })
+            .collect();
+        let msg = WireMsg::Step(StepMsg {
+            t: js.t,
+            scale: js.scale,
+            preconditioning: js.preconditioning,
+            stat_due: js.stat_due,
+            lr: js.lr,
+            beta1: js.beta1,
+            weight_decay: js.weight_decay,
+            entries,
+        });
+        let reply = nw
+            .channel
+            .request(&msg)
+            .with_context(|| format!("shard {seat}: replay step t={}", js.t))?;
+        match &reply {
+            WireMsg::StepOk(ok) if ok.t == js.t => {}
+            WireMsg::Error { message } => {
+                bail!("shard {seat}: replay step t={} failed: {message}", js.t)
+            }
+            other => bail!("shard {seat}: unexpected replay reply {other:?}"),
+        }
+        replayed += 1;
+        if js.t == replay_through {
+            final_reply = Some(reply);
+        }
+    }
+    // Seat the replacement. The old handle's connection is already torn
+    // down (or torn down here) so its Drop never talks on a dead link;
+    // the process backend still reaps its child.
+    let mut old = std::mem::replace(&mut workers[seat], nw);
+    old.channel.pending_refresh = None;
+    old.channel.conn = None;
+    drop(old);
+    flags.set_dead(seat, false);
+    flags.bump_stats(|s| {
+        s.migrations += 1;
+        s.migrated_steps += replayed;
+        s.migrated_state_bytes += state_bytes;
+    });
+    eprintln!(
+        "shard {seat}: migrated to replacement worker (epoch {epoch}, {replayed} steps \
+         replayed, {state_bytes} state bytes)"
+    );
+    Ok(final_reply)
+}
+
+/// Restore `owned`'s blocks onto seat `seat` from driver-held snaps.
+fn restore_seat(
+    w: &mut WorkerHandle,
+    seat: usize,
+    owned: &[usize],
+    snaps: &[BlockStateSnap],
+) -> anyhow::Result<()> {
+    let entries: Vec<BlockStateMsg> =
+        owned.iter().map(|&i| BlockStateMsg::from_snap(i as u32, &snaps[i])).collect();
+    if entries.is_empty() {
+        return Ok(());
+    }
+    let reply = w
+        .channel
+        .request(&WireMsg::StateRestore(StateRestoreMsg { entries }))
+        .with_context(|| format!("shard {seat}: state restore"))?;
+    match reply {
+        WireMsg::Ok => Ok(()),
+        WireMsg::Error { message } => bail!("shard {seat}: worker error: {message}"),
+        other => bail!("shard {seat}: unexpected state-restore reply {other:?}"),
+    }
+}
+
+/// Snapshot every block's typed state from the fleet (the elastic sync
+/// point and the checkpoint path share this validation exactly).
+fn snapshot_all(
+    workers: &mut [WorkerHandle],
+    assignment: &[Vec<usize>],
+    n_blocks: usize,
+    expects: &[StateExpect],
+) -> anyhow::Result<Vec<BlockStateSnap>> {
+    let mut out: Vec<Option<BlockStateSnap>> = Vec::new();
+    out.resize_with(n_blocks, || None);
+    for (shard, w) in workers.iter_mut().enumerate() {
+        // The wire is strict request/response outside the parked
+        // RefreshAhead slot — join-and-discard it first.
+        w.drain_pending_refresh();
+        let reply = w
+            .channel
+            .request(&WireMsg::StateSnap(StateSnapMsg { want: vec![] }))
+            .with_context(|| format!("shard {shard}: state snapshot"))?;
+        let entries = match reply {
+            WireMsg::StateSnapOk(ok) => ok.entries,
+            WireMsg::Error { message } => bail!("shard {shard}: worker error: {message}"),
+            other => bail!("shard {shard}: unexpected state-snapshot reply {other:?}"),
+        };
+        ensure!(
+            entries.len() == assignment[shard].len(),
+            "shard {shard}: returned {} block states, owns {}",
+            entries.len(),
+            assignment[shard].len()
+        );
+        let (own_lo, own_hi) = match (assignment[shard].first(), assignment[shard].last()) {
+            (Some(&lo), Some(&hi)) => (lo, hi),
+            _ => (1, 0), // empty shard: any index is foreign
+        };
+        for msg in entries {
+            let i = msg.index as usize;
+            ensure!(
+                i >= own_lo && i <= own_hi && i < n_blocks,
+                "shard {shard}: returned foreign block state {i}"
+            );
+            ensure!(out[i].is_none(), "shard {shard}: duplicate block state {i}");
+            // `into_snap` validates every declared shape/rank against
+            // the driver's own block table before any payload
+            // resolution allocates.
+            let snap = msg
+                .into_snap(&expects[i])
+                .with_context(|| format!("shard {shard}: block {i} state"))?;
+            out[i] = Some(snap);
+        }
+    }
+    out.into_iter()
+        .enumerate()
+        .map(|(i, s)| s.ok_or_else(|| anyhow!("no shard returned state for block {i}")))
+        .collect()
+}
+
+/// Elastic sync point (every `failover_budget` steps, after the step's
+/// replies are in): snapshot the fleet, truncate the journal, then
+/// apply any staged or latency-triggered rebalance by re-`Init`ing and
+/// restoring the seats whose ownership changed. A failed snapshot skips
+/// the sync (the journal keeps growing until the next sync point
+/// succeeds); a failure while applying a rebalance is a hard error —
+/// the fleet would otherwise be left half re-cut.
+#[allow(clippy::too_many_arguments)]
+fn sync_and_rebalance(
+    el: &mut ElasticRuntime,
+    flags: &FleetFlags,
+    workers: &mut [WorkerHandle],
+    assignment: &mut Vec<Vec<usize>>,
+    n_blocks: usize,
+    expects: &[StateExpect],
+    kind: UnitKind,
+    base: &ShampooConfig,
+    worker_threads: usize,
+    t64: u64,
+) -> anyhow::Result<()> {
+    let snaps = match snapshot_all(workers, assignment, n_blocks, expects) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!(
+                "elastic sync at t={t64} skipped ({e:#}); the journal keeps growing until \
+                 the next sync point"
+            );
+            return Ok(());
+        }
+    };
+    el.journal.snaps = Some(snaps);
+    el.journal.sync_t = t64;
+    el.journal.steps.clear();
+    if let Some(weights) = flags.take_staged() {
+        el.controller.stage_rebalance(weights);
+    }
+    let Some(next) = el.controller.maybe_rebalance(n_blocks) else {
+        return Ok(());
+    };
+    ensure!(
+        next.len() == workers.len(),
+        "rebalance proposal has {} seats, fleet has {}",
+        next.len(),
+        workers.len()
+    );
+    validate_assignment(&next, n_blocks).context("rebalance proposal rejected")?;
+    let snaps = el.journal.snaps.as_ref().expect("journal synced above");
+    for (seat, w) in workers.iter_mut().enumerate() {
+        if next[seat] == assignment[seat] {
+            continue;
+        }
+        w.drain_pending_refresh();
+        let init = init_msg_from_expects(&next[seat], expects, kind, base, worker_threads);
+        init_worker(w, seat, &init)?;
+        restore_seat(w, seat, &next[seat], snaps)?;
+        // Ownership moved: the held baselines may describe blocks this
+        // seat no longer owns — resync from full frames.
+        w.delta = DeltaCodec::default();
+    }
+    el.controller.view.rebalance(next.clone());
+    flags.epoch.store(el.controller.view.epoch, Ordering::SeqCst);
+    flags.bump_stats(|s| s.rebalances += 1);
+    eprintln!(
+        "elastic fleet: rebalanced block assignment at t={t64} (epoch {})",
+        el.controller.view.epoch
+    );
+    *assignment = next;
+    Ok(())
 }
 
 impl BlockExecutor for ShardExecutor {
@@ -1912,253 +3024,177 @@ impl BlockExecutor for ShardExecutor {
                  (only refresh_due may vary across blocks on the shard wire)"
             );
         }
-        let ShardExecutor { workers, assignment, compress, .. } = self;
+        let ShardExecutor {
+            workers,
+            assignment,
+            compress,
+            elastic,
+            flags,
+            expects,
+            kind,
+            base,
+            worker_threads,
+            ..
+        } = self;
         let compress = *compress;
-        let workers = workers_mut(workers)?;
+        let mut guard = workers_guard(workers)?;
+        let workers = &mut *guard;
         let t64 = common.t as u64;
+        // Elastic bookkeeping first: journal this step's payloads, then
+        // proactively heal any seat already known dead — its replacement
+        // replays the journal through t-1 and then takes step t with the
+        // rest of the fleet.
+        let mut ahead_counts: Option<Vec<usize>> = None;
+        if let Some(el) = elastic.as_mut() {
+            ahead_counts = journal_push(el, blocks, params, grads, ctxs, common);
+            for seat in flags.dead_seats() {
+                migrate_and_replay(
+                    el,
+                    flags,
+                    workers,
+                    assignment,
+                    expects,
+                    *kind,
+                    base,
+                    *worker_threads,
+                    seat,
+                    t64.saturating_sub(1),
+                )
+                .with_context(|| format!("shard {seat}: elastic failover"))?;
+            }
+        } else if let Some(seat) = flags.dead_seats().first().copied() {
+            bail!(
+                "shard {seat}: worker was killed and no elastic membership is configured \
+                 (launch with --shard-spares to enable failover)"
+            );
+        }
         // Ship every shard its gathered block statistics first, then
         // collect replies in shard order — workers compute concurrently.
+        // Under elastic membership a send/recv failure defers the seat
+        // to the reactive migration pass instead of failing the step.
+        let mut failed: Vec<usize> = Vec::new();
+        let mut sent = vec![false; workers.len()];
         for (shard, w) in workers.iter_mut().enumerate() {
             // Cancel path: a RefreshAhead parked by a caller that never
             // joined it is drained and discarded before the Step goes
             // out (the engine normally joins first; direct executor
             // drivers may not).
             w.drain_pending_refresh();
-            let msg = if compress && w.channel.proto >= 3 && w.channel.compress {
-                // v3 payload layer. A reconnect since the last encode
-                // invalidates nothing semantically (baselines are
-                // tagged), but we drop them and resync with full
-                // frames anyway — the worker is told to do the same.
-                let resync = w.delta.generation != w.channel.generation;
-                if resync {
-                    w.delta = DeltaCodec { generation: w.channel.generation, ..Default::default() };
-                }
-                let base = w.delta.tx.take().filter(|(bt, _)| bt + 1 == t64);
-                let base_t = base.as_ref().map(|(bt, _)| *bt).unwrap_or(0);
-                let mut sent: BlockBits = BTreeMap::new();
-                let mut entries = Vec::with_capacity(assignment[shard].len());
-                for &i in &assignment[shard] {
-                    let b = &blocks[i];
-                    let (rows, cols) = b.shape();
-                    let pbits = mat_bits(&params[b.tensor].slice(b.r0, b.r1, b.c0, b.c1));
-                    let gbits = mat_bits(&grads[b.tensor].slice(b.r0, b.r1, b.c0, b.c1));
-                    let bb = base.as_ref().and_then(|(_, m)| m.get(&(i as u32)));
-                    entries.push(StepEntryV3 {
-                        index: i as u32,
-                        refresh_due: ctxs[i].refresh_due,
-                        param: DeltaMat::encode(rows, cols, &pbits, bb.map(|(p, _)| p.as_slice())),
-                        grad: DeltaMat::encode(rows, cols, &gbits, bb.map(|(_, g)| g.as_slice())),
-                    });
-                    sent.insert(i as u32, (pbits, gbits));
-                }
-                w.delta.tx = base;
-                w.delta.tx_pending = Some((t64, sent));
-                if w.channel.proto >= 4 {
-                    // v4 typed payloads share the v3 delta/baseline core:
-                    // the same `DeltaMat` entries travel wrapped in
-                    // `BlockPayload::Dense` (param/grad are always dense
-                    // on the step path — sketch factors only travel on
-                    // the state RPCs).
-                    WireMsg::StepV4(StepV4Msg {
-                        t: t64,
-                        base_t,
-                        resync,
-                        scale: common.scale,
-                        preconditioning: common.preconditioning,
-                        stat_due: common.stat_due,
-                        lr: common.lr,
-                        beta1: common.beta1,
-                        weight_decay: common.weight_decay,
-                        entries: entries
-                            .into_iter()
-                            .map(|e| StepEntryV4::new(e.index, e.refresh_due, e.param, e.grad))
-                            .collect(),
-                    })
-                } else {
-                    WireMsg::StepV3(StepV3Msg {
-                        t: t64,
-                        base_t,
-                        resync,
-                        scale: common.scale,
-                        preconditioning: common.preconditioning,
-                        stat_due: common.stat_due,
-                        lr: common.lr,
-                        beta1: common.beta1,
-                        weight_decay: common.weight_decay,
-                        entries,
-                    })
-                }
-            } else {
-                let entries: Vec<StepEntry> = assignment[shard]
-                    .iter()
-                    .map(|&i| {
-                        let b = &blocks[i];
-                        StepEntry {
-                            index: i as u32,
-                            refresh_due: ctxs[i].refresh_due,
-                            param: params[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
-                            grad: grads[b.tensor].slice(b.r0, b.r1, b.c0, b.c1),
-                        }
-                    })
-                    .collect();
-                WireMsg::Step(StepMsg {
-                    t: t64,
-                    scale: common.scale,
-                    preconditioning: common.preconditioning,
-                    stat_due: common.stat_due,
-                    lr: common.lr,
-                    beta1: common.beta1,
-                    weight_decay: common.weight_decay,
-                    entries,
-                })
-            };
-            w.channel
+            let msg = encode_step_msg(
+                w,
+                &assignment[shard],
+                blocks,
+                params,
+                grads,
+                ctxs,
+                common,
+                compress,
+            );
+            match w
+                .channel
                 .send(&msg)
-                .with_context(|| format!("shard {shard}: send step t={}", common.t))?;
+                .with_context(|| format!("shard {shard}: send step t={}", common.t))
+            {
+                Ok(()) => sent[shard] = true,
+                Err(e) => {
+                    if elastic.is_none() {
+                        return Err(e);
+                    }
+                    eprintln!("shard {shard}: send failed mid-step ({e:#}); migrating");
+                    failed.push(shard);
+                }
+            }
         }
         let mut refreshes = 0usize;
         for (shard, w) in workers.iter_mut().enumerate() {
-            let reply = w
+            if !sent[shard] {
+                continue;
+            }
+            let started = Instant::now();
+            let reply = match w
                 .channel
                 .recv()
-                .with_context(|| format!("shard {shard}: step t={} reply", common.t))?;
-            // A v4 reply is the v3 reply with each entry wrapped in a
-            // typed payload; unwrap the mandatory `Dense` layer up
-            // front so one arm below handles both protocols.
-            let reply = match reply {
-                WireMsg::StepOkV4(ok) => {
-                    let mut entries = Vec::with_capacity(ok.entries.len().min(1 << 16));
-                    for (index, payload) in ok.entries {
-                        let BlockPayload::Dense(dm) = payload else {
-                            bail!(
-                                "shard {shard}: v4 step reply for block {index} is not a \
-                                 dense payload"
-                            );
-                        };
-                        entries.push((index, dm));
+                .with_context(|| format!("shard {shard}: step t={} reply", common.t))
+            {
+                Ok(r) => r,
+                Err(e) => {
+                    if elastic.is_none() {
+                        return Err(e);
                     }
-                    WireMsg::StepOkV3(StepOkV3Msg {
-                        t: ok.t,
-                        base_t: ok.base_t,
-                        refreshes: ok.refreshes,
-                        entries,
-                    })
+                    eprintln!("shard {shard}: reply failed mid-step ({e:#}); migrating");
+                    failed.push(shard);
+                    continue;
                 }
-                other => other,
             };
-            // Ownership bounds: assignments are contiguous runs, so a
-            // range check validates each returned index in O(1).
-            let (own_lo, own_hi) = match (assignment[shard].first(), assignment[shard].last()) {
-                (Some(&lo), Some(&hi)) => (lo, hi),
-                _ => (1, 0), // empty shard: any index is foreign
-            };
-            // Both reply forms validate t / count / per-block ownership
-            // and shape *before* any scatter or payload resolution —
-            // the shape bound is what keeps a corrupt or hostile reply
-            // from turning a few-byte compressed frame into a giant
-            // decompression (the same contract the worker side enforces
-            // on uploads). The scatter writes each disjoint block
-            // window directly (bitwise — payloads are raw f64 bits, and
-            // the delta codec is bit-lossless).
-            refreshes += match reply {
-                WireMsg::StepOk(ok) => {
-                    ensure!(
-                        ok.t == t64,
-                        "shard {shard}: reply for step {} while driving step {}",
-                        ok.t,
-                        common.t
-                    );
-                    ensure!(
-                        ok.entries.len() == assignment[shard].len(),
-                        "shard {shard}: returned {} blocks, owns {}",
-                        ok.entries.len(),
-                        assignment[shard].len()
-                    );
-                    for (index, m) in &ok.entries {
-                        let i = *index as usize;
-                        ensure!(
-                            i >= own_lo && i <= own_hi && i < blocks.len(),
-                            "shard {shard}: returned foreign block {i}"
-                        );
-                        let b = &blocks[i];
-                        ensure!(
-                            m.shape() == b.shape(),
-                            "shard {shard}: block {i} shape {:?}, want {:?}",
-                            m.shape(),
-                            b.shape()
-                        );
-                        params[b.tensor].set_slice(b.r0, b.c0, m);
-                    }
-                    ok.refreshes as usize
-                }
-                WireMsg::StepOkV3(ok) => {
-                    ensure!(
-                        ok.t == t64,
-                        "shard {shard}: reply for step {} while driving step {}",
-                        ok.t,
-                        common.t
-                    );
-                    ensure!(
-                        ok.entries.len() == assignment[shard].len(),
-                        "shard {shard}: returned {} blocks, owns {}",
-                        ok.entries.len(),
-                        assignment[shard].len()
-                    );
-                    let mut rx_new: ParamBits = BTreeMap::new();
-                    for (index, dm) in &ok.entries {
-                        let i = *index as usize;
-                        ensure!(
-                            i >= own_lo && i <= own_hi && i < blocks.len(),
-                            "shard {shard}: returned foreign block {i}"
-                        );
-                        let b = &blocks[i];
-                        let (rows, cols) = b.shape();
-                        ensure!(
-                            dm.shape() == (rows, cols),
-                            "shard {shard}: block {i} shape {:?}, want {:?}",
-                            dm.shape(),
-                            b.shape()
-                        );
-                        let base = match dm {
-                            DeltaMat::Delta { .. } => match &w.delta.rx {
-                                Some((bt, map)) if *bt == ok.base_t && ok.base_t != 0 => {
-                                    Some(map.get(index).ok_or_else(|| {
-                                        anyhow!(
-                                            "shard {shard}: delta reply for block {index} \
-                                             with no baseline entry"
-                                        )
-                                    })?)
-                                }
-                                _ => bail!(
-                                    "shard {shard}: delta reply base t={} does not match \
-                                     the held baseline",
-                                    ok.base_t
-                                ),
-                            },
-                            _ => None,
-                        };
-                        let bits = dm
-                            .resolve(base.map(|b| b.as_slice()))
-                            .with_context(|| format!("shard {shard}: block {index} payload"))?;
-                        params[b.tensor].set_slice(b.r0, b.c0, &bits_matrix(rows, cols, &bits));
-                        rx_new.insert(*index, bits);
-                    }
-                    // Advance the codec baselines only after every
-                    // entry decoded: the upload is now acked and the
-                    // download fully resolved.
-                    if compress && w.channel.proto >= 3 && w.channel.compress {
-                        w.delta.rx = Some((t64, rx_new));
-                        if let Some((pt, m)) = w.delta.tx_pending.take() {
-                            if pt == t64 {
-                                w.delta.tx = Some((pt, m));
-                            }
-                        }
-                    }
-                    ok.refreshes as usize
-                }
-                WireMsg::Error { message } => bail!("shard {shard}: worker error: {message}"),
-                other => bail!("shard {shard}: unexpected step reply {other:?}"),
-            };
+            if let Some(el) = elastic.as_mut() {
+                // Feed the rebalancer the observed per-seat step wall
+                // time (EWMA-smoothed inside the controller).
+                let nanos = started.elapsed().as_secs_f64() * 1e9;
+                el.controller.observe_step_latency(shard, nanos);
+            }
+            refreshes += apply_step_reply(
+                reply,
+                w,
+                shard,
+                &assignment[shard],
+                blocks,
+                params,
+                common,
+                compress,
+            )?;
+        }
+        if let Some(el) = elastic.as_mut() {
+            // Reactive pass: a seat died mid-step. Replay it through
+            // step t itself — the final replayed reply *is* this seat's
+            // step reply, minus the ahead-refresh count the engine
+            // already booked for it.
+            for seat in failed {
+                flags.set_dead(seat, true);
+                let reply = migrate_and_replay(
+                    el,
+                    flags,
+                    workers,
+                    assignment,
+                    expects,
+                    *kind,
+                    base,
+                    *worker_threads,
+                    seat,
+                    t64,
+                )
+                .with_context(|| format!("shard {seat}: elastic failover"))?
+                .ok_or_else(|| {
+                    anyhow!("shard {seat}: migration replay produced no reply for step t={t64}")
+                })?;
+                let n = apply_step_reply(
+                    reply,
+                    &mut workers[seat],
+                    seat,
+                    &assignment[seat],
+                    blocks,
+                    params,
+                    common,
+                    compress,
+                )?;
+                let over = ahead_counts.as_ref().map_or(0, |c| c[seat]);
+                refreshes += n.saturating_sub(over);
+            }
+            // Bounded-budget sync point: snapshot the fleet, truncate
+            // the journal, and apply any staged/triggered rebalance.
+            if t64 % el.controller.cfg.failover_budget == 0 {
+                sync_and_rebalance(
+                    el,
+                    flags,
+                    workers,
+                    assignment,
+                    blocks.len(),
+                    expects,
+                    *kind,
+                    base,
+                    *worker_threads,
+                    t64,
+                )?;
+            }
         }
         Ok(refreshes)
     }
@@ -2166,7 +3202,6 @@ impl BlockExecutor for ShardExecutor {
     fn mem_bytes(&self) -> usize {
         self.mem_stats_total().0
     }
-
     fn second_moment_bytes(&self) -> usize {
         self.mem_stats_total().1
     }
@@ -2179,10 +3214,10 @@ impl BlockExecutor for ShardExecutor {
         if !self.overlap {
             return false;
         }
-        let ShardExecutor { workers, assignment, n_blocks, .. } = self;
+        let ShardExecutor { workers, assignment, n_blocks, flags, .. } = self;
         debug_assert_eq!(plan.due.len(), *n_blocks);
-        let workers = match workers_mut(workers) {
-            Ok(w) => w,
+        let mut guard = match workers_guard(workers) {
+            Ok(g) => g,
             Err(e) => {
                 // Declining is always bitwise-safe (the step refreshes
                 // synchronously); the poisoned table will fail the next
@@ -2191,8 +3226,14 @@ impl BlockExecutor for ShardExecutor {
                 return false;
             }
         };
+        let workers = &mut *guard;
         let mut any = false;
         for (shard, w) in workers.iter_mut().enumerate() {
+            if flags.is_dead(shard) {
+                // A dead seat keeps its blocks refresh-due; the elastic
+                // migration replay refreshes them in-step instead.
+                continue;
+            }
             debug_assert!(
                 w.channel.pending_refresh.is_none(),
                 "refresh-ahead already in flight on shard {shard}"
@@ -2230,20 +3271,43 @@ impl BlockExecutor for ShardExecutor {
     }
 
     fn finish_refresh_ahead(&mut self) -> anyhow::Result<Option<RefreshAheadDone>> {
-        let ShardExecutor { workers, assignment, n_blocks, .. } = self;
-        let workers = workers_mut(workers)?;
+        let ShardExecutor { workers, assignment, n_blocks, elastic, flags, .. } = self;
+        let mut guard = workers_guard(workers)?;
+        let workers = &mut *guard;
         let mut refreshed = vec![false; *n_blocks];
+        let mut counts = vec![0usize; workers.len()];
         let mut count = 0usize;
         let mut any = false;
+        let mut t_seen: Option<u64> = None;
         for (shard, w) in workers.iter_mut().enumerate() {
             let Some(t_next) = w.channel.pending_refresh.take() else {
                 continue;
             };
             any = true;
-            let reply = w
+            t_seen = Some(t_next);
+            if flags.is_dead(shard) {
+                // Killed with a request parked: its blocks stay
+                // refresh-due and the migration replay refreshes them
+                // in-step, so the count here must remain zero.
+                continue;
+            }
+            let reply = match w
                 .channel
                 .recv()
-                .with_context(|| format!("shard {shard}: refresh-ahead t={t_next} reply"))?;
+                .with_context(|| format!("shard {shard}: refresh-ahead t={t_next} reply"))
+            {
+                Ok(r) => r,
+                Err(e) => {
+                    if elastic.is_none() {
+                        return Err(e);
+                    }
+                    eprintln!(
+                        "shard {shard}: refresh-ahead join failed ({e:#}); scheduling failover"
+                    );
+                    flags.set_dead(shard, true);
+                    continue;
+                }
+            };
             let ok = match reply {
                 WireMsg::RefreshAheadOk(ok) => ok,
                 WireMsg::RefreshAheadOkV4(ok) => {
@@ -2271,6 +3335,7 @@ impl BlockExecutor for ShardExecutor {
                 ok.t_next
             );
             count += ok.count as usize;
+            counts[shard] = ok.count as usize;
             let (own_lo, own_hi) = match (assignment[shard].first(), assignment[shard].last()) {
                 (Some(&lo), Some(&hi)) => (lo, hi),
                 _ => (1, 0),
@@ -2284,6 +3349,17 @@ impl BlockExecutor for ShardExecutor {
                 refreshed[i] = true;
             }
         }
+        if let Some(el) = elastic.as_mut() {
+            // Remember what the join delivered for the step about to be
+            // driven: a reactive migration of that step subtracts these
+            // per-seat counts from its replayed reply so the engine's
+            // refresh accounting stays exact.
+            el.ahead = t_seen.map(|t_next| AheadRecord {
+                t_next,
+                refreshed: refreshed.clone(),
+                counts,
+            });
+        }
         Ok(any.then_some(RefreshAheadDone { refreshed, count }))
     }
 
@@ -2293,53 +3369,40 @@ impl BlockExecutor for ShardExecutor {
             "shard executor: a worker greeted below wire protocol v4 (no typed \
              block-state capability); checkpoint snapshots need every link at v4"
         );
-        let ShardExecutor { workers, assignment, n_blocks, expects, .. } = self;
-        let workers = workers_mut(workers)?;
-        let mut out: Vec<Option<BlockStateSnap>> = Vec::new();
-        out.resize_with(*n_blocks, || None);
-        for (shard, w) in workers.iter_mut().enumerate() {
-            // The wire is strict request/response outside the parked
-            // RefreshAhead slot — join-and-discard it first.
-            w.drain_pending_refresh();
-            let reply = w
-                .channel
-                .request(&WireMsg::StateSnap(StateSnapMsg { want: vec![] }))
-                .with_context(|| format!("shard {shard}: state snapshot"))?;
-            let entries = match reply {
-                WireMsg::StateSnapOk(ok) => ok.entries,
-                WireMsg::Error { message } => bail!("shard {shard}: worker error: {message}"),
-                other => bail!("shard {shard}: unexpected state-snapshot reply {other:?}"),
-            };
-            ensure!(
-                entries.len() == assignment[shard].len(),
-                "shard {shard}: returned {} block states, owns {}",
-                entries.len(),
-                assignment[shard].len()
-            );
-            let (own_lo, own_hi) = match (assignment[shard].first(), assignment[shard].last()) {
-                (Some(&lo), Some(&hi)) => (lo, hi),
-                _ => (1, 0), // empty shard: any index is foreign
-            };
-            for msg in entries {
-                let i = msg.index as usize;
-                ensure!(
-                    i >= own_lo && i <= own_hi && i < *n_blocks,
-                    "shard {shard}: returned foreign block state {i}"
-                );
-                ensure!(out[i].is_none(), "shard {shard}: duplicate block state {i}");
-                // `into_snap` validates every declared shape/rank
-                // against the driver's own block table before any
-                // payload resolution allocates.
-                let snap = msg
-                    .into_snap(&expects[i])
-                    .with_context(|| format!("shard {shard}: block {i} state"))?;
-                out[i] = Some(snap);
+        let ShardExecutor {
+            workers,
+            assignment,
+            n_blocks,
+            expects,
+            elastic,
+            flags,
+            kind,
+            base,
+            worker_threads,
+            ..
+        } = self;
+        let mut guard = workers_guard(workers)?;
+        let workers = &mut *guard;
+        if let Some(el) = elastic.as_mut() {
+            // Heal first so every seat can answer the snapshot RPC.
+            let through = el.journal.steps.last().map(|s| s.t).unwrap_or(el.journal.sync_t);
+            for seat in flags.dead_seats() {
+                migrate_and_replay(
+                    el,
+                    flags,
+                    workers,
+                    assignment,
+                    expects,
+                    *kind,
+                    base,
+                    *worker_threads,
+                    seat,
+                    through,
+                )
+                .with_context(|| format!("shard {seat}: elastic failover"))?;
             }
         }
-        out.into_iter()
-            .enumerate()
-            .map(|(i, s)| s.ok_or_else(|| anyhow!("no shard returned state for block {i}")))
-            .collect()
+        snapshot_all(workers, assignment, *n_blocks, expects)
     }
 
     fn state_restore(&mut self, snaps: Vec<BlockStateSnap>) -> anyhow::Result<()> {
@@ -2348,43 +3411,70 @@ impl BlockExecutor for ShardExecutor {
             "shard executor: a worker greeted below wire protocol v4 (no typed \
              block-state capability); checkpoint restore needs every link at v4"
         );
-        let ShardExecutor { workers, assignment, n_blocks, .. } = self;
+        let ShardExecutor {
+            workers,
+            assignment,
+            n_blocks,
+            expects,
+            elastic,
+            flags,
+            kind,
+            base,
+            worker_threads,
+            ..
+        } = self;
         ensure!(
             snaps.len() == *n_blocks,
             "shard executor: restoring {} block states into {} blocks",
             snaps.len(),
             *n_blocks
         );
-        let workers = workers_mut(workers)?;
+        let mut guard = workers_guard(workers)?;
+        let workers = &mut *guard;
+        if let Some(el) = elastic.as_mut() {
+            // Heal first: a restore must land on a live, adopted fleet.
+            let through = el.journal.steps.last().map(|s| s.t).unwrap_or(el.journal.sync_t);
+            for seat in flags.dead_seats() {
+                migrate_and_replay(
+                    el,
+                    flags,
+                    workers,
+                    assignment,
+                    expects,
+                    *kind,
+                    base,
+                    *worker_threads,
+                    seat,
+                    through,
+                )
+                .with_context(|| format!("shard {seat}: elastic failover"))?;
+            }
+        }
         for (shard, w) in workers.iter_mut().enumerate() {
             w.drain_pending_refresh();
-            let entries: Vec<BlockStateMsg> = assignment[shard]
-                .iter()
-                .map(|&i| BlockStateMsg::from_snap(i as u32, &snaps[i]))
-                .collect();
-            if entries.is_empty() {
-                continue;
-            }
-            let reply = w
-                .channel
-                .request(&WireMsg::StateRestore(StateRestoreMsg { entries }))
-                .with_context(|| format!("shard {shard}: state restore"))?;
-            match reply {
-                WireMsg::Ok => {}
-                WireMsg::Error { message } => bail!("shard {shard}: worker error: {message}"),
-                other => bail!("shard {shard}: unexpected state-restore reply {other:?}"),
-            }
+            restore_seat(w, shard, &assignment[shard], &snaps)?;
+        }
+        if let Some(el) = elastic.as_mut() {
+            // The restored state is the fleet's new ground truth; the
+            // journal re-bases on it so later migrations replay from
+            // the restored snapshot rather than a pre-restore one.
+            el.journal = StepJournal { sync_t: 0, snaps: Some(snaps), steps: Vec::new() };
         }
         Ok(())
     }
 
     fn label(&self) -> String {
         format!(
-            "shards={}/{}{}",
+            "shards={}/{}{}{}",
             self.assignment.len(),
             self.transport,
-            if self.compress { "+delta" } else { "" }
+            if self.compress { "+delta" } else { "" },
+            if self.elastic.is_some() { "+elastic" } else { "" }
         )
+    }
+
+    fn fleet_control(&self) -> Option<FleetControl> {
+        Some(self.control())
     }
 }
 
@@ -2397,16 +3487,47 @@ mod tests {
     use crate::optim::partition;
     use crate::util::rng::Pcg64;
 
+    /// Non-elastic in-proc fleet over the given transports (the
+    /// builder-era spelling of the old `launch_in_proc`).
+    fn in_proc(
+        blocks: &[Block],
+        kind: UnitKind,
+        base: &ShampooConfig,
+        transports: &[FaultInjectingTransport],
+        proto: u32,
+        compress: bool,
+    ) -> ShardExecutor {
+        ShardExecutor::launch_in_proc_with(
+            blocks,
+            kind,
+            base,
+            1,
+            transports,
+            proto,
+            compress,
+            &MembershipConfig::default(),
+        )
+        .expect("launch in-proc executor")
+    }
+
     #[test]
     fn assignment_is_balanced_contiguous_and_total() {
-        let a = assign_blocks(10, 3);
+        let a = ContiguousAssignment.assign(10, 3);
         assert_eq!(a, vec![vec![0, 1, 2, 3], vec![4, 5, 6], vec![7, 8, 9]]);
-        let b = assign_blocks(2, 4);
+        let b = ContiguousAssignment.assign(2, 4);
         assert_eq!(b, vec![vec![0], vec![1], vec![], vec![]]);
-        let c = assign_blocks(0, 2);
+        let c = ContiguousAssignment.assign(0, 2);
         assert_eq!(c, vec![Vec::<usize>::new(), vec![]]);
         // Determinism: same inputs, same partition.
-        assert_eq!(assign_blocks(10, 3), a);
+        assert_eq!(ContiguousAssignment.assign(10, 3), a);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn assign_blocks_shim_matches_the_trait_policy() {
+        for (n, s) in [(10usize, 3usize), (2, 4), (0, 2), (7, 7), (13, 5)] {
+            assert_eq!(assign_blocks(n, s), ContiguousAssignment.assign(n, s));
+        }
     }
 
     #[test]
@@ -2465,6 +3586,52 @@ mod tests {
         // Unknown future protocol versions are refused, not guessed at.
         let future = Args::parse(["train", "--shard-proto", "99"].iter().map(|s| s.to_string()));
         assert!(ShardConfig::resolve(&future, &Config::default()).is_err());
+    }
+
+    #[test]
+    fn unknown_shard_config_keys_are_a_named_error() {
+        // A typo'd knob (`spare` for `spares`) must fail resolution by
+        // name instead of silently becoming a no-op.
+        let cfg = Config::parse("[shard]\nspare = 2").unwrap();
+        let err = ShardConfig::resolve(&Args::default(), &cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown [shard] config key \"shard.spare\""), "got: {msg}");
+        assert!(msg.contains("spares"), "error must list the known keys: {msg}");
+        // Other sections are not the shard resolver's business.
+        let other = Config::parse("[engine]\nbogus = 1").unwrap();
+        assert!(ShardConfig::resolve(&Args::default(), &other).is_ok());
+    }
+
+    #[test]
+    fn elastic_knobs_resolve_with_cli_over_config_precedence() {
+        let cfg =
+            Config::parse("[shard]\nspares = 1\nrebalance = true\nfailover_budget = 4").unwrap();
+        let sc = ShardConfig::resolve(&Args::default(), &cfg).unwrap();
+        assert_eq!(sc.spares, 1);
+        assert!(sc.rebalance);
+        assert_eq!(sc.failover_budget, 4);
+        assert!(sc.membership().elastic());
+        let args = Args::parse(
+            ["train", "--shard-spares", "2", "--rebalance", "false", "--shard-failover-budget", "6"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let sc2 = ShardConfig::resolve(&args, &cfg).unwrap();
+        assert_eq!(sc2.spares, 2, "CLI beats config");
+        assert!(!sc2.rebalance, "CLI beats config");
+        assert_eq!(sc2.failover_budget, 6, "CLI beats config");
+        // Elastic membership needs the v5 links: a pinned older
+        // protocol is refused at resolution, not at launch.
+        let pinned = Args::parse(
+            ["train", "--shard-spares", "1", "--shard-proto", "4"].iter().map(|s| s.to_string()),
+        );
+        assert!(ShardConfig::resolve(&pinned, &Config::default()).is_err());
+        // And a zero failover budget is refused.
+        let zero =
+            Args::parse(["train", "--shard-failover-budget", "0"].iter().map(|s| s.to_string()));
+        assert!(ShardConfig::resolve(&zero, &Config::default()).is_err());
+        // Defaults stay non-elastic.
+        assert!(!ShardConfig::default().membership().elastic());
     }
 
     #[test]
@@ -2640,8 +3807,9 @@ mod tests {
         let acceptor = t.take_acceptor().unwrap();
         let worker = std::thread::spawn(move || {
             let mut state: Option<WorkerState> = None;
+            let mut wid = 0u32;
             while let Ok(mut conn) = acceptor.recv() {
-                match handle_conn(&mut conn, &mut state, 0, PROTO_VERSION) {
+                match handle_conn(&mut conn, &mut state, &mut wid, PROTO_VERSION) {
                     Ok(true) => continue,
                     _ => break,
                 }
@@ -2650,7 +3818,14 @@ mod tests {
         let mut conn = t.dial().unwrap();
         let _ = conn.set_timeout(Some(Duration::from_secs(10)));
         match wire::read_msg(&mut conn).unwrap() {
-            WireMsg::HelloV4 { worker_id: 0, overlap: true, compress: true, state: true, .. } => {}
+            WireMsg::HelloV5 {
+                worker_id: 0,
+                overlap: true,
+                compress: true,
+                state: true,
+                member: true,
+                ..
+            } => {}
             other => panic!("unexpected hello: {other:?}"),
         }
         let init = WireMsg::Init(InitMsg {
@@ -2712,7 +3887,7 @@ mod tests {
         let mut local = crate::optim::LocalExecutor::new(&blocks, UnitKind::Shampoo, &base, 1);
         let transports: Vec<_> =
             (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
-        let mut exec = ShardExecutor::launch_in_proc(
+        let mut exec = ShardExecutor::launch_in_proc_with(
             &blocks,
             UnitKind::Shampoo,
             &base,
@@ -2720,6 +3895,7 @@ mod tests {
             &transports,
             PROTO_VERSION,
             false,
+            &MembershipConfig::default(),
         )
         .expect("launch in-proc executor");
         assert!(exec.overlap_capable());
@@ -2755,7 +3931,7 @@ mod tests {
         let base = ShampooConfig::default();
         let transports: Vec<_> =
             (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
-        let mut exec = ShardExecutor::launch_in_proc(
+        let mut exec = ShardExecutor::launch_in_proc_with(
             &blocks,
             UnitKind::Shampoo,
             &base,
@@ -2763,6 +3939,7 @@ mod tests {
             &transports,
             1,
             true,
+            &MembershipConfig::default(),
         )
         .expect("launch v1 in-proc executor");
         assert!(!exec.overlap_capable(), "v1 workers must not report overlap capability");
@@ -2792,7 +3969,7 @@ mod tests {
         let mut local = crate::optim::LocalExecutor::new(&blocks, UnitKind::Shampoo, &base, 1);
         let transports: Vec<_> =
             (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
-        let mut exec = ShardExecutor::launch_in_proc(
+        let mut exec = ShardExecutor::launch_in_proc_with(
             &blocks,
             UnitKind::Shampoo,
             &base,
@@ -2800,6 +3977,7 @@ mod tests {
             &transports,
             PROTO_VERSION,
             true,
+            &MembershipConfig::default(),
         )
         .expect("launch compressed in-proc executor");
         assert_eq!(exec.label(), "shards=2/in-proc+delta");
@@ -2827,7 +4005,7 @@ mod tests {
             if t == 4 {
                 // Mid-run reconnect: the next encoded step must resync
                 // with full frames and keep the numbers identical.
-                exec.drop_connections();
+                exec.control().drop_connections();
             }
         }
         let v2_bytes: u64 = transports.iter().map(|t| t.bytes_delivered()).sum();
@@ -2851,8 +4029,9 @@ mod tests {
         let acceptor = t.take_acceptor().unwrap();
         let worker = std::thread::spawn(move || {
             let mut state: Option<WorkerState> = None;
+            let mut wid = 0u32;
             while let Ok(mut conn) = acceptor.recv() {
-                match handle_conn(&mut conn, &mut state, 0, PROTO_VERSION) {
+                match handle_conn(&mut conn, &mut state, &mut wid, PROTO_VERSION) {
                     Ok(true) => continue,
                     _ => break,
                 }
@@ -2861,7 +4040,7 @@ mod tests {
         let mut conn = t.dial().unwrap();
         let _ = conn.set_timeout(Some(Duration::from_secs(10)));
         match wire::read_msg(&mut conn).unwrap() {
-            WireMsg::HelloV4 { compress: true, .. } => {}
+            WireMsg::HelloV5 { compress: true, member: true, .. } => {}
             other => panic!("unexpected hello: {other:?}"),
         }
         let init = WireMsg::Init(InitMsg {
@@ -3043,7 +4222,7 @@ mod tests {
         let base = ShampooConfig::default();
         let transports: Vec<_> =
             (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
-        let mut exec = ShardExecutor::launch_in_proc(
+        let mut exec = ShardExecutor::launch_in_proc_with(
             &blocks,
             UnitKind::Shampoo,
             &base,
@@ -3051,6 +4230,7 @@ mod tests {
             &transports,
             PROTO_VERSION,
             false,
+            &MembershipConfig::default(),
         )
         .expect("launch executor");
         // Poison the worker-table lock the way a real failure would: a
@@ -3181,9 +4361,7 @@ mod tests {
         let mut local = crate::optim::LocalExecutor::new(&blocks, kind, &base, 1);
         let transports: Vec<_> =
             (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
-        let mut exec =
-            ShardExecutor::launch_in_proc(&blocks, kind, &base, 1, &transports, PROTO_VERSION, true)
-                .expect("launch v4 executor");
+        let mut exec = in_proc(&blocks, kind, &base, &transports, PROTO_VERSION, true);
         assert!(exec.state, "v4 workers must report the typed block-state capability");
         let mut p1 = vec![Matrix::zeros(9, 6)];
         let mut p2 = p1.clone();
@@ -3211,16 +4389,7 @@ mod tests {
         // stepping: still bitwise against the uninterrupted local run.
         let transports2: Vec<_> =
             (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
-        let mut exec2 = ShardExecutor::launch_in_proc(
-            &blocks,
-            kind,
-            &base,
-            1,
-            &transports2,
-            PROTO_VERSION,
-            true,
-        )
-        .expect("launch restore target");
+        let mut exec2 = in_proc(&blocks, kind, &base, &transports2, PROTO_VERSION, true);
         exec2.state_restore(wire_snaps).unwrap();
         let mut p3 = p2.clone();
         for t in 6..=9usize {
@@ -3263,9 +4432,7 @@ mod tests {
             ),
             FaultInjectingTransport::new(FaultScript::none().on_reply(7, FaultAction::Sever)),
         ];
-        let mut exec =
-            ShardExecutor::launch_in_proc(&blocks, kind, &base, 1, &transports, PROTO_VERSION, true)
-                .expect("launch v4 executor");
+        let mut exec = in_proc(&blocks, kind, &base, &transports, PROTO_VERSION, true);
         let mut p1 = vec![Matrix::zeros(9, 6)];
         let mut p2 = p1.clone();
         let mut rng = Pcg64::new(613);
@@ -3294,16 +4461,7 @@ mod tests {
             ),
             FaultInjectingTransport::new(FaultScript::none()),
         ];
-        let mut exec2 = ShardExecutor::launch_in_proc(
-            &blocks,
-            kind,
-            &base,
-            1,
-            &transports2,
-            PROTO_VERSION,
-            true,
-        )
-        .expect("launch restore target");
+        let mut exec2 = in_proc(&blocks, kind, &base, &transports2, PROTO_VERSION, true);
         exec2.state_restore(wire_snaps).expect("restore must survive the sever");
         assert_eq!(transports2[0].connections(), 2, "restore target reconnected mid-restore");
         let mut p3 = p2.clone();
@@ -3334,8 +4492,7 @@ mod tests {
         let mut local = crate::optim::LocalExecutor::new(&blocks, kind, &base, 1);
         let transports: Vec<_> =
             (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
-        let mut exec = ShardExecutor::launch_in_proc(&blocks, kind, &base, 1, &transports, 3, true)
-            .expect("launch v3-pinned executor");
+        let mut exec = in_proc(&blocks, kind, &base, &transports, 3, true);
         assert!(!exec.state, "v3 greetings must not report the typed-state capability");
         assert!(exec.overlap_capable(), "v3 keeps the overlap capability");
         let mut p1 = vec![Matrix::zeros(6, 6)];

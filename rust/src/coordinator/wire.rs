@@ -69,6 +69,21 @@
 //! v1 peers keep working exactly as before (typed frames and state RPCs
 //! simply never flow on those links), following the established degrade
 //! matrix.
+//!
+//! ## Wire protocol v5: dynamic membership
+//!
+//! Protocol v5 adds the membership handshake behind the `member`
+//! capability bit of [`WireMsg::HelloV5`]: the driver can send
+//! [`WireMsg::Adopt`] to re-seat a connected worker — typically a warm
+//! spare — as a specific shard under an epoch-numbered fleet view
+//! (reply: [`WireMsg::AdoptOk`]). The adopted identity sticks for the
+//! rest of the worker's life, so reconnect + replay keep working after
+//! a migration. Everything else about a migration reuses existing
+//! layers: state moves via the v4 `StateSnap`/`StateRestore` typed
+//! payloads, and the replacement link's delta baselines resync exactly
+//! like any fresh connection. v4-and-below peers step bitwise as
+//! before; elastic failover just refuses cleanly on fleets containing
+//! any non-`member` link.
 
 use crate::optim::precond::{BlockStateSnap, PrecondState, SideState, SketchState};
 use crate::tensor::Matrix;
@@ -76,16 +91,19 @@ use anyhow::{anyhow, bail, ensure, Context};
 use std::io::{Read, Write};
 use std::time::Duration;
 
-/// Current wire protocol version, carried in [`WireMsg::HelloV4`].
+/// Current wire protocol version, carried in [`WireMsg::HelloV5`].
 /// Version 1 (the plain [`WireMsg::Hello`] greeting) predates the
 /// `RefreshAhead` messages; drivers treat v1 workers as refresh-overlap
 /// incapable and keep their refreshes synchronous. Version 2 added the
 /// capability handshake + RefreshAhead; version 3 adds the
 /// delta-compressed block payload layer ([`DeltaMat`]); version 4 adds
-/// the typed [`BlockPayload`] codec and the block-state RPCs. Drivers
-/// treat lower-version workers as lacking the newer layers and degrade
-/// per link.
-pub const PROTO_VERSION: u32 = 4;
+/// the typed [`BlockPayload`] codec and the block-state RPCs; version 5
+/// adds the membership frames ([`WireMsg::Adopt`] /
+/// [`WireMsg::AdoptOk`]) behind the `member` capability, so a warm
+/// spare can be re-seated as a dead shard mid-run. Drivers treat
+/// lower-version workers as lacking the newer layers and degrade per
+/// link.
+pub const PROTO_VERSION: u32 = 5;
 
 /// A connected driver↔worker byte stream: any transport the shard
 /// channel can speak — TCP, Unix sockets, or the in-memory
@@ -929,6 +947,19 @@ pub enum WireMsg {
     StateSnap(StateSnapMsg),
     StateSnapOk(StateSnapOkMsg),
     StateRestore(StateRestoreMsg),
+    /// Worker → driver greeting from protocol v5 on: the v4 capability
+    /// report plus `member` — whether the worker accepts the dynamic
+    /// membership frames ([`WireMsg::Adopt`]). A false report (or any
+    /// older greeting) keeps that link on a fixed seat.
+    HelloV5 { worker_id: u32, proto: u32, overlap: bool, compress: bool, state: bool, member: bool },
+    /// Driver → worker: re-seat this worker as shard `shard` under
+    /// fleet-view `epoch` — sent to a warm spare (or a freshly spawned
+    /// replacement) before `Init`, so its identity survives reconnects.
+    /// Reply: [`WireMsg::AdoptOk`] echoing both fields. Idempotent —
+    /// replay-safe.
+    Adopt { epoch: u64, shard: u32 },
+    /// Worker → driver: the adoption acknowledgement.
+    AdoptOk { epoch: u64, shard: u32 },
 }
 
 const TAG_HELLO: u8 = 1;
@@ -953,6 +984,9 @@ const TAG_REFRESH_AHEAD_OK_V4: u8 = 19;
 const TAG_STATE_SNAP: u8 = 20;
 const TAG_STATE_SNAP_OK: u8 = 21;
 const TAG_STATE_RESTORE: u8 = 22;
+const TAG_HELLO_V5: u8 = 23;
+const TAG_ADOPT: u8 = 24;
+const TAG_ADOPT_OK: u8 = 25;
 
 /// [`DeltaMat`] mode bytes.
 const DM_RAW: u8 = 0;
@@ -1309,6 +1343,25 @@ pub fn encode_frame(msg: &WireMsg) -> anyhow::Result<Vec<u8>> {
             for b in &restore.entries {
                 e.block_state(b);
             }
+        }
+        WireMsg::HelloV5 { worker_id, proto, overlap, compress, state, member } => {
+            e.u8(TAG_HELLO_V5);
+            e.u32(*worker_id);
+            e.u32(*proto);
+            e.boolean(*overlap);
+            e.boolean(*compress);
+            e.boolean(*state);
+            e.boolean(*member);
+        }
+        WireMsg::Adopt { epoch, shard } => {
+            e.u8(TAG_ADOPT);
+            e.u64(*epoch);
+            e.u32(*shard);
+        }
+        WireMsg::AdoptOk { epoch, shard } => {
+            e.u8(TAG_ADOPT_OK);
+            e.u64(*epoch);
+            e.u32(*shard);
         }
     }
     if e.buf.len() > MAX_FRAME_BYTES {
@@ -1728,6 +1781,16 @@ pub fn decode_payload(payload: &[u8]) -> anyhow::Result<WireMsg> {
             }
             WireMsg::StateRestore(StateRestoreMsg { entries })
         }
+        TAG_HELLO_V5 => WireMsg::HelloV5 {
+            worker_id: d.u32()?,
+            proto: d.u32()?,
+            overlap: d.boolean()?,
+            compress: d.boolean()?,
+            state: d.boolean()?,
+            member: d.boolean()?,
+        },
+        TAG_ADOPT => WireMsg::Adopt { epoch: d.u64()?, shard: d.u32()? },
+        TAG_ADOPT_OK => WireMsg::AdoptOk { epoch: d.u64()?, shard: d.u32()? },
         other => bail!("shard wire: unknown message tag {other}"),
     };
     d.done()?;
@@ -1898,6 +1961,25 @@ mod tests {
             compress: false,
             state: false,
         });
+        roundtrip(WireMsg::HelloV5 {
+            worker_id: 3,
+            proto: PROTO_VERSION,
+            overlap: true,
+            compress: true,
+            state: true,
+            member: true,
+        });
+        roundtrip(WireMsg::HelloV5 {
+            worker_id: 0,
+            proto: 11,
+            overlap: false,
+            compress: false,
+            state: false,
+            member: false,
+        });
+        roundtrip(WireMsg::Adopt { epoch: 0, shard: 0 });
+        roundtrip(WireMsg::Adopt { epoch: u64::MAX, shard: u32::MAX });
+        roundtrip(WireMsg::AdoptOk { epoch: 7, shard: 2 });
         roundtrip(WireMsg::StepV4(StepV4Msg {
             t: 11,
             base_t: 10,
@@ -2125,7 +2207,7 @@ mod tests {
     }
 
     fn arbitrary_msg(rng: &mut Pcg64) -> WireMsg {
-        match rng.below(22) {
+        match rng.below(25) {
             0 => WireMsg::Hello { worker_id: rng.next_u64() as u32 },
             1 => WireMsg::HelloV2 {
                 worker_id: rng.next_u64() as u32,
@@ -2318,12 +2400,22 @@ mod tests {
                     entries: (0..n).map(|i| arbitrary_block_state(rng, i as u32)).collect(),
                 })
             }
-            _ => {
+            21 => {
                 let n = rng.below(3);
                 WireMsg::StateRestore(StateRestoreMsg {
                     entries: (0..n).map(|i| arbitrary_block_state(rng, i as u32)).collect(),
                 })
             }
+            22 => WireMsg::HelloV5 {
+                worker_id: rng.next_u64() as u32,
+                proto: rng.next_u64() as u32,
+                overlap: rng.bernoulli(0.5),
+                compress: rng.bernoulli(0.5),
+                state: rng.bernoulli(0.5),
+                member: rng.bernoulli(0.5),
+            },
+            23 => WireMsg::Adopt { epoch: rng.next_u64(), shard: rng.next_u64() as u32 },
+            _ => WireMsg::AdoptOk { epoch: rng.next_u64(), shard: rng.next_u64() as u32 },
         }
     }
 
@@ -2370,7 +2462,7 @@ mod tests {
                 );
             }
         }
-        assert!(kinds_seen.len() >= 22, "generator missed kinds: {}", kinds_seen.len());
+        assert!(kinds_seen.len() >= 25, "generator missed kinds: {}", kinds_seen.len());
     }
 
     #[test]

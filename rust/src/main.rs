@@ -34,6 +34,8 @@ USAGE:
                 [--shards N] [--shard-transport tcp|unix]
                 [--shard-proto V] [--shard-compress BOOL]
                 [--shard-launch TEMPLATE]
+                [--shard-spares N] [--rebalance BOOL]
+                [--shard-failover-budget K]
   sketchy bench-gate [--baseline F] [--current F] [--tolerance R]
   sketchy shard-worker --worker-id N [--transport tcp|unix]
                        [--socket-dir DIR] [--proto-version V]
@@ -71,9 +73,19 @@ instead of O(d^2) — over the StateSnap/StateRestore RPCs; --checkpoint
 embeds that same typed state (checkpoint v2) and --resume restores it,
 so a resumed run continues bitwise where the saved one stopped.
 Workers pinned to v3 or below keep stepping, but state RPCs are
-refused and checkpoints degrade to params only. bench-gate compares a
+refused and checkpoints degrade to params only. --shard-spares N keeps
+N warm spare workers on standby and turns the fleet elastic (wire
+protocol v5): when a worker dies mid-run the driver re-seats its
+blocks on a spare from the last synced snapshot, replays the journaled
+steps since (at most --shard-failover-budget of them), and the run
+continues bitwise identical to an uninterrupted one — refresh
+accounting included. --rebalance additionally lets the driver migrate
+blocks between live workers at sync points when per-shard step
+latencies drift apart; migrations reuse the same deterministic
+snapshot/restore path, so numbers never change. bench-gate compares a
 fresh engine bench record against the committed baseline and exits
-nonzero on a >tolerance regression.
+nonzero on a >tolerance regression (and on *_max ceiling overruns,
+e.g. the shard migration replay bound).
 
 Run `sketchy list` for the experiment catalogue.";
 
@@ -283,7 +295,8 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
             // logged notice).
             let engine = if shard_cfg.enabled() {
                 let launch = ShardLaunch::current_exe(&shard_cfg)?;
-                sharded_engine_optimizer(name, &shapes, base, rank, ecfg, &launch)?
+                let membership = shard_cfg.membership();
+                sharded_engine_optimizer(name, &shapes, base, rank, ecfg, &launch, &membership)?
             } else {
                 engine_optimizer(name, &shapes, base, rank, ecfg)
             };
@@ -301,11 +314,21 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
                             // The executor caps shards at the block
                             // count; report what actually launched.
                             format!(
-                                "{} shards over {}{}{}",
+                                "{} shards over {}{}{}{}",
                                 shard_cfg.shards.min(engine.blocks().len()),
                                 shard_cfg.transport,
                                 if shard_cfg.compress { ", delta-compressed" } else { "" },
-                                if shard_cfg.launch.is_some() { ", templated launch" } else { "" }
+                                if shard_cfg.launch.is_some() { ", templated launch" } else { "" },
+                                if shard_cfg.membership().elastic() {
+                                    format!(
+                                        ", elastic ({} spares, rebalance={}, budget={})",
+                                        shard_cfg.spares,
+                                        shard_cfg.rebalance,
+                                        shard_cfg.failover_budget
+                                    )
+                                } else {
+                                    String::new()
+                                }
                             )
                         } else {
                             format!("{} threads", ecfg.effective_threads(engine.blocks().len()))

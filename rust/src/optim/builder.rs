@@ -1,0 +1,184 @@
+//! One construction path for every engine/executor combination.
+//!
+//! PR 7 collapses the old constructor sprawl (`PrecondEngine::new` /
+//! `sharded` / `with_executor` plus `ShardExecutor::launch` /
+//! `launch_in_proc`) into a single fleet-builder API, so elastic
+//! membership has exactly one place to thread its knobs through:
+//!
+//! ```ignore
+//! // In-process engine (the old PrecondEngine::new):
+//! let engine = ExecutorBuilder::local().build(&shapes, kind, base, ecfg)?;
+//!
+//! // Elastic process fleet with two warm spares:
+//! let engine = ExecutorBuilder::sharded(launch)
+//!     .spares(2)
+//!     .rebalance(true)
+//!     .failover_budget(8)
+//!     .build(&shapes, kind, base, ecfg)?;
+//!
+//! // Test harness: in-proc shard workers over scripted transports:
+//! let engine = ExecutorBuilder::in_proc(transports, PROTO_VERSION, true)
+//!     .build(&shapes, kind, base, ecfg)?;
+//! ```
+//!
+//! Every variant funnels into [`PrecondEngine::build_with`], so knob
+//! resolution (overlap capability, thread budgets, block planning) is
+//! identical across local, process-sharded, and in-proc harness
+//! engines — the builder-equivalence tests pin old ≡ new bitwise.
+
+use super::engine::{BlockExecutor, EngineConfig, LocalExecutor, PrecondEngine, UnitKind};
+use super::shampoo::ShampooConfig;
+use crate::coordinator::fault::FaultInjectingTransport;
+use crate::coordinator::membership::MembershipConfig;
+use crate::coordinator::shard::{ShardExecutor, ShardLaunch};
+use crate::optim::Block;
+use anyhow::ensure;
+use std::sync::Arc;
+
+/// Factory closure variant: anything implementing [`BlockExecutor`].
+type CustomBuild = Box<
+    dyn FnOnce(&[Block], UnitKind, &ShampooConfig, usize) -> anyhow::Result<Box<dyn BlockExecutor>>,
+>;
+
+enum Mode {
+    Local,
+    Sharded(ShardLaunch),
+    InProc { transports: Vec<Arc<FaultInjectingTransport>>, proto: u32, compress: bool },
+    Custom(CustomBuild),
+}
+
+/// Builder for a [`PrecondEngine`] over any executor backend. See the
+/// module docs for the migration map from the old constructors.
+pub struct ExecutorBuilder {
+    mode: Mode,
+    membership: MembershipConfig,
+}
+
+impl ExecutorBuilder {
+    /// In-process engine over the thread-pool executor (the old
+    /// `PrecondEngine::new`).
+    pub fn local() -> ExecutorBuilder {
+        ExecutorBuilder { mode: Mode::Local, membership: MembershipConfig::default() }
+    }
+
+    /// Cross-process shard fleet described by `launch` (the old
+    /// `PrecondEngine::sharded`). Elastic knobs ([`Self::spares`],
+    /// [`Self::rebalance`]) apply to this fleet.
+    pub fn sharded(launch: ShardLaunch) -> ExecutorBuilder {
+        ExecutorBuilder { mode: Mode::Sharded(launch), membership: MembershipConfig::default() }
+    }
+
+    /// In-proc shard workers over scripted fault-injection transports
+    /// (the old `ShardExecutor::launch_in_proc` under an engine). Under
+    /// elastic membership the last [`Self::spares`] transports back
+    /// warm spare workers instead of seats.
+    pub fn in_proc(
+        transports: Vec<Arc<FaultInjectingTransport>>,
+        proto: u32,
+        compress: bool,
+    ) -> ExecutorBuilder {
+        ExecutorBuilder {
+            mode: Mode::InProc { transports, proto, compress },
+            membership: MembershipConfig::default(),
+        }
+    }
+
+    /// Engine over an executor built by the caller (the old
+    /// `PrecondEngine::with_executor`).
+    pub fn custom<F>(build: F) -> ExecutorBuilder
+    where
+        F: FnOnce(
+                &[Block],
+                UnitKind,
+                &ShampooConfig,
+                usize,
+            ) -> anyhow::Result<Box<dyn BlockExecutor>>
+            + 'static,
+    {
+        ExecutorBuilder {
+            mode: Mode::Custom(Box::new(build)),
+            membership: MembershipConfig::default(),
+        }
+    }
+
+    /// Warm spare workers to launch alongside the fleet (elastic
+    /// membership; sharded/in-proc modes only).
+    pub fn spares(mut self, spares: usize) -> ExecutorBuilder {
+        self.membership.spares = spares;
+        self
+    }
+
+    /// Enable latency-fed rebalancing at sync points (elastic
+    /// membership; sharded/in-proc modes only).
+    pub fn rebalance(mut self, on: bool) -> ExecutorBuilder {
+        self.membership.rebalance = on;
+        self
+    }
+
+    /// Steps between journal sync points — the bound on how many steps
+    /// a migration ever replays. Must be ≥ 1.
+    pub fn failover_budget(mut self, steps: u64) -> ExecutorBuilder {
+        self.membership.failover_budget = steps;
+        self
+    }
+
+    /// Replace the whole membership config at once (the CLI resolution
+    /// path hands over a [`MembershipConfig`] it already validated).
+    pub fn membership(mut self, membership: MembershipConfig) -> ExecutorBuilder {
+        self.membership = membership;
+        self
+    }
+
+    /// Build the engine: plan blocks, stand up the executor, resolve
+    /// the overlap knob against its capability report.
+    pub fn build(
+        self,
+        shapes: &[(usize, usize)],
+        kind: UnitKind,
+        base: ShampooConfig,
+        ecfg: EngineConfig,
+    ) -> anyhow::Result<PrecondEngine> {
+        let ExecutorBuilder { mode, membership } = self;
+        if matches!(mode, Mode::Local | Mode::Custom(_)) {
+            ensure!(
+                !membership.elastic(),
+                "elastic membership (spares/rebalance) needs a shard fleet; \
+                 use ExecutorBuilder::sharded or ::in_proc"
+            );
+        }
+        match mode {
+            Mode::Local => {
+                PrecondEngine::build_with(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
+                    Ok(Box::new(LocalExecutor::new(blocks, kind, base, threads)))
+                })
+            }
+            Mode::Sharded(launch) => {
+                PrecondEngine::build_with(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
+                    Ok(Box::new(ShardExecutor::launch_with(
+                        &launch,
+                        blocks,
+                        kind,
+                        base,
+                        threads,
+                        &membership,
+                    )?))
+                })
+            }
+            Mode::InProc { transports, proto, compress } => {
+                PrecondEngine::build_with(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
+                    Ok(Box::new(ShardExecutor::launch_in_proc_with(
+                        blocks,
+                        kind,
+                        base,
+                        threads,
+                        &transports,
+                        proto,
+                        compress,
+                        &membership,
+                    )?))
+                })
+            }
+            Mode::Custom(build) => PrecondEngine::build_with(shapes, kind, base, ecfg, build),
+        }
+    }
+}

@@ -79,6 +79,7 @@ use super::precond::{
     StepCtx,
 };
 use super::shampoo::ShampooConfig;
+use crate::coordinator::membership::MembershipConfig;
 use crate::coordinator::shard::{ShardExecutor, ShardLaunch};
 use crate::coordinator::wire::{BlockStateMsg, StateExpect};
 use crate::runtime::pool;
@@ -323,6 +324,13 @@ pub trait BlockExecutor: Send {
     /// identical to the snapshotted one.
     fn state_restore(&mut self, _snaps: Vec<BlockStateSnap>) -> anyhow::Result<()> {
         anyhow::bail!("executor {} does not support state restore", self.label())
+    }
+
+    /// Control handle over this executor's worker fleet (kill/sever
+    /// fault injection, membership epoch and stats, staged rebalance).
+    /// `None` for executors without a fleet (the local executor).
+    fn fleet_control(&self) -> Option<crate::coordinator::shard::FleetControl> {
+        None
     }
 }
 
@@ -679,43 +687,13 @@ fn resolve_overlap(ecfg: &mut EngineConfig, executor: &dyn BlockExecutor) {
 }
 
 impl PrecondEngine {
-    pub fn new(
-        shapes: &[(usize, usize)],
-        kind: UnitKind,
-        base: ShampooConfig,
-        ecfg: EngineConfig,
-    ) -> Self {
-        PrecondEngine::with_executor(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
-            Ok(Box::new(LocalExecutor::new(blocks, kind, base, threads)))
-        })
-        .expect("local executor construction is infallible")
-    }
-
-    /// Cross-process engine: blocks are sharded across `sketchy
-    /// shard-worker` processes described by `launch`; statistics are
-    /// shipped, driven and scattered over the wire protocol. Numerics
-    /// are bitwise identical to the in-process engine. With
-    /// `ecfg.overlap` the t+1 due-set ships to the workers as a second
-    /// in-flight `RefreshAhead` RPC per shard (degrading to synchronous
-    /// refresh when any worker lacks the capability).
-    pub fn sharded(
-        shapes: &[(usize, usize)],
-        kind: UnitKind,
-        base: ShampooConfig,
-        ecfg: EngineConfig,
-        launch: &ShardLaunch,
-    ) -> anyhow::Result<Self> {
-        PrecondEngine::with_executor(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
-            Ok(Box::new(ShardExecutor::launch(launch, blocks, kind, base, threads)?))
-        })
-    }
-
-    /// Engine over an executor built by the caller: `build` receives the
-    /// planned block partition, the (normalized) unit config, and the
-    /// thread knob, and returns any [`BlockExecutor`]. This is how tests
-    /// and benches mount the in-memory fault-injected shard executor
-    /// ([`ShardExecutor::launch_in_proc`]) under a full engine.
-    pub fn with_executor(
+    /// Engine over an executor built by a factory closure: the single
+    /// internal construction path behind [`ExecutorBuilder`] and the
+    /// deprecated constructor shims. `build` receives the planned block
+    /// partition, the (normalized) unit config, and the thread knob.
+    ///
+    /// [`ExecutorBuilder`]: crate::optim::ExecutorBuilder
+    pub(crate) fn build_with(
         shapes: &[(usize, usize)],
         kind: UnitKind,
         base: ShampooConfig,
@@ -737,9 +715,82 @@ impl PrecondEngine {
         Ok(PrecondEngine { base, ecfg, kind, blocks, executor, t: 0, refreshes: 0, poisoned: None })
     }
 
+    /// In-process engine over the thread-pool executor.
+    #[deprecated(note = "use optim::ExecutorBuilder::local().build(...)")]
+    pub fn new(
+        shapes: &[(usize, usize)],
+        kind: UnitKind,
+        base: ShampooConfig,
+        ecfg: EngineConfig,
+    ) -> Self {
+        PrecondEngine::build_with(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
+            Ok(Box::new(LocalExecutor::new(blocks, kind, base, threads)))
+        })
+        .expect("local executor construction is infallible")
+    }
+
+    /// Cross-process engine: blocks are sharded across `sketchy
+    /// shard-worker` processes described by `launch`; statistics are
+    /// shipped, driven and scattered over the wire protocol. Numerics
+    /// are bitwise identical to the in-process engine. With
+    /// `ecfg.overlap` the t+1 due-set ships to the workers as a second
+    /// in-flight `RefreshAhead` RPC per shard (degrading to synchronous
+    /// refresh when any worker lacks the capability).
+    #[deprecated(note = "use optim::ExecutorBuilder::sharded(launch).build(...)")]
+    pub fn sharded(
+        shapes: &[(usize, usize)],
+        kind: UnitKind,
+        base: ShampooConfig,
+        ecfg: EngineConfig,
+        launch: &ShardLaunch,
+    ) -> anyhow::Result<Self> {
+        let membership = MembershipConfig::default();
+        PrecondEngine::build_with(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
+            Ok(Box::new(ShardExecutor::launch_with(
+                launch,
+                blocks,
+                kind,
+                base,
+                threads,
+                &membership,
+            )?))
+        })
+    }
+
+    /// Engine over an executor built by the caller.
+    #[deprecated(note = "use optim::ExecutorBuilder::custom(build).build(...)")]
+    pub fn with_executor(
+        shapes: &[(usize, usize)],
+        kind: UnitKind,
+        base: ShampooConfig,
+        ecfg: EngineConfig,
+        build: impl FnOnce(
+            &[Block],
+            UnitKind,
+            &ShampooConfig,
+            usize,
+        ) -> anyhow::Result<Box<dyn BlockExecutor>>,
+    ) -> anyhow::Result<Self> {
+        PrecondEngine::build_with(shapes, kind, base, ecfg, build)
+    }
+
+    /// In-process engine (non-deprecated spelling used by the local
+    /// convenience constructors below and the optimizer factories).
+    fn local(
+        shapes: &[(usize, usize)],
+        kind: UnitKind,
+        base: ShampooConfig,
+        ecfg: EngineConfig,
+    ) -> Self {
+        PrecondEngine::build_with(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
+            Ok(Box::new(LocalExecutor::new(blocks, kind, base, threads)))
+        })
+        .expect("local executor construction is infallible")
+    }
+
     /// Exact-Kronecker (Shampoo) engine.
     pub fn shampoo(shapes: &[(usize, usize)], base: ShampooConfig, ecfg: EngineConfig) -> Self {
-        PrecondEngine::new(shapes, UnitKind::Shampoo, base, ecfg)
+        PrecondEngine::local(shapes, UnitKind::Shampoo, base, ecfg)
     }
 
     /// FD-sketched (S-Shampoo) engine.
@@ -749,12 +800,12 @@ impl PrecondEngine {
         base: ShampooConfig,
         ecfg: EngineConfig,
     ) -> Self {
-        PrecondEngine::new(shapes, UnitKind::Sketched { rank }, base, ecfg)
+        PrecondEngine::local(shapes, UnitKind::Sketched { rank }, base, ecfg)
     }
 
     /// Diagonal-Adam engine (useful as the parallel-overhead baseline).
     pub fn adam(shapes: &[(usize, usize)], base: ShampooConfig, ecfg: EngineConfig) -> Self {
-        PrecondEngine::new(shapes, UnitKind::Adam, base, ecfg)
+        PrecondEngine::local(shapes, UnitKind::Adam, base, ecfg)
     }
 
     /// The §3.4 block partition.
@@ -773,6 +824,13 @@ impl PrecondEngine {
     /// in-process executors only — sharded state lives out-of-process).
     pub fn for_each_sketch(&mut self, mut f: impl FnMut(&FdSketch)) {
         self.executor.for_each_sketch(&mut f);
+    }
+
+    /// Control handle over the executor's worker fleet (kill/sever
+    /// fault injection, membership epoch + stats, staged rebalancing).
+    /// `None` for engines over the in-process executor.
+    pub fn fleet_control(&self) -> Option<crate::coordinator::shard::FleetControl> {
+        self.executor.fleet_control()
     }
 
     /// Re-seat the step counter after a [`PrecondEngine::state_restore`]:
@@ -1013,11 +1071,13 @@ pub fn engine_optimizer(
     rank: usize,
     ecfg: EngineConfig,
 ) -> Option<PrecondEngine> {
-    engine_unit_kind(name, rank).map(|kind| PrecondEngine::new(shapes, kind, base, ecfg))
+    engine_unit_kind(name, rank).map(|kind| PrecondEngine::local(shapes, kind, base, ecfg))
 }
 
 /// Sharded variant of [`engine_optimizer`]: same names, blocks driven by
-/// `launch.shards` worker processes.
+/// `launch.shards` worker processes. `membership` configures the elastic
+/// fleet (spares, rebalancing, failover budget); pass
+/// `MembershipConfig::default()` for a fixed fleet.
 pub fn sharded_engine_optimizer(
     name: &str,
     shapes: &[(usize, usize)],
@@ -1025,9 +1085,14 @@ pub fn sharded_engine_optimizer(
     rank: usize,
     ecfg: EngineConfig,
     launch: &ShardLaunch,
+    membership: &MembershipConfig,
 ) -> anyhow::Result<Option<PrecondEngine>> {
     match engine_unit_kind(name, rank) {
-        Some(kind) => Ok(Some(PrecondEngine::sharded(shapes, kind, base, ecfg, launch)?)),
+        Some(kind) => Ok(Some(
+            crate::optim::ExecutorBuilder::sharded(launch.clone())
+                .membership(membership.clone())
+                .build(shapes, kind, base, ecfg)?,
+        )),
         None => Ok(None),
     }
 }
@@ -1237,15 +1302,11 @@ mod tests {
         }
         let shapes = [(6usize, 6usize)];
         let ecfg = EngineConfig { block_size: 3, overlap: true, ..Default::default() };
-        let mut incapable = PrecondEngine::with_executor(
-            &shapes,
-            UnitKind::Shampoo,
-            base_cfg(),
-            ecfg,
-            |blocks, kind, base, threads| {
-                Ok(Box::new(NoOverlap(LocalExecutor::new(blocks, kind, base, threads))))
-            },
-        )
+        let mut incapable = crate::optim::ExecutorBuilder::custom(|blocks, kind, base, threads| {
+            Ok(Box::new(NoOverlap(LocalExecutor::new(blocks, kind, base, threads)))
+                as Box<dyn BlockExecutor>)
+        })
+        .build(&shapes, UnitKind::Shampoo, base_cfg(), ecfg)
         .unwrap();
         assert!(!incapable.ecfg.overlap, "knob must resolve off for incapable executors");
         assert!(!incapable.name().contains("overlap"), "name: {}", incapable.name());

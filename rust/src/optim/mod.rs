@@ -22,9 +22,13 @@
 //! - [`BlockExecutor`] — the engine's execution substrate: the
 //!   in-process work queue ([`LocalExecutor`]) or cross-process shard
 //!   workers ([`crate::coordinator::shard::ShardExecutor`])
+//! - [`ExecutorBuilder`] — the one construction path over all of the
+//!   above (local / sharded / in-proc harness / custom), threading the
+//!   elastic membership knobs ([`builder`])
 
 pub mod adam;
 pub mod blocking;
+pub mod builder;
 pub mod engine;
 pub mod fd_baselines;
 pub mod first_order;
@@ -41,6 +45,7 @@ pub mod vector;
 
 pub use adam::{Adam, Sgd};
 pub use blocking::{partition, Block, Blocked};
+pub use builder::ExecutorBuilder;
 pub use engine::{
     engine_optimizer, sharded_engine_optimizer, BlockExecutor, EngineConfig, LocalExecutor,
     PrecondEngine, RefreshAheadDone, RefreshAheadPlan, UnitKind,

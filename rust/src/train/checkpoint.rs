@@ -381,7 +381,9 @@ mod tests {
             refresh_interval: 2,
             ..EngineConfig::default()
         };
-        PrecondEngine::new(shapes, UnitKind::Sketched { rank: 3 }, base, ecfg)
+        crate::optim::ExecutorBuilder::local()
+            .build(shapes, UnitKind::Sketched { rank: 3 }, base, ecfg)
+            .unwrap()
     }
 
     /// Params + typed state after a few steps of a sketched engine.

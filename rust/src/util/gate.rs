@@ -21,7 +21,13 @@
 //! RefreshAhead overlap win is enforced — `overlap_speedup_min` fails
 //! the PR if the pipelined engine stops beating the synchronous one
 //! (speedups are already machine-normalized ratios, so no calibration
-//! is applied to floors).
+//! is applied to floors). Symmetrically, `<metric>_max` demands a
+//! **ceiling**: the current record must carry `<metric>` at or below
+//! the bound. This is how the elastic-fleet handoff is enforced —
+//! `shard_migrate_steps_max` fails the PR if a kill-and-replace
+//! migration starts replaying more than one failover budget's worth of
+//! journal (ceilings are deterministic counters, so no calibration is
+//! applied there either).
 
 use super::json::Json;
 use anyhow::{bail, Context};
@@ -154,6 +160,30 @@ pub fn compare_bench(
                 report.lines.push(format!("{metric}: current {v:.4} (floor {floor:.4})"));
                 if v < floor {
                     report.failures.push(format!("{metric} {v:.4} under floor {floor:.4}"));
+                }
+            }
+        }
+    }
+    // Ceiling metrics: `<metric>_max` in the baseline demands the
+    // current record carry `<metric>` at or below the bound. Zero is a
+    // legitimate ceiling-metric value (e.g. a handoff that replayed no
+    // journal), so unlike floors this reads the plain number.
+    for (key, value) in base_obj {
+        let Some(metric) = key.strip_suffix("_max") else {
+            continue;
+        };
+        let ceiling = match value.as_f64() {
+            Some(v) => v,
+            None => continue,
+        };
+        match current.get(metric).and_then(|v| v.as_f64()) {
+            None => {
+                report.failures.push(format!("ceiling metric {metric} missing in current record"));
+            }
+            Some(v) => {
+                report.lines.push(format!("{metric}: current {v:.4} (ceiling {ceiling:.4})"));
+                if v > ceiling {
+                    report.failures.push(format!("{metric} {v:.4} over ceiling {ceiling:.4}"));
                 }
             }
         }
@@ -333,6 +363,48 @@ mod tests {
         assert!(!r.passed());
         assert!(
             r.failures.iter().any(|f| f.contains("missing")),
+            "{:?}",
+            r.failures
+        );
+    }
+
+    #[test]
+    fn ceiling_metric_enforced() {
+        let base = Json::parse(
+            r#"{"serial_median_ns": 1000, "calibration_ns": 100,
+                 "shard_migrate_steps_max": 8, "identical": true}"#,
+        )
+        .unwrap();
+        // At/below the ceiling passes — including zero, which the
+        // positive-number floor path would have treated as missing.
+        for steps in ["0", "2", "8"] {
+            let good = Json::parse(&format!(
+                r#"{{"serial_median_ns": 1000, "calibration_ns": 100,
+                     "shard_migrate_steps": {steps}, "identical": true}}"#
+            ))
+            .unwrap();
+            let r = compare_bench(&base, &good, 0.25).unwrap();
+            assert!(r.passed(), "steps {steps}: failures: {:?}", r.failures);
+            assert!(r.render().contains("ceiling"));
+        }
+        // Over the ceiling fires.
+        let over = Json::parse(
+            r#"{"serial_median_ns": 1000, "calibration_ns": 100,
+                 "shard_migrate_steps": 9, "identical": true}"#,
+        )
+        .unwrap();
+        let r = compare_bench(&base, &over, 0.25).unwrap();
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("over ceiling"), "{:?}", r.failures);
+        // Dropping the metric entirely also fires.
+        let missing = Json::parse(
+            r#"{"serial_median_ns": 1000, "calibration_ns": 100, "identical": true}"#,
+        )
+        .unwrap();
+        let r = compare_bench(&base, &missing, 0.25).unwrap();
+        assert!(!r.passed());
+        assert!(
+            r.failures.iter().any(|f| f.contains("ceiling metric shard_migrate_steps missing")),
             "{:?}",
             r.failures
         );

@@ -11,10 +11,11 @@
 //! (thread count 1), which takes exactly the code path `SKETCHY_THREADS
 //! = 1` takes.
 
-use sketchy::coordinator::shard::ShardExecutor;
 use sketchy::coordinator::wire::PROTO_VERSION;
 use sketchy::coordinator::{FaultInjectingTransport, FaultScript};
-use sketchy::optim::{EngineConfig, GraftType, Optimizer, PrecondEngine, ShampooConfig, UnitKind};
+use sketchy::optim::{
+    EngineConfig, ExecutorBuilder, GraftType, Optimizer, PrecondEngine, ShampooConfig, UnitKind,
+};
 use sketchy::runtime::WorkerPool;
 use sketchy::sketch::FdSketch;
 use sketchy::tensor::ops::{self, with_single_thread};
@@ -239,18 +240,9 @@ fn in_proc_sharded_engine(shards: usize, ecfg: EngineConfig, proto: u32) -> Prec
         (0..shards).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
     // Delta-compressed payloads on (inert below wire protocol v3): the
     // accounting-parity contract must hold over the compressed wire too.
-    PrecondEngine::with_executor(
-        &shapes,
-        UnitKind::Shampoo,
-        base_cfg(),
-        ecfg,
-        |blocks, kind, base, threads| {
-            Ok(Box::new(ShardExecutor::launch_in_proc(
-                blocks, kind, base, threads, &transports, proto, true,
-            )?))
-        },
-    )
-    .expect("launch in-proc sharded engine")
+    ExecutorBuilder::in_proc(transports, proto, true)
+        .build(&shapes, UnitKind::Shampoo, base_cfg(), ecfg)
+        .expect("launch in-proc sharded engine")
 }
 
 #[test]

@@ -8,13 +8,13 @@
 //! built `sketchy` binary (`CARGO_BIN_EXE_sketchy`); the CI
 //! `shard-smoke` job runs them in release mode.
 
-use sketchy::coordinator::shard::{ShardExecutor, ShardLaunch, ShardTransport};
+use sketchy::coordinator::shard::{FleetStats, ShardExecutor, ShardLaunch, ShardTransport};
 use sketchy::coordinator::wire::PROTO_VERSION;
-use sketchy::coordinator::{FaultAction, FaultInjectingTransport, FaultScript};
+use sketchy::coordinator::{FaultAction, FaultInjectingTransport, FaultScript, MembershipConfig};
 use sketchy::optim::precond::StepCtx;
 use sketchy::optim::{
-    partition, Adam, BlockExecutor, EngineConfig, GraftType, LocalExecutor, Optimizer,
-    PrecondEngine, ShampooConfig, UnitKind,
+    partition, Adam, BlockExecutor, EngineConfig, ExecutorBuilder, GraftType, LocalExecutor,
+    Optimizer, PrecondEngine, ShampooConfig, UnitKind,
 };
 use sketchy::tensor::Matrix;
 use sketchy::train::{load_checkpoint_full, save_checkpoint_with_state};
@@ -36,6 +36,41 @@ fn mk_launch(shards: usize, transport: ShardTransport) -> ShardLaunch {
         compress: false,
         launch: None,
     }
+}
+
+/// Builder-era local engine (the old `PrecondEngine::new`).
+fn local_engine(
+    shapes: &[(usize, usize)],
+    kind: UnitKind,
+    base: ShampooConfig,
+    ecfg: EngineConfig,
+) -> PrecondEngine {
+    ExecutorBuilder::local().build(shapes, kind, base, ecfg).expect("build local engine")
+}
+
+/// Builder-era process-sharded engine (the old `PrecondEngine::sharded`).
+fn sharded_engine(
+    shapes: &[(usize, usize)],
+    kind: UnitKind,
+    base: ShampooConfig,
+    ecfg: EngineConfig,
+    launch: &ShardLaunch,
+) -> anyhow::Result<PrecondEngine> {
+    ExecutorBuilder::sharded(launch.clone()).build(shapes, kind, base, ecfg)
+}
+
+/// Builder-era in-proc harness engine (the old `with_executor` over
+/// `launch_in_proc`).
+fn in_proc_engine(
+    shapes: &[(usize, usize)],
+    kind: UnitKind,
+    base: ShampooConfig,
+    ecfg: EngineConfig,
+    transports: &[Arc<FaultInjectingTransport>],
+    proto: u32,
+    compress: bool,
+) -> anyhow::Result<PrecondEngine> {
+    ExecutorBuilder::in_proc(transports.to_vec(), proto, compress).build(shapes, kind, base, ecfg)
 }
 
 fn base_cfg() -> ShampooConfig {
@@ -72,10 +107,9 @@ fn assert_sharded_matches_local(
         stagger: true,
         ..Default::default()
     };
-    let mut local = PrecondEngine::new(shapes, kind, base_cfg(), ecfg);
-    let mut sharded =
-        PrecondEngine::sharded(shapes, kind, base_cfg(), ecfg, &mk_launch(shards, transport))
-            .expect("launch sharded engine");
+    let mut local = local_engine(shapes, kind, base_cfg(), ecfg);
+    let mut sharded = sharded_engine(shapes, kind, base_cfg(), ecfg, &mk_launch(shards, transport))
+        .expect("launch sharded engine");
     let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
     let mut p2 = p1.clone();
     let mut rng = Pcg64::new(seed);
@@ -153,14 +187,9 @@ fn sharded_engine_adam_equals_fused_adam() {
         stagger: false,
         ..Default::default()
     };
-    let mut engine = PrecondEngine::sharded(
-        &shapes,
-        UnitKind::Adam,
-        base,
-        ecfg,
-        &mk_launch(2, ShardTransport::Tcp),
-    )
-    .expect("launch sharded adam engine");
+    let mut engine =
+        sharded_engine(&shapes, UnitKind::Adam, base, ecfg, &mk_launch(2, ShardTransport::Tcp))
+            .expect("launch sharded adam engine");
     let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
     let mut p2 = p1.clone();
     let mut rng = Pcg64::new(413);
@@ -199,16 +228,11 @@ fn assert_overlap_sharded_matches_sync_and_local(
         ..Default::default()
     };
     let overlap_ecfg = EngineConfig { overlap: true, ..ecfg };
-    let mut local = PrecondEngine::new(shapes, kind, overlap_base(), ecfg);
-    let mut shard_sync = PrecondEngine::sharded(
-        shapes,
-        kind,
-        overlap_base(),
-        ecfg,
-        &mk_launch(shards, ShardTransport::Tcp),
-    )
-    .expect("launch sync sharded engine");
-    let mut shard_over = PrecondEngine::sharded(
+    let mut local = local_engine(shapes, kind, overlap_base(), ecfg);
+    let mut shard_sync =
+        sharded_engine(shapes, kind, overlap_base(), ecfg, &mk_launch(shards, ShardTransport::Tcp))
+            .expect("launch sync sharded engine");
+    let mut shard_over = sharded_engine(
         shapes,
         kind,
         overlap_base(),
@@ -294,15 +318,14 @@ fn legacy_proto_workers_degrade_overlap_to_sync_with_identical_numbers() {
         compress: true, // inert below v3 — part of the degrade matrix
         launch: None,
     };
-    let mut local = PrecondEngine::new(
+    let mut local = local_engine(
         &shapes,
         UnitKind::Shampoo,
         overlap_base(),
         EngineConfig { overlap: false, ..ecfg },
     );
-    let mut sharded =
-        PrecondEngine::sharded(&shapes, UnitKind::Shampoo, overlap_base(), ecfg, &launch)
-            .expect("launch v1 sharded engine");
+    let mut sharded = sharded_engine(&shapes, UnitKind::Shampoo, overlap_base(), ecfg, &launch)
+        .expect("launch v1 sharded engine");
     assert!(
         !sharded.name().contains("overlap"),
         "v1 workers must resolve the overlap knob off: {}",
@@ -359,22 +382,14 @@ fn chaos_run(
             FaultInjectingTransport::with_config(s, max_connections, Some(Duration::from_secs(2)))
         })
         .collect();
-    let mut eng = PrecondEngine::with_executor(
+    let mut eng = in_proc_engine(
         &CHAOS_SHAPES,
         UnitKind::Shampoo,
         overlap_base(),
         chaos_ecfg(true),
-        |blocks, kind, base, threads| {
-            Ok(Box::new(ShardExecutor::launch_in_proc(
-                blocks,
-                kind,
-                base,
-                threads,
-                &transports,
-                proto,
-                compress,
-            )?))
-        },
+        &transports,
+        proto,
+        compress,
     )?;
     let mut params: Vec<Matrix> = CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
     let mut rng = Pcg64::new(423);
@@ -397,7 +412,7 @@ fn chaos_overlap_run(
 /// the same stream.
 fn chaos_reference() -> (Vec<Matrix>, usize) {
     let mut eng =
-        PrecondEngine::new(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(false));
+        local_engine(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(false));
     let mut params: Vec<Matrix> = CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
     let mut rng = Pcg64::new(423);
     for _ in 0..CHAOS_STEPS {
@@ -514,13 +529,15 @@ fn overlap_permanent_link_loss_surfaces_shard_named_error() {
 
 #[test]
 fn compressed_transport_proto_degrade_matrix_matches_reference_bitwise() {
-    // The v3 ↔ v2 ↔ v1 degrade matrix with the compression knob held
-    // on: v3 workers negotiate delta payloads, v2 workers keep full
-    // frames (and RefreshAhead), v1 workers degrade all the way to the
-    // legacy synchronous protocol — every cell bitwise identical to
-    // the fault-free reference, refresh accounting included.
+    // The v5 ↔ v4 ↔ v3 ↔ v2 ↔ v1 degrade matrix with the compression
+    // knob held on: v5 workers additionally announce membership, v4
+    // workers serve typed state, v3 workers negotiate delta payloads,
+    // v2 workers keep full frames (and RefreshAhead), v1 workers
+    // degrade all the way to the legacy synchronous protocol — every
+    // cell bitwise identical to the fault-free reference, refresh
+    // accounting included.
     let want = chaos_reference();
-    for proto in [1u32, 2, 3, PROTO_VERSION] {
+    for proto in [1u32, 2, 3, 4, PROTO_VERSION] {
         let got = chaos_run(proto, true, vec![FaultScript::none(), FaultScript::none()], usize::MAX)
             .unwrap_or_else(|e| panic!("proto v{proto} + compress run failed: {e:#}"));
         assert_matches_reference(&got, &want, &format!("compress-on at proto v{proto}"));
@@ -638,22 +655,14 @@ fn compressed_sparse_grads_shrink_the_wire_and_stay_bitwise() {
     let run = |compress: bool| -> (Vec<Matrix>, usize, u64) {
         let transports: Vec<Arc<FaultInjectingTransport>> =
             (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
-        let mut eng = PrecondEngine::with_executor(
+        let mut eng = in_proc_engine(
             &shapes,
             UnitKind::Shampoo,
             base.clone(),
             ecfg,
-            |blocks, kind, b, threads| {
-                Ok(Box::new(ShardExecutor::launch_in_proc(
-                    blocks,
-                    kind,
-                    b,
-                    threads,
-                    &transports,
-                    PROTO_VERSION,
-                    compress,
-                )?))
-            },
+            &transports,
+            PROTO_VERSION,
+            compress,
         )
         .expect("launch in-proc engine");
         let mut params: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
@@ -701,10 +710,9 @@ fn launch_template_spawns_real_workers_and_stays_bitwise() {
         compress: true,
         launch: Some("env SKETCHY_LAUNCH_TEMPLATE_TEST={shard} {program} {worker_cmd}".into()),
     };
-    let mut local = PrecondEngine::new(&shapes, UnitKind::Shampoo, base_cfg(), ecfg);
-    let mut sharded =
-        PrecondEngine::sharded(&shapes, UnitKind::Shampoo, base_cfg(), ecfg, &launch)
-            .expect("launch templated sharded engine");
+    let mut local = local_engine(&shapes, UnitKind::Shampoo, base_cfg(), ecfg);
+    let mut sharded = sharded_engine(&shapes, UnitKind::Shampoo, base_cfg(), ecfg, &launch)
+        .expect("launch templated sharded engine");
     let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
     let mut p2 = p1.clone();
     let mut rng = Pcg64::new(425);
@@ -745,12 +753,13 @@ fn driver_reconnects_after_dropped_connections() {
     let blocks = partition(&shapes, 3);
     let base = base_cfg();
     let mut local = LocalExecutor::new(&blocks, UnitKind::Shampoo, &base, 1);
-    let mut exec = ShardExecutor::launch(
+    let mut exec = ShardExecutor::launch_with(
         &mk_launch(2, ShardTransport::Tcp),
         &blocks,
         UnitKind::Shampoo,
         &base,
         1,
+        &MembershipConfig::default(),
     )
     .expect("launch executor");
     let mut p1 = vec![Matrix::zeros(6, 6)];
@@ -763,7 +772,7 @@ fn driver_reconnects_after_dropped_connections() {
         exec.step_blocks(&blocks, &mut p2, &grads, &ctxs).expect("sharded step");
         assert_eq!(p1[0].max_diff(&p2[0]), 0.0, "diverged at step {t}");
         if t == 3 {
-            exec.drop_connections();
+            exec.control().drop_connections();
         }
     }
 }
@@ -773,12 +782,13 @@ fn dead_worker_is_surfaced_with_its_shard_id() {
     let shapes = [(6usize, 6usize)];
     let blocks = partition(&shapes, 3);
     let base = base_cfg();
-    let mut exec = ShardExecutor::launch(
+    let mut exec = ShardExecutor::launch_with(
         &mk_launch(2, ShardTransport::Tcp),
         &blocks,
         UnitKind::Shampoo,
         &base,
         1,
+        &MembershipConfig::default(),
     )
     .expect("launch executor");
     assert_eq!(exec.shards(), 2);
@@ -787,7 +797,7 @@ fn dead_worker_is_surfaced_with_its_shard_id() {
     let grads = vec![Matrix::randn(6, 6, &mut rng)];
     exec.step_blocks(&blocks, &mut params, &grads, &mk_ctxs(blocks.len(), 1))
         .expect("first step");
-    exec.kill_worker(1).expect("fault injection");
+    exec.control().kill_worker(1).expect("fault injection");
     let err = exec
         .step_blocks(&blocks, &mut params, &grads, &mk_ctxs(blocks.len(), 2))
         .expect_err("step through a dead worker must fail");
@@ -807,7 +817,14 @@ fn spawn_failure_is_surfaced() {
         compress: true,
         launch: None,
     };
-    let err = match ShardExecutor::launch(&bogus, &blocks, UnitKind::Shampoo, &base_cfg(), 1) {
+    let err = match ShardExecutor::launch_with(
+        &bogus,
+        &blocks,
+        UnitKind::Shampoo,
+        &base_cfg(),
+        1,
+        &MembershipConfig::default(),
+    ) {
         Ok(_) => panic!("bogus worker binary must fail the launch"),
         Err(e) => e,
     };
@@ -846,8 +863,8 @@ fn v4_checkpoint_resume_through_real_workers_is_bitwise() {
         compress: true,
         launch: None,
     };
-    let mut local = PrecondEngine::new(&shapes, kind, base_cfg(), ecfg);
-    let mut sharded = PrecondEngine::sharded(&shapes, kind, base_cfg(), ecfg, &launch)
+    let mut local = local_engine(&shapes, kind, base_cfg(), ecfg);
+    let mut sharded = sharded_engine(&shapes, kind, base_cfg(), ecfg, &launch)
         .expect("launch v4 sharded engine");
     let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
     let mut p2 = p1.clone();
@@ -871,7 +888,7 @@ fn v4_checkpoint_resume_through_real_workers_is_bitwise() {
     let (step, params, state) = load_checkpoint_full(&path).expect("load checkpoint v2");
     std::fs::remove_file(&path).ok();
     assert_eq!(step, 5, "checkpoint must carry the save step");
-    let mut resumed = PrecondEngine::sharded(&shapes, kind, base_cfg(), ecfg, &launch)
+    let mut resumed = sharded_engine(&shapes, kind, base_cfg(), ecfg, &launch)
         .expect("relaunch sharded engine");
     resumed
         .restore_payloads(step, state.expect("checkpoint v2 carries typed state"))
@@ -911,8 +928,8 @@ fn v4_driver_with_v3_workers_steps_bitwise_but_refuses_state_rpcs() {
         compress: true,
         launch: None,
     };
-    let mut local = PrecondEngine::new(&shapes, kind, base_cfg(), ecfg);
-    let mut sharded = PrecondEngine::sharded(&shapes, kind, base_cfg(), ecfg, &launch)
+    let mut local = local_engine(&shapes, kind, base_cfg(), ecfg);
+    let mut sharded = sharded_engine(&shapes, kind, base_cfg(), ecfg, &launch)
         .expect("launch v3 sharded engine");
     let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
     let mut p2 = p1.clone();
@@ -956,22 +973,14 @@ fn sketch_state_chaos_run(
             FaultInjectingTransport::with_config(s, max_connections, Some(Duration::from_secs(2)))
         })
         .collect();
-    let mut eng = PrecondEngine::with_executor(
+    let mut eng = in_proc_engine(
         &CHAOS_SHAPES,
         UnitKind::Sketched { rank: 2 },
         overlap_base(),
         chaos_ecfg(false),
-        |blocks, kind, base, threads| {
-            Ok(Box::new(ShardExecutor::launch_in_proc(
-                blocks,
-                kind,
-                base,
-                threads,
-                &transports,
-                PROTO_VERSION,
-                true,
-            )?))
-        },
+        &transports,
+        PROTO_VERSION,
+        true,
     )?;
     let mut params: Vec<Matrix> = CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
     let mut rng = Pcg64::new(426);
@@ -992,7 +1001,7 @@ fn sketch_state_chaos_run(
 /// on the same stream, snapshot + self-restore included so both runs
 /// exercise the identical sequence of state mutations.
 fn sketch_state_reference() -> (Vec<Matrix>, usize) {
-    let mut eng = PrecondEngine::new(
+    let mut eng = local_engine(
         &CHAOS_SHAPES,
         UnitKind::Sketched { rank: 2 },
         overlap_base(),
@@ -1039,17 +1048,259 @@ fn v4_state_rpcs_survive_severed_frames_bitwise() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Wire protocol v5: elastic membership — kill-and-replace chaos, spare
+// exhaustion, staged rebalancing, and the down-pinned refusal. Every
+// test here is prefixed `elastic_` (the dedicated CI leg filters on it;
+// the base legs skip it).
+// ---------------------------------------------------------------------------
+
+/// Run an elastic in-proc fleet (2 seats + `spares` warm spares, sync
+/// snapshots every 3 steps) over the chaos gradient stream, killing
+/// workers at the scripted `(step, seat)` points; return final params,
+/// refresh count, and the fleet event counters.
+fn elastic_chaos_run(
+    overlap: bool,
+    spares: usize,
+    kills: &[(usize, usize)],
+) -> anyhow::Result<(Vec<Matrix>, usize, FleetStats)> {
+    let transports: Vec<Arc<FaultInjectingTransport>> = (0..2 + spares)
+        .map(|_| {
+            FaultInjectingTransport::with_config(
+                FaultScript::none(),
+                usize::MAX,
+                Some(Duration::from_secs(2)),
+            )
+        })
+        .collect();
+    let mut eng = ExecutorBuilder::in_proc(transports, PROTO_VERSION, true)
+        .spares(spares)
+        .failover_budget(3)
+        .build(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(overlap))?;
+    let control = eng.fleet_control().expect("shard engines expose fleet control");
+    let mut params: Vec<Matrix> = CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut rng = Pcg64::new(423);
+    for step in 0..CHAOS_STEPS {
+        for &(at, seat) in kills {
+            if at == step {
+                control.kill_worker(seat)?;
+            }
+        }
+        let grads = random_grads(&CHAOS_SHAPES, &mut rng);
+        eng.try_step(&mut params, &grads)?;
+    }
+    Ok((params, eng.refreshes(), control.stats()))
+}
+
+#[test]
+fn elastic_kill_and_replace_sweep_matches_local_bitwise() {
+    // The acceptance sweep: kill each seat once, at an early and a late
+    // point, under both the synchronous and the RefreshAhead-pipelined
+    // schedule — the survivor fleet (seat re-seated on a warm spare
+    // from the last synced snapshot + bounded journal replay) must
+    // reproduce the uninterrupted local run bit for bit, refresh
+    // accounting included.
+    let want = chaos_reference();
+    assert!(want.1 > 0, "test must exercise refreshes");
+    for pipelined in [false, true] {
+        for seat in 0..2usize {
+            for kill_step in [2usize, 5] {
+                let what = format!("pipelined={pipelined} kill seat {seat} at step {kill_step}");
+                let (params, refreshes, stats) =
+                    elastic_chaos_run(pipelined, 2, &[(kill_step, seat)])
+                        .unwrap_or_else(|e| panic!("{what}: run failed: {e:#}"));
+                assert_matches_reference(&(params, refreshes), &want, &what);
+                assert_eq!(stats.migrations, 1, "{what}: one migration");
+                assert!(
+                    stats.migrated_steps <= 3,
+                    "{what}: replay must stay within the failover budget \
+                     (replayed {})",
+                    stats.migrated_steps
+                );
+            }
+        }
+        // Both seats killed in one run: two migrations, same identity.
+        let what = format!("pipelined={pipelined} kill both seats");
+        let (params, refreshes, stats) = elastic_chaos_run(pipelined, 2, &[(2, 0), (5, 1)])
+            .unwrap_or_else(|e| panic!("{what}: run failed: {e:#}"));
+        assert_matches_reference(&(params, refreshes), &want, &what);
+        assert_eq!(stats.migrations, 2, "{what}: two migrations");
+    }
+}
+
+#[test]
+fn elastic_exhausted_spares_surface_a_named_error() {
+    // 1 spare, 2 kills: the first kill migrates onto the spare; the
+    // second has nowhere to go (in-proc fleets cannot cold-spawn), so
+    // the next step must fail loudly instead of hanging or diverging.
+    let err = match elastic_chaos_run(false, 1, &[(2, 0), (5, 0)]) {
+        Ok(_) => panic!("a second kill with no spare left must fail the run"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no spare remains"), "error must say the fleet is out of spares: {msg}");
+}
+
+#[test]
+fn elastic_fleet_refuses_down_pinned_links() {
+    // Elastic membership needs the membership frames, which only exist
+    // from wire protocol v5 — a fleet whose links are pinned below must
+    // refuse at launch, not fail mid-migration.
+    let transports: Vec<Arc<FaultInjectingTransport>> =
+        (0..3).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect();
+    let err = match ExecutorBuilder::in_proc(transports, 4, true).spares(1).build(
+        &CHAOS_SHAPES,
+        UnitKind::Shampoo,
+        overlap_base(),
+        chaos_ecfg(false),
+    ) {
+        Ok(_) => panic!("elastic launch over down-pinned links must fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("wire protocol v5"), "refusal must name the version gap: {msg}");
+}
+
+#[test]
+fn elastic_non_shard_builders_refuse_membership_knobs() {
+    // The builder refuses elastic knobs on executors with no fleet —
+    // a spares setting that silently did nothing would be worse than
+    // an error.
+    let err = match ExecutorBuilder::local().spares(1).build(
+        &CHAOS_SHAPES,
+        UnitKind::Shampoo,
+        overlap_base(),
+        chaos_ecfg(false),
+    ) {
+        Ok(_) => panic!("local + spares must refuse"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err:#}").contains("needs a shard fleet"),
+        "refusal must point at the sharded builders: {err:#}"
+    );
+}
+
+#[test]
+fn elastic_staged_rebalance_stays_bitwise() {
+    // An operator-staged rebalance (skewed weights) applies at the next
+    // sync point: blocks migrate between live seats over the same
+    // snapshot/restore path, the epoch advances, and the run stays
+    // bitwise identical to the uninterrupted local reference.
+    let want = chaos_reference();
+    let transports: Vec<Arc<FaultInjectingTransport>> = (0..2)
+        .map(|_| {
+            FaultInjectingTransport::with_config(
+                FaultScript::none(),
+                usize::MAX,
+                Some(Duration::from_secs(2)),
+            )
+        })
+        .collect();
+    let mut eng = ExecutorBuilder::in_proc(transports, PROTO_VERSION, true)
+        .rebalance(true)
+        .failover_budget(3)
+        .build(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(false))
+        .expect("launch rebalancing fleet");
+    let control = eng.fleet_control().expect("fleet control");
+    let mut params: Vec<Matrix> = CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut rng = Pcg64::new(423);
+    for step in 0..CHAOS_STEPS {
+        if step == 1 {
+            // Applied at the t=3 sync point, not mid-step.
+            control.request_rebalance(vec![3.0, 1.0]);
+        }
+        let grads = random_grads(&CHAOS_SHAPES, &mut rng);
+        eng.try_step(&mut params, &grads).expect("rebalanced step");
+    }
+    assert_matches_reference(&(params, eng.refreshes()), &want, "staged rebalance");
+    let stats = control.stats();
+    assert!(stats.rebalances >= 1, "the staged re-cut must apply: {stats:?}");
+    assert!(control.epoch() >= 1, "a re-cut advances the membership epoch");
+    assert_eq!(stats.migrations, 0, "no seat died in this run");
+}
+
+#[test]
+#[allow(deprecated)]
+fn builder_engines_match_deprecated_constructors_bitwise() {
+    // The builder-equivalence contract: every deprecated constructor
+    // and its ExecutorBuilder replacement produce engines that step
+    // bit-for-bit identically (the builder is a re-plumbing, never a
+    // numeric change).
+    let shapes = CHAOS_SHAPES;
+    let ecfg = chaos_ecfg(false);
+    let mut old_local = PrecondEngine::new(&shapes, UnitKind::Shampoo, overlap_base(), ecfg);
+    let mut new_local = local_engine(&shapes, UnitKind::Shampoo, overlap_base(), ecfg);
+    let mk_transports = || -> Vec<Arc<FaultInjectingTransport>> {
+        (0..2).map(|_| FaultInjectingTransport::new(FaultScript::none())).collect()
+    };
+    let old_t = mk_transports();
+    let mut old_shard = PrecondEngine::with_executor(
+        &shapes,
+        UnitKind::Shampoo,
+        overlap_base(),
+        ecfg,
+        |blocks, kind, base, threads| {
+            Ok(Box::new(ShardExecutor::launch_in_proc(
+                blocks,
+                kind,
+                base,
+                threads,
+                &old_t,
+                PROTO_VERSION,
+                true,
+            )?))
+        },
+    )
+    .expect("deprecated in-proc launch");
+    let mut new_shard = in_proc_engine(
+        &shapes,
+        UnitKind::Shampoo,
+        overlap_base(),
+        ecfg,
+        &mk_transports(),
+        PROTO_VERSION,
+        true,
+    )
+    .expect("builder in-proc launch");
+    let mut p = [(); 4].map(|_| {
+        shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect::<Vec<Matrix>>()
+    });
+    let mut rng = Pcg64::new(427);
+    for step in 0..CHAOS_STEPS {
+        let grads = random_grads(&shapes, &mut rng);
+        old_local.step(&mut p[0], &grads);
+        new_local.step(&mut p[1], &grads);
+        old_shard.try_step(&mut p[2], &grads).expect("deprecated sharded step");
+        new_shard.try_step(&mut p[3], &grads).expect("builder sharded step");
+        for which in 1..4 {
+            for (i, (a, b)) in p[0].iter().zip(&p[which]).enumerate() {
+                assert_eq!(
+                    a.max_diff(b),
+                    0.0,
+                    "engine {which}: tensor {i} diverged from the deprecated local \
+                     reference at step {step}"
+                );
+            }
+        }
+    }
+    assert_eq!(old_local.refreshes(), new_local.refreshes());
+    assert_eq!(old_local.refreshes(), old_shard.refreshes());
+    assert_eq!(old_local.refreshes(), new_shard.refreshes());
+}
+
 #[test]
 fn shards_are_capped_at_block_count() {
     // More shards than blocks must not spawn idle workers.
     let shapes = [(4usize, 4usize)];
     let blocks = partition(&shapes, 4); // a single 4x4 block
-    let exec = ShardExecutor::launch(
+    let exec = ShardExecutor::launch_with(
         &mk_launch(3, ShardTransport::Tcp),
         &blocks,
         UnitKind::Shampoo,
         &base_cfg(),
         1,
+        &MembershipConfig::default(),
     )
     .expect("launch executor");
     assert_eq!(exec.shards(), 1);

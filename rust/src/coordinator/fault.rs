@@ -110,6 +110,86 @@ impl FaultScript {
 }
 
 // ---------------------------------------------------------------------------
+// Driver-kill scripting.
+// ---------------------------------------------------------------------------
+
+/// Scripted **driver** crashes, the coordinator-side counterpart of
+/// [`FaultScript`]: a sorted list of step indices after which the
+/// driver process is to die abruptly (`SIGKILL`-equivalent — no
+/// destructors, no final flush). The chaos harness and the
+/// `--crash-at-step` flag consult this after each completed step; the
+/// relaunched driver resumes from the durable journal
+/// (`--resume-journal`) and must continue **bitwise identical** to an
+/// uninterrupted run.
+///
+/// Each index fires at most once, so a resumed driver that replays
+/// through a scripted step does not re-crash on it — the resumed
+/// process builds its plan from the *remaining* indices (the CI leg
+/// passes one index per launch, which is the simplest way to keep
+/// that invariant).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DriverKillPlan {
+    /// Remaining kill points, sorted ascending, deduplicated.
+    steps: Vec<u64>,
+}
+
+impl DriverKillPlan {
+    /// A plan that never kills.
+    pub fn none() -> DriverKillPlan {
+        DriverKillPlan::default()
+    }
+
+    /// Kill after each of the given (1-based optimizer) step indices.
+    pub fn at(steps: &[u64]) -> DriverKillPlan {
+        let mut steps = steps.to_vec();
+        steps.sort_unstable();
+        steps.dedup();
+        DriverKillPlan { steps }
+    }
+
+    /// Parse a `--crash-at-step` style list: comma-separated step
+    /// indices (`"3"` or `"3,7,11"`). Empty input is the empty plan.
+    pub fn parse(spec: &str) -> Result<DriverKillPlan, String> {
+        let mut steps = Vec::new();
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let step: u64 = tok
+                .parse()
+                .map_err(|_| format!("crash-at-step: bad step index {tok:?} in {spec:?}"))?;
+            if step == 0 {
+                return Err(format!(
+                    "crash-at-step: step indices are 1-based, got 0 in {spec:?}"
+                ));
+            }
+            steps.push(step);
+        }
+        Ok(DriverKillPlan::at(&steps))
+    }
+
+    /// Whether the driver should die now, having just completed
+    /// `step`. Consumes the matching kill point: asking again about
+    /// the same step is `false`.
+    pub fn should_kill(&mut self, step: u64) -> bool {
+        match self.steps.iter().position(|&s| s == step) {
+            Some(pos) => {
+                self.steps.remove(pos);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// True if no kill points remain.
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Remaining kill points (sorted).
+    pub fn remaining(&self) -> &[u64] {
+        &self.steps
+    }
+}
+
+// ---------------------------------------------------------------------------
 // In-memory half-duplex byte pipe.
 // ---------------------------------------------------------------------------
 
@@ -611,6 +691,20 @@ mod tests {
     #[should_panic(expected = "desync")]
     fn reply_duplication_is_rejected_by_the_script_builder() {
         let _ = FaultScript::none().on_reply(0, FaultAction::DuplicateFrame);
+    }
+
+    #[test]
+    fn driver_kill_plan_parses_fires_once_and_sorts() {
+        let mut plan = DriverKillPlan::parse("7, 3,3").unwrap();
+        assert_eq!(plan.remaining(), &[3, 7]);
+        assert!(!plan.should_kill(2));
+        assert!(plan.should_kill(3));
+        assert!(!plan.should_kill(3), "each kill point fires at most once");
+        assert!(plan.should_kill(7));
+        assert!(plan.is_empty());
+        assert_eq!(DriverKillPlan::parse("").unwrap(), DriverKillPlan::none());
+        assert!(DriverKillPlan::parse("0").is_err(), "step indices are 1-based");
+        assert!(DriverKillPlan::parse("3,x").is_err());
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! placement-independent: a block's update depends only on its own
 //! `(param, grad, ctx)` stream, never on which worker computes it.
 
+use super::supervise::LinkTimeouts;
 use anyhow::ensure;
 
 /// Default bounded failover budget: the journal keeps at most this many
@@ -269,7 +270,7 @@ impl LatencyTracker {
 }
 
 /// Elastic-fleet knobs, resolved from `--shard-spares` / `--rebalance`
-/// and the `[shard]` config section.
+/// / `--journal` / the timeout flags and the `[shard]` config section.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MembershipConfig {
     /// Warm spare workers kept idle for failover. 0 disables elastic
@@ -280,19 +281,37 @@ pub struct MembershipConfig {
     pub rebalance: bool,
     /// Journal depth / maximum replay length for a migration (steps).
     pub failover_budget: u64,
+    /// Durable write-ahead journal path (`--journal` /
+    /// `--resume-journal`). `Some` turns the in-memory step journal
+    /// into an on-disk WAL the driver can crash-resume from.
+    pub journal: Option<String>,
+    /// Worker listen addresses recovered from a resumed journal, one
+    /// per seat (empty string = not re-adoptable, spawn fresh). The
+    /// relaunched driver tries to re-adopt these before spawning.
+    pub resume_addrs: Option<Vec<String>>,
+    /// Per-link connect/reply/heartbeat/deadline budgets.
+    pub timeouts: LinkTimeouts,
 }
 
 impl Default for MembershipConfig {
     fn default() -> Self {
-        MembershipConfig { spares: 0, rebalance: false, failover_budget: DEFAULT_FAILOVER_BUDGET }
+        MembershipConfig {
+            spares: 0,
+            rebalance: false,
+            failover_budget: DEFAULT_FAILOVER_BUDGET,
+            journal: None,
+            resume_addrs: None,
+            timeouts: LinkTimeouts::default(),
+        }
     }
 }
 
 impl MembershipConfig {
     /// Whether any elastic machinery (journaling, sync snapshots,
-    /// migration) should be active at all.
+    /// migration) should be active at all. A durable journal rides on
+    /// the same sync-point/journal machinery even with no spares.
     pub fn elastic(&self) -> bool {
-        self.spares > 0 || self.rebalance
+        self.spares > 0 || self.rebalance || self.journal.is_some()
     }
 }
 
@@ -443,7 +462,7 @@ mod tests {
     #[test]
     fn latency_tracker_feeds_rebalance_trigger() {
         let mut c = MembershipController::new(
-            MembershipConfig { spares: 0, rebalance: true, failover_budget: 8 },
+            MembershipConfig { spares: 0, rebalance: true, failover_budget: 8, ..Default::default() },
             ContiguousAssignment.assign(8, 2),
         );
         // No observations yet → no proposal.
@@ -466,7 +485,7 @@ mod tests {
     #[test]
     fn staged_rebalance_bypasses_trigger_and_rebalance_flag() {
         let mut c = MembershipController::new(
-            MembershipConfig { spares: 1, rebalance: false, failover_budget: 8 },
+            MembershipConfig { spares: 1, rebalance: false, failover_budget: 8, ..Default::default() },
             ContiguousAssignment.assign(8, 2),
         );
         c.stage_rebalance(vec![3.0, 1.0]);
@@ -479,7 +498,7 @@ mod tests {
     #[test]
     fn replace_resets_latency_history() {
         let mut c = MembershipController::new(
-            MembershipConfig { spares: 1, rebalance: true, failover_budget: 8 },
+            MembershipConfig { spares: 1, rebalance: true, failover_budget: 8, ..Default::default() },
             ContiguousAssignment.assign(8, 2),
         );
         for _ in 0..16 {

@@ -20,15 +20,17 @@ pub mod fault;
 pub mod membership;
 pub mod pipeline;
 pub mod shard;
+pub mod supervise;
 pub mod wire;
 pub mod worker;
 
 pub use allreduce::{tree_allreduce, AllreduceStats};
-pub use fault::{FaultAction, FaultInjectingTransport, FaultScript};
+pub use fault::{DriverKillPlan, FaultAction, FaultInjectingTransport, FaultScript};
 pub use membership::{
     BlockAssignment, ContiguousAssignment, FleetView, LatencyTracker, MembershipConfig,
     MembershipController,
 };
 pub use pipeline::BoundedQueue;
 pub use shard::{FleetControl, ShardConfig, ShardExecutor, ShardLaunch, ShardTransport};
+pub use supervise::{Backoff, Clock, LinkTimeouts, Supervisor, SystemClock, VirtualClock};
 pub use worker::{data_parallel_step, GradientWorker, StepResult};

@@ -99,11 +99,12 @@ use super::membership::{
     validate_assignment, BlockAssignment, ContiguousAssignment, MembershipConfig,
     MembershipController,
 };
+use super::supervise::{Backoff, Clock, LinkTimeouts, Supervisor, SystemClock};
 use super::wire::{
-    self, bits_matrix, mat_bits, BlockPayload, BlockSpec, BlockStateMsg, Conn, DeltaMat, InitMsg,
-    RefreshAheadMsg, RefreshAheadOkMsg, RefreshAheadOkV4Msg, StateExpect, StateRestoreMsg,
-    StateSnapMsg, StateSnapOkMsg, StepEntry, StepEntryV3, StepEntryV4, StepMsg, StepOkMsg,
-    StepOkV3Msg, StepOkV4Msg, StepV3Msg, StepV4Msg, WireMsg, PROTO_VERSION,
+    self, bits_matrix, mat_bits, BlockPayload, BlockSpec, BlockStateMsg, Conn, DeltaMat,
+    FrameReader, InitMsg, RefreshAheadMsg, RefreshAheadOkMsg, RefreshAheadOkV4Msg, StateExpect,
+    StateRestoreMsg, StateSnapMsg, StateSnapOkMsg, StepEntry, StepEntryV3, StepEntryV4, StepMsg,
+    StepOkMsg, StepOkV3Msg, StepOkV4Msg, StepV3Msg, StepV4Msg, WireMsg, PROTO_VERSION,
 };
 use crate::optim::engine::{
     drive_all, effective_worker_threads, lock_state, BlockExecutor, RefreshAheadDone,
@@ -113,6 +114,7 @@ use crate::optim::precond::{BlockState, BlockStateSnap, StepCtx};
 use crate::optim::{Block, GraftType, ShampooConfig};
 use crate::runtime::pool;
 use crate::tensor::Matrix;
+use crate::train::journal::JournalWriter;
 use crate::util::cli::Args;
 use crate::util::config::Config;
 use anyhow::{anyhow, bail, ensure, Context};
@@ -131,14 +133,17 @@ use std::time::{Duration, Instant};
 /// Stdout handshake prefix a worker prints once its listener is bound.
 const LISTEN_PREFIX: &str = "SKETCHY-SHARD-LISTENING ";
 
-/// Bound on establishing a TCP connection to a worker.
-const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+/// Worker spawn/launch attempts before giving up with a shard-named
+/// error (transient launcher failures — an ssh connection race, a PID
+/// limit blip — retry with deterministic backoff).
+const SPAWN_ATTEMPTS: usize = 3;
 
-/// Bound on waiting for any single worker reply. A hung (not dead)
-/// worker then surfaces as a shard-named error instead of freezing the
-/// driver; generous enough for a stale-schedule eigendecomposition burst
-/// on paper-scale (1024) blocks.
-const REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+/// Backoff schedule for spawn retries and the shutdown drain (replaces
+/// the old fixed 10 ms sleep-spin).
+const SPAWN_BACKOFF_BASE: Duration = Duration::from_millis(50);
+const SPAWN_BACKOFF_CAP: Duration = Duration::from_secs(1);
+const DRAIN_BACKOFF_BASE: Duration = Duration::from_millis(10);
+const DRAIN_BACKOFF_CAP: Duration = Duration::from_millis(500);
 
 // ---------------------------------------------------------------------------
 // Configuration.
@@ -211,6 +216,30 @@ pub struct ShardConfig {
     /// this many steps, bounding journal replay after a kill
     /// (`--shard-failover-budget`).
     pub failover_budget: u64,
+    /// Bound on establishing a connection to a worker, in ms
+    /// (`--shard-connect-timeout-ms`; default 10 000).
+    pub connect_timeout_ms: u64,
+    /// Bound on waiting for any single worker reply, in ms
+    /// (`--shard-reply-timeout-ms`; default 120 000). A hung worker on
+    /// an unsupervised link surfaces as a shard-named error after this
+    /// long; generous enough for a stale-schedule eigendecomposition
+    /// burst on paper-scale (1024) blocks.
+    pub reply_timeout_ms: u64,
+    /// Supervised-link poll quantum / staleness bound before a `Ping`
+    /// probe, in ms (`--shard-heartbeat-ms`; default 500).
+    pub heartbeat_ms: u64,
+    /// Supervised-link liveness deadline, in ms
+    /// (`--shard-deadline-ms`; default 10 000): a silent worker on an
+    /// elastic v6 fleet is killed and replaced after this long instead
+    /// of waiting out the reply timeout.
+    pub deadline_ms: u64,
+    /// Durable write-ahead journal path (`--journal`). The driver
+    /// persists sync-point snapshots + per-step records here so a
+    /// killed driver can resume bitwise with `--resume-journal`.
+    pub journal: Option<String>,
+    /// Journal path to resume from (`--resume-journal`; implies
+    /// journaling to the same path).
+    pub resume_journal: Option<String>,
 }
 
 impl Default for ShardConfig {
@@ -225,6 +254,12 @@ impl Default for ShardConfig {
             spares: m.spares,
             rebalance: m.rebalance,
             failover_budget: m.failover_budget,
+            connect_timeout_ms: m.timeouts.connect.as_millis() as u64,
+            reply_timeout_ms: m.timeouts.reply.as_millis() as u64,
+            heartbeat_ms: m.timeouts.heartbeat.as_millis() as u64,
+            deadline_ms: m.timeouts.deadline.as_millis() as u64,
+            journal: None,
+            resume_journal: None,
         }
     }
 }
@@ -243,6 +278,11 @@ impl ShardConfig {
         "spares",
         "rebalance",
         "failover_budget",
+        "connect_timeout_ms",
+        "reply_timeout_ms",
+        "heartbeat_ms",
+        "deadline_ms",
+        "journal",
     ];
 
     /// Resolve from `--shards` / `--shard-transport` / `--shard-proto` /
@@ -292,10 +332,53 @@ impl ShardConfig {
             cfg.usize_or("shard.failover_budget", d.failover_budget as usize) as u64,
         );
         ensure!(failover_budget >= 1, "--shard-failover-budget must be >= 1");
-        if (spares > 0 || rebalance) && proto < 5 {
+        let connect_timeout_ms = args.get_u64(
+            "shard-connect-timeout-ms",
+            cfg.usize_or("shard.connect_timeout_ms", d.connect_timeout_ms as usize) as u64,
+        );
+        let reply_timeout_ms = args.get_u64(
+            "shard-reply-timeout-ms",
+            cfg.usize_or("shard.reply_timeout_ms", d.reply_timeout_ms as usize) as u64,
+        );
+        let heartbeat_ms = args.get_u64(
+            "shard-heartbeat-ms",
+            cfg.usize_or("shard.heartbeat_ms", d.heartbeat_ms as usize) as u64,
+        );
+        let deadline_ms = args.get_u64(
+            "shard-deadline-ms",
+            cfg.usize_or("shard.deadline_ms", d.deadline_ms as usize) as u64,
+        );
+        ensure!(connect_timeout_ms >= 1, "--shard-connect-timeout-ms must be >= 1");
+        ensure!(reply_timeout_ms >= 1, "--shard-reply-timeout-ms must be >= 1");
+        ensure!(heartbeat_ms >= 1, "--shard-heartbeat-ms must be >= 1");
+        ensure!(deadline_ms >= 1, "--shard-deadline-ms must be >= 1");
+        ensure!(
+            heartbeat_ms <= deadline_ms && deadline_ms <= reply_timeout_ms,
+            "timeout knobs must satisfy heartbeat ({heartbeat_ms} ms) <= deadline \
+             ({deadline_ms} ms) <= reply ({reply_timeout_ms} ms)"
+        );
+        let resume_journal = match args.get("resume-journal") {
+            Some(s) if !s.trim().is_empty() => Some(s.to_string()),
+            _ => None,
+        };
+        // `--resume-journal` implies continuing to journal to the same
+        // path; an explicit `--journal` (or `shard.journal`) may also
+        // set it directly.
+        let journal = match args.get("journal") {
+            Some(s) if !s.trim().is_empty() => Some(s.to_string()),
+            Some(_) => None,
+            None => match resume_journal.clone() {
+                Some(p) => Some(p),
+                None => {
+                    let s = cfg.str_or("shard.journal", "");
+                    (!s.trim().is_empty()).then_some(s)
+                }
+            },
+        };
+        if (spares > 0 || rebalance || journal.is_some()) && proto < 5 {
             bail!(
-                "elastic membership (--shard-spares/--rebalance) needs wire protocol v5, \
-                 but --shard-proto pins v{proto}"
+                "elastic membership (--shard-spares/--rebalance/--journal) needs wire \
+                 protocol v5, but --shard-proto pins v{proto}"
             );
         }
         Ok(ShardConfig {
@@ -307,6 +390,12 @@ impl ShardConfig {
             spares,
             rebalance,
             failover_budget,
+            connect_timeout_ms,
+            reply_timeout_ms,
+            heartbeat_ms,
+            deadline_ms,
+            journal,
+            resume_journal,
         })
     }
 
@@ -315,12 +404,25 @@ impl ShardConfig {
         self.shards >= 1
     }
 
+    /// The per-link connect/reply/heartbeat/deadline budgets.
+    pub fn timeouts(&self) -> LinkTimeouts {
+        LinkTimeouts {
+            connect: Duration::from_millis(self.connect_timeout_ms),
+            reply: Duration::from_millis(self.reply_timeout_ms),
+            heartbeat: Duration::from_millis(self.heartbeat_ms),
+            deadline: Duration::from_millis(self.deadline_ms),
+        }
+    }
+
     /// The elastic-membership slice of these knobs.
     pub fn membership(&self) -> MembershipConfig {
         MembershipConfig {
             spares: self.spares,
             rebalance: self.rebalance,
             failover_budget: self.failover_budget,
+            journal: self.journal.clone(),
+            resume_addrs: None,
+            timeouts: self.timeouts(),
         }
     }
 }
@@ -449,20 +551,36 @@ enum WorkerAddr {
     Unix(PathBuf),
 }
 
-/// Parse a worker's stdout handshake line.
-fn parse_listen_line(line: &str) -> Option<WorkerAddr> {
-    let rest = line.trim().strip_prefix(LISTEN_PREFIX)?;
-    let (kind, addr) = rest.split_once(' ')?;
-    match kind {
-        "tcp" => Some(WorkerAddr::Tcp(addr.to_string())),
-        #[cfg(unix)]
-        "unix" => Some(WorkerAddr::Unix(PathBuf::from(addr))),
-        _ => None,
+impl WorkerAddr {
+    /// `<kind> <addr>` — the representation journaled at sync points so
+    /// a relaunched driver can try to re-adopt the surviving fleet.
+    fn journal_repr(&self) -> String {
+        match self {
+            WorkerAddr::Tcp(a) => format!("tcp {a}"),
+            #[cfg(unix)]
+            WorkerAddr::Unix(p) => format!("unix {}", p.display()),
+        }
+    }
+
+    fn from_journal_repr(s: &str) -> Option<WorkerAddr> {
+        let (kind, addr) = s.split_once(' ')?;
+        match kind {
+            "tcp" => Some(WorkerAddr::Tcp(addr.to_string())),
+            #[cfg(unix)]
+            "unix" => Some(WorkerAddr::Unix(PathBuf::from(addr))),
+            _ => None,
+        }
     }
 }
 
+/// Parse a worker's stdout handshake line.
+fn parse_listen_line(line: &str) -> Option<WorkerAddr> {
+    let rest = line.trim().strip_prefix(LISTEN_PREFIX)?;
+    WorkerAddr::from_journal_repr(rest)
+}
+
 /// Open one connection to an announced worker address.
-fn dial_addr(addr: &WorkerAddr) -> anyhow::Result<Box<dyn Conn>> {
+fn dial_addr(addr: &WorkerAddr, connect_timeout: Duration) -> anyhow::Result<Box<dyn Conn>> {
     match addr {
         WorkerAddr::Tcp(addr) => {
             let sock = addr
@@ -470,7 +588,7 @@ fn dial_addr(addr: &WorkerAddr) -> anyhow::Result<Box<dyn Conn>> {
                 .with_context(|| format!("resolve {addr}"))?
                 .next()
                 .ok_or_else(|| anyhow!("no socket addr in {addr}"))?;
-            let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
+            let stream = TcpStream::connect_timeout(&sock, connect_timeout)
                 .with_context(|| format!("connect tcp {addr}"))?;
             // Step frames are small; don't let Nagle delay them.
             let _ = stream.set_nodelay(true);
@@ -1001,7 +1119,7 @@ fn handle_conn<S: Read + Write>(
                 state: true,
             },
         )?;
-    } else {
+    } else if proto == 5 {
         wire::write_msg(
             stream,
             &WireMsg::HelloV5 {
@@ -1011,6 +1129,19 @@ fn handle_conn<S: Read + Write>(
                 compress: true,
                 state: true,
                 member: true,
+            },
+        )?;
+    } else {
+        wire::write_msg(
+            stream,
+            &WireMsg::HelloV6 {
+                worker_id: wid,
+                proto,
+                overlap: true,
+                compress: true,
+                state: true,
+                member: true,
+                heartbeat: true,
             },
         )?;
     }
@@ -1215,6 +1346,20 @@ fn handle_conn<S: Read + Write>(
                 };
                 wire::write_msg(stream, &reply)?;
             }
+            WireMsg::Ping { seq } => {
+                // Liveness probe: answerable before Init (the supervisor
+                // may probe a seat that is still being restored).
+                let reply = if proto < 6 {
+                    WireMsg::Error {
+                        message: format!(
+                            "heartbeat ping unsupported at wire protocol v{proto}"
+                        ),
+                    }
+                } else {
+                    WireMsg::Pong { seq }
+                };
+                wire::write_msg(stream, &reply)?;
+            }
             WireMsg::MemStats => {
                 let reply = match state.as_mut() {
                     None => WireMsg::MemStatsOk { mem_bytes: 0, second_moment_bytes: 0 },
@@ -1363,6 +1508,18 @@ struct ShardChannel {
     /// Membership capability (v5 `HelloV5` only): the worker serves
     /// `Adopt` frames and can be re-seated as another shard.
     member: bool,
+    /// Heartbeat capability (v6 `HelloV6` only): the worker answers
+    /// `Ping` probes, so the link can run supervised.
+    heartbeat: bool,
+    /// Liveness supervision enabled for this link (elastic fleet, all
+    /// links heartbeat-capable, nonzero deadline): reply waits poll in
+    /// heartbeat quanta on the injected clock instead of one blocking
+    /// read, and deadline silence escalates instead of reconnecting.
+    supervised: bool,
+    /// Resolved timing knobs for this link.
+    timeouts: LinkTimeouts,
+    /// Injectable time source for the supervised reply loop.
+    clock: Arc<dyn Clock>,
     /// Bumped on every successful (re)connect — the delta codec
     /// compares it against the generation its baselines were taken on
     /// and resyncs with full frames after any reconnect.
@@ -1372,7 +1529,12 @@ struct ShardChannel {
 }
 
 impl ShardChannel {
-    fn new(shard: usize, dial: Dialer) -> ShardChannel {
+    fn new(
+        shard: usize,
+        dial: Dialer,
+        timeouts: LinkTimeouts,
+        clock: Arc<dyn Clock>,
+    ) -> ShardChannel {
         ShardChannel {
             shard,
             dial,
@@ -1383,6 +1545,10 @@ impl ShardChannel {
             compress: false,
             state: false,
             member: false,
+            heartbeat: false,
+            supervised: false,
+            timeouts,
+            clock,
             generation: 0,
             pending_refresh: None,
         }
@@ -1392,7 +1558,7 @@ impl ShardChannel {
         let mut conn = (self.dial)()?;
         // Bound every reply wait: a wedged worker becomes a shard-named
         // error (after one reconnect attempt) instead of a frozen driver.
-        let _ = conn.set_timeout(Some(REPLY_TIMEOUT));
+        let _ = conn.set_timeout(Some(self.timeouts.reply));
         match wire::read_msg(&mut conn).context("read worker hello")? {
             WireMsg::Hello { worker_id } if worker_id as usize == self.shard => {
                 self.proto = 1;
@@ -1400,6 +1566,7 @@ impl ShardChannel {
                 self.compress = false;
                 self.state = false;
                 self.member = false;
+                self.heartbeat = false;
             }
             WireMsg::HelloV2 { worker_id, proto, overlap }
                 if worker_id as usize == self.shard =>
@@ -1409,6 +1576,7 @@ impl ShardChannel {
                 self.compress = false;
                 self.state = false;
                 self.member = false;
+                self.heartbeat = false;
             }
             WireMsg::HelloV3 { worker_id, proto, overlap, compress }
                 if worker_id as usize == self.shard =>
@@ -1418,6 +1586,7 @@ impl ShardChannel {
                 self.compress = compress;
                 self.state = false;
                 self.member = false;
+                self.heartbeat = false;
             }
             WireMsg::HelloV4 { worker_id, proto, overlap, compress, state }
                 if worker_id as usize == self.shard =>
@@ -1427,6 +1596,7 @@ impl ShardChannel {
                 self.compress = compress;
                 self.state = state;
                 self.member = false;
+                self.heartbeat = false;
             }
             WireMsg::HelloV5 { worker_id, proto, overlap, compress, state, member }
                 if worker_id as usize == self.shard =>
@@ -1436,12 +1606,24 @@ impl ShardChannel {
                 self.compress = compress;
                 self.state = state;
                 self.member = member;
+                self.heartbeat = false;
+            }
+            WireMsg::HelloV6 { worker_id, proto, overlap, compress, state, member, heartbeat }
+                if worker_id as usize == self.shard =>
+            {
+                self.proto = proto;
+                self.overlap = overlap;
+                self.compress = compress;
+                self.state = state;
+                self.member = member;
+                self.heartbeat = heartbeat;
             }
             WireMsg::Hello { worker_id }
             | WireMsg::HelloV2 { worker_id, .. }
             | WireMsg::HelloV3 { worker_id, .. }
             | WireMsg::HelloV4 { worker_id, .. }
-            | WireMsg::HelloV5 { worker_id, .. } => {
+            | WireMsg::HelloV5 { worker_id, .. }
+            | WireMsg::HelloV6 { worker_id, .. } => {
                 bail!("worker identity mismatch: got {worker_id}, want {}", self.shard)
             }
             other => bail!("expected hello, got {other:?}"),
@@ -1461,7 +1643,7 @@ impl ShardChannel {
         self.last_req.clear();
         self.pending_refresh = None;
         let mut conn = (self.dial)()?;
-        let _ = conn.set_timeout(Some(REPLY_TIMEOUT));
+        let _ = conn.set_timeout(Some(self.timeouts.reply));
         match wire::read_msg(&mut conn).context("read spare hello")? {
             WireMsg::HelloV5 { proto, overlap, compress, state, member: true, .. } => {
                 self.proto = proto;
@@ -1469,9 +1651,20 @@ impl ShardChannel {
                 self.compress = compress;
                 self.state = state;
                 self.member = true;
+                self.heartbeat = false;
+            }
+            WireMsg::HelloV6 {
+                proto, overlap, compress, state, member: true, heartbeat, ..
+            } => {
+                self.proto = proto;
+                self.overlap = overlap;
+                self.compress = compress;
+                self.state = state;
+                self.member = true;
+                self.heartbeat = heartbeat;
             }
             other => bail!(
-                "elastic failover needs a wire protocol v5 membership-capable spare, \
+                "elastic failover needs a wire protocol v5+ membership-capable spare, \
                  got {other:?}"
             ),
         }
@@ -1513,22 +1706,89 @@ impl ShardChannel {
     /// replay the last request once — the worker's reply caches make the
     /// replay idempotent even if the original request already applied.
     fn recv(&mut self) -> anyhow::Result<WireMsg> {
+        if self.supervised {
+            return self.recv_supervised();
+        }
         let first = match self.conn.as_mut() {
             Some(conn) => wire::read_msg(conn),
             None => Err(anyhow!("not connected")),
         };
         match first {
             Ok(msg) => Ok(msg),
-            Err(first) => {
-                self.conn = None;
-                let frame = self.last_req.clone();
-                ensure!(!frame.is_empty(), "no request to replay after {first:#}");
-                self.try_send(&frame)
-                    .with_context(|| format!("reconnect after transport error ({first:#})"))?;
-                let conn = self.conn.as_mut().unwrap();
-                wire::read_msg(conn)
-                    .with_context(|| format!("reply after reconnect ({first:#})"))
+            Err(first) => self.replay_after(first),
+        }
+    }
+
+    /// Supervised reply wait (elastic v6 fleets): instead of one
+    /// blocking read bounded by the reply timeout, poll the link in
+    /// heartbeat-sized quanta through a [`FrameReader`] (partial frames
+    /// survive across polls) and charge each silent quantum to the
+    /// injected clock. A link silent past [`LinkTimeouts::deadline`] is
+    /// a *hung worker*: the error surfaces without any reconnect-replay
+    /// so the step loop's reactive-migration path replaces the seat
+    /// long before the reply timeout would fire. Hard transport
+    /// failures (EOF/reset) keep the reconnect-and-replay-once
+    /// contract of the plain path.
+    fn recv_supervised(&mut self) -> anyhow::Result<WireMsg> {
+        let quantum = self.timeouts.heartbeat;
+        let deadline = self.timeouts.deadline;
+        let start = self.clock.now();
+        let mut reader = FrameReader::new();
+        let first = 'poll: {
+            if self.conn.is_none() {
+                break 'poll anyhow!("not connected");
             }
+            let _ = self.conn.as_mut().unwrap().set_timeout(Some(quantum));
+            loop {
+                match reader.poll(self.conn.as_mut().unwrap()) {
+                    Ok(Some(msg)) => {
+                        let _ =
+                            self.conn.as_mut().unwrap().set_timeout(Some(self.timeouts.reply));
+                        return Ok(msg);
+                    }
+                    Ok(None) => {
+                        self.clock.on_poll(quantum);
+                        if self.clock.now().saturating_sub(start) >= deadline {
+                            self.conn = None;
+                            bail!(
+                                "shard {}: worker silent past the {} ms liveness deadline \
+                                 (hung link)",
+                                self.shard,
+                                deadline.as_millis()
+                            );
+                        }
+                    }
+                    Err(e) => break 'poll e,
+                }
+            }
+        };
+        self.replay_after(first)
+    }
+
+    /// Reconnect and replay the last request once after a transport
+    /// failure — the worker's reply caches make the replay idempotent
+    /// even if the original request already applied.
+    fn replay_after(&mut self, first: anyhow::Error) -> anyhow::Result<WireMsg> {
+        self.conn = None;
+        let frame = self.last_req.clone();
+        ensure!(!frame.is_empty(), "no request to replay after {first:#}");
+        self.try_send(&frame)
+            .with_context(|| format!("reconnect after transport error ({first:#})"))?;
+        let conn = self.conn.as_mut().unwrap();
+        wire::read_msg(conn).with_context(|| format!("reply after reconnect ({first:#})"))
+    }
+
+    /// Strict liveness probe: send `Ping{seq}` and require the matching
+    /// `Pong`. Only issued on idle links (never with a RefreshAhead
+    /// reply parked) so the strict request/reply ordering holds.
+    fn ping(&mut self, seq: u64) -> anyhow::Result<()> {
+        match self.request(&WireMsg::Ping { seq })? {
+            WireMsg::Pong { seq: got } if got == seq => Ok(()),
+            WireMsg::Pong { seq: got } => {
+                bail!("shard {}: pong seq mismatch: got {got}, want {seq}", self.shard)
+            }
+            WireMsg::Error { message } => bail!("shard {}: ping: {message}", self.shard),
+            other => bail!("shard {}: unexpected ping reply: {other:?}", self.shard),
         }
     }
 
@@ -1556,10 +1816,14 @@ impl ShardChannel {
 /// in-process thread over the fault-injection transport.
 enum WorkerBackend {
     Process {
-        child: Child,
+        /// `None` for a worker the driver *re-adopted* after a crash
+        /// resume (`--resume-journal`): the process belongs to a prior
+        /// driver incarnation, so there is no handle to reap — shutdown
+        /// is by wire `Shutdown` only.
+        child: Option<Child>,
         addr: WorkerAddr,
         /// Held so late worker prints land in the pipe instead of EPIPE.
-        _stdout: BufReader<ChildStdout>,
+        _stdout: Option<BufReader<ChildStdout>>,
     },
     InProc {
         join: Option<JoinHandle<()>>,
@@ -1639,24 +1903,30 @@ impl Drop for WorkerHandle {
         let graceful = self.channel.shutdown_quietly();
         match &mut self.backend {
             WorkerBackend::Process { child, addr, .. } => {
-                if graceful {
-                    let deadline = Instant::now() + Duration::from_secs(2);
-                    loop {
-                        match child.try_wait() {
-                            Ok(Some(_)) => break,
-                            Ok(None) if Instant::now() < deadline => {
-                                std::thread::sleep(Duration::from_millis(10));
-                            }
-                            _ => {
-                                let _ = child.kill();
-                                let _ = child.wait();
-                                break;
+                if let Some(child) = child.as_mut() {
+                    if graceful {
+                        // Capped exponential backoff while draining: same
+                        // 2 s grace window, far fewer wakeups than the old
+                        // fixed 10 ms spin.
+                        let mut backoff = Backoff::new(DRAIN_BACKOFF_BASE, DRAIN_BACKOFF_CAP);
+                        let deadline = Instant::now() + Duration::from_secs(2);
+                        loop {
+                            match child.try_wait() {
+                                Ok(Some(_)) => break,
+                                Ok(None) if Instant::now() < deadline => {
+                                    std::thread::sleep(backoff.next());
+                                }
+                                _ => {
+                                    let _ = child.kill();
+                                    let _ = child.wait();
+                                    break;
+                                }
                             }
                         }
+                    } else {
+                        let _ = child.kill();
+                        let _ = child.wait();
                     }
-                } else {
-                    let _ = child.kill();
-                    let _ = child.wait();
                 }
                 #[cfg(unix)]
                 if let WorkerAddr::Unix(path) = addr {
@@ -1680,8 +1950,17 @@ impl Drop for WorkerHandle {
 
 /// Spawn one worker process — directly, or through the launcher
 /// command template (ssh and friends) — and read its announced listen
-/// address off the spawned command's stdout.
-fn spawn_process_worker(launch: &ShardLaunch, shard: usize) -> anyhow::Result<WorkerHandle> {
+/// address off the spawned command's stdout. Transient launch failures
+/// (spawn errors, a worker dying before its announcement) are retried
+/// up to [`SPAWN_ATTEMPTS`] times with capped deterministic backoff;
+/// a template that cannot be rendered fails fast, and exhaustion
+/// surfaces a shard-named error.
+fn spawn_process_worker(
+    launch: &ShardLaunch,
+    shard: usize,
+    timeouts: LinkTimeouts,
+    clock: Arc<dyn Clock>,
+) -> anyhow::Result<WorkerHandle> {
     let worker_args: Vec<String> = vec![
         "shard-worker".into(),
         "--worker-id".into(),
@@ -1696,8 +1975,35 @@ fn spawn_process_worker(launch: &ShardLaunch, shard: usize) -> anyhow::Result<Wo
         Some(template) => render_launch_command(template, &launch.program, shard, &worker_args)
             .with_context(|| format!("shard {shard}: render launch template"))?,
     };
-    let mut cmd = Command::new(&program);
-    cmd.args(&args)
+    let mut backoff = Backoff::new(SPAWN_BACKOFF_BASE, SPAWN_BACKOFF_CAP);
+    let mut last_err = None;
+    for attempt in 1..=SPAWN_ATTEMPTS {
+        match try_spawn_worker(&program, &args, shard, timeouts, clock.clone()) {
+            Ok(handle) => return Ok(handle),
+            Err(e) => {
+                last_err = Some(e);
+                if attempt < SPAWN_ATTEMPTS {
+                    std::thread::sleep(backoff.next());
+                }
+            }
+        }
+    }
+    Err(last_err.unwrap()).with_context(|| {
+        format!("shard {shard}: worker launch failed after {SPAWN_ATTEMPTS} attempts")
+    })
+}
+
+/// One worker-launch attempt: spawn, await the announced listen
+/// address, build the channel.
+fn try_spawn_worker(
+    program: &std::path::Path,
+    args: &[String],
+    shard: usize,
+    timeouts: LinkTimeouts,
+    clock: Arc<dyn Clock>,
+) -> anyhow::Result<WorkerHandle> {
+    let mut cmd = Command::new(program);
+    cmd.args(args)
         .stdin(Stdio::null())
         .stdout(Stdio::piped())
         .stderr(Stdio::inherit());
@@ -1723,10 +2029,48 @@ fn spawn_process_worker(launch: &ShardLaunch, shard: usize) -> anyhow::Result<Wo
         // Tolerate stray prints ahead of the announcement.
     };
     let dial_addr_copy = addr.clone();
-    let channel = ShardChannel::new(shard, Box::new(move || dial_addr(&dial_addr_copy)));
+    let connect = timeouts.connect;
+    let channel = ShardChannel::new(
+        shard,
+        Box::new(move || dial_addr(&dial_addr_copy, connect)),
+        timeouts,
+        clock,
+    );
     Ok(WorkerHandle {
         channel,
-        backend: WorkerBackend::Process { child, addr, _stdout: reader },
+        backend: WorkerBackend::Process { child: Some(child), addr, _stdout: Some(reader) },
+        delta: DeltaCodec::default(),
+    })
+}
+
+/// Dial + handshake an *already running* worker at a journaled address
+/// — the crash-resume re-adoption path. The worker keeps listening
+/// across driver deaths, so a relaunched driver (`--resume-journal`)
+/// re-seats the surviving fleet instead of spawning a fresh one. The
+/// returned handle has no child process: shutdown is by wire only.
+fn adopt_process_worker(
+    repr: &str,
+    shard: usize,
+    epoch: u64,
+    timeouts: LinkTimeouts,
+    clock: Arc<dyn Clock>,
+) -> anyhow::Result<WorkerHandle> {
+    let addr = WorkerAddr::from_journal_repr(repr)
+        .ok_or_else(|| anyhow!("shard {shard}: bad journaled worker address {repr:?}"))?;
+    let dial_addr_copy = addr.clone();
+    let connect = timeouts.connect;
+    let mut channel = ShardChannel::new(
+        shard,
+        Box::new(move || dial_addr(&dial_addr_copy, connect)),
+        timeouts,
+        clock,
+    );
+    channel
+        .adopt(shard, epoch)
+        .with_context(|| format!("shard {shard}: re-adopt journaled worker at {repr}"))?;
+    Ok(WorkerHandle {
+        channel,
+        backend: WorkerBackend::Process { child: None, addr, _stdout: None },
         delta: DeltaCodec::default(),
     })
 }
@@ -1893,10 +2237,13 @@ impl FleetControl {
         w.channel.pending_refresh = None;
         w.channel.conn = None;
         match &mut w.backend {
-            WorkerBackend::Process { child, .. } => {
-                child.kill().context("kill worker")?;
-                let _ = child.wait();
-            }
+            WorkerBackend::Process { child, .. } => match child.as_mut() {
+                Some(child) => {
+                    child.kill().context("kill worker")?;
+                    let _ = child.wait();
+                }
+                None => bail!("shard {shard}: re-adopted worker has no process handle"),
+            },
             WorkerBackend::InProc { transport, .. } => {
                 // Refuse future dials at the link layer too: the dead
                 // seat must not be revivable through its old transport.
@@ -1990,6 +2337,18 @@ struct ElasticRuntime {
     next_spare_id: usize,
     journal: StepJournal,
     ahead: Option<AheadRecord>,
+    /// Durable write-ahead journal path (`--journal`); `None` keeps the
+    /// PR-7 in-memory-only journal.
+    wal_path: Option<String>,
+    /// Open write-ahead journal, created lazily at the first journaled
+    /// step (so a `--resume-journal` load is never clobbered by the
+    /// executor's construction).
+    wal: Option<JournalWriter>,
+    /// Link knobs + clock for channels built after launch (cold-spawned
+    /// replacements), and whether their links run supervised.
+    timeouts: LinkTimeouts,
+    clock: Arc<dyn Clock>,
+    supervised: bool,
 }
 
 /// [`BlockExecutor`] driving blocks across worker processes (or
@@ -2026,6 +2385,14 @@ pub struct ShardExecutor {
     flags: Arc<FleetFlags>,
     /// `Some` iff elastic membership was requested at launch.
     elastic: Option<ElasticRuntime>,
+    /// Every worker reported the v6 heartbeat capability.
+    heartbeat: bool,
+    /// Per-seat liveness ledger; `Some` iff the fleet runs supervised
+    /// (elastic + every link heartbeat-capable + nonzero deadline).
+    supervisor: Option<Supervisor>,
+    /// Injected time source shared with every channel's supervised
+    /// reply loop.
+    clock: Arc<dyn Clock>,
 }
 
 /// Map a poisoned driver-side worker-table lock into the shard-failure
@@ -2093,10 +2460,38 @@ impl ShardExecutor {
         let shards = launch.shards.min(blocks.len());
         let assignment = ContiguousAssignment.assign(blocks.len(), shards);
         let worker_threads = split_thread_budget(threads, shards);
+        let timeouts = membership.timeouts;
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock::new());
         let mut workers = Vec::with_capacity(shards);
         for (shard, owned) in assignment.iter().enumerate() {
-            let mut w = spawn_process_worker(launch, shard)
-                .with_context(|| format!("shard {shard}: spawn worker"))?;
+            // Crash resume: a journaled worker address means a previous
+            // driver incarnation left a live worker listening there —
+            // re-adopt it instead of spawning a duplicate. Any failure
+            // (worker gone, address recycled) falls back to a fresh
+            // spawn; either way the seat is re-Init'd from scratch, so
+            // the two paths are bitwise identical.
+            let journaled = membership
+                .resume_addrs
+                .as_ref()
+                .and_then(|a| a.get(shard))
+                .filter(|r| !r.is_empty());
+            let mut w = match journaled {
+                Some(repr) => {
+                    match adopt_process_worker(repr, shard, 0, timeouts, clock.clone()) {
+                        Ok(w) => w,
+                        Err(e) => {
+                            eprintln!(
+                                "shard {shard}: journaled worker at {repr} not adoptable \
+                                 ({e:#}); spawning fresh"
+                            );
+                            spawn_process_worker(launch, shard, timeouts, clock.clone())
+                                .with_context(|| format!("shard {shard}: spawn worker"))?
+                        }
+                    }
+                }
+                None => spawn_process_worker(launch, shard, timeouts, clock.clone())
+                    .with_context(|| format!("shard {shard}: spawn worker"))?,
+            };
             init_worker(&mut w, shard, &init_msg_for(owned, blocks, kind, base, worker_threads))?;
             workers.push(w);
         }
@@ -2104,7 +2499,7 @@ impl ShardExecutor {
         for k in 0..membership.spares {
             let id = shards + k;
             spares.push(
-                spawn_process_worker(launch, id)
+                spawn_process_worker(launch, id, timeouts, clock.clone())
                     .with_context(|| format!("spare worker {id}: spawn"))?,
             );
         }
@@ -2121,6 +2516,7 @@ impl ShardExecutor {
             membership,
             spares,
             Some(launch.clone()),
+            clock,
         )
     }
 
@@ -2187,6 +2583,35 @@ impl ShardExecutor {
         compress: bool,
         membership: &MembershipConfig,
     ) -> anyhow::Result<ShardExecutor> {
+        ShardExecutor::launch_in_proc_clocked(
+            blocks,
+            kind,
+            base,
+            threads,
+            transports,
+            proto,
+            compress,
+            membership,
+            Arc::new(SystemClock::new()),
+        )
+    }
+
+    /// [`ShardExecutor::launch_in_proc_with`] with an injected [`Clock`]
+    /// — the deterministic-supervision harness: a virtual clock makes
+    /// heartbeat/deadline decisions advance only on observed polls, so
+    /// hung-worker tests run without wall-clock sleeps.
+    #[allow(clippy::too_many_arguments)]
+    pub fn launch_in_proc_clocked(
+        blocks: &[Block],
+        kind: UnitKind,
+        base: &ShampooConfig,
+        threads: usize,
+        transports: &[Arc<FaultInjectingTransport>],
+        proto: u32,
+        compress: bool,
+        membership: &MembershipConfig,
+        clock: Arc<dyn Clock>,
+    ) -> anyhow::Result<ShardExecutor> {
         ensure!(!transports.is_empty(), "in-proc shard launch requires at least one transport");
         ensure!(!blocks.is_empty(), "shard launch requires at least one block");
         ensure!(
@@ -2241,6 +2666,8 @@ impl ShardExecutor {
                     let conn = dial_t.dial().context("dial in-proc transport")?;
                     Ok(Box::new(conn) as Box<dyn Conn>)
                 }),
+                membership.timeouts,
+                clock.clone(),
             );
             Ok(WorkerHandle {
                 channel,
@@ -2274,6 +2701,7 @@ impl ShardExecutor {
             membership,
             spares,
             None,
+            clock,
         )
     }
 
@@ -2282,7 +2710,7 @@ impl ShardExecutor {
     /// the elastic runtime when requested, and build the executor.
     #[allow(clippy::too_many_arguments)]
     fn assemble(
-        workers: Vec<WorkerHandle>,
+        mut workers: Vec<WorkerHandle>,
         assignment: Vec<Vec<usize>>,
         n_blocks: usize,
         transport: String,
@@ -2294,10 +2722,12 @@ impl ShardExecutor {
         membership: &MembershipConfig,
         spares: Vec<WorkerHandle>,
         launch: Option<ShardLaunch>,
+        clock: Arc<dyn Clock>,
     ) -> anyhow::Result<ShardExecutor> {
         let overlap = workers.iter().all(|w| w.channel.overlap);
         let state = workers.iter().all(|w| w.channel.state);
         let member = workers.iter().all(|w| w.channel.member);
+        let heartbeat = workers.iter().all(|w| w.channel.heartbeat);
         for w in &workers {
             if !w.channel.overlap {
                 // Neutral capability report: whether this *disables*
@@ -2312,7 +2742,14 @@ impl ShardExecutor {
                 );
             }
         }
-        let elastic = if membership.elastic() {
+        // Liveness supervision: elastic fleet, every link heartbeat-
+        // capable, nonzero deadline. Non-elastic fleets keep the plain
+        // blocking reply waits (there is no replacement path to
+        // escalate into).
+        let supervised = membership.elastic()
+            && heartbeat
+            && membership.timeouts.deadline > Duration::ZERO;
+        let mut elastic = if membership.elastic() {
             ensure!(
                 member && state,
                 "elastic membership requires every worker link at wire protocol v5 \
@@ -2327,11 +2764,26 @@ impl ShardExecutor {
                 next_spare_id,
                 journal: StepJournal { sync_t: 0, snaps: None, steps: Vec::new() },
                 ahead: None,
+                wal_path: membership.journal.clone(),
+                wal: None,
+                timeouts: membership.timeouts,
+                clock: clock.clone(),
+                supervised,
             })
         } else {
             None
         };
+        for w in workers.iter_mut() {
+            w.channel.supervised = supervised && w.channel.heartbeat;
+        }
+        if let Some(el) = elastic.as_mut() {
+            for s in el.spares.iter_mut() {
+                s.channel.supervised = supervised && s.channel.heartbeat;
+            }
+        }
         let seats = workers.len();
+        let supervisor =
+            supervised.then(|| Supervisor::new(seats, membership.timeouts, clock.now()));
         Ok(ShardExecutor {
             workers: Arc::new(Mutex::new(workers)),
             assignment,
@@ -2346,6 +2798,9 @@ impl ShardExecutor {
             worker_threads,
             flags: Arc::new(FleetFlags::new(seats)),
             elastic,
+            heartbeat,
+            supervisor,
+            clock,
         })
     }
 
@@ -2715,6 +3170,88 @@ fn journal_push(
     ahead.map(|a| a.counts)
 }
 
+/// Per-seat dialable addresses for the durable journal: a relaunched
+/// driver re-adopts workers at these. In-proc seats record an empty
+/// string (their transports die with the process — never re-adoptable).
+fn seat_addrs(workers: &[WorkerHandle]) -> Vec<String> {
+    workers
+        .iter()
+        .map(|w| match &w.backend {
+            WorkerBackend::Process { addr, .. } => addr.journal_repr(),
+            WorkerBackend::InProc { .. } => String::new(),
+        })
+        .collect()
+}
+
+/// Durable write-ahead journaling (`--journal`): lazily create the
+/// on-disk journal at the first journaled step (creation truncates, so
+/// it must run *after* any `--resume-journal` load), then append this
+/// step's record **before any worker sees the step** — a driver killed
+/// at any later point finds the step on disk and replays it on resume.
+fn wal_append(
+    el: &mut ElasticRuntime,
+    workers: &[WorkerHandle],
+    params: &[Matrix],
+    grads: &[Matrix],
+    common: &StepCtx,
+) -> anyhow::Result<()> {
+    let Some(path) = el.wal_path.clone() else { return Ok(()) };
+    let t64 = common.t as u64;
+    if el.wal.is_none() {
+        // The sync section captures the state the replay starts from:
+        // post-step t64-1 params (= the pre-step params right now) and
+        // the snapshot taken at that point (restored state on a resume
+        // path, absent at a fresh t=0 start where Init *is* the state).
+        let sync_t = t64.saturating_sub(1);
+        let snaps = match (&el.journal.snaps, sync_t) {
+            (_, 0) => None,
+            (Some(s), _) => Some(
+                s.iter()
+                    .enumerate()
+                    .map(|(i, snap)| BlockStateMsg::from_snap(i as u32, snap))
+                    .collect::<Vec<_>>(),
+            ),
+            (None, _) => bail!(
+                "durable journal {path}: first journaled step is t={t64} but the driver \
+                 holds no state snapshot covering t={sync_t}"
+            ),
+        };
+        let addrs = seat_addrs(workers);
+        el.wal = Some(
+            JournalWriter::create(&path, sync_t, params, snaps.as_deref(), &addrs)
+                .with_context(|| format!("create durable journal {path}"))?,
+        );
+    }
+    el.wal
+        .as_mut()
+        .unwrap()
+        .append_step(t64, common.lr, grads)
+        .with_context(|| format!("journal step t={t64} to {path}"))
+}
+
+/// Rewrite the durable journal at a successful sync point: the new
+/// sync section (post-step params + fresh snapshot + current seat
+/// addresses) replaces the whole file atomically, discarding every
+/// covered step record. Failure is non-fatal — steps keep appending to
+/// the previous sync section, which stays valid for resume.
+fn wal_sync(el: &mut ElasticRuntime, workers: &[WorkerHandle], params: &[Matrix], t64: u64) {
+    let Some(path) = el.wal_path.clone() else { return };
+    let Some(snaps) = el.journal.snaps.as_ref() else { return };
+    let msgs: Vec<BlockStateMsg> = snaps
+        .iter()
+        .enumerate()
+        .map(|(i, snap)| BlockStateMsg::from_snap(i as u32, snap))
+        .collect();
+    let addrs = seat_addrs(workers);
+    match JournalWriter::create(&path, t64, params, Some(&msgs), &addrs) {
+        Ok(w) => el.wal = Some(w),
+        Err(e) => eprintln!(
+            "durable journal rewrite at t={t64} skipped ({e:#}); steps keep appending \
+             to the previous sync section"
+        ),
+    }
+}
+
 /// Migrate a dead seat onto a replacement worker: adopt a warm spare
 /// (or cold-spawn one on process fleets), re-`Init` the seat's blocks,
 /// restore the driver's last-acked snapshot, and replay the journal
@@ -2740,7 +3277,7 @@ fn migrate_and_replay(
             Some(launch) => {
                 let id = el.next_spare_id;
                 el.next_spare_id += 1;
-                spawn_process_worker(launch, id)
+                spawn_process_worker(launch, id, el.timeouts, el.clock.clone())
                     .with_context(|| format!("spare worker {id}: spawn"))?
             }
             None => {
@@ -2753,6 +3290,7 @@ fn migrate_and_replay(
     nw.channel
         .adopt(seat, epoch)
         .with_context(|| format!("shard {seat}: adopt replacement worker"))?;
+    nw.channel.supervised = el.supervised && nw.channel.heartbeat;
     // Fresh link, fresh codec: generation 0 never matches an adopted
     // channel's generation, so the first compressed step resyncs with
     // full frames on both directions.
@@ -2942,6 +3480,7 @@ fn sync_and_rebalance(
     base: &ShampooConfig,
     worker_threads: usize,
     t64: u64,
+    params: &[Matrix],
 ) -> anyhow::Result<()> {
     let snaps = match snapshot_all(workers, assignment, n_blocks, expects) {
         Ok(s) => s,
@@ -2956,6 +3495,7 @@ fn sync_and_rebalance(
     el.journal.snaps = Some(snaps);
     el.journal.sync_t = t64;
     el.journal.steps.clear();
+    wal_sync(el, workers, params, t64);
     if let Some(weights) = flags.take_staged() {
         el.controller.stage_rebalance(weights);
     }
@@ -3034,19 +3574,48 @@ impl BlockExecutor for ShardExecutor {
             kind,
             base,
             worker_threads,
+            supervisor,
+            clock,
             ..
         } = self;
         let compress = *compress;
         let mut guard = workers_guard(workers)?;
         let workers = &mut *guard;
         let t64 = common.t as u64;
-        // Elastic bookkeeping first: journal this step's payloads, then
-        // proactively heal any seat already known dead — its replacement
-        // replays the journal through t-1 and then takes step t with the
-        // rest of the fleet.
+        // Supervised fleets: probe idle-too-long seats *before* the step
+        // commits to the wire. A hung worker caught here is marked dead
+        // and healed by the proactive migration pass below, within the
+        // liveness deadline on the injected clock — never by waiting out
+        // the blocking reply timeout. Seats with a parked RefreshAhead
+        // are skipped: the wire is strict request/reply, and joining
+        // that reply proves liveness anyway.
+        if let Some(sup) = supervisor.as_mut() {
+            let now = clock.now();
+            for (seat, w) in workers.iter_mut().enumerate() {
+                if flags.is_dead(seat)
+                    || w.channel.pending_refresh.is_some()
+                    || !sup.ping_due(seat, now)
+                {
+                    continue;
+                }
+                let seq = sup.next_ping_seq();
+                match w.channel.ping(seq) {
+                    Ok(()) => sup.note_alive(seat, clock.now()),
+                    Err(e) => {
+                        eprintln!("shard {seat}: liveness probe failed ({e:#}); migrating");
+                        flags.set_dead(seat, true);
+                    }
+                }
+            }
+        }
+        // Elastic bookkeeping first: journal this step's payloads (in
+        // memory and — write-ahead — on disk), then proactively heal any
+        // seat already known dead: its replacement replays the journal
+        // through t-1 and then takes step t with the rest of the fleet.
         let mut ahead_counts: Option<Vec<usize>> = None;
         if let Some(el) = elastic.as_mut() {
             ahead_counts = journal_push(el, blocks, params, grads, ctxs, common);
+            wal_append(el, workers, params, grads, common)?;
             for seat in flags.dead_seats() {
                 migrate_and_replay(
                     el,
@@ -3061,6 +3630,9 @@ impl BlockExecutor for ShardExecutor {
                     t64.saturating_sub(1),
                 )
                 .with_context(|| format!("shard {seat}: elastic failover"))?;
+                if let Some(sup) = supervisor.as_mut() {
+                    sup.reset_seat(seat, clock.now());
+                }
             }
         } else if let Some(seat) = flags.dead_seats().first().copied() {
             bail!(
@@ -3126,6 +3698,9 @@ impl BlockExecutor for ShardExecutor {
                     continue;
                 }
             };
+            if let Some(sup) = supervisor.as_mut() {
+                sup.note_alive(shard, clock.now());
+            }
             if let Some(el) = elastic.as_mut() {
                 // Feed the rebalancer the observed per-seat step wall
                 // time (EWMA-smoothed inside the controller).
@@ -3166,6 +3741,9 @@ impl BlockExecutor for ShardExecutor {
                 .ok_or_else(|| {
                     anyhow!("shard {seat}: migration replay produced no reply for step t={t64}")
                 })?;
+                if let Some(sup) = supervisor.as_mut() {
+                    sup.reset_seat(seat, clock.now());
+                }
                 let n = apply_step_reply(
                     reply,
                     &mut workers[seat],
@@ -3193,6 +3771,7 @@ impl BlockExecutor for ShardExecutor {
                     base,
                     *worker_threads,
                     t64,
+                    params,
                 )?;
             }
         }
@@ -3271,7 +3850,8 @@ impl BlockExecutor for ShardExecutor {
     }
 
     fn finish_refresh_ahead(&mut self) -> anyhow::Result<Option<RefreshAheadDone>> {
-        let ShardExecutor { workers, assignment, n_blocks, elastic, flags, .. } = self;
+        let ShardExecutor { workers, assignment, n_blocks, elastic, flags, supervisor, clock, .. } =
+            self;
         let mut guard = workers_guard(workers)?;
         let workers = &mut *guard;
         let mut refreshed = vec![false; *n_blocks];
@@ -3308,6 +3888,9 @@ impl BlockExecutor for ShardExecutor {
                     continue;
                 }
             };
+            if let Some(sup) = supervisor.as_mut() {
+                sup.note_alive(shard, clock.now());
+            }
             let ok = match reply {
                 WireMsg::RefreshAheadOk(ok) => ok,
                 WireMsg::RefreshAheadOkV4(ok) => {
@@ -3379,6 +3962,8 @@ impl BlockExecutor for ShardExecutor {
             kind,
             base,
             worker_threads,
+            supervisor,
+            clock,
             ..
         } = self;
         let mut guard = workers_guard(workers)?;
@@ -3400,6 +3985,9 @@ impl BlockExecutor for ShardExecutor {
                     through,
                 )
                 .with_context(|| format!("shard {seat}: elastic failover"))?;
+                if let Some(sup) = supervisor.as_mut() {
+                    sup.reset_seat(seat, clock.now());
+                }
             }
         }
         snapshot_all(workers, assignment, *n_blocks, expects)
@@ -3421,6 +4009,8 @@ impl BlockExecutor for ShardExecutor {
             kind,
             base,
             worker_threads,
+            supervisor,
+            clock,
             ..
         } = self;
         ensure!(
@@ -3448,6 +4038,9 @@ impl BlockExecutor for ShardExecutor {
                     through,
                 )
                 .with_context(|| format!("shard {seat}: elastic failover"))?;
+                if let Some(sup) = supervisor.as_mut() {
+                    sup.reset_seat(seat, clock.now());
+                }
             }
         }
         for (shard, w) in workers.iter_mut().enumerate() {
@@ -3493,7 +4086,7 @@ mod tests {
         blocks: &[Block],
         kind: UnitKind,
         base: &ShampooConfig,
-        transports: &[FaultInjectingTransport],
+        transports: &[Arc<FaultInjectingTransport>],
         proto: u32,
         compress: bool,
     ) -> ShardExecutor {
@@ -3632,6 +4225,105 @@ mod tests {
         assert!(ShardConfig::resolve(&zero, &Config::default()).is_err());
         // Defaults stay non-elastic.
         assert!(!ShardConfig::default().membership().elastic());
+    }
+
+    #[test]
+    fn timeout_knobs_resolve_with_cli_over_config_precedence() {
+        // Documented defaults: connect 10 s, reply 120 s, heartbeat
+        // 500 ms, deadline 10 s — matching LinkTimeouts::default().
+        let d = ShardConfig::resolve(&Args::default(), &Config::default()).unwrap();
+        assert_eq!(d.timeouts(), LinkTimeouts::default());
+        assert_eq!(d.connect_timeout_ms, 10_000);
+        assert_eq!(d.reply_timeout_ms, 120_000);
+        assert_eq!(d.heartbeat_ms, 500);
+        assert_eq!(d.deadline_ms, 10_000);
+        // Config keys override defaults; CLI flags override config.
+        let cfg = Config::parse(
+            "[shard]\nconnect_timeout_ms = 2000\nreply_timeout_ms = 30000\n\
+             heartbeat_ms = 100\ndeadline_ms = 1000",
+        )
+        .unwrap();
+        let sc = ShardConfig::resolve(&Args::default(), &cfg).unwrap();
+        assert_eq!(sc.connect_timeout_ms, 2000);
+        assert_eq!(sc.reply_timeout_ms, 30_000);
+        assert_eq!(sc.heartbeat_ms, 100);
+        assert_eq!(sc.deadline_ms, 1000);
+        let args = Args::parse(
+            [
+                "train",
+                "--shard-connect-timeout-ms",
+                "500",
+                "--shard-reply-timeout-ms",
+                "20000",
+                "--shard-heartbeat-ms",
+                "50",
+                "--shard-deadline-ms",
+                "200",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let sc2 = ShardConfig::resolve(&args, &cfg).unwrap();
+        assert_eq!(sc2.connect_timeout_ms, 500, "CLI beats config");
+        assert_eq!(sc2.heartbeat_ms, 50, "CLI beats config");
+        assert_eq!(
+            sc2.timeouts(),
+            LinkTimeouts {
+                connect: Duration::from_millis(500),
+                reply: Duration::from_millis(20_000),
+                heartbeat: Duration::from_millis(50),
+                deadline: Duration::from_millis(200),
+            }
+        );
+        // The ordering invariant heartbeat <= deadline <= reply is
+        // enforced at resolution, by name.
+        let inverted = Args::parse(
+            ["train", "--shard-heartbeat-ms", "5000", "--shard-deadline-ms", "100"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let err = ShardConfig::resolve(&inverted, &Config::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("heartbeat"), "{err:#}");
+        let past_reply = Args::parse(
+            ["train", "--shard-deadline-ms", "300000"].iter().map(|s| s.to_string()),
+        );
+        assert!(ShardConfig::resolve(&past_reply, &Config::default()).is_err());
+        // Zero timeouts are refused.
+        let zero = Args::parse(
+            ["train", "--shard-connect-timeout-ms", "0"].iter().map(|s| s.to_string()),
+        );
+        assert!(ShardConfig::resolve(&zero, &Config::default()).is_err());
+    }
+
+    #[test]
+    fn journal_knobs_resolve_and_gate_on_protocol() {
+        // --journal / shard.journal / --resume-journal all land in the
+        // config; --resume-journal implies journaling to the same path.
+        let cfg = Config::parse("[shard]\njournal = \"out/wal.skjl\"").unwrap();
+        let sc = ShardConfig::resolve(&Args::default(), &cfg).unwrap();
+        assert_eq!(sc.journal.as_deref(), Some("out/wal.skjl"));
+        assert!(sc.membership().elastic(), "journaling turns the fleet elastic");
+        let args =
+            Args::parse(["train", "--journal", "a.skjl"].iter().map(|s| s.to_string()));
+        let sc2 = ShardConfig::resolve(&args, &cfg).unwrap();
+        assert_eq!(sc2.journal.as_deref(), Some("a.skjl"), "CLI beats config");
+        let resume =
+            Args::parse(["train", "--resume-journal", "b.skjl"].iter().map(|s| s.to_string()));
+        let sc3 = ShardConfig::resolve(&resume, &Config::default()).unwrap();
+        assert_eq!(sc3.resume_journal.as_deref(), Some("b.skjl"));
+        assert_eq!(sc3.journal.as_deref(), Some("b.skjl"), "resume implies journal");
+        // Journaling needs the v5+ typed-state links.
+        let pinned = Args::parse(
+            ["train", "--journal", "a.skjl", "--shard-proto", "4"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let err = ShardConfig::resolve(&pinned, &Config::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("v5"), "{err:#}");
+        // An explicit empty --journal clears a config-file path.
+        let clear = Args::parse(["train", "--journal", ""].iter().map(|s| s.to_string()));
+        let sc4 = ShardConfig::resolve(&clear, &cfg).unwrap();
+        assert_eq!(sc4.journal, None);
     }
 
     #[test]
@@ -3818,12 +4510,13 @@ mod tests {
         let mut conn = t.dial().unwrap();
         let _ = conn.set_timeout(Some(Duration::from_secs(10)));
         match wire::read_msg(&mut conn).unwrap() {
-            WireMsg::HelloV5 {
+            WireMsg::HelloV6 {
                 worker_id: 0,
                 overlap: true,
                 compress: true,
                 state: true,
                 member: true,
+                heartbeat: true,
                 ..
             } => {}
             other => panic!("unexpected hello: {other:?}"),
@@ -4040,7 +4733,7 @@ mod tests {
         let mut conn = t.dial().unwrap();
         let _ = conn.set_timeout(Some(Duration::from_secs(10)));
         match wire::read_msg(&mut conn).unwrap() {
-            WireMsg::HelloV5 { compress: true, member: true, .. } => {}
+            WireMsg::HelloV6 { compress: true, member: true, heartbeat: true, .. } => {}
             other => panic!("unexpected hello: {other:?}"),
         }
         let init = WireMsg::Init(InitMsg {

@@ -1,0 +1,303 @@
+//! Driver-side liveness supervision for the shard fleet (wire v6).
+//!
+//! PR 7 made worker *death* recoverable, but detection stayed passive: a
+//! hung worker — one whose connection is up but whose replies never
+//! arrive — surfaced only after the blocking reply timeout (120 s by
+//! default). This module makes detection proactive and deterministic:
+//!
+//! - [`Clock`] abstracts time so every deadline/backoff decision can be
+//!   driven by a [`VirtualClock`] in tests — no wall-clock sleeps, no
+//!   flaky timing. The production [`SystemClock`] is a thin monotonic
+//!   wrapper over [`std::time::Instant`].
+//! - [`Backoff`] is capped, deterministic exponential backoff (no
+//!   jitter: determinism is the repo-wide contract, and the driver is a
+//!   single client per link, so synchronized retries are not a risk).
+//! - [`Supervisor`] tracks per-seat liveness against the
+//!   [`LinkTimeouts`] knobs: a seat that has not proven itself alive
+//!   within `heartbeat` is due a `Ping` probe, and one silent past
+//!   `deadline` is escalated into the membership kill-and-replace path
+//!   long before the reply timeout would fire.
+//!
+//! The wire side (v6 `Ping`/`Pong` frames behind the `HelloV6`
+//! heartbeat capability) lives in [`crate::coordinator::wire`]; the
+//! escalation plumbing lives in [`crate::coordinator::shard`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Clocks.
+// ---------------------------------------------------------------------------
+
+/// Injectable time source. `now` is monotone elapsed time since an
+/// arbitrary per-clock origin; `on_poll` is the hook the supervised
+/// reply loop calls once per poll quantum that elapsed without a frame,
+/// which lets a virtual clock advance deterministically exactly when
+/// the code under test observed time passing.
+pub trait Clock: Send + Sync + std::fmt::Debug {
+    /// Monotone elapsed time since this clock's origin.
+    fn now(&self) -> Duration;
+
+    /// One poll quantum elapsed without progress (a read timed out).
+    /// The system clock ignores this — wall time already advanced; the
+    /// virtual clock advances by exactly the quantum.
+    fn on_poll(&self, _quantum: Duration) {}
+}
+
+/// Wall-clock time, anchored at construction.
+#[derive(Debug)]
+pub struct SystemClock {
+    origin: std::time::Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> SystemClock {
+        SystemClock { origin: std::time::Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        SystemClock::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now(&self) -> Duration {
+        self.origin.elapsed()
+    }
+}
+
+/// Deterministic test clock: time moves only when the code under test
+/// reports it ([`Clock::on_poll`]) or the test advances it explicitly.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    nanos: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Advance virtual time by `by`.
+    pub fn advance(&self, by: Duration) {
+        self.nanos.fetch_add(by.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::SeqCst))
+    }
+
+    fn on_poll(&self, quantum: Duration) {
+        self.advance(quantum);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backoff.
+// ---------------------------------------------------------------------------
+
+/// Capped deterministic exponential backoff: `base`, `2·base`,
+/// `4·base`, … clamped at `cap`. Replaces the raw fixed-interval
+/// sleep-spins of the reconnect and shutdown paths.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    next: Duration,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration) -> Backoff {
+        let base = base.max(Duration::from_millis(1));
+        Backoff { base, cap: cap.max(base), next: base }
+    }
+
+    /// The next delay to wait; doubles (up to the cap) for the call
+    /// after.
+    pub fn next(&mut self) -> Duration {
+        let cur = self.next;
+        self.next = (cur * 2).min(self.cap);
+        cur
+    }
+
+    /// Back to the base delay (call after a success).
+    pub fn reset(&mut self) {
+        self.next = self.base;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Link timeout knobs.
+// ---------------------------------------------------------------------------
+
+/// Per-link timing knobs, resolved from `--shard-connect-timeout-ms` /
+/// `--shard-reply-timeout-ms` / `--shard-heartbeat-ms` /
+/// `--shard-deadline-ms` and the `[shard]` config section. The
+/// invariant `heartbeat <= deadline <= reply` is enforced at
+/// resolution ([`crate::coordinator::ShardConfig::resolve`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkTimeouts {
+    /// Bound on establishing a connection to a worker.
+    pub connect: Duration,
+    /// Bound on a blocking reply wait (unsupervised links, and the
+    /// hard upper bound everywhere).
+    pub reply: Duration,
+    /// Supervised poll quantum: how often a silent link is re-polled,
+    /// and how stale a seat may go before a `Ping` probe is due.
+    pub heartbeat: Duration,
+    /// Supervised liveness deadline: a seat silent this long is
+    /// escalated to the membership kill-and-replace path.
+    pub deadline: Duration,
+}
+
+impl Default for LinkTimeouts {
+    fn default() -> Self {
+        LinkTimeouts {
+            connect: Duration::from_secs(10),
+            reply: Duration::from_secs(120),
+            heartbeat: Duration::from_millis(500),
+            deadline: Duration::from_secs(10),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Supervisor.
+// ---------------------------------------------------------------------------
+
+/// Per-seat liveness ledger. A seat proves itself alive whenever any
+/// reply arrives on its link ([`Supervisor::note_alive`]); the
+/// executor consults [`Supervisor::ping_due`] before each step to
+/// decide which idle seats to probe, and the supervised reply loop
+/// escalates any seat silent past [`LinkTimeouts::deadline`].
+#[derive(Debug)]
+pub struct Supervisor {
+    timeouts: LinkTimeouts,
+    last_alive: Vec<Duration>,
+    pings_sent: u64,
+}
+
+impl Supervisor {
+    pub fn new(seats: usize, timeouts: LinkTimeouts, now: Duration) -> Supervisor {
+        Supervisor { timeouts, last_alive: vec![now; seats], pings_sent: 0 }
+    }
+
+    pub fn timeouts(&self) -> LinkTimeouts {
+        self.timeouts
+    }
+
+    /// Record proof of life for `seat` (any reply counts, not only
+    /// `Pong`).
+    pub fn note_alive(&mut self, seat: usize, now: Duration) {
+        if let Some(cell) = self.last_alive.get_mut(seat) {
+            *cell = now.max(*cell);
+        }
+    }
+
+    /// A replacement worker took the seat: its liveness history starts
+    /// fresh.
+    pub fn reset_seat(&mut self, seat: usize, now: Duration) {
+        if let Some(cell) = self.last_alive.get_mut(seat) {
+            *cell = now;
+        }
+    }
+
+    /// Whether `seat` has been silent for at least one heartbeat
+    /// interval and should be probed with a `Ping`.
+    pub fn ping_due(&self, seat: usize, now: Duration) -> bool {
+        now.saturating_sub(self.last_alive[seat]) >= self.timeouts.heartbeat
+    }
+
+    /// Whether `seat` has been silent past the liveness deadline.
+    pub fn overdue(&self, seat: usize, now: Duration) -> bool {
+        now.saturating_sub(self.last_alive[seat]) >= self.timeouts.deadline
+    }
+
+    /// Monotone ping sequence numbers (echoed back in `Pong`).
+    pub fn next_ping_seq(&mut self) -> u64 {
+        self.pings_sent += 1;
+        self.pings_sent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps_deterministically() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_millis(100));
+        let waits: Vec<u64> = (0..6).map(|_| b.next().as_millis() as u64).collect();
+        assert_eq!(waits, vec![10, 20, 40, 80, 100, 100]);
+        b.reset();
+        assert_eq!(b.next(), Duration::from_millis(10));
+        // A second instance produces the identical schedule — no jitter.
+        let mut b2 = Backoff::new(Duration::from_millis(10), Duration::from_millis(100));
+        let waits2: Vec<u64> = (0..6).map(|_| b2.next().as_millis() as u64).collect();
+        assert_eq!(waits, waits2);
+        // Degenerate knobs are clamped, never a zero-spin.
+        let mut z = Backoff::new(Duration::ZERO, Duration::ZERO);
+        assert!(z.next() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn virtual_clock_advances_only_on_observed_polls() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.on_poll(Duration::from_millis(50));
+        c.on_poll(Duration::from_millis(50));
+        assert_eq!(c.now(), Duration::from_millis(100));
+        c.advance(Duration::from_secs(1));
+        assert_eq!(c.now(), Duration::from_millis(1100));
+    }
+
+    #[test]
+    fn system_clock_is_monotone() {
+        let c = SystemClock::new();
+        let a = c.now();
+        c.on_poll(Duration::from_secs(999)); // no-op for wall time
+        let b = c.now();
+        assert!(b >= a);
+        assert!(b < Duration::from_secs(999));
+    }
+
+    #[test]
+    fn supervisor_ping_and_deadline_trip_on_the_virtual_clock() {
+        let clock = VirtualClock::new();
+        let t = LinkTimeouts {
+            heartbeat: Duration::from_millis(50),
+            deadline: Duration::from_millis(200),
+            ..LinkTimeouts::default()
+        };
+        let mut sup = Supervisor::new(2, t, clock.now());
+        assert!(!sup.ping_due(0, clock.now()));
+        clock.advance(Duration::from_millis(50));
+        assert!(sup.ping_due(0, clock.now()), "one heartbeat of silence is ping-due");
+        assert!(!sup.overdue(0, clock.now()));
+        // Seat 1 proves itself alive; seat 0 stays silent to the deadline.
+        clock.advance(Duration::from_millis(100));
+        sup.note_alive(1, clock.now());
+        clock.advance(Duration::from_millis(50));
+        assert!(sup.overdue(0, clock.now()), "200ms of silence trips the deadline");
+        assert!(!sup.overdue(1, clock.now()));
+        assert!(!sup.ping_due(1, clock.now()));
+        // A replacement resets the ledger.
+        sup.reset_seat(0, clock.now());
+        assert!(!sup.overdue(0, clock.now()));
+        // Sequence numbers are monotone from 1.
+        assert_eq!(sup.next_ping_seq(), 1);
+        assert_eq!(sup.next_ping_seq(), 2);
+    }
+
+    #[test]
+    fn note_alive_never_moves_time_backwards() {
+        let t = LinkTimeouts::default();
+        let mut sup = Supervisor::new(1, t, Duration::from_millis(100));
+        sup.note_alive(0, Duration::from_millis(40)); // stale observation
+        assert!(!sup.ping_due(0, Duration::from_millis(120)));
+    }
+}

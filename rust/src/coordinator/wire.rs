@@ -100,10 +100,13 @@ use std::time::Duration;
 /// the typed [`BlockPayload`] codec and the block-state RPCs; version 5
 /// adds the membership frames ([`WireMsg::Adopt`] /
 /// [`WireMsg::AdoptOk`]) behind the `member` capability, so a warm
-/// spare can be re-seated as a dead shard mid-run. Drivers treat
-/// lower-version workers as lacking the newer layers and degrade per
-/// link.
-pub const PROTO_VERSION: u32 = 5;
+/// spare can be re-seated as a dead shard mid-run; version 6 adds the
+/// liveness frames ([`WireMsg::Ping`] / [`WireMsg::Pong`]) behind the
+/// `heartbeat` capability, so the driver's supervisor can probe a
+/// silent worker instead of waiting out the blocking reply timeout.
+/// Drivers treat lower-version workers as lacking the newer layers and
+/// degrade per link.
+pub const PROTO_VERSION: u32 = 6;
 
 /// A connected driver↔worker byte stream: any transport the shard
 /// channel can speak — TCP, Unix sockets, or the in-memory
@@ -960,6 +963,27 @@ pub enum WireMsg {
     Adopt { epoch: u64, shard: u32 },
     /// Worker → driver: the adoption acknowledgement.
     AdoptOk { epoch: u64, shard: u32 },
+    /// Worker → driver greeting from protocol v6 on: the v5 capability
+    /// report plus `heartbeat` — whether the worker answers the
+    /// liveness probes ([`WireMsg::Ping`]). A false report (or any
+    /// older greeting) leaves that link unsupervised: silence is only
+    /// detected by the blocking reply timeout.
+    HelloV6 {
+        worker_id: u32,
+        proto: u32,
+        overlap: bool,
+        compress: bool,
+        state: bool,
+        member: bool,
+        heartbeat: bool,
+    },
+    /// Driver → worker liveness probe (protocol v6, `heartbeat`
+    /// capability). Carries a driver-chosen sequence number; the worker
+    /// echoes it in [`WireMsg::Pong`]. Valid at any point in the
+    /// session, including before `Init`. Idempotent — replay-safe.
+    Ping { seq: u64 },
+    /// Worker → driver: the liveness probe echo.
+    Pong { seq: u64 },
 }
 
 const TAG_HELLO: u8 = 1;
@@ -987,6 +1011,9 @@ const TAG_STATE_RESTORE: u8 = 22;
 const TAG_HELLO_V5: u8 = 23;
 const TAG_ADOPT: u8 = 24;
 const TAG_ADOPT_OK: u8 = 25;
+const TAG_HELLO_V6: u8 = 26;
+const TAG_PING: u8 = 27;
+const TAG_PONG: u8 = 28;
 
 /// [`DeltaMat`] mode bytes.
 const DM_RAW: u8 = 0;
@@ -1362,6 +1389,24 @@ pub fn encode_frame(msg: &WireMsg) -> anyhow::Result<Vec<u8>> {
             e.u8(TAG_ADOPT_OK);
             e.u64(*epoch);
             e.u32(*shard);
+        }
+        WireMsg::HelloV6 { worker_id, proto, overlap, compress, state, member, heartbeat } => {
+            e.u8(TAG_HELLO_V6);
+            e.u32(*worker_id);
+            e.u32(*proto);
+            e.boolean(*overlap);
+            e.boolean(*compress);
+            e.boolean(*state);
+            e.boolean(*member);
+            e.boolean(*heartbeat);
+        }
+        WireMsg::Ping { seq } => {
+            e.u8(TAG_PING);
+            e.u64(*seq);
+        }
+        WireMsg::Pong { seq } => {
+            e.u8(TAG_PONG);
+            e.u64(*seq);
         }
     }
     if e.buf.len() > MAX_FRAME_BYTES {
@@ -1791,6 +1836,17 @@ pub fn decode_payload(payload: &[u8]) -> anyhow::Result<WireMsg> {
         },
         TAG_ADOPT => WireMsg::Adopt { epoch: d.u64()?, shard: d.u32()? },
         TAG_ADOPT_OK => WireMsg::AdoptOk { epoch: d.u64()?, shard: d.u32()? },
+        TAG_HELLO_V6 => WireMsg::HelloV6 {
+            worker_id: d.u32()?,
+            proto: d.u32()?,
+            overlap: d.boolean()?,
+            compress: d.boolean()?,
+            state: d.boolean()?,
+            member: d.boolean()?,
+            heartbeat: d.boolean()?,
+        },
+        TAG_PING => WireMsg::Ping { seq: d.u64()? },
+        TAG_PONG => WireMsg::Pong { seq: d.u64()? },
         other => bail!("shard wire: unknown message tag {other}"),
     };
     d.done()?;
@@ -1837,6 +1893,73 @@ pub fn read_msg<R: Read>(r: &mut R) -> anyhow::Result<WireMsg> {
     match read_msg_opt(r)? {
         Some(msg) => Ok(msg),
         None => bail!("shard wire: connection closed while awaiting reply"),
+    }
+}
+
+/// Incremental frame reader for supervised (polling) reply loops.
+///
+/// [`read_msg`] assumes a blocking read: if the stream times out
+/// mid-frame, any bytes already consumed are lost and the stream
+/// desyncs. The supervisor needs to poll a link on a short quantum
+/// (`--shard-heartbeat-ms`) while waiting out a much longer liveness
+/// deadline, so partial frames must survive across polls. A
+/// `FrameReader` accumulates bytes across any number of timed-out
+/// reads and yields the message only once the frame is complete.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    /// Accumulated frame bytes (length prefix included).
+    buf: Vec<u8>,
+    /// Total frame size (4 + payload) once the length prefix is known.
+    need: Option<usize>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Poll `r` for the next frame. Returns `Ok(None)` when the read
+    /// timed out (`TimedOut`/`WouldBlock`) — call again after the
+    /// supervisor's clock tick; any partial frame is retained. EOF is
+    /// always an error here: a polling driver is awaiting a reply.
+    pub fn poll<R: Read>(&mut self, r: &mut R) -> anyhow::Result<Option<WireMsg>> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            let target = self.need.unwrap_or(4);
+            while self.buf.len() < target {
+                let want = (target - self.buf.len()).min(chunk.len());
+                match r.read(&mut chunk[..want]) {
+                    Ok(0) => bail!(
+                        "shard wire: connection closed while awaiting reply ({}/{target} bytes)",
+                        self.buf.len()
+                    ),
+                    Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                        ) =>
+                    {
+                        return Ok(None);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(anyhow::Error::new(e).context("shard wire: poll frame")),
+                }
+            }
+            if self.need.is_none() {
+                let len =
+                    u32::from_le_bytes(self.buf[..4].try_into().expect("4-byte prefix")) as usize;
+                if len > MAX_FRAME_BYTES {
+                    bail!("shard wire: frame length {len} exceeds cap {MAX_FRAME_BYTES}");
+                }
+                self.need = Some(4 + len);
+                continue;
+            }
+            let msg = decode_payload(&self.buf[4..])?;
+            self.buf.clear();
+            self.need = None;
+            return Ok(Some(msg));
+        }
     }
 }
 
@@ -1980,6 +2103,28 @@ mod tests {
         roundtrip(WireMsg::Adopt { epoch: 0, shard: 0 });
         roundtrip(WireMsg::Adopt { epoch: u64::MAX, shard: u32::MAX });
         roundtrip(WireMsg::AdoptOk { epoch: 7, shard: 2 });
+        // v6 liveness layer.
+        roundtrip(WireMsg::HelloV6 {
+            worker_id: 4,
+            proto: PROTO_VERSION,
+            overlap: true,
+            compress: true,
+            state: true,
+            member: true,
+            heartbeat: true,
+        });
+        roundtrip(WireMsg::HelloV6 {
+            worker_id: 0,
+            proto: 13,
+            overlap: false,
+            compress: false,
+            state: false,
+            member: false,
+            heartbeat: false,
+        });
+        roundtrip(WireMsg::Ping { seq: 0 });
+        roundtrip(WireMsg::Ping { seq: u64::MAX });
+        roundtrip(WireMsg::Pong { seq: 99 });
         roundtrip(WireMsg::StepV4(StepV4Msg {
             t: 11,
             base_t: 10,
@@ -2090,6 +2235,92 @@ mod tests {
         assert!(read_msg_opt(&mut &frame[..2]).is_err());
         // Cut inside the payload.
         assert!(read_msg_opt(&mut &frame[..frame.len() - 1]).is_err());
+    }
+
+    /// Yields scripted byte slices one `read` at a time, interposing a
+    /// `TimedOut` error between every pair of slices — the shape of a
+    /// slow link under a short poll quantum.
+    struct TricklingReader {
+        chunks: Vec<Vec<u8>>,
+        next: usize,
+        timed_out: bool,
+    }
+
+    impl Read for TricklingReader {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if !self.timed_out {
+                self.timed_out = true;
+                return Err(std::io::Error::from(std::io::ErrorKind::TimedOut));
+            }
+            self.timed_out = false;
+            match self.chunks.get(self.next) {
+                None => Ok(0),
+                Some(chunk) => {
+                    let n = chunk.len().min(out.len());
+                    out[..n].copy_from_slice(&chunk[..n]);
+                    if n < chunk.len() {
+                        self.chunks[self.next] = chunk[n..].to_vec();
+                    } else {
+                        self.next += 1;
+                    }
+                    Ok(n)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frame_reader_survives_timeouts_mid_frame() {
+        let msg = WireMsg::StepOk(StepOkMsg {
+            t: 9,
+            refreshes: 1,
+            entries: vec![(2, Matrix::from_vec(1, 3, vec![1.0, -0.0, f64::NAN]))],
+        });
+        let frame = encode_frame(&msg).unwrap();
+        // Deliver the frame one byte per successful read, a timeout
+        // between each: the reader must retain partial state and
+        // produce the message only on the final poll.
+        let mut r = TricklingReader {
+            chunks: frame.iter().map(|b| vec![*b]).collect(),
+            next: 0,
+            timed_out: false,
+        };
+        let mut fr = FrameReader::new();
+        let mut polls = 0usize;
+        let got = loop {
+            polls += 1;
+            assert!(polls < 10 * frame.len(), "frame reader failed to make progress");
+            if let Some(m) = fr.poll(&mut r).unwrap() {
+                break m;
+            }
+        };
+        let want_frame = encode_frame(&got).unwrap();
+        assert_eq!(want_frame, frame, "re-encoded poll result differs");
+        // A second frame on the same reader decodes from a clean slate.
+        let frame2 = encode_frame(&WireMsg::Pong { seq: 7 }).unwrap();
+        let mut r2 = TricklingReader { chunks: vec![frame2], next: 0, timed_out: false };
+        loop {
+            match fr.poll(&mut r2).unwrap() {
+                Some(m) => {
+                    assert_eq!(m, WireMsg::Pong { seq: 7 });
+                    break;
+                }
+                None => continue,
+            }
+        }
+        // EOF mid-frame is an error, not a silent None.
+        let half = encode_frame(&msg).unwrap();
+        let mut r3 =
+            TricklingReader { chunks: vec![half[..3].to_vec()], next: 0, timed_out: false };
+        let mut fr3 = FrameReader::new();
+        let err = loop {
+            match fr3.poll(&mut r3) {
+                Ok(Some(_)) => panic!("decoded from a truncated stream"),
+                Ok(None) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert!(err.to_string().contains("closed"), "unexpected error: {err}");
     }
 
     // -----------------------------------------------------------------
@@ -2207,7 +2438,7 @@ mod tests {
     }
 
     fn arbitrary_msg(rng: &mut Pcg64) -> WireMsg {
-        match rng.below(25) {
+        match rng.below(28) {
             0 => WireMsg::Hello { worker_id: rng.next_u64() as u32 },
             1 => WireMsg::HelloV2 {
                 worker_id: rng.next_u64() as u32,
@@ -2415,7 +2646,18 @@ mod tests {
                 member: rng.bernoulli(0.5),
             },
             23 => WireMsg::Adopt { epoch: rng.next_u64(), shard: rng.next_u64() as u32 },
-            _ => WireMsg::AdoptOk { epoch: rng.next_u64(), shard: rng.next_u64() as u32 },
+            24 => WireMsg::AdoptOk { epoch: rng.next_u64(), shard: rng.next_u64() as u32 },
+            25 => WireMsg::HelloV6 {
+                worker_id: rng.next_u64() as u32,
+                proto: rng.next_u64() as u32,
+                overlap: rng.bernoulli(0.5),
+                compress: rng.bernoulli(0.5),
+                state: rng.bernoulli(0.5),
+                member: rng.bernoulli(0.5),
+                heartbeat: rng.bernoulli(0.5),
+            },
+            26 => WireMsg::Ping { seq: rng.next_u64() },
+            _ => WireMsg::Pong { seq: rng.next_u64() },
         }
     }
 
@@ -2462,7 +2704,7 @@ mod tests {
                 );
             }
         }
-        assert!(kinds_seen.len() >= 25, "generator missed kinds: {}", kinds_seen.len());
+        assert!(kinds_seen.len() >= 28, "generator missed kinds: {}", kinds_seen.len());
     }
 
     #[test]

@@ -36,6 +36,11 @@ USAGE:
                 [--shard-launch TEMPLATE]
                 [--shard-spares N] [--rebalance BOOL]
                 [--shard-failover-budget K]
+                [--shard-connect-timeout-ms MS] [--shard-reply-timeout-ms MS]
+                [--shard-heartbeat-ms MS] [--shard-deadline-ms MS]
+                [--journal PATH] [--resume-journal PATH]
+                [--crash-at-step K[,K...]]   (test harness: abort after
+                                              the listed steps)
   sketchy bench-gate [--baseline F] [--current F] [--tolerance R]
   sketchy shard-worker --worker-id N [--transport tcp|unix]
                        [--socket-dir DIR] [--proto-version V]
@@ -82,10 +87,22 @@ continues bitwise identical to an uninterrupted one — refresh
 accounting included. --rebalance additionally lets the driver migrate
 blocks between live workers at sync points when per-shard step
 latencies drift apart; migrations reuse the same deterministic
-snapshot/restore path, so numbers never change. bench-gate compares a
-fresh engine bench record against the committed baseline and exits
-nonzero on a >tolerance regression (and on *_max ceiling overruns,
-e.g. the shard migration replay bound).
+snapshot/restore path, so numbers never change. Wire protocol v6 adds
+driver-side heartbeat supervision to elastic fleets: the driver probes
+idle links with Ping every --shard-heartbeat-ms and a worker silent
+past --shard-deadline-ms is killed and replaced through the same
+spare-adoption path — a *hung* worker (connection up, replies never
+arriving) no longer stalls the run until the --shard-reply-timeout-ms
+bound. --journal PATH makes the *driver* itself crash-safe: sync-point
+snapshots (params + typed sketch-factor optimizer state, never dense
+covariance) and a write-ahead record of every step since are fsynced
+to PATH, so a killed driver relaunched with --resume-journal PATH
+re-adopts surviving workers (or spawns fresh ones), restores the last
+sync point, replays at most --shard-failover-budget journaled steps,
+and continues bitwise identical to an uninterrupted run. bench-gate
+compares a fresh engine bench record against the committed baseline
+and exits nonzero on a >tolerance regression (and on *_max ceiling
+overruns, e.g. the shard migration / driver-resume replay bounds).
 
 Run `sketchy list` for the experiment catalogue.";
 
@@ -279,6 +296,37 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
              engine-adam); got {opt_name}"
         );
     }
+    if shard_cfg.journal.is_some() && !shard_cfg.enabled() {
+        anyhow::bail!("--journal/--resume-journal needs a shard fleet; pass --shards N");
+    }
+    anyhow::ensure!(
+        shard_cfg.resume_journal.is_none() || args.get("resume").is_none(),
+        "--resume and --resume-journal are mutually exclusive"
+    );
+    // --resume-journal PATH: load the durable write-ahead journal a
+    // killed driver left behind — before the fleet launches, so the
+    // journaled worker addresses can be re-adopted instead of spawning
+    // duplicates. A missing file means the previous driver died before
+    // its first journaled step: start fresh (journaling to that path).
+    let resume_journal = match shard_cfg.resume_journal.as_deref() {
+        Some(path) if std::path::Path::new(path).exists() => {
+            let jc = sketchy::train::load_journal(path)
+                .with_context(|| format!("resume journal {path}"))?;
+            if jc.torn {
+                eprintln!(
+                    "resume journal {path}: torn tail dropped; resuming from the last \
+                     consistent step ({})",
+                    jc.sync_t as usize + jc.steps.len()
+                );
+            }
+            Some(jc)
+        }
+        Some(path) => {
+            eprintln!("resume journal {path} not found; starting fresh (journaling to it)");
+            None
+        }
+        None => None,
+    };
     let mut opt: Box<dyn Optimizer> = match opt_name.as_str() {
         "adam" => {
             let mut a = Adam::new(&shapes, lr);
@@ -295,7 +343,10 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
             // logged notice).
             let engine = if shard_cfg.enabled() {
                 let launch = ShardLaunch::current_exe(&shard_cfg)?;
-                let membership = shard_cfg.membership();
+                let mut membership = shard_cfg.membership();
+                if let Some(jc) = &resume_journal {
+                    membership.resume_addrs = Some(jc.addrs.clone());
+                }
                 sharded_engine_optimizer(name, &shapes, base, rank, ecfg, &launch, &membership)?
             } else {
                 engine_optimizer(name, &shapes, base, rank, ecfg)
@@ -381,6 +432,69 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         }
         start_step = step.min(steps);
     }
+    // --resume-journal: restore the journaled sync-point snapshot and
+    // replay the write-ahead step records through the optimizer — the
+    // relaunched driver rejoins the run bitwise where the killed one
+    // left off (the fleet was re-seated from the journal's worker
+    // addresses at launch; replay re-drives it from the snapshot).
+    if let Some(jc) = resume_journal {
+        anyhow::ensure!(
+            jc.params.len() == trainer.params.len(),
+            "resume journal: {} tensors journaled, model has {}",
+            jc.params.len(),
+            trainer.params.len()
+        );
+        for (i, (dst, src)) in trainer.params.iter_mut().zip(jc.params).enumerate() {
+            anyhow::ensure!(
+                dst.rows() == src.rows() && dst.cols() == src.cols(),
+                "resume journal: tensor {i} is {}x{} in the journal, {}x{} in the model",
+                src.rows(),
+                src.cols(),
+                dst.rows(),
+                dst.cols()
+            );
+            *dst = src;
+        }
+        match jc.snaps {
+            Some(snaps) => opt
+                .restore_payloads(jc.sync_t as usize, snaps)
+                .context("resume journal: restore optimizer state")?,
+            None => anyhow::ensure!(
+                jc.sync_t == 0,
+                "resume journal: sync point t={} carries no state snapshot",
+                jc.sync_t
+            ),
+        }
+        let replayed = jc.steps.len();
+        for rs in jc.steps {
+            opt.set_lr(rs.lr);
+            opt.try_step(&mut trainer.params, &rs.grads)
+                .with_context(|| format!("resume journal: replay step t={}", rs.t))?;
+        }
+        start_step = (jc.sync_t as usize + replayed).min(steps);
+        println!(
+            "resumed from journal at step {start_step} (sync point t={}, {replayed} steps replayed)",
+            jc.sync_t
+        );
+        // Wind the corpus RNG to where the crashed driver's was: draw
+        // and discard exactly the batches steps 0..start_step consumed,
+        // so the continued run samples the same data an uninterrupted
+        // one would.
+        for _ in 0..start_step {
+            for _ in 0..workers {
+                let _ = corpus.batch(trainer.batch, trainer.seq);
+            }
+        }
+    }
+    // --crash-at-step: scripted driver kills for the crash-resume
+    // harness — abort (no unwinding, no flush) right after the listed
+    // steps complete, leaving only the write-ahead journal behind.
+    let mut kill_plan = match args.get("crash-at-step") {
+        Some(spec) => {
+            sketchy::coordinator::DriverKillPlan::parse(spec).map_err(|e| anyhow::anyhow!(e))?
+        }
+        None => sketchy::coordinator::DriverKillPlan::none(),
+    };
     let t0 = std::time::Instant::now();
     let mut last_log = std::time::Instant::now();
     let mut curve = sketchy::train::CurveLog::new(&opt.name());
@@ -388,6 +502,10 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         opt.set_lr(schedule.at(s));
         let (loss, _) = trainer.step(opt.as_mut(), &mut corpus, workers)?;
         curve.push(s, loss);
+        if kill_plan.should_kill((s + 1) as u64) {
+            eprintln!("crash-at-step: aborting after step {}", s + 1);
+            std::process::abort();
+        }
         if last_log.elapsed().as_secs() >= 2 || s == 0 || s + 1 == steps {
             let sps = (s + 1) as f64 / t0.elapsed().as_secs_f64();
             println!("step {s:>5}  loss {loss:.4}  lr {:.2e}  {sps:.2} steps/s", schedule.at(s));

@@ -31,6 +31,7 @@ use super::shampoo::ShampooConfig;
 use crate::coordinator::fault::FaultInjectingTransport;
 use crate::coordinator::membership::MembershipConfig;
 use crate::coordinator::shard::{ShardExecutor, ShardLaunch};
+use crate::coordinator::supervise::{Clock, SystemClock};
 use crate::optim::Block;
 use anyhow::ensure;
 use std::sync::Arc;
@@ -52,20 +53,25 @@ enum Mode {
 pub struct ExecutorBuilder {
     mode: Mode,
     membership: MembershipConfig,
+    clock: Option<Arc<dyn Clock>>,
 }
 
 impl ExecutorBuilder {
     /// In-process engine over the thread-pool executor (the old
     /// `PrecondEngine::new`).
     pub fn local() -> ExecutorBuilder {
-        ExecutorBuilder { mode: Mode::Local, membership: MembershipConfig::default() }
+        ExecutorBuilder { mode: Mode::Local, membership: MembershipConfig::default(), clock: None }
     }
 
     /// Cross-process shard fleet described by `launch` (the old
     /// `PrecondEngine::sharded`). Elastic knobs ([`Self::spares`],
     /// [`Self::rebalance`]) apply to this fleet.
     pub fn sharded(launch: ShardLaunch) -> ExecutorBuilder {
-        ExecutorBuilder { mode: Mode::Sharded(launch), membership: MembershipConfig::default() }
+        ExecutorBuilder {
+            mode: Mode::Sharded(launch),
+            membership: MembershipConfig::default(),
+            clock: None,
+        }
     }
 
     /// In-proc shard workers over scripted fault-injection transports
@@ -80,6 +86,7 @@ impl ExecutorBuilder {
         ExecutorBuilder {
             mode: Mode::InProc { transports, proto, compress },
             membership: MembershipConfig::default(),
+            clock: None,
         }
     }
 
@@ -98,6 +105,7 @@ impl ExecutorBuilder {
         ExecutorBuilder {
             mode: Mode::Custom(Box::new(build)),
             membership: MembershipConfig::default(),
+            clock: None,
         }
     }
 
@@ -129,6 +137,15 @@ impl ExecutorBuilder {
         self
     }
 
+    /// Inject a [`Clock`] for heartbeat supervision (in-proc mode; the
+    /// process-fleet modes always run on the system clock). Tests hand
+    /// a `VirtualClock` here so hung-worker deadlines trip on observed
+    /// polls instead of wall time. Defaults to [`SystemClock`].
+    pub fn clock(mut self, clock: Arc<dyn Clock>) -> ExecutorBuilder {
+        self.clock = Some(clock);
+        self
+    }
+
     /// Build the engine: plan blocks, stand up the executor, resolve
     /// the overlap knob against its capability report.
     pub fn build(
@@ -138,7 +155,7 @@ impl ExecutorBuilder {
         base: ShampooConfig,
         ecfg: EngineConfig,
     ) -> anyhow::Result<PrecondEngine> {
-        let ExecutorBuilder { mode, membership } = self;
+        let ExecutorBuilder { mode, membership, clock } = self;
         if matches!(mode, Mode::Local | Mode::Custom(_)) {
             ensure!(
                 !membership.elastic(),
@@ -165,8 +182,9 @@ impl ExecutorBuilder {
                 })
             }
             Mode::InProc { transports, proto, compress } => {
+                let clock = clock.unwrap_or_else(|| Arc::new(SystemClock::new()));
                 PrecondEngine::build_with(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
-                    Ok(Box::new(ShardExecutor::launch_in_proc_with(
+                    Ok(Box::new(ShardExecutor::launch_in_proc_clocked(
                         blocks,
                         kind,
                         base,
@@ -175,6 +193,7 @@ impl ExecutorBuilder {
                         proto,
                         compress,
                         &membership,
+                        clock,
                     )?))
                 })
             }

@@ -1,0 +1,622 @@
+//! Durable write-ahead step journal: the driver's crash-recovery log.
+//!
+//! PR 7's elastic fleet made *worker* failure recoverable by keeping a
+//! sync-point state snapshot plus a bounded per-step journal in driver
+//! memory. This module persists exactly that object to disk so the
+//! *driver* itself can be `kill -9`'d and relaunched with
+//! `--resume-journal PATH`, restoring the last synced optimizer state
+//! and replaying at most `failover_budget` journaled steps — bitwise
+//! identical to the uninterrupted run.
+//!
+//! Layout: magic "SKJL" | u32 version | **sync section** | zero or
+//! more **step records**.
+//!
+//! - Sync section (rewritten atomically at every sync point, exactly
+//!   the checkpoint module's tmp + fsync + rename + directory-fsync
+//!   discipline): u64 sync_t | u32 param count | per tensor u32 rows |
+//!   u32 cols | rows*cols f64 LE | u8 has_snaps | \[one wire
+//!   `StateSnapOk` frame\] | u32 addr count | per addr u32 len | UTF-8
+//!   bytes. The snapshot frame carries the **typed** block factors
+//!   ([`BlockStateMsg`]): FD-sketched blocks journal as their rank-ℓ
+//!   basis + eigenvalues + escaped mass — O(dℓ), never the O(d²) dense
+//!   covariance. The addresses are the worker listen addresses at the
+//!   sync point, so a relaunched driver can try to re-adopt the
+//!   surviving fleet before spawning a fresh one.
+//! - Step record (appended + fsynced *before* the step is applied —
+//!   write-ahead): u8 tag | u64 t | f64 lr | u32 grad count | per grad
+//!   u32 rows | u32 cols | rows*cols f64 LE. Steps are strictly
+//!   consecutive from `sync_t + 1`.
+//!
+//! Recovery tolerates a **torn tail**: the sync section must parse
+//! completely (it was published atomically, so anything else is real
+//! corruption and errors loudly), but a step region cut mid-record —
+//! the expected state after `kill -9` raced an append — recovers every
+//! complete record and drops the rest, falling back to the previous
+//! sync point plus the surviving replay prefix. Every length field is
+//! bounded by the bytes actually remaining in the file before any
+//! allocation, mirroring the checkpoint loader's alloc-bomb guards.
+
+use crate::coordinator::wire::{self, BlockStateMsg, StateSnapOkMsg, WireMsg};
+use crate::tensor::Matrix;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"SKJL";
+const VERSION: u32 = 1;
+
+/// Fixed prefix: magic + version + sync_t + param count.
+const HEADER_BYTES: u64 = 4 + 4 + 8 + 4;
+
+/// Step record tag byte.
+const REC_STEP: u8 = 2;
+
+/// One journaled step, replayed through the public `Optimizer` surface
+/// (`set_lr` + `try_step`) on resume — the engine recomputes every
+/// schedule decision (clip scale, stat cadence, refresh due-ness)
+/// purely from `t`, so `(t, lr, grads)` is the whole step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplayStep {
+    pub t: u64,
+    pub lr: f64,
+    pub grads: Vec<Matrix>,
+}
+
+/// Everything a relaunched driver recovers from a journal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalContents {
+    /// Step count at the journaled sync point (0 = run start).
+    pub sync_t: u64,
+    /// Full parameter tensors at the sync point.
+    pub params: Vec<Matrix>,
+    /// Typed optimizer state at the sync point; `None` only at
+    /// `sync_t == 0` (a fresh engine needs no restore).
+    pub snaps: Option<Vec<BlockStateMsg>>,
+    /// Per-seat worker listen addresses at the sync point (empty
+    /// string = seat not re-adoptable; spawn fresh).
+    pub addrs: Vec<String>,
+    /// Surviving journaled steps, strictly consecutive from
+    /// `sync_t + 1`.
+    pub steps: Vec<ReplayStep>,
+    /// Whether a torn/corrupt tail was dropped during recovery.
+    pub torn: bool,
+}
+
+fn put_tensor(buf: &mut Vec<u8>, m: &Matrix) {
+    buf.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+    buf.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+    for &v in m.as_slice() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Append-only writer over a published journal file. Constructed by
+/// [`JournalWriter::create`], which (re)writes the sync section
+/// atomically; [`JournalWriter::append_step`] then appends one fsynced
+/// record per step, *before* the step is applied.
+#[derive(Debug)]
+pub struct JournalWriter {
+    path: String,
+    file: std::fs::File,
+}
+
+impl JournalWriter {
+    /// Atomically publish a journal holding only the sync section
+    /// (previous step records, now covered by the new snapshot, are
+    /// discarded), then reopen it for appends.
+    pub fn create(
+        path: &str,
+        sync_t: u64,
+        params: &[Matrix],
+        snaps: Option<&[BlockStateMsg]>,
+        addrs: &[String],
+    ) -> Result<JournalWriter> {
+        ensure!(
+            sync_t == 0 || snaps.is_some(),
+            "journal sync at step {sync_t} needs an optimizer snapshot"
+        );
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let tmp = format!("{path}.{}.tmp", std::process::id());
+        let write = || -> Result<()> {
+            let file = std::fs::File::create(&tmp)
+                .with_context(|| format!("create journal staging file {tmp}"))?;
+            let mut f = std::io::BufWriter::new(file);
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&sync_t.to_le_bytes())?;
+            f.write_all(&(params.len() as u32).to_le_bytes())?;
+            let mut buf = Vec::new();
+            for p in params {
+                buf.clear();
+                put_tensor(&mut buf, p);
+                f.write_all(&buf)?;
+            }
+            match snaps {
+                Some(entries) => {
+                    f.write_all(&[1u8])?;
+                    let msg = WireMsg::StateSnapOk(StateSnapOkMsg { entries: entries.to_vec() });
+                    wire::write_msg(&mut f, &msg).context("write journal optimizer snapshot")?;
+                }
+                None => f.write_all(&[0u8])?,
+            }
+            f.write_all(&(addrs.len() as u32).to_le_bytes())?;
+            for a in addrs {
+                f.write_all(&(a.len() as u32).to_le_bytes())?;
+                f.write_all(a.as_bytes())?;
+            }
+            f.flush()?;
+            f.get_ref().sync_all().context("sync journal staging file")?;
+            Ok(())
+        };
+        if let Err(e) = write() {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        std::fs::rename(&tmp, path).with_context(|| format!("publish journal {tmp} -> {path}"))?;
+        #[cfg(unix)]
+        {
+            let parent =
+                std::path::Path::new(path).parent().filter(|p| !p.as_os_str().is_empty());
+            let dir = parent.unwrap_or_else(|| std::path::Path::new("."));
+            std::fs::File::open(dir)
+                .and_then(|d| d.sync_all())
+                .with_context(|| format!("sync journal directory {}", dir.display()))?;
+        }
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("reopen journal {path} for appends"))?;
+        Ok(JournalWriter { path: path.to_string(), file })
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Append one step record and fsync it. Called before the step is
+    /// sent to the fleet — the journal is write-ahead, so a crash at
+    /// any later point can only lose work the journal already covers.
+    pub fn append_step(&mut self, t: u64, lr: f64, grads: &[Matrix]) -> Result<()> {
+        let mut buf = Vec::new();
+        buf.push(REC_STEP);
+        buf.extend_from_slice(&t.to_le_bytes());
+        buf.extend_from_slice(&lr.to_le_bytes());
+        buf.extend_from_slice(&(grads.len() as u32).to_le_bytes());
+        for g in grads {
+            put_tensor(&mut buf, g);
+        }
+        self.file.write_all(&buf).context("append journal step record")?;
+        self.file.sync_all().context("fsync journal step record")?;
+        Ok(())
+    }
+}
+
+/// Read one shape-prefixed tensor, charging `remaining` before any
+/// allocation (the checkpoint loader's alloc-bomb discipline).
+fn read_tensor<R: Read>(f: &mut R, remaining: &mut u64, what: &str) -> Result<Matrix> {
+    let mut u32buf = [0u8; 4];
+    ensure!(*remaining >= 8, "{what}: missing tensor shape header");
+    f.read_exact(&mut u32buf)?;
+    let rows = u32::from_le_bytes(u32buf) as usize;
+    f.read_exact(&mut u32buf)?;
+    let cols = u32::from_le_bytes(u32buf) as usize;
+    *remaining -= 8;
+    ensure!(
+        rows > 0 && cols > 0 && rows <= 1 << 20 && cols <= 1 << 20,
+        "{what}: implausible shape {rows}x{cols}"
+    );
+    let need = (rows as u64)
+        .checked_mul(cols as u64)
+        .and_then(|c| c.checked_mul(8))
+        .ok_or_else(|| anyhow::anyhow!("{what}: shape overflows"))?;
+    ensure!(
+        need <= *remaining,
+        "{what} claims {rows}x{cols} ({need} bytes) but only {remaining} bytes remain"
+    );
+    *remaining -= need;
+    let mut data = vec![0.0f64; rows * cols];
+    let mut vbuf = [0u8; 8];
+    for v in &mut data {
+        f.read_exact(&mut vbuf)?;
+        *v = f64::from_le_bytes(vbuf);
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Load a journal for resume. The sync section is validated strictly
+/// (it was published atomically; anything short of a complete parse is
+/// corruption). The step region recovers every complete, consecutive
+/// record and drops a torn tail, reporting it via
+/// [`JournalContents::torn`].
+pub fn load_journal(path: &str) -> Result<JournalContents> {
+    let file = std::fs::File::open(path).with_context(|| format!("open journal {path}"))?;
+    let total = file.metadata()?.len();
+    ensure!(total >= HEADER_BYTES, "not a sketchy journal: {total} bytes is shorter than the header");
+    let mut f = std::io::BufReader::new(file);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a sketchy journal: bad magic");
+    }
+    let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
+    f.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != VERSION {
+        bail!("unsupported journal version {version}");
+    }
+    f.read_exact(&mut u64buf)?;
+    let sync_t = u64::from_le_bytes(u64buf);
+    f.read_exact(&mut u32buf)?;
+    let count = u32::from_le_bytes(u32buf) as usize;
+    let mut remaining = total - HEADER_BYTES;
+    ensure!(
+        (count as u64) <= remaining / 8,
+        "journal header claims {count} tensors but only {remaining} bytes follow"
+    );
+    let mut params = Vec::with_capacity(count);
+    for k in 0..count {
+        params.push(read_tensor(&mut f, &mut remaining, &format!("journal tensor {k}"))?);
+    }
+    ensure!(remaining >= 1, "journal is missing the snapshot flag");
+    let mut flag = [0u8; 1];
+    f.read_exact(&mut flag)?;
+    remaining -= 1;
+    let snaps = match flag[0] {
+        0 => None,
+        1 => {
+            // Read the embedded frame with exact byte accounting (the
+            // addr list and step records follow, so the generic frame
+            // reader's consumption must be charged against the file).
+            ensure!(remaining >= 4, "journal snapshot frame is missing its length prefix");
+            f.read_exact(&mut u32buf)?;
+            remaining -= 4;
+            let len = u32::from_le_bytes(u32buf) as u64;
+            ensure!(
+                len <= remaining,
+                "journal snapshot frame claims {len} bytes but only {remaining} remain"
+            );
+            let mut payload = Vec::with_capacity((len as usize).min(1 << 16));
+            let got = Read::by_ref(&mut f).take(len).read_to_end(&mut payload)?;
+            ensure!(got as u64 == len, "journal snapshot frame truncated");
+            remaining -= len;
+            let msg = wire::decode_payload(&payload).context("decode journal snapshot frame")?;
+            let WireMsg::StateSnapOk(snap) = msg else {
+                bail!("journal snapshot section holds an unexpected wire message");
+            };
+            Some(snap.entries)
+        }
+        n => bail!("journal snapshot flag {n} is neither 0 nor 1"),
+    };
+    ensure!(
+        sync_t == 0 || snaps.is_some(),
+        "journal sync at step {sync_t} carries no optimizer snapshot"
+    );
+    ensure!(remaining >= 4, "journal is missing the address count");
+    f.read_exact(&mut u32buf)?;
+    remaining -= 4;
+    let n_addrs = u32::from_le_bytes(u32buf) as usize;
+    ensure!(
+        (n_addrs as u64) <= remaining / 4,
+        "journal claims {n_addrs} addresses but only {remaining} bytes follow"
+    );
+    let mut addrs = Vec::with_capacity(n_addrs);
+    for k in 0..n_addrs {
+        f.read_exact(&mut u32buf)?;
+        remaining -= 4;
+        let len = u32::from_le_bytes(u32buf) as u64;
+        ensure!(len <= 4096, "journal address {k}: implausible length {len}");
+        ensure!(
+            len <= remaining,
+            "journal address {k} claims {len} bytes but only {remaining} remain"
+        );
+        let mut bytes = vec![0u8; len as usize];
+        f.read_exact(&mut bytes)?;
+        remaining -= len;
+        addrs.push(
+            String::from_utf8(bytes)
+                .map_err(|_| anyhow::anyhow!("journal address {k} is not UTF-8"))?,
+        );
+    }
+    // Step region: recover complete consecutive records; a parse
+    // failure from here on is a torn tail, not an error.
+    let mut steps: Vec<ReplayStep> = Vec::new();
+    let mut torn = false;
+    while remaining > 0 {
+        let parse = |f: &mut std::io::BufReader<std::fs::File>,
+                     remaining: &mut u64|
+         -> Result<ReplayStep> {
+            let mut tag = [0u8; 1];
+            f.read_exact(&mut tag)?;
+            *remaining -= 1;
+            ensure!(tag[0] == REC_STEP, "unknown journal record tag {}", tag[0]);
+            let mut u64buf = [0u8; 8];
+            let mut u32buf = [0u8; 4];
+            ensure!(*remaining >= 20, "step record header truncated");
+            f.read_exact(&mut u64buf)?;
+            let t = u64::from_le_bytes(u64buf);
+            f.read_exact(&mut u64buf)?;
+            let lr = f64::from_le_bytes(u64buf);
+            f.read_exact(&mut u32buf)?;
+            *remaining -= 20;
+            let n = u32::from_le_bytes(u32buf) as usize;
+            ensure!(
+                (n as u64) <= *remaining / 8,
+                "step record claims {n} gradients but only {remaining} bytes remain"
+            );
+            let mut grads = Vec::with_capacity(n);
+            for k in 0..n {
+                grads.push(read_tensor(f, remaining, &format!("journal step gradient {k}"))?);
+            }
+            Ok(ReplayStep { t, lr, grads })
+        };
+        match parse(&mut f, &mut remaining) {
+            Ok(rec) => {
+                let expect = sync_t + steps.len() as u64 + 1;
+                if rec.t != expect {
+                    torn = true;
+                    break;
+                }
+                steps.push(rec);
+            }
+            Err(_) => {
+                torn = true;
+                break;
+            }
+        }
+    }
+    Ok(JournalContents { sync_t, params, snaps, addrs, steps, torn })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{EngineConfig, Optimizer, ShampooConfig, UnitKind};
+    use crate::util::rng::Pcg64;
+
+    fn tmp_path(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("{name}_{}", std::process::id()))
+            .to_str()
+            .unwrap()
+            .to_string()
+    }
+
+    fn sample_params(seed: u64) -> Vec<Matrix> {
+        let mut rng = Pcg64::new(seed);
+        vec![Matrix::randn(3, 4, &mut rng), Matrix::randn(2, 2, &mut rng)]
+    }
+
+    /// Typed snapshot entries from a real sketched engine (the journal
+    /// payload is the same object the wire `StateSnap` RPC ships).
+    fn sketched_entries() -> Vec<BlockStateMsg> {
+        let shapes = [(9usize, 6), (4, 4)];
+        let base = ShampooConfig {
+            start_preconditioning_step: 2,
+            stat_interval: 1,
+            precond_interval: 2,
+            ..Default::default()
+        };
+        let ecfg =
+            EngineConfig { threads: 1, block_size: 5, refresh_interval: 2, ..Default::default() };
+        let mut eng = crate::optim::ExecutorBuilder::local()
+            .build(&shapes, UnitKind::Sketched { rank: 3 }, base, ecfg)
+            .unwrap();
+        let mut rng = Pcg64::new(611);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut rng)).collect();
+        for _ in 0..5 {
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(r, c)| Matrix::randn(r, c, &mut rng)).collect();
+            eng.try_step(&mut params, &grads).unwrap();
+        }
+        eng.state_payloads().unwrap().expect("engine has typed state")
+    }
+
+    fn sample_journal(path: &str, sync_t: u64, n_steps: u64) -> (JournalContents, Vec<u64>) {
+        let params = sample_params(700 + sync_t);
+        let snaps = (sync_t > 0).then(sketched_entries);
+        let addrs = vec!["127.0.0.1:4001".to_string(), String::new()];
+        let mut w =
+            JournalWriter::create(path, sync_t, &params, snaps.as_deref(), &addrs).unwrap();
+        // Record the file size after the sync section and after every
+        // appended record, so truncation tests know the boundaries.
+        let mut boundaries = vec![std::fs::metadata(path).unwrap().len()];
+        let mut rng = Pcg64::new(41 + sync_t);
+        let mut steps = Vec::new();
+        for k in 0..n_steps {
+            let t = sync_t + 1 + k;
+            let lr = 0.05 / (k + 1) as f64;
+            let grads = vec![Matrix::randn(3, 4, &mut rng), Matrix::randn(2, 2, &mut rng)];
+            w.append_step(t, lr, &grads).unwrap();
+            boundaries.push(std::fs::metadata(path).unwrap().len());
+            steps.push(ReplayStep { t, lr, grads });
+        }
+        let contents =
+            JournalContents { sync_t, params, snaps, addrs, steps, torn: false };
+        (contents, boundaries)
+    }
+
+    #[test]
+    fn roundtrip_with_snapshot_and_steps() {
+        let path = tmp_path("sketchy_journal_roundtrip.bin");
+        let (want, _) = sample_journal(&path, 6, 3);
+        let got = load_journal(&path).unwrap();
+        assert_eq!(got, want);
+        // Param and gradient payloads are bitwise, not approximate.
+        for (a, b) in got.params.iter().zip(&want.params) {
+            for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // No staging file left behind.
+        let staged = format!("{path}.{}.tmp", std::process::id());
+        assert!(!std::path::Path::new(&staged).exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sync_rewrite_discards_covered_steps_atomically() {
+        let path = tmp_path("sketchy_journal_rewrite.bin");
+        let (_, _) = sample_journal(&path, 0, 4);
+        // A new sync point rewrites the whole file: the four old step
+        // records are covered by the snapshot and vanish.
+        let (want, _) = sample_journal(&path, 4, 1);
+        let got = load_journal(&path).unwrap();
+        assert_eq!(got, want);
+        // A stale crashed staging file next to it changes nothing.
+        let staged = format!("{path}.{}.tmp", std::process::id());
+        std::fs::write(&staged, b"torn staging garbage").unwrap();
+        assert_eq!(load_journal(&path).unwrap(), want);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&staged).ok();
+    }
+
+    #[test]
+    fn every_byte_truncation_recovers_a_consistent_prefix() {
+        // The crash-simulation sweep: truncate a journal with a real
+        // snapshot and several appended steps at every byte boundary.
+        // Cuts inside the atomically-published sync section must error
+        // loudly; cuts in the append-only step region must recover
+        // exactly the complete records before the cut and flag the torn
+        // tail — never panic, never a giant allocation, never a record
+        // past the cut.
+        let path = tmp_path("sketchy_journal_trunc.bin");
+        let (want, boundaries) = sample_journal(&path, 6, 3);
+        let full = std::fs::read(&path).unwrap();
+        assert_eq!(*boundaries.last().unwrap() as usize, full.len());
+        let sync_len = boundaries[0];
+        for cut in 0..full.len() as u64 {
+            std::fs::write(&path, &full[..cut as usize]).unwrap();
+            if cut < sync_len {
+                assert!(
+                    load_journal(&path).is_err(),
+                    "sync-section prefix of {cut}/{} bytes must not load",
+                    full.len()
+                );
+                continue;
+            }
+            let got = load_journal(&path)
+                .unwrap_or_else(|e| panic!("step-region cut at {cut} failed: {e}"));
+            let complete = boundaries.iter().filter(|&&b| b <= cut).count() - 1;
+            assert_eq!(got.steps.len(), complete, "cut at {cut}");
+            assert_eq!(got.steps[..], want.steps[..complete], "cut at {cut}");
+            assert_eq!(got.sync_t, want.sync_t);
+            assert_eq!(got.params, want.params);
+            assert_eq!(got.snaps, want.snaps);
+            let at_boundary = boundaries.contains(&cut);
+            assert_eq!(got.torn, !at_boundary, "cut at {cut}");
+        }
+        std::fs::write(&path, &full).unwrap();
+        assert_eq!(load_journal(&path).unwrap(), want);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trailing_garbage_is_dropped_as_a_torn_tail() {
+        let path = tmp_path("sketchy_journal_garbage.bin");
+        let (want, _) = sample_journal(&path, 2, 2);
+        let full = std::fs::read(&path).unwrap();
+        // Pure garbage after the last complete record.
+        let mut b = full.clone();
+        b.extend_from_slice(&[0xEE; 37]);
+        std::fs::write(&path, &b).unwrap();
+        let got = load_journal(&path).unwrap();
+        assert_eq!(got.steps, want.steps);
+        assert!(got.torn);
+        // A plausible-looking record with a non-consecutive step index
+        // is dropped too (replay must stay contiguous from sync_t).
+        let mut b = full.clone();
+        b.push(REC_STEP);
+        b.extend_from_slice(&99u64.to_le_bytes());
+        b.extend_from_slice(&0.1f64.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        let got = load_journal(&path).unwrap();
+        assert_eq!(got.steps, want.steps);
+        assert!(got.torn);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn alloc_bomb_headers_are_rejected_or_dropped() {
+        let path = tmp_path("sketchy_journal_bomb.bin");
+        let header = |sync_t: u64, count: u32| {
+            let mut b = Vec::new();
+            b.extend_from_slice(MAGIC);
+            b.extend_from_slice(&VERSION.to_le_bytes());
+            b.extend_from_slice(&sync_t.to_le_bytes());
+            b.extend_from_slice(&count.to_le_bytes());
+            b
+        };
+        // Param-count lie in a header-only file.
+        std::fs::write(&path, header(0, u32::MAX)).unwrap();
+        assert!(load_journal(&path).is_err());
+        // Param-shape lie.
+        let mut b = header(0, 1);
+        b.extend_from_slice(&(1u32 << 20).to_le_bytes());
+        b.extend_from_slice(&(1u32 << 20).to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_journal(&path).is_err());
+        // Snapshot-frame length lie.
+        let mut b = header(0, 0);
+        b.push(1);
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_journal(&path).is_err());
+        // A nonzero sync point without a snapshot is refused.
+        let mut b = header(9, 0);
+        b.push(0);
+        b.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_journal(&path).is_err());
+        // Address-length lie.
+        let mut b = header(0, 0);
+        b.push(0);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_journal(&path).is_err());
+        // Wrong wire message in the snapshot slot.
+        let mut b = header(0, 0);
+        b.push(1);
+        wire::write_msg(&mut b, &WireMsg::Ok).unwrap();
+        b.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_journal(&path).is_err());
+        // A gradient-count lie inside a *step* record is a torn tail
+        // (append region), recovered as zero steps — not an error, and
+        // not an allocation.
+        let (want, _) = sample_journal(&path, 0, 0);
+        let mut b = std::fs::read(&path).unwrap();
+        b.push(REC_STEP);
+        b.extend_from_slice(&1u64.to_le_bytes());
+        b.extend_from_slice(&0.1f64.to_le_bytes());
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        let got = load_journal(&path).unwrap();
+        assert_eq!(got.params, want.params);
+        assert!(got.steps.is_empty());
+        assert!(got.torn);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_wrong_magic() {
+        let path = tmp_path("sketchy_journal_notone.bin");
+        std::fs::write(&path, b"not a journal").unwrap();
+        assert!(load_journal(&path).is_err());
+        // A checkpoint is not a journal.
+        let mut b = Vec::new();
+        b.extend_from_slice(b"SKCH");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&0u64.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        assert!(load_journal(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod artifact_worker;
 pub mod checkpoint;
+pub mod journal;
 pub mod lm;
 pub mod metrics;
 pub mod proxy_train;
@@ -10,6 +11,7 @@ pub mod proxy_train;
 pub use checkpoint::{
     load_checkpoint, load_checkpoint_full, save_checkpoint, save_checkpoint_with_state,
 };
+pub use journal::{load_journal, JournalContents, JournalWriter, ReplayStep};
 pub use lm::LmTrainer;
 pub use metrics::CurveLog;
 pub use proxy_train::{ProxyTask, ProxyTrainer};

@@ -198,6 +198,42 @@ mod tests {
     }
 
     #[test]
+    fn supervision_and_journal_flags_parse() {
+        // The exact grammar the durable-driver entry point relies on:
+        // link-timeout knobs, the write-ahead journal pair, and the
+        // crash-harness step list.
+        let a = parse(&[
+            "train",
+            "--shards",
+            "2",
+            "--shard-connect-timeout-ms",
+            "2000",
+            "--shard-reply-timeout-ms",
+            "30000",
+            "--shard-heartbeat-ms",
+            "250",
+            "--shard-deadline-ms",
+            "5000",
+            "--journal",
+            "out/wal.skjl",
+            "--crash-at-step",
+            "3,7",
+        ]);
+        assert_eq!(a.get_u64("shard-connect-timeout-ms", 0), 2000);
+        assert_eq!(a.get_u64("shard-reply-timeout-ms", 0), 30_000);
+        assert_eq!(a.get_u64("shard-heartbeat-ms", 0), 250);
+        assert_eq!(a.get_u64("shard-deadline-ms", 0), 5000);
+        assert_eq!(a.get("journal"), Some("out/wal.skjl"));
+        assert_eq!(a.get("crash-at-step"), Some("3,7"));
+        let r = parse(&["train", "--resume-journal", "out/wal.skjl"]);
+        assert_eq!(r.get("resume-journal"), Some("out/wal.skjl"));
+        // An explicit empty value (clearing a config-file path) stays a
+        // value, not a switch.
+        let c = parse(&["train", "--journal", ""]);
+        assert_eq!(c.get("journal"), Some(""));
+    }
+
+    #[test]
     fn pool_and_overlap_flags_parse() {
         // The exact grammar the engine runtime knobs rely on.
         let a = parse(&["train", "--pool-threads", "6", "--overlap-refresh"]);

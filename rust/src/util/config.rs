@@ -271,7 +271,9 @@ mod tests {
     fn shard_section_round_trips() {
         let cfg = Config::parse(
             "[shard]\ncount = 2\ntransport = \"unix\"\nproto = 1\ncompress = false\n\
-             launch = \"ssh w{shard} /opt/sketchy {worker_cmd}\"",
+             launch = \"ssh w{shard} /opt/sketchy {worker_cmd}\"\n\
+             connect_timeout_ms = 2000\nreply_timeout_ms = 30000\n\
+             heartbeat_ms = 250\ndeadline_ms = 5000\njournal = \"out/wal.skjl\"",
         )
         .unwrap();
         assert_eq!(cfg.usize_or("shard.count", 0), 2);
@@ -282,6 +284,11 @@ mod tests {
             cfg.str_or("shard.launch", ""),
             "ssh w{shard} /opt/sketchy {worker_cmd}"
         );
+        assert_eq!(cfg.usize_or("shard.connect_timeout_ms", 0), 2000);
+        assert_eq!(cfg.usize_or("shard.reply_timeout_ms", 0), 30_000);
+        assert_eq!(cfg.usize_or("shard.heartbeat_ms", 0), 250);
+        assert_eq!(cfg.usize_or("shard.deadline_ms", 0), 5000);
+        assert_eq!(cfg.str_or("shard.journal", ""), "out/wal.skjl");
         // Defaults apply when the section is absent.
         let empty = Config::default();
         assert_eq!(empty.usize_or("shard.count", 0), 0);
@@ -289,6 +296,8 @@ mod tests {
         assert_eq!(empty.usize_or("shard.proto", 2), 2);
         assert!(empty.bool_or("shard.compress", true));
         assert_eq!(empty.str_or("shard.launch", ""), "");
+        assert_eq!(empty.usize_or("shard.heartbeat_ms", 500), 500);
+        assert_eq!(empty.str_or("shard.journal", ""), "");
     }
 
     #[test]

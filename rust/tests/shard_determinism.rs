@@ -10,14 +10,16 @@
 
 use sketchy::coordinator::shard::{FleetStats, ShardExecutor, ShardLaunch, ShardTransport};
 use sketchy::coordinator::wire::PROTO_VERSION;
-use sketchy::coordinator::{FaultAction, FaultInjectingTransport, FaultScript, MembershipConfig};
+use sketchy::coordinator::{
+    FaultAction, FaultInjectingTransport, FaultScript, LinkTimeouts, MembershipConfig, VirtualClock,
+};
 use sketchy::optim::precond::StepCtx;
 use sketchy::optim::{
     partition, Adam, BlockExecutor, EngineConfig, ExecutorBuilder, GraftType, LocalExecutor,
     Optimizer, PrecondEngine, ShampooConfig, UnitKind,
 };
 use sketchy::tensor::Matrix;
-use sketchy::train::{load_checkpoint_full, save_checkpoint_with_state};
+use sketchy::train::{load_checkpoint_full, load_journal, save_checkpoint_with_state};
 use sketchy::util::rng::Pcg64;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -529,15 +531,16 @@ fn overlap_permanent_link_loss_surfaces_shard_named_error() {
 
 #[test]
 fn compressed_transport_proto_degrade_matrix_matches_reference_bitwise() {
-    // The v5 ↔ v4 ↔ v3 ↔ v2 ↔ v1 degrade matrix with the compression
-    // knob held on: v5 workers additionally announce membership, v4
-    // workers serve typed state, v3 workers negotiate delta payloads,
-    // v2 workers keep full frames (and RefreshAhead), v1 workers
-    // degrade all the way to the legacy synchronous protocol — every
-    // cell bitwise identical to the fault-free reference, refresh
+    // The v6 ↔ v5 ↔ v4 ↔ v3 ↔ v2 ↔ v1 degrade matrix with the
+    // compression knob held on: v6 workers additionally answer
+    // heartbeat probes, v5 workers announce membership, v4 workers
+    // serve typed state, v3 workers negotiate delta payloads, v2
+    // workers keep full frames (and RefreshAhead), v1 workers degrade
+    // all the way to the legacy synchronous protocol — every cell
+    // bitwise identical to the fault-free reference, refresh
     // accounting included.
     let want = chaos_reference();
-    for proto in [1u32, 2, 3, 4, PROTO_VERSION] {
+    for proto in [1u32, 2, 3, 4, 5, PROTO_VERSION] {
         let got = chaos_run(proto, true, vec![FaultScript::none(), FaultScript::none()], usize::MAX)
             .unwrap_or_else(|e| panic!("proto v{proto} + compress run failed: {e:#}"));
         assert_matches_reference(&got, &want, &format!("compress-on at proto v{proto}"));
@@ -1304,4 +1307,345 @@ fn shards_are_capped_at_block_count() {
     )
     .expect("launch executor");
     assert_eq!(exec.shards(), 1);
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocol v6: the durable driver — write-ahead journal crash-resume
+// and heartbeat supervision of hung workers. Every test here is prefixed
+// `driver_` (the dedicated CI leg filters on it; the base legs skip it).
+// ---------------------------------------------------------------------------
+
+fn wal_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("sketchy_driver_wal_{tag}_{}.skjl", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// Elastic 2-seat in-proc fleet journaling to `path` (no spares: the
+/// durable journal alone makes the membership elastic).
+fn journaled_in_proc_engine(overlap: bool, path: &str) -> anyhow::Result<PrecondEngine> {
+    let transports: Vec<Arc<FaultInjectingTransport>> = (0..2)
+        .map(|_| {
+            FaultInjectingTransport::with_config(
+                FaultScript::none(),
+                usize::MAX,
+                Some(Duration::from_secs(2)),
+            )
+        })
+        .collect();
+    ExecutorBuilder::in_proc(transports, PROTO_VERSION, true)
+        .membership(MembershipConfig {
+            journal: Some(path.to_string()),
+            failover_budget: 3,
+            ..Default::default()
+        })
+        .build(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(overlap))
+}
+
+/// The chaos gradient stream as a precomputed list, so a resumed run
+/// can pick it up mid-stream (the training loop's data source survives
+/// the crash; the journal only has to cover the optimizer).
+fn chaos_stream() -> Vec<Vec<Matrix>> {
+    let mut rng = Pcg64::new(423);
+    (0..CHAOS_STEPS).map(|_| random_grads(&CHAOS_SHAPES, &mut rng)).collect()
+}
+
+/// Kill the driver after `crash_at` steps and resume it from the
+/// write-ahead journal. Phase 1 journals to `path` and is dropped —
+/// the WAL is appended + fsynced *before* each step reaches the fleet,
+/// so the file on disk is exactly what a `kill -9` at any later point
+/// within the step leaves behind. Phase 2 relaunches via `mk_engine`
+/// (handed the journaled seat addresses), restores the synced
+/// snapshot, replays the journaled steps, and finishes the run. A
+/// local twin is pushed through the identical restore/replay sequence:
+/// the fleet must match it bitwise per step and on the final refresh
+/// count (the accounting survives both the wire and the crash).
+fn driver_crash_resume_run(
+    crash_at: usize,
+    path: &str,
+    mk_engine: &dyn Fn(Option<Vec<String>>) -> anyhow::Result<PrecondEngine>,
+) -> anyhow::Result<(Vec<Matrix>, Vec<String>)> {
+    let stream = chaos_stream();
+    let _ = std::fs::remove_file(path);
+    {
+        let mut eng = mk_engine(None)?;
+        let mut params: Vec<Matrix> =
+            CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+        for grads in &stream[..crash_at] {
+            eng.try_step(&mut params, grads)?;
+        }
+        // Dropped here: the doomed driver dies. (Process workers die
+        // with it — resume exercises the spawn-fresh fallback.)
+    }
+    let jc = load_journal(path)
+        .map_err(|e| anyhow::anyhow!("load the crashed driver's journal: {e:#}"))?;
+    anyhow::ensure!(!jc.torn, "a journal closed between appends must not read as torn");
+    anyhow::ensure!(
+        jc.sync_t as usize + jc.steps.len() == crash_at,
+        "journal must cover every applied step: sync {} + {} replay != {crash_at}",
+        jc.sync_t,
+        jc.steps.len()
+    );
+    anyhow::ensure!(
+        jc.steps.len() as u64 <= 3,
+        "replay section exceeds the failover budget: {} steps",
+        jc.steps.len()
+    );
+    let mut eng = mk_engine(Some(jc.addrs.clone()))?;
+    let mut twin = local_engine(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(false));
+    let mut params = jc.params.clone();
+    let mut twin_params = jc.params.clone();
+    match jc.snaps.clone() {
+        Some(snaps) => {
+            eng.restore_payloads(jc.sync_t as usize, snaps.clone())?;
+            twin.restore_payloads(jc.sync_t as usize, snaps)?;
+        }
+        None => anyhow::ensure!(jc.sync_t == 0, "a nonzero sync point must carry a snapshot"),
+    }
+    let replay = jc.steps.iter().map(|rs| (rs.lr, &rs.grads));
+    let tail = stream[crash_at..].iter().map(|g| (overlap_base().lr, g));
+    for (step, (lr, grads)) in replay.chain(tail).enumerate() {
+        eng.set_lr(lr);
+        twin.set_lr(lr);
+        eng.try_step(&mut params, grads)?;
+        twin.step(&mut twin_params, grads);
+        for (i, (a, b)) in twin_params.iter().zip(&params).enumerate() {
+            anyhow::ensure!(
+                a.max_diff(b) == 0.0,
+                "resumed fleet diverged from the resumed local twin on tensor {i}, \
+                 {step} steps after the restore"
+            );
+        }
+    }
+    anyhow::ensure!(
+        eng.refreshes() == twin.refreshes(),
+        "refresh accounting diverged across the crash: fleet {} vs local {}",
+        eng.refreshes(),
+        twin.refreshes()
+    );
+    let _ = std::fs::remove_file(path);
+    Ok((params, jc.addrs))
+}
+
+#[test]
+fn driver_crash_resume_from_journal_matches_reference_bitwise() {
+    // The acceptance sweep: kill the driver after *every* scripted step
+    // in turn, under both the synchronous and the RefreshAhead-
+    // pipelined schedule, and relaunch from the write-ahead journal.
+    // The resumed run must land bitwise on the uninterrupted local
+    // reference, refresh accounting included — the crash is invisible
+    // in the final parameters.
+    let want = chaos_reference();
+    assert!(want.1 > 0, "test must exercise refreshes");
+    for pipelined in [false, true] {
+        for crash_at in 1..=CHAOS_STEPS {
+            let what = format!("pipelined={pipelined} crash after step {crash_at}");
+            let path = wal_path(&format!("inproc_{}_{crash_at}", pipelined as u8));
+            let mk = |_: Option<Vec<String>>| journaled_in_proc_engine(pipelined, &path);
+            let (params, addrs) = driver_crash_resume_run(crash_at, &path, &mk)
+                .unwrap_or_else(|e| panic!("{what}: {e:#}"));
+            for (i, (a, b)) in want.0.iter().zip(&params).enumerate() {
+                assert_eq!(a.max_diff(b), 0.0, "{what}: tensor {i} diverged from reference");
+            }
+            assert!(
+                addrs.iter().all(String::is_empty),
+                "{what}: in-proc seats must journal as non-re-adoptable: {addrs:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn driver_crash_process_fleet_resumes_from_journal_bitwise() {
+    // Same contract through real worker processes. Dropping the doomed
+    // driver shuts its workers down with it, so the journaled tcp
+    // addresses point at dead workers — the relaunch walks the
+    // re-adopt-or-spawn-fresh fallback and must still land bitwise on
+    // the reference (every seat is re-Init'd from scratch, so adopted
+    // and fresh fleets are identical by construction).
+    let want = chaos_reference();
+    for (pipelined, crash_at) in [(false, 4usize), (true, 5)] {
+        let what = format!("pipelined={pipelined} crash after step {crash_at}");
+        let path = wal_path(&format!("proc_{}_{crash_at}", pipelined as u8));
+        let mut launch = mk_launch(2, ShardTransport::Tcp);
+        launch.compress = true;
+        let mk = |resume: Option<Vec<String>>| {
+            ExecutorBuilder::sharded(launch.clone())
+                .membership(MembershipConfig {
+                    journal: Some(path.clone()),
+                    failover_budget: 3,
+                    resume_addrs: resume,
+                    ..Default::default()
+                })
+                .build(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(pipelined))
+        };
+        let (params, addrs) =
+            driver_crash_resume_run(crash_at, &path, &mk).unwrap_or_else(|e| panic!("{what}: {e:#}"));
+        for (i, (a, b)) in want.0.iter().zip(&params).enumerate() {
+            assert_eq!(a.max_diff(b), 0.0, "{what}: tensor {i} diverged from reference");
+        }
+        assert!(
+            addrs.iter().all(|a| a.starts_with("tcp ")),
+            "{what}: process seats must journal dialable addresses: {addrs:?}"
+        );
+    }
+}
+
+#[test]
+fn driver_torn_journal_tail_falls_back_to_the_previous_sync_point() {
+    // A crash *during* an append leaves a torn record. Resume recovers
+    // the sync point plus the surviving replay prefix; the lost tail
+    // steps are re-fed from the data stream (their gradients are a pure
+    // function of the stream position), landing back on the reference
+    // bitwise. Crash after step 5 with budget 3: sync at t=3, records
+    // for t=4 and t=5 — the cut lands inside t=5's record.
+    let want = chaos_reference();
+    let stream = chaos_stream();
+    let path = wal_path("torn");
+    let _ = std::fs::remove_file(&path);
+    {
+        let mut eng = journaled_in_proc_engine(false, &path).expect("launch journaled fleet");
+        let mut params: Vec<Matrix> =
+            CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+        for grads in &stream[..5] {
+            eng.try_step(&mut params, grads).expect("journaled step");
+        }
+    }
+    let full = std::fs::read(&path).expect("read journal");
+    std::fs::write(&path, &full[..full.len() - 9]).expect("tear the journal tail");
+    let jc = load_journal(&path).expect("torn-tail recovery");
+    assert!(jc.torn, "the cut record must be reported");
+    assert_eq!(jc.sync_t, 3, "recovery falls back to the t=3 sync point");
+    assert_eq!(jc.steps.len(), 1, "only the complete t=4 record survives");
+    assert_eq!(jc.steps[0].t, 4);
+    let mut eng = journaled_in_proc_engine(false, &path).expect("relaunch fleet");
+    let mut twin = local_engine(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(false));
+    let mut params = jc.params.clone();
+    let mut twin_params = jc.params.clone();
+    let snaps = jc.snaps.clone().expect("synced snapshot");
+    eng.restore_payloads(jc.sync_t as usize, snaps.clone()).expect("restore fleet from journal");
+    twin.restore_payloads(jc.sync_t as usize, snaps).expect("restore local twin");
+    let resumed_from = jc.sync_t as usize + jc.steps.len();
+    for rs in &jc.steps {
+        eng.set_lr(rs.lr);
+        twin.set_lr(rs.lr);
+        eng.try_step(&mut params, &rs.grads).expect("replay journaled step");
+        twin.step(&mut twin_params, &rs.grads);
+    }
+    for grads in &stream[resumed_from..] {
+        eng.try_step(&mut params, grads).expect("post-resume step");
+        twin.step(&mut twin_params, grads);
+    }
+    for (i, (a, b)) in want.0.iter().zip(&params).enumerate() {
+        assert_eq!(a.max_diff(b), 0.0, "torn tail: tensor {i} diverged from reference");
+    }
+    for (i, (a, b)) in twin_params.iter().zip(&params).enumerate() {
+        assert_eq!(a.max_diff(b), 0.0, "torn tail: tensor {i} diverged from the local twin");
+    }
+    assert_eq!(eng.refreshes(), twin.refreshes(), "torn tail: refresh accounting diverged");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn driver_hung_worker_is_replaced_at_the_deadline_not_the_reply_timeout() {
+    // A hung worker: seat 0's step-4 reply frame is dropped while the
+    // connection stays up, so nothing ever arrives and a plain blocking
+    // read would sit out the full 120 s reply timeout. The v6
+    // supervisor must instead escalate at the liveness deadline on the
+    // injected virtual clock (advanced only by observed silent polls)
+    // and migrate the seat onto the warm spare. Seat 0's reply frames:
+    // 0 hello, 1 init-ok, 2-4 steps 1-3, 5 the t=3 sync snapshot, 6
+    // step 4 — the dropped one.
+    let want = chaos_reference();
+    let script = FaultScript::none().on_reply(6, FaultAction::DropFrame);
+    let transports: Vec<Arc<FaultInjectingTransport>> =
+        [script, FaultScript::none(), FaultScript::none()]
+            .into_iter()
+            .map(|s| {
+                FaultInjectingTransport::with_config(s, usize::MAX, Some(Duration::from_secs(2)))
+            })
+            .collect();
+    let timeouts = LinkTimeouts {
+        heartbeat: Duration::from_millis(50),
+        deadline: Duration::from_millis(1000),
+        // The reply bound keeps its 120 s default: reaching it would
+        // blow the wall-clock assertion below.
+        ..LinkTimeouts::default()
+    };
+    let mut eng = ExecutorBuilder::in_proc(transports, PROTO_VERSION, true)
+        .membership(MembershipConfig {
+            spares: 1,
+            failover_budget: 3,
+            timeouts,
+            ..Default::default()
+        })
+        .clock(Arc::new(VirtualClock::new()))
+        .build(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(false))
+        .expect("launch supervised fleet");
+    let control = eng.fleet_control().expect("fleet control");
+    let started = std::time::Instant::now();
+    let mut params: Vec<Matrix> = CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut rng = Pcg64::new(423);
+    for _ in 0..CHAOS_STEPS {
+        let grads = random_grads(&CHAOS_SHAPES, &mut rng);
+        eng.try_step(&mut params, &grads).expect("supervised step");
+    }
+    let elapsed = started.elapsed();
+    assert_matches_reference(&(params, eng.refreshes()), &want, "hung-worker run");
+    let stats = control.stats();
+    assert_eq!(
+        stats.migrations, 1,
+        "the hung seat must be killed and replaced via the heartbeat deadline (an \
+         unsupervised link would instead recover by reconnect-replay, migrating nothing): \
+         {stats:?}"
+    );
+    assert!(
+        stats.migrated_steps <= 3,
+        "replay must stay within the failover budget: {stats:?}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(60),
+        "detection must ride the deadline, not the blocking reply timeout (took {elapsed:?})"
+    );
+}
+
+#[test]
+fn driver_idle_probe_pings_keep_the_fleet_bitwise() {
+    // The quiet side of supervision: advancing the virtual clock past
+    // the heartbeat interval between steps makes every seat ping-due,
+    // so the driver probes the fleet with Ping/Pong round-trips before
+    // each step commits to the wire. Probes are pure control traffic —
+    // the run must stay bitwise identical with zero migrations.
+    let want = chaos_reference();
+    let transports: Vec<Arc<FaultInjectingTransport>> = (0..3)
+        .map(|_| {
+            FaultInjectingTransport::with_config(
+                FaultScript::none(),
+                usize::MAX,
+                Some(Duration::from_secs(2)),
+            )
+        })
+        .collect();
+    let clock = Arc::new(VirtualClock::new());
+    let mut eng = ExecutorBuilder::in_proc(transports, PROTO_VERSION, true)
+        .spares(1)
+        .failover_budget(3)
+        .clock(clock.clone())
+        .build(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(false))
+        .expect("launch supervised fleet");
+    let control = eng.fleet_control().expect("fleet control");
+    let mut params: Vec<Matrix> = CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut rng = Pcg64::new(423);
+    for _ in 0..CHAOS_STEPS {
+        // Default heartbeat is 500 ms; 600 ms of virtual idleness makes
+        // both seats probe-due (but stays far from the 10 s deadline).
+        clock.advance(Duration::from_millis(600));
+        let grads = random_grads(&CHAOS_SHAPES, &mut rng);
+        eng.try_step(&mut params, &grads).expect("probed step");
+    }
+    assert_matches_reference(&(params, eng.refreshes()), &want, "idle-probe run");
+    let stats = control.stats();
+    assert_eq!(stats.migrations, 0, "a healthy pinged fleet migrates nothing: {stats:?}");
 }

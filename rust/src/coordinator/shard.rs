@@ -293,14 +293,7 @@ impl ShardConfig {
     /// `shard.rebalance` / `shard.failover_budget` config keys as
     /// fallback. Unknown `[shard]` keys are a named error.
     pub fn resolve(args: &Args, cfg: &Config) -> anyhow::Result<ShardConfig> {
-        for key in cfg.section_keys("shard") {
-            let bare = key.strip_prefix("shard.").unwrap_or(&key);
-            ensure!(
-                Self::KNOWN_KEYS.contains(&bare),
-                "unknown [shard] config key {key:?} (known keys: {})",
-                Self::KNOWN_KEYS.join(", ")
-            );
-        }
+        cfg.ensure_known_keys("shard", Self::KNOWN_KEYS)?;
         let d = ShardConfig::default();
         let shards = args.get_usize("shards", cfg.usize_or("shard.count", d.shards));
         let transport = match args.get("shard-transport") {
@@ -466,6 +459,13 @@ pub struct ShardLaunch {
     pub compress: bool,
     /// Optional launcher command template (see the type-level docs).
     pub launch: Option<String>,
+    /// Elastic-membership / journal knobs resolved alongside the
+    /// launch plan ([`ShardConfig::membership`]). Carried here so every
+    /// construction path — `ExecutorBuilder::sharded` and the
+    /// deprecated `PrecondEngine::sharded` shim — forwards them instead
+    /// of silently substituting defaults (`ExecutorBuilder::membership`
+    /// still overrides explicitly).
+    pub membership: MembershipConfig,
 }
 
 impl ShardLaunch {
@@ -479,6 +479,7 @@ impl ShardLaunch {
             proto: cfg.proto,
             compress: cfg.compress,
             launch: cfg.launch.clone(),
+            membership: cfg.membership(),
         })
     }
 }
@@ -678,6 +679,7 @@ impl WorkerState {
             eps: init.eps,
             one_sided: init.one_sided,
             graft,
+            ekfac: init.ekfac,
             ..Default::default()
         };
         let mut states = Vec::with_capacity(init.blocks.len());
@@ -2098,6 +2100,7 @@ fn init_msg_for(
         one_sided: base.one_sided,
         graft: base.graft.code(),
         threads: worker_threads as u32,
+        ekfac: base.ekfac,
         blocks: specs,
     })
 }
@@ -2436,6 +2439,7 @@ fn init_msg_from_expects(
         one_sided: base.one_sided,
         graft: base.graft.code(),
         threads: worker_threads as u32,
+        ekfac: base.ekfac,
         blocks: specs,
     })
 }
@@ -2741,6 +2745,18 @@ impl ShardExecutor {
                     w.channel.proto.max(1)
                 );
             }
+        }
+        // EKFAC correctors travel in Init and in every typed state
+        // payload, so the whole fleet — seats and warm spares alike
+        // (a spare can be promoted into any seat) — must speak wire
+        // protocol v7. Refuse at construction rather than degrade
+        // silently mid-run.
+        if base.ekfac {
+            ensure!(
+                workers.iter().chain(spares.iter()).all(|w| w.channel.proto >= 7),
+                "--ekfac requires every worker link at wire protocol v7 \
+                 (a worker greeted below v7; drop --ekfac or unpin --shard-proto)"
+            );
         }
         // Liveness supervision: elastic fleet, every link heartbeat-
         // capable, nonzero deadline. Non-elastic fleets keep the plain
@@ -4379,6 +4395,7 @@ mod tests {
             one_sided: base.one_sided,
             graft: base.graft.code(),
             threads: 1,
+            ekfac: false,
             blocks: specs,
         };
         let mut ws = WorkerState::build(&init).unwrap();
@@ -4438,6 +4455,7 @@ mod tests {
             one_sided: false,
             graft: GraftType::Rmsprop.code(),
             threads: 1,
+            ekfac: false,
             blocks: vec![
                 BlockSpec { index: 0, rows: 3, cols: 3 },
                 BlockSpec { index: 1, rows: 3, cols: 3 },
@@ -4529,6 +4547,7 @@ mod tests {
             one_sided: false,
             graft: GraftType::Rmsprop.code(),
             threads: 1,
+            ekfac: false,
             blocks: vec![BlockSpec { index: 0, rows: 3, cols: 3 }],
         });
         wire::write_msg(&mut conn, &init).unwrap();
@@ -4744,6 +4763,7 @@ mod tests {
             one_sided: false,
             graft: GraftType::Rmsprop.code(),
             threads: 1,
+            ekfac: false,
             blocks: vec![BlockSpec { index: 0, rows: 3, cols: 3 }],
         });
         wire::write_msg(&mut conn, &init).unwrap();
@@ -4804,6 +4824,7 @@ mod tests {
             one_sided: false,
             graft: GraftType::None.code(),
             threads: 1,
+            ekfac: false,
             blocks: vec![BlockSpec { index: 0, rows: 2, cols: 2 }],
         };
         let mut ws = WorkerState::build(&init).unwrap();
@@ -4973,6 +4994,7 @@ mod tests {
             one_sided: false,
             graft: GraftType::None.code(),
             threads: 1,
+            ekfac: false,
             blocks: vec![BlockSpec { index: 4, rows: 2, cols: 2 }],
         };
         let mut ws = WorkerState::build(&init).unwrap();
@@ -5225,6 +5247,7 @@ mod tests {
             one_sided: false,
             graft: GraftType::Rmsprop.code(),
             threads: 1,
+            ekfac: false,
             blocks: vec![
                 BlockSpec { index: 0, rows: 4, cols: 3 },
                 BlockSpec { index: 1, rows: 4, cols: 3 },

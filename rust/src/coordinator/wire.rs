@@ -85,7 +85,9 @@
 //! before; elastic failover just refuses cleanly on fleets containing
 //! any non-`member` link.
 
-use crate::optim::precond::{BlockStateSnap, PrecondState, SideState, SketchState};
+use crate::optim::precond::{
+    BlockStateSnap, EigCorrState, PrecondState, SideState, SketchCorrState, SketchState,
+};
 use crate::tensor::Matrix;
 use anyhow::{anyhow, bail, ensure, Context};
 use std::io::{Read, Write};
@@ -103,10 +105,17 @@ use std::time::Duration;
 /// spare can be re-seated as a dead shard mid-run; version 6 adds the
 /// liveness frames ([`WireMsg::Ping`] / [`WireMsg::Pong`]) behind the
 /// `heartbeat` capability, so the driver's supervisor can probe a
-/// silent worker instead of waiting out the blocking reply timeout.
+/// silent worker instead of waiting out the blocking reply timeout;
+/// version 7 adds the EKFAC corrector layer: the `--ekfac` knob travels
+/// in the extended init frame (`TAG_INIT_V7`), and corrector diagonals
+/// ride in the typed state payloads under new mode bytes. Ekfac-off
+/// runs encode byte-identically to v6, so pre-v7 peers step bitwise as
+/// before; ekfac-on fleets require every link at v7+ (the driver
+/// refuses mixed fleets at construction instead of silently dropping
+/// the correction on some shards).
 /// Drivers treat lower-version workers as lacking the newer layers and
 /// degrade per link.
-pub const PROTO_VERSION: u32 = 6;
+pub const PROTO_VERSION: u32 = 7;
 
 /// A connected driver↔worker byte stream: any transport the shard
 /// channel can speak — TCP, Unix sockets, or the in-memory
@@ -146,6 +155,12 @@ pub struct InitMsg {
     /// Worker-side thread knob (0 = auto); never changes the numbers.
     pub threads: u32,
     pub blocks: Vec<BlockSpec>,
+    /// EKFAC inter-refresh corrections on every unit (wire v7). `false`
+    /// encodes as the legacy init frame, byte-identical to v6; `true`
+    /// ships as `TAG_INIT_V7`, which pre-v7 workers reject by tag — the
+    /// driver never sends it to them (mixed fleets are refused at
+    /// construction).
+    pub ekfac: bool,
 }
 
 /// One block's inputs for a driven step.
@@ -654,25 +669,87 @@ impl BlockPayload {
     }
 }
 
+/// Serialized EKFAC eigenbasis corrector (wire v7): the stale basis the
+/// unit corrects in plus the tracked per-direction diagonal. Travels in
+/// the typed state payloads so snapshot/checkpoint/journal resume stay
+/// bitwise for ekfac runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EigCorrPayload {
+    /// Eigenbasis, dim×dim (dense, standalone).
+    pub basis: BlockPayload,
+    /// Corrected diagonal (length dim) as IEEE-754 bit-exact f64s.
+    pub diag: Vec<f64>,
+}
+
+impl EigCorrPayload {
+    fn from_state(s: &EigCorrState) -> EigCorrPayload {
+        EigCorrPayload { basis: BlockPayload::dense(&s.basis), diag: s.diag.clone() }
+    }
+
+    /// Decode for a dim×dim eigenbasis, validating declared geometry
+    /// before anything resolves (the alloc-bomb discipline).
+    fn into_state(self, what: &str, dim: usize) -> anyhow::Result<EigCorrState> {
+        ensure!(
+            self.diag.len() == dim,
+            "state payload: {what}: {} corrector diagonal entries for dim {dim}",
+            self.diag.len()
+        );
+        Ok(EigCorrState {
+            basis: self
+                .basis
+                .resolve_dense(dim, dim, None)
+                .with_context(|| format!("{what}: corrector basis"))?,
+            diag: self.diag,
+        })
+    }
+}
+
+/// Serialized EKFAC sketch corrector (wire v7): the corrected diagonal
+/// over the unit's rank-ℓ FD basis plus the escaped-mass tail scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SketchCorrPayload {
+    /// Corrected diagonal over the FD basis columns (length ℓ).
+    pub diag: Vec<f64>,
+    /// Tracked tail second moment (escaped-mass direction).
+    pub tail: f64,
+}
+
+impl SketchCorrPayload {
+    fn from_state(s: &SketchCorrState) -> SketchCorrPayload {
+        SketchCorrPayload { diag: s.diag.clone(), tail: s.tail }
+    }
+
+    fn into_state(self, rank: usize) -> anyhow::Result<SketchCorrState> {
+        ensure!(
+            self.diag.len() == rank,
+            "state payload: {} corrector diagonal entries for a rank-{rank} sketch",
+            self.diag.len()
+        );
+        Ok(SketchCorrState { diag: self.diag, tail: self.tail })
+    }
+}
+
 /// One side of a serialized [`StatePayload::Sketch`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum SidePayload {
-    /// dim ≤ ℓ: exact small factor + cached root.
-    Exact { c: BlockPayload, root: Option<BlockPayload> },
-    /// dim > ℓ: factored FD sketch.
-    Sketch(SketchPayload),
+    /// dim ≤ ℓ: exact small factor + cached root (+ v7 corrector).
+    Exact { c: BlockPayload, root: Option<BlockPayload>, corr: Option<EigCorrPayload> },
+    /// dim > ℓ: factored FD sketch (+ v7 corrector).
+    Sketch { sketch: SketchPayload, corr: Option<SketchCorrPayload> },
 }
 
 /// Full serialized preconditioner-unit state — the wire/checkpoint form
 /// of [`PrecondState`]. Sketched sides stay factored end to end.
 #[derive(Clone, Debug, PartialEq)]
 pub enum StatePayload {
-    /// Exact Kronecker factors + cached inverse roots.
+    /// Exact Kronecker factors + cached inverse roots (+ v7 correctors).
     Kron {
         l: BlockPayload,
         r: BlockPayload,
         l_root: Option<BlockPayload>,
         r_root: Option<BlockPayload>,
+        l_corr: Option<EigCorrPayload>,
+        r_corr: Option<EigCorrPayload>,
     },
     /// Per-side sketched (or small-exact) factors.
     Sketch { left: SidePayload, right: SidePayload },
@@ -707,17 +784,21 @@ impl StateExpect {
 
 fn side_from_state(s: &SideState) -> SidePayload {
     match s {
-        SideState::Exact { c, root } => SidePayload::Exact {
+        SideState::Exact { c, root, corr } => SidePayload::Exact {
             c: BlockPayload::dense(c),
             root: root.as_ref().map(BlockPayload::dense),
+            corr: corr.as_ref().map(EigCorrPayload::from_state),
         },
-        SideState::Sketch(sk) => SidePayload::Sketch(SketchPayload::from_state(sk)),
+        SideState::Sketch { sketch, corr } => SidePayload::Sketch {
+            sketch: SketchPayload::from_state(sketch),
+            corr: corr.as_ref().map(SketchCorrPayload::from_state),
+        },
     }
 }
 
 fn side_into_state(p: SidePayload, dim: usize, exp: &StateExpect) -> anyhow::Result<SideState> {
     match p {
-        SidePayload::Exact { c, root } => {
+        SidePayload::Exact { c, root, corr } => {
             ensure!(
                 exp.side_is_exact(dim),
                 "state payload: exact side payload for a sketched dim-{dim} side"
@@ -725,14 +806,18 @@ fn side_into_state(p: SidePayload, dim: usize, exp: &StateExpect) -> anyhow::Res
             Ok(SideState::Exact {
                 c: c.resolve_dense(dim, dim, None)?,
                 root: root.map(|r| r.resolve_dense(dim, dim, None)).transpose()?,
+                corr: corr.map(|cr| cr.into_state("exact side", dim)).transpose()?,
             })
         }
-        SidePayload::Sketch(sk) => {
+        SidePayload::Sketch { sketch, corr } => {
             ensure!(
                 !exp.side_is_exact(dim),
                 "state payload: sketch payload for an exact dim-{dim} side"
             );
-            Ok(SideState::Sketch(sk.into_state(dim, exp.rank)?))
+            Ok(SideState::Sketch {
+                sketch: sketch.into_state(dim, exp.rank)?,
+                corr: corr.map(|cr| cr.into_state(exp.rank)).transpose()?,
+            })
         }
     }
 }
@@ -741,12 +826,16 @@ impl StatePayload {
     /// Encode a unit's [`PrecondState`] for the wire / checkpoint.
     pub fn from_state(s: &PrecondState) -> StatePayload {
         match s {
-            PrecondState::Kronecker { l, r, l_root, r_root } => StatePayload::Kron {
-                l: BlockPayload::dense(l),
-                r: BlockPayload::dense(r),
-                l_root: l_root.as_ref().map(BlockPayload::dense),
-                r_root: r_root.as_ref().map(BlockPayload::dense),
-            },
+            PrecondState::Kronecker { l, r, l_root, r_root, l_corr, r_corr } => {
+                StatePayload::Kron {
+                    l: BlockPayload::dense(l),
+                    r: BlockPayload::dense(r),
+                    l_root: l_root.as_ref().map(BlockPayload::dense),
+                    r_root: r_root.as_ref().map(BlockPayload::dense),
+                    l_corr: l_corr.as_ref().map(EigCorrPayload::from_state),
+                    r_corr: r_corr.as_ref().map(EigCorrPayload::from_state),
+                }
+            }
             PrecondState::Sketch { left, right } => StatePayload::Sketch {
                 left: side_from_state(left),
                 right: side_from_state(right),
@@ -764,12 +853,16 @@ impl StatePayload {
     pub fn into_state(self, exp: &StateExpect) -> anyhow::Result<PrecondState> {
         let (rows, cols) = (exp.rows, exp.cols);
         match (self, exp.kind) {
-            (StatePayload::Kron { l, r, l_root, r_root }, 0) => Ok(PrecondState::Kronecker {
-                l: l.resolve_dense(rows, rows, None)?,
-                r: r.resolve_dense(cols, cols, None)?,
-                l_root: l_root.map(|m| m.resolve_dense(rows, rows, None)).transpose()?,
-                r_root: r_root.map(|m| m.resolve_dense(cols, cols, None)).transpose()?,
-            }),
+            (StatePayload::Kron { l, r, l_root, r_root, l_corr, r_corr }, 0) => {
+                Ok(PrecondState::Kronecker {
+                    l: l.resolve_dense(rows, rows, None)?,
+                    r: r.resolve_dense(cols, cols, None)?,
+                    l_root: l_root.map(|m| m.resolve_dense(rows, rows, None)).transpose()?,
+                    r_root: r_root.map(|m| m.resolve_dense(cols, cols, None)).transpose()?,
+                    l_corr: l_corr.map(|c| c.into_state("L", rows)).transpose()?,
+                    r_corr: r_corr.map(|c| c.into_state("R", cols)).transpose()?,
+                })
+            }
             (StatePayload::Sketch { left, right }, 1) => Ok(PrecondState::Sketch {
                 left: side_into_state(left, rows, exp)?,
                 right: side_into_state(right, cols, exp)?,
@@ -1014,6 +1107,11 @@ const TAG_ADOPT_OK: u8 = 25;
 const TAG_HELLO_V6: u8 = 26;
 const TAG_PING: u8 = 27;
 const TAG_PONG: u8 = 28;
+/// v7 init frame: the legacy [`TAG_INIT`] body plus the trailing ekfac
+/// flag. The legacy decoder rejects trailing bytes, so the extension
+/// needs its own tag; drivers only emit it when ekfac is on (ekfac-off
+/// init frames stay byte-identical to v6).
+const TAG_INIT_V7: u8 = 29;
 
 /// [`DeltaMat`] mode bytes.
 const DM_RAW: u8 = 0;
@@ -1025,14 +1123,21 @@ const BP_DENSE: u8 = 0;
 const BP_SKETCH: u8 = 1;
 const BP_DIAG: u8 = 2;
 
-/// [`StatePayload`] mode bytes.
+/// [`StatePayload`] mode bytes. `SP_KRON_EKFAC` (v7) is `SP_KRON` plus
+/// the two trailing corrector options — corrector-free states encode
+/// under the legacy byte so they stay bit-identical to v6 frames, and
+/// pre-v7 decoders reject the new byte by name instead of misreading.
 const SP_KRON: u8 = 0;
 const SP_SKETCH: u8 = 1;
 const SP_DIAG: u8 = 2;
+const SP_KRON_EKFAC: u8 = 3;
 
-/// [`SidePayload`] mode bytes.
+/// [`SidePayload`] mode bytes (`*_EKFAC` are the v7 corrector-carrying
+/// forms; same legacy-byte rule as the state modes).
 const SIDE_EXACT: u8 = 0;
 const SIDE_SKETCH: u8 = 1;
+const SIDE_EXACT_EKFAC: u8 = 2;
+const SIDE_SKETCH_EKFAC: u8 = 3;
 
 // ---------------------------------------------------------------------------
 // Encoding.
@@ -1126,27 +1231,79 @@ impl Enc {
             None => self.boolean(false),
         }
     }
+    fn f64s(&mut self, vs: &[f64]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+    fn eig_corr(&mut self, c: &EigCorrPayload) {
+        self.block_payload(&c.basis);
+        self.f64s(&c.diag);
+    }
+    fn opt_eig_corr(&mut self, c: &Option<EigCorrPayload>) {
+        match c {
+            Some(c) => {
+                self.boolean(true);
+                self.eig_corr(c);
+            }
+            None => self.boolean(false),
+        }
+    }
+    fn sketch_corr(&mut self, c: &SketchCorrPayload) {
+        self.f64s(&c.diag);
+        self.f64(c.tail);
+    }
+    fn opt_sketch_corr(&mut self, c: &Option<SketchCorrPayload>) {
+        match c {
+            Some(c) => {
+                self.boolean(true);
+                self.sketch_corr(c);
+            }
+            None => self.boolean(false),
+        }
+    }
     fn side_payload(&mut self, s: &SidePayload) {
         match s {
-            SidePayload::Exact { c, root } => {
+            SidePayload::Exact { c, root, corr: None } => {
                 self.u8(SIDE_EXACT);
                 self.block_payload(c);
                 self.opt_block_payload(root);
             }
-            SidePayload::Sketch(sk) => {
+            SidePayload::Exact { c, root, corr } => {
+                self.u8(SIDE_EXACT_EKFAC);
+                self.block_payload(c);
+                self.opt_block_payload(root);
+                self.opt_eig_corr(corr);
+            }
+            SidePayload::Sketch { sketch, corr: None } => {
                 self.u8(SIDE_SKETCH);
-                self.sketch_payload(sk);
+                self.sketch_payload(sketch);
+            }
+            SidePayload::Sketch { sketch, corr } => {
+                self.u8(SIDE_SKETCH_EKFAC);
+                self.sketch_payload(sketch);
+                self.opt_sketch_corr(corr);
             }
         }
     }
     fn state_payload(&mut self, s: &StatePayload) {
         match s {
-            StatePayload::Kron { l, r, l_root, r_root } => {
+            StatePayload::Kron { l, r, l_root, r_root, l_corr: None, r_corr: None } => {
                 self.u8(SP_KRON);
                 self.block_payload(l);
                 self.block_payload(r);
                 self.opt_block_payload(l_root);
                 self.opt_block_payload(r_root);
+            }
+            StatePayload::Kron { l, r, l_root, r_root, l_corr, r_corr } => {
+                self.u8(SP_KRON_EKFAC);
+                self.block_payload(l);
+                self.block_payload(r);
+                self.opt_block_payload(l_root);
+                self.opt_block_payload(r_root);
+                self.opt_eig_corr(l_corr);
+                self.opt_eig_corr(r_corr);
             }
             StatePayload::Sketch { left, right } => {
                 self.u8(SP_SKETCH);
@@ -1183,7 +1340,11 @@ pub fn encode_frame(msg: &WireMsg) -> anyhow::Result<Vec<u8>> {
             e.u32(*worker_id);
         }
         WireMsg::Init(init) => {
-            e.u8(TAG_INIT);
+            // Dual-encode: ekfac-off frames use the legacy tag and stay
+            // byte-identical to v6 (pre-v7 workers keep working); ekfac
+            // rides only in the v7 tag, which old workers reject by tag
+            // instead of misreading.
+            e.u8(if init.ekfac { TAG_INIT_V7 } else { TAG_INIT });
             e.u8(init.kind);
             e.u32(init.rank);
             e.f64(init.beta2);
@@ -1196,6 +1357,9 @@ pub fn encode_frame(msg: &WireMsg) -> anyhow::Result<Vec<u8>> {
                 e.u32(b.index);
                 e.u32(b.rows);
                 e.u32(b.cols);
+            }
+            if init.ekfac {
+                e.boolean(init.ekfac);
             }
         }
         WireMsg::Step(step) => {
@@ -1540,25 +1704,66 @@ impl<'a> Dec<'a> {
     fn opt_block_payload(&mut self) -> anyhow::Result<Option<BlockPayload>> {
         Ok(if self.boolean()? { Some(self.block_payload()?) } else { None })
     }
+    fn f64s(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        // Same bound as honest eigenvalue counts: a corrector diagonal
+        // never exceeds one basis dimension (≤ 2^20).
+        if n > 1 << 20 {
+            bail!("shard wire: implausible f64 vector length {n}");
+        }
+        let mut vs = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            vs.push(self.f64()?);
+        }
+        Ok(vs)
+    }
+    fn eig_corr(&mut self) -> anyhow::Result<EigCorrPayload> {
+        let basis = self.block_payload()?;
+        let diag = self.f64s()?;
+        Ok(EigCorrPayload { basis, diag })
+    }
+    fn opt_eig_corr(&mut self) -> anyhow::Result<Option<EigCorrPayload>> {
+        Ok(if self.boolean()? { Some(self.eig_corr()?) } else { None })
+    }
+    fn sketch_corr(&mut self) -> anyhow::Result<SketchCorrPayload> {
+        let diag = self.f64s()?;
+        let tail = self.f64()?;
+        Ok(SketchCorrPayload { diag, tail })
+    }
+    fn opt_sketch_corr(&mut self) -> anyhow::Result<Option<SketchCorrPayload>> {
+        Ok(if self.boolean()? { Some(self.sketch_corr()?) } else { None })
+    }
     fn side_payload(&mut self) -> anyhow::Result<SidePayload> {
         match self.u8()? {
-            SIDE_EXACT => {
+            mode @ (SIDE_EXACT | SIDE_EXACT_EKFAC) => {
                 let c = self.block_payload()?;
                 let root = self.opt_block_payload()?;
-                Ok(SidePayload::Exact { c, root })
+                let corr =
+                    if mode == SIDE_EXACT_EKFAC { self.opt_eig_corr()? } else { None };
+                Ok(SidePayload::Exact { c, root, corr })
             }
-            SIDE_SKETCH => Ok(SidePayload::Sketch(self.sketch_payload()?)),
+            mode @ (SIDE_SKETCH | SIDE_SKETCH_EKFAC) => {
+                let sketch = self.sketch_payload()?;
+                let corr =
+                    if mode == SIDE_SKETCH_EKFAC { self.opt_sketch_corr()? } else { None };
+                Ok(SidePayload::Sketch { sketch, corr })
+            }
             other => bail!("shard wire: unknown side-payload mode {other}"),
         }
     }
     fn state_payload(&mut self) -> anyhow::Result<StatePayload> {
         match self.u8()? {
-            SP_KRON => {
+            mode @ (SP_KRON | SP_KRON_EKFAC) => {
                 let l = self.block_payload()?;
                 let r = self.block_payload()?;
                 let l_root = self.opt_block_payload()?;
                 let r_root = self.opt_block_payload()?;
-                Ok(StatePayload::Kron { l, r, l_root, r_root })
+                let (l_corr, r_corr) = if mode == SP_KRON_EKFAC {
+                    (self.opt_eig_corr()?, self.opt_eig_corr()?)
+                } else {
+                    (None, None)
+                };
+                Ok(StatePayload::Kron { l, r, l_root, r_root, l_corr, r_corr })
             }
             SP_SKETCH => {
                 let left = self.side_payload()?;
@@ -1595,7 +1800,7 @@ pub fn decode_payload(payload: &[u8]) -> anyhow::Result<WireMsg> {
     let mut d = Dec { b: payload, i: 0 };
     let msg = match d.u8()? {
         TAG_HELLO => WireMsg::Hello { worker_id: d.u32()? },
-        TAG_INIT => {
+        tag @ (TAG_INIT | TAG_INIT_V7) => {
             let kind = d.u8()?;
             let rank = d.u32()?;
             let beta2 = d.f64()?;
@@ -1608,7 +1813,18 @@ pub fn decode_payload(payload: &[u8]) -> anyhow::Result<WireMsg> {
             for _ in 0..n {
                 blocks.push(BlockSpec { index: d.u32()?, rows: d.u32()?, cols: d.u32()? });
             }
-            WireMsg::Init(InitMsg { kind, rank, beta2, eps, one_sided, graft, threads, blocks })
+            let ekfac = if tag == TAG_INIT_V7 { d.boolean()? } else { false };
+            WireMsg::Init(InitMsg {
+                kind,
+                rank,
+                beta2,
+                eps,
+                one_sided,
+                graft,
+                threads,
+                blocks,
+                ekfac,
+            })
         }
         TAG_STEP => {
             let t = d.u64()?;
@@ -2043,6 +2259,19 @@ mod tests {
                 BlockSpec { index: 0, rows: 7, cols: 5 },
                 BlockSpec { index: 3, rows: 4, cols: 4 },
             ],
+            ekfac: false,
+        }));
+        // v7 init frame (ekfac on → TAG_INIT_V7).
+        roundtrip(WireMsg::Init(InitMsg {
+            kind: 0,
+            rank: 0,
+            beta2: 0.95,
+            eps: 1e-8,
+            one_sided: false,
+            graft: 1,
+            threads: 2,
+            blocks: vec![BlockSpec { index: 1, rows: 3, cols: 3 }],
+            ekfac: true,
         }));
         roundtrip(WireMsg::Step(StepMsg {
             t: 42,
@@ -2166,10 +2395,11 @@ mod tests {
         let block_state = BlockStateMsg {
             index: 4,
             state: StatePayload::Sketch {
-                left: SidePayload::Sketch(sketch.clone()),
+                left: SidePayload::Sketch { sketch: sketch.clone(), corr: None },
                 right: SidePayload::Exact {
                     c: BlockPayload::dense(&Matrix::randn(2, 2, &mut rng)),
                     root: Some(BlockPayload::dense(&Matrix::randn(2, 2, &mut rng))),
+                    corr: None,
                 },
             },
             mu: BlockPayload::dense(&Matrix::randn(6, 2, &mut rng)),
@@ -2186,10 +2416,54 @@ mod tests {
                     r: BlockPayload::dense(&Matrix::randn(2, 2, &mut rng)),
                     l_root: None,
                     r_root: None,
+                    l_corr: None,
+                    r_corr: None,
                 },
                 mu: BlockPayload::dense(&Matrix::randn(3, 2, &mut rng)),
                 graft_v: None,
                 graft_t: 0,
+            }],
+        }));
+        // v7 ekfac corrector payloads, in every position they can ride.
+        roundtrip(WireMsg::StateSnapOk(StateSnapOkMsg {
+            entries: vec![BlockStateMsg {
+                index: 1,
+                state: StatePayload::Kron {
+                    l: BlockPayload::dense(&Matrix::randn(3, 3, &mut rng)),
+                    r: BlockPayload::dense(&Matrix::randn(2, 2, &mut rng)),
+                    l_root: None,
+                    r_root: None,
+                    l_corr: Some(EigCorrPayload {
+                        basis: BlockPayload::dense(&Matrix::randn(3, 3, &mut rng)),
+                        diag: vec![2.0, 1.0, -0.0],
+                    }),
+                    r_corr: None,
+                },
+                mu: BlockPayload::dense(&Matrix::randn(3, 2, &mut rng)),
+                graft_v: None,
+                graft_t: 3,
+            }],
+        }));
+        roundtrip(WireMsg::StateRestore(StateRestoreMsg {
+            entries: vec![BlockStateMsg {
+                index: 5,
+                state: StatePayload::Sketch {
+                    left: SidePayload::Sketch {
+                        sketch,
+                        corr: Some(SketchCorrPayload { diag: vec![4.0, 0.5], tail: 0.125 }),
+                    },
+                    right: SidePayload::Exact {
+                        c: BlockPayload::dense(&Matrix::randn(2, 2, &mut rng)),
+                        root: None,
+                        corr: Some(EigCorrPayload {
+                            basis: BlockPayload::dense(&Matrix::randn(2, 2, &mut rng)),
+                            diag: vec![1.0, 1.0 / 3.0],
+                        }),
+                    },
+                },
+                mu: BlockPayload::dense(&Matrix::randn(6, 2, &mut rng)),
+                graft_v: None,
+                graft_t: 11,
             }],
         }));
         roundtrip(WireMsg::StateSnapOk(StateSnapOkMsg {
@@ -2396,13 +2670,39 @@ mod tests {
         if rng.bernoulli(0.5) { Some(arbitrary_block_payload(rng)) } else { None }
     }
 
+    fn arbitrary_eig_corr(rng: &mut Pcg64) -> Option<EigCorrPayload> {
+        if !rng.bernoulli(0.5) {
+            return None;
+        }
+        let n = rng.below(4);
+        Some(EigCorrPayload {
+            basis: arbitrary_block_payload(rng),
+            diag: (0..n).map(|_| adversarial_f64(rng)).collect(),
+        })
+    }
+
+    fn arbitrary_sketch_corr(rng: &mut Pcg64) -> Option<SketchCorrPayload> {
+        if !rng.bernoulli(0.5) {
+            return None;
+        }
+        let n = rng.below(4);
+        Some(SketchCorrPayload {
+            diag: (0..n).map(|_| adversarial_f64(rng)).collect(),
+            tail: adversarial_f64(rng),
+        })
+    }
+
     fn arbitrary_side_payload(rng: &mut Pcg64) -> SidePayload {
         if rng.bernoulli(0.5) {
-            SidePayload::Sketch(arbitrary_sketch_payload(rng))
+            SidePayload::Sketch {
+                sketch: arbitrary_sketch_payload(rng),
+                corr: arbitrary_sketch_corr(rng),
+            }
         } else {
             SidePayload::Exact {
                 c: arbitrary_block_payload(rng),
                 root: arbitrary_opt_block_payload(rng),
+                corr: arbitrary_eig_corr(rng),
             }
         }
     }
@@ -2414,6 +2714,8 @@ mod tests {
                 r: arbitrary_block_payload(rng),
                 l_root: arbitrary_opt_block_payload(rng),
                 r_root: arbitrary_opt_block_payload(rng),
+                l_corr: arbitrary_eig_corr(rng),
+                r_corr: arbitrary_eig_corr(rng),
             },
             1 => StatePayload::Sketch {
                 left: arbitrary_side_payload(rng),
@@ -2464,6 +2766,7 @@ mod tests {
                     graft: rng.below(6) as u8,
                     threads: rng.below(64) as u32,
                     blocks,
+                    ekfac: rng.bernoulli(0.5),
                 })
             }
             3 => {

@@ -6,19 +6,26 @@
 //! error-rate / WER / 1−AP analogues). The paper's claim under test:
 //! S-Shampoo performs at least as well as Adam and close to Shampoo
 //! while using sub-linear covariance memory.
+//!
+//! Cells also accept the engine-* optimizer names (parallel blocked
+//! preconditioner engine), with a bitwise engine ≡ fused pre-flight
+//! before any engine curve is recorded, and `--refresh-sweep` records
+//! the speedup-vs-quality trade at refresh intervals {4, 8, 16, 32}
+//! (the EKFAC stretch story: pass `--ekfac` and the stretched
+//! intervals hold quality).
 
 use crate::optim::{
-    Adam, GraftType, Optimizer, SShampoo, SShampooConfig, Shampoo, ShampooConfig,
-    WarmupCosine,
+    engine_optimizer, Adam, EngineConfig, GraftType, Optimizer, SShampoo, SShampooConfig,
+    Shampoo, ShampooConfig, WarmupCosine,
 };
 use crate::runtime::Runtime;
 use crate::train::{CurveLog, ProxyTask, ProxyTrainer};
 use crate::util::cli::Args;
-use anyhow::Result;
+use anyhow::{anyhow, bail, ensure, Result};
 use std::fmt::Write;
 use std::sync::Arc;
 
-fn shampoo_cfg(lr: f64, steps: usize) -> ShampooConfig {
+fn shampoo_cfg(lr: f64, steps: usize, ekfac: bool) -> ShampooConfig {
     ShampooConfig {
         lr,
         beta1: 0.9,
@@ -33,31 +40,77 @@ fn shampoo_cfg(lr: f64, steps: usize) -> ShampooConfig {
         precond_interval: 2,
         graft: GraftType::RmspropNormalized,
         one_sided: false,
+        ekfac,
     }
 }
 
-/// Build an optimizer by row name.
+/// Engine-side knobs for a cell. The legacy fused optimizers ignore
+/// everything but `ekfac` (which reaches them through
+/// [`ShampooConfig`], the shared switch).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineKnobs {
+    /// Eigendecomposition refresh cadence; `None` inherits the fused
+    /// `precond_interval` so `shampoo` → `engine-shampoo` does not
+    /// silently change refresh frequency.
+    pub refresh_interval: Option<usize>,
+    /// Spread refreshes across blocks (the production default).
+    pub stagger: bool,
+    /// EKFAC-style inter-refresh corrections.
+    pub ekfac: bool,
+}
+
+impl Default for EngineKnobs {
+    fn default() -> Self {
+        EngineKnobs { refresh_interval: None, stagger: true, ekfac: false }
+    }
+}
+
+/// The fused optimizer an engine-* name must reproduce bitwise under
+/// the matched cadence (refresh = precond_interval, stagger off).
+fn fused_counterpart(name: &str) -> Option<&'static str> {
+    match name {
+        "engine-adam" => Some("Adam"),
+        "engine-shampoo" => Some("Shampoo"),
+        "engine-s-shampoo" => Some("S-Shampoo"),
+        _ => None,
+    }
+}
+
+/// Build an optimizer by row name — legacy fused ("Adam", "Shampoo",
+/// "S-Shampoo") or the engine family ("engine-adam", "engine-shampoo",
+/// "engine-s-shampoo"). Unknown names are a named error, not a panic:
+/// this is the construction path `--optimizer` reaches from the CLI.
 fn make_opt(
     name: &str,
     shapes: &[(usize, usize)],
     lr: f64,
     steps: usize,
     rank: usize,
-) -> Box<dyn Optimizer> {
-    match name {
+    knobs: EngineKnobs,
+) -> Result<Box<dyn Optimizer>> {
+    let base = shampoo_cfg(lr, steps, knobs.ekfac);
+    Ok(match name {
         "Adam" => {
             let mut a = Adam::new(shapes, lr);
             a.weight_decay = 1e-4;
             a.clip = 10.0;
             Box::new(a)
         }
-        "Shampoo" => Box::new(Shampoo::new(shapes, shampoo_cfg(lr, steps))),
-        "S-Shampoo" => Box::new(SShampoo::new(
-            shapes,
-            SShampooConfig { base: shampoo_cfg(lr, steps), rank },
-        )),
-        _ => unreachable!(),
-    }
+        "Shampoo" => Box::new(Shampoo::new(shapes, base)),
+        "S-Shampoo" => Box::new(SShampoo::new(shapes, SShampooConfig { base, rank })),
+        engine if engine.starts_with("engine-") => {
+            let ecfg = EngineConfig {
+                refresh_interval: knobs.refresh_interval.unwrap_or(base.precond_interval).max(1),
+                stagger: knobs.stagger,
+                ekfac: knobs.ekfac,
+                ..EngineConfig::default()
+            };
+            let opt = engine_optimizer(engine, shapes, base, rank, ecfg)
+                .ok_or_else(|| anyhow!("unknown optimizer {engine}"))?;
+            Box::new(opt)
+        }
+        other => bail!("unknown optimizer {other} (fused or engine-* names)"),
+    })
 }
 
 pub struct CellResult {
@@ -66,9 +119,54 @@ pub struct CellResult {
     pub metric_curve: CurveLog,
     pub train_curve: CurveLog,
     pub covariance_bytes: usize,
+    /// Wall-clock for the training loop (the refresh-sweep speedup axis).
+    pub wall: std::time::Duration,
 }
 
-/// Train one (task, optimizer) cell.
+/// Engine ≡ fused pre-flight: before an engine-* cell's curves are
+/// recorded, drive a short run of the engine *and* its fused
+/// counterpart under the matched cadence (refresh on the fused
+/// `precond_interval`, stagger off, same ekfac switch) over the same
+/// seeded batch stream, and require bitwise-identical parameters. A
+/// knob-plumbing regression fails here with a named error instead of
+/// silently skewing a figure.
+fn assert_engine_matches_fused(
+    runtime: Arc<Runtime>,
+    task: ProxyTask,
+    name: &str,
+    workers: usize,
+    lr: f64,
+    rank: usize,
+    ekfac: bool,
+    seed: u64,
+) -> Result<()> {
+    let fused = fused_counterpart(name)
+        .ok_or_else(|| anyhow!("unknown engine optimizer {name}"))?;
+    let steps = 40;
+    let matched =
+        EngineKnobs { refresh_interval: None, stagger: false, ekfac };
+    let mut t_eng = ProxyTrainer::new(runtime.clone(), task, seed)?;
+    let mut t_fus = ProxyTrainer::new(runtime, task, seed)?;
+    let shapes = t_eng.shapes.clone();
+    let mut eng = make_opt(name, &shapes, lr, steps, rank, matched)?;
+    let mut fus = make_opt(fused, &shapes, lr, steps, rank, matched)?;
+    let schedule = WarmupCosine { peak: lr, warmup: steps / 20 + 1, total: steps };
+    t_eng.train(eng.as_mut(), steps, workers, Some(schedule), steps, 1, None)?;
+    t_fus.train(fus.as_mut(), steps, workers, Some(schedule), steps, 1, None)?;
+    for (i, (a, b)) in t_eng.params.iter().zip(&t_fus.params).enumerate() {
+        ensure!(
+            a.max_diff(b) == 0.0,
+            "{name} diverged from {fused} on {} (tensor {i}, max diff {:.3e}) — \
+             refusing to record engine curves",
+            task.name(),
+            a.max_diff(b)
+        );
+    }
+    Ok(())
+}
+
+/// Train one (task, optimizer) cell. Engine-* cells run the bitwise
+/// engine ≡ fused pre-flight first.
 #[allow(clippy::too_many_arguments)]
 pub fn run_cell(
     runtime: Arc<Runtime>,
@@ -79,11 +177,25 @@ pub fn run_cell(
     lr: f64,
     rank: usize,
     seed: u64,
+    knobs: EngineKnobs,
 ) -> Result<CellResult> {
+    if opt_name.starts_with("engine-") {
+        assert_engine_matches_fused(
+            runtime.clone(),
+            task,
+            opt_name,
+            workers,
+            lr,
+            rank,
+            knobs.ekfac,
+            seed,
+        )?;
+    }
     let mut trainer = ProxyTrainer::new(runtime, task, seed)?;
     let shapes = trainer.shapes.clone();
-    let mut opt = make_opt(opt_name, &shapes, lr, steps, rank);
+    let mut opt = make_opt(opt_name, &shapes, lr, steps, rank, knobs)?;
     let schedule = WarmupCosine { peak: lr, warmup: steps / 20 + 1, total: steps };
+    let t0 = std::time::Instant::now();
     let (train_curve, metric_curve) = trainer.train(
         opt.as_mut(),
         steps,
@@ -99,8 +211,13 @@ pub fn run_cell(
         metric_curve,
         train_curve,
         covariance_bytes: opt.second_moment_bytes(),
+        wall: t0.elapsed(),
     })
 }
+
+/// The stretched cadences the refresh sweep records (quality at 32 vs 4
+/// is the EKFAC claim the bench gate also enforces).
+const REFRESH_SWEEP: [usize; 4] = [4, 8, 16, 32];
 
 pub fn run(args: &Args) -> Result<String> {
     let runtime = Arc::new(Runtime::load(&args.get_or("artifacts", "artifacts"))?);
@@ -108,6 +225,19 @@ pub fn run(args: &Args) -> Result<String> {
     let workers = args.get_usize("workers", 2);
     let seeds = args.get_usize("seeds", if args.has("full") { 3 } else { 1 });
     let rank = args.get_usize("rank", 16);
+    let ekfac = args.get_bool("ekfac", false);
+    let knobs = EngineKnobs {
+        refresh_interval: args.get("refresh-interval").and_then(|s| s.parse().ok()),
+        stagger: args.get_bool("stagger-refresh", true),
+        ekfac,
+    };
+    // `--optimizer NAME` restricts the table to one row (fused or
+    // engine-*); the CI experiment-smoke leg runs a single
+    // engine-s-shampoo --ekfac cell this way.
+    let opt_names: Vec<String> = match args.get("optimizer") {
+        Some(name) => vec![name.to_string()],
+        None => vec!["Adam".into(), "Shampoo".into(), "S-Shampoo".into()],
+    };
     let tasks: Vec<ProxyTask> = match args.get("task") {
         Some("image") => vec![ProxyTask::Image],
         Some("audio") => vec![ProxyTask::Audio],
@@ -115,7 +245,8 @@ pub fn run(args: &Args) -> Result<String> {
         _ => vec![ProxyTask::Image, ProxyTask::Audio, ProxyTask::Graph],
     };
     let mut out = String::new();
-    writeln!(out, "# Fig. 2 — proxy DL tasks ({steps} steps, {workers} workers, {seeds} seed(s), ℓ={rank})\n")?;
+    writeln!(out, "# Fig. 2 — proxy DL tasks ({steps} steps, {workers} workers, {seeds} seed(s), ℓ={rank}{})\n",
+        if ekfac { ", ekfac" } else { "" })?;
     for task in tasks {
         writeln!(out, "## task: {} (metric: {})\n", task.name(), task.metric_name())?;
         writeln!(out, "| optimizer | final metric (mean over seeds) | covariance bytes |")?;
@@ -126,7 +257,7 @@ pub fn run(args: &Args) -> Result<String> {
             ProxyTask::Graph => 2e-3,
         };
         let mut finals: Vec<(String, f64)> = vec![];
-        for opt_name in ["Adam", "Shampoo", "S-Shampoo"] {
+        for opt_name in &opt_names {
             let mut metrics = vec![];
             let mut bytes = 0;
             for s in 0..seeds {
@@ -139,6 +270,7 @@ pub fn run(args: &Args) -> Result<String> {
                     lr,
                     rank,
                     100 + s as u64,
+                    knobs,
                 )?;
                 // Persist curves for the figure.
                 let base = format!("reports/fig2_curves/{}_{}_s{s}", task.name(), opt_name);
@@ -157,14 +289,59 @@ pub fn run(args: &Args) -> Result<String> {
             writeln!(out, "| {opt_name} | {mean:.4} | {bytes} |")?;
             finals.push((opt_name.to_string(), mean));
         }
-        // The paper-shape checks.
-        let get = |n: &str| finals.iter().find(|(m, _)| m == n).unwrap().1;
-        let (adam, s_sh) = (get("Adam"), get("S-Shampoo"));
-        writeln!(
-            out,
-            "\nS-Shampoo vs Adam: {} (paper: S-Shampoo at least as good on all tasks)\n",
-            if s_sh <= adam + 0.02 { "**competitive or better** ✓" } else { "worse — see seeds/steps" }
-        )?;
+        // The paper-shape checks (only meaningful over the full table).
+        if let (Some(adam), Some(s_sh)) = (
+            finals.iter().find(|(m, _)| m == "Adam").map(|r| r.1),
+            finals.iter().find(|(m, _)| m == "S-Shampoo").map(|r| r.1),
+        ) {
+            writeln!(
+                out,
+                "\nS-Shampoo vs Adam: {} (paper: S-Shampoo at least as good on all tasks)\n",
+                if s_sh <= adam + 0.02 { "**competitive or better** ✓" } else { "worse — see seeds/steps" }
+            )?;
+        }
+        // `--refresh-sweep`: engine speedup-vs-quality curve over the
+        // stretched refresh cadences. With --ekfac the stretched rows
+        // should hold the interval-4 quality (the corrector claim).
+        if args.get_bool("refresh-sweep", false) {
+            let name = match args.get("optimizer") {
+                Some(n) if n.starts_with("engine-") => n.to_string(),
+                _ => "engine-s-shampoo".to_string(),
+            };
+            writeln!(out, "### refresh sweep: {name}{}\n", if ekfac { " + ekfac" } else { "" })?;
+            writeln!(out, "| refresh interval | final metric | speedup vs interval 4 |")?;
+            writeln!(out, "|---|---|---|")?;
+            let mut sweep_csv = String::from("interval,final_metric,wall_secs\n");
+            let mut base_wall = None;
+            for interval in REFRESH_SWEEP {
+                let cell = run_cell(
+                    runtime.clone(),
+                    task,
+                    &name,
+                    steps,
+                    workers,
+                    lr,
+                    rank,
+                    100,
+                    EngineKnobs { refresh_interval: Some(interval), ..knobs },
+                )?;
+                let wall = cell.wall.as_secs_f64();
+                let speedup = base_wall.get_or_insert(wall).max(1e-9) / wall.max(1e-9);
+                writeln!(out, "| {interval} | {:.4} | {speedup:.2}x |", cell.final_metric)?;
+                writeln!(sweep_csv, "{interval},{:.6},{wall:.4}", cell.final_metric)
+                    .map_err(|e| anyhow!(e))?;
+            }
+            crate::train::metrics::write_report(
+                &format!(
+                    "reports/fig2_curves/{}_{}_refresh_sweep{}.csv",
+                    task.name(),
+                    name,
+                    if ekfac { "_ekfac" } else { "" }
+                ),
+                &sweep_csv,
+            )?;
+            writeln!(out)?;
+        }
     }
     writeln!(out, "curves: reports/fig2_curves/*.csv")?;
     Ok(out)

@@ -7,7 +7,7 @@
 //! together with covariance bytes; Adam and exact Shampoo anchor the two
 //! ends of the tradeoff.
 
-use super::fig2::run_cell;
+use super::fig2::{run_cell, EngineKnobs};
 use crate::runtime::Runtime;
 use crate::train::ProxyTask;
 use crate::util::cli::Args;
@@ -25,13 +25,23 @@ pub fn run(args: &Args) -> Result<String> {
         Some("graph") => ProxyTask::Graph,
         _ => ProxyTask::Image,
     };
+    // `--engine` sweeps the blocked-engine optimizers instead of the
+    // fused ones (bitwise pre-flight included in `run_cell`);
+    // `--ekfac` / `--refresh-interval` ride along to the engine cells.
+    let engine = args.get_bool("engine", false);
+    let knobs = EngineKnobs {
+        refresh_interval: args.get("refresh-interval").and_then(|s| s.parse().ok()),
+        ekfac: args.get_bool("ekfac", false),
+        ..EngineKnobs::default()
+    };
     let lr = 2e-3;
     let mut out = String::new();
-    writeln!(out, "# §5.1 rank sweep — S-Shampoo quality vs memory (task={}, {steps} steps)\n", task.name())?;
+    writeln!(out, "# §5.1 rank sweep — S-Shampoo quality vs memory (task={}, {steps} steps{})\n",
+        task.name(), if engine { ", engine" } else { "" })?;
     writeln!(out, "| optimizer | rank ℓ | final metric | covariance bytes |")?;
     writeln!(out, "|---|---|---|---|")?;
     let mut rows = vec![];
-    for (name, rank) in [
+    for (fused_name, rank) in [
         ("Adam", 0usize),
         ("S-Shampoo", 2),
         ("S-Shampoo", 4),
@@ -40,15 +50,22 @@ pub fn run(args: &Args) -> Result<String> {
         ("S-Shampoo", 32),
         ("Shampoo", 0),
     ] {
-        let cell = run_cell(runtime.clone(), task, name, steps, workers, lr, rank.max(1), seed)?;
+        let name = match (engine, fused_name) {
+            (false, n) => n.to_string(),
+            (true, "Adam") => "engine-adam".to_string(),
+            (true, "Shampoo") => "engine-shampoo".to_string(),
+            (true, _) => "engine-s-shampoo".to_string(),
+        };
+        let cell =
+            run_cell(runtime.clone(), task, &name, steps, workers, lr, rank.max(1), seed, knobs)?;
         writeln!(
             out,
             "| {name} | {} | {:.4} | {} |",
-            if name == "S-Shampoo" { rank.to_string() } else { "—".into() },
+            if fused_name == "S-Shampoo" { rank.to_string() } else { "—".into() },
             cell.final_metric,
             cell.covariance_bytes
         )?;
-        rows.push((name.to_string(), rank, cell.final_metric, cell.covariance_bytes));
+        rows.push((fused_name.to_string(), rank, cell.final_metric, cell.covariance_bytes));
     }
     // Pareto check: higher rank should not cost memory beyond Shampoo and
     // should (weakly) improve quality on average.

@@ -31,6 +31,7 @@ USAGE:
                 [--engine-threads N] [--block-size B]
                 [--refresh-interval K] [--stagger-refresh BOOL]
                 [--overlap-refresh BOOL] [--pool-threads N]
+                [--ekfac BOOL]
                 [--shards N] [--shard-transport tcp|unix]
                 [--shard-proto V] [--shard-compress BOOL]
                 [--shard-launch TEMPLATE]
@@ -93,7 +94,17 @@ idle links with Ping every --shard-heartbeat-ms and a worker silent
 past --shard-deadline-ms is killed and replaced through the same
 spare-adoption path — a *hung* worker (connection up, replies never
 arriving) no longer stalls the run until the --shard-reply-timeout-ms
-bound. --journal PATH makes the *driver* itself crash-safe: sync-point
+bound. --ekfac turns on EKFAC-style inter-refresh corrections (wire
+protocol v7): between eigendecompositions every block folds each
+step's gradient second moments into a corrected diagonal in its stale
+eigenbasis (FD-sketched blocks: over the rank-L basis plus an
+escaped-mass tail) and preconditions with those scales instead of the
+frozen eigenvalues, so --refresh-interval stretches 4 -> 32+ without
+quality loss — still bitwise identical across threads, shards,
+overlap, and crash-resume. Corrector state rides the typed
+StateSnap/StateRestore payloads and checkpoints; a fleet with any
+worker pinned below v7 is refused at launch rather than silently
+dropping the correction. --journal PATH makes the *driver* itself crash-safe: sync-point
 snapshots (params + typed sketch-factor optimizer state, never dense
 covariance) and a write-ahead record of every step since are fsynced
 to PATH, so a killed driver relaunched with --resume-journal PATH
@@ -239,6 +250,24 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         Some(path) => sketchy::util::config::Config::load(path)?,
         None => sketchy::util::config::Config::default(),
     };
+    // Fail fast on typo'd config keys in every section this launcher
+    // reads — a misspelled knob (`overlap_refres`) must be a named
+    // error, never a silent default. `[engine]` and `[shard]` validate
+    // inside their own resolvers.
+    cfg_file.ensure_known_keys("train", &["preset", "steps", "workers", "lr", "optimizer"])?;
+    cfg_file.ensure_known_keys(
+        "s_shampoo",
+        &[
+            "rank",
+            "beta2",
+            "weight_decay",
+            "clip",
+            "stat_interval",
+            "precond_interval",
+            "graft",
+            "one_sided",
+        ],
+    )?;
     let preset = args
         .get("preset")
         .map(|s| s.to_string())
@@ -278,7 +307,7 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         one_sided: cfg_file.bool_or("s_shampoo.one_sided", false),
         ..Default::default()
     };
-    let mut ecfg = EngineConfig::resolve(args, &cfg_file);
+    let mut ecfg = EngineConfig::resolve(args, &cfg_file)?;
     // Unless the engine knob is set explicitly, inherit the Shampoo
     // `precond_interval` cadence so `shampoo` → `engine-shampoo` does not
     // silently change refresh frequency.

@@ -64,14 +64,14 @@ impl ExecutorBuilder {
     }
 
     /// Cross-process shard fleet described by `launch` (the old
-    /// `PrecondEngine::sharded`). Elastic knobs ([`Self::spares`],
-    /// [`Self::rebalance`]) apply to this fleet.
+    /// `PrecondEngine::sharded`). The membership/journal knobs carried
+    /// in [`ShardLaunch::membership`] seed the builder — nothing the
+    /// CLI resolved into the launch plan is dropped — and the elastic
+    /// knobs ([`Self::spares`], [`Self::rebalance`],
+    /// [`Self::membership`]) override from there.
     pub fn sharded(launch: ShardLaunch) -> ExecutorBuilder {
-        ExecutorBuilder {
-            mode: Mode::Sharded(launch),
-            membership: MembershipConfig::default(),
-            clock: None,
-        }
+        let membership = launch.membership.clone();
+        ExecutorBuilder { mode: Mode::Sharded(launch), membership, clock: None }
     }
 
     /// In-proc shard workers over scripted fault-injection transports

@@ -80,7 +80,7 @@ use super::precond::{
 };
 use super::shampoo::ShampooConfig;
 use crate::coordinator::membership::MembershipConfig;
-use crate::coordinator::shard::{ShardExecutor, ShardLaunch};
+use crate::coordinator::shard::ShardLaunch;
 use crate::coordinator::wire::{BlockStateMsg, StateExpect};
 use crate::runtime::pool;
 use crate::sketch::FdSketch;
@@ -114,6 +114,14 @@ pub struct EngineConfig {
     /// engine construction (0 = grow on demand). Purely a warmup knob —
     /// never changes results.
     pub pool_threads: usize,
+    /// EKFAC-style inter-refresh corrections (George et al.): between
+    /// eigendecompositions each unit folds per-step gradient second
+    /// moments into a corrected diagonal in its stale eigenbasis and
+    /// applies with those scales instead of the frozen eigenvalues,
+    /// letting `refresh_interval` stretch 4 → 32+ without quality loss.
+    /// Resolved once at construction; sharded fleets require every
+    /// worker link at wire protocol v7+.
+    pub ekfac: bool,
 }
 
 impl Default for EngineConfig {
@@ -129,21 +137,38 @@ impl Default for EngineConfig {
             stagger: true,
             overlap: false,
             pool_threads: 0,
+            ekfac: false,
         }
     }
 }
 
 impl EngineConfig {
+    /// `[engine]` config keys [`EngineConfig::resolve`] understands —
+    /// anything else in the section is a named error, not a silent
+    /// no-op (the same contract `[shard]` has had since PR 7).
+    pub const KNOWN_KEYS: &'static [&'static str] = &[
+        "threads",
+        "block_size",
+        "refresh_interval",
+        "stagger_refresh",
+        "overlap_refresh",
+        "pool_threads",
+        "ekfac",
+    ];
+
     /// Resolve knobs from CLI flags (`--engine-threads`, `--block-size`,
     /// `--refresh-interval`, `--stagger-refresh`, `--overlap-refresh`,
-    /// `--pool-threads`) with `[engine]` config keys as fallback
-    /// (`engine.threads`, `engine.block_size`, `engine.refresh_interval`,
-    /// `engine.stagger_refresh`, `engine.overlap_refresh`,
-    /// `engine.pool_threads`) and [`EngineConfig::default`] as the final
-    /// fallback.
-    pub fn resolve(args: &Args, cfg: &Config) -> EngineConfig {
+    /// `--pool-threads`, `--ekfac`) with `[engine]` config keys as
+    /// fallback (`engine.threads`, `engine.block_size`,
+    /// `engine.refresh_interval`, `engine.stagger_refresh`,
+    /// `engine.overlap_refresh`, `engine.pool_threads`, `engine.ekfac`)
+    /// and [`EngineConfig::default`] as the final fallback. Unknown
+    /// `[engine]` keys are an error — a typo like `overlap_refres` must
+    /// not silently run without overlap.
+    pub fn resolve(args: &Args, cfg: &Config) -> anyhow::Result<EngineConfig> {
+        cfg.ensure_known_keys("engine", Self::KNOWN_KEYS)?;
         let d = EngineConfig::default();
-        EngineConfig {
+        Ok(EngineConfig {
             threads: args.get_usize("engine-threads", cfg.usize_or("engine.threads", d.threads)),
             block_size: args
                 .get_usize("block-size", cfg.usize_or("engine.block_size", d.block_size)),
@@ -159,7 +184,8 @@ impl EngineConfig {
                 .get_bool("overlap-refresh", cfg.bool_or("engine.overlap_refresh", d.overlap)),
             pool_threads: args
                 .get_usize("pool-threads", cfg.usize_or("engine.pool_threads", d.pool_threads)),
-        }
+            ekfac: args.get_bool("ekfac", cfg.bool_or("engine.ekfac", d.ekfac)),
+        })
     }
 
     /// Worker-thread count actually used for `blocks` tasks.
@@ -193,12 +219,13 @@ impl UnitKind {
         base: &ShampooConfig,
     ) -> Box<dyn Preconditioner> {
         match *self {
-            UnitKind::Shampoo => {
-                Box::new(KroneckerUnit::new(shape, base.beta2, base.eps, base.one_sided))
-            }
-            UnitKind::Sketched { rank } => {
-                Box::new(SketchUnit::new(shape, rank, base.beta2, base.eps, base.one_sided))
-            }
+            UnitKind::Shampoo => Box::new(
+                KroneckerUnit::new(shape, base.beta2, base.eps, base.one_sided).ekfac(base.ekfac),
+            ),
+            UnitKind::Sketched { rank } => Box::new(
+                SketchUnit::new(shape, rank, base.beta2, base.eps, base.one_sided)
+                    .ekfac(base.ekfac),
+            ),
             // Adam-standard moments: β₁ = 0.9, ε = 1e-8 (the fused
             // `Adam` defaults), second moment decay from the shared β₂.
             UnitKind::Adam => Box::new(AdamUnit::new(shape, 0.9, base.beta2, 1e-8)),
@@ -646,16 +673,22 @@ fn plan(
     // stacking grafting / second momentum / delayed preconditioning
     // on top. Only lr / β₂ / weight decay / clip pass through.
     let base = if kind == UnitKind::Adam {
+        // (ekfac corrects eigenbases; a diagonal unit has none, so the
+        // knob is forced off rather than silently carried around.)
         ShampooConfig {
             beta1: 0.0,
             graft: GraftType::None,
             stat_interval: 1,
             precond_interval: 1,
             start_preconditioning_step: 1,
+            ekfac: false,
             ..base
         }
     } else {
-        base
+        // The engine-level `--ekfac` knob and the shared ShampooConfig
+        // field are one switch: either surface turns the corrector on,
+        // and the normalized base is what ships in the shard InitMsg.
+        ShampooConfig { ekfac: base.ekfac || ecfg.ekfac, ..base }
     };
     // block_size = 0 means "no blocking": use the largest dimension so
     // the partition yields exactly one block per tensor.
@@ -736,6 +769,12 @@ impl PrecondEngine {
     /// `ecfg.overlap` the t+1 due-set ships to the workers as a second
     /// in-flight `RefreshAhead` RPC per shard (degrading to synchronous
     /// refresh when any worker lacks the capability).
+    ///
+    /// Elastic-membership / journal knobs travel inside
+    /// [`ShardLaunch::membership`] and are forwarded — this shim used
+    /// to substitute `MembershipConfig::default()` silently, so a
+    /// launch plan resolved from `--shard-spares`/`--journal` lost its
+    /// knobs unless the caller migrated to the builder.
     #[deprecated(note = "use optim::ExecutorBuilder::sharded(launch).build(...)")]
     pub fn sharded(
         shapes: &[(usize, usize)],
@@ -744,17 +783,7 @@ impl PrecondEngine {
         ecfg: EngineConfig,
         launch: &ShardLaunch,
     ) -> anyhow::Result<Self> {
-        let membership = MembershipConfig::default();
-        PrecondEngine::build_with(shapes, kind, base, ecfg, |blocks, kind, base, threads| {
-            Ok(Box::new(ShardExecutor::launch_with(
-                launch,
-                blocks,
-                kind,
-                base,
-                threads,
-                &membership,
-            )?))
-        })
+        crate::optim::ExecutorBuilder::sharded(launch.clone()).build(shapes, kind, base, ecfg)
     }
 
     /// Engine over an executor built by the caller.
@@ -993,12 +1022,13 @@ impl PrecondEngine {
 impl Optimizer for PrecondEngine {
     fn name(&self) -> String {
         format!(
-            "Engine<{}>(blocks={}, {}, refresh={}{})",
+            "Engine<{}>(blocks={}, {}, refresh={}{}{})",
             self.kind.label(),
             self.blocks.len(),
             self.executor.label(),
             self.ecfg.refresh_interval,
             if self.ecfg.overlap { "+overlap" } else { "" },
+            if self.base.ekfac { "+ekfac" } else { "" },
         )
     }
 
@@ -1235,7 +1265,7 @@ mod tests {
                 .iter()
                 .map(|s| s.to_string()),
         );
-        let e = EngineConfig::resolve(&args, &cfg);
+        let e = EngineConfig::resolve(&args, &cfg).unwrap();
         // CLI beats config; config beats defaults.
         assert_eq!(e.threads, 8);
         assert_eq!(e.block_size, 256);
@@ -1243,12 +1273,75 @@ mod tests {
         assert!(e.stagger);
         assert!(e.overlap);
         assert_eq!(e.pool_threads, 2);
-        let defaults = EngineConfig::resolve(&Args::default(), &Config::default());
+        assert!(!e.ekfac);
+        let defaults = EngineConfig::resolve(&Args::default(), &Config::default()).unwrap();
         assert_eq!(defaults.threads, 0);
         assert_eq!(defaults.refresh_interval, 10);
         assert!(defaults.stagger);
         assert!(!defaults.overlap);
         assert_eq!(defaults.pool_threads, 0);
+        assert!(!defaults.ekfac);
+        // The ekfac knob resolves from either surface, CLI first.
+        let cfg = Config::parse("[engine]\nekfac = true").unwrap();
+        assert!(EngineConfig::resolve(&Args::default(), &cfg).unwrap().ekfac);
+        let args = Args::parse(["train", "--ekfac", "false"].iter().map(|s| s.to_string()));
+        assert!(!EngineConfig::resolve(&args, &cfg).unwrap().ekfac);
+        let args = Args::parse(["train", "--ekfac", "true"].iter().map(|s| s.to_string()));
+        assert!(EngineConfig::resolve(&args, &Config::default()).unwrap().ekfac);
+    }
+
+    #[test]
+    fn unknown_engine_config_keys_are_named_errors() {
+        // The satellite bug: `overlap_refres = true` used to silently
+        // run without overlap. Now every unknown `[engine]` key is a
+        // named error listing the valid ones.
+        let cfg = Config::parse("[engine]\noverlap_refres = true").unwrap();
+        let err = EngineConfig::resolve(&Args::default(), &cfg).unwrap_err().to_string();
+        assert!(err.contains("overlap_refres"), "error should name the bad key: {err}");
+        assert!(err.contains("overlap_refresh"), "error should list known keys: {err}");
+        // Other sections are not this section's business.
+        let cfg = Config::parse("[shard]\nbogus = 1\n[engine]\nthreads = 2").unwrap();
+        assert_eq!(EngineConfig::resolve(&Args::default(), &cfg).unwrap().threads, 2);
+    }
+
+    #[test]
+    fn ekfac_knob_reaches_units_and_name() {
+        let ecfg = EngineConfig { block_size: 4, ekfac: true, ..Default::default() };
+        let eng = PrecondEngine::shampoo(&[(6, 4)], base_cfg(), ecfg);
+        assert!(eng.base.ekfac, "plan() must fold the engine knob into the unit config");
+        assert!(eng.name().contains("+ekfac"), "name: {}", eng.name());
+        // Adam has no eigenbasis to correct: the knob is forced off.
+        let adam = PrecondEngine::adam(&[(6, 4)], base_cfg(), ecfg);
+        assert!(!adam.base.ekfac);
+        assert!(!adam.name().contains("ekfac"), "name: {}", adam.name());
+        // The ShampooConfig surface alone also turns it on.
+        let base = ShampooConfig { ekfac: true, ..base_cfg() };
+        let eng =
+            PrecondEngine::sketched(&[(6, 4)], 3, base, EngineConfig { ..Default::default() });
+        assert!(eng.base.ekfac);
+    }
+
+    #[test]
+    fn ekfac_engine_converges_on_quadratic() {
+        let shapes = [(8, 8)];
+        let mut rng = Pcg64::new(219);
+        let target = Matrix::randn(8, 8, &mut rng);
+        let mut params = vec![Matrix::zeros(8, 8)];
+        let ecfg = EngineConfig {
+            threads: 2,
+            block_size: 4,
+            refresh_interval: 16,
+            stagger: true,
+            ekfac: true,
+            ..Default::default()
+        };
+        let mut opt = PrecondEngine::shampoo(&shapes, base_cfg(), ecfg);
+        for _ in 0..3000 {
+            let grads = vec![params[0].sub(&target)];
+            opt.step(&mut params, &grads);
+        }
+        assert!(params[0].max_diff(&target) < 0.05);
+        assert!(opt.refreshes() > 0);
     }
 
     #[test]

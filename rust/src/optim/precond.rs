@@ -25,7 +25,7 @@
 
 use super::grafting::{transplant, Graft, GraftType};
 use crate::sketch::FdSketch;
-use crate::tensor::{a_at, at_a, inv_pth_root, matmul, Matrix};
+use crate::tensor::{a_at, a_bt, at_a, at_b, eigh, inv_pth_root, matmul, Matrix};
 
 /// Per-tensor/per-block preconditioner unit: statistics + derived state.
 ///
@@ -43,6 +43,14 @@ pub trait Preconditioner: Send {
     /// Whether derived state exists (first apply must be preceded by a
     /// refresh for units with cached roots).
     fn ready(&self) -> bool;
+
+    /// EKFAC-style inter-refresh correction hook: fold gradient `g`'s
+    /// second moments *in the current stale eigenbasis* into corrected
+    /// diagonal scales (George et al., "Fast Approximate Natural Gradient
+    /// Descent in a Kronecker-factored Eigenbasis"). Called once per
+    /// preconditioned step, after any refresh and before `apply`. Default
+    /// no-op: only units constructed with ekfac on maintain a corrector.
+    fn track(&mut self, _g: &Matrix) {}
 
     /// Preconditioned direction for gradient `g`.
     fn apply(&self, g: &Matrix) -> Matrix;
@@ -84,8 +92,16 @@ pub trait Preconditioner: Send {
 /// encode it without ever densifying sketched sides.
 #[derive(Clone, Debug)]
 pub enum PrecondState {
-    /// Exact Kronecker factors and their cached inverse roots.
-    Kronecker { l: Matrix, r: Matrix, l_root: Option<Matrix>, r_root: Option<Matrix> },
+    /// Exact Kronecker factors, their cached inverse roots, and (ekfac
+    /// units only) the per-factor inter-refresh correctors.
+    Kronecker {
+        l: Matrix,
+        r: Matrix,
+        l_root: Option<Matrix>,
+        r_root: Option<Matrix>,
+        l_corr: Option<EigCorrState>,
+        r_corr: Option<EigCorrState>,
+    },
     /// Per-side sketched (or small-exact) factors.
     Sketch { left: SideState, right: SideState },
     /// Diagonal Adam moments + step counter.
@@ -95,10 +111,10 @@ pub enum PrecondState {
 /// One side of a [`PrecondState::Sketch`] snapshot.
 #[derive(Clone, Debug)]
 pub enum SideState {
-    /// dim ≤ ℓ: exact factor plus cached root.
-    Exact { c: Matrix, root: Option<Matrix> },
-    /// dim > ℓ: the FD sketch's factored state.
-    Sketch(SketchState),
+    /// dim ≤ ℓ: exact factor plus cached root (and ekfac corrector).
+    Exact { c: Matrix, root: Option<Matrix>, corr: Option<EigCorrState> },
+    /// dim > ℓ: the FD sketch's factored state (and ekfac corrector).
+    Sketch { sketch: SketchState, corr: Option<SketchCorrState> },
 }
 
 /// Factored FD sketch state: O(dℓ) basis + ℓ eigenvalues + the RFD-style
@@ -141,6 +157,254 @@ fn ensure_opt_shape(
 }
 
 // ---------------------------------------------------------------------------
+// EKFAC inter-refresh correctors.
+// ---------------------------------------------------------------------------
+
+/// Snapshot of an [`EigCorr`] — travels with [`PrecondState::Kronecker`]
+/// and exact [`SideState`]s when the owning unit runs with ekfac on.
+#[derive(Clone, Debug)]
+pub struct EigCorrState {
+    /// Stale eigenbasis, d×d.
+    pub basis: Matrix,
+    /// Corrected per-direction second moments, length d.
+    pub diag: Vec<f64>,
+}
+
+/// Snapshot of a [`SketchCorr`].
+#[derive(Clone, Debug)]
+pub struct SketchCorrState {
+    /// Corrected moments over the FD basis columns, length ℓ.
+    pub diag: Vec<f64>,
+    /// Corrected complement (escaped-mass) moment.
+    pub tail: f64,
+}
+
+/// EKFAC corrector for an exact factor: the factor's stale eigenbasis plus
+/// per-direction corrected second moments. Between eigendecompositions the
+/// frozen eigenvalues drift away from the true curvature; folding each
+/// step's gradient moments into `diag` (in the *stale* basis) tracks the
+/// diagonal of `Uᵀ C U` exactly, which is what lets the refresh interval
+/// stretch 4 → 32+ without quality loss.
+pub(crate) struct EigCorr {
+    /// Stale eigenbasis U (d×d), columns ordered like `diag`.
+    basis: Matrix,
+    /// Corrected second moments diag(Uᵀ C U), same EMA decay as the factor.
+    diag: Vec<f64>,
+}
+
+impl EigCorr {
+    /// Reseed from a fresh eigendecomposition of the factor: the corrected
+    /// diagonal starts at the true eigenvalues, so the corrected apply
+    /// coincides with the frozen-root apply at refresh time.
+    fn reseed(c: &Matrix) -> EigCorr {
+        let e = eigh(c);
+        EigCorr { basis: e.q, diag: e.w }
+    }
+
+    /// Spectral scales `(max(dᵢ,0) + ε)^{-1/p}` — the same ridge
+    /// convention as [`inv_pth_root`].
+    fn scales(&self, eps: f64, p: f64) -> Vec<f64> {
+        self.diag.iter().map(|&d| (d.max(0.0) + eps).powf(-1.0 / p)).collect()
+    }
+
+    /// Corrected left inverse-root apply: `U f(diag) Uᵀ X`.
+    fn apply_left(&self, x: &Matrix, eps: f64, p: f64) -> Matrix {
+        let mut proj = at_b(&self.basis, x);
+        for (j, s) in self.scales(eps, p).into_iter().enumerate() {
+            for v in proj.row_mut(j) {
+                *v *= s;
+            }
+        }
+        matmul(&self.basis, &proj)
+    }
+
+    /// Corrected right inverse-root apply: `X U f(diag) Uᵀ`.
+    fn apply_right(&self, x: &Matrix, eps: f64, p: f64) -> Matrix {
+        let mut proj = matmul(x, &self.basis);
+        for (j, s) in self.scales(eps, p).into_iter().enumerate() {
+            for i in 0..proj.rows() {
+                proj[(i, j)] *= s;
+            }
+        }
+        a_bt(&proj, &self.basis)
+    }
+
+    /// Fold row-space moments: `diagᵢ ← β₂·diagᵢ + ‖uᵢᵀG‖²`, the diagonal
+    /// of the factor's own EMA update `β₂L + GGᵀ` seen in the stale basis.
+    fn track_left(&mut self, g: &Matrix, beta2: f64) {
+        let proj = at_b(&self.basis, g);
+        let (rows, cols) = (proj.rows(), proj.cols());
+        let ps = proj.as_slice();
+        for i in 0..rows {
+            let mut s = 0.0;
+            for j in 0..cols {
+                s += ps[i * cols + j] * ps[i * cols + j];
+            }
+            self.diag[i] = beta2 * self.diag[i] + s;
+        }
+    }
+
+    /// Column-space mirror: `diagₖ ← β₂·diagₖ + ‖Gvₖ‖²` (the diagonal of
+    /// `β₂R + GᵀG` in the stale basis).
+    fn track_right(&mut self, g: &Matrix, beta2: f64) {
+        let proj = matmul(g, &self.basis);
+        let (rows, cols) = (proj.rows(), proj.cols());
+        let ps = proj.as_slice();
+        for k in 0..cols {
+            let mut s = 0.0;
+            for i in 0..rows {
+                s += ps[i * cols + k] * ps[i * cols + k];
+            }
+            self.diag[k] = beta2 * self.diag[k] + s;
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.basis.mem_bytes() + self.diag.len() * std::mem::size_of::<f64>()
+    }
+
+    fn snapshot(&self) -> EigCorrState {
+        EigCorrState { basis: self.basis.clone(), diag: self.diag.clone() }
+    }
+
+    fn restore(what: &str, s: EigCorrState, dim: usize) -> anyhow::Result<EigCorr> {
+        ensure_shape(what, &s.basis, dim, dim)?;
+        anyhow::ensure!(
+            s.diag.len() == dim,
+            "state restore: {what} diagonal length {} != expected {dim}",
+            s.diag.len()
+        );
+        Ok(EigCorr { basis: s.basis, diag: s.diag })
+    }
+}
+
+/// EKFAC corrector for a sketched side: corrected second moments over the
+/// rank-ℓ FD basis columns plus a scalar tail — the per-direction moment
+/// of the complement subspace, playing the escaped-mass shift's role
+/// between sketch updates. The basis itself lives in the side's
+/// [`FdSketch`]; this struct is O(ℓ).
+pub(crate) struct SketchCorr {
+    /// Corrected moments over the FD basis columns (length ℓ).
+    diag: Vec<f64>,
+    /// Corrected complement (escaped-mass) moment.
+    tail: f64,
+}
+
+impl SketchCorr {
+    /// Reseed from a freshly shrunk sketch: eigenvalues + escaped mass,
+    /// so the corrected apply coincides with the legacy factored apply at
+    /// sketch-update time.
+    fn reseed(fd: &FdSketch) -> SketchCorr {
+        SketchCorr { diag: fd.eigenvalues().to_vec(), tail: fd.escaped_mass() }
+    }
+
+    /// Coefficients of the shifted factored apply with the corrected
+    /// diagonal in place of the frozen eigenvalues: per-column
+    /// `f(dⱼ + shift) − f(shift)` plus the complement scale `f(shift)`,
+    /// `f(λ) = λ^{-1/p}`, `shift = max(tail,0) + ε`. Zero basis columns
+    /// carry d = 0 and so a zero coefficient — harmless.
+    fn coeffs(&self, eps: f64, p: f64) -> (Vec<f64>, f64) {
+        let shift = self.tail.max(0.0) + eps;
+        let comp = shift.powf(-1.0 / p);
+        let coeffs =
+            self.diag.iter().map(|&d| (d.max(0.0) + shift).powf(-1.0 / p) - comp).collect();
+        (coeffs, comp)
+    }
+
+    /// Corrected `L̃^{-1/p} X` over basis `u` — the factored-apply
+    /// template of [`crate::sketch::FactoredPsd`] with corrected scales.
+    fn apply_left(&self, u: &Matrix, x: &Matrix, eps: f64, p: f64) -> Matrix {
+        let (coeffs, comp) = self.coeffs(eps, p);
+        let mut y = x.scale(comp);
+        let mut proj = at_b(u, x);
+        for (j, &cj) in coeffs.iter().enumerate() {
+            for v in proj.row_mut(j) {
+                *v *= cj;
+            }
+        }
+        y.axpy(1.0, &matmul(u, &proj));
+        y
+    }
+
+    /// Corrected `X R̃^{-1/p}` over basis `u`.
+    fn apply_right(&self, u: &Matrix, x: &Matrix, eps: f64, p: f64) -> Matrix {
+        let (coeffs, comp) = self.coeffs(eps, p);
+        let mut y = x.scale(comp);
+        let mut proj = matmul(x, u);
+        for (j, &cj) in coeffs.iter().enumerate() {
+            for i in 0..proj.rows() {
+                proj[(i, j)] *= cj;
+            }
+        }
+        y.axpy(1.0, &a_bt(&proj, u));
+        y
+    }
+
+    /// Fold row-space moments in the stale sketch basis plus the
+    /// complement residual averaged over the d−ℓ escaped directions.
+    fn track_left(&mut self, u: &Matrix, g: &Matrix, beta2: f64) {
+        let proj = at_b(u, g);
+        let ps = proj.as_slice();
+        let (l, n) = (proj.rows(), proj.cols());
+        let mut captured = 0.0;
+        for i in 0..l {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += ps[i * n + j] * ps[i * n + j];
+            }
+            captured += s;
+            self.diag[i] = beta2 * self.diag[i] + s;
+        }
+        self.fold_tail(g, captured, u.rows(), l, beta2);
+    }
+
+    /// Column-space mirror over basis `u` (dim×ℓ, dim = cols of `g`).
+    fn track_right(&mut self, u: &Matrix, g: &Matrix, beta2: f64) {
+        let proj = matmul(g, u);
+        let ps = proj.as_slice();
+        let (m, l) = (proj.rows(), proj.cols());
+        let mut captured = 0.0;
+        for k in 0..l {
+            let mut s = 0.0;
+            for i in 0..m {
+                s += ps[i * l + k] * ps[i * l + k];
+            }
+            captured += s;
+            self.diag[k] = beta2 * self.diag[k] + s;
+        }
+        self.fold_tail(g, captured, u.rows(), l, beta2);
+    }
+
+    fn fold_tail(&mut self, g: &Matrix, captured: f64, dim: usize, rank: usize, beta2: f64) {
+        let mut total = 0.0;
+        for &v in g.as_slice() {
+            total += v * v;
+        }
+        // Sketched sides always have dim > ℓ; the complement moment is
+        // the per-direction average of the mass the basis misses.
+        let resid = (total - captured).max(0.0);
+        self.tail = beta2 * self.tail + resid / (dim - rank) as f64;
+    }
+
+    fn mem_bytes(&self) -> usize {
+        (self.diag.len() + 1) * std::mem::size_of::<f64>()
+    }
+
+    fn snapshot(&self) -> SketchCorrState {
+        SketchCorrState { diag: self.diag.clone(), tail: self.tail }
+    }
+
+    fn restore(s: SketchCorrState, rank: usize) -> anyhow::Result<SketchCorr> {
+        anyhow::ensure!(
+            s.diag.len() == rank,
+            "state restore: sketch corrector length {} != expected rank {rank}",
+            s.diag.len()
+        );
+        Ok(SketchCorr { diag: s.diag, tail: s.tail })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Exact Kronecker factors (Shampoo).
 // ---------------------------------------------------------------------------
 
@@ -150,10 +414,13 @@ pub struct KroneckerUnit {
     pub(crate) beta2: f64,
     pub(crate) eps: f64,
     pub(crate) one_sided: bool,
+    pub(crate) ekfac: bool,
     pub(crate) l: Matrix,
     pub(crate) r: Matrix,
     pub(crate) l_root: Option<Matrix>,
     pub(crate) r_root: Option<Matrix>,
+    pub(crate) l_corr: Option<EigCorr>,
+    pub(crate) r_corr: Option<EigCorr>,
 }
 
 impl KroneckerUnit {
@@ -163,11 +430,21 @@ impl KroneckerUnit {
             beta2,
             eps,
             one_sided,
+            ekfac: false,
             l: Matrix::zeros(m, m),
             r: Matrix::zeros(n, n),
             l_root: None,
             r_root: None,
+            l_corr: None,
+            r_corr: None,
         }
+    }
+
+    /// Enable the EKFAC-style inter-refresh corrector (builder style;
+    /// resolved once at engine construction, never toggled mid-run).
+    pub fn ekfac(mut self, on: bool) -> Self {
+        self.ekfac = on;
+        self
     }
 }
 
@@ -182,6 +459,16 @@ impl Preconditioner for KroneckerUnit {
     }
 
     fn refresh(&mut self) -> bool {
+        if self.ekfac {
+            // EKFAC mode keeps the eigenbasis + corrected diagonal instead
+            // of a frozen inverse root; `track` re-tightens the diagonal
+            // every step between these (now rare) eigendecompositions.
+            self.l_corr = Some(EigCorr::reseed(&self.l));
+            if !self.one_sided {
+                self.r_corr = Some(EigCorr::reseed(&self.r));
+            }
+            return true;
+        }
         let p = if self.one_sided { 2.0 } else { 4.0 };
         self.l_root = Some(inv_pth_root(&self.l, p, self.eps));
         if !self.one_sided {
@@ -191,10 +478,39 @@ impl Preconditioner for KroneckerUnit {
     }
 
     fn ready(&self) -> bool {
-        self.l_root.is_some() && (self.one_sided || self.r_root.is_some())
+        if self.ekfac {
+            self.l_corr.is_some() && (self.one_sided || self.r_corr.is_some())
+        } else {
+            self.l_root.is_some() && (self.one_sided || self.r_root.is_some())
+        }
+    }
+
+    fn track(&mut self, g: &Matrix) {
+        if !self.ekfac {
+            return;
+        }
+        if let Some(c) = &mut self.l_corr {
+            c.track_left(g, self.beta2);
+        }
+        if !self.one_sided {
+            if let Some(c) = &mut self.r_corr {
+                c.track_right(g, self.beta2);
+            }
+        }
     }
 
     fn apply(&self, g: &Matrix) -> Matrix {
+        if self.ekfac {
+            let p = if self.one_sided { 2.0 } else { 4.0 };
+            let lc = self.l_corr.as_ref().expect("refresh before apply");
+            let half = lc.apply_left(g, self.eps, p);
+            return if self.one_sided {
+                half
+            } else {
+                let rc = self.r_corr.as_ref().expect("refresh before apply");
+                rc.apply_right(&half, self.eps, 4.0)
+            };
+        }
         let l_root = self.l_root.as_ref().expect("refresh before apply");
         if self.one_sided {
             matmul(l_root, g)
@@ -208,6 +524,8 @@ impl Preconditioner for KroneckerUnit {
             + self.r.mem_bytes()
             + self.l_root.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
             + self.r_root.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
+            + self.l_corr.as_ref().map(|c| c.mem_bytes()).unwrap_or(0)
+            + self.r_corr.as_ref().map(|c| c.mem_bytes()).unwrap_or(0)
     }
 
     fn second_moment_bytes(&self) -> usize {
@@ -220,11 +538,13 @@ impl Preconditioner for KroneckerUnit {
             r: self.r.clone(),
             l_root: self.l_root.clone(),
             r_root: self.r_root.clone(),
+            l_corr: self.l_corr.as_ref().map(|c| c.snapshot()),
+            r_corr: self.r_corr.as_ref().map(|c| c.snapshot()),
         }
     }
 
     fn restore_payload(&mut self, state: PrecondState) -> anyhow::Result<()> {
-        let PrecondState::Kronecker { l, r, l_root, r_root } = state else {
+        let PrecondState::Kronecker { l, r, l_root, r_root, l_corr, r_corr } = state else {
             anyhow::bail!("state restore: non-Kronecker payload for a Kronecker unit");
         };
         let (m, n) = (self.l.rows(), self.r.rows());
@@ -237,11 +557,33 @@ impl Preconditioner for KroneckerUnit {
                 r_root.is_none(),
                 "state restore: R root present for a one-sided Kronecker unit"
             );
+            anyhow::ensure!(
+                r_corr.is_none(),
+                "state restore: R corrector present for a one-sided Kronecker unit"
+            );
         }
+        if !self.ekfac {
+            anyhow::ensure!(
+                l_corr.is_none() && r_corr.is_none(),
+                "state restore: ekfac corrector state for a unit constructed without ekfac"
+            );
+        }
+        // An ekfac unit accepts a corrector-free (pre-ekfac) payload: it
+        // simply refreshes on its next preconditioned step.
+        let l_corr = match l_corr {
+            Some(s) => Some(EigCorr::restore("L corrector", s, m)?),
+            None => None,
+        };
+        let r_corr = match r_corr {
+            Some(s) => Some(EigCorr::restore("R corrector", s, n)?),
+            None => None,
+        };
         self.l = l;
         self.r = r;
         self.l_root = l_root;
         self.r_root = r_root;
+        self.l_corr = l_corr;
+        self.r_corr = r_corr;
         Ok(())
     }
 }
@@ -253,58 +595,108 @@ impl Preconditioner for KroneckerUnit {
 /// One side (L or R) of the factored S-Shampoo preconditioner.
 pub(crate) enum Side {
     /// dim ≤ ℓ: exact EMA factor, spectral root cached.
-    Exact { c: Matrix, root: Option<Matrix> },
+    Exact { c: Matrix, root: Option<Matrix>, corr: Option<EigCorr> },
     /// dim > ℓ: EW-FD sketch (Obs. 6), applied in factored form.
-    Sketched { fd: FdSketch },
+    Sketched { fd: FdSketch, corr: Option<SketchCorr> },
 }
 
 impl Side {
     pub(crate) fn new(dim: usize, rank: usize, beta2: f64) -> Side {
         if dim <= rank {
-            Side::Exact { c: Matrix::zeros(dim, dim), root: None }
+            Side::Exact { c: Matrix::zeros(dim, dim), root: None, corr: None }
         } else {
-            Side::Sketched { fd: FdSketch::new(dim, rank, beta2) }
+            Side::Sketched { fd: FdSketch::new(dim, rank, beta2), corr: None }
         }
     }
 
-    /// Update statistics with news factor Y (news = Y Yᵀ).
-    pub(crate) fn update(&mut self, y: &Matrix, beta2: f64) {
+    /// Update statistics with news factor Y (news = Y Yᵀ). With ekfac on,
+    /// a sketched side reseeds its corrector here: the FD shrink *is*
+    /// this side's eigendecomposition, so the corrected diagonal restarts
+    /// from the fresh eigenvalues + escaped mass.
+    pub(crate) fn update(&mut self, y: &Matrix, beta2: f64, ekfac: bool) {
         match self {
             Side::Exact { c, .. } => {
                 c.scale_inplace(beta2);
                 c.axpy(1.0, &a_at(y));
             }
-            Side::Sketched { fd } => {
+            Side::Sketched { fd, corr } => {
                 fd.update(y);
+                if ekfac {
+                    *corr = Some(SketchCorr::reseed(fd));
+                }
             }
         }
     }
 
     /// Refresh any cached spectral roots (exact mode only; sketched sides
     /// apply their inverse roots directly from the factored form, so they
-    /// are never stale). Returns whether an eigendecomposition ran.
-    pub(crate) fn refresh_root(&mut self, eps: f64, p: f64) -> bool {
-        if let Side::Exact { c, root } = self {
-            *root = Some(inv_pth_root(c, p, eps));
+    /// are never stale). With ekfac on, an exact side keeps the eigenbasis
+    /// + corrected diagonal instead of a frozen root. Returns whether an
+    /// eigendecomposition ran.
+    pub(crate) fn refresh_root(&mut self, eps: f64, p: f64, ekfac: bool) -> bool {
+        if let Side::Exact { c, root, corr } = self {
+            if ekfac {
+                *corr = Some(EigCorr::reseed(c));
+            } else {
+                *root = Some(inv_pth_root(c, p, eps));
+            }
             true
         } else {
             false
         }
     }
 
-    pub(crate) fn has_root(&self) -> bool {
+    pub(crate) fn has_root(&self, ekfac: bool) -> bool {
         match self {
-            Side::Exact { root, .. } => root.is_some(),
+            Side::Exact { root, corr, .. } => {
+                if ekfac {
+                    corr.is_some()
+                } else {
+                    root.is_some()
+                }
+            }
             Side::Sketched { .. } => true,
+        }
+    }
+
+    /// EKFAC per-step correction: fold `g`'s row-space second moments in
+    /// this side's stale basis (the L factor sees `GGᵀ`).
+    pub(crate) fn track_left(&mut self, g: &Matrix, beta2: f64) {
+        match self {
+            Side::Exact { corr: Some(c), .. } => c.track_left(g, beta2),
+            Side::Sketched { fd, corr: Some(c) } => c.track_left(fd.basis(), g, beta2),
+            _ => {}
+        }
+    }
+
+    /// Column-space mirror (the R factor sees `GᵀG`).
+    pub(crate) fn track_right(&mut self, g: &Matrix, beta2: f64) {
+        match self {
+            Side::Exact { corr: Some(c), .. } => c.track_right(g, beta2),
+            Side::Sketched { fd, corr: Some(c) } => c.track_right(fd.basis(), g, beta2),
+            _ => {}
         }
     }
 
     /// Apply this side's `(·)^{-1/p}` from the left: `C^{-1/p} X`
     /// (p = 4 two-sided Shampoo, p = 2 one-sided §3.4).
-    pub(crate) fn apply_left(&self, x: &Matrix, eps: f64, p: f64) -> Matrix {
+    pub(crate) fn apply_left(&self, x: &Matrix, eps: f64, p: f64, ekfac: bool) -> Matrix {
         match self {
-            Side::Exact { root, .. } => matmul(root.as_ref().expect("root not ready"), x),
-            Side::Sketched { fd } => {
+            Side::Exact { root, corr, .. } => {
+                if ekfac {
+                    corr.as_ref().expect("refresh before apply").apply_left(x, eps, p)
+                } else {
+                    matmul(root.as_ref().expect("root not ready"), x)
+                }
+            }
+            Side::Sketched { fd, corr } => {
+                if ekfac {
+                    // Before the first ingest there is nothing to correct;
+                    // fall through to the (empty-sketch) legacy apply.
+                    if let Some(c) = corr {
+                        return c.apply_left(fd.basis(), x, eps, p);
+                    }
+                }
                 // L̃ = Ḡ + (ρ_{1:t} + ε) I, per Alg. 3 line 6 plus the ε
                 // ridge of the initialization L̃₀ = εI.
                 let pre = fd.shifted(fd.escaped_mass() + eps);
@@ -314,10 +706,21 @@ impl Side {
     }
 
     /// Apply this side's `(·)^{-1/4}` from the right: `X C^{-1/4}`.
-    pub(crate) fn apply_right(&self, x: &Matrix, eps: f64) -> Matrix {
+    pub(crate) fn apply_right(&self, x: &Matrix, eps: f64, ekfac: bool) -> Matrix {
         match self {
-            Side::Exact { root, .. } => matmul(x, root.as_ref().expect("root not ready")),
-            Side::Sketched { fd } => {
+            Side::Exact { root, corr, .. } => {
+                if ekfac {
+                    corr.as_ref().expect("refresh before apply").apply_right(x, eps, 4.0)
+                } else {
+                    matmul(x, root.as_ref().expect("root not ready"))
+                }
+            }
+            Side::Sketched { fd, corr } => {
+                if ekfac {
+                    if let Some(c) = corr {
+                        return c.apply_right(fd.basis(), x, eps, 4.0);
+                    }
+                }
                 let pre = fd.shifted(fd.escaped_mass() + eps);
                 pre.apply_inv_root_right(4.0, x)
             }
@@ -326,17 +729,21 @@ impl Side {
 
     pub(crate) fn mem_bytes(&self) -> usize {
         match self {
-            Side::Exact { c, root } => {
-                c.mem_bytes() + root.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
+            Side::Exact { c, root, corr } => {
+                c.mem_bytes()
+                    + root.as_ref().map(|m| m.mem_bytes()).unwrap_or(0)
+                    + corr.as_ref().map(|cr| cr.mem_bytes()).unwrap_or(0)
             }
-            Side::Sketched { fd } => fd.mem_bytes(),
+            Side::Sketched { fd, corr } => {
+                fd.mem_bytes() + corr.as_ref().map(|cr| cr.mem_bytes()).unwrap_or(0)
+            }
         }
     }
 
     pub(crate) fn second_moment_bytes(&self) -> usize {
         match self {
             Side::Exact { c, .. } => c.mem_bytes(),
-            Side::Sketched { fd } => fd.mem_bytes(),
+            Side::Sketched { fd, .. } => fd.mem_bytes(),
         }
     }
 
@@ -344,36 +751,56 @@ impl Side {
     pub(crate) fn escaped(&self) -> f64 {
         match self {
             Side::Exact { .. } => 0.0,
-            Side::Sketched { fd } => fd.escaped_mass(),
+            Side::Sketched { fd, .. } => fd.escaped_mass(),
         }
     }
 
     /// Snapshot this side's mutable state in its natural factored form.
     pub(crate) fn snapshot(&self) -> SideState {
         match self {
-            Side::Exact { c, root } => SideState::Exact { c: c.clone(), root: root.clone() },
-            Side::Sketched { fd } => SideState::Sketch(SketchState {
-                basis: fd.basis().clone(),
-                eigvals: fd.eigenvalues().to_vec(),
-                escaped_mass: fd.escaped_mass(),
-                last_rho: fd.last_escaped(),
-                steps: fd.steps() as u64,
-            }),
+            Side::Exact { c, root, corr } => SideState::Exact {
+                c: c.clone(),
+                root: root.clone(),
+                corr: corr.as_ref().map(|cr| cr.snapshot()),
+            },
+            Side::Sketched { fd, corr } => SideState::Sketch {
+                sketch: SketchState {
+                    basis: fd.basis().clone(),
+                    eigvals: fd.eigenvalues().to_vec(),
+                    escaped_mass: fd.escaped_mass(),
+                    last_rho: fd.last_escaped(),
+                    steps: fd.steps() as u64,
+                },
+                corr: corr.as_ref().map(|cr| cr.snapshot()),
+            },
         }
     }
 
     /// Restore a [`Side::snapshot`]; the side mode (exact vs sketched)
-    /// and every dimension must match this side's construction.
-    pub(crate) fn restore(&mut self, state: SideState) -> anyhow::Result<()> {
+    /// and every dimension must match this side's construction. Corrector
+    /// state is refused unless the owning unit runs with ekfac on.
+    pub(crate) fn restore(&mut self, state: SideState, ekfac: bool) -> anyhow::Result<()> {
         match (self, state) {
-            (Side::Exact { c, root }, SideState::Exact { c: nc, root: nroot }) => {
+            (
+                Side::Exact { c, root, corr },
+                SideState::Exact { c: nc, root: nroot, corr: ncorr },
+            ) => {
                 let d = c.rows();
                 ensure_shape("exact side factor", &nc, d, d)?;
                 ensure_opt_shape("exact side root", &nroot, d, d)?;
+                anyhow::ensure!(
+                    ekfac || ncorr.is_none(),
+                    "state restore: ekfac corrector state for a side constructed without ekfac"
+                );
+                let ncorr = match ncorr {
+                    Some(cs) => Some(EigCorr::restore("exact side corrector", cs, d)?),
+                    None => None,
+                };
                 *c = nc;
                 *root = nroot;
+                *corr = ncorr;
             }
-            (Side::Sketched { fd }, SideState::Sketch(s)) => {
+            (Side::Sketched { fd, corr }, SideState::Sketch { sketch: s, corr: ncorr }) => {
                 anyhow::ensure!(
                     s.basis.rows() == fd.dim() && s.basis.cols() == fd.rank(),
                     "state restore: sketch basis {}x{} != expected {}x{}",
@@ -382,6 +809,14 @@ impl Side {
                     fd.dim(),
                     fd.rank()
                 );
+                anyhow::ensure!(
+                    ekfac || ncorr.is_none(),
+                    "state restore: ekfac corrector state for a side constructed without ekfac"
+                );
+                let ncorr = match ncorr {
+                    Some(cs) => Some(SketchCorr::restore(cs, fd.rank())?),
+                    None => None,
+                };
                 *fd = FdSketch::from_parts(
                     s.basis,
                     s.eigvals,
@@ -390,8 +825,9 @@ impl Side {
                     s.last_rho,
                     s.steps as usize,
                 )?;
+                *corr = ncorr;
             }
-            (Side::Exact { .. }, SideState::Sketch(_)) => {
+            (Side::Exact { .. }, SideState::Sketch { .. }) => {
                 anyhow::bail!("state restore: sketch payload for an exact side")
             }
             (Side::Sketched { .. }, SideState::Exact { .. }) => {
@@ -409,6 +845,7 @@ pub struct SketchUnit {
     beta2: f64,
     eps: f64,
     one_sided: bool,
+    ekfac: bool,
 }
 
 impl SketchUnit {
@@ -420,7 +857,15 @@ impl SketchUnit {
             beta2,
             eps,
             one_sided,
+            ekfac: false,
         }
+    }
+
+    /// Enable the EKFAC-style inter-refresh corrector (builder style;
+    /// resolved once at engine construction, never toggled mid-run).
+    pub fn ekfac(mut self, on: bool) -> Self {
+        self.ekfac = on;
+        self
     }
 
     fn left_p(&self) -> f64 {
@@ -439,32 +884,42 @@ impl SketchUnit {
 
 impl Preconditioner for SketchUnit {
     fn ingest(&mut self, g: &Matrix) {
-        self.left.update(g, self.beta2);
+        self.left.update(g, self.beta2, self.ekfac);
         if !self.one_sided {
-            self.right.update(&g.t(), self.beta2);
+            self.right.update(&g.t(), self.beta2, self.ekfac);
         }
     }
 
     fn refresh(&mut self) -> bool {
-        let mut did = self.left.refresh_root(self.eps, self.left_p());
+        let mut did = self.left.refresh_root(self.eps, self.left_p(), self.ekfac);
         if !self.one_sided {
-            did |= self.right.refresh_root(self.eps, 4.0);
+            did |= self.right.refresh_root(self.eps, 4.0, self.ekfac);
         }
         did
     }
 
     fn ready(&self) -> bool {
-        self.left.has_root() && (self.one_sided || self.right.has_root())
+        self.left.has_root(self.ekfac) && (self.one_sided || self.right.has_root(self.ekfac))
+    }
+
+    fn track(&mut self, g: &Matrix) {
+        if !self.ekfac {
+            return;
+        }
+        self.left.track_left(g, self.beta2);
+        if !self.one_sided {
+            self.right.track_right(g, self.beta2);
+        }
     }
 
     fn apply(&self, g: &Matrix) -> Matrix {
         // L̃^{-1/4} G R̃^{-1/4} in factored form, O(mnℓ)
         // (one-sided: L̃^{-1/2} G).
-        let half = self.left.apply_left(g, self.eps, self.left_p());
+        let half = self.left.apply_left(g, self.eps, self.left_p(), self.ekfac);
         if self.one_sided {
             half
         } else {
-            self.right.apply_right(&half, self.eps)
+            self.right.apply_right(&half, self.eps, self.ekfac)
         }
     }
 
@@ -478,10 +933,10 @@ impl Preconditioner for SketchUnit {
 
     fn sketches(&self) -> Vec<&FdSketch> {
         let mut out = vec![];
-        if let Side::Sketched { fd } = &self.left {
+        if let Side::Sketched { fd, .. } = &self.left {
             out.push(fd);
         }
-        if let Side::Sketched { fd } = &self.right {
+        if let Side::Sketched { fd, .. } = &self.right {
             out.push(fd);
         }
         out
@@ -495,8 +950,8 @@ impl Preconditioner for SketchUnit {
         let PrecondState::Sketch { left, right } = state else {
             anyhow::bail!("state restore: non-sketch payload for a sketch unit");
         };
-        self.left.restore(left)?;
-        self.right.restore(right)
+        self.left.restore(left, self.ekfac)?;
+        self.right.restore(right, self.ekfac)
     }
 }
 
@@ -712,6 +1167,13 @@ pub(crate) fn drive_block(st: &mut BlockState, ctx: &StepCtx) -> bool {
     if ctx.preconditioning && (!unit.ready() || ctx.refresh_due) {
         refreshed = unit.refresh();
     }
+    // EKFAC correction folds this step's gradient moments into the stale
+    // eigenbasis (no-op for non-ekfac units). Placed after any refresh
+    // and before the apply so the corrector mutation order is identical
+    // under the synchronous and RefreshAhead-overlapped schedules.
+    if ctx.preconditioning {
+        unit.track(g);
+    }
     let update = if ctx.preconditioning {
         let dir = unit.apply(g);
         if ctx.graft == GraftType::None {
@@ -881,12 +1343,32 @@ mod tests {
         assert!(unit.restore_payload(flipped.state_payload()).is_err());
         // Adversarial sketch rank: basis with the wrong column count.
         let PrecondState::Sketch { left, right } = unit.state_payload() else { unreachable!() };
-        let SideState::Sketch(mut s) = left else { unreachable!() };
+        let SideState::Sketch { sketch: mut s, corr } = left else { unreachable!() };
         s.basis = Matrix::zeros(10, 7);
         s.eigvals = vec![0.0; 7];
         assert!(unit
-            .restore_payload(PrecondState::Sketch { left: SideState::Sketch(s), right })
+            .restore_payload(PrecondState::Sketch {
+                left: SideState::Sketch { sketch: s, corr },
+                right,
+            })
             .is_err());
+        // A non-ekfac unit refuses ekfac corrector state...
+        let mut plain = KroneckerUnit::new((4, 4), 0.999, 1e-9, false);
+        let mut ek = KroneckerUnit::new((4, 4), 0.999, 1e-9, false).ekfac(true);
+        ek.ingest(&Matrix::randn(4, 4, &mut rng));
+        ek.refresh();
+        assert!(plain.restore_payload(ek.state_payload()).is_err());
+        // ...an ekfac unit accepts a corrector-free (pre-ekfac) payload,
+        // degrading to a refresh on its next preconditioned step...
+        let mut ek2 = KroneckerUnit::new((4, 4), 0.999, 1e-9, false).ekfac(true);
+        assert!(ek2.restore_payload(plain.state_payload()).is_ok());
+        assert!(!ek2.ready());
+        // ...and the sketched family enforces the same refusal.
+        let mut plain_sk = SketchUnit::new((10, 3), 4, 0.999, 1e-9, false);
+        let mut ek_sk = SketchUnit::new((10, 3), 4, 0.999, 1e-9, false).ekfac(true);
+        ek_sk.ingest(&Matrix::randn(10, 3, &mut rng));
+        ek_sk.refresh();
+        assert!(plain_sk.restore_payload(ek_sk.state_payload()).is_err());
         // Graft companion shape mismatch surfaces through BlockState.
         let mk = || {
             BlockState::new(
@@ -903,6 +1385,95 @@ mod tests {
         let mut snap = mk().snapshot();
         snap.mu = Matrix::zeros(9, 1);
         assert!(blk.restore(snap).is_err());
+    }
+
+    #[test]
+    fn kronecker_ekfac_state_roundtrips_bitwise() {
+        assert_snapshot_restore_is_bitwise(
+            || {
+                BlockState::new(
+                    Box::new(KroneckerUnit::new((6, 4), 0.999, 1e-9, false).ekfac(true)),
+                    GraftType::Rmsprop,
+                    (6, 4),
+                    0.999,
+                )
+            },
+            (6, 4),
+        );
+    }
+
+    #[test]
+    fn sketch_ekfac_state_roundtrips_bitwise() {
+        // 10×3 at rank 4: left sketched, right exact — both corrector
+        // kinds cross the snapshot.
+        assert_snapshot_restore_is_bitwise(
+            || {
+                BlockState::new(
+                    Box::new(SketchUnit::new((10, 3), 4, 0.999, 1e-9, false).ekfac(true)),
+                    GraftType::Rmsprop,
+                    (10, 3),
+                    0.999,
+                )
+            },
+            (10, 3),
+        );
+    }
+
+    #[test]
+    fn ekfac_apply_matches_frozen_root_at_refresh() {
+        // Right after a refresh the corrected diagonal equals the factor's
+        // eigenvalues, so the EKFAC apply must reproduce the frozen-root
+        // direction (numerically: different multiply association order).
+        let mut rng = Pcg64::new(207);
+        let g = Matrix::randn(6, 4, &mut rng);
+        let mut frozen = KroneckerUnit::new((6, 4), 0.999, 1e-6, false);
+        let mut corrected = KroneckerUnit::new((6, 4), 0.999, 1e-6, false).ekfac(true);
+        frozen.ingest(&g);
+        corrected.ingest(&g);
+        frozen.refresh();
+        corrected.refresh();
+        assert!(corrected.ready());
+        let a = frozen.apply(&g);
+        let b = corrected.apply(&g);
+        assert!(a.max_diff(&b) < 1e-8, "diff {}", a.max_diff(&b));
+    }
+
+    #[test]
+    fn sketch_ekfac_apply_matches_factored_apply_at_reseed() {
+        // A sketched side reseeds its corrector at every FD shrink, so
+        // immediately after ingest+refresh the corrected apply must match
+        // the legacy factored apply (eigenvalues + escaped-mass shift).
+        let mut rng = Pcg64::new(209);
+        let mut legacy = SketchUnit::new((12, 3), 4, 0.999, 1e-6, false);
+        let mut ek = SketchUnit::new((12, 3), 4, 0.999, 1e-6, false).ekfac(true);
+        for _ in 0..3 {
+            let g = Matrix::randn(12, 3, &mut rng);
+            legacy.ingest(&g);
+            ek.ingest(&g);
+        }
+        legacy.refresh();
+        ek.refresh();
+        let g = Matrix::randn(12, 3, &mut rng);
+        let a = legacy.apply(&g);
+        let b = ek.apply(&g);
+        assert!(a.max_diff(&b) < 1e-8, "diff {}", a.max_diff(&b));
+    }
+
+    #[test]
+    fn ekfac_tracks_curvature_between_refreshes() {
+        // After tracking a new gradient with no refresh in between, the
+        // corrected apply must differ from the frozen one — the corrector
+        // actually folds fresh curvature into the stale basis.
+        let mut rng = Pcg64::new(208);
+        let mut unit = KroneckerUnit::new((6, 4), 0.999, 1e-6, false).ekfac(true);
+        let g1 = Matrix::randn(6, 4, &mut rng);
+        unit.ingest(&g1);
+        unit.refresh();
+        let before = unit.apply(&g1);
+        let g2 = Matrix::randn(6, 4, &mut rng);
+        unit.track(&g2);
+        let after = unit.apply(&g1);
+        assert!(before.max_diff(&after) > 0.0);
     }
 
     #[test]

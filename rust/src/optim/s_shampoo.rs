@@ -57,7 +57,8 @@ impl SShampoo {
                     cfg.base.beta2,
                     cfg.base.eps,
                     cfg.base.one_sided,
-                ),
+                )
+                .ekfac(cfg.base.ekfac),
                 graft: Graft::new(cfg.base.graft, (m, n), cfg.base.beta2),
                 mu: Matrix::zeros(m, n),
             })
@@ -99,6 +100,12 @@ impl Optimizer for SShampoo {
             // straight from the factored form).
             if preconditioning && !st.unit.ready() {
                 st.unit.refresh();
+            }
+            // EKFAC correction in the stale sketch basis (no-op with
+            // ekfac off) — same position relative to refresh/apply as
+            // the engine's drive_block.
+            if preconditioning {
+                st.unit.track(&g);
             }
             let graft_step = st.graft.step(&g);
             let update = if preconditioning {

@@ -43,6 +43,13 @@ pub struct ShampooConfig {
     /// halves memory for square tensors and avoids the large-side factor
     /// for rectangular ones.
     pub one_sided: bool,
+    /// EKFAC-style inter-refresh corrections (George et al.): between
+    /// eigendecompositions, fold each step's gradient second moments into
+    /// a corrected diagonal in the stale eigenbasis and apply with those
+    /// scales instead of the frozen eigenvalues — lets `precond_interval`
+    /// (and the engine's refresh interval) stretch 4 → 32+ without
+    /// quality loss. Resolved once at construction, never toggled mid-run.
+    pub ekfac: bool,
 }
 
 impl Default for ShampooConfig {
@@ -59,6 +66,7 @@ impl Default for ShampooConfig {
             precond_interval: 1,
             graft: GraftType::RmspropNormalized,
             one_sided: false,
+            ekfac: false,
         }
     }
 }
@@ -83,7 +91,8 @@ impl Shampoo {
         let states = shapes
             .iter()
             .map(|&(m, n)| ShampooTensorState {
-                unit: KroneckerUnit::new((m, n), cfg.beta2, cfg.eps, cfg.one_sided),
+                unit: KroneckerUnit::new((m, n), cfg.beta2, cfg.eps, cfg.one_sided)
+                    .ekfac(cfg.ekfac),
                 graft: Graft::new(cfg.graft, (m, n), cfg.beta2),
                 mu: Matrix::zeros(m, n),
             })
@@ -115,6 +124,12 @@ impl Optimizer for Shampoo {
             // AdaGrad exponent on the single factor).
             if preconditioning && (!st.unit.ready() || t % cfg.precond_interval == 0) {
                 st.unit.refresh();
+            }
+            // EKFAC correction in the stale basis (no-op with ekfac off) —
+            // same position relative to refresh/apply as the engine's
+            // drive_block, so fused ≡ engine holds with ekfac on too.
+            if preconditioning {
+                st.unit.track(&g);
             }
             let graft_step = st.graft.step(&g);
             let update = if preconditioning {

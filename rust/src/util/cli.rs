@@ -244,6 +244,22 @@ mod tests {
     }
 
     #[test]
+    fn ekfac_flag_parses() {
+        // The exact grammar the EKFAC knob relies on: bare switch,
+        // explicit two-token boolean (the spelling that overrides a
+        // config-file `ekfac = true`), and `=` form.
+        let a = parse(&["train", "--ekfac"]);
+        assert!(a.get_bool("ekfac", false));
+        let b = parse(&["train", "--ekfac", "false"]);
+        assert!(!b.get_bool("ekfac", true));
+        let c = parse(&["train", "--ekfac=true", "--steps", "50"]);
+        assert!(c.get_bool("ekfac", false));
+        assert_eq!(c.get_usize("steps", 0), 50);
+        let d = parse(&["train"]);
+        assert!(!d.get_bool("ekfac", false)); // absent means default
+    }
+
+    #[test]
     fn bool_flags() {
         let a = parse(&["x", "--stagger-refresh", "--fresh", "false", "--stale=true"]);
         assert!(a.get_bool("stagger-refresh", false));

@@ -16,7 +16,8 @@
 //!   `stagger_refresh` (spread refreshes across blocks),
 //!   `overlap_refresh` (pipeline next-step refreshes behind gradient
 //!   computation), `pool_threads` (pre-size the persistent worker
-//!   pool; 0 = grow on demand); see
+//!   pool; 0 = grow on demand), `ekfac` (EKFAC-style inter-refresh
+//!   corrections in the stale eigenbasis); see
 //!   [`crate::optim::EngineConfig::resolve`]
 //! - `[shard]` — cross-process engine sharding: `count` (worker
 //!   processes, 0 = in-process), `transport` (`"tcp"` or `"unix"`),
@@ -168,6 +169,25 @@ impl Config {
             .cloned()
             .collect()
     }
+
+    /// Refuse keys the `[section]` consumer does not understand. A
+    /// typo'd knob — `overlap_refres` for `overlap_refresh` — must be
+    /// a named error, never a silent fall-through to the default, so
+    /// every section resolver calls this before reading its keys.
+    pub fn ensure_known_keys(&self, section: &str, known: &[&str]) -> anyhow::Result<()> {
+        for key in self.section_keys(section) {
+            let bare = key
+                .strip_prefix(section)
+                .and_then(|k| k.strip_prefix('.'))
+                .unwrap_or(&key);
+            anyhow::ensure!(
+                known.contains(&bare),
+                "unknown [{section}] config key {key:?} (known keys: {})",
+                known.join(", ")
+            );
+        }
+        Ok(())
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -298,6 +318,23 @@ mod tests {
         assert_eq!(empty.str_or("shard.launch", ""), "");
         assert_eq!(empty.usize_or("shard.heartbeat_ms", 500), 500);
         assert_eq!(empty.str_or("shard.journal", ""), "");
+    }
+
+    #[test]
+    fn known_key_validation_names_the_offender() {
+        let cfg = Config::parse("[engine]\noverlap_refres = true\n[shard]\ncount = 2").unwrap();
+        let err = cfg
+            .ensure_known_keys("engine", &["threads", "overlap_refresh"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overlap_refres"), "error must name the bad key: {err}");
+        assert!(err.contains("overlap_refresh"), "error must list known keys: {err}");
+        assert!(err.contains("[engine]"), "error must name the section: {err}");
+        // Keys in other sections never trip a section's validation.
+        cfg.ensure_known_keys("shard", &["count"]).unwrap();
+        // A valid section passes, and absent sections are trivially fine.
+        cfg.ensure_known_keys("engine", &["overlap_refres", "threads"]).unwrap();
+        cfg.ensure_known_keys("train", &["steps"]).unwrap();
     }
 
     #[test]

@@ -171,6 +171,178 @@ fn blocked_engine_adam_equals_fused_adam() {
 }
 
 #[test]
+fn ekfac_parallel_shampoo_engine_bitwise_matches_serial() {
+    // The EKFAC corrector mutates per-unit state every preconditioned
+    // step; thread count must still never change the numbers.
+    let shapes = [(10, 7), (6, 6), (9, 1)];
+    let base = ShampooConfig { ekfac: true, ..base_cfg() };
+    assert_parallel_matches_serial(
+        &shapes,
+        |ecfg| PrecondEngine::shampoo(&shapes, base.clone(), EngineConfig { ekfac: true, ..ecfg }),
+        4,
+        15,
+        316,
+    );
+}
+
+#[test]
+fn ekfac_parallel_sketched_engine_bitwise_matches_serial() {
+    let shapes = [(12, 10), (8, 3)];
+    let base = ShampooConfig { ekfac: true, ..base_cfg() };
+    assert_parallel_matches_serial(
+        &shapes,
+        |ecfg| {
+            PrecondEngine::sketched(&shapes, 3, base.clone(), EngineConfig { ekfac: true, ..ecfg })
+        },
+        5,
+        15,
+        317,
+    );
+}
+
+#[test]
+fn ekfac_engine_reproduces_fused_shampoo_bitwise() {
+    // The corrector's track() sits between refresh and apply in both
+    // the fused step and the engine's drive_block; under the matched
+    // cadence (stagger off, refresh_interval = precond_interval) the
+    // two paths must stay bitwise identical with ekfac on.
+    let shapes = [(7, 5), (4, 4), (6, 1)];
+    let base = ShampooConfig {
+        stat_interval: 2,
+        precond_interval: 3,
+        start_preconditioning_step: 3,
+        graft: GraftType::RmspropNormalized,
+        ekfac: true,
+        ..base_cfg()
+    };
+    let ecfg = EngineConfig {
+        threads: 3,
+        block_size: 0,
+        refresh_interval: base.precond_interval,
+        stagger: false,
+        ekfac: true,
+        ..Default::default()
+    };
+    let mut reference = Shampoo::new(&shapes, base.clone());
+    let mut engine = PrecondEngine::shampoo(&shapes, base, ecfg);
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(318);
+    for step in 0..20 {
+        let grads = random_grads(&shapes, &mut rng);
+        reference.step(&mut p1, &grads);
+        engine.step(&mut p2, &grads);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(
+                a.max_diff(b),
+                0.0,
+                "ekfac engine diverged from fused Shampoo at step {step}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ekfac_overlap_refresh_bitwise_matches_sync() {
+    // RefreshAhead prefetches eigendecompositions, never corrector
+    // mutations (the due-set excludes stat steps), so overlap must stay
+    // bitwise identical to the synchronous schedule with ekfac on —
+    // for exact-Kronecker and FD-sketched units both.
+    let shapes = [(10, 8), (6, 6), (7, 1)];
+    let base = ShampooConfig { ekfac: true, ..base_cfg() };
+    for sketched in [false, true] {
+        let make = |overlap: bool| {
+            let ecfg = EngineConfig {
+                threads: 3,
+                block_size: 4,
+                refresh_interval: 4,
+                stagger: true,
+                overlap,
+                ekfac: true,
+                ..Default::default()
+            };
+            if sketched {
+                PrecondEngine::sketched(&shapes, 3, base.clone(), ecfg)
+            } else {
+                PrecondEngine::shampoo(&shapes, base.clone(), ecfg)
+            }
+        };
+        let mut sync = make(false);
+        let mut over = make(true);
+        let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+        let mut p2 = p1.clone();
+        let mut rng = Pcg64::new(319);
+        for step in 0..18 {
+            let grads = random_grads(&shapes, &mut rng);
+            sync.step(&mut p1, &grads);
+            over.step(&mut p2, &grads);
+            for (a, b) in p1.iter().zip(&p2) {
+                assert_eq!(
+                    a.max_diff(b),
+                    0.0,
+                    "overlap diverged from sync at step {step} (sketched={sketched})"
+                );
+            }
+        }
+        assert!(over.refreshes() > 0);
+    }
+}
+
+#[test]
+fn ekfac_state_snapshot_restore_is_bitwise() {
+    // Corrector diagonals/tails ride the typed snapshot payloads: a
+    // fresh engine restored from a mid-run snapshot must continue
+    // bitwise identically to the uninterrupted one — the invariant the
+    // checkpoint-v2 and journal-resume paths both lean on.
+    let shapes = [(9, 6), (5, 5), (8, 1)];
+    let base = ShampooConfig { ekfac: true, ..base_cfg() };
+    for sketched in [false, true] {
+        let make = || {
+            let ecfg = EngineConfig {
+                threads: 2,
+                block_size: 4,
+                refresh_interval: 3,
+                stagger: true,
+                ekfac: true,
+                ..Default::default()
+            };
+            if sketched {
+                PrecondEngine::sketched(&shapes, 3, base.clone(), ecfg)
+            } else {
+                PrecondEngine::shampoo(&shapes, base.clone(), ecfg)
+            }
+        };
+        let mut original = make();
+        let mut params: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+        let mut rng = Pcg64::new(320);
+        for _ in 0..9 {
+            let grads = random_grads(&shapes, &mut rng);
+            original.step(&mut params, &grads);
+        }
+        let snap = original
+            .state_payloads()
+            .unwrap()
+            .expect("engine must expose typed state");
+        let mut restored = make();
+        restored.restore_payloads(9, snap).unwrap();
+        let mut p1 = params.clone();
+        let mut p2 = params;
+        for step in 0..9 {
+            let grads = random_grads(&shapes, &mut rng);
+            original.step(&mut p1, &grads);
+            restored.step(&mut p2, &grads);
+            for (a, b) in p1.iter().zip(&p2) {
+                assert_eq!(
+                    a.max_diff(b),
+                    0.0,
+                    "restored engine diverged at step {step} (sketched={sketched})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn fd_invariants_survive_concurrent_block_updates() {
     // Property test over random shapes/seeds: after parallel stepping, every
     // per-block FD sketch still satisfies the Alg. 1 invariants — the ℓ-th

@@ -62,6 +62,27 @@ fn fig2_single_task_ordering() {
 }
 
 #[test]
+fn fig2_engine_cell_with_ekfac() {
+    if !have_artifacts() {
+        return;
+    }
+    // An engine-* cell runs the bitwise engine ≡ fused pre-flight
+    // before recording; with --ekfac the corrector is live on a
+    // stretched refresh cadence.
+    let report = sketchy::experiments::fig2::run(&args(&[
+        ("task", "graph"),
+        ("steps", "40"),
+        ("workers", "1"),
+        ("optimizer", "engine-s-shampoo"),
+        ("ekfac", "true"),
+        ("refresh-interval", "8"),
+    ]))
+    .unwrap();
+    assert!(report.contains("engine-s-shampoo"), "{report}");
+    assert!(report.contains("ekfac"), "{report}");
+}
+
+#[test]
 fn fig3_spectra_collected() {
     if !have_artifacts() {
         return;

@@ -37,6 +37,7 @@ fn mk_launch(shards: usize, transport: ShardTransport) -> ShardLaunch {
         proto: PROTO_VERSION,
         compress: false,
         launch: None,
+        membership: MembershipConfig::default(),
     }
 }
 
@@ -319,6 +320,7 @@ fn legacy_proto_workers_degrade_overlap_to_sync_with_identical_numbers() {
         proto: 1,
         compress: true, // inert below v3 — part of the degrade matrix
         launch: None,
+        membership: MembershipConfig::default(),
     };
     let mut local = local_engine(
         &shapes,
@@ -712,6 +714,7 @@ fn launch_template_spawns_real_workers_and_stays_bitwise() {
         proto: PROTO_VERSION,
         compress: true,
         launch: Some("env SKETCHY_LAUNCH_TEMPLATE_TEST={shard} {program} {worker_cmd}".into()),
+        membership: MembershipConfig::default(),
     };
     let mut local = local_engine(&shapes, UnitKind::Shampoo, base_cfg(), ecfg);
     let mut sharded = sharded_engine(&shapes, UnitKind::Shampoo, base_cfg(), ecfg, &launch)
@@ -819,6 +822,7 @@ fn spawn_failure_is_surfaced() {
         proto: PROTO_VERSION,
         compress: true,
         launch: None,
+        membership: MembershipConfig::default(),
     };
     let err = match ShardExecutor::launch_with(
         &bogus,
@@ -865,6 +869,7 @@ fn v4_checkpoint_resume_through_real_workers_is_bitwise() {
         proto: PROTO_VERSION,
         compress: true,
         launch: None,
+        membership: MembershipConfig::default(),
     };
     let mut local = local_engine(&shapes, kind, base_cfg(), ecfg);
     let mut sharded = sharded_engine(&shapes, kind, base_cfg(), ecfg, &launch)
@@ -930,6 +935,7 @@ fn v4_driver_with_v3_workers_steps_bitwise_but_refuses_state_rpcs() {
         proto: 3,
         compress: true,
         launch: None,
+        membership: MembershipConfig::default(),
     };
     let mut local = local_engine(&shapes, kind, base_cfg(), ecfg);
     let mut sharded = sharded_engine(&shapes, kind, base_cfg(), ecfg, &launch)
@@ -1310,6 +1316,135 @@ fn shards_are_capped_at_block_count() {
 }
 
 // ---------------------------------------------------------------------------
+// Wire protocol v7: EKFAC inter-refresh corrections across the fleet —
+// worker-local corrector mutations, typed corrector payloads over
+// StateSnap/StateRestore, and the pre-v7 refusal.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ekfac_sharded_matches_local_bitwise() {
+    // 2- and 4-shard fleets with the corrector live, exact-Kronecker
+    // and FD-sketched: per-step corrector mutations are worker-local
+    // and deterministic, so shard count must never change the numbers —
+    // and refresh accounting must survive the wire too.
+    let shapes = [(10usize, 7), (6, 6), (9, 1)];
+    let base = ShampooConfig { ekfac: true, ..base_cfg() };
+    for (kind, shards, seed) in [
+        (UnitKind::Shampoo, 2usize, 440u64),
+        (UnitKind::Sketched { rank: 3 }, 2, 441),
+        (UnitKind::Shampoo, 4, 442),
+    ] {
+        let ecfg = EngineConfig {
+            threads: 2,
+            block_size: 4,
+            refresh_interval: 4,
+            stagger: true,
+            ekfac: true,
+            ..Default::default()
+        };
+        let mut launch = mk_launch(shards, ShardTransport::Tcp);
+        launch.compress = true;
+        let mut local = local_engine(&shapes, kind, base.clone(), ecfg);
+        let mut sharded = sharded_engine(&shapes, kind, base.clone(), ecfg, &launch)
+            .expect("launch ekfac sharded engine");
+        let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+        let mut p2 = p1.clone();
+        let mut rng = Pcg64::new(seed);
+        for step in 0..12 {
+            let grads = random_grads(&shapes, &mut rng);
+            local.step(&mut p1, &grads);
+            sharded.try_step(&mut p2, &grads).expect("ekfac sharded step");
+            for (a, b) in p1.iter().zip(&p2) {
+                assert_eq!(
+                    a.max_diff(b),
+                    0.0,
+                    "ekfac {shards}-shard run diverged from local at step {step}"
+                );
+            }
+        }
+        assert_eq!(local.refreshes(), sharded.refreshes());
+    }
+}
+
+#[test]
+fn ekfac_state_snapshot_restores_through_fresh_fleet_bitwise() {
+    // Corrector diagonals and escaped-mass tails ride the v7 typed
+    // state payloads: snapshot a stepped ekfac fleet over StateSnap,
+    // kill it, restore a freshly launched fleet over StateRestore, and
+    // continue — lockstep with the never-interrupted local reference.
+    let shapes = [(9usize, 6), (5, 4)];
+    let kind = UnitKind::Sketched { rank: 3 };
+    let base = ShampooConfig { ekfac: true, ..base_cfg() };
+    let ecfg = EngineConfig {
+        threads: 2,
+        block_size: 4,
+        refresh_interval: 3,
+        stagger: true,
+        ekfac: true,
+        ..Default::default()
+    };
+    let mut launch = mk_launch(2, ShardTransport::Tcp);
+    launch.compress = true;
+    let mut local = local_engine(&shapes, kind, base.clone(), ecfg);
+    let mut sharded = sharded_engine(&shapes, kind, base.clone(), ecfg, &launch)
+        .expect("launch ekfac sharded engine");
+    let mut p1: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+    let mut p2 = p1.clone();
+    let mut rng = Pcg64::new(443);
+    for step in 0..5 {
+        let grads = random_grads(&shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        sharded.try_step(&mut p2, &grads).expect("ekfac sharded step");
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.max_diff(b), 0.0, "ekfac sharded run diverged at step {step}");
+        }
+    }
+    let entries = sharded
+        .state_payloads()
+        .expect("StateSnap RPC")
+        .expect("v7 engines expose typed block state");
+    drop(sharded); // the worker fleet dies with its driver
+    let mut resumed = sharded_engine(&shapes, kind, base.clone(), ecfg, &launch)
+        .expect("relaunch ekfac sharded engine");
+    resumed.restore_payloads(5, entries).expect("restore corrector state over StateRestore");
+    let mut p3 = p2;
+    for step in 5..10 {
+        let grads = random_grads(&shapes, &mut rng);
+        local.step(&mut p1, &grads);
+        resumed.try_step(&mut p3, &grads).expect("resumed ekfac sharded step");
+        for (a, b) in p1.iter().zip(&p3) {
+            assert_eq!(a.max_diff(b), 0.0, "resumed ekfac run diverged at step {step}");
+        }
+    }
+}
+
+#[test]
+fn ekfac_fleet_refuses_pre_v7_workers() {
+    // The corrector cannot ship over pre-v7 links (no InitMsg field, no
+    // corrector payloads), so assembling an ekfac fleet with any worker
+    // pinned below v7 must be a named construction error — silently
+    // dropping the correction would change the numbers mid-run.
+    let shapes = [(6usize, 6)];
+    let base = ShampooConfig { ekfac: true, ..base_cfg() };
+    let ecfg = EngineConfig {
+        threads: 1,
+        block_size: 4,
+        refresh_interval: 3,
+        stagger: true,
+        ekfac: true,
+        ..Default::default()
+    };
+    let mut launch = mk_launch(2, ShardTransport::Tcp);
+    launch.proto = 6;
+    let err = match sharded_engine(&shapes, UnitKind::Shampoo, base, ecfg, &launch) {
+        Ok(_) => panic!("an ekfac fleet over v6 links must refuse to assemble"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("v7"), "refusal must name the protocol floor: {err}");
+    assert!(err.contains("ekfac"), "refusal must name the knob: {err}");
+}
+
+// ---------------------------------------------------------------------------
 // Wire protocol v6: the durable driver — write-ahead journal crash-resume
 // and heartbeat supervision of hung workers. Every test here is prefixed
 // `driver_` (the dedicated CI leg filters on it; the base legs skip it).
@@ -1324,8 +1459,13 @@ fn wal_path(tag: &str) -> String {
 }
 
 /// Elastic 2-seat in-proc fleet journaling to `path` (no spares: the
-/// durable journal alone makes the membership elastic).
-fn journaled_in_proc_engine(overlap: bool, path: &str) -> anyhow::Result<PrecondEngine> {
+/// durable journal alone makes the membership elastic). `ekfac` turns
+/// the inter-refresh corrector on fleet-wide.
+fn journaled_in_proc_engine(
+    overlap: bool,
+    ekfac: bool,
+    path: &str,
+) -> anyhow::Result<PrecondEngine> {
     let transports: Vec<Arc<FaultInjectingTransport>> = (0..2)
         .map(|_| {
             FaultInjectingTransport::with_config(
@@ -1341,7 +1481,12 @@ fn journaled_in_proc_engine(overlap: bool, path: &str) -> anyhow::Result<Precond
             failover_budget: 3,
             ..Default::default()
         })
-        .build(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(overlap))
+        .build(
+            &CHAOS_SHAPES,
+            UnitKind::Shampoo,
+            ShampooConfig { ekfac, ..overlap_base() },
+            EngineConfig { ekfac, ..chaos_ecfg(overlap) },
+        )
 }
 
 /// The chaos gradient stream as a precomputed list, so a resumed run
@@ -1364,6 +1509,7 @@ fn chaos_stream() -> Vec<Vec<Matrix>> {
 /// count (the accounting survives both the wire and the crash).
 fn driver_crash_resume_run(
     crash_at: usize,
+    ekfac: bool,
     path: &str,
     mk_engine: &dyn Fn(Option<Vec<String>>) -> anyhow::Result<PrecondEngine>,
 ) -> anyhow::Result<(Vec<Matrix>, Vec<String>)> {
@@ -1394,7 +1540,12 @@ fn driver_crash_resume_run(
         jc.steps.len()
     );
     let mut eng = mk_engine(Some(jc.addrs.clone()))?;
-    let mut twin = local_engine(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(false));
+    let mut twin = local_engine(
+        &CHAOS_SHAPES,
+        UnitKind::Shampoo,
+        ShampooConfig { ekfac, ..overlap_base() },
+        EngineConfig { ekfac, ..chaos_ecfg(false) },
+    );
     let mut params = jc.params.clone();
     let mut twin_params = jc.params.clone();
     match jc.snaps.clone() {
@@ -1443,8 +1594,8 @@ fn driver_crash_resume_from_journal_matches_reference_bitwise() {
         for crash_at in 1..=CHAOS_STEPS {
             let what = format!("pipelined={pipelined} crash after step {crash_at}");
             let path = wal_path(&format!("inproc_{}_{crash_at}", pipelined as u8));
-            let mk = |_: Option<Vec<String>>| journaled_in_proc_engine(pipelined, &path);
-            let (params, addrs) = driver_crash_resume_run(crash_at, &path, &mk)
+            let mk = |_: Option<Vec<String>>| journaled_in_proc_engine(pipelined, false, &path);
+            let (params, addrs) = driver_crash_resume_run(crash_at, false, &path, &mk)
                 .unwrap_or_else(|e| panic!("{what}: {e:#}"));
             for (i, (a, b)) in want.0.iter().zip(&params).enumerate() {
                 assert_eq!(a.max_diff(b), 0.0, "{what}: tensor {i} diverged from reference");
@@ -1453,6 +1604,52 @@ fn driver_crash_resume_from_journal_matches_reference_bitwise() {
                 addrs.iter().all(String::is_empty),
                 "{what}: in-proc seats must journal as non-re-adoptable: {addrs:?}"
             );
+        }
+    }
+}
+
+#[test]
+fn driver_crash_resume_with_ekfac_matches_reference_bitwise() {
+    // Corrector state crosses the crash: the journal's sync-point
+    // snapshot carries the v7 corrector payloads and the replay
+    // re-runs the per-step corrector mutations deterministically, so a
+    // driver killed mid-run with --ekfac on (sync and RefreshAhead)
+    // must land bitwise on the uninterrupted ekfac reference.
+    // (`chaos_reference` is the non-ekfac baseline, so the reference
+    // is computed inline here with the corrector live.)
+    let want = {
+        let mut eng = local_engine(
+            &CHAOS_SHAPES,
+            UnitKind::Shampoo,
+            ShampooConfig { ekfac: true, ..overlap_base() },
+            EngineConfig { ekfac: true, ..chaos_ecfg(false) },
+        );
+        let mut params: Vec<Matrix> =
+            CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+        let mut rng = Pcg64::new(423);
+        for _ in 0..CHAOS_STEPS {
+            let grads = random_grads(&CHAOS_SHAPES, &mut rng);
+            eng.step(&mut params, &grads);
+        }
+        (params, eng.refreshes())
+    };
+    assert!(want.1 > 0, "test must exercise refreshes");
+    // The corrected run must actually differ from the frozen-scale run
+    // — otherwise this test would pass with the corrector silently
+    // dropped across the crash.
+    let frozen = chaos_reference();
+    assert!(
+        want.0.iter().zip(&frozen.0).any(|(a, b)| a.max_diff(b) != 0.0),
+        "ekfac reference matches the frozen-scale reference — corrector inert"
+    );
+    for (pipelined, crash_at) in [(false, 4usize), (true, 5)] {
+        let what = format!("ekfac pipelined={pipelined} crash after step {crash_at}");
+        let path = wal_path(&format!("ekfac_{}_{crash_at}", pipelined as u8));
+        let mk = |_: Option<Vec<String>>| journaled_in_proc_engine(pipelined, true, &path);
+        let (params, _) = driver_crash_resume_run(crash_at, true, &path, &mk)
+            .unwrap_or_else(|e| panic!("{what}: {e:#}"));
+        for (i, (a, b)) in want.0.iter().zip(&params).enumerate() {
+            assert_eq!(a.max_diff(b), 0.0, "{what}: tensor {i} diverged from ekfac reference");
         }
     }
 }
@@ -1482,7 +1679,8 @@ fn driver_crash_process_fleet_resumes_from_journal_bitwise() {
                 .build(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(pipelined))
         };
         let (params, addrs) =
-            driver_crash_resume_run(crash_at, &path, &mk).unwrap_or_else(|e| panic!("{what}: {e:#}"));
+            driver_crash_resume_run(crash_at, false, &path, &mk)
+                .unwrap_or_else(|e| panic!("{what}: {e:#}"));
         for (i, (a, b)) in want.0.iter().zip(&params).enumerate() {
             assert_eq!(a.max_diff(b), 0.0, "{what}: tensor {i} diverged from reference");
         }
@@ -1506,7 +1704,7 @@ fn driver_torn_journal_tail_falls_back_to_the_previous_sync_point() {
     let path = wal_path("torn");
     let _ = std::fs::remove_file(&path);
     {
-        let mut eng = journaled_in_proc_engine(false, &path).expect("launch journaled fleet");
+        let mut eng = journaled_in_proc_engine(false, false, &path).expect("launch journaled fleet");
         let mut params: Vec<Matrix> =
             CHAOS_SHAPES.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
         for grads in &stream[..5] {
@@ -1520,7 +1718,7 @@ fn driver_torn_journal_tail_falls_back_to_the_previous_sync_point() {
     assert_eq!(jc.sync_t, 3, "recovery falls back to the t=3 sync point");
     assert_eq!(jc.steps.len(), 1, "only the complete t=4 record survives");
     assert_eq!(jc.steps[0].t, 4);
-    let mut eng = journaled_in_proc_engine(false, &path).expect("relaunch fleet");
+    let mut eng = journaled_in_proc_engine(false, false, &path).expect("relaunch fleet");
     let mut twin = local_engine(&CHAOS_SHAPES, UnitKind::Shampoo, overlap_base(), chaos_ecfg(false));
     let mut params = jc.params.clone();
     let mut twin_params = jc.params.clone();

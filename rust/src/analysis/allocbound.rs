@@ -1,0 +1,144 @@
+//! AB001 — allocation bounds in decode/load paths.
+//!
+//! A length field read off the wire (or out of a checkpoint) is
+//! attacker-controlled until validated; passing it straight to
+//! `Vec::with_capacity`/`vec![x; n]` turns a corrupt frame into an
+//! allocation bomb. This rule flags sized allocations in functions that
+//! look like decode/load paths unless the size expression is visibly
+//! derived from the input actually present (`.min(...)` clamp,
+//! `remaining`-style budget, `.len()` of a real buffer) or is a plain
+//! literal. Audited exceptions go to the committed allowlist.
+
+use super::lint::Violation;
+use super::source::{contains_ident, SourceFile};
+
+/// Function-name fragments that mark a decode/load path. Matched
+/// against the `_`-separated segments of the function name (prefix
+/// match, so `decodes`/`loader` count but `thread` does not hit
+/// `read`, nor `preload` hit `load`).
+const CTX_FRAGMENTS: &[&str] =
+    &["decode", "read", "recv", "load", "restore", "decompress", "parse"];
+
+fn decode_context(f: &SourceFile, idx: usize) -> Option<String> {
+    let fn_name = &f.fn_ctx[idx];
+    let lowered = fn_name.to_ascii_lowercase();
+    if lowered.split('_').any(|seg| CTX_FRAGMENTS.iter().any(|k| seg.starts_with(k))) {
+        return Some(format!("fn {fn_name}"));
+    }
+    // Methods of the wire decoder type itself (identifier match, so
+    // `Decoder`/`Decay` impls elsewhere do not count).
+    if contains_ident(&f.impl_ctx[idx], "Dec") {
+        return Some("impl Dec".to_string());
+    }
+    None
+}
+
+/// Extract the text between a delimiter pair opening at
+/// (`idx`, `open_at`), spanning at most a few lines.
+fn delimited(f: &SourceFile, idx: usize, open_at: usize, open: char, close: char) -> Option<String> {
+    let mut depth = 0i32;
+    let mut text = String::new();
+    for li in idx..f.code.len().min(idx + 5) {
+        let chars: Vec<char> = f.code[li].chars().collect();
+        let from = if li == idx { open_at } else { 0 };
+        for &c in chars.get(from..)? {
+            if c == open {
+                depth += 1;
+                if depth == 1 {
+                    continue;
+                }
+            } else if c == close {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(text);
+                }
+            }
+            text.push(c);
+        }
+        text.push(' ');
+    }
+    None
+}
+
+/// The size expression of a `vec![elem; size]` macro body, if the macro
+/// has one (a plain list form has no top-level `;`).
+fn vec_size(body: &str) -> Option<String> {
+    let mut paren = 0i32;
+    let mut brack = 0i32;
+    for (i, c) in body.char_indices() {
+        match c {
+            '(' => paren += 1,
+            ')' => paren -= 1,
+            '[' => brack += 1,
+            ']' => brack -= 1,
+            ';' if paren == 0 && brack == 0 => return Some(body[i + 1..].to_string()),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// A size expression passes when it is visibly tied to input that is
+/// actually present, or is a compile-time literal.
+fn is_bounded(size: &str) -> bool {
+    if size.contains(".min(") || size.contains("remaining") || size.contains(".len(") {
+        return true;
+    }
+    let mut stripped = size.to_string();
+    for suffix in ["usize", "u64", "u32", "u16", "u8", "i64", "i32"] {
+        stripped = stripped.replace(suffix, "");
+    }
+    !stripped.trim().is_empty()
+        && stripped
+            .chars()
+            .all(|c| c.is_ascii_digit() || c.is_whitespace() || "_<()+*".contains(c))
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        for (idx, line) in f.code.iter().enumerate() {
+            if f.is_test[idx] {
+                continue;
+            }
+            let Some(ctx) = decode_context(f, idx) else { continue };
+            if let Some(p) = line.find("with_capacity(") {
+                let open_at = p + "with_capacity".len();
+                if let Some(arg) = delimited(f, idx, open_at, '(', ')') {
+                    if !is_bounded(&arg) {
+                        out.push(Violation::at(
+                            "AB001",
+                            f,
+                            idx,
+                            format!(
+                                "with_capacity({}) in {ctx} is not derived from remaining \
+                                 input — clamp it or allowlist with a justification",
+                                arg.trim()
+                            ),
+                        ));
+                    }
+                }
+            }
+            if let Some(p) = line.find("vec![") {
+                let open_at = p + "vec!".len();
+                if let Some(body) = delimited(f, idx, open_at, '[', ']') {
+                    if let Some(size) = vec_size(&body) {
+                        if !is_bounded(&size) {
+                            out.push(Violation::at(
+                                "AB001",
+                                f,
+                                idx,
+                                format!(
+                                    "vec![..; {}] in {ctx} is not derived from remaining \
+                                     input — clamp it or allowlist with a justification",
+                                    size.trim()
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}

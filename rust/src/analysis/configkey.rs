@@ -1,0 +1,164 @@
+//! CK001/CK002 — config-key registry rules.
+//!
+//! Unknown-key validation only works if the registries and the lookups
+//! agree. Registration sites (the `ensure_known_keys` calls, including
+//! ones that pass a `KNOWN_KEYS` array) define, per `[section]`, the
+//! set of legal keys; these rules then enforce:
+//!
+//! - **CK001** — every dotted `"section.key"` lookup string in
+//!   production code names a registered key. A drifted lookup would
+//!   read a key the validator rejects in config files — i.e. a knob
+//!   that can never be set.
+//! - **CK002** — every registered key is documented: the dotted
+//!   `section.key` spelling must appear in the README knob tables.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use super::lint::Violation;
+use super::source::{contains_ident, SourceFile};
+
+/// Needles assembled from pieces so the linter's own source never
+/// registers as a call site.
+fn call_needle() -> &'static str {
+    concat!("ensure_known_", "keys(")
+}
+
+fn array_needle() -> &'static str {
+    concat!("KNOWN_", "KEYS")
+}
+
+struct Registry {
+    keys: BTreeSet<String>,
+    file: String,
+    line: usize,
+    text: String,
+}
+
+/// Find the end of a delimiter pair opening at (`idx`, `open_at`).
+fn balance_end(
+    f: &SourceFile,
+    idx: usize,
+    open_at: usize,
+    open: char,
+    close: char,
+) -> Option<(usize, usize)> {
+    let mut depth = 0i32;
+    for li in idx..f.code.len().min(idx + 64) {
+        let from = if li == idx { open_at } else { 0 };
+        for (ci, c) in f.code[li].char_indices().filter(|(ci, _)| *ci >= from) {
+            if c == open {
+                depth += 1;
+            } else if c == close {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((li, ci));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// String literals whose opening quote falls inside the given span.
+fn span_lits(f: &SourceFile, start: (usize, usize), end: (usize, usize)) -> Vec<String> {
+    f.lits
+        .iter()
+        .filter(|l| (l.line, l.col) >= start && (l.line, l.col) <= end)
+        .map(|l| l.text.clone())
+        .collect()
+}
+
+/// Resolve a `KNOWN_KEYS`-style array constant defined in `f`.
+fn resolve_array(f: &SourceFile) -> BTreeSet<String> {
+    for (idx, line) in f.code.iter().enumerate() {
+        if f.is_test[idx] || !contains_ident(line, array_needle()) {
+            continue;
+        }
+        let Some(eq) = line.find('=') else { continue };
+        let Some(br) = line[eq..].find('[') else { continue };
+        if let Some(end) = balance_end(f, idx, eq + br, '[', ']') {
+            return span_lits(f, (idx, eq + br), end).into_iter().collect();
+        }
+    }
+    BTreeSet::new()
+}
+
+fn is_key_ident(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+fn collect_registries(files: &[SourceFile]) -> BTreeMap<String, Registry> {
+    let mut regs: BTreeMap<String, Registry> = BTreeMap::new();
+    for f in files {
+        for (idx, line) in f.code.iter().enumerate() {
+            if f.is_test[idx] {
+                continue;
+            }
+            let Some(p) = line.find(call_needle()) else { continue };
+            let open_at = p + call_needle().len() - 1;
+            let Some(end) = balance_end(f, idx, open_at, '(', ')') else { continue };
+            let lits = span_lits(f, (idx, open_at), end);
+            // The definition of the validator itself has no literal
+            // section argument; only real call sites do.
+            let Some((section, keys)) = lits.split_first() else { continue };
+            let mut keys: BTreeSet<String> = keys.iter().cloned().collect();
+            let references_array = (idx..=end.0).any(|li| contains_ident(&f.code[li], array_needle()));
+            if references_array {
+                keys.extend(resolve_array(f));
+            }
+            regs.entry(section.clone())
+                .and_modify(|r| r.keys.extend(keys.iter().cloned()))
+                .or_insert_with(|| Registry {
+                    keys,
+                    file: f.rel.clone(),
+                    line: idx,
+                    text: f.raw[idx].trim().to_string(),
+                });
+        }
+    }
+    regs
+}
+
+pub fn check(files: &[SourceFile], readme: Option<&str>) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let regs = collect_registries(files);
+    for f in files {
+        for lit in &f.lits {
+            if f.is_test[lit.line] {
+                continue;
+            }
+            let Some((section, key)) = lit.text.split_once('.') else { continue };
+            let Some(reg) = regs.get(section) else { continue };
+            if is_key_ident(key) && !reg.keys.contains(key) {
+                out.push(Violation::at(
+                    "CK001",
+                    f,
+                    lit.line,
+                    format!(
+                        "config lookup `{section}.{key}` is not in the [{section}] \
+                         known-keys registry ({})",
+                        reg.file
+                    ),
+                ));
+            }
+        }
+    }
+    if let Some(readme) = readme {
+        for (section, reg) in &regs {
+            for key in &reg.keys {
+                let dotted = format!("{section}.{key}");
+                if !contains_ident(readme, &dotted) {
+                    out.push(Violation {
+                        rule: "CK002",
+                        path: reg.file.clone(),
+                        line: reg.line + 1,
+                        msg: format!("config key `{dotted}` is not documented in README.md"),
+                        text: reg.text.clone(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}

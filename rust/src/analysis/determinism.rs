@@ -1,0 +1,72 @@
+//! DT001/DT002 — determinism rules.
+//!
+//! The repo-wide contract is bitwise identity across threads, shards,
+//! overlap mode, and crash-resume. Two source-level habits break it:
+//!
+//! - **DT001** — raw wall-clock or entropy primitives. All timing must
+//!   go through the injectable `Clock` in `coordinator/supervise.rs`
+//!   (virtualizable in tests, anchored once in production); raw
+//!   `Instant::now`/`SystemTime`/`thread::sleep`/thread-RNG calls make
+//!   behavior depend on the machine of the day. The supervise module
+//!   itself is the one blessed implementation site; benches measure
+//!   wall time by design and ride the committed allowlist.
+//! - **DT002** — `HashMap`/`HashSet` in the deterministic core
+//!   (`optim/`, `coordinator/`, `sketch/`, `train/`). Their iteration
+//!   order is seeded per process; any fold over it is a latent
+//!   nondeterminism bug. BTree or index-keyed structures are required.
+
+use super::lint::Violation;
+use super::source::{contains_ident, SourceFile};
+
+const WALL_CLOCK: &[&str] =
+    &["Instant::now", "SystemTime", "thread::sleep", "from_entropy", "thread_rng"];
+
+const HASH_TYPES: &[&str] = &["HashMap", "HashSet"];
+
+/// Directories (path fragments) whose production code must stay
+/// deterministically ordered.
+const ORDERED_DIRS: &[&str] = &["optim/", "coordinator/", "sketch/", "train/"];
+
+pub fn check(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        let blessed_clock = f.rel.ends_with("coordinator/supervise.rs");
+        let ordered = ORDERED_DIRS.iter().any(|d| f.rel.contains(d));
+        for (idx, line) in f.code.iter().enumerate() {
+            if f.is_test[idx] {
+                continue;
+            }
+            if !blessed_clock {
+                for needle in WALL_CLOCK {
+                    if line.contains(needle) {
+                        out.push(Violation::at(
+                            "DT001",
+                            f,
+                            idx,
+                            format!(
+                                "wall-clock/entropy primitive `{needle}` outside the \
+                                 supervise.rs Clock abstraction"
+                            ),
+                        ));
+                    }
+                }
+            }
+            if ordered {
+                for needle in HASH_TYPES {
+                    if contains_ident(line, needle) {
+                        out.push(Violation::at(
+                            "DT002",
+                            f,
+                            idx,
+                            format!(
+                                "`{needle}` in deterministic core code — iteration order is \
+                                 per-process; use BTree or indexed structures"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,35 @@
+//! FL001 — float-comparison audit for the bench gate.
+//!
+//! The gate compares committed baselines against fresh bench records;
+//! the hand-rolled JSON parser deliberately accepts `NaN`/`Infinity`
+//! (python fixture compatibility), so any raw `as_f64` read inside
+//! `util/gate.rs` can smuggle a non-finite or negative-zero value into
+//! a `>`/`<` comparison that then silently passes. Gate code must use
+//! the finite-checked accessor (`as_finite_f64`) or the named-error
+//! helpers built on it. This rule is deliberately not allowlistable:
+//! fix the site, don't suppress it.
+
+use super::lint::Violation;
+use super::source::SourceFile;
+
+pub fn check(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files.iter().filter(|f| f.rel.ends_with("util/gate.rs")) {
+        for (idx, line) in f.code.iter().enumerate() {
+            if f.is_test[idx] {
+                continue;
+            }
+            if line.contains(".as_f64(") {
+                out.push(Violation::at(
+                    "FL001",
+                    f,
+                    idx,
+                    "raw `.as_f64()` read in gate code — use the finite-checked accessor \
+                     so NaN/negative-zero baselines become named errors"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}

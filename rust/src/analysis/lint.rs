@@ -1,0 +1,382 @@
+//! The `sketchy lint` rule engine.
+//!
+//! Rules are data: every rule has an id, a one-line summary, and an
+//! allowlistability bit. The engine walks the repo's own Rust sources
+//! (or any directory of `.rs` fixtures), builds comment/string-aware
+//! [`SourceFile`] views, runs every rule module, applies the committed
+//! allowlist (`rust/lint_allow.txt`), and renders `file:line` named
+//! errors. Everything is deterministic: files are scanned in sorted
+//! order and violations are reported in (path, line, rule) order.
+//!
+//! Two modes, decided by what the root contains:
+//! - **repo mode** (`<root>/rust/src` exists): scan `rust/src` and
+//!   `rust/tests`, skipping the committed `lint_fixtures`; the README
+//!   and allowlist ride along. This is what CI runs on HEAD.
+//! - **fixture mode** (anything else): scan every `.rs` under the root
+//!   as-is — this is how the self-tests feed the engine intentionally
+//!   bad files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use super::source::SourceFile;
+use super::{allocbound, configkey, determinism, floataudit, wiretag};
+
+/// One rule's metadata. `allowlistable` rules accept audited
+/// exceptions via `rust/lint_allow.txt`; the rest must be fixed.
+#[derive(Debug)]
+pub struct RuleMeta {
+    pub id: &'static str,
+    pub allowlistable: bool,
+    pub summary: &'static str,
+}
+
+pub const RULES: &[RuleMeta] = &[
+    RuleMeta {
+        id: "DT001",
+        allowlistable: true,
+        summary: "no wall-clock/entropy primitives outside the supervise.rs Clock abstraction",
+    },
+    RuleMeta {
+        id: "DT002",
+        allowlistable: true,
+        summary: "no HashMap/HashSet in optim/, coordinator/, sketch/, train/ production code",
+    },
+    RuleMeta {
+        id: "WT001",
+        allowlistable: false,
+        summary: "every TAG_* wire tag value is unique",
+    },
+    RuleMeta {
+        id: "WT002",
+        allowlistable: false,
+        summary: "every wire tag has both an encode_frame and a decode_payload arm",
+    },
+    RuleMeta {
+        id: "WT003",
+        allowlistable: false,
+        summary: "every wire tag is named by at least one test",
+    },
+    RuleMeta {
+        id: "WT004",
+        allowlistable: false,
+        summary: "PROTO_VERSION bumps must extend the marked degrade-matrix version list",
+    },
+    RuleMeta {
+        id: "AB001",
+        allowlistable: true,
+        summary: "sized allocations in decode/load paths derive their bound from remaining input",
+    },
+    RuleMeta {
+        id: "CK001",
+        allowlistable: false,
+        summary: "every dotted config lookup names a key in its section's known-keys registry",
+    },
+    RuleMeta {
+        id: "CK002",
+        allowlistable: false,
+        summary: "every registered config key is documented in the README knob tables",
+    },
+    RuleMeta {
+        id: "FL001",
+        allowlistable: false,
+        summary: "gate code reads numbers through the finite-checked accessor only",
+    },
+    RuleMeta {
+        id: "AL001",
+        allowlistable: false,
+        summary: "every allowlist entry suppresses at least one current violation",
+    },
+];
+
+pub fn rule_meta(id: &str) -> Option<&'static RuleMeta> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// One violation, anchored at a source line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    /// 1-based.
+    pub line: usize,
+    pub msg: String,
+    /// Trimmed raw source line, for allowlist matching.
+    pub text: String,
+}
+
+impl Violation {
+    /// Anchor a violation at 0-based line `idx` of `f`.
+    pub fn at(rule: &'static str, f: &SourceFile, idx: usize, msg: String) -> Violation {
+        Violation {
+            rule,
+            path: f.rel.clone(),
+            line: idx + 1,
+            msg,
+            text: f.raw.get(idx).map(|l| l.trim().to_string()).unwrap_or_default(),
+        }
+    }
+}
+
+/// One `rust/lint_allow.txt` entry:
+/// `RULE | path-substring | line-substring | justification`.
+#[derive(Debug)]
+struct AllowEntry {
+    rule: String,
+    path_sub: String,
+    line_sub: String,
+    lineno: usize,
+    raw: String,
+}
+
+fn allow_entries(text: &str) -> anyhow::Result<Vec<AllowEntry>> {
+    let mut out = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = trimmed.splitn(4, '|').map(str::trim).collect();
+        anyhow::ensure!(
+            parts.len() == 4 && !parts[3].is_empty(),
+            "lint_allow.txt:{}: expected `RULE | path | line-substring | justification`",
+            idx + 1
+        );
+        out.push(AllowEntry {
+            rule: parts[0].to_string(),
+            path_sub: parts[1].to_string(),
+            line_sub: parts[2].to_string(),
+            lineno: idx + 1,
+            raw: trimmed.to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// Lint outcome: the surviving violations plus scan accounting.
+#[derive(Debug)]
+pub struct LintReport {
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+    pub allow_used: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!(
+                "{}:{}: error[{}]: {}\n",
+                v.path, v.line, v.rule, v.msg
+            ));
+        }
+        if self.clean() {
+            out.push_str(&format!(
+                "sketchy lint: clean — {} files scanned, {} allowlisted exception(s)\n",
+                self.files_scanned, self.allow_used
+            ));
+        } else {
+            out.push_str(&format!(
+                "sketchy lint: {} violation(s) — {} files scanned, {} allowlisted exception(s)\n",
+                self.violations.len(),
+                self.files_scanned,
+                self.allow_used
+            ));
+        }
+        out
+    }
+}
+
+fn collect_rs(dir: &Path, skip_dir: Option<&str>, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("scan {}", dir.display()))? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            let name = p.file_name().and_then(|n| n.to_str());
+            if skip_dir.is_some() && name == skip_dir {
+                continue;
+            }
+            collect_rs(&p, skip_dir, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_of(root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn allow_path(root: &Path, repo_mode: bool) -> PathBuf {
+    if repo_mode {
+        root.join("rust").join("lint_allow.txt")
+    } else {
+        root.join("lint_allow.txt")
+    }
+}
+
+/// Run every rule over the tree at `root` and apply the allowlist.
+pub fn lint_root(root: &Path) -> anyhow::Result<LintReport> {
+    let repo_mode = root.join("rust").join("src").is_dir();
+    let mut paths = Vec::new();
+    if repo_mode {
+        collect_rs(&root.join("rust").join("src"), Some("lint_fixtures"), &mut paths)?;
+        let tests = root.join("rust").join("tests");
+        if tests.is_dir() {
+            collect_rs(&tests, Some("lint_fixtures"), &mut paths)?;
+        }
+    } else {
+        collect_rs(root, None, &mut paths)?;
+    }
+    anyhow::ensure!(!paths.is_empty(), "no .rs files found under {}", root.display());
+    paths.sort();
+    let mut files = Vec::new();
+    for p in &paths {
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("read source {}", p.display()))?;
+        let rel = rel_of(root, p);
+        let wholly_test = rel.starts_with("rust/tests/") || rel.starts_with("tests/");
+        files.push(SourceFile::build(rel, &text, wholly_test));
+    }
+    let readme = std::fs::read_to_string(root.join("README.md")).ok();
+
+    let mut violations = Vec::new();
+    violations.extend(determinism::check(&files));
+    violations.extend(wiretag::check(&files));
+    violations.extend(allocbound::check(&files));
+    violations.extend(configkey::check(&files, readme.as_deref()));
+    violations.extend(floataudit::check(&files));
+
+    // Allowlist: suppress audited exceptions, then flag stale entries —
+    // an entry that matches nothing is itself a violation, so the file
+    // can only shrink as the code gets cleaned up.
+    let allow_file = allow_path(root, repo_mode);
+    let entries = match std::fs::read_to_string(&allow_file) {
+        Ok(text) => allow_entries(&text)?,
+        Err(_) => Vec::new(),
+    };
+    let mut used = vec![false; entries.len()];
+    let mut kept = Vec::new();
+    let mut allow_used = 0usize;
+    for v in violations {
+        let allowlistable = rule_meta(v.rule).is_some_and(|r| r.allowlistable);
+        let hit = allowlistable
+            && entries.iter().enumerate().any(|(i, e)| {
+                let matches = e.rule == v.rule
+                    && v.path.contains(&e.path_sub)
+                    && v.text.contains(&e.line_sub);
+                if matches {
+                    used[i] = true;
+                }
+                matches
+            });
+        if hit {
+            allow_used += 1;
+        } else {
+            kept.push(v);
+        }
+    }
+    for (entry, was_used) in entries.iter().zip(&used) {
+        let reason = if rule_meta(&entry.rule).is_none() {
+            Some("names an unknown rule")
+        } else if !rule_meta(&entry.rule).unwrap().allowlistable {
+            Some("names a rule that is not allowlistable")
+        } else if !*was_used {
+            Some("matches no current violation (stale)")
+        } else {
+            None
+        };
+        if let Some(reason) = reason {
+            kept.push(Violation {
+                rule: "AL001",
+                path: rel_of(root, &allow_file),
+                line: entry.lineno,
+                msg: format!("allowlist entry {reason}: `{}`", entry.raw),
+                text: entry.raw.clone(),
+            });
+        }
+    }
+    kept.sort_by(|a, b| {
+        (&a.path, a.line, a.rule, &a.msg).cmp(&(&b.path, b.line, b.rule, &b.msg))
+    });
+    kept.dedup_by(|a, b| a.path == b.path && a.line == b.line && a.rule == b.rule && a.msg == b.msg);
+    Ok(LintReport { violations: kept, files_scanned: files.len(), allow_used })
+}
+
+/// CLI entry: lint `root`; with `fix_allowlist`, append TODO-justified
+/// entries for any unsuppressed allowlistable violations and re-run.
+pub fn run_lint(root: &str, fix_allowlist: bool) -> anyhow::Result<LintReport> {
+    let root = Path::new(root);
+    let report = lint_root(root)?;
+    if !fix_allowlist {
+        return Ok(report);
+    }
+    let fixable: Vec<&Violation> = report
+        .violations
+        .iter()
+        .filter(|v| rule_meta(v.rule).is_some_and(|r| r.allowlistable))
+        .collect();
+    if fixable.is_empty() {
+        return Ok(report);
+    }
+    let repo_mode = root.join("rust").join("src").is_dir();
+    let path = allow_path(root, repo_mode);
+    let mut text = std::fs::read_to_string(&path).unwrap_or_default();
+    if !text.is_empty() && !text.ends_with('\n') {
+        text.push('\n');
+    }
+    for v in &fixable {
+        text.push_str(&format!("{} | {} | {} | TODO: justify\n", v.rule, v.path, v.text));
+    }
+    std::fs::write(&path, text).with_context(|| format!("write {}", path.display()))?;
+    eprintln!(
+        "sketchy lint: appended {} TODO-justified entr{} to {}",
+        fixable.len(),
+        if fixable.len() == 1 { "y" } else { "ies" },
+        path.display()
+    );
+    lint_root(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowlist_entries_parse_and_reject_garbage() {
+        let text = "# comment\n\nDT001 | util/bench.rs | Instant::now( | benches measure wall time\n";
+        let entries = allow_entries(text).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].rule, "DT001");
+        assert_eq!(entries[0].lineno, 3);
+        assert!(allow_entries("DT001 | a | b\n").is_err());
+        assert!(allow_entries("DT001 | a | b | \n").is_err());
+    }
+
+    #[test]
+    fn rule_table_is_consistent() {
+        // Ids unique, summaries present, and the allowlistable set is
+        // exactly the audited-exception rules.
+        let mut seen = std::collections::BTreeSet::new();
+        for r in RULES {
+            assert!(seen.insert(r.id), "duplicate rule id {}", r.id);
+            assert!(!r.summary.is_empty());
+        }
+        let allowlistable: Vec<&str> =
+            RULES.iter().filter(|r| r.allowlistable).map(|r| r.id).collect();
+        assert_eq!(allowlistable, vec!["DT001", "DT002", "AB001"]);
+    }
+}

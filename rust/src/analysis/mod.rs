@@ -1,0 +1,31 @@
+//! `sketchy lint` — a repo-invariant static analyzer.
+//!
+//! Every guarantee this reproduction makes (bitwise-deterministic
+//! FD/Shampoo steps across threads, shards, overlap mode, and
+//! crash-resume) rests on source-level conventions: timing goes through
+//! the injectable `Clock`, the deterministic core iterates ordered
+//! structures, the wire tag registry stays closed under encode/decode/
+//! test coverage, decode-path allocations are bounded by real input,
+//! and the config-key registries match both the lookups and the README.
+//! This subsystem checks those conventions mechanically, with the same
+//! no-deps line/token-scanning idiom as the vendored wire codec — no
+//! external crates, no rustc internals.
+//!
+//! Entry points: [`run_lint`] (the `sketchy lint` subcommand),
+//! [`lint_root`] (library/tests). Rules live one module per family and
+//! are described by the [`RULES`] table; audited exceptions live in
+//! `rust/lint_allow.txt`. The engine is self-tested against committed
+//! failing fixtures in `rust/tests/lint_fixtures/` (excluded from repo
+//! scans) by `rust/tests/lint_self.rs`, which also asserts HEAD is
+//! clean.
+
+pub mod allocbound;
+pub mod configkey;
+pub mod determinism;
+pub mod floataudit;
+pub mod lint;
+pub mod source;
+pub mod wiretag;
+
+pub use lint::{lint_root, run_lint, LintReport, RuleMeta, Violation, RULES};
+pub use source::SourceFile;

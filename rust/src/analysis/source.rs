@@ -1,0 +1,455 @@
+//! Comment/string-aware source model for `sketchy lint`.
+//!
+//! The linter does not parse Rust; it scans lines. To do that safely it
+//! needs views of each file in which comments and string contents can
+//! neither spoof nor hide a match:
+//!
+//! - `raw`: the file's lines verbatim (marker searches, allowlist
+//!   matching, violation display).
+//! - `code`: comments blanked entirely; string/char literal *contents*
+//!   blanked to spaces with the delimiting quotes kept, so columns and
+//!   brace structure survive. Every identifier-level rule reads this
+//!   view — a needle inside a string or comment is not code.
+//! - `lits`: every completed string literal (content plus the line and
+//!   column of its opening quote), for the config-key rules that reason
+//!   about quoted keys.
+//!
+//! On top of the `code` view a second pass tracks, per line: whether the
+//! line sits inside a `#[cfg(test)]` region (or a `tests/` file), and
+//! the innermost enclosing `fn` / `impl` headers — enough context to
+//! scope rules like "allocation in a decode path" without a parser.
+
+/// One string literal, anchored at its opening quote.
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    /// 0-based line of the opening quote.
+    pub line: usize,
+    /// 0-based column (in chars) of the opening quote.
+    pub col: usize,
+    /// Literal content, escapes unprocessed. Multi-line literals keep
+    /// their newlines, which conveniently disqualifies them from the
+    /// single-token matches the rules perform.
+    pub text: String,
+}
+
+/// One scanned source file with the per-line views the rules consume.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Forward-slash path relative to the lint root.
+    pub rel: String,
+    pub raw: Vec<String>,
+    pub code: Vec<String>,
+    pub lits: Vec<StrLit>,
+    /// Line is inside `#[cfg(test)]` (or the whole file is a test).
+    pub is_test: Vec<bool>,
+    /// Name of the innermost enclosing `fn`, or empty at module level.
+    pub fn_ctx: Vec<String>,
+    /// Header of the innermost enclosing `impl`, or empty.
+    pub impl_ctx: Vec<String>,
+}
+
+impl SourceFile {
+    pub fn build(rel: String, text: &str, wholly_test: bool) -> SourceFile {
+        let raw: Vec<String> = text.split('\n').map(str::to_string).collect();
+        let (code_text, lits) = strip(text);
+        let code: Vec<String> = code_text.split('\n').map(str::to_string).collect();
+        debug_assert_eq!(raw.len(), code.len());
+        let (is_test, fn_ctx, impl_ctx) = contexts(&code, wholly_test);
+        SourceFile { rel, raw, code, lits, is_test, fn_ctx, impl_ctx }
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// True when `hay` contains `needle` at identifier boundaries (the
+/// characters around the match, if any, are not identifier characters).
+/// `needle` itself may contain `::` / `.` path separators.
+pub fn contains_ident(hay: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(needle) {
+        let at = from + p;
+        let end = at + needle.len();
+        let pre_ok = hay[..at].chars().next_back().is_none_or(|c| !is_ident(c));
+        let post_ok = hay[end..].chars().next().is_none_or(|c| !is_ident(c));
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+/// Pass 1: blank comments and literal contents, collect string literals.
+struct Emitter {
+    out: String,
+    line: usize,
+    col: usize,
+}
+
+impl Emitter {
+    fn emit(&mut self, c: char) {
+        self.out.push(c);
+        if c == '\n' {
+            self.line += 1;
+            self.col = 0;
+        } else {
+            self.col += 1;
+        }
+    }
+
+    /// Blank a consumed source char: newlines survive, the rest
+    /// becomes a space so columns stay aligned.
+    fn blank(&mut self, c: char) {
+        self.emit(if c == '\n' { '\n' } else { ' ' });
+    }
+}
+
+fn strip(text: &str) -> (String, Vec<StrLit>) {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut em = Emitter { out: String::new(), line: 0, col: 0 };
+    let mut lits = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            while i < n && chars[i] != '\n' {
+                em.emit(' ');
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1;
+            em.emit(' ');
+            em.emit(' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    em.emit(' ');
+                    em.emit(' ');
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    em.emit(' ');
+                    em.emit(' ');
+                    i += 2;
+                } else {
+                    em.blank(chars[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if c == '"' {
+            // Raw string? Look back over `#`s for an `r`/`br` prefix
+            // that is not the tail of a longer identifier.
+            let mut j = i;
+            let mut hashes = 0usize;
+            while j > 0 && chars[j - 1] == '#' {
+                hashes += 1;
+                j -= 1;
+            }
+            let is_raw = j > 0
+                && chars[j - 1] == 'r'
+                && if j >= 2 && is_ident(chars[j - 2]) {
+                    chars[j - 2] == 'b' && !(j >= 3 && is_ident(chars[j - 3]))
+                } else {
+                    true
+                };
+            let (lit_line, lit_col) = (em.line, em.col);
+            em.emit('"');
+            i += 1;
+            let mut content = String::new();
+            if is_raw {
+                while i < n {
+                    if chars[i] == '"' {
+                        let mut k = 0;
+                        while k < hashes && i + 1 + k < n && chars[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            em.emit('"');
+                            i += 1;
+                            for _ in 0..hashes {
+                                em.emit('#');
+                                i += 1;
+                            }
+                            break;
+                        }
+                    }
+                    content.push(chars[i]);
+                    em.blank(chars[i]);
+                    i += 1;
+                }
+            } else {
+                while i < n {
+                    if chars[i] == '\\' && i + 1 < n {
+                        content.push(chars[i]);
+                        content.push(chars[i + 1]);
+                        em.emit(' ');
+                        em.blank(chars[i + 1]);
+                        i += 2;
+                        continue;
+                    }
+                    if chars[i] == '"' {
+                        em.emit('"');
+                        i += 1;
+                        break;
+                    }
+                    content.push(chars[i]);
+                    em.blank(chars[i]);
+                    i += 1;
+                }
+            }
+            lits.push(StrLit { line: lit_line, col: lit_col, text: content });
+            continue;
+        }
+        if c == '\'' {
+            let escaped = i + 1 < n && chars[i + 1] == '\\';
+            let closed =
+                i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' && chars[i + 1] != '\\';
+            if escaped {
+                em.emit('\'');
+                i += 1;
+                while i < n && chars[i] != '\'' {
+                    if chars[i] == '\\' && i + 1 < n {
+                        em.emit(' ');
+                        em.emit(' ');
+                        i += 2;
+                    } else {
+                        em.emit(' ');
+                        i += 1;
+                    }
+                }
+                if i < n {
+                    em.emit('\'');
+                    i += 1;
+                }
+            } else if closed {
+                em.emit('\'');
+                em.emit(' ');
+                em.emit('\'');
+                i += 3;
+            } else {
+                // Lifetime or loop label.
+                em.emit('\'');
+                i += 1;
+            }
+            continue;
+        }
+        em.emit(c);
+        i += 1;
+    }
+    (em.out, lits)
+}
+
+/// Pass 2: per-line test/fn/impl context over the `code` view.
+fn contexts(code: &[String], wholly_test: bool) -> (Vec<bool>, Vec<String>, Vec<String>) {
+    let mut depth: i64 = 0;
+    let mut paren: i64 = 0;
+    let mut brack: i64 = 0;
+    let mut fn_stack: Vec<(i64, String)> = Vec::new();
+    let mut impl_stack: Vec<(i64, String)> = Vec::new();
+    let mut test_stack: Vec<i64> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+    let mut impl_buf: Option<String> = None;
+    let mut pending_test = false;
+    let mut is_test = Vec::new();
+    let mut fn_ctx = Vec::new();
+    let mut impl_ctx = Vec::new();
+    for line in code {
+        is_test.push(wholly_test || !test_stack.is_empty());
+        fn_ctx.push(fn_stack.last().map(|(_, s)| s.clone()).unwrap_or_default());
+        impl_ctx.push(impl_stack.last().map(|(_, s)| s.clone()).unwrap_or_default());
+        if line.contains("#[cfg(test)]") {
+            pending_test = true;
+        }
+        let chars: Vec<char> = line.chars().collect();
+        let mut k = 0;
+        while k < chars.len() {
+            let c = chars[k];
+            if is_ident(c) && !(k > 0 && is_ident(chars[k - 1])) {
+                let start = k;
+                while k < chars.len() && is_ident(chars[k]) {
+                    k += 1;
+                }
+                let word: String = chars[start..k].iter().collect();
+                if word == "fn" {
+                    let mut m = k;
+                    while m < chars.len() && chars[m].is_whitespace() {
+                        m += 1;
+                    }
+                    let name_start = m;
+                    while m < chars.len() && is_ident(chars[m]) {
+                        m += 1;
+                    }
+                    if m > name_start {
+                        pending_fn = Some(chars[name_start..m].iter().collect());
+                    }
+                    k = m;
+                } else if word == "impl" && impl_buf.is_none() && pending_fn.is_none() {
+                    impl_buf = Some(String::new());
+                } else if let Some(buf) = impl_buf.as_mut() {
+                    buf.push_str(&word);
+                }
+                continue;
+            }
+            match c {
+                '(' => paren += 1,
+                ')' => paren -= 1,
+                '[' => brack += 1,
+                ']' => brack -= 1,
+                '{' => {
+                    depth += 1;
+                    if let Some(buf) = impl_buf.take() {
+                        impl_stack.push((depth, buf.trim().to_string()));
+                    }
+                    if let Some(name) = pending_fn.take() {
+                        fn_stack.push((depth, name));
+                    }
+                    if pending_test {
+                        test_stack.push(depth);
+                        pending_test = false;
+                    }
+                }
+                '}' => {
+                    if fn_stack.last().is_some_and(|(d, _)| *d == depth) {
+                        fn_stack.pop();
+                    }
+                    if impl_stack.last().is_some_and(|(d, _)| *d == depth) {
+                        impl_stack.pop();
+                    }
+                    if test_stack.last() == Some(&depth) {
+                        test_stack.pop();
+                    }
+                    depth -= 1;
+                }
+                ';' if paren == 0 && brack == 0 => {
+                    pending_fn = None;
+                    impl_buf = None;
+                    pending_test = false;
+                }
+                _ => {}
+            }
+            if c != '{' {
+                if let Some(buf) = impl_buf.as_mut() {
+                    buf.push(c);
+                }
+            }
+            k += 1;
+        }
+    }
+    (is_test, fn_ctx, impl_ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build(text: &str) -> SourceFile {
+        SourceFile::build("x.rs".into(), text, false)
+    }
+
+    #[test]
+    fn comments_and_strings_are_blanked_in_code_view() {
+        let f = build(concat!(
+            "let a = \"Instant::now\"; // Instant::now\n",
+            "/* Instant::now */ let b = 1;\n",
+            "let c = Instant::now();\n",
+        ));
+        assert!(!f.code[0].contains("Instant"));
+        assert!(!f.code[1].contains("Instant"));
+        assert!(f.code[2].contains("Instant::now"));
+        assert_eq!(f.lits[0].text, "Instant::now");
+    }
+
+    #[test]
+    fn multiline_and_raw_strings_keep_line_structure() {
+        let f = build("let u = \"line one\nline {two}\";\nlet r = r#\"raw \"q\" body\"#;\nok();\n");
+        assert_eq!(f.code.len(), f.raw.len());
+        // The `{` inside the string must not look like a brace.
+        assert!(!f.code[1].contains('{'));
+        assert_eq!(f.lits[0].text, "line one\nline {two}");
+        assert_eq!(f.lits[1].text, "raw \"q\" body");
+        assert!(f.code[2].contains("ok()"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let f = build("fn f<'a>(x: &'a str) -> char {\n    if x.is_empty() { '{' } else { '\\n' }\n}\n");
+        // The brace inside the char literal must not unbalance the walk.
+        assert_eq!(f.fn_ctx[1], "f");
+        assert!(f.code[0].contains("'a"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_masked() {
+        let f = build(concat!(
+            "pub fn prod() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    use super::*;\n",
+            "    #[test]\n",
+            "    fn t() { prod(); }\n",
+            "}\n",
+            "pub fn later() {}\n",
+        ));
+        assert!(!f.is_test[0]);
+        assert!(f.is_test[3]);
+        assert!(f.is_test[5]);
+        assert!(!f.is_test[7]);
+    }
+
+    #[test]
+    fn cfg_test_on_a_statement_does_not_leak() {
+        let f = build("#[cfg(test)]\nuse std::fmt;\npub fn prod() {}\nfn g() { prod(); }\n");
+        assert!(!f.is_test[2]);
+        assert!(!f.is_test[3]);
+    }
+
+    #[test]
+    fn fn_and_impl_context_track_nesting() {
+        let f = build(concat!(
+            "impl<'b> Dec<'b> {\n",
+            "    fn matrix(&mut self) -> u32 {\n",
+            "        let v = 1;\n",
+            "        v\n",
+            "    }\n",
+            "}\n",
+            "fn decode_payload(b: &[u8]) {\n",
+            "    let x = b.len();\n",
+            "}\n",
+        ));
+        assert!(f.impl_ctx[2].contains("Dec"));
+        assert_eq!(f.fn_ctx[2], "matrix");
+        assert_eq!(f.fn_ctx[7], "decode_payload");
+        assert_eq!(f.fn_ctx[5], "");
+    }
+
+    #[test]
+    fn trait_method_signatures_do_not_capture_context() {
+        let f = build(concat!(
+            "trait Clock {\n",
+            "    fn now(&self) -> u64;\n",
+            "    fn on_poll(&self) {}\n",
+            "}\n",
+            "fn free() { let x = 1; }\n",
+            "static X: u32 = 0;\n",
+        ));
+        // The `;`-terminated signature must not leave `now` dangling.
+        assert_eq!(f.fn_ctx[3], "");
+        assert_eq!(f.impl_ctx[4], "");
+    }
+
+    #[test]
+    fn contains_ident_respects_boundaries() {
+        assert!(contains_ident("e.u8(TAG_INIT);", "TAG_INIT"));
+        assert!(!contains_ident("e.u8(TAG_INIT_V7);", "TAG_INIT"));
+        assert!(contains_ident("std::thread::sleep(d)", "thread::sleep"));
+        assert!(!contains_ident("clock.sleep(d)", "thread::sleep"));
+    }
+}

@@ -1,0 +1,198 @@
+//! WT001–WT004 — wire-protocol registry rules for `coordinator/wire.rs`.
+//!
+//! The shard protocol's compatibility story rests on a tag registry and
+//! a version constant; these rules keep both honest:
+//!
+//! - **WT001** — every `TAG_*` value is unique. A reused byte silently
+//!   decodes one message kind as another on a version-skewed peer.
+//! - **WT002** — every tag is referenced inside both `encode_frame` and
+//!   `decode_payload`. A tag with one arm is a frame that can be sent
+//!   but never understood (or vice versa).
+//! - **WT003** — every tag is named by at least one test line
+//!   (roundtrip/truncation coverage lives in `mod tests` and the
+//!   integration suites).
+//! - **WT004** — a `PROTO_VERSION` bump must extend the degrade-matrix
+//!   test list: the marked version list (see the marker comment in
+//!   `tests/shard_determinism.rs`) has to cover every protocol version
+//!   `1..=PROTO_VERSION`, so old-peer interop is re-proven on each bump.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use super::lint::Violation;
+use super::source::{contains_ident, SourceFile};
+
+/// Marker comment that tags the degrade-matrix version list. Assembled
+/// from pieces so the linter's own source never matches it.
+fn marker() -> &'static str {
+    concat!("lint:", "degrade-matrix")
+}
+
+fn tag_consts(f: &SourceFile) -> Vec<(String, u32, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in f.code.iter().enumerate() {
+        if f.is_test[idx] {
+            continue;
+        }
+        let Some(p) = line.find("const TAG_") else { continue };
+        let rest = &line[p + "const ".len()..];
+        let name_end = rest.find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'));
+        let name = &rest[..name_end.unwrap_or(rest.len())];
+        let Some(eq) = line.find('=') else { continue };
+        let Ok(value) = line[eq + 1..].trim().trim_end_matches(';').trim().parse::<u32>() else {
+            continue;
+        };
+        out.push((name.to_string(), value, idx));
+    }
+    out
+}
+
+fn parse_proto_version(f: &SourceFile) -> Option<(u32, usize)> {
+    for (idx, line) in f.code.iter().enumerate() {
+        if f.is_test[idx] || !line.contains("const ") || !contains_ident(line, "PROTO_VERSION") {
+            continue;
+        }
+        let Some(eq) = line.find('=') else { continue };
+        if let Ok(v) = line[eq + 1..].trim().trim_end_matches(';').trim().parse::<u32>() {
+            return Some((v, idx));
+        }
+    }
+    None
+}
+
+fn digit_runs(line: &str) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in line.chars().chain(std::iter::once(' ')) {
+        if c.is_ascii_digit() {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            if let Ok(v) = cur.parse::<u32>() {
+                out.push(v);
+            }
+            cur.clear();
+        }
+    }
+    out
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files.iter().filter(|f| f.rel.ends_with("coordinator/wire.rs")) {
+        let tags = tag_consts(f);
+        let mut seen: BTreeMap<u32, String> = BTreeMap::new();
+        for (name, value, idx) in &tags {
+            if let Some(prev) = seen.get(value) {
+                out.push(Violation::at(
+                    "WT001",
+                    f,
+                    *idx,
+                    format!("`{name}` reuses wire tag value {value}, already taken by `{prev}`"),
+                ));
+            } else {
+                seen.insert(*value, name.clone());
+            }
+        }
+        for (name, _, idx) in &tags {
+            let mut encoded = false;
+            let mut decoded = false;
+            let mut tested = false;
+            for (j, line) in f.code.iter().enumerate() {
+                if j == *idx || !contains_ident(line, name) {
+                    continue;
+                }
+                match f.fn_ctx[j].as_str() {
+                    "encode_frame" => encoded = true,
+                    "decode_payload" => decoded = true,
+                    _ => {}
+                }
+                if f.is_test[j] {
+                    tested = true;
+                }
+            }
+            if !tested {
+                'files: for g in files {
+                    for (j, line) in g.code.iter().enumerate() {
+                        if g.is_test[j] && contains_ident(line, name) {
+                            tested = true;
+                            break 'files;
+                        }
+                    }
+                }
+            }
+            if !encoded {
+                out.push(Violation::at(
+                    "WT002",
+                    f,
+                    *idx,
+                    format!("wire tag `{name}` has no encode arm in `encode_frame`"),
+                ));
+            }
+            if !decoded {
+                out.push(Violation::at(
+                    "WT002",
+                    f,
+                    *idx,
+                    format!("wire tag `{name}` has no decode arm in `decode_payload`"),
+                ));
+            }
+            if !tested {
+                out.push(Violation::at(
+                    "WT003",
+                    f,
+                    *idx,
+                    format!("wire tag `{name}` is not named by any test"),
+                ));
+            }
+        }
+        if let Some((version, pidx)) = parse_proto_version(f) {
+            let mut covered: BTreeSet<u32> = BTreeSet::new();
+            let mut first_marker: Option<(&SourceFile, usize)> = None;
+            for g in files {
+                for (j, rawline) in g.raw.iter().enumerate() {
+                    if !rawline.contains(marker()) {
+                        continue;
+                    }
+                    if first_marker.is_none() {
+                        first_marker = Some((g, j));
+                    }
+                    // The marked version list may wrap; read a few lines.
+                    for k in j..(j + 4).min(g.raw.len()) {
+                        covered.extend(digit_runs(&g.raw[k]));
+                        if contains_ident(&g.code[k], "PROTO_VERSION") {
+                            covered.insert(version);
+                        }
+                    }
+                }
+            }
+            match first_marker {
+                None => out.push(Violation::at(
+                    "WT004",
+                    f,
+                    pidx,
+                    format!(
+                        "PROTO_VERSION = {version} but no degrade-matrix marker comment \
+                         (`{}`) tags a version list in any test",
+                        marker()
+                    ),
+                )),
+                Some((g, j)) => {
+                    let missing: Vec<u32> =
+                        (1..=version).filter(|v| !covered.contains(v)).collect();
+                    if !missing.is_empty() {
+                        out.push(Violation::at(
+                            "WT004",
+                            g,
+                            j,
+                            format!(
+                                "degrade-matrix version list does not cover protocol \
+                                 version(s) {missing:?} (PROTO_VERSION = {version})"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}

@@ -128,7 +128,7 @@ use std::process::{Child, ChildStdout, Command, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Stdout handshake prefix a worker prints once its listener is bound.
 const LISTEN_PREFIX: &str = "SKETCHY-SHARD-LISTENING ";
@@ -1909,14 +1909,16 @@ impl Drop for WorkerHandle {
                     if graceful {
                         // Capped exponential backoff while draining: same
                         // 2 s grace window, far fewer wakeups than the old
-                        // fixed 10 ms spin.
+                        // fixed 10 ms spin. Timed on the channel's
+                        // injected clock, like every other deadline.
+                        let clock = self.channel.clock.clone();
                         let mut backoff = Backoff::new(DRAIN_BACKOFF_BASE, DRAIN_BACKOFF_CAP);
-                        let deadline = Instant::now() + Duration::from_secs(2);
+                        let deadline = clock.now() + Duration::from_secs(2);
                         loop {
                             match child.try_wait() {
                                 Ok(Some(_)) => break,
-                                Ok(None) if Instant::now() < deadline => {
-                                    std::thread::sleep(backoff.next());
+                                Ok(None) if clock.now() < deadline => {
+                                    clock.sleep(backoff.next());
                                 }
                                 _ => {
                                     let _ = child.kill();
@@ -1985,7 +1987,7 @@ fn spawn_process_worker(
             Err(e) => {
                 last_err = Some(e);
                 if attempt < SPAWN_ATTEMPTS {
-                    std::thread::sleep(backoff.next());
+                    clock.sleep(backoff.next());
                 }
             }
         }
@@ -3698,7 +3700,7 @@ impl BlockExecutor for ShardExecutor {
             if !sent[shard] {
                 continue;
             }
-            let started = Instant::now();
+            let started = clock.now();
             let reply = match w
                 .channel
                 .recv()
@@ -3720,7 +3722,7 @@ impl BlockExecutor for ShardExecutor {
             if let Some(el) = elastic.as_mut() {
                 // Feed the rebalancer the observed per-seat step wall
                 // time (EWMA-smoothed inside the controller).
-                let nanos = started.elapsed().as_secs_f64() * 1e9;
+                let nanos = clock.now().saturating_sub(started).as_secs_f64() * 1e9;
                 el.controller.observe_step_latency(shard, nanos);
             }
             refreshes += apply_step_reply(

@@ -42,6 +42,12 @@ pub trait Clock: Send + Sync + std::fmt::Debug {
     /// The system clock ignores this — wall time already advanced; the
     /// virtual clock advances by exactly the quantum.
     fn on_poll(&self, _quantum: Duration) {}
+
+    /// Block the caller for `d`. The system clock really sleeps; the
+    /// virtual clock advances instantly, so deterministic tests never
+    /// wait out wall time. This is the one sanctioned sleep in the
+    /// codebase — everything else goes through a `Clock`.
+    fn sleep(&self, d: Duration);
 }
 
 /// Wall-clock time, anchored at construction.
@@ -65,6 +71,10 @@ impl Default for SystemClock {
 impl Clock for SystemClock {
     fn now(&self) -> Duration {
         self.origin.elapsed()
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
     }
 }
 
@@ -93,6 +103,10 @@ impl Clock for VirtualClock {
 
     fn on_poll(&self, quantum: Duration) {
         self.advance(quantum);
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.advance(d);
     }
 }
 

@@ -1604,6 +1604,10 @@ struct Dec<'a> {
 }
 
 impl<'a> Dec<'a> {
+    /// Bytes of input left — the honest upper bound for preallocation.
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
     fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
         if self.i + n > self.b.len() {
             bail!("shard wire: truncated frame (need {n} bytes at offset {})", self.i);
@@ -1646,7 +1650,9 @@ impl<'a> Dec<'a> {
         if rows > 1 << 20 || cols > 1 << 20 || rows.saturating_mul(cols) > 1 << 27 {
             bail!("shard wire: implausible matrix shape {rows}x{cols}");
         }
-        let mut data = Vec::with_capacity(rows * cols);
+        // Prealloc no more than the input can actually deliver: a lying
+        // header still fails in `f64`, but it must not reserve first.
+        let mut data = Vec::with_capacity((rows * cols).min(self.remaining() / 8));
         for _ in 0..rows * cols {
             data.push(self.f64()?);
         }
@@ -1664,7 +1670,9 @@ impl<'a> Dec<'a> {
                 }
                 // The compressed body is bounded by the frame itself
                 // (`take` fails on a lying length); decompression is
-                // deferred to the handler, after shape validation.
+                // deferred to the handler, after shape validation. The
+                // lengths below come out of `take`, so no prealloc here
+                // can exceed the bytes actually present.
                 let n = self.u32()? as usize;
                 let comp = self.take(n)?.to_vec();
                 Ok(if mode == DM_FULL {
@@ -2190,6 +2198,222 @@ mod tests {
         let got = read_msg(&mut cursor).unwrap();
         assert_eq!(got, msg);
         assert!(cursor.is_empty(), "frame not fully consumed");
+    }
+
+    /// One exemplar frame per tag in the registry. This is the closed
+    /// tag audit the linter's wire rules point at: adding a `TAG_*`
+    /// const without extending this table fails the count assertion,
+    /// and every exemplar must byte-roundtrip, reject every strict
+    /// prefix, and carry a unique tag byte.
+    #[test]
+    fn every_wire_tag_has_a_named_exemplar_frame() {
+        let m = || Matrix::from_vec(1, 2, vec![1.0, -2.5]);
+        let init = InitMsg {
+            kind: 1,
+            rank: 4,
+            beta2: 0.9,
+            eps: 1e-6,
+            one_sided: false,
+            graft: 1,
+            threads: 0,
+            blocks: vec![BlockSpec { index: 0, rows: 2, cols: 2 }],
+            ekfac: false,
+        };
+        let exemplars: Vec<(u8, &str, WireMsg)> = vec![
+            (TAG_HELLO, "TAG_HELLO", WireMsg::Hello { worker_id: 3 }),
+            (TAG_INIT, "TAG_INIT", WireMsg::Init(init.clone())),
+            (TAG_INIT_V7, "TAG_INIT_V7", WireMsg::Init(InitMsg { ekfac: true, ..init })),
+            (
+                TAG_STEP,
+                "TAG_STEP",
+                WireMsg::Step(StepMsg {
+                    t: 1,
+                    scale: 1.0,
+                    preconditioning: true,
+                    stat_due: false,
+                    lr: 0.1,
+                    beta1: 0.9,
+                    weight_decay: 0.0,
+                    entries: vec![StepEntry::new(0, false, m(), m())],
+                }),
+            ),
+            (
+                TAG_STEP_OK,
+                "TAG_STEP_OK",
+                WireMsg::StepOk(StepOkMsg { t: 1, refreshes: 0, entries: vec![(0, m())] }),
+            ),
+            (TAG_MEM_STATS, "TAG_MEM_STATS", WireMsg::MemStats),
+            (
+                TAG_MEM_STATS_OK,
+                "TAG_MEM_STATS_OK",
+                WireMsg::MemStatsOk { mem_bytes: 1, second_moment_bytes: 2 },
+            ),
+            (TAG_SHUTDOWN, "TAG_SHUTDOWN", WireMsg::Shutdown),
+            (TAG_OK, "TAG_OK", WireMsg::Ok),
+            (TAG_ERROR, "TAG_ERROR", WireMsg::Error { message: "boom".into() }),
+            (
+                TAG_HELLO_V2,
+                "TAG_HELLO_V2",
+                WireMsg::HelloV2 { worker_id: 1, proto: 2, overlap: true },
+            ),
+            (
+                TAG_REFRESH_AHEAD,
+                "TAG_REFRESH_AHEAD",
+                WireMsg::RefreshAhead(RefreshAheadMsg { t_next: 5, all: false, due: vec![1, 2] }),
+            ),
+            (
+                TAG_REFRESH_AHEAD_OK,
+                "TAG_REFRESH_AHEAD_OK",
+                WireMsg::RefreshAheadOk(RefreshAheadOkMsg { t_next: 5, count: 1, refreshed: vec![1] }),
+            ),
+            (
+                TAG_HELLO_V3,
+                "TAG_HELLO_V3",
+                WireMsg::HelloV3 { worker_id: 1, proto: 3, overlap: true, compress: true },
+            ),
+            (
+                TAG_STEP_V3,
+                "TAG_STEP_V3",
+                WireMsg::StepV3(StepV3Msg {
+                    t: 2,
+                    base_t: 1,
+                    resync: false,
+                    scale: 1.0,
+                    preconditioning: true,
+                    stat_due: true,
+                    lr: 0.1,
+                    beta1: 0.9,
+                    weight_decay: 0.01,
+                    entries: vec![StepEntryV3::new(
+                        0,
+                        true,
+                        DeltaMat::Raw(m()),
+                        DeltaMat::Full { rows: 1, cols: 2, comp: vec![1, 2, 3] },
+                    )],
+                }),
+            ),
+            (
+                TAG_STEP_OK_V3,
+                "TAG_STEP_OK_V3",
+                WireMsg::StepOkV3(StepOkV3Msg {
+                    t: 2,
+                    base_t: 1,
+                    refreshes: 1,
+                    entries: vec![(0, DeltaMat::Delta { rows: 1, cols: 2, comp: vec![9] })],
+                }),
+            ),
+            (
+                TAG_HELLO_V4,
+                "TAG_HELLO_V4",
+                WireMsg::HelloV4 { worker_id: 1, proto: 4, overlap: true, compress: true, state: true },
+            ),
+            (
+                TAG_STEP_V4,
+                "TAG_STEP_V4",
+                WireMsg::StepV4(StepV4Msg {
+                    t: 3,
+                    base_t: 2,
+                    resync: false,
+                    scale: 1.0,
+                    preconditioning: true,
+                    stat_due: false,
+                    lr: 0.1,
+                    beta1: 0.9,
+                    weight_decay: 0.0,
+                    entries: vec![StepEntryV4 {
+                        index: 0,
+                        refresh_due: false,
+                        param: BlockPayload::Dense(DeltaMat::Raw(m())),
+                        grad: BlockPayload::Diag(DeltaMat::Raw(m())),
+                    }],
+                }),
+            ),
+            (
+                TAG_STEP_OK_V4,
+                "TAG_STEP_OK_V4",
+                WireMsg::StepOkV4(StepOkV4Msg {
+                    t: 3,
+                    base_t: 2,
+                    refreshes: 0,
+                    entries: vec![(0, BlockPayload::Dense(DeltaMat::Raw(m())))],
+                }),
+            ),
+            (
+                TAG_REFRESH_AHEAD_OK_V4,
+                "TAG_REFRESH_AHEAD_OK_V4",
+                WireMsg::RefreshAheadOkV4(RefreshAheadOkV4Msg {
+                    t_next: 9,
+                    count: 1,
+                    refreshed: vec![4],
+                    escaped: vec![(4, 0.25)],
+                }),
+            ),
+            (
+                TAG_STATE_SNAP,
+                "TAG_STATE_SNAP",
+                WireMsg::StateSnap(StateSnapMsg { want: vec![0, 1] }),
+            ),
+            (
+                TAG_STATE_SNAP_OK,
+                "TAG_STATE_SNAP_OK",
+                WireMsg::StateSnapOk(StateSnapOkMsg { entries: vec![] }),
+            ),
+            (
+                TAG_STATE_RESTORE,
+                "TAG_STATE_RESTORE",
+                WireMsg::StateRestore(StateRestoreMsg { entries: vec![] }),
+            ),
+            (
+                TAG_HELLO_V5,
+                "TAG_HELLO_V5",
+                WireMsg::HelloV5 {
+                    worker_id: 1,
+                    proto: 5,
+                    overlap: true,
+                    compress: true,
+                    state: true,
+                    member: true,
+                },
+            ),
+            (TAG_ADOPT, "TAG_ADOPT", WireMsg::Adopt { epoch: 7, shard: 2 }),
+            (TAG_ADOPT_OK, "TAG_ADOPT_OK", WireMsg::AdoptOk { epoch: 7, shard: 2 }),
+            (
+                TAG_HELLO_V6,
+                "TAG_HELLO_V6",
+                WireMsg::HelloV6 {
+                    worker_id: 1,
+                    proto: 6,
+                    overlap: true,
+                    compress: true,
+                    state: true,
+                    member: true,
+                    heartbeat: true,
+                },
+            ),
+            (TAG_PING, "TAG_PING", WireMsg::Ping { seq: 11 }),
+            (TAG_PONG, "TAG_PONG", WireMsg::Pong { seq: 11 }),
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for (tag, name, msg) in &exemplars {
+            let frame = encode_frame(msg).unwrap();
+            assert_eq!(frame[4], *tag, "{name}: exemplar encodes under the wrong tag");
+            let decoded = decode_payload(&frame[4..]).unwrap();
+            assert_eq!(&decoded, msg, "{name}: decode is not the inverse of encode");
+            assert_eq!(encode_frame(&decoded).unwrap(), frame, "{name}: re-encode differs");
+            for cut in 4..frame.len() {
+                assert!(
+                    decode_payload(&frame[4..cut]).is_err(),
+                    "{name}: strict {}-byte payload prefix decoded",
+                    cut - 4
+                );
+            }
+            assert!(seen.insert(*tag), "{name}: tag byte {tag} reused in the exemplar table");
+        }
+        assert_eq!(
+            seen.len(),
+            29,
+            "tag registry drifted: extend the exemplar table for the new frame"
+        );
     }
 
     #[test]

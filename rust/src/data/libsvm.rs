@@ -55,10 +55,20 @@ pub fn parse_libsvm(text: &str, dim_hint: usize) -> Result<LibsvmData, String> {
         labels.push(y);
     }
     let d = if dim_hint > 0 { dim_hint.max(max_idx) } else { max_idx };
+    // Densifying costs rows x (d + 1) cells: one stray huge index in a
+    // small file must be a named error, not a multi-gigabyte allocation.
+    const MAX_DENSE_CELLS: usize = 1 << 28;
+    if rows.len().saturating_mul(d + 1) > MAX_DENSE_CELLS {
+        return Err(format!(
+            "dense expansion needs {} x {} cells — implausible max feature index for this file",
+            rows.len(),
+            d + 1
+        ));
+    }
     let features = rows
         .into_iter()
         .map(|sparse| {
-            let mut dense = vec![0.0; d + 1];
+            let mut dense = vec![0.0; (d + 1).min(MAX_DENSE_CELLS)];
             for (i, v) in sparse {
                 dense[i] = v;
             }
@@ -103,5 +113,11 @@ mod tests {
         assert!(parse_libsvm("+1 0:1\n", 0).is_err()); // 0-based index
         assert!(parse_libsvm("+1 a:b\n", 0).is_err());
         assert!(parse_libsvm("xx 1:1\n", 0).is_err());
+    }
+
+    #[test]
+    fn implausible_index_is_a_named_error_not_an_allocation() {
+        let err = parse_libsvm("+1 4000000000:1.0\n", 0).unwrap_err();
+        assert!(err.contains("dense expansion"), "{err}");
     }
 }

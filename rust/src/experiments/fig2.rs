@@ -18,6 +18,7 @@ use crate::optim::{
     engine_optimizer, Adam, EngineConfig, GraftType, Optimizer, SShampoo, SShampooConfig,
     Shampoo, ShampooConfig, WarmupCosine,
 };
+use crate::coordinator::Clock as _;
 use crate::runtime::Runtime;
 use crate::train::{CurveLog, ProxyTask, ProxyTrainer};
 use crate::util::cli::Args;
@@ -195,7 +196,8 @@ pub fn run_cell(
     let shapes = trainer.shapes.clone();
     let mut opt = make_opt(opt_name, &shapes, lr, steps, rank, knobs)?;
     let schedule = WarmupCosine { peak: lr, warmup: steps / 20 + 1, total: steps };
-    let t0 = std::time::Instant::now();
+    let wall_clock = crate::coordinator::SystemClock::new();
+    let t0 = wall_clock.now();
     let (train_curve, metric_curve) = trainer.train(
         opt.as_mut(),
         steps,
@@ -211,7 +213,7 @@ pub fn run_cell(
         metric_curve,
         train_curve,
         covariance_bytes: opt.second_moment_bytes(),
-        wall: t0.elapsed(),
+        wall: wall_clock.now().saturating_sub(t0),
     })
 }
 

@@ -18,6 +18,7 @@
 //! Python never runs on the training path: artifacts are compiled once by
 //! `make artifacts` and executed from Rust through PJRT (`runtime`).
 
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;

@@ -5,6 +5,7 @@
 //!   train [--preset small ...]     end-to-end LM training (E10)
 //!   list                           list experiments and artifacts
 //!   info                           environment / artifact summary
+//!   lint [PATH]                    repo-invariant static analysis
 //!
 //! Examples:
 //!   sketchy list
@@ -13,6 +14,7 @@
 //!   sketchy train --preset small --steps 300 --optimizer s-shampoo
 
 use anyhow::Context as _;
+use sketchy::coordinator::Clock as _;
 use sketchy::experiments;
 use sketchy::util::cli::Args;
 
@@ -43,6 +45,7 @@ USAGE:
                 [--crash-at-step K[,K...]]   (test harness: abort after
                                               the listed steps)
   sketchy bench-gate [--baseline F] [--current F] [--tolerance R]
+  sketchy lint [--fix-allowlist] [PATH]
   sketchy shard-worker --worker-id N [--transport tcp|unix]
                        [--socket-dir DIR] [--proto-version V]
                        [--listen ADDR] [--advertise-host HOST]
@@ -114,6 +117,14 @@ and continues bitwise identical to an uninterrupted run. bench-gate
 compares a fresh engine bench record against the committed baseline
 and exits nonzero on a >tolerance regression (and on *_max ceiling
 overruns, e.g. the shard migration / driver-resume replay bounds).
+lint runs the repo-invariant static analyzer over PATH (default `.`):
+determinism rules (no raw wall-clock/entropy outside the supervise.rs
+Clock; no HashMap/HashSet in the deterministic core), wire-protocol
+registry rules (unique tags, encode+decode+test coverage, degrade-
+matrix coverage of PROTO_VERSION), decode-path allocation bounds, and
+config-key registry/README consistency — exit 0 clean, 1 on
+violations; audited exceptions live in rust/lint_allow.txt and
+--fix-allowlist appends TODO-justified entries for review.
 
 Run `sketchy list` for the experiment catalogue.";
 
@@ -125,6 +136,7 @@ fn main() {
         Some("repro") => cmd_repro(&args),
         Some("train") => cmd_train(&args),
         Some("bench-gate") => cmd_bench_gate(&args),
+        Some("lint") => cmd_lint(&args),
         Some("shard-worker") => cmd_shard_worker(&args),
         _ => {
             println!("{USAGE}");
@@ -177,11 +189,15 @@ fn cmd_repro(args: &Args) -> i32 {
         eprintln!("usage: sketchy repro <experiment>; see `sketchy list`");
         return 1;
     };
-    let t0 = std::time::Instant::now();
+    let clock = sketchy::coordinator::SystemClock::new();
+    let t0 = clock.now();
     match experiments::run(id, args) {
         Ok(report) => {
             println!("{report}");
-            println!("\n[report written to reports/{id}.md in {:?}]", t0.elapsed());
+            println!(
+                "\n[report written to reports/{id}.md in {:?}]",
+                clock.now().saturating_sub(t0)
+            );
             0
         }
         Err(e) => {
@@ -218,6 +234,27 @@ fn cmd_bench_gate(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("bench-gate failed: {e:#}");
+            2
+        }
+    }
+}
+
+/// Repo-invariant static analysis (`sketchy lint`): exit 0 when the
+/// tree is clean, 1 on violations, 2 when the scan itself failed.
+fn cmd_lint(args: &Args) -> i32 {
+    let root = args.positional.first().cloned().unwrap_or_else(|| ".".into());
+    let fix = args.get_bool("fix-allowlist", false);
+    match sketchy::analysis::run_lint(&root, fix) {
+        Ok(report) => {
+            print!("{}", report.render());
+            if report.clean() {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("lint failed: {e:#}");
             2
         }
     }
@@ -524,8 +561,9 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         }
         None => sketchy::coordinator::DriverKillPlan::none(),
     };
-    let t0 = std::time::Instant::now();
-    let mut last_log = std::time::Instant::now();
+    let wall = sketchy::coordinator::SystemClock::new();
+    let t0 = wall.now();
+    let mut last_log = wall.now();
     let mut curve = sketchy::train::CurveLog::new(&opt.name());
     for s in start_step..steps {
         opt.set_lr(schedule.at(s));
@@ -535,16 +573,16 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
             eprintln!("crash-at-step: aborting after step {}", s + 1);
             std::process::abort();
         }
-        if last_log.elapsed().as_secs() >= 2 || s == 0 || s + 1 == steps {
-            let sps = (s + 1) as f64 / t0.elapsed().as_secs_f64();
+        if wall.now().saturating_sub(last_log).as_secs() >= 2 || s == 0 || s + 1 == steps {
+            let sps = (s + 1) as f64 / wall.now().saturating_sub(t0).as_secs_f64();
             println!("step {s:>5}  loss {loss:.4}  lr {:.2e}  {sps:.2} steps/s", schedule.at(s));
-            last_log = std::time::Instant::now();
+            last_log = wall.now();
         }
     }
     let eval = trainer.eval(&mut corpus, 4)?;
     println!(
         "done in {:?}: final train loss {:.4}, eval loss {eval:.4}",
-        t0.elapsed(),
+        wall.now().saturating_sub(t0),
         curve.tail_mean(5)
     );
     sketchy::train::metrics::write_report(

@@ -160,7 +160,7 @@ pub fn load_checkpoint_full(path: &str) -> Result<(usize, Vec<Matrix>, Option<Ve
         (count as u64) <= remaining / 8,
         "checkpoint header claims {count} tensors but only {remaining} bytes follow"
     );
-    let mut params = Vec::with_capacity(count);
+    let mut params = Vec::with_capacity(count.min((remaining / 8) as usize));
     for k in 0..count {
         f.read_exact(&mut u32buf)?;
         let rows = u32::from_le_bytes(u32buf) as usize;
@@ -180,8 +180,8 @@ pub fn load_checkpoint_full(path: &str) -> Result<(usize, Vec<Matrix>, Option<Ve
             "checkpoint tensor {k} claims {rows}x{cols} ({need} bytes) but only \
              {remaining} bytes remain — truncated or corrupt"
         );
+        let mut data = vec![0.0f64; (rows * cols).min((remaining / 8) as usize)];
         remaining -= need;
-        let mut data = vec![0.0f64; rows * cols];
         let mut vbuf = [0u8; 8];
         for v in &mut data {
             f.read_exact(&mut vbuf)?;

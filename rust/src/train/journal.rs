@@ -216,8 +216,8 @@ fn read_tensor<R: Read>(f: &mut R, remaining: &mut u64, what: &str) -> Result<Ma
         need <= *remaining,
         "{what} claims {rows}x{cols} ({need} bytes) but only {remaining} bytes remain"
     );
+    let mut data = vec![0.0f64; (rows * cols).min((*remaining / 8) as usize)];
     *remaining -= need;
-    let mut data = vec![0.0f64; rows * cols];
     let mut vbuf = [0u8; 8];
     for v in &mut data {
         f.read_exact(&mut vbuf)?;
@@ -257,7 +257,7 @@ pub fn load_journal(path: &str) -> Result<JournalContents> {
         (count as u64) <= remaining / 8,
         "journal header claims {count} tensors but only {remaining} bytes follow"
     );
-    let mut params = Vec::with_capacity(count);
+    let mut params = Vec::with_capacity(count.min((remaining / 8) as usize));
     for k in 0..count {
         params.push(read_tensor(&mut f, &mut remaining, &format!("journal tensor {k}"))?);
     }
@@ -303,7 +303,7 @@ pub fn load_journal(path: &str) -> Result<JournalContents> {
         (n_addrs as u64) <= remaining / 4,
         "journal claims {n_addrs} addresses but only {remaining} bytes follow"
     );
-    let mut addrs = Vec::with_capacity(n_addrs);
+    let mut addrs = Vec::with_capacity(n_addrs.min((remaining / 4) as usize));
     for k in 0..n_addrs {
         f.read_exact(&mut u32buf)?;
         remaining -= 4;
@@ -313,7 +313,7 @@ pub fn load_journal(path: &str) -> Result<JournalContents> {
             len <= remaining,
             "journal address {k} claims {len} bytes but only {remaining} remain"
         );
-        let mut bytes = vec![0u8; len as usize];
+        let mut bytes = vec![0u8; (len as usize).min(remaining as usize)];
         f.read_exact(&mut bytes)?;
         remaining -= len;
         addrs.push(
@@ -347,7 +347,7 @@ pub fn load_journal(path: &str) -> Result<JournalContents> {
                 (n as u64) <= *remaining / 8,
                 "step record claims {n} gradients but only {remaining} bytes remain"
             );
-            let mut grads = Vec::with_capacity(n);
+            let mut grads = Vec::with_capacity(n.min((*remaining / 8) as usize));
             for k in 0..n {
                 grads.push(read_tensor(f, remaining, &format!("journal step gradient {k}"))?);
             }

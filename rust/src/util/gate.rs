@@ -66,8 +66,30 @@ impl GateReport {
     }
 }
 
-fn positive_num(j: &Json, key: &str) -> Option<f64> {
-    j.get(key).and_then(|v| v.as_f64()).filter(|&x| x > 0.0)
+/// Read `key` as a gate number. An absent key or a non-number value is
+/// `Ok(None)` — the caller decides whether that is a failure. A number
+/// that is NaN/±Infinity, or IEEE negative zero, is a named error:
+/// `NaN > x` is false for every `x`, so a poisoned record would
+/// otherwise sail through every budget/floor/ceiling comparison, and a
+/// negative-zero baseline flips ratio signs.
+fn gate_num(j: &Json, key: &str, who: &str) -> anyhow::Result<Option<f64>> {
+    let Some(v) = j.get(key) else { return Ok(None) };
+    let Some(x) = v.as_finite_f64() else {
+        if matches!(v, Json::Num(_)) {
+            bail!("{who} metric {key} is not finite (NaN or Infinity); refusing to compare");
+        }
+        return Ok(None);
+    };
+    if x == 0.0 && x.is_sign_negative() {
+        bail!("{who} metric {key} is negative zero; refusing to compare");
+    }
+    Ok(Some(x))
+}
+
+/// [`gate_num`], additionally requiring strict positivity (timings and
+/// floor metrics; zero/negative are treated as absent, as before).
+fn positive_num(j: &Json, key: &str, who: &str) -> anyhow::Result<Option<f64>> {
+    Ok(gate_num(j, key, who)?.filter(|&x| x > 0.0))
 }
 
 /// Compare a fresh bench record against the committed baseline.
@@ -78,6 +100,11 @@ fn positive_num(j: &Json, key: &str) -> Option<f64> {
 /// `calibration_ns` when both carry one. A boolean `identical` field in
 /// the current record must be `true` — the benchmark's serial-vs-
 /// parallel bitwise check is part of the gate.
+///
+/// A NaN/±Infinity or negative-zero value on any compared metric — in
+/// either record — is a named `Err`, never a silent pass: NaN fails
+/// every ordered comparison, so a poisoned record would otherwise
+/// clear every budget, floor, and ceiling.
 pub fn compare_bench(
     baseline: &Json,
     current: &Json,
@@ -90,8 +117,8 @@ pub fn compare_bench(
         bail!("current record is not a JSON object");
     }
     let mut report = GateReport { lines: vec![], failures: vec![] };
-    let base_cal = positive_num(baseline, "calibration_ns");
-    let cur_cal = positive_num(current, "calibration_ns");
+    let base_cal = positive_num(baseline, "calibration_ns", "baseline")?;
+    let cur_cal = positive_num(current, "calibration_ns", "current")?;
     let normalized = base_cal.is_some() && cur_cal.is_some();
     if normalized {
         report.lines.push(format!(
@@ -110,15 +137,15 @@ pub fn compare_bench(
             report.failures.push("current record dropped calibration_ns (raw-ns fallback)".into());
         }
     }
-    for (key, value) in base_obj {
+    for key in base_obj.keys() {
         if !key.ends_with("_ns") || key.as_str() == "calibration_ns" {
             continue;
         }
-        let base_raw = match value.as_f64().filter(|&x| x > 0.0) {
+        let base_raw = match positive_num(baseline, key, "baseline")? {
             Some(v) => v,
             None => continue,
         };
-        let cur_raw = match positive_num(current, key) {
+        let cur_raw = match positive_num(current, key, "current")? {
             Some(v) => v,
             None => {
                 report.failures.push(format!("metric {key} missing in current record"));
@@ -144,15 +171,15 @@ pub fn compare_bench(
     }
     // Floor metrics: `<metric>_min` in the baseline demands the current
     // record carry `<metric>` at or above the floor.
-    for (key, value) in base_obj {
+    for key in base_obj.keys() {
         let Some(metric) = key.strip_suffix("_min") else {
             continue;
         };
-        let floor = match value.as_f64() {
+        let floor = match gate_num(baseline, key, "baseline")? {
             Some(v) => v,
             None => continue,
         };
-        match positive_num(current, metric) {
+        match positive_num(current, metric, "current")? {
             None => {
                 report.failures.push(format!("floor metric {metric} missing in current record"));
             }
@@ -168,15 +195,15 @@ pub fn compare_bench(
     // current record carry `<metric>` at or below the bound. Zero is a
     // legitimate ceiling-metric value (e.g. a handoff that replayed no
     // journal), so unlike floors this reads the plain number.
-    for (key, value) in base_obj {
+    for key in base_obj.keys() {
         let Some(metric) = key.strip_suffix("_max") else {
             continue;
         };
-        let ceiling = match value.as_f64() {
+        let ceiling = match gate_num(baseline, key, "baseline")? {
             Some(v) => v,
             None => continue,
         };
-        match current.get(metric).and_then(|v| v.as_f64()) {
+        match gate_num(current, metric, "current")? {
             None => {
                 report.failures.push(format!("ceiling metric {metric} missing in current record"));
             }
@@ -415,5 +442,67 @@ mod tests {
         let base = record(1000.0, 400.0, 100.0, true);
         assert!(compare_bench(&Json::parse("[1,2]").unwrap(), &base, 0.25).is_err());
         assert!(compare_bench(&base, &Json::parse("3").unwrap(), 0.25).is_err());
+    }
+
+    #[test]
+    fn nan_baseline_metric_is_a_named_error() {
+        // A NaN baseline previously decayed to "metric absent": the
+        // whole budget comparison was silently skipped.
+        let base = Json::parse(
+            r#"{"serial_median_ns": NaN, "calibration_ns": 100, "identical": true}"#,
+        )
+        .unwrap();
+        let cur = record(1000.0, 400.0, 100.0, true);
+        let err = compare_bench(&base, &cur, 0.25).unwrap_err().to_string();
+        assert!(err.contains("serial_median_ns"), "{err}");
+        assert!(err.contains("not finite"), "{err}");
+        assert!(err.contains("baseline"), "{err}");
+    }
+
+    #[test]
+    fn nan_current_ceiling_value_is_a_named_error() {
+        // The worst of the old bugs: `NaN > ceiling` is false, so a
+        // poisoned current record sailed under every ceiling.
+        let base = Json::parse(
+            r#"{"serial_median_ns": 1000, "calibration_ns": 100,
+                 "shard_migrate_steps_max": 8, "identical": true}"#,
+        )
+        .unwrap();
+        let cur = Json::parse(
+            r#"{"serial_median_ns": 1000, "calibration_ns": 100,
+                 "shard_migrate_steps": NaN, "identical": true}"#,
+        )
+        .unwrap();
+        let err = compare_bench(&base, &cur, 0.25).unwrap_err().to_string();
+        assert!(err.contains("shard_migrate_steps"), "{err}");
+        assert!(err.contains("current"), "{err}");
+    }
+
+    #[test]
+    fn negative_zero_baseline_is_a_named_error() {
+        let base = Json::parse(
+            r#"{"serial_median_ns": -0.0, "calibration_ns": 100, "identical": true}"#,
+        )
+        .unwrap();
+        let cur = record(1000.0, 400.0, 100.0, true);
+        let err = compare_bench(&base, &cur, 0.25).unwrap_err().to_string();
+        assert!(err.contains("negative zero"), "{err}");
+    }
+
+    #[test]
+    fn infinite_floor_bound_is_a_named_error() {
+        let base = Json::parse(
+            r#"{"serial_median_ns": 1000, "calibration_ns": 100,
+                 "overlap_speedup_min": -Infinity, "identical": true}"#,
+        )
+        .unwrap();
+        let cur = Json::parse(
+            r#"{"serial_median_ns": 1000, "calibration_ns": 100,
+                 "overlap_speedup": 1.4, "identical": true}"#,
+        )
+        .unwrap();
+        let err = compare_bench(&base, &cur, 0.25).unwrap_err().to_string();
+        assert!(err.contains("overlap_speedup_min"), "{err}");
+        assert!(err.contains("not finite"), "{err}");
     }
 }

@@ -39,6 +39,19 @@ impl Json {
         }
     }
 
+    /// Number accessor that refuses non-finite values: `None` for NaN
+    /// and ±Infinity, which this parser accepts (python emits them for
+    /// `float('nan')` etc.) but which poison ordered comparisons —
+    /// `NaN > x` is false for every `x`, so a NaN smuggled into a gate
+    /// or threshold would silently pass. Callers that compare should
+    /// use this and decide loudly what a non-finite number means.
+    pub fn as_finite_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) if x.is_finite() => Some(*x),
+            _ => None,
+        }
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
@@ -392,5 +405,15 @@ mod tests {
             Json::parse("-Infinity").unwrap().as_f64().unwrap(),
             f64::NEG_INFINITY
         );
+    }
+
+    #[test]
+    fn finite_accessor_refuses_nan_and_infinities() {
+        assert_eq!(Json::parse("2.5").unwrap().as_finite_f64(), Some(2.5));
+        assert_eq!(Json::parse("-0.0").unwrap().as_finite_f64(), Some(-0.0));
+        assert_eq!(Json::parse("NaN").unwrap().as_finite_f64(), None);
+        assert_eq!(Json::parse("Infinity").unwrap().as_finite_f64(), None);
+        assert_eq!(Json::parse("-Infinity").unwrap().as_finite_f64(), None);
+        assert_eq!(Json::parse("\"3\"").unwrap().as_finite_f64(), None);
     }
 }

@@ -1,0 +1,20 @@
+//! Fixture: a dotted lookup that drifted from the known-keys registry.
+
+pub struct Cfg;
+
+impl Cfg {
+    pub fn ensure_known_keys(&self, _section: &str, _keys: &[&str]) -> Result<(), String> {
+        Ok(())
+    }
+
+    pub fn usize_or(&self, _dotted: &str, default: usize) -> usize {
+        default
+    }
+}
+
+pub fn resolve(cfg: &Cfg) -> Result<usize, String> {
+    cfg.ensure_known_keys("train", &["steps", "lr"])?;
+    let steps = cfg.usize_or("train.steps", 100);
+    let warmup = cfg.usize_or("train.warmup", 10);
+    Ok(steps + warmup)
+}

@@ -1,0 +1,3 @@
+//! Fixture: PROTO_VERSION bumped past the degrade-matrix list.
+
+pub const PROTO_VERSION: u32 = 3;

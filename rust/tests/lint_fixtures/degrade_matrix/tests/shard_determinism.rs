@@ -1,0 +1,5 @@
+pub fn degrade_matrix_is_stale() {
+    for proto in [1u32, PROTO_VERSION] { // lint:degrade-matrix
+        let _ = proto;
+    }
+}

@@ -1,0 +1,27 @@
+//! Fixture: two wire tags share a byte value.
+
+const TAG_HELLO: u8 = 1;
+const TAG_BYE: u8 = 1;
+
+pub fn encode_frame(kind: bool) -> Vec<u8> {
+    vec![if kind { TAG_HELLO } else { TAG_BYE }]
+}
+
+pub fn decode_payload(b: &[u8]) -> u8 {
+    match b[0] {
+        TAG_HELLO => 0,
+        TAG_BYE => 1,
+        _ => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_roundtrip() {
+        assert!(decode_payload(&encode_frame(true)) <= TAG_HELLO);
+        assert!(decode_payload(&encode_frame(false)) <= TAG_BYE);
+    }
+}

@@ -1,0 +1,19 @@
+//! Fixture: raw as_f64 read in gate code.
+
+pub enum Json {
+    Num(f64),
+    Null,
+}
+
+impl Json {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Null => None,
+        }
+    }
+}
+
+pub fn positive(j: &Json) -> Option<f64> {
+    j.as_f64().filter(|&x| x > 0.0)
+}

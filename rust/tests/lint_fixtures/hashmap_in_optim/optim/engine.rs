@@ -1,0 +1,11 @@
+//! Fixture: seeded-order hash structures in the deterministic core.
+
+use std::collections::HashMap;
+
+pub fn histogram(xs: &[u32]) -> usize {
+    let mut seen: HashMap<u32, u32> = HashMap::new();
+    for &x in xs {
+        *seen.entry(x).or_insert(0) += 1;
+    }
+    seen.len()
+}

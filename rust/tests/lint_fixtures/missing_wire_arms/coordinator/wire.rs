@@ -1,0 +1,27 @@
+//! Fixture: a tag with a decode arm but no encode arm and no test.
+
+const TAG_HELLO: u8 = 1;
+const TAG_ORPHAN: u8 = 2;
+
+pub fn encode_frame() -> Vec<u8> {
+    vec![TAG_HELLO]
+}
+
+pub fn decode_payload(b: &[u8]) -> u8 {
+    match b[0] {
+        TAG_HELLO => 0,
+        TAG_ORPHAN => 1,
+        _ => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_roundtrips() {
+        assert_eq!(decode_payload(&encode_frame()), 0);
+        let _ = TAG_HELLO;
+    }
+}

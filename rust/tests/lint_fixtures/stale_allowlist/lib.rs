@@ -1,0 +1,5 @@
+//! Fixture: allowlist suppression plus stale/non-allowlistable entries.
+
+pub fn fine() -> u32 {
+    7
+}

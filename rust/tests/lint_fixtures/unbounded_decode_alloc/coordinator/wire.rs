@@ -1,0 +1,12 @@
+//! Fixture: decode-path prealloc sized by an unvalidated length field.
+
+pub fn decode_block(b: &[u8]) -> Vec<u64> {
+    let n = b[0] as usize;
+    let mut out = Vec::with_capacity(n);
+    for chunk in b[1..].chunks(8).take(n) {
+        let mut word = [0u8; 8];
+        word.copy_from_slice(chunk);
+        out.push(u64::from_le_bytes(word));
+    }
+    out
+}

@@ -1,0 +1,6 @@
+//! Fixture: raw wall clock in coordinator production code.
+
+pub fn step_latency_nanos() -> u64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() as u64
+}

@@ -1,0 +1,130 @@
+//! Self-tests for `sketchy lint`.
+//!
+//! Each committed fixture under `tests/lint_fixtures/` is a tiny tree
+//! that violates exactly one rule family; the engine must report the
+//! expected rule id at the expected `file:line` — no more, no less.
+//! The final test runs the linter over HEAD itself in repo mode and
+//! asserts the tree is clean, so any future violation fails `cargo
+//! test` as well as the CI lint leg.
+
+use std::path::{Path, PathBuf};
+
+use sketchy::analysis::lint_root;
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name)
+}
+
+/// Lint one fixture and assert its exact (rule, path, line) triples.
+fn expect(name: &str, want: &[(&str, &str, usize)]) {
+    let report = lint_root(&fixture(name)).unwrap();
+    let got: Vec<(String, String, usize)> = report
+        .violations
+        .iter()
+        .map(|v| (v.rule.to_string(), v.path.clone(), v.line))
+        .collect();
+    let want: Vec<(String, String, usize)> = want
+        .iter()
+        .map(|&(r, p, l)| (r.to_string(), p.to_string(), l))
+        .collect();
+    assert_eq!(got, want, "fixture {name}:\n{}", report.render());
+}
+
+#[test]
+fn wall_clock_in_shard_trips_dt001() {
+    expect(
+        "wall_clock_in_shard",
+        &[("DT001", "coordinator/shard.rs", 4)],
+    );
+}
+
+#[test]
+fn hashmap_in_optim_trips_dt002() {
+    expect(
+        "hashmap_in_optim",
+        &[("DT002", "optim/engine.rs", 3), ("DT002", "optim/engine.rs", 6)],
+    );
+}
+
+#[test]
+fn duplicate_tag_value_trips_wt001() {
+    expect("dup_wire_tag", &[("WT001", "coordinator/wire.rs", 4)]);
+}
+
+#[test]
+fn orphan_tag_trips_wt002_and_wt003() {
+    expect(
+        "missing_wire_arms",
+        &[
+            ("WT002", "coordinator/wire.rs", 4),
+            ("WT003", "coordinator/wire.rs", 4),
+        ],
+    );
+}
+
+#[test]
+fn stale_degrade_matrix_trips_wt004() {
+    expect(
+        "degrade_matrix",
+        &[("WT004", "tests/shard_determinism.rs", 2)],
+    );
+}
+
+#[test]
+fn unbounded_decode_prealloc_trips_ab001() {
+    expect(
+        "unbounded_decode_alloc",
+        &[("AB001", "coordinator/wire.rs", 5)],
+    );
+}
+
+#[test]
+fn unregistered_config_key_trips_ck001() {
+    expect("config_key_drift", &[("CK001", "util/settings.rs", 18)]);
+}
+
+#[test]
+fn raw_as_f64_in_gate_trips_fl001() {
+    expect("float_audit", &[("FL001", "util/gate.rs", 18)]);
+}
+
+#[test]
+fn allowlist_suppresses_and_flags_stale_entries() {
+    let report = lint_root(&fixture("stale_allowlist")).unwrap();
+    assert_eq!(report.allow_used, 1, "{}", report.render());
+    let got: Vec<(&str, &str, usize)> = report
+        .violations
+        .iter()
+        .map(|v| (v.rule, v.path.as_str(), v.line))
+        .collect();
+    // The live DT001 exception is consumed silently; the stale entry and
+    // the non-allowlistable WT001 entry each fail the lint themselves.
+    assert_eq!(
+        got,
+        vec![("AL001", "lint_allow.txt", 2), ("AL001", "lint_allow.txt", 3)],
+        "{}",
+        report.render()
+    );
+}
+
+#[test]
+fn head_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+    let report = lint_root(root).unwrap();
+    assert!(
+        report.clean(),
+        "HEAD must pass `sketchy lint`:\n{}",
+        report.render()
+    );
+    assert!(
+        report.files_scanned > 40,
+        "suspiciously small scan ({} files) — repo-mode discovery broke",
+        report.files_scanned
+    );
+    assert_eq!(
+        report.allow_used, 2,
+        "expected exactly the two audited bench-harness clock exceptions"
+    );
+}

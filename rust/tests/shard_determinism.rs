@@ -540,9 +540,13 @@ fn compressed_transport_proto_degrade_matrix_matches_reference_bitwise() {
     // workers keep full frames (and RefreshAhead), v1 workers degrade
     // all the way to the legacy synchronous protocol — every cell
     // bitwise identical to the fault-free reference, refresh
-    // accounting included.
+    // accounting included. Every version from 1 through PROTO_VERSION
+    // must be listed — the wire lint's degrade-matrix audit checks the
+    // marker line below against the current PROTO_VERSION. (The v7 bump
+    // originally shipped without the 6 cell; the lint exists so that
+    // class of gap fails mechanically.)
     let want = chaos_reference();
-    for proto in [1u32, 2, 3, 4, 5, PROTO_VERSION] {
+    for proto in [1u32, 2, 3, 4, 5, 6, PROTO_VERSION] { // lint:degrade-matrix
         let got = chaos_run(proto, true, vec![FaultScript::none(), FaultScript::none()], usize::MAX)
             .unwrap_or_else(|e| panic!("proto v{proto} + compress run failed: {e:#}"));
         assert_matches_reference(&got, &want, &format!("compress-on at proto v{proto}"));
